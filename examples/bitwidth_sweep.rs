@@ -1,0 +1,89 @@
+//! Table II reproduction: few-shot accuracy as a function of fixed-point
+//! bit-width, over the paper's eight configurations.
+//!
+//!     make artifacts && cargo run --release --example bitwidth_sweep -- [episodes]
+//!
+//! One HLO artifact serves all eight rows: activation parameters are
+//! runtime scalars and weight PTQ happens in rust (fixedpoint module), so
+//! the sweep exercises the *bit-width-aware* part of the design
+//! environment on the request path.  Alongside accuracy, each row also
+//! reports the hardware cost of that configuration (design-environment
+//! build), giving the accuracy/resource trade-off the paper's Table II +
+//! Table III imply.
+
+use anyhow::{Context, Result};
+use bwade::artifacts::{ArtifactPaths, FewshotBank};
+use bwade::build::{build, DesignConfig};
+use bwade::fewshot::{evaluate, sample_episode};
+use bwade::fixedpoint::table2_configs;
+use bwade::graph::Graph;
+use bwade::resources::Device;
+use bwade::rng::Rng;
+use bwade::runtime::{BackboneRunner, Runtime};
+
+const PAPER_ACC: [f64; 8] = [44.89, 59.70, 44.72, 60.92, 62.58, 62.69, 62.47, 62.78];
+
+fn main() -> Result<()> {
+    let n_episodes: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()
+        .context("episodes must be an integer")?
+        .unwrap_or(300);
+
+    let paths = ArtifactPaths::default_dir();
+    anyhow::ensure!(paths.exists(), "run `make artifacts` first");
+    let bundle = paths.model_bundle()?;
+    let bank = FewshotBank::load(&paths.fewshot_bank())?;
+    let runtime = Runtime::new()?;
+    let batch = *bundle.batch_sizes.iter().max().unwrap();
+    let hlo = paths.backbone_hlo(batch);
+    let device = Device::pynq_z1();
+
+    let mut rng = Rng::new(0xEE);
+    let episodes: Vec<_> = (0..n_episodes)
+        .map(|_| sample_episode(&mut rng, bank.num_classes, bank.per_class, 5, 5, 15))
+        .collect::<Result<_>>()?;
+
+    println!("== Table II: accuracy vs bit-width (5-way 5-shot, {n_episodes} episodes) ==");
+    println!(
+        "{:<16} {:>4} {:>10} {:>8} | {:>9} {:>8} {:>7} | {:>10}",
+        "config", "bits", "acc[%]", "ci95", "LUT", "BRAM36", "lat[ms]", "paper acc"
+    );
+
+    for ((name, cfg), paper) in table2_configs().into_iter().zip(PAPER_ACC) {
+        // Accuracy through the PJRT artifact.
+        let runner = BackboneRunner::new(&runtime, &bundle, &hlo, batch, cfg)?;
+        let feats = runner.extract_all(&bank.images, bank.num_images())?;
+        let acc = evaluate(&feats, bundle.feature_dim, &episodes)?;
+
+        // Hardware cost of this configuration (design environment).
+        let mut graph = Graph::load(&paths.graph_json(), &paths.graph_weights())?;
+        let report = build(
+            &mut graph,
+            &DesignConfig {
+                quant: cfg,
+                target_fps: Some(60.0),
+                max_utilization: 0.85,
+                verify: false,
+            },
+            &device,
+        )?;
+
+        println!(
+            "{:<16} {:>4} {:>9.2}% {:>7.2}% | {:>9.0} {:>8.1} {:>7.2} | {:>9.2}%",
+            name,
+            cfg.max_bits(),
+            acc.mean * 100.0,
+            acc.ci95 * 100.0,
+            report.total_resources.lut,
+            report.total_resources.bram36,
+            report.latency_ms,
+            paper
+        );
+    }
+
+    println!("\nshape targets: saturation >= 10 bits; 6-bit (1/5) ~ 8-bit; 5-bit and 6-bit (3/3) collapse");
+    println!("bitwidth_sweep OK");
+    Ok(())
+}

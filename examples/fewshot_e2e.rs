@@ -1,0 +1,147 @@
+//! END-TO-END VALIDATION DRIVER (DESIGN.md §6) — the full system on a
+//! real small workload, proving all three layers compose:
+//!
+//!  * L2/L1 (build time, already done by `make artifacts`): the JAX
+//!    ResNet-9 with Pallas MVAU kernels was trained on the synthetic base
+//!    corpus and AOT-lowered to artifacts/backbone_b8.hlo.txt;
+//!  * L3 (this binary, python-free):
+//!      1. the design environment compiles the exported graph and reports
+//!         the Table-III row for the paper's W6A4 build,
+//!      2. the PJRT runtime loads the HLO, PTQs the weights in rust, and
+//!         extracts features for the whole novel-class bank,
+//!      3. 600 5-way 5-shot episodes are evaluated with the NCM
+//!         classifier (paper Table II protocol),
+//!      4. the serving coordinator (Fig. 5) streams camera-like frames
+//!         through backbone + NCM and reports latency/fps.
+//!
+//!     make artifacts && cargo run --release --example fewshot_e2e
+//!
+//! Results are recorded in EXPERIMENTS.md §E2/§E5.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+use bwade::artifacts::{ArtifactPaths, FewshotBank};
+use bwade::build::{build, DesignConfig};
+use bwade::coordinator::{serve, BatchPolicy, FrameSource};
+use bwade::fewshot::{evaluate, sample_episode, NcmClassifier};
+use bwade::fixedpoint::{baseline16_config, headline_config};
+use bwade::graph::Graph;
+use bwade::resources::Device;
+use bwade::rng::Rng;
+use bwade::runtime::{BackboneRunner, Runtime};
+
+fn main() -> Result<()> {
+    let paths = ArtifactPaths::default_dir();
+    anyhow::ensure!(
+        paths.exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    // ---- 1. Design environment: compile the deployed graph (Fig. 3). --
+    println!("== step 1: hardware build (design environment) ==");
+    let mut graph = Graph::load(&paths.graph_json(), &paths.graph_weights())
+        .context("loading exported graph")?;
+    let device = Device::pynq_z1();
+    let report = build(
+        &mut graph,
+        &DesignConfig {
+            quant: headline_config(),
+            target_fps: Some(60.0),
+            max_utilization: 0.85,
+            verify: true,
+        },
+        &device,
+    )?;
+    println!("{}\n", report.summary());
+
+    // ---- 2. PJRT feature extraction over the novel bank. --------------
+    println!("== step 2: backbone feature extraction (PJRT, python-free) ==");
+    let bundle = paths.model_bundle()?;
+    let bank = FewshotBank::load(&paths.fewshot_bank())?;
+    let runtime = Runtime::new()?;
+    println!("PJRT platform: {}", runtime.platform());
+    let batch = *bundle.batch_sizes.iter().max().unwrap();
+    let t0 = Instant::now();
+    let runner = BackboneRunner::new(
+        &runtime,
+        &bundle,
+        &paths.backbone_hlo(batch),
+        batch,
+        headline_config(),
+    )?;
+    println!("compiled backbone (batch {batch}) in {:.2?}", t0.elapsed());
+    let t0 = Instant::now();
+    let feats = runner.extract_all(&bank.images, bank.num_images())?;
+    let dt = t0.elapsed();
+    println!(
+        "extracted {} features in {:.2?} ({:.1} img/s)\n",
+        bank.num_images(),
+        dt,
+        bank.num_images() as f64 / dt.as_secs_f64()
+    );
+
+    // ---- 3. Few-shot evaluation (Table II protocol, 600 episodes). ----
+    println!("== step 3: 600-episode 5-way 5-shot NCM evaluation ==");
+    let mut rng = Rng::new(0xE2E);
+    let episodes: Vec<_> = (0..600)
+        .map(|_| sample_episode(&mut rng, bank.num_classes, bank.per_class, 5, 5, 15))
+        .collect::<Result<_>>()?;
+    let acc = evaluate(&feats, bundle.feature_dim, &episodes)?;
+    println!(
+        "W6A4 (paper headline): {:.2}% ± {:.2}%   (paper on CIFAR-10: 59.70%)",
+        acc.mean * 100.0,
+        acc.ci95 * 100.0
+    );
+    // 16-bit baseline for the degradation comparison.
+    let runner16 = BackboneRunner::new(
+        &runtime,
+        &bundle,
+        &paths.backbone_hlo(batch),
+        batch,
+        baseline16_config(),
+    )?;
+    let feats16 = runner16.extract_all(&bank.images, bank.num_images())?;
+    let acc16 = evaluate(&feats16, bundle.feature_dim, &episodes)?;
+    println!(
+        "W16A16 (conventional): {:.2}% ± {:.2}%   (paper: 62.78%)",
+        acc16.mean * 100.0,
+        acc16.ci95 * 100.0
+    );
+    println!(
+        "6-bit vs 16-bit accuracy gap: {:.2} points (paper: {:.2})\n",
+        (acc16.mean - acc.mean) * 100.0,
+        62.78 - 59.70
+    );
+
+    // ---- 4. Serving pipeline (Fig. 5). ---------------------------------
+    println!("== step 4: serving pipeline (frame source -> batcher -> backbone -> NCM) ==");
+    let ep = sample_episode(&mut rng, bank.num_classes, bank.per_class, 5, 5, 1)?;
+    let mut sup = Vec::new();
+    for &i in &ep.support {
+        sup.extend_from_slice(bank.image(i));
+    }
+    let sup_feats = runner.extract_all(&sup, ep.support.len())?;
+    let ncm = NcmClassifier::fit(&sup_feats, bundle.feature_dim, &ep.support_labels, 5)?;
+    let rx = FrameSource {
+        count: 240,
+        rate_fps: Some(60.0), // the paper's real-time operating point
+        img: bundle.img,
+        seed: 5,
+    }
+    .spawn(64);
+    let (metrics, _) = serve(
+        &runner,
+        &ncm,
+        rx,
+        BatchPolicy {
+            max_batch: batch,
+            max_wait: Duration::from_millis(5),
+        },
+    )?;
+    println!("{}", metrics.summary());
+    println!("(paper Fig. 5: 16.3 ms backbone latency, 61.5 fps)");
+
+    println!("\nfewshot_e2e OK");
+    Ok(())
+}

@@ -1,0 +1,191 @@
+"""Synthetic class-clustered image corpus (miniImageNet/CIFAR-10 stand-in).
+
+No dataset downloads are possible in this environment (DESIGN.md §2), so we
+procedurally generate a corpus with the statistical structure few-shot
+learning needs:
+
+* a *base* split (default 64 classes) for backbone pre-training
+  (Fig. 1 step 1 — miniImageNet's role in the paper), and
+* a disjoint *novel* split (default 20 classes) for episodic evaluation
+  (CIFAR-10's role: classes the backbone never saw).
+
+Each class is a random superposition of oriented sinusoidal gratings drawn
+from a shared frequency pool (classes overlap in components, so the task is
+not trivial), and every instance perturbs phases, amplitudes and adds a
+smooth random field + pixel noise.  Intra-class variation is therefore real
+but bounded, which is exactly the regime where an NCM classifier over
+learned features works — and where activation-range clipping from too-few
+fractional bits degrades accuracy, reproducing Table II's shape.
+
+All randomness is numpy Generator(seed) so the corpus is reproducible; the
+novel split is additionally exported verbatim to artifacts/fewshot_bank.bin
+so the rust side evaluates the *same* images (no cross-language RNG
+matching needed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+IMG = 32
+CHANNELS = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusSpec:
+    num_base_classes: int = 64
+    num_novel_classes: int = 20
+    base_per_class: int = 100
+    novel_per_class: int = 40
+    components_per_class: int = 6
+    freq_pool: int = 24  # shared pool size -> inter-class overlap
+    phase_jitter: float = 0.55
+    amp_jitter: float = 0.35
+    field_noise: float = 0.25
+    pixel_noise: float = 0.06
+    seed: int = 2026
+
+
+def _grating(fx: np.ndarray, fy: np.ndarray, phase: np.ndarray) -> np.ndarray:
+    """Batch of sinusoidal gratings [B, IMG, IMG] with per-item params."""
+    yy, xx = np.mgrid[0:IMG, 0:IMG].astype(np.float32) / IMG
+    arg = (
+        2.0 * np.pi * (fx[:, None, None] * xx + fy[:, None, None] * yy)
+        + phase[:, None, None]
+    )
+    return np.sin(arg, dtype=np.float32)
+
+
+class ClassBank:
+    """The frozen per-class generative parameters."""
+
+    def __init__(self, spec: CorpusSpec, rng: np.random.Generator, num_classes: int):
+        self.spec = spec
+        # Shared frequency pool (integer cycle counts keep gratings crisp).
+        pool_f = rng.integers(1, 9, size=(spec.freq_pool, 2)).astype(np.float32)
+        signs = rng.choice([-1.0, 1.0], size=(spec.freq_pool, 2))
+        self.pool = pool_f * signs
+        k = spec.components_per_class
+        self.comp_idx = np.stack(
+            [rng.choice(spec.freq_pool, size=k, replace=False) for _ in range(num_classes)]
+        )
+        self.base_phase = rng.uniform(0, 2 * np.pi, size=(num_classes, k)).astype(
+            np.float32
+        )
+        self.base_amp = rng.uniform(0.5, 1.5, size=(num_classes, k)).astype(np.float32)
+        # Per-channel mixing of each component (gives colour structure).
+        self.chan_mix = rng.uniform(-1.0, 1.0, size=(num_classes, k, CHANNELS)).astype(
+            np.float32
+        )
+
+    def sample(self, cls: int, n: int, rng: np.random.Generator) -> np.ndarray:
+        """n instances of class ``cls`` -> [n, IMG, IMG, CHANNELS] in [0,1]."""
+        spec = self.spec
+        k = spec.components_per_class
+        freqs = self.pool[self.comp_idx[cls]]  # [k, 2]
+        phases = self.base_phase[cls][None, :] + rng.normal(
+            0.0, spec.phase_jitter, size=(n, k)
+        ).astype(np.float32)
+        amps = self.base_amp[cls][None, :] * (
+            1.0 + rng.normal(0.0, spec.amp_jitter, size=(n, k)).astype(np.float32)
+        )
+        img = np.zeros((n, IMG, IMG, CHANNELS), np.float32)
+        for j in range(k):
+            g = _grating(
+                np.full(n, freqs[j, 0], np.float32),
+                np.full(n, freqs[j, 1], np.float32),
+                phases[:, j],
+            )  # [n, IMG, IMG]
+            img += (
+                amps[:, j, None, None, None]
+                * g[..., None]
+                * self.chan_mix[cls, j][None, None, None, :]
+            )
+        # Smooth instance field: one random low-frequency grating per image.
+        ffx = rng.uniform(0.5, 2.5, size=n).astype(np.float32)
+        ffy = rng.uniform(0.5, 2.5, size=n).astype(np.float32)
+        fph = rng.uniform(0, 2 * np.pi, size=n).astype(np.float32)
+        famp = rng.uniform(0, spec.field_noise, size=n).astype(np.float32)
+        img += (famp[:, None, None] * _grating(ffx, ffy, fph))[..., None]
+        img += rng.normal(0.0, spec.pixel_noise, size=img.shape).astype(np.float32)
+        # Squash to [0, 1] (tanh keeps the dynamic range stable per image).
+        return 0.5 + 0.5 * np.tanh(0.8 * img)
+
+
+@dataclasses.dataclass
+class Corpus:
+    base_x: np.ndarray  # [Nb, 32, 32, 3] f32 in [0,1]
+    base_y: np.ndarray  # [Nb] i32
+    novel_x: np.ndarray  # [Nn, 32, 32, 3]
+    novel_y: np.ndarray  # [Nn] i32 (0..num_novel_classes-1)
+    spec: CorpusSpec
+
+
+def generate(spec: CorpusSpec | None = None) -> Corpus:
+    spec = spec or CorpusSpec()
+    rng = np.random.default_rng(spec.seed)
+    total = spec.num_base_classes + spec.num_novel_classes
+    bank = ClassBank(spec, rng, total)
+
+    def build(classes: range, per: int) -> tuple[np.ndarray, np.ndarray]:
+        xs, ys = [], []
+        for out_label, cls in enumerate(classes):
+            xs.append(bank.sample(cls, per, rng))
+            ys.append(np.full(per, out_label, np.int32))
+        return np.concatenate(xs), np.concatenate(ys)
+
+    base_x, base_y = build(range(spec.num_base_classes), spec.base_per_class)
+    novel_x, novel_y = build(
+        range(spec.num_base_classes, total), spec.novel_per_class
+    )
+    return Corpus(base_x, base_y, novel_x, novel_y, spec)
+
+
+# --------------------------------------------------------------------------
+# Binary export for the rust side (artifacts/fewshot_bank.bin)
+# --------------------------------------------------------------------------
+#
+# Format (little-endian):
+#   magic  u32 = 0x42575A46  ("FZWB")
+#   version u32 = 1
+#   num_classes u32, per_class u32, height u32, width u32, channels u32
+#   data: f32[num_classes * per_class * h * w * c], class-major, NHWC
+# Labels are implicit: image i belongs to class i // per_class.
+
+BANK_MAGIC = 0x42575A46
+BANK_VERSION = 1
+
+
+def export_bank(corpus: Corpus, path: str) -> None:
+    spec = corpus.spec
+    per = spec.novel_per_class
+    nc = spec.num_novel_classes
+    # Reorder class-major (generate() already emits class-major).
+    x = corpus.novel_x.astype("<f4")
+    header = np.array(
+        [BANK_MAGIC, BANK_VERSION, nc, per, IMG, IMG, CHANNELS], dtype="<u4"
+    )
+    with open(path, "wb") as f:
+        f.write(header.tobytes())
+        f.write(x.tobytes())
+
+
+def load_bank(path: str) -> Corpus:
+    """Reload an exported bank (round-trip test support)."""
+    with open(path, "rb") as f:
+        header = np.frombuffer(f.read(28), dtype="<u4")
+        if header[0] != BANK_MAGIC or header[1] != BANK_VERSION:
+            raise ValueError("bad fewshot bank header")
+        nc, per, h, w, c = (int(v) for v in header[2:7])
+        x = np.frombuffer(f.read(), dtype="<f4").reshape(nc * per, h, w, c)
+    y = np.repeat(np.arange(nc, dtype=np.int32), per)
+    spec = CorpusSpec(num_novel_classes=nc, novel_per_class=per)
+    return Corpus(
+        base_x=np.zeros((0, h, w, c), np.float32),
+        base_y=np.zeros((0,), np.int32),
+        novel_x=x.copy(),
+        novel_y=y,
+        spec=spec,
+    )

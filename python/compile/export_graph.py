@@ -1,0 +1,228 @@
+"""Export the quantized backbone as a compiler-input graph for the rust
+design environment.
+
+This plays the role of the Brevitas->ONNX export in the paper's Fig. 3:
+the emitted JSON is the *pre-streamlining* NCHW graph that the rust
+compiler (rust/src/transforms/) ingests, exactly as FINN ingests the
+ONNX file — Conv nodes with OIHW weight initializers, MultiThreshold
+activation quantizers with explicit per-channel threshold tensors
+followed by scalar Mul (scale) nodes, residual Add, MaxPool, and the
+final spatial ReduceMean that §III-D converts to GlobalAccPool + Mul.
+
+Schema (graph.json):
+    name, config {w_bits, w_frac, a_bits, a_frac}
+    tensors:  [{name, shape, dtype}]              — every value in the graph
+    inputs / outputs: [names]
+    nodes:    [{op, name, inputs, outputs, attrs}]
+    initializers: [{name, shape, dtype, offset}]  — data in graph_weights.bin (f32 LE)
+
+The rust side re-executes this graph with its own op library and checks
+numerical equivalence against features produced by the HLO artifact —
+the cross-layer contract test.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any
+
+import numpy as np
+
+from .fxp import QuantConfig
+from .model import INPUT_FMT, FoldedLayer
+
+
+class GraphBuilder:
+    def __init__(self, name: str):
+        self.name = name
+        self.tensors: list[dict[str, Any]] = []
+        self.nodes: list[dict[str, Any]] = []
+        self.initializers: list[dict[str, Any]] = []
+        self._blob = bytearray()
+        self._seen: set[str] = set()
+
+    def tensor(self, name: str, shape: list[int], dtype: str = "f32") -> str:
+        if name in self._seen:
+            raise ValueError(f"duplicate tensor {name}")
+        self._seen.add(name)
+        self.tensors.append({"name": name, "shape": shape, "dtype": dtype})
+        return name
+
+    def init_tensor(self, name: str, array: np.ndarray) -> str:
+        arr = np.ascontiguousarray(array, dtype="<f4")
+        self.tensor(name, list(arr.shape))
+        self.initializers.append(
+            {
+                "name": name,
+                "shape": list(arr.shape),
+                "dtype": "f32",
+                "offset": len(self._blob),
+            }
+        )
+        self._blob.extend(arr.tobytes())
+        return name
+
+    def node(
+        self,
+        op: str,
+        name: str,
+        inputs: list[str],
+        outputs: list[str],
+        attrs: dict[str, Any] | None = None,
+    ) -> None:
+        self.nodes.append(
+            {
+                "op": op,
+                "name": name,
+                "inputs": inputs,
+                "outputs": outputs,
+                "attrs": attrs or {},
+            }
+        )
+
+    def finish(
+        self, inputs: list[str], outputs: list[str], extra: dict[str, Any]
+    ) -> tuple[dict[str, Any], bytes]:
+        graph = {
+            "name": self.name,
+            "inputs": inputs,
+            "outputs": outputs,
+            "tensors": self.tensors,
+            "nodes": self.nodes,
+            "initializers": self.initializers,
+            **extra,
+        }
+        return graph, bytes(self._blob)
+
+
+def _thresholds(channels: int, bits: int, frac_bits: int) -> np.ndarray:
+    """FINN-style [C, K] threshold matrix for the unsigned quantizer:
+    t_k = (k + 0.5) * 2^-f, replicated per channel (uniform quantizer —
+    per-channel rows keep the rust MultiThreshold executor general)."""
+    k = np.arange(2**bits - 1, dtype=np.float32)
+    row = (k + 0.5) / float(2**frac_bits)
+    return np.tile(row[None, :], (channels, 1))
+
+
+def build_graph(
+    folded: list[FoldedLayer], cfg: QuantConfig, img: int = 32
+) -> tuple[dict[str, Any], bytes]:
+    """NCHW pre-streamlining graph for the folded (float-weight) backbone.
+
+    Weights are exported in float; the rust design environment quantizes
+    them per its DesignConfig (the bit-width is a *design parameter* there
+    — the whole point of the paper)."""
+    g = GraphBuilder(f"resnet9_{cfg.describe()}")
+    g.tensor("global_in", [1, 3, img, img])
+
+    # Input quantizer: MultiThreshold (codes) + Mul (scale back to value).
+    g.init_tensor("in_thresh", _thresholds(3, INPUT_FMT.bits, INPUT_FMT.frac_bits))
+    g.tensor("in_codes", [1, 3, img, img])
+    g.node(
+        "MultiThreshold",
+        "quant_in",
+        ["global_in", "in_thresh"],
+        ["in_codes"],
+        {"out_scale": 1.0, "out_bias": 0.0, "data_layout": "NCHW"},
+    )
+    g.init_tensor("in_scale", np.array(1.0 / INPUT_FMT.scale, np.float32))
+    g.tensor("in_q", [1, 3, img, img])
+    g.node("Mul", "quant_in_scale", ["in_codes", "in_scale"], ["in_q"], {})
+
+    cur = "in_q"
+    h = img
+    skip: str | None = None
+    for layer in folded:
+        cout = int(layer.w.shape[3])
+        if layer.res_begin:
+            skip = cur
+        # Conv weights: OIHW (PyTorch convention for the imported graph).
+        w_oihw = np.transpose(np.asarray(layer.w), (3, 2, 0, 1))
+        g.init_tensor(f"{layer.name}_w", w_oihw)
+        g.init_tensor(f"{layer.name}_b", np.asarray(layer.b))
+        conv_out = g.tensor(f"{layer.name}_conv", [1, cout, h, h])
+        g.node(
+            "Conv",
+            f"{layer.name}",
+            [cur, f"{layer.name}_w", f"{layer.name}_b"],
+            [conv_out],
+            {"kernel": [3, 3], "stride": [1, 1], "pad": [1, 1], "group": 1},
+        )
+        cur = conv_out
+        if layer.res_add:
+            assert skip is not None
+            add_out = g.tensor(f"{layer.name}_add", [1, cout, h, h])
+            g.node("Add", f"{layer.name}_res", [cur, skip], [add_out], {})
+            cur = add_out
+        # Activation quantizer (absorbs ReLU): MultiThreshold + Mul.
+        g.init_tensor(
+            f"{layer.name}_thresh", _thresholds(cout, cfg.act.bits, cfg.act.frac_bits)
+        )
+        codes = g.tensor(f"{layer.name}_codes", [1, cout, h, h])
+        g.node(
+            "MultiThreshold",
+            f"{layer.name}_quant",
+            [cur, f"{layer.name}_thresh"],
+            [codes],
+            {"out_scale": 1.0, "out_bias": 0.0, "data_layout": "NCHW"},
+        )
+        g.init_tensor(
+            f"{layer.name}_actscale", np.array(1.0 / cfg.act.scale, np.float32)
+        )
+        scaled = g.tensor(f"{layer.name}_q", [1, cout, h, h])
+        g.node(
+            "Mul",
+            f"{layer.name}_quant_scale",
+            [codes, f"{layer.name}_actscale"],
+            [scaled],
+            {},
+        )
+        cur = scaled
+        if layer.pool:
+            h //= 2
+            pool_out = g.tensor(f"{layer.name}_pool", [1, cout, h, h])
+            g.node(
+                "MaxPool",
+                f"{layer.name}_maxpool",
+                [cur],
+                [pool_out],
+                {"kernel": [2, 2], "stride": [2, 2]},
+            )
+            cur = pool_out
+
+    feat = int(folded[-1].w.shape[3])
+    g.tensor("global_out", [1, feat])
+    # The backbone's final node — the paper's §III-D target.
+    g.node(
+        "ReduceMean",
+        "gap",
+        [cur],
+        ["global_out"],
+        {"axes": [2, 3], "keepdims": 0},
+    )
+    return g.finish(
+        ["global_in"],
+        ["global_out"],
+        {
+            "config": {
+                "w_bits": cfg.weight.bits,
+                "w_frac": cfg.weight.frac_bits,
+                "a_bits": cfg.act.bits,
+                "a_frac": cfg.act.frac_bits,
+            }
+        },
+    )
+
+
+def export(
+    folded: list[FoldedLayer],
+    cfg: QuantConfig,
+    json_path: str,
+    bin_path: str,
+    img: int = 32,
+) -> None:
+    graph, blob = build_graph(folded, cfg, img)
+    with open(json_path, "w") as f:
+        json.dump(graph, f, indent=1)
+    with open(bin_path, "wb") as f:
+        f.write(blob)

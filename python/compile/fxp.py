@@ -1,0 +1,189 @@
+"""Arbitrary-bit-width fixed-point quantization — the numeric core of the paper.
+
+The paper (Table II) describes every tensor format as a pair
+(total bits, fractional bits).  Weights are *signed* two's-complement
+fixed-point: with total bits ``b`` and fractional bits ``f`` the
+representable grid is
+
+    v = q * 2^-f,   q in [-2^(b-1), 2^(b-1) - 1]
+
+("6 bits: 1 integer + 5 fractional" means b=6, f=5 -> range [-1, 1-2^-5];
+the sign bit counts toward the integer part, matching Brevitas' convention
+used by the paper).
+
+Activations follow a ReLU, so they are quantized *unsigned*:
+
+    v = q * 2^-f,   q in [0, 2^b - 1]
+
+Rounding is floor(x * 2^f + 0.5) everywhere (round-half-up).  This single
+deterministic rule is replicated bit-exactly by:
+  * the pure-jnp oracle (kernels/ref.py),
+  * the Pallas kernels (kernels/mvau.py, kernels/thresh.py),
+  * the rust fixed-point module (rust/src/fixedpoint/) and the rust
+    MultiThreshold executor (rust/src/ops/),
+so cross-layer equivalence tests can require exact equality, not allclose.
+
+MultiThreshold view (FINN): an unsigned uniform quantizer with N = 2^b - 1
+thresholds t_k = (k + 0.5) * 2^-f, k = 0..N-1, computes
+
+    q = #{k : x >= t_k} = clip(floor(x * 2^f + 0.5), 0, N)
+
+which is exactly the formula above — this is why the rust compiler can map
+our activation nodes onto FINN-style MultiThreshold/Thresholding layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FxpFormat:
+    """A fixed-point format: total bit-width and fractional bits.
+
+    ``signed`` selects two's-complement (weights) vs unsigned (post-ReLU
+    activations).  ``int_bits`` is derived: bits - frac_bits (incl. sign
+    when signed), matching the paper's "<int>/<frac>" notation.
+    """
+
+    bits: int
+    frac_bits: int
+    signed: bool = True
+
+    def __post_init__(self) -> None:
+        if self.bits < 1 or self.bits > 32:
+            raise ValueError(f"bits must be in [1,32], got {self.bits}")
+        if self.frac_bits < 0 or self.frac_bits > self.bits + 16:
+            raise ValueError(f"bad frac_bits {self.frac_bits}")
+
+    @property
+    def int_bits(self) -> int:
+        return self.bits - self.frac_bits
+
+    @property
+    def scale(self) -> float:
+        """LSB step reciprocal: quantized code = value * scale."""
+        return float(2**self.frac_bits)
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1)) if self.signed else 0
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1 if self.signed else 2**self.bits - 1
+
+    @property
+    def vmin(self) -> float:
+        return self.qmin / self.scale
+
+    @property
+    def vmax(self) -> float:
+        return self.qmax / self.scale
+
+    @property
+    def num_thresholds(self) -> int:
+        """Number of MultiThreshold steps needed to realize this quantizer."""
+        return self.qmax - self.qmin
+
+    def describe(self) -> str:
+        s = "s" if self.signed else "u"
+        return f"{s}{self.bits}.{self.frac_bits}"
+
+
+def quantize_int(x: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """Quantize to integer codes with round-half-up + saturation."""
+    q = jnp.floor(x * fmt.scale + 0.5)
+    return jnp.clip(q, fmt.qmin, fmt.qmax)
+
+
+def quantize(x: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """Quantize to the fixed-point grid, returned in the float domain."""
+    return quantize_int(x, fmt) * (1.0 / fmt.scale)
+
+
+def fake_quant(x: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """Straight-through-estimator quantizer for QAT.
+
+    Forward: quantize(x).  Backward: identity (gradients flow through the
+    saturation region too, like Brevitas' default STE).
+    """
+    return x + jax.lax.stop_gradient(quantize(x, fmt) - x)
+
+
+def multithreshold(x: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """FINN MultiThreshold semantics for an unsigned quantizer.
+
+    Returns integer codes in [0, 2^bits - 1].  Identical to
+    ``quantize_int`` for unsigned formats; spelled out threshold-wise in
+    the oracle (ref.multithreshold_ref) to prove the equivalence the rust
+    compiler relies on.
+    """
+    if fmt.signed:
+        raise ValueError("multithreshold models the unsigned post-ReLU quantizer")
+    return quantize_int(x, fmt)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Per-layer-kind bit configuration — one row of the paper's Table II.
+
+    The paper sweeps (max bit-width, conv int/frac, ReLU int/frac).  Weight
+    formats are signed, activation formats unsigned (post-ReLU).
+    """
+
+    weight: FxpFormat
+    act: FxpFormat
+    name: str = ""
+
+    def __post_init__(self) -> None:
+        if not self.weight.signed:
+            raise ValueError("weight format must be signed")
+        if self.act.signed:
+            raise ValueError("activation format must be unsigned")
+
+    @property
+    def max_bits(self) -> int:
+        return max(self.weight.bits, self.act.bits)
+
+    def describe(self) -> str:
+        return self.name or f"W{self.weight.describe()}_A{self.act.describe()}"
+
+
+def table2_configs() -> list[QuantConfig]:
+    """The eight rows of the paper's Table II.
+
+    Columns: max bit-width, conv (int., frac.), ReLU (int., frac.).  Total
+    conv bits = int + frac (sign counted in int); the paper's headline
+    configuration is row 2: conv 1/5 (6b) + ReLU 2/2 (4b).
+    """
+
+    def cfg(name: str, w_int: int, w_frac: int, a_int: int, a_frac: int) -> QuantConfig:
+        return QuantConfig(
+            weight=FxpFormat(bits=w_int + w_frac, frac_bits=w_frac, signed=True),
+            act=FxpFormat(bits=a_int + a_frac, frac_bits=a_frac, signed=False),
+            name=name,
+        )
+
+    return [
+        cfg("b5_c2.3_r2.2", 2, 3, 2, 2),
+        cfg("b6_c1.5_r2.2", 1, 5, 2, 2),  # the paper's chosen config (59.70%)
+        cfg("b6_c3.3_r3.3", 3, 3, 3, 3),
+        cfg("b8_c4.4_r4.4", 4, 4, 4, 4),
+        cfg("b10_c5.5_r5.5", 5, 5, 5, 5),
+        cfg("b12_c6.6_r6.6", 6, 6, 6, 6),
+        cfg("b14_c7.7_r7.7", 7, 7, 7, 7),
+        cfg("b16_c8.8_r8.8", 8, 8, 8, 8),  # the conventional 16-bit baseline
+    ]
+
+
+def float_config() -> QuantConfig:
+    """A quasi-float reference config (wide enough to be lossless here)."""
+    return QuantConfig(
+        weight=FxpFormat(bits=24, frac_bits=16, signed=True),
+        act=FxpFormat(bits=24, frac_bits=16, signed=False),
+        name="float_ref",
+    )

@@ -1,0 +1,148 @@
+"""Pallas MVAU kernel — the compute hot-spot of the FINN dataflow backbone.
+
+The FINN Matrix-Vector-Activation Unit consumes the im2col stream of a conv
+layer and produces thresholded (quantized) activations:
+
+    y = MultiThreshold(x @ W + b)
+
+This kernel is the TPU-idiom re-think of that unit (DESIGN.md
+§Hardware-Adaptation): the MVAU's PE x SIMD folding becomes an
+(block_m x block_n) output tile with a block_k reduction tile, scheduled
+HBM->VMEM by ``BlockSpec`` exactly where FINN schedules BRAM->PE streams.
+The accumulator is the resident output block across the K grid dimension
+(the systolic accumulation), and the threshold unit runs once on the final
+K step (FINN fuses thresholding into the MVAU output stage the same way).
+
+Activation parameters (``act_scale = 2^frac``, ``act_qmax = 2^bits - 1``)
+are runtime (1,1) tensors, not compile-time constants, so ONE lowered HLO
+artifact serves every Table-II activation bit-width — the rust coordinator
+feeds them per request.  ``apply_act`` is compile-time: the second conv of
+a residual block emits the raw accumulator (the Add happens before the
+MultiThreshold, see model.py).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that both jax and the
+rust runtime execute bit-identically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mvau_kernel(x_ref, w_ref, b_ref, s_ref, q_ref, o_ref, *, nk: int, apply_act: bool):
+    """One (i, j, k) grid step: accumulate a K tile into the resident
+    output block; apply bias + MultiThreshold on the last K step."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _finish():
+        acc = o_ref[...] + b_ref[...]
+        if apply_act:
+            s = s_ref[0, 0]
+            q = q_ref[0, 0]
+            # MultiThreshold: clip(floor(acc * 2^f + 0.5), 0, 2^b - 1) * 2^-f.
+            # The clip-at-0 absorbs the ReLU.
+            o_ref[...] = jnp.clip(jnp.floor(acc * s + 0.5), 0.0, q) / s
+        else:
+            o_ref[...] = acc
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("apply_act", "block_m", "block_n", "block_k", "interpret"),
+)
+def mvau(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    act_scale: jax.Array,
+    act_qmax: jax.Array,
+    *,
+    apply_act: bool = True,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tiled matmul + bias + MultiThreshold: [M,K] @ [K,N] + [N] -> [M,N].
+
+    VMEM budget per grid step (f32):
+        block_m*block_k + block_k*block_n + block_m*block_n + block_n
+    floats = 192 KiB at the default 128^3 blocks — comfortably inside a
+    TPU core's ~16 MiB VMEM, and the 128x128 output tile maps 1:1 onto
+    the MXU systolic array (EXPERIMENTS.md §Perf has the roofline sheet).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k2 != k or b.shape != (n,):
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    bk = min(block_k, k)
+
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    bp = _pad_to(b.reshape(1, n), 1, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    s2 = jnp.asarray(act_scale, jnp.float32).reshape(1, 1)
+    q2 = jnp.asarray(act_qmax, jnp.float32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_mvau_kernel, nk=grid[2], apply_act=apply_act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, bp, s2, q2)
+    return out[:m, :n]
+
+
+def vmem_bytes(block_m: int = 128, block_n: int = 128, block_k: int = 128) -> int:
+    """f32 VMEM footprint of one grid step (x + w + bias + scalars + out)."""
+    floats = block_m * block_k + block_k * block_n + block_n + 2 + block_m * block_n
+    return 4 * floats
+
+
+def arithmetic_intensity(
+    m: int, k: int, n: int, block_m: int = 128, block_n: int = 128, block_k: int = 128
+) -> float:
+    """FLOPs per HBM byte for the tiled schedule (f32, perfect reuse inside
+    a block): each (i,j) output tile streams the full K once."""
+    import math
+
+    nm = math.ceil(m / block_m)
+    nn = math.ceil(n / block_n)
+    flops = 2.0 * m * k * n
+    hbm_bytes = 4.0 * (nn * m * k + nm * k * n + m * n)
+    return flops / hbm_bytes

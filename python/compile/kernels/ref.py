@@ -1,0 +1,141 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference here written with the
+most literal jnp formulation possible — no tiling, no fusion — so pytest can
+assert exact (integer-domain) or allclose (float-domain) agreement.
+
+The MVAU oracle also spells out the threshold-counting form of the unsigned
+quantizer to document the MultiThreshold equivalence the rust compiler
+(transforms/convert_to_hw.rs) depends on.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..fxp import FxpFormat
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain f32 matmul oracle: [M,K] @ [K,N] -> [M,N]."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+
+
+def multithreshold_ref(x: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """Threshold-counting form: q = #{k : x >= (k+0.5) * 2^-f}, k < 2^b - 1.
+
+    Mathematically equal to clip(floor(x * 2^f + 0.5), 0, 2^b - 1) for
+    x >= 0 (post-ReLU); for x < 0 both forms give 0 because every
+    threshold is positive and floor(x*s+0.5) clips at 0.
+    """
+    if fmt.signed:
+        raise ValueError("unsigned activations only")
+    n = fmt.qmax  # number of thresholds = 2^b - 1
+    # Literal O(n) formulation — fine for oracle-sized n.
+    ks = jnp.arange(n, dtype=jnp.float32)
+    thresholds = (ks + 0.5) / fmt.scale  # t_k = (k + 0.5) * 2^-f
+    return jnp.sum(x[..., None] >= thresholds, axis=-1).astype(jnp.float32)
+
+
+def act_quant_ref(x: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """Closed-form unsigned activation quantizer (float domain)."""
+    q = jnp.clip(jnp.floor(x * fmt.scale + 0.5), 0.0, float(fmt.qmax))
+    return q / fmt.scale
+
+
+def mvau_ref(
+    x: jax.Array, w: jax.Array, act_scale: jax.Array, act_qmax: jax.Array
+) -> jax.Array:
+    """Matrix-Vector-Activation-Unit oracle.
+
+    y = clip(floor(relu(x @ w) * act_scale + 0.5), 0, act_qmax) / act_scale
+
+    ``act_scale`` / ``act_qmax`` are runtime scalars (f32) so a single HLO
+    artifact can serve every activation bit-width (the rust coordinator
+    feeds them per Table-II row).  relu is folded into the quantizer: the
+    clip-at-0 implements it.
+    """
+    acc = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    q = jnp.clip(jnp.floor(acc * act_scale + 0.5), 0.0, act_qmax)
+    return q / act_scale
+
+
+def im2col_ref(
+    x: jax.Array, kh: int, kw: int, stride: int = 1, pad: int = 1
+) -> jax.Array:
+    """NHWC im2col: [N,H,W,C] -> [N, Ho, Wo, kh*kw*C] (patch-major rows).
+
+    The patch axis ordering is (dy, dx, c) — the same ordering the rust
+    LowerConvToMatMul transform and the SWG hardware model use, so weight
+    reshapes agree across all three layers.
+    """
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            patch = jax.lax.slice(
+                xp,
+                (0, dy, dx, 0),
+                (n, dy + (ho - 1) * stride + 1, dx + (wo - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            cols.append(patch)
+    return jnp.concatenate(cols, axis=-1).reshape(n, ho, wo, kh * kw * c)
+
+
+def conv2d_nhwc_ref(
+    x: jax.Array, w_hwio: jax.Array, stride: int = 1, pad: int = 1
+) -> jax.Array:
+    """XLA conv oracle for the im2col+matmul path: NHWC x HWIO -> NHWC."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w_hwio,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv_mvau_ref(
+    x: jax.Array,
+    w_hwio: jax.Array,
+    act_scale: jax.Array,
+    act_qmax: jax.Array,
+    stride: int = 1,
+    pad: int = 1,
+) -> jax.Array:
+    """Conv lowered to im2col + MVAU — the whole-layer oracle."""
+    kh, kw, cin, cout = w_hwio.shape
+    cols = im2col_ref(x, kh, kw, stride, pad)
+    n, ho, wo, k = cols.shape
+    y = mvau_ref(
+        cols.reshape(n * ho * wo, k),
+        w_hwio.reshape(kh * kw * cin, cout),
+        act_scale,
+        act_qmax,
+    )
+    return y.reshape(n, ho, wo, cout)
+
+
+def global_avg_pool_ref(x: jax.Array) -> jax.Array:
+    """reduce_mean over spatial dims, NHWC -> NC (the backbone's last node)."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def global_acc_pool_ref(x: jax.Array) -> jax.Array:
+    """FINN GlobalAccPool: cumulative *sum* over spatial dims (no divide).
+
+    The paper's §III-D conversion: reduce_mean == GlobalAccPool followed by
+    a scalar Mul with 1/(H*W).
+    """
+    return jnp.sum(x, axis=(1, 2))
+
+
+def maxpool2x2_ref(x: jax.Array) -> jax.Array:
+    """2x2/2 max-pool, NHWC."""
+    n, h, w, c = x.shape
+    return jnp.max(x.reshape(n, h // 2, 2, w // 2, 2, c), axis=(2, 4))

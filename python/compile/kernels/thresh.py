@@ -1,0 +1,61 @@
+"""Standalone Pallas MultiThreshold kernel.
+
+Used where the activation quantizer is NOT fused into an MVAU: after the
+residual Add of each res-block (Conv -> Add -> MultiThreshold) and for the
+quantization of the network input.  Elementwise over row blocks; the
+threshold parameters are runtime (1,1) tensors (see mvau.py for why).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _thresh_kernel(x_ref, s_ref, q_ref, o_ref):
+    s = s_ref[0, 0]
+    q = q_ref[0, 0]
+    o_ref[...] = jnp.clip(jnp.floor(x_ref[...] * s + 0.5), 0.0, q) / s
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def multithreshold(
+    x: jax.Array,
+    act_scale: jax.Array,
+    act_qmax: jax.Array,
+    *,
+    block_m: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """clip(floor(x * 2^f + 0.5), 0, 2^b - 1) * 2^-f over a 2-D tensor.
+
+    Callers flatten to [rows, cols]; the grid tiles rows so arbitrarily
+    large activations stream through a bounded VMEM block.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"expected 2-D input, got {x.shape}")
+    m, n = x.shape
+    bm = min(block_m, m)
+    rem = (-m) % bm
+    xp = jnp.pad(x, ((0, rem), (0, 0))) if rem else x
+    grid = (xp.shape[0] // bm,)
+
+    s2 = jnp.asarray(act_scale, jnp.float32).reshape(1, 1)
+    q2 = jnp.asarray(act_qmax, jnp.float32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        _thresh_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.float32),
+        interpret=interpret,
+    )(xp, s2, q2)
+    return out[:m]

@@ -1,0 +1,366 @@
+"""ResNet-9 few-shot backbone (PEFSL/EASY style) in JAX.
+
+Two forward paths:
+
+* ``forward_train`` — float training path: Conv + BatchNorm(batch stats) +
+  ReLU (+MaxPool), residual blocks, global average pool, linear head.
+  Used only at build time by train.py (backbone pre-training, Fig. 1
+  step 1).
+
+* ``quant_forward`` — the deployed inference graph the paper puts on the
+  FPGA: BatchNorm folded into conv weights/bias, every conv lowered to
+  im2col + MVAU (Pallas kernel), activations quantized by MultiThreshold,
+  final spatial reduce-mean producing the feature vector consumed by the
+  CPU-side NCM classifier (Fig. 5).  This is the function aot.py lowers
+  to the HLO artifact the rust runtime executes.
+
+Architecture (NHWC, 32x32 inputs; 8 convs + linear head = "ResNet-9"):
+
+    stem  : conv3x3   3 -> c0, BN, ReLU(quant)
+    conv1 : conv3x3  c0 -> c1, BN, ReLU(quant), maxpool 2x2
+    res1  : [conv3x3 c1 -> c1, BN, ReLU(quant)] x2 + skip, quant after add
+    conv2 : conv3x3  c1 -> c2, BN, ReLU(quant), maxpool 2x2
+    conv3 : conv3x3  c2 -> c3, BN, ReLU(quant), maxpool 2x2
+    res2  : [conv3x3 c3 -> c3, BN, ReLU(quant)] x2 + skip, quant after add
+    gap   : reduce_mean over H,W  ->  feature [c3]
+
+Default widths (8, 16, 32, 64) give a feature dim of 64 — the PYNQ-Z1
+scale of PEFSL's backbone (the paper's resource budget, Table III, is what
+constrains width; DESIGN.md §2 records the scaling substitution).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .fxp import FxpFormat, QuantConfig, quantize
+from .kernels import ref
+from .kernels.mvau import mvau
+from .kernels.thresh import multithreshold
+
+# Input images are standardized to [0, 1] and quantized u8.8 regardless of
+# the sweep config (the camera interface is byte-valued in PEFSL; only the
+# network-internal formats are swept in Table II).
+INPUT_FMT = FxpFormat(bits=8, frac_bits=8, signed=False)
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One conv layer of the backbone graph."""
+
+    name: str
+    cin: int
+    cout: int
+    pool: bool = False  # 2x2 max-pool after activation
+    res_begin: bool = False  # remember the input as the skip source
+    res_add: bool = False  # add the remembered skip before the activation
+
+
+def arch(widths: tuple[int, int, int, int] = (8, 16, 32, 64)) -> list[LayerSpec]:
+    c0, c1, c2, c3 = widths
+    return [
+        LayerSpec("stem", 3, c0),
+        LayerSpec("conv1", c0, c1, pool=True),
+        LayerSpec("res1a", c1, c1, res_begin=True),
+        LayerSpec("res1b", c1, c1, res_add=True),
+        LayerSpec("conv2", c1, c2, pool=True),
+        LayerSpec("conv3", c2, c3, pool=True),
+        LayerSpec("res2a", c3, c3, res_begin=True),
+        LayerSpec("res2b", c3, c3, res_add=True),
+    ]
+
+
+def feature_dim(widths: tuple[int, int, int, int] = (8, 16, 32, 64)) -> int:
+    return widths[3]
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+def init_params(
+    key: jax.Array,
+    widths: tuple[int, int, int, int] = (8, 16, 32, 64),
+    num_classes: int = 64,
+) -> dict[str, Any]:
+    """He-init conv weights (HWIO), identity BN, zero-init head."""
+    layers = {}
+    specs = arch(widths)
+    keys = jax.random.split(key, len(specs) + 1)
+    for spec, k in zip(specs, keys[:-1]):
+        fan_in = 3 * 3 * spec.cin
+        w = jax.random.normal(k, (3, 3, spec.cin, spec.cout), jnp.float32)
+        w = w * jnp.sqrt(2.0 / fan_in)
+        layers[spec.name] = {
+            "w": w,
+            "bn_gamma": jnp.ones((spec.cout,), jnp.float32),
+            "bn_beta": jnp.zeros((spec.cout,), jnp.float32),
+        }
+    feat = feature_dim(widths)
+    head_w = jax.random.normal(keys[-1], (feat, num_classes), jnp.float32)
+    head_w = head_w * jnp.sqrt(1.0 / feat)
+    return {
+        "layers": layers,
+        "head": {"w": head_w, "b": jnp.zeros((num_classes,), jnp.float32)},
+    }
+
+
+def init_bn_stats(
+    widths: tuple[int, int, int, int] = (8, 16, 32, 64),
+) -> dict[str, Any]:
+    """Running mean/var per layer, updated with EMA during training."""
+    return {
+        spec.name: {
+            "mean": jnp.zeros((spec.cout,), jnp.float32),
+            "var": jnp.ones((spec.cout,), jnp.float32),
+        }
+        for spec in arch(widths)
+    }
+
+
+# --------------------------------------------------------------------------
+# Float training path
+# --------------------------------------------------------------------------
+
+
+def _bn_train(x: jax.Array, gamma: jax.Array, beta: jax.Array):
+    mean = jnp.mean(x, axis=(0, 1, 2))
+    var = jnp.var(x, axis=(0, 1, 2))
+    y = (x - mean) * jax.lax.rsqrt(var + BN_EPS) * gamma + beta
+    return y, mean, var
+
+
+def forward_train(
+    params: dict[str, Any],
+    x: jax.Array,
+    widths: tuple[int, int, int, int] = (8, 16, 32, 64),
+):
+    """Float forward with batch-stats BN.
+
+    Returns (features, logits, batch_stats) where batch_stats maps layer
+    name -> (mean, var) for the EMA update in train.py.
+    """
+    stats = {}
+    skip = None
+    for spec in arch(widths):
+        p = params["layers"][spec.name]
+        if spec.res_begin:
+            skip = x
+        y = ref.conv2d_nhwc_ref(x, p["w"])
+        y, mean, var = _bn_train(y, p["bn_gamma"], p["bn_beta"])
+        stats[spec.name] = (mean, var)
+        if spec.res_add:
+            y = y + skip
+        x = jax.nn.relu(y)
+        if spec.pool:
+            x = ref.maxpool2x2_ref(x)
+    feats = jnp.mean(x, axis=(1, 2))
+    logits = feats @ params["head"]["w"] + params["head"]["b"]
+    return feats, logits, stats
+
+
+def forward_eval_float(
+    params: dict[str, Any],
+    bn_stats: dict[str, Any],
+    x: jax.Array,
+    widths: tuple[int, int, int, int] = (8, 16, 32, 64),
+) -> jax.Array:
+    """Float feature extraction with running BN stats (the pre-quantization
+    reference for Table II's float row)."""
+    folded = fold_batchnorm(params, bn_stats, widths)
+    return float_backbone_apply(folded, x)
+
+
+# --------------------------------------------------------------------------
+# BatchNorm folding (deploy path)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FoldedLayer:
+    """Conv with BN folded in: y = conv(x, w) + b."""
+
+    name: str
+    w: jax.Array  # HWIO
+    b: jax.Array  # [cout]
+    pool: bool
+    res_begin: bool
+    res_add: bool
+
+
+def fold_batchnorm(
+    params: dict[str, Any],
+    bn_stats: dict[str, Any],
+    widths: tuple[int, int, int, int] = (8, 16, 32, 64),
+) -> list[FoldedLayer]:
+    """w' = w * gamma / sqrt(var + eps);  b' = beta - mean * gamma / sqrt(...).
+
+    After folding, the deployed graph has no BatchNorm nodes — matching
+    what FINN's streamlining does before MVAU mapping.
+    """
+    out = []
+    for spec in arch(widths):
+        p = params["layers"][spec.name]
+        s = bn_stats[spec.name]
+        inv = p["bn_gamma"] * jax.lax.rsqrt(s["var"] + BN_EPS)
+        out.append(
+            FoldedLayer(
+                name=spec.name,
+                w=p["w"] * inv,  # broadcast over HWIO's O axis
+                b=p["bn_beta"] - s["mean"] * inv,
+                pool=spec.pool,
+                res_begin=spec.res_begin,
+                res_add=spec.res_add,
+            )
+        )
+    return out
+
+
+def ptq(folded: list[FoldedLayer], cfg: QuantConfig) -> list[FoldedLayer]:
+    """Post-training quantization of folded weights to the config's weight
+    format.  Bias is quantized in the accumulator format (frac = w_frac +
+    a_frac, 32-bit container) — FINN keeps the bias/threshold path wide,
+    the paper's bit-width applies to the weight memory (DESIGN.md §2)."""
+    acc_fmt = FxpFormat(
+        bits=32, frac_bits=cfg.weight.frac_bits + cfg.act.frac_bits, signed=True
+    )
+    return [
+        FoldedLayer(
+            name=l.name,
+            w=quantize(l.w, cfg.weight),
+            b=quantize(l.b, acc_fmt),
+            pool=l.pool,
+            res_begin=l.res_begin,
+            res_add=l.res_add,
+        )
+        for l in folded
+    ]
+
+
+# --------------------------------------------------------------------------
+# Quantized inference path (what gets lowered to the HLO artifact)
+# --------------------------------------------------------------------------
+
+
+def _conv_mvau(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    act_scale: jax.Array,
+    act_qmax: jax.Array,
+    apply_act: bool,
+    use_pallas: bool,
+) -> jax.Array:
+    """One conv layer lowered exactly as the rust compiler lowers it:
+    SWG (im2col) + MVAU (matmul + bias + MultiThreshold)."""
+    kh, kw, cin, cout = w.shape
+    cols = ref.im2col_ref(x, kh, kw, 1, 1)
+    n, ho, wo, k = cols.shape
+    flat = cols.reshape(n * ho * wo, k)
+    wm = w.reshape(kh * kw * cin, cout)
+    if use_pallas:
+        y = mvau(flat, wm, b, act_scale, act_qmax, apply_act=apply_act)
+    else:
+        acc = jnp.matmul(flat, wm, preferred_element_type=jnp.float32) + b
+        if apply_act:
+            y = jnp.clip(jnp.floor(acc * act_scale + 0.5), 0.0, act_qmax) / act_scale
+        else:
+            y = acc
+    return y.reshape(n, ho, wo, cout)
+
+
+def quant_forward(
+    folded: list[FoldedLayer],
+    x: jax.Array,
+    act_scale: jax.Array,
+    act_qmax: jax.Array,
+    *,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """The deployed backbone: quantized input -> 8 MVAU layers -> GAP.
+
+    ``act_scale``/``act_qmax`` are runtime f32 scalars = 2^frac and
+    2^bits - 1 of the activation format, so one artifact serves every
+    Table-II row.  Weights arrive already quantized (ptq); the graph is
+    pure fixed-point-on-the-grid arithmetic evaluated in f32, which is
+    exact: all values are small integer multiples of 2^-f with f32
+    mantissa headroom.
+
+    Returns features [N, feat] (float — the GAP output the FPGA ships to
+    the CPU-side NCM, Fig. 5).
+    """
+    n = x.shape[0]
+    # Input quantization (u8.8): the MultiThreshold at the graph input.
+    xi = x.reshape(n, -1)
+    if use_pallas:
+        xq = multithreshold(
+            xi, jnp.float32(INPUT_FMT.scale), jnp.float32(INPUT_FMT.qmax)
+        )
+    else:
+        xq = (
+            jnp.clip(jnp.floor(xi * INPUT_FMT.scale + 0.5), 0.0, float(INPUT_FMT.qmax))
+            / INPUT_FMT.scale
+        )
+    x = xq.reshape(x.shape)
+
+    skip = None
+    for layer in folded:
+        if layer.res_begin:
+            skip = x
+        apply_act = not layer.res_add
+        y = _conv_mvau(x, layer.w, layer.b, act_scale, act_qmax, apply_act, use_pallas)
+        if layer.res_add:
+            y = y + skip
+            flat = y.reshape(n, -1)
+            if use_pallas:
+                yq = multithreshold(flat, act_scale, act_qmax)
+            else:
+                yq = (
+                    jnp.clip(jnp.floor(flat * act_scale + 0.5), 0.0, act_qmax)
+                    / act_scale
+                )
+            y = yq.reshape(y.shape)
+        x = y
+        if layer.pool:
+            x = ref.maxpool2x2_ref(x)
+    # Final node: reduce_mean over H, W — the node the paper's §III-D
+    # converts to GlobalAccPool + Mul(1/HW).  jnp.mean lowers to
+    # reduce-sum + multiply, i.e. exactly the converted form.
+    return jnp.mean(x, axis=(1, 2))
+
+
+def float_backbone_apply(folded: list[FoldedLayer], x: jax.Array) -> jax.Array:
+    """Unquantized folded backbone (float reference features)."""
+    skip = None
+    for layer in folded:
+        if layer.res_begin:
+            skip = x
+        y = ref.conv2d_nhwc_ref(x, layer.w) + layer.b
+        if layer.res_add:
+            y = y + skip
+        x = jax.nn.relu(y)
+        if layer.pool:
+            x = ref.maxpool2x2_ref(x)
+    return jnp.mean(x, axis=(1, 2))
+
+
+def quant_forward_with_config(
+    folded: list[FoldedLayer], x: jax.Array, cfg: QuantConfig, *, use_pallas: bool = True
+) -> jax.Array:
+    """Convenience: PTQ weights + run quant_forward for one Table-II row."""
+    q = ptq(folded, cfg)
+    return quant_forward(
+        q,
+        x,
+        jnp.float32(cfg.act.scale),
+        jnp.float32(cfg.act.qmax),
+        use_pallas=use_pallas,
+    )

@@ -1,0 +1,189 @@
+"""Backbone pre-training (Fig. 1 step 1) on the synthetic base corpus.
+
+Plain JAX training loop with a hand-rolled Adam (optax is not available in
+this offline image).  Runs once at build time (`make artifacts`); the loss
+curve is appended to artifacts/train_log.txt and summarized in
+EXPERIMENTS.md.  Cross-entropy over the base classes with label smoothing —
+the EASY recipe's core ingredient that matters for NCM features is a
+well-conditioned global-average-pooled embedding, which this produces.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dataset as ds
+from . import model as M
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# Hand-rolled Adam
+# --------------------------------------------------------------------------
+
+
+def adam_init(params: Params) -> dict[str, Any]:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(
+    params: Params,
+    grads: Params,
+    state: dict[str, Any],
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 1e-4,
+):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    corr = jnp.sqrt(1 - b2**tf) / (1 - b1**tf)
+
+    def upd(p, m_, v_):
+        return p - lr * (corr * m_ / (jnp.sqrt(v_) + eps) + weight_decay * p)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# --------------------------------------------------------------------------
+# Loss / step
+# --------------------------------------------------------------------------
+
+
+def loss_fn(params: Params, x: jax.Array, y: jax.Array, widths, smoothing=0.1):
+    _, logits, stats = M.forward_train(params, x, widths)
+    n_cls = logits.shape[-1]
+    onehot = jax.nn.one_hot(y, n_cls)
+    targets = onehot * (1 - smoothing) + smoothing / n_cls
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.sum(targets * logp, axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    return loss, (acc, stats)
+
+
+@partial(jax.jit, static_argnames=("widths",))
+def train_step(params, opt, bn_stats, x, y, widths, lr):
+    (loss, (acc, batch_stats)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, x, y, widths
+    )
+    params, opt = adam_update(params, grads, opt, lr)
+    # EMA update of running BN stats (deploy-time folding uses these).
+    mom = M.BN_MOMENTUM
+    new_bn = {
+        name: {
+            "mean": (1 - mom) * bn_stats[name]["mean"] + mom * mean,
+            "var": (1 - mom) * bn_stats[name]["var"] + mom * var,
+        }
+        for name, (mean, var) in batch_stats.items()
+    }
+    return params, opt, new_bn, loss, acc
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+
+def train(
+    corpus: ds.Corpus,
+    widths=(8, 16, 32, 64),
+    steps: int = 400,
+    batch: int = 64,
+    lr: float = 2e-3,
+    seed: int = 0,
+    log_every: int = 20,
+    log_path: str | None = None,
+):
+    """Returns (params, bn_stats, log_lines)."""
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(key, widths, num_classes=int(corpus.base_y.max()) + 1)
+    bn_stats = M.init_bn_stats(widths)
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed)
+    n = corpus.base_x.shape[0]
+    lines = []
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        idx = rng.integers(0, n, size=batch)
+        x = jnp.asarray(corpus.base_x[idx])
+        y = jnp.asarray(corpus.base_y[idx])
+        # Cosine LR decay with short warmup.
+        warm = min(1.0, step / 30.0)
+        cos = 0.5 * (1 + np.cos(np.pi * step / steps))
+        cur_lr = float(lr * warm * (0.1 + 0.9 * cos))
+        params, opt, bn_stats, loss, acc = train_step(
+            params, opt, bn_stats, x, y, widths, jnp.float32(cur_lr)
+        )
+        if step % log_every == 0 or step == 1:
+            line = (
+                f"step {step:4d}  loss {float(loss):.4f}  acc {float(acc):.3f}"
+                f"  lr {cur_lr:.2e}  {time.time() - t0:.1f}s"
+            )
+            print(line, flush=True)
+            lines.append(line)
+    if log_path:
+        with open(log_path, "w") as f:
+            f.write("\n".join(lines) + "\n")
+    return params, bn_stats, lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--out", default="../artifacts/params.npz")
+    ap.add_argument("--log", default="../artifacts/train_log.txt")
+    args = ap.parse_args()
+    corpus = ds.generate()
+    params, bn_stats, _ = train(
+        corpus, steps=args.steps, batch=args.batch, log_path=args.log
+    )
+    save_params(args.out, params, bn_stats)
+    print(f"saved params to {args.out}")
+
+
+def save_params(path: str, params: Params, bn_stats: dict[str, Any]) -> None:
+    flat = {}
+    for name, layer in params["layers"].items():
+        for k, v in layer.items():
+            flat[f"layers/{name}/{k}"] = np.asarray(v)
+    flat["head/w"] = np.asarray(params["head"]["w"])
+    flat["head/b"] = np.asarray(params["head"]["b"])
+    for name, s in bn_stats.items():
+        flat[f"bn/{name}/mean"] = np.asarray(s["mean"])
+        flat[f"bn/{name}/var"] = np.asarray(s["var"])
+    np.savez(path, **flat)
+
+
+def load_params(path: str) -> tuple[Params, dict[str, Any]]:
+    z = np.load(path)
+    layers: dict[str, Any] = {}
+    bn: dict[str, Any] = {}
+    for key in z.files:
+        parts = key.split("/")
+        if parts[0] == "layers":
+            layers.setdefault(parts[1], {})[parts[2]] = jnp.asarray(z[key])
+        elif parts[0] == "bn":
+            bn.setdefault(parts[1], {})[parts[2]] = jnp.asarray(z[key])
+    params = {
+        "layers": layers,
+        "head": {"w": jnp.asarray(z["head/w"]), "b": jnp.asarray(z["head/b"])},
+    }
+    return params, bn
+
+
+if __name__ == "__main__":
+    main()

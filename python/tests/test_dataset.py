@@ -1,0 +1,95 @@
+"""Synthetic corpus tests: determinism, structure, export round-trip."""
+
+import numpy as np
+import pytest
+
+from compile import dataset as ds
+
+SPEC = ds.CorpusSpec(
+    num_base_classes=6, num_novel_classes=4, base_per_class=10, novel_per_class=8
+)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return ds.generate(SPEC)
+
+
+class TestGeneration:
+    def test_shapes_and_labels(self, corpus):
+        assert corpus.base_x.shape == (60, 32, 32, 3)
+        assert corpus.novel_x.shape == (32, 32, 32, 3)
+        assert corpus.base_y.tolist() == sorted(corpus.base_y.tolist())
+        assert set(corpus.novel_y.tolist()) == {0, 1, 2, 3}
+
+    def test_value_range(self, corpus):
+        assert corpus.base_x.min() >= 0.0 and corpus.base_x.max() <= 1.0
+
+    def test_deterministic(self):
+        a = ds.generate(SPEC)
+        b = ds.generate(SPEC)
+        assert np.array_equal(a.base_x, b.base_x)
+        assert np.array_equal(a.novel_x, b.novel_x)
+
+    def test_seed_changes_data(self):
+        import dataclasses
+
+        other = ds.generate(dataclasses.replace(SPEC, seed=99))
+        base = ds.generate(SPEC)
+        assert not np.array_equal(other.base_x, base.base_x)
+
+    def test_class_structure_exists(self, corpus):
+        """Mean intra-class pixel distance must be smaller than inter-class —
+        otherwise few-shot learning on this corpus would be vacuous."""
+        x = corpus.base_x.reshape(6, 10, -1)
+        centroids = x.mean(axis=1)
+        intra = np.mean([np.linalg.norm(x[c] - centroids[c], axis=1).mean() for c in range(6)])
+        inter = np.mean(
+            [
+                np.linalg.norm(centroids[c] - centroids[d])
+                for c in range(6)
+                for d in range(6)
+                if c != d
+            ]
+        )
+        assert inter > intra * 0.5  # centroids well separated at pixel level
+
+    def test_instances_vary_within_class(self, corpus):
+        cls0 = corpus.base_x[:10]
+        assert not np.array_equal(cls0[0], cls0[1])
+
+    def test_base_novel_disjoint_generative_params(self, corpus):
+        """Novel classes use different component mixes than base classes."""
+        base_c0 = corpus.base_x[:10].mean(axis=0)
+        for c in range(4):
+            novel_c = corpus.novel_x[c * 8 : (c + 1) * 8].mean(axis=0)
+            assert np.linalg.norm(novel_c - base_c0) > 1.0
+
+
+class TestBankExport:
+    def test_round_trip(self, corpus, tmp_path):
+        path = str(tmp_path / "bank.bin")
+        ds.export_bank(corpus, path)
+        loaded = ds.load_bank(path)
+        assert np.array_equal(loaded.novel_x, corpus.novel_x)
+        assert np.array_equal(loaded.novel_y, corpus.novel_y)
+
+    def test_header_contents(self, corpus, tmp_path):
+        path = str(tmp_path / "bank.bin")
+        ds.export_bank(corpus, path)
+        header = np.fromfile(path, dtype="<u4", count=7)
+        assert header[0] == ds.BANK_MAGIC
+        assert header[2] == 4 and header[3] == 8  # classes, per-class
+        assert header[4] == 32 and header[5] == 32 and header[6] == 3
+
+    def test_rejects_bad_magic(self, tmp_path):
+        path = str(tmp_path / "bad.bin")
+        np.zeros(7, dtype="<u4").tofile(path)
+        with pytest.raises(ValueError):
+            ds.load_bank(path)
+
+    def test_data_is_class_major(self, corpus, tmp_path):
+        path = str(tmp_path / "bank.bin")
+        ds.export_bank(corpus, path)
+        raw = np.fromfile(path, dtype="<f4", offset=28).reshape(32, 32, 32, 3)
+        assert np.array_equal(raw[:8], corpus.novel_x[:8])

@@ -1,0 +1,239 @@
+"""Exporter tests: graph JSON well-formedness, weights manifest ordering,
+HLO text round-trips through the XLA text parser, and the graph executes
+equivalently to the model (via a mini graph interpreter mirroring the rust
+op library)."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import export_graph as EG
+from compile import model as M
+from compile.aot import export_test_mvau, make_backbone_fn, to_hlo_text
+from compile.fxp import table2_configs
+
+WIDTHS = (4, 8, 8, 16)
+
+
+@pytest.fixture(scope="module")
+def folded():
+    key = jax.random.PRNGKey(11)
+    params = M.init_params(key, WIDTHS)
+    bn = M.init_bn_stats(WIDTHS)
+    rng = np.random.default_rng(2)
+    for name in bn:
+        c = bn[name]["mean"].shape[0]
+        bn[name] = {
+            "mean": jnp.asarray(rng.normal(0, 0.1, c), jnp.float32),
+            "var": jnp.asarray(rng.uniform(0.8, 1.2, c), jnp.float32),
+        }
+    return M.fold_batchnorm(params, bn, WIDTHS)
+
+
+@pytest.fixture(scope="module")
+def graph_and_blob(folded):
+    return EG.build_graph(folded, table2_configs()[1])
+
+
+class TestGraphJson:
+    def test_tensor_names_unique(self, graph_and_blob):
+        graph, _ = graph_and_blob
+        names = [t["name"] for t in graph["tensors"]]
+        assert len(names) == len(set(names))
+
+    def test_every_node_input_defined(self, graph_and_blob):
+        graph, _ = graph_and_blob
+        defined = {t["name"] for t in graph["tensors"]}
+        for node in graph["nodes"]:
+            for i in node["inputs"]:
+                assert i in defined, f"{node['name']} reads undefined {i}"
+
+    def test_single_producer_per_tensor(self, graph_and_blob):
+        graph, _ = graph_and_blob
+        produced = []
+        for node in graph["nodes"]:
+            produced.extend(node["outputs"])
+        assert len(produced) == len(set(produced))
+
+    def test_node_census(self, graph_and_blob):
+        graph, _ = graph_and_blob
+        ops = [n["op"] for n in graph["nodes"]]
+        assert ops.count("Conv") == 8
+        assert ops.count("MultiThreshold") == 9  # 8 act quant + input quant
+        assert ops.count("Mul") == 9
+        assert ops.count("Add") == 2  # two residual blocks
+        assert ops.count("MaxPool") == 3
+        assert ops.count("ReduceMean") == 1
+
+    def test_reduce_mean_is_last_and_spatial(self, graph_and_blob):
+        graph, _ = graph_and_blob
+        last = graph["nodes"][-1]
+        assert last["op"] == "ReduceMean"
+        assert last["attrs"]["axes"] == [2, 3]  # NCHW spatial
+        assert last["outputs"] == ["global_out"]
+
+    def test_initializer_offsets_contiguous(self, graph_and_blob):
+        graph, blob = graph_and_blob
+        end = 0
+        for init in graph["initializers"]:
+            assert init["offset"] == end
+            end += 4 * int(np.prod(init["shape"]))
+        assert end == len(blob)
+
+    def test_conv_weights_oihw(self, graph_and_blob, folded):
+        graph, blob = graph_and_blob
+        init = next(i for i in graph["initializers"] if i["name"] == "stem_w")
+        cout, cin = folded[0].w.shape[3], folded[0].w.shape[2]
+        assert init["shape"] == [cout, cin, 3, 3]
+        data = np.frombuffer(
+            blob, "<f4", count=int(np.prod(init["shape"])), offset=init["offset"]
+        ).reshape(init["shape"])
+        want = np.transpose(np.asarray(folded[0].w), (3, 2, 0, 1))
+        assert np.array_equal(data, want)
+
+    def test_threshold_matrix_shape_and_values(self, graph_and_blob):
+        graph, blob = graph_and_blob
+        cfg = table2_configs()[1]
+        init = next(i for i in graph["initializers"] if i["name"] == "stem_thresh")
+        c = init["shape"][0]
+        assert init["shape"][1] == 2**cfg.act.bits - 1
+        data = np.frombuffer(
+            blob, "<f4", count=int(np.prod(init["shape"])), offset=init["offset"]
+        ).reshape(init["shape"])
+        # t_k = (k + 0.5) * 2^-frac, identical rows
+        want = (np.arange(15) + 0.5) / cfg.act.scale
+        assert np.allclose(data[0], want)
+        assert np.allclose(data, data[0][None, :])
+
+    def test_config_block(self, graph_and_blob):
+        graph, _ = graph_and_blob
+        assert graph["config"] == {"w_bits": 6, "w_frac": 5, "a_bits": 4, "a_frac": 2}
+
+    def test_json_serializable(self, graph_and_blob, tmp_path):
+        graph, blob = graph_and_blob
+        p = tmp_path / "g.json"
+        p.write_text(json.dumps(graph))
+        assert json.loads(p.read_text())["name"].startswith("resnet9")
+
+
+class TestGraphExecution:
+    """Execute the exported graph with a literal NCHW interpreter and compare
+    with quant_forward — proving the graph is a faithful description (the
+    same check rust runs natively)."""
+
+    @staticmethod
+    def _execute(graph, blob, x_nchw, cfg):
+        from compile.fxp import FxpFormat, quantize
+
+        w_fmt = cfg.weight
+        # Bias in the wide accumulator format — same rule as model.ptq
+        # and the rust design environment (build::requantize_graph).
+        b_fmt = FxpFormat(
+            bits=32,
+            frac_bits=cfg.weight.frac_bits + cfg.act.frac_bits,
+            signed=True,
+        )
+
+        vals = {"global_in": x_nchw}
+        inits = {}
+        for init in graph["initializers"]:
+            data = np.frombuffer(
+                blob, "<f4", count=int(np.prod(init["shape"])), offset=init["offset"]
+            ).reshape(init["shape"])
+            inits[init["name"]] = jnp.asarray(data)
+        for node in graph["nodes"]:
+            ins = [vals.get(n, inits.get(n)) for n in node["inputs"]]
+            op = node["op"]
+            if op == "MultiThreshold":
+                x, t = ins
+                out = jnp.sum(
+                    x[:, :, :, :, None] >= t[None, :, None, None, :], axis=-1
+                ).astype(jnp.float32)
+            elif op == "Mul":
+                out = ins[0] * ins[1]
+            elif op == "Conv":
+                x, w, b = ins
+                # Quantize weights/bias per the design config (rust does
+                # the same in build::requantize_graph).
+                w = quantize(w, w_fmt)
+                b = quantize(b, b_fmt)
+                out = jax.lax.conv_general_dilated(
+                    x, w, (1, 1), ((1, 1), (1, 1)),
+                    dimension_numbers=("NCHW", "OIHW", "NCHW"),
+                ) + b[None, :, None, None]
+            elif op == "Add":
+                out = ins[0] + ins[1]
+            elif op == "MaxPool":
+                x = ins[0]
+                n, c, h, w_ = x.shape
+                out = jnp.max(x.reshape(n, c, h // 2, 2, w_ // 2, 2), axis=(3, 5))
+            elif op == "ReduceMean":
+                out = jnp.mean(ins[0], axis=(2, 3))
+            else:
+                raise AssertionError(f"unknown op {op}")
+            vals[node["outputs"][0]] = out
+        return vals["global_out"]
+
+    def test_graph_matches_quant_forward(self, folded, graph_and_blob):
+        graph, blob = graph_and_blob
+        cfg = table2_configs()[1]
+        rng = np.random.default_rng(9)
+        x = jnp.asarray(rng.uniform(0, 1, (1, 32, 32, 3)), jnp.float32)
+        want = M.quant_forward_with_config(folded, x, cfg, use_pallas=False)
+        got = self._execute(
+            graph, blob, jnp.transpose(x, (0, 3, 1, 2)), cfg
+        )
+        assert jnp.allclose(got, want, rtol=1e-5, atol=1e-6), (
+            f"max diff {float(jnp.max(jnp.abs(got - want)))}"
+        )
+
+
+class TestHlo:
+    def test_test_mvau_hlo_exports(self, tmp_path):
+        path = str(tmp_path / "mvau.hlo.txt")
+        export_test_mvau(path)
+        text = open(path).read()
+        assert "ENTRY" in text and "HloModule" in text
+
+    def test_backbone_lowering_param_order(self, tmp_path):
+        specs = M.arch(WIDTHS)
+        fn = make_backbone_fn(specs)
+        shapes = []
+        for s in specs:
+            shapes.append(jax.ShapeDtypeStruct((3, 3, s.cin, s.cout), jnp.float32))
+            shapes.append(jax.ShapeDtypeStruct((s.cout,), jnp.float32))
+        scal = jax.ShapeDtypeStruct((), jnp.float32)
+        xs = jax.ShapeDtypeStruct((1, 32, 32, 3), jnp.float32)
+        lowered = jax.jit(fn).lower(tuple(shapes), scal, scal, xs)
+        text = to_hlo_text(lowered)
+        # First parameter must be the stem weight, last the image.
+        head = text[:4000]
+        assert "f32[3,3,3,4]" in head  # stem weight shape present
+        assert "f32[1,32,32,3]" in head  # input image shape present
+
+    def test_hlo_executes_in_jax_equivalently(self, folded):
+        """The lowered computation, executed via jax, must equal the direct
+        quant_forward — guarding against lowering bugs before rust even
+        enters the picture."""
+        specs = M.arch(WIDTHS)
+        fn = make_backbone_fn(specs)
+        weights = []
+        for layer in folded:
+            weights.append(layer.w)
+            weights.append(layer.b)
+        cfg = table2_configs()[1]
+        q = M.ptq(folded, cfg)
+        qweights = []
+        for layer in q:
+            qweights.append(layer.w)
+            qweights.append(layer.b)
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(rng.uniform(0, 1, (1, 32, 32, 3)), jnp.float32)
+        got = fn(
+            tuple(qweights), jnp.float32(cfg.act.scale), jnp.float32(cfg.act.qmax), x
+        )[0]
+        want = M.quant_forward_with_config(folded, x, cfg, use_pallas=True)
+        assert jnp.array_equal(got, want)

@@ -1,0 +1,152 @@
+"""Unit + property tests for the fixed-point core (fxp.py).
+
+These properties are mirrored one-to-one by rust/src/fixedpoint/ tests —
+the two implementations must agree bit-exactly (same round-half-up rule).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.fxp import (
+    FxpFormat,
+    QuantConfig,
+    fake_quant,
+    float_config,
+    multithreshold,
+    quantize,
+    quantize_int,
+    table2_configs,
+)
+
+FMT_SIGNED = st.tuples(st.integers(2, 16), st.integers(0, 12)).map(
+    lambda t: FxpFormat(bits=t[0], frac_bits=min(t[1], t[0] + 8), signed=True)
+)
+FMT_UNSIGNED = st.tuples(st.integers(1, 12), st.integers(0, 10)).map(
+    lambda t: FxpFormat(bits=t[0], frac_bits=min(t[1], t[0] + 8), signed=False)
+)
+
+
+class TestFormat:
+    def test_paper_headline_weight_format(self):
+        # "6 bits: 1 integer + 5 fractional" -> range [-1, 1 - 2^-5]
+        f = FxpFormat(bits=6, frac_bits=5, signed=True)
+        assert f.int_bits == 1
+        assert f.vmin == -1.0
+        assert f.vmax == 1.0 - 2.0**-5
+        assert f.num_thresholds == 63
+
+    def test_paper_headline_act_format(self):
+        # ReLU 2/2 -> unsigned 4-bit, range [0, 3.75]
+        f = FxpFormat(bits=4, frac_bits=2, signed=False)
+        assert f.qmin == 0 and f.qmax == 15
+        assert f.vmax == 3.75
+        assert f.num_thresholds == 15
+
+    def test_describe(self):
+        assert FxpFormat(6, 5).describe() == "s6.5"
+        assert FxpFormat(4, 2, signed=False).describe() == "u4.2"
+
+    def test_rejects_bad_bits(self):
+        with pytest.raises(ValueError):
+            FxpFormat(bits=0, frac_bits=0)
+        with pytest.raises(ValueError):
+            FxpFormat(bits=40, frac_bits=0)
+
+    def test_table2_has_eight_rows_matching_paper(self):
+        cfgs = table2_configs()
+        assert len(cfgs) == 8
+        assert [c.max_bits for c in cfgs] == [5, 6, 6, 8, 10, 12, 14, 16]
+        head = cfgs[1]
+        assert head.weight.bits == 6 and head.weight.frac_bits == 5
+        assert head.act.bits == 4 and head.act.frac_bits == 2
+
+    def test_quant_config_validates_signedness(self):
+        with pytest.raises(ValueError):
+            QuantConfig(
+                weight=FxpFormat(6, 5, signed=False), act=FxpFormat(4, 2, signed=False)
+            )
+        with pytest.raises(ValueError):
+            QuantConfig(
+                weight=FxpFormat(6, 5, signed=True), act=FxpFormat(4, 2, signed=True)
+            )
+
+
+class TestQuantize:
+    @given(FMT_SIGNED, st.lists(st.floats(-64, 64, width=32), min_size=1, max_size=64))
+    @settings(max_examples=60, deadline=None)
+    def test_idempotent(self, fmt, vals):
+        x = jnp.asarray(vals, jnp.float32)
+        q1 = quantize(x, fmt)
+        q2 = quantize(q1, fmt)
+        assert jnp.array_equal(q1, q2)
+
+    @given(FMT_SIGNED, st.lists(st.floats(-64, 64, width=32), min_size=2, max_size=64))
+    @settings(max_examples=60, deadline=None)
+    def test_monotone(self, fmt, vals):
+        x = jnp.sort(jnp.asarray(vals, jnp.float32))
+        q = quantize(x, fmt)
+        assert bool(jnp.all(jnp.diff(q) >= 0))
+
+    @given(FMT_SIGNED, st.floats(-1e6, 1e6, width=32))
+    @settings(max_examples=100, deadline=None)
+    def test_saturates_and_stays_on_grid(self, fmt, v):
+        q = float(quantize(jnp.float32(v), fmt))
+        assert fmt.vmin <= q <= fmt.vmax
+        code = q * fmt.scale
+        assert code == int(code)
+
+    @given(FMT_SIGNED, st.floats(-30, 30, width=32))
+    @settings(max_examples=100, deadline=None)
+    def test_error_bounded_by_half_lsb_inside_range(self, fmt, v):
+        if not (fmt.vmin <= v <= fmt.vmax):
+            return
+        q = float(quantize(jnp.float32(v), fmt))
+        assert abs(q - v) <= 0.5 / fmt.scale + 1e-6
+
+    def test_round_half_up_exact_rule(self):
+        # floor(x * 2^f + 0.5): 0.5 LSB rounds UP (the rule rust mirrors).
+        fmt = FxpFormat(bits=8, frac_bits=0, signed=True)
+        x = jnp.asarray([0.5, 1.5, -0.5, -1.5, 2.49, -2.51], jnp.float32)
+        q = quantize(x, fmt)
+        assert q.tolist() == [1.0, 2.0, 0.0, -1.0, 2.0, -3.0]
+
+    def test_fake_quant_forward_equals_quantize(self):
+        fmt = FxpFormat(6, 5)
+        x = jnp.linspace(-2, 2, 37)
+        assert jnp.array_equal(fake_quant(x, fmt), quantize(x, fmt))
+
+    def test_fake_quant_gradient_is_identity(self):
+        import jax
+
+        fmt = FxpFormat(6, 5)
+        g = jax.grad(lambda v: jnp.sum(fake_quant(v, fmt)))(jnp.ones(5) * 0.3)
+        assert jnp.allclose(g, 1.0)
+
+
+class TestMultithreshold:
+    @given(FMT_UNSIGNED, st.lists(st.floats(-8, 40, width=32), min_size=1, max_size=64))
+    @settings(max_examples=60, deadline=None)
+    def test_equals_quantize_int(self, fmt, vals):
+        x = jnp.asarray(vals, jnp.float32)
+        assert jnp.array_equal(multithreshold(x, fmt), quantize_int(x, fmt))
+
+    def test_rejects_signed(self):
+        with pytest.raises(ValueError):
+            multithreshold(jnp.zeros(3), FxpFormat(4, 2, signed=True))
+
+    def test_negative_inputs_map_to_zero(self):
+        fmt = FxpFormat(4, 2, signed=False)
+        x = jnp.asarray([-5.0, -0.2, 0.0], jnp.float32)
+        assert multithreshold(x, fmt).tolist() == [0.0, 0.0, 0.0]
+
+
+class TestFloatConfig:
+    def test_float_config_is_effectively_lossless_here(self):
+        cfg = float_config()
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(scale=2.0, size=256), jnp.float32)
+        q = quantize(x, cfg.weight)
+        assert float(jnp.max(jnp.abs(q - x))) < 1e-4

@@ -1,0 +1,196 @@
+"""Pallas kernels vs the pure-jnp oracle — the CORE correctness signal.
+
+hypothesis sweeps shapes, block sizes and bit-width configs; agreement is
+EXACT (array_equal), not allclose: both paths compute the same f32
+fixed-point-grid arithmetic.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.fxp import FxpFormat, table2_configs
+from compile.kernels import ref
+from compile.kernels.mvau import arithmetic_intensity, mvau, vmem_bytes
+from compile.kernels.thresh import multithreshold
+
+def rand(shape, scale=1.0, seed=None):
+    """Deterministic data: hypothesis re-runs must see identical tensors,
+    so the seed is derived from the shape (plus an optional salt)."""
+    if seed is None:
+        seed = hash((tuple(np.atleast_1d(shape).tolist()), 1234)) % (2**31)
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(scale=scale, size=shape), jnp.float32)
+
+
+ACT_FMTS = st.sampled_from(
+    [FxpFormat(b, f, signed=False) for b, f in [(4, 2), (6, 4), (8, 6), (3, 1), (8, 8)]]
+)
+
+
+class TestMvau:
+    @given(
+        m=st.integers(1, 70),
+        k=st.integers(1, 70),
+        n=st.integers(1, 40),
+        fmt=ACT_FMTS,
+        block=st.sampled_from([8, 16, 32]),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_matches_oracle_across_shapes(self, m, k, n, fmt, block):
+        x, w, b = rand((m, k)), rand((k, n)), rand((n,), 0.5)
+        s = jnp.float32(fmt.scale)
+        q = jnp.float32(fmt.qmax)
+        got = mvau(x, w, b, s, q, block_m=block, block_n=block, block_k=block)
+        acc = jnp.matmul(x, w, preferred_element_type=jnp.float32) + b
+        want = jnp.clip(jnp.floor(acc * s + 0.5), 0.0, q) / s
+        assert got.shape == (m, n)
+        assert jnp.array_equal(got, want), f"max diff {jnp.max(jnp.abs(got-want))}"
+
+    @given(
+        m=st.integers(1, 40),
+        k=st.integers(1, 40),
+        n=st.integers(1, 24),
+        block=st.sampled_from([8, 16]),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_no_act_mode_is_plain_affine(self, m, k, n, block):
+        x, w, b = rand((m, k)), rand((k, n)), rand((n,))
+        got = mvau(
+            x, w, b, jnp.float32(4.0), jnp.float32(15.0),
+            apply_act=False, block_m=block, block_n=block, block_k=block,
+        )
+        want = jnp.matmul(x, w, preferred_element_type=jnp.float32) + b
+        # Tiled K accumulation reorders float adds vs the monolithic dot.
+        assert jnp.allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_zero_bias_matches_mvau_ref(self):
+        x, w = rand((33, 17)), rand((17, 9))
+        s, q = jnp.float32(4.0), jnp.float32(15.0)
+        got = mvau(x, w, jnp.zeros(9, jnp.float32), s, q, block_m=16, block_n=16, block_k=16)
+        assert jnp.array_equal(got, ref.mvau_ref(x, w, s, q))
+
+    def test_relu_is_absorbed_by_clip_at_zero(self):
+        # Strongly negative accumulators must come out exactly 0.
+        x = -10.0 * jnp.ones((4, 4), jnp.float32)
+        w = jnp.ones((4, 3), jnp.float32)
+        out = mvau(x, w, jnp.zeros(3, jnp.float32), jnp.float32(4.0), jnp.float32(15.0))
+        assert jnp.array_equal(out, jnp.zeros((4, 3)))
+
+    def test_act_params_are_runtime_values(self):
+        # Same jitted kernel, different scales at call time — no retrace of
+        # shapes means one HLO serves all Table-II activation formats.
+        x, w, b = rand((16, 16)), rand((16, 16)), rand((16,))
+        outs = []
+        for fmt in [FxpFormat(4, 2, signed=False), FxpFormat(8, 6, signed=False)]:
+            outs.append(mvau(x, w, b, jnp.float32(fmt.scale), jnp.float32(fmt.qmax)))
+        acc = jnp.matmul(x, w) + b
+        for fmt, got in zip(
+            [FxpFormat(4, 2, signed=False), FxpFormat(8, 6, signed=False)], outs
+        ):
+            want = jnp.clip(jnp.floor(acc * fmt.scale + 0.5), 0.0, fmt.qmax) / fmt.scale
+            assert jnp.array_equal(got, want)
+
+    def test_vmem_footprint_within_tpu_budget(self):
+        # Default blocks must fit a TPU core's VMEM with double-buffer room.
+        assert vmem_bytes(128, 128, 128) < 16 * 2**20 / 4
+
+    def test_arithmetic_intensity_reported(self):
+        ai = arithmetic_intensity(1024, 144, 64)
+        assert ai > 1.0  # should beat pure streaming
+
+
+class TestMultithresholdKernel:
+    @given(
+        m=st.integers(1, 90),
+        n=st.integers(1, 40),
+        fmt=ACT_FMTS,
+        block=st.sampled_from([4, 16, 64]),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_matches_closed_form(self, m, n, fmt, block):
+        x = rand((m, n), 2.0)
+        got = multithreshold(
+            x, jnp.float32(fmt.scale), jnp.float32(fmt.qmax), block_m=block
+        )
+        want = ref.act_quant_ref(x, fmt)
+        assert jnp.array_equal(got, want)
+
+    @given(fmt=ACT_FMTS)
+    @settings(max_examples=10, deadline=None)
+    def test_matches_threshold_counting_oracle(self, fmt):
+        # The FINN MultiThreshold equivalence the rust compiler relies on.
+        x = rand((20, 8), 2.0)
+        got = multithreshold(x, jnp.float32(fmt.scale), jnp.float32(fmt.qmax))
+        counting = ref.multithreshold_ref(x, fmt) / fmt.scale
+        assert jnp.array_equal(got, counting)
+
+    def test_rejects_non_2d(self):
+        with pytest.raises(ValueError):
+            multithreshold(jnp.zeros((2, 2, 2)), jnp.float32(4.0), jnp.float32(15.0))
+
+
+class TestIm2col:
+    @given(
+        h=st.sampled_from([4, 6, 8, 12]),
+        cin=st.integers(1, 8),
+        cout=st.integers(1, 8),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_im2col_matmul_equals_lax_conv(self, h, cin, cout):
+        x = rand((2, h, h, cin))
+        w = rand((3, 3, cin, cout))
+        cols = ref.im2col_ref(x, 3, 3, 1, 1)
+        got = jnp.einsum("nhwk,ko->nhwo", cols, w.reshape(9 * cin, cout))
+        want = ref.conv2d_nhwc_ref(x, w)
+        assert jnp.allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_stride_two(self):
+        x = rand((1, 8, 8, 4))
+        w = rand((3, 3, 4, 6))
+        cols = ref.im2col_ref(x, 3, 3, 2, 1)
+        got = jnp.einsum("nhwk,ko->nhwo", cols, w.reshape(36, 6))
+        want = jax_conv = ref.conv2d_nhwc_ref(x, w, stride=2)
+        assert got.shape == jax_conv.shape
+        assert jnp.allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_patch_ordering_is_dy_dx_c(self):
+        # The rust SWG model assumes (dy, dx, c) patch-major ordering.
+        x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4, 1)
+        cols = ref.im2col_ref(x, 3, 3, 1, 1)
+        # Center pixel (1,1): patch rows are x[dy][dx] around it.
+        patch = cols[0, 1, 1].reshape(3, 3)
+        want = x[0, 0:3, 0:3, 0]
+        assert jnp.array_equal(patch, want)
+
+
+class TestWholeLayerOracle:
+    @given(fmt=ACT_FMTS)
+    @settings(max_examples=8, deadline=None)
+    def test_conv_mvau_ref_consistent_with_pieces(self, fmt):
+        x = rand((1, 6, 6, 3))
+        w = rand((3, 3, 3, 5))
+        s, q = jnp.float32(fmt.scale), jnp.float32(fmt.qmax)
+        whole = ref.conv_mvau_ref(x, w, s, q)
+        conv = ref.conv2d_nhwc_ref(x, w)
+        want = jnp.clip(jnp.floor(conv * s + 0.5), 0.0, q) / s
+        assert jnp.allclose(whole, want, rtol=1e-5, atol=1e-5)
+
+    def test_gap_equals_accpool_times_mul(self):
+        # §III-D: reduce_mean == GlobalAccPool * (1/HW).
+        x = rand((2, 4, 4, 8))
+        mean = ref.global_avg_pool_ref(x)
+        acc = ref.global_acc_pool_ref(x) * (1.0 / 16.0)
+        assert jnp.allclose(mean, acc, rtol=1e-6, atol=1e-6)
+
+    def test_table2_configs_produce_increasingly_fine_grids(self):
+        cfgs = table2_configs()
+        x = rand((64,), 0.4)
+        errs = []
+        for c in cfgs[3:]:  # monotone section of the sweep (uniform splits)
+            from compile.fxp import quantize
+
+            errs.append(float(jnp.mean(jnp.abs(quantize(x, c.weight) - x))))
+        assert errs == sorted(errs, reverse=True)

@@ -1,0 +1,180 @@
+"""Model-level tests: shapes, BN folding, quantized path plumbing, and the
+pallas-vs-jnp path equivalence on the full backbone."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.fxp import FxpFormat, QuantConfig, table2_configs
+
+WIDTHS = (4, 8, 8, 16)  # tiny for test speed; structure identical
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    key = jax.random.PRNGKey(7)
+    params = M.init_params(key, WIDTHS, num_classes=11)
+    bn = M.init_bn_stats(WIDTHS)
+    # Make BN stats non-trivial so folding is actually exercised.
+    rng = np.random.default_rng(3)
+    for name in bn:
+        c = bn[name]["mean"].shape[0]
+        bn[name] = {
+            "mean": jnp.asarray(rng.normal(0.1, 0.2, c), jnp.float32),
+            "var": jnp.asarray(rng.uniform(0.5, 2.0, c), jnp.float32),
+        }
+    return params, bn
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.default_rng(5)
+    return jnp.asarray(rng.uniform(0, 1, (3, 32, 32, 3)), jnp.float32)
+
+
+class TestArch:
+    def test_eight_convs(self):
+        assert len(M.arch(WIDTHS)) == 8
+
+    def test_channel_chaining(self):
+        specs = M.arch(WIDTHS)
+        for prev, cur in zip(specs, specs[1:]):
+            assert cur.cin == prev.cout
+
+    def test_residual_blocks_preserve_channels(self):
+        for s in M.arch(WIDTHS):
+            if s.res_begin or s.res_add:
+                assert s.cin == s.cout
+
+    def test_feature_dim(self):
+        assert M.feature_dim(WIDTHS) == WIDTHS[3]
+
+
+class TestForwardTrain:
+    def test_shapes(self, tiny_model, batch):
+        params, _ = tiny_model
+        feats, logits, stats = M.forward_train(params, batch, WIDTHS)
+        assert feats.shape == (3, WIDTHS[3])
+        assert logits.shape == (3, 11)
+        assert set(stats) == {s.name for s in M.arch(WIDTHS)}
+
+    def test_gradients_flow_to_every_conv(self, tiny_model, batch):
+        params, _ = tiny_model
+
+        def loss(p):
+            _, logits, _ = M.forward_train(p, batch, WIDTHS)
+            return jnp.sum(logits**2)
+
+        grads = jax.grad(loss)(params)
+        for name, layer in grads["layers"].items():
+            assert float(jnp.sum(jnp.abs(layer["w"]))) > 0, f"dead layer {name}"
+
+
+class TestFolding:
+    def test_fold_matches_eval_bn(self, tiny_model, batch):
+        """conv+BN(running stats)+ReLU must equal folded conv+bias+ReLU."""
+        params, bn = tiny_model
+        spec = M.arch(WIDTHS)[0]
+        p = params["layers"][spec.name]
+        s = bn[spec.name]
+        from compile.kernels import ref
+
+        y = ref.conv2d_nhwc_ref(batch, p["w"])
+        y_bn = (y - s["mean"]) * jax.lax.rsqrt(s["var"] + M.BN_EPS) * p[
+            "bn_gamma"
+        ] + p["bn_beta"]
+        folded = M.fold_batchnorm(params, bn, WIDTHS)[0]
+        y_fold = ref.conv2d_nhwc_ref(batch, folded.w) + folded.b
+        assert jnp.allclose(y_bn, y_fold, rtol=1e-4, atol=1e-5)
+
+    def test_fold_preserves_layer_metadata(self, tiny_model):
+        params, bn = tiny_model
+        folded = M.fold_batchnorm(params, bn, WIDTHS)
+        specs = M.arch(WIDTHS)
+        assert [f.name for f in folded] == [s.name for s in specs]
+        assert [f.pool for f in folded] == [s.pool for s in specs]
+        assert [f.res_add for f in folded] == [s.res_add for s in specs]
+
+
+class TestPtq:
+    def test_weights_on_grid(self, tiny_model):
+        params, bn = tiny_model
+        folded = M.fold_batchnorm(params, bn, WIDTHS)
+        cfg = table2_configs()[1]
+        q = M.ptq(folded, cfg)
+        for layer in q:
+            codes = np.asarray(layer.w) * cfg.weight.scale
+            assert np.allclose(codes, np.round(codes), atol=1e-4)
+            assert np.all(np.asarray(layer.w) <= cfg.weight.vmax + 1e-7)
+            assert np.all(np.asarray(layer.w) >= cfg.weight.vmin - 1e-7)
+
+    def test_wide_config_is_near_lossless(self, tiny_model):
+        params, bn = tiny_model
+        folded = M.fold_batchnorm(params, bn, WIDTHS)
+        from compile.fxp import float_config
+
+        q = M.ptq(folded, float_config())
+        for orig, quant in zip(folded, q):
+            assert float(jnp.max(jnp.abs(orig.w - quant.w))) < 2e-4
+
+
+class TestQuantForward:
+    def test_pallas_and_jnp_paths_identical(self, tiny_model, batch):
+        params, bn = tiny_model
+        folded = M.fold_batchnorm(params, bn, WIDTHS)
+        cfg = table2_configs()[1]
+        a = M.quant_forward_with_config(folded, batch, cfg, use_pallas=False)
+        b = M.quant_forward_with_config(folded, batch, cfg, use_pallas=True)
+        assert jnp.array_equal(a, b)
+
+    def test_feature_shape(self, tiny_model, batch):
+        params, bn = tiny_model
+        folded = M.fold_batchnorm(params, bn, WIDTHS)
+        cfg = table2_configs()[3]
+        f = M.quant_forward_with_config(folded, batch, cfg, use_pallas=False)
+        assert f.shape == (3, WIDTHS[3])
+
+    def test_wide_quant_approaches_float(self, tiny_model, batch):
+        params, bn = tiny_model
+        folded = M.fold_batchnorm(params, bn, WIDTHS)
+        f_float = M.float_backbone_apply(folded, batch)
+        from compile.fxp import float_config
+
+        f_q = M.quant_forward_with_config(folded, batch, float_config(), use_pallas=False)
+        rel = float(jnp.linalg.norm(f_float - f_q) / (jnp.linalg.norm(f_float) + 1e-9))
+        # Input quantization u8.8 remains, so not exact — but must be close.
+        assert rel < 0.05
+
+    def test_narrow_quant_degrades_more_than_wide(self, tiny_model, batch):
+        params, bn = tiny_model
+        folded = M.fold_batchnorm(params, bn, WIDTHS)
+        f_float = M.float_backbone_apply(folded, batch)
+
+        def rel_err(cfg):
+            f = M.quant_forward_with_config(folded, batch, cfg, use_pallas=False)
+            return float(jnp.linalg.norm(f_float - f) / (jnp.linalg.norm(f_float) + 1e-9))
+
+        cfgs = table2_configs()
+        assert rel_err(cfgs[0]) > rel_err(cfgs[-1])  # 5-bit worse than 16-bit
+
+    def test_all_activations_on_act_grid(self, tiny_model, batch):
+        """Features are means of act-grid values: scaled by H*W*scale they
+        must be integers."""
+        params, bn = tiny_model
+        folded = M.fold_batchnorm(params, bn, WIDTHS)
+        cfg = table2_configs()[1]
+        f = M.quant_forward_with_config(folded, batch, cfg, use_pallas=False)
+        hw = 4 * 4  # final spatial dims for 32x32 input with 3 pools
+        codes = np.asarray(f) * hw * cfg.act.scale
+        assert np.allclose(codes, np.round(codes), atol=1e-2)
+
+    def test_batch_independence(self, tiny_model, batch):
+        """Feature of image i must not depend on other batch members."""
+        params, bn = tiny_model
+        folded = M.fold_batchnorm(params, bn, WIDTHS)
+        cfg = table2_configs()[1]
+        full = M.quant_forward_with_config(folded, batch, cfg, use_pallas=False)
+        single = M.quant_forward_with_config(folded, batch[:1], cfg, use_pallas=False)
+        assert jnp.array_equal(full[:1], single)

@@ -1,0 +1,105 @@
+"""Training-loop smoke tests (tiny corpus; the real run happens in
+`make artifacts` and is logged to artifacts/train_log.txt)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import dataset as ds
+from compile import model as M
+from compile import train as T
+
+WIDTHS = (4, 8, 8, 16)
+SPEC = ds.CorpusSpec(
+    num_base_classes=4, num_novel_classes=2, base_per_class=12, novel_per_class=6
+)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return ds.generate(SPEC)
+
+
+class TestAdam:
+    def test_updates_move_toward_gradient(self):
+        params = {"w": jnp.ones(4)}
+        state = T.adam_init(params)
+        grads = {"w": jnp.ones(4)}
+        new, state = T.adam_update(params, grads, state, lr=0.1, weight_decay=0.0)
+        assert bool(jnp.all(new["w"] < params["w"]))
+
+    def test_state_timestep_advances(self):
+        params = {"w": jnp.zeros(3)}
+        state = T.adam_init(params)
+        _, state = T.adam_update(params, {"w": jnp.ones(3)}, state, lr=0.01)
+        assert int(state["t"]) == 1
+
+    def test_weight_decay_shrinks_params(self):
+        params = {"w": jnp.ones(4) * 10.0}
+        state = T.adam_init(params)
+        new, _ = T.adam_update(params, {"w": jnp.zeros(4)}, state, lr=0.1, weight_decay=0.1)
+        assert bool(jnp.all(new["w"] < params["w"]))
+
+
+class TestTrainLoop:
+    def test_loss_decreases(self, corpus):
+        _, _, lines = T.train(
+            corpus, widths=WIDTHS, steps=25, batch=16, log_every=24, seed=1
+        )
+        first = float(lines[0].split("loss")[1].split()[0])
+        last = float(lines[-1].split("loss")[1].split()[0])
+        assert last < first
+
+    def test_save_load_round_trip(self, corpus, tmp_path):
+        params, bn, _ = T.train(corpus, widths=WIDTHS, steps=2, batch=8, log_every=1)
+        path = str(tmp_path / "p.npz")
+        T.save_params(path, params, bn)
+        p2, bn2 = T.load_params(path)
+        for name in params["layers"]:
+            assert jnp.array_equal(params["layers"][name]["w"], p2["layers"][name]["w"])
+            assert jnp.array_equal(
+                params["layers"][name]["bn_gamma"], p2["layers"][name]["bn_gamma"]
+            )
+        for name in bn:
+            assert jnp.array_equal(bn[name]["mean"], bn2[name]["mean"])
+            assert jnp.array_equal(bn[name]["var"], bn2[name]["var"])
+        assert jnp.array_equal(params["head"]["w"], p2["head"]["w"])
+
+    def test_bn_stats_move_from_init(self, corpus):
+        _, bn, _ = T.train(corpus, widths=WIDTHS, steps=5, batch=8, log_every=10)
+        init = M.init_bn_stats(WIDTHS)
+        moved = any(
+            not jnp.allclose(bn[n]["mean"], init[n]["mean"]) for n in bn
+        )
+        assert moved
+
+
+class TestNcmSanityInPython:
+    """Float-feature NCM on the tiny corpus must beat chance — the python
+    twin of the rust fewshot module's accuracy path."""
+
+    def test_ncm_beats_chance(self, corpus):
+        params, bn, _ = T.train(corpus, widths=WIDTHS, steps=30, batch=16, log_every=50)
+        folded = M.fold_batchnorm(params, bn, WIDTHS)
+        feats = np.asarray(M.float_backbone_apply(folded, jnp.asarray(corpus.novel_x)))
+        labels = corpus.novel_y
+        rng = np.random.default_rng(0)
+        correct = total = 0
+        for _ in range(30):
+            classes = rng.choice(2, 2, replace=False)
+            support_idx, query_idx = [], []
+            for c in classes:
+                idx = np.where(labels == c)[0]
+                pick = rng.choice(idx, 4, replace=False)
+                support_idx.extend(pick[:2])
+                query_idx.extend(pick[2:])
+            protos = {}
+            for c in classes:
+                sel = [i for i in support_idx if labels[i] == c]
+                protos[c] = feats[sel].mean(axis=0)
+            for qi in query_idx:
+                d = {c: np.linalg.norm(feats[qi] - p) for c, p in protos.items()}
+                pred = min(d, key=d.get)
+                correct += pred == labels[qi]
+                total += 1
+        assert correct / total > 0.6  # 2-way chance = 0.5

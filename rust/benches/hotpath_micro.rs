@@ -1,0 +1,117 @@
+//! Hot-path micro-benchmarks — the §Perf instrumentation for L3.
+//!
+//!     cargo bench --bench hotpath_micro
+//!
+//! Covers every request-path and build-path hot loop:
+//!   * dataflow cycle simulator (target: >= 10M simulated cycles/s),
+//!   * graph reference executor (transform-verification cost),
+//!   * fixed-point PTQ of the full weight set,
+//!   * NCM fit+predict (the per-frame CPU-side work of Fig. 5),
+//!   * episode sampling,
+//!   * systolic simulator sweep.
+
+use bwade::benchutil::{bench, throughput};
+use bwade::build::{requantize_graph, synth_backbone_graph, DesignConfig};
+use bwade::fewshot::{sample_episode, NcmClassifier};
+use bwade::fixedpoint::{headline_config, FxpFormat};
+use bwade::resources::Device;
+use bwade::rng::Rng;
+use bwade::systolic::{simulate, MatmulLayer, SystolicConfig};
+use bwade::tensor::Tensor;
+
+fn main() {
+    println!("== hotpath micro-benchmarks (L3 §Perf) ==\n");
+
+    // ---- dataflow simulator ------------------------------------------
+    let mut graph = synth_backbone_graph([8, 16, 32, 64], 32, 4, 2);
+    requantize_graph(&mut graph, &headline_config()).unwrap();
+    bwade::transforms::run_default_pipeline(&mut graph, None, 0.0).unwrap();
+    let models =
+        bwade::build::folding_search(&mut graph, &DesignConfig::default(), &Device::pynq_z1())
+            .unwrap();
+    let frame_in: u64 = graph
+        .shape_of(&graph.inputs[0])
+        .unwrap()
+        .iter()
+        .product::<usize>() as u64;
+    let mut sim_cycles_total = 0u64;
+    let r = bench("dataflow sim: 1 frame through backbone", 1, 5, || {
+        let mut sim = bwade::dataflow::DataflowSim::new(
+            &models,
+            &graph.inputs,
+            &graph.outputs,
+            u64::MAX / 4,
+        )
+        .unwrap();
+        let res = sim.run(1, frame_in).unwrap();
+        sim_cycles_total = res.total_cycles;
+    });
+    let cps = sim_cycles_total as f64 / r.mean().as_secs_f64();
+    println!("  -> {sim_cycles_total} cycles simulated, {:.2} Mcycles/s", cps / 1e6);
+
+    // ---- graph reference executor ------------------------------------
+    let exec_graph = {
+        let mut g = synth_backbone_graph([8, 16, 32, 64], 32, 4, 2);
+        requantize_graph(&mut g, &headline_config()).unwrap();
+        g
+    };
+    let mut rng = Rng::new(1);
+    let mut feeds = std::collections::HashMap::new();
+    let in_shape = exec_graph.shape_of(&exec_graph.inputs[0]).unwrap().to_vec();
+    feeds.insert(
+        exec_graph.inputs[0].clone(),
+        Tensor::from_fn(in_shape, |_| rng.next_f32()),
+    );
+    bench("graph executor: NCHW backbone, 1 image", 1, 3, || {
+        bwade::ops::execute(&exec_graph, &feeds).unwrap();
+    });
+
+    // ---- fixed-point quantization -------------------------------------
+    let fmt = FxpFormat::signed(6, 5).unwrap();
+    let mut weights: Vec<f32> = (0..1_000_000).map(|_| rng.normal()).collect();
+    let r = bench("fixedpoint: PTQ 1M weights (s6.5)", 2, 10, || {
+        let mut w = weights.clone();
+        fmt.quantize_slice(&mut w);
+        std::hint::black_box(&w);
+    });
+    println!("  -> {:.1} Melem/s", throughput(&r, 1e6) / 1e6);
+    weights.truncate(0);
+
+    // ---- NCM ----------------------------------------------------------
+    let dim = 64;
+    let n_sup = 25;
+    let sup: Vec<f32> = (0..n_sup * dim).map(|_| rng.normal()).collect();
+    let labels: Vec<usize> = (0..n_sup).map(|i| i / 5).collect();
+    let ncm = NcmClassifier::fit(&sup, dim, &labels, 5).unwrap();
+    let query: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+    let r = bench("NCM: fit 25 supports (5-way 5-shot)", 10, 200, || {
+        std::hint::black_box(NcmClassifier::fit(&sup, dim, &labels, 5).unwrap());
+    });
+    let _ = r;
+    let r = bench("NCM: predict 1 query (dim 64)", 100, 1000, || {
+        std::hint::black_box(ncm.predict(&query));
+    });
+    println!("  -> {:.2} Mpredictions/s", throughput(&r, 1.0) / 1e6);
+
+    // ---- episode sampling ----------------------------------------------
+    let mut erng = Rng::new(5);
+    bench("episode sampling (20 classes, 5w5s15q)", 100, 1000, || {
+        std::hint::black_box(sample_episode(&mut erng, 20, 40, 5, 5, 15).unwrap());
+    });
+
+    // ---- systolic simulator --------------------------------------------
+    let layers: Vec<MatmulLayer> = (0..8)
+        .map(|i| MatmulLayer {
+            name: format!("l{i}"),
+            m: 1024 >> (i / 3),
+            k: 144,
+            n: 64,
+        })
+        .collect();
+    let cfg = SystolicConfig::tensil_pynq_z1();
+    bench("systolic sim: 8-layer network", 10, 100, || {
+        std::hint::black_box(simulate(&cfg, &headline_config(), &layers));
+    });
+
+    println!("\nhotpath_micro done");
+}

@@ -1,0 +1,90 @@
+//! E2 — Table II reproduction: CIFAR-10-style 5-way 5-shot accuracy over
+//! the paper's eight fixed-point configurations, through the full
+//! python-free request path (PJRT backbone + rust PTQ + NCM).
+//!
+//!     cargo bench --bench table2_accuracy
+//!     BWADE_BENCH_EPISODES=600 cargo bench --bench table2_accuracy
+//!
+//! Also times the per-config feature-extraction throughput (the serving
+//! hot path) so accuracy and speed land in one report.
+
+use std::time::Instant;
+
+use bwade::artifacts::{ArtifactPaths, FewshotBank};
+use bwade::benchutil::env_usize;
+use bwade::fewshot::{evaluate, sample_episode};
+use bwade::fixedpoint::table2_configs;
+use bwade::rng::Rng;
+use bwade::runtime::{BackboneRunner, Runtime};
+
+const PAPER_ACC: [f64; 8] = [44.89, 59.70, 44.72, 60.92, 62.58, 62.69, 62.47, 62.78];
+
+fn main() {
+    let paths = ArtifactPaths::default_dir();
+    if !paths.exists() {
+        println!("table2_accuracy: artifacts missing — run `make artifacts` first (skipped)");
+        return;
+    }
+    let episodes = env_usize("BWADE_BENCH_EPISODES", 300);
+    let bundle = paths.model_bundle().expect("model bundle");
+    let bank = FewshotBank::load(&paths.fewshot_bank()).expect("bank");
+    let runtime = Runtime::new().expect("pjrt");
+    let batch = *bundle.batch_sizes.iter().max().unwrap();
+    let hlo = paths.backbone_hlo(batch);
+
+    let mut rng = Rng::new(0xEE);
+    let eps: Vec<_> = (0..episodes)
+        .map(|_| sample_episode(&mut rng, bank.num_classes, bank.per_class, 5, 5, 15).unwrap())
+        .collect();
+
+    println!(
+        "== E2 / Table II: 5-way 5-shot accuracy vs bit-width ({episodes} episodes) ==\n"
+    );
+    println!(
+        "{:<16} {:>4} | {:>9} {:>7} | {:>10} | {:>11} {:>9}",
+        "config", "bits", "acc[%]", "ci95", "paper[%]", "extract[s]", "img/s"
+    );
+
+    let mut ours = Vec::new();
+    for ((name, cfg), paper) in table2_configs().into_iter().zip(PAPER_ACC) {
+        let runner = BackboneRunner::new(&runtime, &bundle, &hlo, batch, cfg).expect("runner");
+        let t0 = Instant::now();
+        let feats = runner
+            .extract_all(&bank.images, bank.num_images())
+            .expect("extract");
+        let dt = t0.elapsed();
+        let acc = evaluate(&feats, bundle.feature_dim, &eps).expect("evaluate");
+        ours.push(acc.mean * 100.0);
+        println!(
+            "{:<16} {:>4} | {:>8.2}% {:>6.2}% | {:>9.2}% | {:>11.2} {:>9.1}",
+            name,
+            cfg.max_bits(),
+            acc.mean * 100.0,
+            acc.ci95 * 100.0,
+            paper,
+            dt.as_secs_f64(),
+            bank.num_images() as f64 / dt.as_secs_f64()
+        );
+    }
+
+    // Shape checks (the reproduction targets; absolute % differs by
+    // dataset substitution — DESIGN.md §2).
+    let b16 = ours[7];
+    println!("\nshape checks vs paper:");
+    let checks = [
+        ("16-bit is the best (within CI)", ours.iter().all(|&a| a <= b16 + 1.5)),
+        ("6-bit 1/5 within ~4 points of 16-bit", b16 - ours[1] < 4.5),
+        ("5-bit collapses vs 16-bit", b16 - ours[0] > 4.0),
+        ("6-bit 3/3 collapses vs 6-bit 1/5", ours[1] - ours[2] > 3.0),
+        (">=10-bit saturates (spread < 2.5)", {
+            let tail = &ours[4..8];
+            let mx = tail.iter().cloned().fold(f64::MIN, f64::max);
+            let mn = tail.iter().cloned().fold(f64::MAX, f64::min);
+            mx - mn < 2.5
+        }),
+    ];
+    for (label, ok) in checks {
+        println!("  [{}] {}", if ok { "x" } else { " " }, label);
+    }
+    println!("\ntable2_accuracy done");
+}

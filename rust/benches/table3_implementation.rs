@@ -1,0 +1,140 @@
+//! E3 — Table III reproduction: resource utilization + latency of the
+//! FINN-style W6A4 build vs the Tensil-style 16-bit baseline on PYNQ-Z1,
+//! at both the deployed model scale and the paper's PEFSL scale.
+//!
+//!     cargo bench --bench table3_implementation
+//!
+//! Also times the design environment itself (per-config compile+fold+sim
+//! wall time) — the usability claim behind "design environment".
+
+use std::time::Instant;
+
+use bwade::artifacts::ArtifactPaths;
+use bwade::build::{build, synth_backbone_graph, DesignConfig};
+use bwade::fixedpoint::{baseline16_config, table2_configs};
+use bwade::graph::Graph;
+use bwade::resources::Device;
+use bwade::systolic::{simulate, MatmulLayer, SystolicConfig};
+
+fn paper_scale_layers() -> Vec<MatmulLayer> {
+    let widths = [16u64, 32, 64, 128];
+    let [c0, c1, c2, c3] = widths;
+    let mut out = Vec::new();
+    let mut h = 32u64;
+    for (name, cin, cout, pool) in [
+        ("stem", 3, c0, false),
+        ("conv1", c0, c1, true),
+        ("res1a", c1, c1, false),
+        ("res1b", c1, c1, false),
+        ("conv2", c1, c2, true),
+        ("conv3", c2, c3, true),
+        ("res2a", c3, c3, false),
+        ("res2b", c3, c3, false),
+    ] {
+        out.push(MatmulLayer { name: name.into(), m: h * h, k: 9 * cin, n: cout });
+        if pool {
+            h /= 2;
+        }
+    }
+    out
+}
+
+fn main() {
+    let device = Device::pynq_z1();
+    println!("== E3 / Table III: CIFAR-10 inference on PYNQ-Z1 (simulated) ==\n");
+    println!(
+        "{:<28} {:>5} {:>8} {:>8} {:>8} {:>5} {:>12}",
+        "work", "prec", "LUT", "BRAM36", "FF", "DSP", "latency[ms]"
+    );
+
+    // Paper row 1: Tensil/PEFSL @16b, paper-scale model.
+    let tensil = simulate(
+        &SystolicConfig::tensil_pynq_z1(),
+        &baseline16_config(),
+        &paper_scale_layers(),
+    );
+    println!(
+        "{:<28} {:>5} {:>8.0} {:>8.1} {:>8.0} {:>5.0} {:>12.2}",
+        "Tensil/PEFSL (sim)",
+        16,
+        tensil.resources.lut,
+        tensil.resources.bram36,
+        tensil.resources.ff,
+        tensil.resources.dsp,
+        device.cycles_to_ms(tensil.total_cycles)
+    );
+
+    // Paper row 2: FINN W6A4 at the 61.5-fps operating point.
+    let mut graph = synth_backbone_graph([16, 32, 64, 128], 32, 4, 2);
+    let finn = build(
+        &mut graph,
+        &DesignConfig {
+            target_fps: Some(61.5),
+            max_utilization: 0.70,
+            ..DesignConfig::default()
+        },
+        &device,
+    )
+    .expect("build");
+    println!(
+        "{:<28} {:>5} {:>8.0} {:>8.1} {:>8.0} {:>5.0} {:>12.2}",
+        "FINN/ours (sim)",
+        6,
+        finn.total_resources.lut,
+        finn.total_resources.bram36,
+        finn.total_resources.ff,
+        finn.total_resources.dsp,
+        finn.latency_ms
+    );
+    println!("{:<28} {:>5} {:>8} {:>8} {:>8} {:>5} {:>12}", "paper PEFSL", 16, 15667, 59.0, 9819, 159, 35.9);
+    println!("{:<28} {:>5} {:>8} {:>8} {:>8} {:>5} {:>12}", "paper ours", 6, 37263, 131.5, 44617, 22, 16.3);
+
+    println!("\nshape checks vs paper:");
+    let speedup = tensil.total_cycles as f64 / finn.latency_cycles.max(1) as f64;
+    let checks = [
+        ("dataflow latency < systolic latency", finn.latency_cycles < tensil.total_cycles),
+        ("speedup within [1.3x, 4x] of paper's 2.2x", (1.3..4.0).contains(&speedup)),
+        ("DSP: dataflow << systolic", finn.total_resources.dsp * 4.0 < tensil.resources.dsp),
+        ("BRAM: dataflow > systolic (weights on-chip)", finn.total_resources.bram36 > tensil.resources.bram36),
+        ("real-time: dataflow >= 30 fps", finn.fps >= 30.0),
+    ];
+    for (label, ok) in checks {
+        println!("  [{}] {}", if ok { "x" } else { " " }, label);
+    }
+    println!("  measured speedup: {speedup:.2}x (paper 2.20x)");
+
+    // Design-environment wall time per Table-II config (the flexibility
+    // claim: every bit-width is one `build()` away).
+    println!("\ndesign-environment wall time per config (deployed graph):");
+    let paths = ArtifactPaths::default_dir();
+    if paths.exists() {
+        for (name, quant) in table2_configs() {
+            let mut g = Graph::load(&paths.graph_json(), &paths.graph_weights()).unwrap();
+            let t0 = Instant::now();
+            let r = build(
+                &mut g,
+                &DesignConfig {
+                    quant,
+                    target_fps: Some(60.0),
+                    max_utilization: 0.85,
+                    verify: false,
+                },
+                &device,
+            )
+            .expect("build");
+            let fits = r.total_resources.fits(&device.budget);
+            println!(
+                "  {:<16} {:>8.2?}  -> LUT {:>9.0} BRAM {:>6.1} lat {:>6.2} ms  {}",
+                name,
+                t0.elapsed(),
+                r.total_resources.lut,
+                r.total_resources.bram36,
+                r.latency_ms,
+                if fits { "fits" } else { "DOES NOT FIT (explicit thresholds explode beyond ~8-bit activations — why the paper builds FINN at 6-bit and leaves 16-bit to Tensil)" }
+            );
+        }
+    } else {
+        println!("  (artifacts missing — run `make artifacts` for the deployed-graph sweep)");
+    }
+    println!("\ntable3_implementation done");
+}

@@ -1,0 +1,96 @@
+//! Tiny benchmark harness (no `criterion` in the offline crate set —
+//! DESIGN.md §2): warmup + N samples, mean/p50/p95 reporting.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's samples.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len().max(1) as u32
+    }
+
+    pub fn percentile(&self, p: f64) -> Duration {
+        let mut v = self.samples.clone();
+        v.sort();
+        let idx = ((v.len() as f64 - 1.0) * p / 100.0).round() as usize;
+        v[idx]
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} mean {:>10.3?}  p50 {:>10.3?}  p95 {:>10.3?}  n={}",
+            self.name,
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.samples.len()
+        )
+    }
+}
+
+/// Run `f` with warmup, collect `iters` timed samples, print the line.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        samples,
+    };
+    println!("{}", r.line());
+    r
+}
+
+/// Throughput helper: items/second from a result.
+pub fn throughput(result: &BenchResult, items_per_iter: f64) -> f64 {
+    items_per_iter / result.mean().as_secs_f64()
+}
+
+/// Environment knob for bench sizes (`BWADE_BENCH_EPISODES` etc.).
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let r = bench("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.mean() < Duration::from_millis(10));
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: (1..=100).map(Duration::from_micros).collect(),
+        };
+        assert!(r.percentile(50.0) <= r.percentile(95.0));
+    }
+
+    #[test]
+    fn env_default() {
+        assert_eq!(env_usize("BWADE_NOT_SET_XYZ", 42), 42);
+    }
+}

@@ -1,0 +1,164 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline crate set,
+//! DESIGN.md §2).  Subcommand + `--key value` / `--flag` options.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: subcommand + options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        match it.next() {
+            Some(cmd) if !cmd.starts_with("--") => args.command = cmd.clone(),
+            Some(cmd) => bail!("expected subcommand before {cmd}"),
+            None => args.command = "help".to_string(),
+        }
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument {a:?}");
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    args.options.insert(key.to_string(), it.next().unwrap().clone());
+                }
+                _ => args.flags.push(key.to_string()),
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+/// Resolve a Table-II config by name (or w<int>.<frac>a<int>.<frac> spec).
+pub fn parse_config(spec: &str) -> Result<crate::fixedpoint::QuantConfig> {
+    for (name, cfg) in crate::fixedpoint::table2_configs() {
+        if name == spec {
+            return Ok(cfg);
+        }
+    }
+    // wI.F_aI.F, e.g. "w1.5_a2.2"
+    if let Some(rest) = spec.strip_prefix('w') {
+        let parts: Vec<&str> = rest.split("_a").collect();
+        if parts.len() == 2 {
+            let w: Vec<&str> = parts[0].split('.').collect();
+            let a: Vec<&str> = parts[1].split('.').collect();
+            if w.len() == 2 && a.len() == 2 {
+                return crate::fixedpoint::QuantConfig::from_split(
+                    w[0].parse()?,
+                    w[1].parse()?,
+                    a[0].parse()?,
+                    a[1].parse()?,
+                );
+            }
+        }
+    }
+    bail!(
+        "unknown config {spec:?}; use a Table-II name (e.g. b6_c1.5_r2.2) or wI.F_aI.F (e.g. w1.5_a2.2)"
+    )
+}
+
+pub const USAGE: &str = "\
+bwade — Bit-Width-Aware Design Environment (ISCAS reproduction)
+
+USAGE: bwade <command> [options]
+
+COMMANDS
+  build      run the design environment on artifacts/graph.json
+             --config <name|wI.F_aI.F>   bit-width config (default b6_c1.5_r2.2)
+             --target-fps <f>            folding target (default 60)
+             --max-util <f>              device utilization cap (default 0.85)
+             --verify                    numerically verify each transform stage
+  compare    FINN dataflow vs Tensil systolic (Table III / Table I)
+  table2     accuracy sweep over the eight Table-II configs (needs PJRT)
+             --episodes <n>              episodes per config (default 200)
+  serve      run the Fig.-5 serving pipeline on synthetic frames
+             --frames <n>  --batch <n>  --rate <fps>  --config <...>
+  episodes   few-shot evaluation for one config
+             --config <...>  --episodes <n>  --shot <k>  --way <n>
+  info       print artifact + model metadata
+  help       this text
+
+Artifacts are read from ./artifacts (override with BWADE_ARTIFACTS).";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(&sv(&["build", "--config", "b6_c1.5_r2.2", "--verify"])).unwrap();
+        assert_eq!(a.command, "build");
+        assert_eq!(a.get("config"), Some("b6_c1.5_r2.2"));
+        assert!(a.has_flag("verify"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(&sv(&["serve", "--frames", "100", "--rate", "30.5"])).unwrap();
+        assert_eq!(a.get_usize("frames", 0).unwrap(), 100);
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 30.5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(a.get_usize("rate", 0).is_err());
+    }
+
+    #[test]
+    fn rejects_positional_garbage() {
+        assert!(Args::parse(&sv(&["build", "junk"])).is_err());
+    }
+
+    #[test]
+    fn empty_means_help() {
+        assert_eq!(Args::parse(&[]).unwrap().command, "help");
+    }
+
+    #[test]
+    fn config_by_name_and_spec() {
+        let byname = parse_config("b6_c1.5_r2.2").unwrap();
+        assert_eq!(byname.weight.describe(), "s6.5");
+        let byspec = parse_config("w1.5_a2.2").unwrap();
+        assert_eq!(byspec, byname);
+        assert!(parse_config("nonsense").is_err());
+    }
+}

@@ -1,0 +1,281 @@
+//! Serving coordinator — the deployment runtime of the paper's Fig. 5.
+//!
+//! A camera-like frame source feeds a bounded queue; the batcher groups
+//! frames (up to the executable's batch size, with a max-wait deadline);
+//! the backbone worker extracts features via PJRT; the NCM classifier
+//! (CPU side, [`crate::fewshot`]) produces the class decision; metrics
+//! record per-frame latency and end-to-end throughput — the numbers the
+//! paper reports as 16.3 ms / 61.5 fps.
+//!
+//! Threading: the frame source runs on its own std thread (no tokio in
+//! the offline crate set — DESIGN.md §2); the PJRT executable stays on
+//! the coordinator thread.  Frames are plain `Vec<f32>` so nothing
+//! non-Send crosses threads.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::fewshot::NcmClassifier;
+use crate::rng::Rng;
+use crate::runtime::BackboneRunner;
+
+/// One frame entering the pipeline.
+pub struct Frame {
+    pub id: u64,
+    pub pixels: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+/// Classified result leaving the pipeline.
+#[derive(Debug, Clone)]
+pub struct Classified {
+    pub id: u64,
+    pub class: usize,
+    pub latency: Duration,
+}
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Max frames per backbone invocation (<= executable batch).
+    pub max_batch: usize,
+    /// Max time the first frame of a batch may wait.
+    pub max_wait: Duration,
+}
+
+/// Latency/throughput metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub latencies_us: Vec<u64>,
+    pub frames: usize,
+    pub batches: usize,
+    pub wall: Duration,
+}
+
+impl Metrics {
+    pub fn fps(&self) -> f64 {
+        if self.wall.as_secs_f64() == 0.0 {
+            return 0.0;
+        }
+        self.frames as f64 / self.wall.as_secs_f64()
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        if self.latencies_us.is_empty() {
+            return 0.0;
+        }
+        self.latencies_us.iter().sum::<u64>() as f64 / self.latencies_us.len() as f64 / 1e3
+    }
+
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.latencies_us.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let idx = ((v.len() as f64 - 1.0) * p / 100.0).round() as usize;
+        v[idx] as f64 / 1e3
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.frames as f64 / self.batches as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "frames {:>5}  fps {:>7.1}  latency mean {:>7.2} ms  p50 {:>7.2}  p95 {:>7.2}  p99 {:>7.2}  mean batch {:.2}",
+            self.frames,
+            self.fps(),
+            self.mean_latency_ms(),
+            self.percentile_ms(50.0),
+            self.percentile_ms(95.0),
+            self.percentile_ms(99.0),
+            self.mean_batch_size()
+        )
+    }
+}
+
+/// A frame source: emits `count` frames, optionally rate-limited.
+pub struct FrameSource {
+    pub count: usize,
+    /// Frames per second; None = as fast as the queue accepts (offered
+    /// load regime — measures pipeline capacity, Fig. 5's fps).
+    pub rate_fps: Option<f64>,
+    pub img: usize,
+    pub seed: u64,
+}
+
+impl FrameSource {
+    /// Spawn the source thread; returns the frame receiver.
+    pub fn spawn(self, queue_depth: usize) -> mpsc::Receiver<Frame> {
+        let (tx, rx) = mpsc::sync_channel::<Frame>(queue_depth);
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(self.seed);
+            let per = self.img * self.img * 3;
+            let start = Instant::now();
+            for id in 0..self.count {
+                if let Some(rate) = self.rate_fps {
+                    let due = start + Duration::from_secs_f64(id as f64 / rate);
+                    let now = Instant::now();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                }
+                let pixels: Vec<f32> = (0..per).map(|_| rng.next_f32()).collect();
+                let frame = Frame {
+                    id: id as u64,
+                    pixels,
+                    enqueued: Instant::now(),
+                };
+                if tx.send(frame).is_err() {
+                    return;
+                }
+            }
+        });
+        rx
+    }
+}
+
+/// Serve frames through backbone + NCM until the source is exhausted.
+///
+/// Returns (metrics, classifications).
+pub fn serve(
+    runner: &BackboneRunner,
+    ncm: &NcmClassifier,
+    rx: mpsc::Receiver<Frame>,
+    policy: BatchPolicy,
+) -> Result<(Metrics, Vec<Classified>)> {
+    let mut metrics = Metrics::default();
+    let mut results = Vec::new();
+    let per = runner.img * runner.img * 3;
+    let mut batch_buf = vec![0.0f32; runner.input_elems()];
+    let mut pending: VecDeque<Frame> = VecDeque::new();
+    let start = Instant::now();
+    let max_batch = policy.max_batch.min(runner.batch).max(1);
+
+    'outer: loop {
+        // Block for the first frame of the batch.
+        if pending.is_empty() {
+            match rx.recv() {
+                Ok(f) => pending.push_back(f),
+                Err(_) => break 'outer,
+            }
+        }
+        // Greedily drain whatever is already queued (frames that arrived
+        // while the previous batch was executing batch up immediately).
+        while pending.len() < max_batch {
+            match rx.try_recv() {
+                Ok(f) => pending.push_back(f),
+                Err(_) => break,
+            }
+        }
+        // Still short: wait up to max_wait from NOW for stragglers.
+        let deadline = Instant::now() + policy.max_wait;
+        while pending.len() < max_batch {
+            let timeout = deadline.saturating_duration_since(Instant::now());
+            if timeout.is_zero() {
+                break;
+            }
+            match rx.recv_timeout(timeout) {
+                Ok(f) => pending.push_back(f),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // Execute one batch.
+        let take = pending.len().min(max_batch);
+        let batch: Vec<Frame> = pending.drain(..take).collect();
+        for (i, f) in batch.iter().enumerate() {
+            batch_buf[i * per..(i + 1) * per].copy_from_slice(&f.pixels);
+        }
+        batch_buf[take * per..].fill(0.0);
+        let feats = runner.extract(&batch_buf)?;
+        let done = Instant::now();
+        for (i, f) in batch.iter().enumerate() {
+            let class = ncm.predict(&feats[i * runner.feature_dim..(i + 1) * runner.feature_dim]);
+            let latency = done.duration_since(f.enqueued);
+            metrics.latencies_us.push(latency.as_micros() as u64);
+            results.push(Classified {
+                id: f.id,
+                class,
+                latency,
+            });
+        }
+        metrics.frames += take;
+        metrics.batches += 1;
+    }
+
+    metrics.wall = start.elapsed();
+    Ok((metrics, results))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_math() {
+        let m = Metrics {
+            latencies_us: vec![1000, 2000, 3000, 4000, 100_000],
+            frames: 5,
+            batches: 2,
+            wall: Duration::from_secs(1),
+        };
+        assert_eq!(m.fps(), 5.0);
+        assert!((m.mean_latency_ms() - 22.0).abs() < 1e-9);
+        assert_eq!(m.percentile_ms(50.0), 3.0);
+        assert_eq!(m.percentile_ms(99.0), 100.0);
+        assert_eq!(m.mean_batch_size(), 2.5);
+    }
+
+    #[test]
+    fn frame_source_emits_all_frames() {
+        let src = FrameSource {
+            count: 17,
+            rate_fps: None,
+            img: 4,
+            seed: 1,
+        };
+        let rx = src.spawn(4);
+        let frames: Vec<Frame> = rx.iter().collect();
+        assert_eq!(frames.len(), 17);
+        assert_eq!(frames[0].pixels.len(), 4 * 4 * 3);
+        assert!(frames.iter().enumerate().all(|(i, f)| f.id == i as u64));
+    }
+
+    #[test]
+    fn frame_source_rate_limited() {
+        let src = FrameSource {
+            count: 5,
+            rate_fps: Some(1000.0),
+            img: 2,
+            seed: 2,
+        };
+        let t0 = Instant::now();
+        let rx = src.spawn(8);
+        let n = rx.iter().count();
+        let dt = t0.elapsed();
+        assert_eq!(n, 5);
+        assert!(dt >= Duration::from_millis(3), "{dt:?}");
+    }
+
+    #[test]
+    fn frame_source_deterministic_content() {
+        let mk = || FrameSource {
+            count: 3,
+            rate_fps: None,
+            img: 4,
+            seed: 42,
+        };
+        let a: Vec<Vec<f32>> = mk().spawn(4).iter().map(|f| f.pixels).collect();
+        let b: Vec<Vec<f32>> = mk().spawn(4).iter().map(|f| f.pixels).collect();
+        assert_eq!(a, b);
+    }
+}

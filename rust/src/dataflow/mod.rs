@@ -1,0 +1,583 @@
+//! Cycle-level simulator of the FINN streaming dataflow architecture.
+//!
+//! Table I: "Streaming processing, layer-wise design ... connecting them
+//! through FIFO buffers to enable low-latency streaming processing."
+//! This simulator executes that architecture: every HW layer is an actor
+//! that consumes/produces stream elements at its folded rate; actors are
+//! connected by bounded FIFOs with back-pressure; forks (the residual
+//! skip) duplicate the stream.  It produces the numbers behind the
+//! paper's Table III latency row and Fig. 5's fps:
+//!
+//! * single-frame latency = cycle at which the sink finishes frame 0,
+//! * steady-state throughput = cycles between consecutive frame
+//!   completions (= max layer II when FIFOs are sized right),
+//! * per-FIFO peak occupancy — the FIFO-sizing pass (run once with
+//!   unbounded FIFOs, then set capacities to the observed peaks).
+//!
+//! Rates are modeled with Bresenham-style accumulators: an actor that
+//! consumes E elements over C cycles consumes `ceil(E*p/C)` elements by
+//! progress-cycle p — linear pacing, which is what the synthesized HLS
+//! dataflow does in the steady state.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::hw::HwNodeModel;
+
+/// One directed FIFO channel between a producer and ONE consumer.
+#[derive(Debug, Clone)]
+pub struct Channel {
+    pub name: String,
+    pub producer: Option<usize>,
+    pub consumer: Option<usize>,
+    pub capacity: u64,
+    pub occupancy: u64,
+    pub peak: u64,
+    pub total: u64,
+}
+
+/// Actor runtime state.
+#[derive(Debug, Clone)]
+struct Actor {
+    /// Progress through the current frame, in cycles.
+    progress: u64,
+    cycles: u64,
+    in_chans: Vec<usize>,
+    in_elems: Vec<u64>,
+    consumed: Vec<u64>,
+    out_chans: Vec<usize>,
+    out_elems: u64,
+    produced: u64,
+    frames_done: u64,
+    /// Bresenham pacing state (§Perf iteration 4: no division in the hot
+    /// loop).  take(p) = base + (err rolls over C), with ceil pacing for
+    /// inputs (err starts at C-1) and floor pacing for outputs (err
+    /// starts at 0); after C steps the err state returns to its initial
+    /// value, so frame wrap needs no reset.
+    in_base: Vec<u64>,
+    in_rem: Vec<u64>,
+    in_err: Vec<u64>,
+    out_base: u64,
+    out_rem: u64,
+    out_err: u64,
+    /// Cached stall condition: while `stall_ch`'s occupancy stays below
+    /// (`StallKind::Input`) / above (`StallKind::Output`) `stall_level`,
+    /// re-checking the full firing rule is pointless — this turns a
+    /// stalled actor into one load + compare per cycle (§Perf iteration 3).
+    stall: Option<(StallKind, usize, u64)>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum StallKind {
+    /// Waiting for `stall_level` tokens of input occupancy.
+    Input,
+    /// Waiting for occupancy to drop to `stall_level` or below.
+    Output,
+}
+
+/// Simulation result for one run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Cycle at which frame 0 exited the sink.
+    pub first_frame_latency: u64,
+    /// Steady-state cycles per frame (frame k -> k+1 completion gap).
+    pub steady_interval: u64,
+    /// Total cycles simulated.
+    pub total_cycles: u64,
+    /// Peak occupancy per channel name.
+    pub fifo_peaks: HashMap<String, u64>,
+    pub frames: u64,
+}
+
+/// The dataflow pipeline: actors + channels built from HW node models.
+pub struct DataflowSim {
+    actors: Vec<Actor>,
+    channels: Vec<Channel>,
+    names: Vec<String>,
+    /// Channel indices feeding from the outside world (graph input).
+    source_chans: Vec<usize>,
+    /// Channel indices draining to the outside world (graph output).
+    sink_chans: Vec<usize>,
+}
+
+impl DataflowSim {
+    /// Build from node models.  `graph_inputs`/`graph_outputs` are the
+    /// boundary tensor names; `default_capacity` sizes all FIFOs (use
+    /// `u64::MAX/4` for the unbounded sizing run).
+    pub fn new(
+        models: &[HwNodeModel],
+        graph_inputs: &[String],
+        graph_outputs: &[String],
+        default_capacity: u64,
+    ) -> Result<Self> {
+        let mut channels: Vec<Channel> = Vec::new();
+        let mut actors: Vec<Actor> = Vec::new();
+        let mut source_chans = Vec::new();
+        let mut sink_chans = Vec::new();
+
+        // Producer lookup: tensor -> (actor idx, elems per frame).
+        let mut producer_of: HashMap<&str, usize> = HashMap::new();
+        for (i, m) in models.iter().enumerate() {
+            producer_of.insert(m.output.as_str(), i);
+        }
+
+        for m in models.iter() {
+            let c = m.cycles.max(1);
+            actors.push(Actor {
+                progress: 0,
+                cycles: m.cycles,
+                in_chans: Vec::new(),
+                in_elems: m.in_elems.clone(),
+                consumed: vec![0; m.in_elems.len()],
+                out_chans: Vec::new(),
+                out_elems: m.out_elems,
+                produced: 0,
+                frames_done: 0,
+                stall: None,
+                in_base: m.in_elems.iter().map(|e| e / c).collect(),
+                in_rem: m.in_elems.iter().map(|e| e % c).collect(),
+                in_err: vec![c - 1; m.in_elems.len()], // ceil pacing
+                out_base: m.out_elems / c,
+                out_rem: m.out_elems % c,
+                out_err: 0, // floor pacing
+            });
+        }
+
+        // One channel per (producer-tensor, consumer) pair: forks become
+        // parallel channels filled simultaneously by the producer.
+        for (ci, m) in models.iter().enumerate() {
+            for (slot, t) in m.stream_inputs.iter().enumerate() {
+                let chan_idx = channels.len();
+                channels.push(Channel {
+                    name: format!("{t}->{}", m.name),
+                    producer: producer_of.get(t.as_str()).copied(),
+                    consumer: Some(ci),
+                    capacity: default_capacity,
+                    occupancy: 0,
+                    peak: 0,
+                    total: 0,
+                });
+                actors[ci].in_chans.push(chan_idx);
+                match producer_of.get(t.as_str()) {
+                    Some(&pi) => actors[pi].out_chans.push(chan_idx),
+                    None => {
+                        if !graph_inputs.contains(t) {
+                            bail!("stream input {t} has no producer and is not a graph input");
+                        }
+                        source_chans.push(chan_idx);
+                    }
+                }
+                let _ = slot;
+            }
+        }
+        // Sink channels for graph outputs.
+        for out in graph_outputs {
+            let Some(&pi) = producer_of.get(out.as_str()) else {
+                bail!("graph output {out} has no producing actor");
+            };
+            let chan_idx = channels.len();
+            channels.push(Channel {
+                name: format!("{out}->sink"),
+                producer: Some(pi),
+                consumer: None,
+                capacity: u64::MAX / 4,
+                occupancy: 0,
+                peak: 0,
+                total: 0,
+            });
+            actors[pi].out_chans.push(chan_idx);
+            sink_chans.push(chan_idx);
+        }
+
+        Ok(Self {
+            actors,
+            channels,
+            names: models.iter().map(|m| m.name.clone()).collect(),
+            source_chans,
+            sink_chans,
+        })
+    }
+
+    /// Override one channel's capacity (by suffix match on the name).
+    pub fn set_capacity(&mut self, name_contains: &str, capacity: u64) {
+        for c in &mut self.channels {
+            if c.name.contains(name_contains) {
+                c.capacity = capacity;
+            }
+        }
+    }
+
+    /// Run for `frames` frames; the source injects each frame's input as
+    /// fast as the first FIFO accepts it (DMA at full rate).
+    pub fn run(&mut self, frames: u64, frame_in_elems: u64) -> Result<SimResult> {
+        let mut cycle: u64 = 0;
+        let mut injected_frames = 0u64;
+        let mut injected_in_frame = 0u64;
+        let mut completions: Vec<u64> = Vec::new();
+        let sink_total: u64 = self
+            .sink_chans
+            .iter()
+            .map(|&c| {
+                self.channels[c]
+                    .producer
+                    .map(|p| self.actors[p].out_elems)
+                    .unwrap_or(0)
+            })
+            .sum();
+        let mut drained: u64 = 0;
+        let max_cycles: u64 = 500_000_000;
+
+        // A FIFO narrower than one production beat can never accept it.
+        for a in &self.actors {
+            let beat = a.out_elems.div_ceil(a.cycles.max(1));
+            for &ch in &a.out_chans {
+                if self.channels[ch].capacity < beat {
+                    bail!(
+                        "channel {} capacity {} smaller than one beat ({beat})",
+                        self.channels[ch].name,
+                        self.channels[ch].capacity
+                    );
+                }
+            }
+        }
+        for &c in &self.source_chans {
+            if self.channels[c].capacity < 1 {
+                bail!("source channel {} has zero capacity", self.channels[c].name);
+            }
+        }
+
+        while (completions.len() as u64) < frames {
+            // 1. Source injection (per-cycle up to a DMA beat of 8 elems,
+            //    clipped to the free space of every source FIFO).
+            if injected_frames < frames {
+                let mut beat = 8.min(frame_in_elems - injected_in_frame);
+                for &c in &self.source_chans {
+                    let free = self.channels[c].capacity - self.channels[c].occupancy;
+                    beat = beat.min(free);
+                }
+                if beat > 0 {
+                    for &c in &self.source_chans {
+                        let ch = &mut self.channels[c];
+                        ch.occupancy += beat;
+                        ch.total += beat;
+                        ch.peak = ch.peak.max(ch.occupancy);
+                    }
+                    injected_in_frame += beat;
+                    if injected_in_frame == frame_in_elems {
+                        injected_frames += 1;
+                        injected_in_frame = 0;
+                    }
+                }
+            }
+
+            // 2. Actors advance (topological order = construction order).
+            //    Hot loop: no heap allocation — per-actor fan-in/out is
+            //    bounded by MAX_PORTS (residual join = 2 inputs; fork =
+            //    2 outputs), and element*cycle products fit u64
+            //    (elems < 2^20, cycles < 2^32 in any realistic build).
+            const MAX_PORTS: usize = 4;
+            for ai in 0..self.actors.len() {
+                let a = &self.actors[ai];
+                if a.cycles == 0 {
+                    continue;
+                }
+                // Fast path: cached stall condition still holds.
+                if let Some((kind, ch, level)) = a.stall {
+                    let occ = self.channels[ch].occupancy;
+                    match kind {
+                        StallKind::Input if occ < level => continue,
+                        StallKind::Output if occ > level => continue,
+                        _ => {}
+                    }
+                }
+                let p_next = a.progress + 1;
+                // Required consumption this cycle (ceil pacing, div-free:
+                // err accumulator rolls over at C).
+                let mut need = [0u64; MAX_PORTS];
+                let mut errs = [0u64; MAX_PORTS];
+                let mut blocked: Option<(StallKind, usize, u64)> = None;
+                for slot in 0..a.in_chans.len() {
+                    let mut err = a.in_err[slot] + a.in_rem[slot];
+                    let mut take = a.in_base[slot];
+                    if err >= a.cycles {
+                        err -= a.cycles;
+                        take += 1;
+                    }
+                    if self.channels[a.in_chans[slot]].occupancy < take {
+                        blocked = Some((StallKind::Input, a.in_chans[slot], take));
+                        break;
+                    }
+                    need[slot] = take;
+                    errs[slot] = err;
+                }
+                if let Some(b) = blocked {
+                    self.actors[ai].stall = Some(b);
+                    continue;
+                }
+                // Production this cycle: floor pacing (consume early,
+                // produce late — the last output token leaves on the
+                // frame's final cycle, a conservative streaming model).
+                let mut out_err = a.out_err + a.out_rem;
+                let mut put = a.out_base;
+                if out_err >= a.cycles {
+                    out_err -= a.cycles;
+                    put += 1;
+                }
+                for &ch in &a.out_chans {
+                    let c = &self.channels[ch];
+                    if c.occupancy + put > c.capacity {
+                        blocked = Some((StallKind::Output, ch, c.capacity - put));
+                        break;
+                    }
+                }
+                if let Some(b) = blocked {
+                    self.actors[ai].stall = Some(b);
+                    continue;
+                }
+                // Commit: copy the (short) port lists to the stack so the
+                // actor and channel borrows don't conflict.
+                let n_in = a.in_chans.len().min(MAX_PORTS);
+                let n_out = a.out_chans.len().min(MAX_PORTS);
+                let mut in_ports = [0usize; MAX_PORTS];
+                let mut out_ports = [0usize; MAX_PORTS];
+                in_ports[..n_in].copy_from_slice(&a.in_chans[..n_in]);
+                out_ports[..n_out].copy_from_slice(&a.out_chans[..n_out]);
+
+                let a = &mut self.actors[ai];
+                a.stall = None;
+                for slot in 0..n_in {
+                    a.consumed[slot] += need[slot];
+                    a.in_err[slot] = errs[slot];
+                }
+                a.out_err = out_err;
+                a.produced += put;
+                a.progress = p_next;
+                if a.progress == a.cycles {
+                    // Pacing err state returns to its initial value after
+                    // exactly C steps; only the frame counters reset.
+                    a.progress = 0;
+                    a.consumed.iter_mut().for_each(|c| *c = 0);
+                    a.produced = 0;
+                    a.frames_done += 1;
+                }
+                for slot in 0..n_in {
+                    self.channels[in_ports[slot]].occupancy -= need[slot];
+                }
+                if put > 0 {
+                    for &ch in &out_ports[..n_out] {
+                        let c = &mut self.channels[ch];
+                        c.occupancy += put;
+                        c.total += put;
+                        c.peak = c.peak.max(c.occupancy);
+                    }
+                }
+            }
+
+            // 3. Sink drain.
+            for &c in &self.sink_chans {
+                drained += self.channels[c].occupancy;
+                self.channels[c].occupancy = 0;
+            }
+            while drained >= sink_total && sink_total > 0 {
+                drained -= sink_total;
+                // +1: the frame is complete at the END of this cycle.
+                completions.push(cycle + 1);
+            }
+
+            cycle += 1;
+            if cycle > max_cycles {
+                bail!("dataflow simulation exceeded {max_cycles} cycles (deadlock?)");
+            }
+        }
+
+        let first = completions.first().copied().unwrap_or(0);
+        let steady = if completions.len() >= 2 {
+            completions[completions.len() - 1] - completions[completions.len() - 2]
+        } else {
+            first
+        };
+        let mut fifo_peaks = HashMap::new();
+        for c in &self.channels {
+            fifo_peaks.insert(c.name.clone(), c.peak);
+        }
+        Ok(SimResult {
+            first_frame_latency: first,
+            steady_interval: steady,
+            total_cycles: cycle,
+            fifo_peaks,
+            frames: completions.len() as u64,
+        })
+    }
+
+    pub fn actor_names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn channels(&self) -> &[Channel] {
+        &self.channels
+    }
+}
+
+/// FIFO sizing: run once with unbounded FIFOs and return per-channel
+/// depths (peak occupancy, rounded up to a power of two as HLS FIFOs are).
+pub fn size_fifos(
+    models: &[HwNodeModel],
+    graph_inputs: &[String],
+    graph_outputs: &[String],
+    frame_in_elems: u64,
+) -> Result<HashMap<String, u64>> {
+    let mut sim = DataflowSim::new(models, graph_inputs, graph_outputs, u64::MAX / 4)?;
+    let res = sim.run(2, frame_in_elems)?;
+    Ok(res
+        .fifo_peaks
+        .into_iter()
+        .map(|(k, v)| (k, v.max(2).next_power_of_two()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::Resources;
+
+    fn model(
+        name: &str,
+        input: &str,
+        output: &str,
+        in_elems: u64,
+        out_elems: u64,
+        cycles: u64,
+    ) -> HwNodeModel {
+        HwNodeModel {
+            name: name.into(),
+            op: "Test".into(),
+            stream_inputs: vec![input.into()],
+            in_elems: vec![in_elems],
+            output: output.into(),
+            out_elems,
+            cycles,
+            resources: Resources::ZERO,
+            weight_bits: 0,
+        }
+    }
+
+    #[test]
+    fn single_actor_latency() {
+        let models = vec![model("a", "in", "out", 64, 64, 100)];
+        let mut sim =
+            DataflowSim::new(&models, &["in".into()], &["out".into()], 1 << 20).unwrap();
+        let r = sim.run(1, 64).unwrap();
+        // 64 elems injected at 8/cycle = 8 cycles; actor needs 100 cycles.
+        assert!(r.first_frame_latency >= 100);
+        assert!(r.first_frame_latency < 120);
+    }
+
+    #[test]
+    fn pipeline_throughput_bounded_by_slowest() {
+        let models = vec![
+            model("fast1", "in", "t1", 64, 64, 50),
+            model("slow", "t1", "t2", 64, 64, 400),
+            model("fast2", "t2", "out", 64, 64, 50),
+        ];
+        let mut sim =
+            DataflowSim::new(&models, &["in".into()], &["out".into()], 1 << 20).unwrap();
+        let r = sim.run(4, 64).unwrap();
+        assert!(
+            (r.steady_interval as i64 - 400).unsigned_abs() <= 20,
+            "steady {}",
+            r.steady_interval
+        );
+        // Latency ~ sum of fills, < sum of all cycles + injection.
+        assert!(r.first_frame_latency >= 400);
+        assert!(r.first_frame_latency <= 520);
+    }
+
+    #[test]
+    fn backpressure_limits_occupancy() {
+        let models = vec![
+            model("fast", "in", "t1", 64, 64, 8),
+            model("slow", "t1", "out", 64, 64, 6400),
+        ];
+        let mut sim =
+            DataflowSim::new(&models, &["in".into()], &["out".into()], 16).unwrap();
+        let r = sim.run(1, 64).unwrap();
+        // The fast producer is throttled by the bounded FIFO: it can
+        // never pile up more than the capacity.
+        assert!(r.fifo_peaks["t1->slow"] <= 16);
+    }
+
+    #[test]
+    fn too_small_fifo_is_reported_not_deadlocked() {
+        let models = vec![
+            model("fast", "in", "t1", 64, 64, 8),
+            model("slow", "t1", "out", 64, 64, 6400),
+        ];
+        let mut sim =
+            DataflowSim::new(&models, &["in".into()], &["out".into()], 4).unwrap();
+        let err = sim.run(1, 64).unwrap_err().to_string();
+        assert!(err.contains("beat"), "{err}");
+    }
+
+    #[test]
+    fn fork_join_residual_pattern() {
+        // src -> (branchA, skip) ; join consumes both.
+        let models = vec![
+            model("src", "in", "t", 64, 64, 64),
+            model("branch", "t", "b", 64, 64, 640),
+            HwNodeModel {
+                name: "join".into(),
+                op: "AddStreams".into(),
+                stream_inputs: vec!["b".into(), "t".into()],
+                in_elems: vec![64, 64],
+                output: "out".into(),
+                out_elems: 64,
+                cycles: 64,
+                resources: Resources::ZERO,
+                weight_bits: 0,
+            },
+        ];
+        let mut sim =
+            DataflowSim::new(&models, &["in".into()], &["out".into()], 1 << 20).unwrap();
+        let r = sim.run(2, 64).unwrap();
+        assert!(r.frames >= 2);
+        // Skip channel must have buffered while the branch lagged.
+        assert!(r.fifo_peaks["t->join"] > 8, "{:?}", r.fifo_peaks);
+    }
+
+    #[test]
+    fn fifo_sizing_covers_latency_mismatch() {
+        let models = vec![
+            model("src", "in", "t", 64, 64, 64),
+            model("branch", "t", "b", 64, 64, 640),
+            HwNodeModel {
+                name: "join".into(),
+                op: "AddStreams".into(),
+                stream_inputs: vec!["b".into(), "t".into()],
+                in_elems: vec![64, 64],
+                output: "out".into(),
+                out_elems: 64,
+                cycles: 64,
+                resources: Resources::ZERO,
+                weight_bits: 0,
+            },
+        ];
+        let sizes = size_fifos(&models, &["in".into()], &["out".into()], 64).unwrap();
+        let skip = sizes["t->join"];
+        assert!(skip >= 32, "skip fifo {skip}");
+        assert!(skip.is_power_of_two());
+        // Re-run bounded at the sized depths: must not deadlock.
+        let mut sim = DataflowSim::new(&models, &["in".into()], &["out".into()], 2).unwrap();
+        for (name, cap) in &sizes {
+            sim.set_capacity(name, *cap);
+        }
+        let r = sim.run(3, 64).unwrap();
+        assert_eq!(r.frames, 3);
+    }
+
+    #[test]
+    fn unknown_input_errors() {
+        let models = vec![model("a", "ghost", "out", 8, 8, 8)];
+        assert!(DataflowSim::new(&models, &["in".into()], &["out".into()], 16).is_err());
+    }
+}

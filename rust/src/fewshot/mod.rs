@@ -1,0 +1,320 @@
+//! Few-shot learning over extracted features: episode sampling and the
+//! Nearest-Class-Mean classifier (Fig. 1 steps 2-3, Fig. 5's CPU side).
+//!
+//! The backbone (FPGA side / PJRT executable) turns images into feature
+//! vectors; the NCM classifier here builds class prototypes from the
+//! support set and classifies queries by nearest prototype.  Following
+//! the EASY recipe, features are L2-normalized before prototype
+//! computation — this is what PEFSL runs on the ARM core.
+
+use anyhow::{bail, Result};
+
+use crate::rng::Rng;
+
+/// An n-way k-shot episode over a class-major image bank.
+#[derive(Debug, Clone)]
+pub struct Episode {
+    /// Bank image indices of the support set.
+    pub support: Vec<usize>,
+    /// Episode-local labels (0..n_way) aligned with `support`.
+    pub support_labels: Vec<usize>,
+    pub query: Vec<usize>,
+    pub query_labels: Vec<usize>,
+    pub n_way: usize,
+}
+
+/// Sample one episode from a class-major bank (`per_class` images per
+/// class, image i has class i / per_class).
+pub fn sample_episode(
+    rng: &mut Rng,
+    num_classes: usize,
+    per_class: usize,
+    n_way: usize,
+    k_shot: usize,
+    n_query: usize,
+) -> Result<Episode> {
+    if n_way > num_classes {
+        bail!("n_way {n_way} > classes {num_classes}");
+    }
+    if k_shot + n_query > per_class {
+        bail!("k_shot + n_query {} > per_class {per_class}", k_shot + n_query);
+    }
+    let classes = rng.choose_k(num_classes, n_way);
+    let mut ep = Episode {
+        support: Vec::with_capacity(n_way * k_shot),
+        support_labels: Vec::with_capacity(n_way * k_shot),
+        query: Vec::with_capacity(n_way * n_query),
+        query_labels: Vec::with_capacity(n_way * n_query),
+        n_way,
+    };
+    for (label, &cls) in classes.iter().enumerate() {
+        let picks = rng.choose_k(per_class, k_shot + n_query);
+        for (j, &p) in picks.iter().enumerate() {
+            let idx = cls * per_class + p;
+            if j < k_shot {
+                ep.support.push(idx);
+                ep.support_labels.push(label);
+            } else {
+                ep.query.push(idx);
+                ep.query_labels.push(label);
+            }
+        }
+    }
+    Ok(ep)
+}
+
+/// L2-normalize a feature vector in place (EASY preprocessing).
+pub fn l2_normalize(v: &mut [f32]) {
+    let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if norm > 1e-12 {
+        for x in v {
+            *x /= norm;
+        }
+    }
+}
+
+/// Nearest-Class-Mean classifier.
+#[derive(Debug, Clone)]
+pub struct NcmClassifier {
+    pub prototypes: Vec<Vec<f32>>,
+    pub dim: usize,
+}
+
+impl NcmClassifier {
+    /// Fit from support features (`n_way` classes, episode-local labels).
+    /// Features are L2-normalized before averaging.
+    pub fn fit(
+        features: &[f32],
+        dim: usize,
+        labels: &[usize],
+        n_way: usize,
+    ) -> Result<Self> {
+        if features.len() != labels.len() * dim {
+            bail!("feature buffer size mismatch");
+        }
+        let mut protos = vec![vec![0.0f32; dim]; n_way];
+        let mut counts = vec![0usize; n_way];
+        for (i, &label) in labels.iter().enumerate() {
+            if label >= n_way {
+                bail!("label {label} out of range");
+            }
+            let mut f = features[i * dim..(i + 1) * dim].to_vec();
+            l2_normalize(&mut f);
+            for (p, x) in protos[label].iter_mut().zip(&f) {
+                *p += x;
+            }
+            counts[label] += 1;
+        }
+        for (proto, &count) in protos.iter_mut().zip(&counts) {
+            if count == 0 {
+                bail!("class with no support samples");
+            }
+            for p in proto.iter_mut() {
+                *p /= count as f32;
+            }
+        }
+        Ok(Self {
+            prototypes: protos,
+            dim,
+        })
+    }
+
+    /// Classify one feature vector (L2-normalized internally): nearest
+    /// prototype by Euclidean distance.
+    pub fn predict(&self, feature: &[f32]) -> usize {
+        let mut f = feature.to_vec();
+        l2_normalize(&mut f);
+        let mut best = 0;
+        let mut best_d = f32::MAX;
+        for (c, proto) in self.prototypes.iter().enumerate() {
+            let d: f32 = proto
+                .iter()
+                .zip(&f)
+                .map(|(p, x)| (p - x) * (p - x))
+                .sum();
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        best
+    }
+}
+
+/// Accuracy of one episode given per-image features of the whole bank.
+pub fn episode_accuracy(
+    bank_features: &[f32],
+    dim: usize,
+    ep: &Episode,
+) -> Result<f64> {
+    let gather = |idxs: &[usize]| -> Vec<f32> {
+        let mut out = Vec::with_capacity(idxs.len() * dim);
+        for &i in idxs {
+            out.extend_from_slice(&bank_features[i * dim..(i + 1) * dim]);
+        }
+        out
+    };
+    let support = gather(&ep.support);
+    let ncm = NcmClassifier::fit(&support, dim, &ep.support_labels, ep.n_way)?;
+    let mut correct = 0usize;
+    for (qi, &idx) in ep.query.iter().enumerate() {
+        let pred = ncm.predict(&bank_features[idx * dim..(idx + 1) * dim]);
+        if pred == ep.query_labels[qi] {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / ep.query.len() as f64)
+}
+
+/// Mean accuracy with 95% confidence interval over many episodes.
+#[derive(Debug, Clone, Copy)]
+pub struct AccuracyReport {
+    pub mean: f64,
+    pub ci95: f64,
+    pub episodes: usize,
+}
+
+pub fn evaluate(
+    bank_features: &[f32],
+    dim: usize,
+    episodes: &[Episode],
+) -> Result<AccuracyReport> {
+    if episodes.is_empty() {
+        bail!("no episodes");
+    }
+    let accs: Vec<f64> = episodes
+        .iter()
+        .map(|ep| episode_accuracy(bank_features, dim, ep))
+        .collect::<Result<_>>()?;
+    let n = accs.len() as f64;
+    let mean = accs.iter().sum::<f64>() / n;
+    let var = accs.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>() / (n - 1.0).max(1.0);
+    Ok(AccuracyReport {
+        mean,
+        ci95: 1.96 * (var / n).sqrt(),
+        episodes: accs.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn episode_sampling_valid() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let ep = sample_episode(&mut rng, 20, 40, 5, 5, 15).unwrap();
+            assert_eq!(ep.support.len(), 25);
+            assert_eq!(ep.query.len(), 75);
+            // No overlap between support and query.
+            for q in &ep.query {
+                assert!(!ep.support.contains(q));
+            }
+            // Labels consistent with bank layout.
+            for (i, &idx) in ep.support.iter().enumerate() {
+                let cls_in_bank = idx / 40;
+                let same_label: Vec<usize> = ep
+                    .support
+                    .iter()
+                    .enumerate()
+                    .filter(|(j, _)| ep.support_labels[*j] == ep.support_labels[i])
+                    .map(|(_, &x)| x / 40)
+                    .collect();
+                assert!(same_label.iter().all(|&c| c == cls_in_bank));
+            }
+        }
+    }
+
+    #[test]
+    fn episode_rejects_impossible_requests() {
+        let mut rng = Rng::new(2);
+        assert!(sample_episode(&mut rng, 4, 40, 5, 5, 15).is_err());
+        assert!(sample_episode(&mut rng, 20, 10, 5, 5, 15).is_err());
+    }
+
+    #[test]
+    fn ncm_separates_clean_clusters() {
+        // 3 well-separated prototypes in 8 dims.
+        let dim = 8;
+        let mut rng = Rng::new(3);
+        let mut features = Vec::new();
+        let mut labels = Vec::new();
+        for c in 0..3 {
+            for _ in 0..4 {
+                let mut f = vec![0.1f32; dim];
+                f[c] = 5.0 + rng.next_f32();
+                features.extend_from_slice(&f);
+                labels.push(c);
+            }
+        }
+        let ncm = NcmClassifier::fit(&features, dim, &labels, 3).unwrap();
+        let mut probe = vec![0.1f32; dim];
+        probe[2] = 4.0;
+        assert_eq!(ncm.predict(&probe), 2);
+        probe[2] = 0.1;
+        probe[0] = 9.0;
+        assert_eq!(ncm.predict(&probe), 0);
+    }
+
+    #[test]
+    fn l2_normalize_unit_norm() {
+        let mut v = vec![3.0, 4.0];
+        l2_normalize(&mut v);
+        let n = (v[0] * v[0] + v[1] * v[1]).sqrt();
+        assert!((n - 1.0).abs() < 1e-6);
+        let mut z = vec![0.0, 0.0];
+        l2_normalize(&mut z); // must not NaN
+        assert_eq!(z, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn evaluate_perfect_features_give_full_accuracy() {
+        // Bank: 4 classes x 10 images; features = one-hot of the class.
+        let dim = 4;
+        let per = 10;
+        let mut bank = Vec::new();
+        for c in 0..4 {
+            for _ in 0..per {
+                let mut f = vec![0.0f32; dim];
+                f[c] = 1.0;
+                bank.extend_from_slice(&f);
+            }
+        }
+        let mut rng = Rng::new(4);
+        let eps: Vec<Episode> = (0..20)
+            .map(|_| sample_episode(&mut rng, 4, per, 2, 2, 4).unwrap())
+            .collect();
+        let report = evaluate(&bank, dim, &eps).unwrap();
+        assert_eq!(report.mean, 1.0);
+        assert_eq!(report.episodes, 20);
+    }
+
+    #[test]
+    fn evaluate_random_features_near_chance() {
+        let dim = 16;
+        let per = 20;
+        let mut rng = Rng::new(5);
+        let mut bank = Vec::new();
+        for _ in 0..5 * per {
+            for _ in 0..dim {
+                bank.push(rng.normal());
+            }
+        }
+        let eps: Vec<Episode> = (0..100)
+            .map(|_| sample_episode(&mut rng, 5, per, 5, 5, 10).unwrap())
+            .collect();
+        let report = evaluate(&bank, dim, &eps).unwrap();
+        assert!((report.mean - 0.2).abs() < 0.08, "mean {}", report.mean);
+    }
+
+    #[test]
+    fn deterministic_episodes_for_same_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let e1 = sample_episode(&mut a, 10, 10, 3, 2, 3).unwrap();
+        let e2 = sample_episode(&mut b, 10, 10, 3, 2, 3).unwrap();
+        assert_eq!(e1.support, e2.support);
+        assert_eq!(e1.query, e2.query);
+    }
+}

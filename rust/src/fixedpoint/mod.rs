@@ -1,0 +1,359 @@
+//! Arbitrary-bit-width fixed-point arithmetic — the rust twin of
+//! `python/compile/fxp.py`.
+//!
+//! The paper's whole premise is that the fixed-point bit-width is a free
+//! design parameter (FINN) instead of 16/32 only (Tensil).  Everything in
+//! the design environment that touches numbers goes through [`FxpFormat`]:
+//! weight quantization (PTQ before PJRT execution), MultiThreshold
+//! executors, HW-layer datapath width calculations and BRAM sizing.
+//!
+//! Semantics are IDENTICAL to the python side — same round-half-up rule
+//! `floor(x * 2^f + 0.5)`, same saturation — so cross-layer tests can
+//! require exact equality (see python/tests/test_fxp.py for the mirrored
+//! property list).
+
+use anyhow::{bail, Result};
+
+/// A fixed-point format: total bits, fractional bits, signedness.
+///
+/// Signed formats are two's-complement with the sign bit counted in the
+/// integer part (Brevitas convention): `s6.5` = "6 bits: 1 integer + 5
+/// fractional" = range [-1, 1 - 2^-5].  Unsigned formats model post-ReLU
+/// activations: `u4.2` = range [0, 3.75].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FxpFormat {
+    pub bits: u8,
+    pub frac_bits: u8,
+    pub signed: bool,
+}
+
+impl FxpFormat {
+    pub fn signed(bits: u8, frac_bits: u8) -> Result<Self> {
+        Self::new(bits, frac_bits, true)
+    }
+
+    pub fn unsigned(bits: u8, frac_bits: u8) -> Result<Self> {
+        Self::new(bits, frac_bits, false)
+    }
+
+    pub fn new(bits: u8, frac_bits: u8, signed: bool) -> Result<Self> {
+        if bits == 0 || bits > 32 {
+            bail!("bits must be in [1, 32], got {bits}");
+        }
+        if frac_bits > bits + 16 {
+            bail!("frac_bits {frac_bits} too large for {bits} bits");
+        }
+        Ok(Self {
+            bits,
+            frac_bits,
+            signed,
+        })
+    }
+
+    /// Integer bits (incl. sign when signed) — the paper's "int." column.
+    pub fn int_bits(&self) -> i32 {
+        self.bits as i32 - self.frac_bits as i32
+    }
+
+    /// Code scale: quantized code = value * scale.
+    pub fn scale(&self) -> f64 {
+        (2.0f64).powi(self.frac_bits as i32)
+    }
+
+    pub fn qmin(&self) -> i64 {
+        if self.signed {
+            -(1i64 << (self.bits - 1))
+        } else {
+            0
+        }
+    }
+
+    pub fn qmax(&self) -> i64 {
+        if self.signed {
+            (1i64 << (self.bits - 1)) - 1
+        } else {
+            (1i64 << self.bits) - 1
+        }
+    }
+
+    pub fn vmin(&self) -> f64 {
+        self.qmin() as f64 / self.scale()
+    }
+
+    pub fn vmax(&self) -> f64 {
+        self.qmax() as f64 / self.scale()
+    }
+
+    /// Steps a MultiThreshold unit needs to realize this quantizer.
+    pub fn num_thresholds(&self) -> i64 {
+        self.qmax() - self.qmin()
+    }
+
+    /// Quantize to integer code: `clip(floor(x * 2^f + 0.5), qmin, qmax)`.
+    ///
+    /// f64 intermediate matches the f32-graph python semantics on every
+    /// value the pipeline produces (f32 inputs are exactly representable).
+    pub fn quantize_int(&self, x: f32) -> i64 {
+        let q = (x as f64 * self.scale() + 0.5).floor();
+        let q = q.clamp(self.qmin() as f64, self.qmax() as f64);
+        q as i64
+    }
+
+    /// Quantize onto the fixed-point grid, returned as f32.
+    pub fn quantize(&self, x: f32) -> f32 {
+        (self.quantize_int(x) as f64 / self.scale()) as f32
+    }
+
+    /// Dequantize an integer code.
+    pub fn dequantize(&self, code: i64) -> f32 {
+        (code as f64 / self.scale()) as f32
+    }
+
+    /// Quantize a slice in place.
+    pub fn quantize_slice(&self, xs: &mut [f32]) {
+        for x in xs {
+            *x = self.quantize(*x);
+        }
+    }
+
+    /// Short name, e.g. `s6.5` / `u4.2` (same as python `describe()`).
+    pub fn describe(&self) -> String {
+        format!(
+            "{}{}.{}",
+            if self.signed { "s" } else { "u" },
+            self.bits,
+            self.frac_bits
+        )
+    }
+}
+
+/// One row of Table II: weight format + activation format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct QuantConfig {
+    pub weight: FxpFormat,
+    pub act: FxpFormat,
+}
+
+impl QuantConfig {
+    pub fn new(weight: FxpFormat, act: FxpFormat) -> Result<Self> {
+        if !weight.signed {
+            bail!("weight format must be signed");
+        }
+        if act.signed {
+            bail!("activation format must be unsigned");
+        }
+        Ok(Self { weight, act })
+    }
+
+    /// Paper notation: (w_int, w_frac, a_int, a_frac), sign in int part.
+    pub fn from_split(w_int: u8, w_frac: u8, a_int: u8, a_frac: u8) -> Result<Self> {
+        Self::new(
+            FxpFormat::signed(w_int + w_frac, w_frac)?,
+            FxpFormat::unsigned(a_int + a_frac, a_frac)?,
+        )
+    }
+
+    pub fn max_bits(&self) -> u8 {
+        self.weight.bits.max(self.act.bits)
+    }
+
+    /// Accumulator format for MVAU bias/threshold data (wide, exact).
+    pub fn acc_format(&self) -> FxpFormat {
+        FxpFormat {
+            bits: 32,
+            frac_bits: self.weight.frac_bits + self.act.frac_bits,
+            signed: true,
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        format!("W{}_A{}", self.weight.describe(), self.act.describe())
+    }
+}
+
+/// The eight rows of the paper's Table II, in paper order.
+pub fn table2_configs() -> Vec<(String, QuantConfig)> {
+    [
+        ("b5_c2.3_r2.2", (2u8, 3u8, 2u8, 2u8)),
+        ("b6_c1.5_r2.2", (1, 5, 2, 2)), // the paper's chosen build (59.70%)
+        ("b6_c3.3_r3.3", (3, 3, 3, 3)),
+        ("b8_c4.4_r4.4", (4, 4, 4, 4)),
+        ("b10_c5.5_r5.5", (5, 5, 5, 5)),
+        ("b12_c6.6_r6.6", (6, 6, 6, 6)),
+        ("b14_c7.7_r7.7", (7, 7, 7, 7)),
+        ("b16_c8.8_r8.8", (8, 8, 8, 8)), // the conventional 16-bit baseline
+    ]
+    .into_iter()
+    .map(|(name, (wi, wf, ai, af))| {
+        (
+            name.to_string(),
+            QuantConfig::from_split(wi, wf, ai, af).expect("static config"),
+        )
+    })
+    .collect()
+}
+
+/// The paper's headline deployment config: conv 1/5 (6b), ReLU 2/2 (4b).
+pub fn headline_config() -> QuantConfig {
+    QuantConfig::from_split(1, 5, 2, 2).expect("static config")
+}
+
+/// The conventional 16-bit baseline config (Tensil's fixed width).
+pub fn baseline16_config() -> QuantConfig {
+    QuantConfig::from_split(8, 8, 8, 8).expect("static config")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn paper_headline_weight_format() {
+        let f = FxpFormat::signed(6, 5).unwrap();
+        assert_eq!(f.int_bits(), 1);
+        assert_eq!(f.vmin(), -1.0);
+        assert_eq!(f.vmax(), 1.0 - 2.0f64.powi(-5));
+        assert_eq!(f.num_thresholds(), 63);
+    }
+
+    #[test]
+    fn paper_headline_act_format() {
+        let f = FxpFormat::unsigned(4, 2).unwrap();
+        assert_eq!(f.qmin(), 0);
+        assert_eq!(f.qmax(), 15);
+        assert_eq!(f.vmax(), 3.75);
+    }
+
+    #[test]
+    fn round_half_up_rule_matches_python() {
+        // Mirrors test_fxp.py::test_round_half_up_exact_rule.
+        let f = FxpFormat::signed(8, 0).unwrap();
+        let cases = [
+            (0.5f32, 1.0f32),
+            (1.5, 2.0),
+            (-0.5, 0.0),
+            (-1.5, -1.0),
+            (2.49, 2.0),
+            (-2.51, -3.0),
+        ];
+        for (x, want) in cases {
+            assert_eq!(f.quantize(x), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_formats() {
+        assert!(FxpFormat::signed(0, 0).is_err());
+        assert!(FxpFormat::signed(33, 0).is_err());
+        assert!(QuantConfig::new(
+            FxpFormat::unsigned(6, 5).unwrap(),
+            FxpFormat::unsigned(4, 2).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn table2_matches_paper_rows() {
+        let cfgs = table2_configs();
+        assert_eq!(cfgs.len(), 8);
+        let maxes: Vec<u8> = cfgs.iter().map(|(_, c)| c.max_bits()).collect();
+        assert_eq!(maxes, [5, 6, 6, 8, 10, 12, 14, 16]);
+        let head = &cfgs[1].1;
+        assert_eq!(head.weight.describe(), "s6.5");
+        assert_eq!(head.act.describe(), "u4.2");
+    }
+
+    // ------------------------------------------------------ property tests
+    // Hand-rolled harness (no proptest offline): many random cases per
+    // invariant, deterministic seed, failures print the counterexample.
+
+    fn random_format(r: &mut Rng, signed: bool) -> FxpFormat {
+        let bits = 2 + r.below(15) as u8;
+        let frac = r.below((bits + 8) as usize) as u8;
+        FxpFormat::new(bits, frac, signed).unwrap()
+    }
+
+    #[test]
+    fn prop_idempotent() {
+        let mut r = Rng::new(100);
+        for _ in 0..2_000 {
+            let signed = r.next_f32() < 0.5;
+            let f = random_format(&mut r, signed);
+            let x = r.range_f32(-64.0, 64.0);
+            let q1 = f.quantize(x);
+            let q2 = f.quantize(q1);
+            assert_eq!(q1, q2, "fmt {} x {x}", f.describe());
+        }
+    }
+
+    #[test]
+    fn prop_monotone() {
+        let mut r = Rng::new(101);
+        for _ in 0..2_000 {
+            let f = random_format(&mut r, true);
+            let a = r.range_f32(-64.0, 64.0);
+            let b = r.range_f32(-64.0, 64.0);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(
+                f.quantize(lo) <= f.quantize(hi),
+                "fmt {} lo {lo} hi {hi}",
+                f.describe()
+            );
+        }
+    }
+
+    #[test]
+    fn prop_saturates_and_stays_on_grid() {
+        let mut r = Rng::new(102);
+        for _ in 0..2_000 {
+            let signed = r.next_f32() < 0.5;
+            let f = random_format(&mut r, signed);
+            let x = r.range_f32(-1e6, 1e6);
+            let q = f.quantize(x);
+            assert!(q as f64 >= f.vmin() - 1e-9 && q as f64 <= f.vmax() + 1e-9);
+            let code = q as f64 * f.scale();
+            assert_eq!(code, code.round(), "fmt {} x {x}", f.describe());
+        }
+    }
+
+    #[test]
+    fn prop_error_within_half_lsb_inside_range() {
+        let mut r = Rng::new(103);
+        for _ in 0..2_000 {
+            let f = random_format(&mut r, true);
+            let x = r.range_f32(-30.0, 30.0);
+            if (x as f64) < f.vmin() || (x as f64) > f.vmax() {
+                continue;
+            }
+            let q = f.quantize(x);
+            assert!(
+                ((q - x).abs() as f64) <= 0.5 / f.scale() + 1e-6,
+                "fmt {} x {x} q {q}",
+                f.describe()
+            );
+        }
+    }
+
+    #[test]
+    fn prop_int_round_trip() {
+        let mut r = Rng::new(104);
+        for _ in 0..2_000 {
+            let signed = r.next_f32() < 0.5;
+            let f = random_format(&mut r, signed);
+            let span = (f.qmax() - f.qmin() + 1) as usize;
+            let code = f.qmin() + (r.below(span) as i64);
+            let v = f.dequantize(code);
+            assert_eq!(f.quantize_int(v), code, "fmt {} code {code}", f.describe());
+        }
+    }
+
+    #[test]
+    fn acc_format_is_wide_enough() {
+        let cfg = headline_config();
+        let acc = cfg.acc_format();
+        assert_eq!(acc.frac_bits, 7); // 5 + 2
+        assert_eq!(acc.bits, 32);
+        assert!(acc.signed);
+    }
+}

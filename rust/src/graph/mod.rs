@@ -1,0 +1,553 @@
+//! ONNX-analogue graph IR — the compiler's working representation.
+//!
+//! The python exporter (compile/export_graph.py) writes the pre-streamline
+//! NCHW graph; the transform passes in [`crate::transforms`] rewrite it the
+//! way FINN's streamlining + HW-conversion steps do, and the hardware
+//! models in [`crate::hw`] consume the final HW-layer graph.
+//!
+//! Design choices mirror FINN/qonnx where it matters:
+//! * every value (activation or initializer) has a unique tensor name;
+//! * nodes reference tensors by name, single producer per tensor (SSA);
+//! * the node list is kept in topological order (transforms call
+//!   [`Graph::toposort`] after structural edits);
+//! * attributes are a small typed enum, not stringly JSON.
+
+use std::collections::{HashMap, HashSet};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::artifacts::read_f32_slice;
+use crate::json::{Json, JsonObj};
+use crate::tensor::Tensor;
+
+/// Typed node attribute.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttrVal {
+    Int(i64),
+    Ints(Vec<i64>),
+    Float(f64),
+    Str(String),
+}
+
+/// Ordered attribute map.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Attrs(Vec<(String, AttrVal)>);
+
+impl Attrs {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&mut self, key: &str, val: AttrVal) {
+        if let Some(slot) = self.0.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = val;
+        } else {
+            self.0.push((key.to_string(), val));
+        }
+    }
+
+    pub fn with(mut self, key: &str, val: AttrVal) -> Self {
+        self.set(key, val);
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<&AttrVal> {
+        self.0.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    pub fn int(&self, key: &str) -> Result<i64> {
+        match self.get(key) {
+            Some(AttrVal::Int(v)) => Ok(*v),
+            Some(AttrVal::Float(v)) if v.fract() == 0.0 => Ok(*v as i64),
+            other => bail!("attr {key}: expected int, got {other:?}"),
+        }
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.int(key).unwrap_or(default)
+    }
+
+    pub fn ints(&self, key: &str) -> Result<Vec<i64>> {
+        match self.get(key) {
+            Some(AttrVal::Ints(v)) => Ok(v.clone()),
+            other => bail!("attr {key}: expected int list, got {other:?}"),
+        }
+    }
+
+    pub fn float(&self, key: &str) -> Result<f64> {
+        match self.get(key) {
+            Some(AttrVal::Float(v)) => Ok(*v),
+            Some(AttrVal::Int(v)) => Ok(*v as f64),
+            other => bail!("attr {key}: expected float, got {other:?}"),
+        }
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.float(key).unwrap_or(default)
+    }
+
+    pub fn str(&self, key: &str) -> Result<&str> {
+        match self.get(key) {
+            Some(AttrVal::Str(s)) => Ok(s),
+            other => bail!("attr {key}: expected string, got {other:?}"),
+        }
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str(key).unwrap_or(default)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &(String, AttrVal)> {
+        self.0.iter()
+    }
+}
+
+/// A graph node (operator instance).
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: String,
+    pub name: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    pub attrs: Attrs,
+}
+
+impl Node {
+    pub fn new(op: &str, name: &str, inputs: Vec<String>, outputs: Vec<String>) -> Self {
+        Self {
+            op: op.to_string(),
+            name: name.to_string(),
+            inputs,
+            outputs,
+            attrs: Attrs::new(),
+        }
+    }
+
+    pub fn with_attrs(mut self, attrs: Attrs) -> Self {
+        self.attrs = attrs;
+        self
+    }
+}
+
+/// The graph: SSA over named tensors, topologically ordered node list.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    pub nodes: Vec<Node>,
+    pub shapes: HashMap<String, Vec<usize>>,
+    pub initializers: HashMap<String, Tensor>,
+    fresh_counter: u64,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            ..Default::default()
+        }
+    }
+
+    // ------------------------------------------------------------- loading
+
+    /// Load graph.json + graph_weights.bin as written by export_graph.py.
+    pub fn load(json_path: &Path, weights_path: &Path) -> Result<Self> {
+        let doc = Json::parse_file(json_path)?;
+        let blob = std::fs::read(weights_path)
+            .with_context(|| format!("reading {}", weights_path.display()))?;
+        Self::from_json(&doc, &blob)
+    }
+
+    pub fn from_json(doc: &Json, weights_blob: &[u8]) -> Result<Self> {
+        let mut g = Graph::new(doc.get("name")?.as_str()?);
+        for t in doc.get("tensors")?.as_arr()? {
+            g.shapes.insert(
+                t.get("name")?.as_str()?.to_string(),
+                t.get("shape")?.as_usize_vec()?,
+            );
+        }
+        for i in doc.get("inputs")?.as_arr()? {
+            g.inputs.push(i.as_str()?.to_string());
+        }
+        for o in doc.get("outputs")?.as_arr()? {
+            g.outputs.push(o.as_str()?.to_string());
+        }
+        let empty = Json::Arr(Vec::new());
+        for init in doc.opt("initializers").unwrap_or(&empty).as_arr()? {
+            let name = init.get("name")?.as_str()?.to_string();
+            let shape = init.get("shape")?.as_usize_vec()?;
+            let offset = init.get("offset")?.as_usize()?;
+            let numel: usize = shape.iter().product();
+            let end = offset + numel * 4;
+            if end > weights_blob.len() {
+                bail!("initializer {name} overruns weights blob");
+            }
+            let data = read_f32_slice(&weights_blob[offset..end]);
+            g.initializers.insert(name, Tensor::new(shape, data)?);
+        }
+        for n in doc.get("nodes")?.as_arr()? {
+            let mut node = Node::new(
+                n.get("op")?.as_str()?,
+                n.get("name")?.as_str()?,
+                n.get("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_str().map(String::from))
+                    .collect::<Result<_>>()?,
+                n.get("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_str().map(String::from))
+                    .collect::<Result<_>>()?,
+            );
+            for (key, val) in n.get("attrs")?.as_obj()?.iter() {
+                let attr = match val {
+                    Json::Num(f) => {
+                        if f.fract() == 0.0 {
+                            AttrVal::Int(*f as i64)
+                        } else {
+                            AttrVal::Float(*f)
+                        }
+                    }
+                    Json::Str(s) => AttrVal::Str(s.clone()),
+                    Json::Arr(a) => AttrVal::Ints(
+                        a.iter().map(|v| v.as_i64()).collect::<Result<_>>()?,
+                    ),
+                    other => bail!("unsupported attr value {other:?}"),
+                };
+                node.attrs.set(key, attr);
+            }
+            g.nodes.push(node);
+        }
+        g.validate()?;
+        Ok(g)
+    }
+
+    /// Serialize back to JSON (round-trip + report tooling).
+    pub fn to_json(&self) -> Json {
+        let mut tensors = Vec::new();
+        for (name, shape) in self.shapes_sorted() {
+            let mut o = JsonObj::new();
+            o.insert("name", Json::str(name));
+            o.insert(
+                "shape",
+                Json::Arr(shape.iter().map(|&d| Json::num(d as f64)).collect()),
+            );
+            tensors.push(Json::Obj(o));
+        }
+        let mut nodes = Vec::new();
+        for n in &self.nodes {
+            let mut o = JsonObj::new();
+            o.insert("op", Json::str(&n.op));
+            o.insert("name", Json::str(&n.name));
+            o.insert(
+                "inputs",
+                Json::Arr(n.inputs.iter().map(|s| Json::str(s.clone())).collect()),
+            );
+            o.insert(
+                "outputs",
+                Json::Arr(n.outputs.iter().map(|s| Json::str(s.clone())).collect()),
+            );
+            let mut attrs = JsonObj::new();
+            for (k, v) in n.attrs.iter() {
+                let jv = match v {
+                    AttrVal::Int(i) => Json::num(*i as f64),
+                    AttrVal::Float(f) => Json::num(*f),
+                    AttrVal::Str(s) => Json::str(s.clone()),
+                    AttrVal::Ints(v) => {
+                        Json::Arr(v.iter().map(|&i| Json::num(i as f64)).collect())
+                    }
+                };
+                attrs.insert(k, jv);
+            }
+            o.insert("attrs", Json::Obj(attrs));
+            nodes.push(Json::Obj(o));
+        }
+        crate::json::obj(vec![
+            ("name", Json::str(&self.name)),
+            (
+                "inputs",
+                Json::Arr(self.inputs.iter().map(|s| Json::str(s.clone())).collect()),
+            ),
+            (
+                "outputs",
+                Json::Arr(self.outputs.iter().map(|s| Json::str(s.clone())).collect()),
+            ),
+            ("tensors", Json::Arr(tensors)),
+            ("nodes", Json::Arr(nodes)),
+        ])
+    }
+
+    fn shapes_sorted(&self) -> Vec<(&String, &Vec<usize>)> {
+        let mut v: Vec<_> = self.shapes.iter().collect();
+        v.sort_by(|a, b| a.0.cmp(b.0));
+        v
+    }
+
+    // ------------------------------------------------------------- queries
+
+    pub fn shape_of(&self, tensor: &str) -> Result<&[usize]> {
+        self.shapes
+            .get(tensor)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow!("unknown tensor {tensor:?}"))
+    }
+
+    pub fn is_initializer(&self, tensor: &str) -> bool {
+        self.initializers.contains_key(tensor)
+    }
+
+    /// Index of the node producing `tensor` (activations only).
+    pub fn producer(&self, tensor: &str) -> Option<usize> {
+        self.nodes
+            .iter()
+            .position(|n| n.outputs.iter().any(|o| o == tensor))
+    }
+
+    /// Indices of nodes consuming `tensor`.
+    pub fn consumers(&self, tensor: &str) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.inputs.iter().any(|i| i == tensor))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn node_by_name(&self, name: &str) -> Option<&Node> {
+        self.nodes.iter().find(|n| n.name == name)
+    }
+
+    /// Census of op types (used by Fig. 4 reporting and tests).
+    pub fn op_census(&self) -> HashMap<String, usize> {
+        let mut census = HashMap::new();
+        for n in &self.nodes {
+            *census.entry(n.op.clone()).or_insert(0) += 1;
+        }
+        census
+    }
+
+    pub fn count_op(&self, op: &str) -> usize {
+        self.nodes.iter().filter(|n| n.op == op).count()
+    }
+
+    // ------------------------------------------------------------ mutation
+
+    /// A fresh tensor name with the given prefix, registered with `shape`.
+    pub fn fresh_tensor(&mut self, prefix: &str, shape: Vec<usize>) -> String {
+        loop {
+            let name = format!("{prefix}__{}", self.fresh_counter);
+            self.fresh_counter += 1;
+            if !self.shapes.contains_key(&name) {
+                self.shapes.insert(name.clone(), shape);
+                return name;
+            }
+        }
+    }
+
+    pub fn set_shape(&mut self, tensor: &str, shape: Vec<usize>) {
+        self.shapes.insert(tensor.to_string(), shape);
+    }
+
+    /// Remove nodes by index set (descending-safe).
+    pub fn remove_nodes(&mut self, mut idxs: Vec<usize>) {
+        idxs.sort_unstable();
+        idxs.dedup();
+        for i in idxs.into_iter().rev() {
+            self.nodes.remove(i);
+        }
+    }
+
+    /// Topologically sort nodes by tensor dependencies.
+    pub fn toposort(&mut self) -> Result<()> {
+        let n = self.nodes.len();
+        // tensor -> producing node index
+        let mut producer: HashMap<&str, usize> = HashMap::new();
+        for (i, node) in self.nodes.iter().enumerate() {
+            for out in &node.outputs {
+                if producer.insert(out.as_str(), i).is_some() {
+                    bail!("tensor {out} has multiple producers");
+                }
+            }
+        }
+        let mut deps: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut indegree = vec![0usize; n];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for input in &node.inputs {
+                if let Some(&p) = producer.get(input.as_str()) {
+                    deps[p].push(i);
+                    indegree[i] += 1;
+                }
+            }
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indegree[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        let mut head = 0;
+        while head < queue.len() {
+            let i = queue[head];
+            head += 1;
+            order.push(i);
+            for &j in &deps[i] {
+                indegree[j] -= 1;
+                if indegree[j] == 0 {
+                    queue.push(j);
+                }
+            }
+        }
+        if order.len() != n {
+            bail!("graph has a cycle");
+        }
+        let mut new_nodes = Vec::with_capacity(n);
+        for &i in &order {
+            new_nodes.push(self.nodes[i].clone());
+        }
+        self.nodes = new_nodes;
+        Ok(())
+    }
+
+    /// Structural validation: unique producers, defined inputs, known shapes.
+    pub fn validate(&self) -> Result<()> {
+        let mut produced: HashSet<&str> = HashSet::new();
+        for node in &self.nodes {
+            for out in &node.outputs {
+                if !produced.insert(out.as_str()) {
+                    bail!("tensor {out} produced twice");
+                }
+                if !self.shapes.contains_key(out.as_str()) {
+                    bail!("output tensor {out} has no shape entry");
+                }
+            }
+        }
+        let mut available: HashSet<&str> = self.inputs.iter().map(|s| s.as_str()).collect();
+        for init in self.initializers.keys() {
+            available.insert(init.as_str());
+        }
+        // Must be checkable in topological order.
+        let mut g = self.clone();
+        g.toposort()?;
+        for node in &g.nodes {
+            for input in &node.inputs {
+                if !available.contains(input.as_str()) && g.producer(input).is_none() {
+                    bail!("node {} reads undefined tensor {input}", node.name);
+                }
+            }
+        }
+        for out in &self.outputs {
+            if self.producer(out).is_none() && !available.contains(out.as_str()) {
+                bail!("graph output {out} is never produced");
+            }
+        }
+        for (name, t) in &self.initializers {
+            match self.shapes.get(name) {
+                Some(s) if s == t.shape() => {}
+                Some(s) => bail!("initializer {name} shape {s:?} != tensor {:?}", t.shape()),
+                None => bail!("initializer {name} missing from tensor list"),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Graph {
+        // in -> A -> t1 -> B -> t2 ; t1 -> C -> t3 ; (t2,t3) -> D -> out
+        let mut g = Graph::new("diamond");
+        g.inputs = vec!["in".into()];
+        g.outputs = vec!["out".into()];
+        for t in ["in", "t1", "t2", "t3", "out"] {
+            g.shapes.insert(t.into(), vec![1]);
+        }
+        g.nodes = vec![
+            Node::new("Relu", "A", vec!["in".into()], vec!["t1".into()]),
+            Node::new("Relu", "B", vec!["t1".into()], vec!["t2".into()]),
+            Node::new("Relu", "C", vec!["t1".into()], vec!["t3".into()]),
+            Node::new("Add", "D", vec!["t2".into(), "t3".into()], vec!["out".into()]),
+        ];
+        g
+    }
+
+    #[test]
+    fn validate_ok_and_census() {
+        let g = diamond();
+        g.validate().unwrap();
+        assert_eq!(g.count_op("Relu"), 3);
+        assert_eq!(g.count_op("Add"), 1);
+    }
+
+    #[test]
+    fn toposort_recovers_order() {
+        let mut g = diamond();
+        g.nodes.reverse();
+        g.toposort().unwrap();
+        let pos = |name: &str| g.nodes.iter().position(|n| n.name == name).unwrap();
+        assert!(pos("A") < pos("B"));
+        assert!(pos("A") < pos("C"));
+        assert!(pos("B") < pos("D"));
+        assert!(pos("C") < pos("D"));
+    }
+
+    #[test]
+    fn toposort_detects_cycle() {
+        let mut g = diamond();
+        g.nodes[0].inputs = vec!["out".into()]; // A now reads D's output
+        assert!(g.toposort().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_double_producer() {
+        let mut g = diamond();
+        g.nodes[2].outputs = vec!["t2".into()];
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_undefined_input() {
+        let mut g = diamond();
+        g.nodes[3].inputs[1] = "ghost".into();
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn producer_consumer_queries() {
+        let g = diamond();
+        assert_eq!(g.producer("t1"), Some(0));
+        assert_eq!(g.consumers("t1"), vec![1, 2]);
+        assert_eq!(g.producer("in"), None);
+    }
+
+    #[test]
+    fn fresh_tensor_unique() {
+        let mut g = diamond();
+        let a = g.fresh_tensor("tmp", vec![2]);
+        let b = g.fresh_tensor("tmp", vec![3]);
+        assert_ne!(a, b);
+        assert_eq!(g.shape_of(&a).unwrap(), &[2]);
+    }
+
+    #[test]
+    fn attrs_typed_access() {
+        let mut attrs = Attrs::new();
+        attrs.set("kernel", AttrVal::Ints(vec![3, 3]));
+        attrs.set("out_scale", AttrVal::Float(0.25));
+        attrs.set("layout", AttrVal::Str("NCHW".into()));
+        assert_eq!(attrs.ints("kernel").unwrap(), vec![3, 3]);
+        assert_eq!(attrs.float("out_scale").unwrap(), 0.25);
+        assert_eq!(attrs.str("layout").unwrap(), "NCHW");
+        assert!(attrs.int("kernel").is_err());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let g = diamond();
+        let j = g.to_json();
+        let g2 = Graph::from_json(&j, &[]).unwrap();
+        assert_eq!(g2.nodes.len(), 4);
+        assert_eq!(g2.inputs, g.inputs);
+        assert_eq!(g2.count_op("Relu"), 3);
+    }
+}

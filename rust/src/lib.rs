@@ -1,0 +1,33 @@
+//! # BWADE — Bit-Width-Aware Design Environment
+//!
+//! Reproduction of "Bit-Width-Aware Design Environment for Few-Shot
+//! Learning on Edge AI Hardware" (ISCAS).  See DESIGN.md for the system
+//! inventory and EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layering (three-layer rust+JAX stack, python never on the request path):
+//! * L1/L2 live in `python/compile/` (Pallas MVAU kernel, ResNet-9 QAT
+//!   model) and are AOT-lowered to `artifacts/*.hlo.txt` by `make
+//!   artifacts`;
+//! * L3 is this crate: the FINN-style compiler ([`graph`], [`transforms`],
+//!   [`hw`]), the dataflow + systolic simulators ([`dataflow`],
+//!   [`systolic`]), the PJRT runtime ([`runtime`]) and the serving
+//!   coordinator ([`coordinator`]), all driven by the design-environment
+//!   pipeline in [`build`].
+pub mod artifacts;
+pub mod benchutil;
+pub mod build;
+pub mod cli;
+pub mod coordinator;
+pub mod dataflow;
+pub mod fewshot;
+pub mod fixedpoint;
+pub mod graph;
+pub mod hw;
+pub mod json;
+pub mod ops;
+pub mod resources;
+pub mod rng;
+pub mod runtime;
+pub mod systolic;
+pub mod tensor;
+pub mod transforms;

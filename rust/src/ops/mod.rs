@@ -1,0 +1,664 @@
+//! Reference executors for every graph op — the rust analogue of FINN's
+//! `execute_onnx`.
+//!
+//! Transform correctness is proven by executing the graph before and after
+//! each rewrite on the same input and requiring (near-)exact equality; the
+//! HW-layer ops (MVAU, Thresholding, ...) have behavioural executors here
+//! too, so the *fully lowered* graph still executes and can be compared
+//! against the original NCHW import and against features from the PJRT
+//! artifact.
+//!
+//! Layout conventions: imported compute ops are NCHW (PyTorch-style); the
+//! lowered/HW ops are NHWC streams, matching FINN's HLS library (§III-C of
+//! the paper is precisely about this seam).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::graph::{Graph, Node};
+use crate::tensor::Tensor;
+
+/// Execute the graph on named input tensors; returns all graph outputs.
+pub fn execute(graph: &Graph, feeds: &HashMap<String, Tensor>) -> Result<HashMap<String, Tensor>> {
+    let mut env: HashMap<String, Tensor> = HashMap::new();
+    for (k, v) in feeds {
+        env.insert(k.clone(), v.clone());
+    }
+    for input in &graph.inputs {
+        if !env.contains_key(input) {
+            bail!("missing feed for graph input {input}");
+        }
+    }
+    let mut sorted = graph.clone();
+    sorted.toposort()?;
+    for node in &sorted.nodes {
+        let inputs: Vec<&Tensor> = node
+            .inputs
+            .iter()
+            .map(|name| {
+                env.get(name)
+                    .or_else(|| graph.initializers.get(name))
+                    .ok_or_else(|| anyhow!("node {}: tensor {name} unavailable", node.name))
+            })
+            .collect::<Result<_>>()?;
+        let outputs = execute_node(node, &inputs)
+            .map_err(|e| anyhow!("executing {} ({}): {e}", node.name, node.op))?;
+        if outputs.len() != node.outputs.len() {
+            bail!("node {} produced {} outputs, expected {}", node.name, outputs.len(), node.outputs.len());
+        }
+        for (name, tensor) in node.outputs.iter().zip(outputs) {
+            env.insert(name.clone(), tensor);
+        }
+    }
+    let mut result = HashMap::new();
+    for out in &graph.outputs {
+        let t = env
+            .remove(out)
+            .ok_or_else(|| anyhow!("graph output {out} not produced"))?;
+        result.insert(out.clone(), t);
+    }
+    Ok(result)
+}
+
+/// Execute a single node on resolved input tensors.
+pub fn execute_node(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    match node.op.as_str() {
+        "Conv" => conv(node, inputs),
+        "MultiThreshold" => multithreshold(node, inputs),
+        "Mul" => Ok(vec![inputs[0].broadcast_with(inputs[1], |a, b| a * b)?]),
+        "Add" => Ok(vec![inputs[0].broadcast_with(inputs[1], |a, b| a + b)?]),
+        "MaxPool" => maxpool(node, inputs),
+        "MaxPoolNHWC" => maxpool_nhwc(inputs),
+        "ReduceMean" => reduce_mean(node, inputs),
+        "Transpose" => {
+            let perm: Vec<usize> = node.attrs.ints("perm")?.iter().map(|&i| i as usize).collect();
+            Ok(vec![inputs[0].transpose(&perm)?])
+        }
+        "Reshape" => {
+            let shape: Vec<usize> =
+                node.attrs.ints("shape")?.iter().map(|&i| i as usize).collect();
+            Ok(vec![inputs[0].clone().reshape(shape)?])
+        }
+        "Im2Col" => im2col(node, inputs),
+        "MatMul" => matmul(inputs),
+        "GlobalAccPool" => global_acc_pool(inputs),
+        // HW layers (behavioural semantics; cycle/resource models in hw/).
+        "MVAU" => mvau(node, inputs),
+        "Thresholding" => multithreshold(node, inputs),
+        "ConvolutionInputGenerator" => im2col(node, inputs),
+        "StreamingMaxPool" => maxpool_nhwc(inputs),
+        "GlobalAccPool_hw" => global_acc_pool(inputs),
+        "AddStreams" => Ok(vec![inputs[0].broadcast_with(inputs[1], |a, b| a + b)?]),
+        "ChannelwiseMul" => Ok(vec![inputs[0].broadcast_with(inputs[1], |a, b| a * b)?]),
+        other => bail!("no executor for op {other}"),
+    }
+}
+
+// ---------------------------------------------------------------- Conv
+
+/// NCHW x OIHW convolution with symmetric padding, stride and bias.
+fn conv(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let (x, w) = (inputs[0], inputs[1]);
+    let bias = inputs.get(2).copied();
+    let kernel = node.attrs.ints("kernel")?;
+    let stride = node.attrs.ints("stride")?;
+    let pad = node.attrs.ints("pad")?;
+    let (kh, kw) = (kernel[0] as usize, kernel[1] as usize);
+    let (sh, sw) = (stride[0] as usize, stride[1] as usize);
+    let (ph, pw) = (pad[0] as usize, pad[1] as usize);
+    let [n, cin, h, wdim]: [usize; 4] = x.shape().try_into().map_err(|_| anyhow!("conv input must be 4-D"))?;
+    let [cout, wcin, wkh, wkw]: [usize; 4] = w.shape().try_into().map_err(|_| anyhow!("conv weight must be 4-D"))?;
+    if wcin != cin || wkh != kh || wkw != kw {
+        bail!("conv weight {:?} mismatch with input {:?}", w.shape(), x.shape());
+    }
+    let ho = (h + 2 * ph - kh) / sh + 1;
+    let wo = (wdim + 2 * pw - kw) / sw + 1;
+    let mut out = Tensor::zeros(vec![n, cout, ho, wo]);
+    let xs = x.data();
+    let ws = w.data();
+    let od = out.data_mut();
+    for b in 0..n {
+        for oc in 0..cout {
+            let bias_v = bias.map(|t| t.data()[oc]).unwrap_or(0.0);
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut acc = 0.0f32;
+                    for ic in 0..cin {
+                        for dy in 0..kh {
+                            let iy = oy * sh + dy;
+                            if iy < ph || iy >= h + ph {
+                                continue;
+                            }
+                            let iy = iy - ph;
+                            for dx in 0..kw {
+                                let ix = ox * sw + dx;
+                                if ix < pw || ix >= wdim + pw {
+                                    continue;
+                                }
+                                let ix = ix - pw;
+                                let xv = xs[((b * cin + ic) * h + iy) * wdim + ix];
+                                let wv = ws[((oc * cin + ic) * kh + dy) * kw + dx];
+                                acc += xv * wv;
+                            }
+                        }
+                    }
+                    od[((b * cout + oc) * ho + oy) * wo + ox] = acc + bias_v;
+                }
+            }
+        }
+    }
+    Ok(vec![out])
+}
+
+// ------------------------------------------------------- MultiThreshold
+
+/// FINN MultiThreshold: `q[c] = #{k : x >= T[c, k]}`, then
+/// `y = out_scale * q + out_bias`.
+///
+/// `data_layout` attr selects which axis is the channel axis ("NCHW" ->
+/// axis 1, "NHWC" -> last).  The threshold matrix is [C, K]; rows may be
+/// identical (uniform quantizer) but per-channel rows are supported — the
+/// paper's AbsorbTransposeIntoMultiThreshold requires re-interpreting the
+/// channel axis, which is exactly this attribute (Fig. 4).
+fn multithreshold(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let (x, t) = (inputs[0], inputs[1]);
+    let layout = node.attrs.str_or("data_layout", "NCHW");
+    let out_scale = node.attrs.float_or("out_scale", 1.0) as f32;
+    let out_bias = node.attrs.float_or("out_bias", 0.0) as f32;
+    let [c_t, k] = [t.shape()[0], t.shape()[1]];
+    let chan_axis = match layout {
+        "NCHW" => 1,
+        "NHWC" => x.ndim() - 1,
+        "NC" => 1,
+        other => bail!("unknown data_layout {other}"),
+    };
+    let c = x.shape()[chan_axis];
+    if c_t != c && c_t != 1 {
+        bail!("threshold rows {c_t} != channels {c}");
+    }
+    let strides = x.strides();
+    let chan_stride = strides[chan_axis];
+    let chan_extent = x.shape()[chan_axis];
+    let mut out = x.clone();
+    let ts = t.data();
+    let xs = out.data_mut();
+    for (i, v) in xs.iter_mut().enumerate() {
+        let ch = (i / chan_stride) % chan_extent;
+        let row = if c_t == 1 { 0 } else { ch };
+        let thresholds = &ts[row * k..(row + 1) * k];
+        // Thresholds are sorted ascending: q = #{k : x >= t_k} is the
+        // partition point of (t <= x).
+        let q = thresholds.partition_point(|&t| t <= *v);
+        *v = out_scale * q as f32 + out_bias;
+    }
+    Ok(vec![out])
+}
+
+// -------------------------------------------------------------- MaxPool
+
+/// NCHW max-pool (kernel = stride, the only form the backbone uses).
+fn maxpool(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let x = inputs[0];
+    let kernel = node.attrs.ints("kernel")?;
+    let (kh, kw) = (kernel[0] as usize, kernel[1] as usize);
+    let [n, c, h, w]: [usize; 4] = x.shape().try_into().map_err(|_| anyhow!("maxpool input must be 4-D"))?;
+    let (ho, wo) = (h / kh, w / kw);
+    let mut out = Tensor::zeros(vec![n, c, ho, wo]);
+    let xs = x.data();
+    let od = out.data_mut();
+    for b in 0..n {
+        for ch in 0..c {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..kh {
+                        for dx in 0..kw {
+                            let v = xs[((b * c + ch) * h + oy * kh + dy) * w + ox * kw + dx];
+                            m = m.max(v);
+                        }
+                    }
+                    od[((b * c + ch) * ho + oy) * wo + ox] = m;
+                }
+            }
+        }
+    }
+    Ok(vec![out])
+}
+
+/// NHWC 2x2/2 max-pool (the streaming HW form).
+fn maxpool_nhwc(inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let x = inputs[0];
+    let [n, h, w, c]: [usize; 4] = x.shape().try_into().map_err(|_| anyhow!("pool input must be 4-D"))?;
+    let (ho, wo) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(vec![n, ho, wo, c]);
+    let xs = x.data();
+    let od = out.data_mut();
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for ch in 0..c {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            m = m.max(
+                                xs[((b * h + oy * 2 + dy) * w + ox * 2 + dx) * c + ch],
+                            );
+                        }
+                    }
+                    od[((b * ho + oy) * wo + ox) * c + ch] = m;
+                }
+            }
+        }
+    }
+    Ok(vec![out])
+}
+
+// ----------------------------------------------------------- ReduceMean
+
+fn reduce_mean(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let x = inputs[0];
+    let axes: Vec<usize> = node.attrs.ints("axes")?.iter().map(|&a| a as usize).collect();
+    let keepdims = node.attrs.int_or("keepdims", 0) != 0;
+    let shape = x.shape();
+    let mut out_shape = Vec::new();
+    for (i, &d) in shape.iter().enumerate() {
+        if axes.contains(&i) {
+            if keepdims {
+                out_shape.push(1);
+            }
+        } else {
+            out_shape.push(d);
+        }
+    }
+    let reduce_count: usize = axes.iter().map(|&a| shape[a]).product();
+    let strides = x.strides();
+    let mut out = Tensor::zeros(out_shape.clone());
+    let xs = x.data();
+    // Iterate all elements, accumulate into the output slot.
+    let kept: Vec<usize> = (0..shape.len()).filter(|i| !axes.contains(i)).collect();
+    let out_strides = crate::tensor::strides_of(
+        &kept.iter().map(|&i| shape[i]).collect::<Vec<_>>(),
+    );
+    let od = out.data_mut();
+    for (lin, &v) in xs.iter().enumerate() {
+        let mut off = 0;
+        for (j, &axis) in kept.iter().enumerate() {
+            let idx = (lin / strides[axis]) % shape[axis];
+            off += idx * out_strides[j];
+        }
+        od[off] += v;
+    }
+    for v in od.iter_mut() {
+        *v /= reduce_count as f32;
+    }
+    Ok(vec![out])
+}
+
+// --------------------------------------------------------------- Im2Col
+
+/// NHWC im2col (the SWG's functional semantics): [N,H,W,C] ->
+/// [N, Ho, Wo, kh*kw*C], patch-major (dy, dx, c) — matching
+/// python/compile/kernels/ref.py::im2col_ref.
+fn im2col(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let x = inputs[0];
+    let kernel = node.attrs.ints("kernel")?;
+    let stride = node.attrs.ints("stride")?;
+    let pad = node.attrs.ints("pad")?;
+    let (kh, kw) = (kernel[0] as usize, kernel[1] as usize);
+    let (sh, sw) = (stride[0] as usize, stride[1] as usize);
+    let (ph, pw) = (pad[0] as usize, pad[1] as usize);
+    let [n, h, w, c]: [usize; 4] = x.shape().try_into().map_err(|_| anyhow!("im2col input must be 4-D"))?;
+    let ho = (h + 2 * ph - kh) / sh + 1;
+    let wo = (w + 2 * pw - kw) / sw + 1;
+    let k = kh * kw * c;
+    let mut out = Tensor::zeros(vec![n, ho, wo, k]);
+    let xs = x.data();
+    let od = out.data_mut();
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let base = ((b * ho + oy) * wo + ox) * k;
+                let mut slot = 0;
+                for dy in 0..kh {
+                    for dx in 0..kw {
+                        let iy = oy * sh + dy;
+                        let ix = ox * sw + dx;
+                        for ch in 0..c {
+                            let v = if iy < ph || iy >= h + ph || ix < pw || ix >= w + pw {
+                                0.0
+                            } else {
+                                xs[((b * h + (iy - ph)) * w + (ix - pw)) * c + ch]
+                            };
+                            od[base + slot] = v;
+                            slot += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(vec![out])
+}
+
+// --------------------------------------------------------------- MatMul
+
+/// Batched-free matmul over the last axis: [..., K] x [K, N] -> [..., N].
+fn matmul(inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let (x, w) = (inputs[0], inputs[1]);
+    let k = *x.shape().last().ok_or_else(|| anyhow!("matmul on scalar"))?;
+    let [wk, n]: [usize; 2] = w.shape().try_into().map_err(|_| anyhow!("matmul weight must be 2-D"))?;
+    if wk != k {
+        bail!("matmul inner dim {k} != weight rows {wk}");
+    }
+    let rows: usize = x.shape()[..x.ndim() - 1].iter().product();
+    let mut out_shape = x.shape()[..x.ndim() - 1].to_vec();
+    out_shape.push(n);
+    let mut out = Tensor::zeros(out_shape);
+    let xs = x.data();
+    let ws = w.data();
+    let od = out.data_mut();
+    for r in 0..rows {
+        let xrow = &xs[r * k..(r + 1) * k];
+        let orow = &mut od[r * n..(r + 1) * n];
+        for (kk, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &ws[kk * n..(kk + 1) * n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+    Ok(vec![out])
+}
+
+// -------------------------------------------------------- GlobalAccPool
+
+/// FINN GlobalAccPool: NHWC -> [N, C] cumulative SUM over spatial dims
+/// (no division — the following Mul applies 1/HW, §III-D).
+fn global_acc_pool(inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let x = inputs[0];
+    let [n, h, w, c]: [usize; 4] = x.shape().try_into().map_err(|_| anyhow!("gap input must be 4-D"))?;
+    let mut out = Tensor::zeros(vec![n, c]);
+    let xs = x.data();
+    let od = out.data_mut();
+    for b in 0..n {
+        for y in 0..h {
+            for xcol in 0..w {
+                for ch in 0..c {
+                    od[b * c + ch] += xs[((b * h + y) * w + xcol) * c + ch];
+                }
+            }
+        }
+    }
+    Ok(vec![out])
+}
+
+// ----------------------------------------------------------------- MVAU
+
+/// Matrix-Vector-Activation Unit: MatMul + bias + optional MultiThreshold.
+///
+/// inputs: [x(..., K), w(K, N), bias(N), thresholds(C_or_1, T)?]
+/// attrs:  out_scale / out_bias for the threshold stage; `apply_act`.
+fn mvau(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let mm = matmul(&[inputs[0], inputs[1]])?.pop().unwrap();
+    let bias = inputs[2];
+    let with_bias = mm.broadcast_with(bias, |a, b| a + b)?;
+    let apply_act = node.attrs.int_or("apply_act", 1) != 0;
+    if !apply_act {
+        return Ok(vec![with_bias]);
+    }
+    let thresholds = inputs
+        .get(3)
+        .ok_or_else(|| anyhow!("MVAU with apply_act needs thresholds input"))?;
+    let mut thresh_node = Node::new("Thresholding", &node.name, vec![], vec![]);
+    thresh_node.attrs = node.attrs.clone();
+    thresh_node
+        .attrs
+        .set("data_layout", crate::graph::AttrVal::Str("NHWC".into()));
+    multithreshold(&thresh_node, &[&with_bias, thresholds])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{AttrVal, Attrs};
+
+    fn node(op: &str, attrs: Attrs) -> Node {
+        Node::new(op, "t", vec![], vec![]).with_attrs(attrs)
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 kernel with identity weights passes channels through.
+        let x = Tensor::from_fn(vec![1, 2, 3, 3], |i| i as f32);
+        let mut w = Tensor::zeros(vec![2, 2, 1, 1]);
+        w.set(&[0, 0, 0, 0], 1.0);
+        w.set(&[1, 1, 0, 0], 1.0);
+        let attrs = Attrs::new()
+            .with("kernel", AttrVal::Ints(vec![1, 1]))
+            .with("stride", AttrVal::Ints(vec![1, 1]))
+            .with("pad", AttrVal::Ints(vec![0, 0]));
+        let y = conv(&node("Conv", attrs), &[&x, &w]).unwrap().pop().unwrap();
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn conv_3x3_known_values() {
+        // All-ones 3x3 kernel over constant image = 9 in interior, less on
+        // border (zero pad).
+        let x = Tensor::full(vec![1, 1, 4, 4], 1.0);
+        let w = Tensor::full(vec![1, 1, 3, 3], 1.0);
+        let attrs = Attrs::new()
+            .with("kernel", AttrVal::Ints(vec![3, 3]))
+            .with("stride", AttrVal::Ints(vec![1, 1]))
+            .with("pad", AttrVal::Ints(vec![1, 1]));
+        let y = conv(&node("Conv", attrs), &[&x, &w]).unwrap().pop().unwrap();
+        assert_eq!(y.at(&[0, 0, 1, 1]), 9.0);
+        assert_eq!(y.at(&[0, 0, 0, 0]), 4.0);
+        assert_eq!(y.at(&[0, 0, 0, 1]), 6.0);
+    }
+
+    #[test]
+    fn conv_bias_added() {
+        let x = Tensor::zeros(vec![1, 1, 2, 2]);
+        let w = Tensor::zeros(vec![3, 1, 1, 1]);
+        let b = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let attrs = Attrs::new()
+            .with("kernel", AttrVal::Ints(vec![1, 1]))
+            .with("stride", AttrVal::Ints(vec![1, 1]))
+            .with("pad", AttrVal::Ints(vec![0, 0]));
+        let y = conv(&node("Conv", attrs), &[&x, &w, &b]).unwrap().pop().unwrap();
+        assert_eq!(y.at(&[0, 0, 0, 0]), 1.0);
+        assert_eq!(y.at(&[0, 2, 1, 1]), 3.0);
+    }
+
+    #[test]
+    fn multithreshold_counts_thresholds() {
+        // thresholds [0.5, 1.5, 2.5]: x=2.0 -> 2 crossings.
+        let x = Tensor::new(vec![1, 1, 1, 3], vec![-1.0, 2.0, 9.0]).unwrap();
+        let t = Tensor::new(vec![1, 3], vec![0.5, 1.5, 2.5]).unwrap();
+        let attrs = Attrs::new().with("data_layout", AttrVal::Str("NCHW".into()));
+        let y = multithreshold(&node("MultiThreshold", attrs), &[&x, &t])
+            .unwrap()
+            .pop()
+            .unwrap();
+        assert_eq!(y.data(), &[0.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn multithreshold_x_equal_threshold_counts() {
+        // FINN: q = #{k : x >= t_k}, so equality crosses.
+        let x = Tensor::new(vec![1, 1], vec![1.5]).unwrap();
+        let t = Tensor::new(vec![1, 3], vec![0.5, 1.5, 2.5]).unwrap();
+        let attrs = Attrs::new().with("data_layout", AttrVal::Str("NC".into()));
+        let y = multithreshold(&node("MultiThreshold", attrs), &[&x, &t])
+            .unwrap()
+            .pop()
+            .unwrap();
+        assert_eq!(y.data(), &[2.0]);
+    }
+
+    #[test]
+    fn multithreshold_per_channel_rows_nchw_vs_nhwc() {
+        // Channel 0 thresholds at 0.5; channel 1 at 5.0.
+        let t = Tensor::new(vec![2, 1], vec![0.5, 5.0]).unwrap();
+        let x_nchw = Tensor::new(vec![1, 2, 1, 2], vec![1.0, 1.0, 1.0, 6.0]).unwrap();
+        let attrs = Attrs::new().with("data_layout", AttrVal::Str("NCHW".into()));
+        let y = multithreshold(&node("MT", attrs), &[&x_nchw, &t]).unwrap().pop().unwrap();
+        assert_eq!(y.data(), &[1.0, 1.0, 0.0, 1.0]);
+        // Same data in NHWC must give the transposed result.
+        let x_nhwc = x_nchw.nchw_to_nhwc().unwrap();
+        let attrs = Attrs::new().with("data_layout", AttrVal::Str("NHWC".into()));
+        let y2 = multithreshold(&node("MT", attrs), &[&x_nhwc, &t]).unwrap().pop().unwrap();
+        assert_eq!(y2, y.nchw_to_nhwc().unwrap());
+    }
+
+    #[test]
+    fn multithreshold_out_scale_bias() {
+        let x = Tensor::new(vec![1, 1], vec![2.0]).unwrap();
+        let t = Tensor::new(vec![1, 3], vec![0.5, 1.5, 2.5]).unwrap();
+        let attrs = Attrs::new()
+            .with("data_layout", AttrVal::Str("NC".into()))
+            .with("out_scale", AttrVal::Float(0.25))
+            .with("out_bias", AttrVal::Float(-1.0));
+        let y = multithreshold(&node("MT", attrs), &[&x, &t]).unwrap().pop().unwrap();
+        assert_eq!(y.data(), &[0.25 * 2.0 - 1.0]);
+    }
+
+    #[test]
+    fn maxpool_2x2() {
+        let x = Tensor::new(
+            vec![1, 1, 2, 4],
+            vec![1., 2., 3., 4., 5., 6., 7., 8.],
+        )
+        .unwrap();
+        let attrs = Attrs::new()
+            .with("kernel", AttrVal::Ints(vec![2, 2]))
+            .with("stride", AttrVal::Ints(vec![2, 2]));
+        let y = maxpool(&node("MaxPool", attrs), &[&x]).unwrap().pop().unwrap();
+        assert_eq!(y.shape(), &[1, 1, 1, 2]);
+        assert_eq!(y.data(), &[6.0, 8.0]);
+    }
+
+    #[test]
+    fn maxpool_nhwc_matches_nchw() {
+        let x = Tensor::from_fn(vec![1, 2, 4, 4], |i| ((i * 7919) % 13) as f32);
+        let attrs = Attrs::new()
+            .with("kernel", AttrVal::Ints(vec![2, 2]))
+            .with("stride", AttrVal::Ints(vec![2, 2]));
+        let want = maxpool(&node("MaxPool", attrs), &[&x]).unwrap().pop().unwrap();
+        let got = maxpool_nhwc(&[&x.nchw_to_nhwc().unwrap()]).unwrap().pop().unwrap();
+        assert_eq!(got.nhwc_to_nchw().unwrap(), want);
+    }
+
+    #[test]
+    fn reduce_mean_spatial() {
+        let x = Tensor::from_fn(vec![1, 2, 2, 2], |i| i as f32);
+        let attrs = Attrs::new()
+            .with("axes", AttrVal::Ints(vec![2, 3]))
+            .with("keepdims", AttrVal::Int(0));
+        let y = reduce_mean(&node("ReduceMean", attrs), &[&x]).unwrap().pop().unwrap();
+        assert_eq!(y.shape(), &[1, 2]);
+        assert_eq!(y.data(), &[1.5, 5.5]);
+    }
+
+    #[test]
+    fn im2col_center_patch() {
+        let x = Tensor::from_fn(vec![1, 4, 4, 1], |i| i as f32);
+        let attrs = Attrs::new()
+            .with("kernel", AttrVal::Ints(vec![3, 3]))
+            .with("stride", AttrVal::Ints(vec![1, 1]))
+            .with("pad", AttrVal::Ints(vec![1, 1]));
+        let y = im2col(&node("Im2Col", attrs), &[&x]).unwrap().pop().unwrap();
+        assert_eq!(y.shape(), &[1, 4, 4, 9]);
+        // Patch at (1,1) = rows 0..3 x cols 0..3 of the image.
+        let patch: Vec<f32> = (0..9).map(|i| y.at(&[0, 1, 1, i])).collect();
+        assert_eq!(patch, vec![0., 1., 2., 4., 5., 6., 8., 9., 10.]);
+    }
+
+    #[test]
+    fn im2col_matmul_equals_conv() {
+        // The lowering identity: conv(NCHW) == transpose . im2col . matmul.
+        let mut rng = crate::rng::Rng::new(77);
+        let x_nchw = Tensor::from_fn(vec![1, 3, 6, 6], |_| rng.normal());
+        let w_oihw = Tensor::from_fn(vec![4, 3, 3, 3], |_| rng.normal());
+        let conv_attrs = Attrs::new()
+            .with("kernel", AttrVal::Ints(vec![3, 3]))
+            .with("stride", AttrVal::Ints(vec![1, 1]))
+            .with("pad", AttrVal::Ints(vec![1, 1]));
+        let want = conv(&node("Conv", conv_attrs.clone()), &[&x_nchw, &w_oihw])
+            .unwrap()
+            .pop()
+            .unwrap();
+
+        let x_nhwc = x_nchw.nchw_to_nhwc().unwrap();
+        let cols = im2col(&node("Im2Col", conv_attrs), &[&x_nhwc]).unwrap().pop().unwrap();
+        // OIHW -> (dy, dx, cin)-major K x O matrix = transpose to HWIO then
+        // reshape.
+        let w_k_o = w_oihw.transpose(&[2, 3, 1, 0]).unwrap().reshape(vec![27, 4]).unwrap();
+        let got_nhwc = matmul(&[&cols, &w_k_o]).unwrap().pop().unwrap();
+        let got = got_nhwc.nhwc_to_nchw().unwrap();
+        assert!(got.allclose(&want, 1e-4), "max diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn global_acc_pool_sums() {
+        let x = Tensor::full(vec![1, 2, 2, 3], 1.5);
+        let y = global_acc_pool(&[&x]).unwrap().pop().unwrap();
+        assert_eq!(y.shape(), &[1, 3]);
+        assert_eq!(y.data(), &[6.0, 6.0, 6.0]);
+    }
+
+    #[test]
+    fn mvau_with_thresholds() {
+        let x = Tensor::new(vec![1, 2], vec![1.0, 1.0]).unwrap();
+        let w = Tensor::new(vec![2, 1], vec![1.0, 1.0]).unwrap();
+        let b = Tensor::new(vec![1], vec![0.5]).unwrap();
+        let t = Tensor::new(vec![1, 4], vec![0.5, 1.0, 2.0, 3.0]).unwrap();
+        let attrs = Attrs::new()
+            .with("apply_act", AttrVal::Int(1))
+            .with("out_scale", AttrVal::Float(0.5));
+        let y = mvau(&node("MVAU", attrs), &[&x, &w, &b, &t]).unwrap().pop().unwrap();
+        // acc = 2.5 -> crosses 0.5, 1.0, 2.0 -> q=3 -> 1.5 after scale.
+        assert_eq!(y.data(), &[1.5]);
+    }
+
+    #[test]
+    fn mvau_no_act_is_affine() {
+        let x = Tensor::new(vec![1, 2], vec![2.0, 3.0]).unwrap();
+        let w = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let b = Tensor::new(vec![2], vec![10.0, 20.0]).unwrap();
+        let attrs = Attrs::new().with("apply_act", AttrVal::Int(0));
+        let y = mvau(&node("MVAU", attrs), &[&x, &w, &b]).unwrap().pop().unwrap();
+        assert_eq!(y.data(), &[12.0, 23.0]);
+    }
+
+    #[test]
+    fn execute_full_graph_plumbing() {
+        use crate::graph::Graph;
+        let mut g = Graph::new("tiny");
+        g.inputs = vec!["x".into()];
+        g.outputs = vec!["y".into()];
+        g.shapes.insert("x".into(), vec![1, 2]);
+        g.shapes.insert("s".into(), vec![]);
+        g.shapes.insert("y".into(), vec![1, 2]);
+        g.initializers.insert("s".into(), Tensor::scalar(3.0));
+        g.nodes.push(Node::new("Mul", "m", vec!["x".into(), "s".into()], vec!["y".into()]));
+        let mut feeds = HashMap::new();
+        feeds.insert("x".to_string(), Tensor::new(vec![1, 2], vec![1.0, 2.0]).unwrap());
+        let out = execute(&g, &feeds).unwrap();
+        assert_eq!(out["y"].data(), &[3.0, 6.0]);
+    }
+
+    #[test]
+    fn execute_missing_feed_errors() {
+        use crate::graph::Graph;
+        let mut g = Graph::new("tiny");
+        g.inputs = vec!["x".into()];
+        let feeds = HashMap::new();
+        assert!(execute(&g, &feeds).is_err());
+    }
+}

@@ -1,0 +1,206 @@
+//! FPGA resource accounting: LUT / FF / BRAM36 / DSP plus the Zynq-7020
+//! device budget (PYNQ-Z1, the paper's board).
+//!
+//! The per-layer estimation formulas live with the layer models in
+//! [`crate::hw`]; this module provides the common currency and the
+//! device-utilization report used by Table III.
+
+use std::fmt;
+use std::ops::{Add, AddAssign};
+
+/// A resource vector.  Fractional BRAM (18Kb halves) is kept as f64, like
+/// Vivado reports (the paper's Table III lists 131.5 BRAM36).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Resources {
+    pub lut: f64,
+    pub ff: f64,
+    pub bram36: f64,
+    pub dsp: f64,
+}
+
+impl Resources {
+    pub const ZERO: Resources = Resources {
+        lut: 0.0,
+        ff: 0.0,
+        bram36: 0.0,
+        dsp: 0.0,
+    };
+
+    pub fn new(lut: f64, ff: f64, bram36: f64, dsp: f64) -> Self {
+        Self {
+            lut,
+            ff,
+            bram36,
+            dsp,
+        }
+    }
+
+    pub fn scaled(&self, k: f64) -> Self {
+        Self::new(self.lut * k, self.ff * k, self.bram36 * k, self.dsp * k)
+    }
+
+    /// True if every component fits within `budget`.
+    pub fn fits(&self, budget: &Resources) -> bool {
+        self.lut <= budget.lut
+            && self.ff <= budget.ff
+            && self.bram36 <= budget.bram36
+            && self.dsp <= budget.dsp
+    }
+
+    /// Worst-component utilization fraction against a device.
+    pub fn max_utilization(&self, device: &Device) -> f64 {
+        let b = &device.budget;
+        [
+            self.lut / b.lut,
+            self.ff / b.ff,
+            self.bram36 / b.bram36,
+            self.dsp / b.dsp,
+        ]
+        .into_iter()
+        .fold(0.0, f64::max)
+    }
+}
+
+impl Add for Resources {
+    type Output = Resources;
+    fn add(self, rhs: Resources) -> Resources {
+        Resources::new(
+            self.lut + rhs.lut,
+            self.ff + rhs.ff,
+            self.bram36 + rhs.bram36,
+            self.dsp + rhs.dsp,
+        )
+    }
+}
+
+impl AddAssign for Resources {
+    fn add_assign(&mut self, rhs: Resources) {
+        *self = *self + rhs;
+    }
+}
+
+impl fmt::Display for Resources {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "LUT {:>7.0}  FF {:>7.0}  BRAM36 {:>6.1}  DSP {:>4.0}",
+            self.lut, self.ff, self.bram36, self.dsp
+        )
+    }
+}
+
+/// An FPGA device model.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub name: &'static str,
+    pub budget: Resources,
+    /// Fabric clock in MHz (the paper runs the FINN build at 125 MHz).
+    pub clock_mhz: f64,
+}
+
+impl Device {
+    /// PYNQ-Z1: Zynq XC7Z020-1CLG400C.
+    pub fn pynq_z1() -> Device {
+        Device {
+            name: "PYNQ-Z1 (Zynq-7020)",
+            budget: Resources::new(53_200.0, 106_400.0, 140.0, 220.0),
+            clock_mhz: 125.0,
+        }
+    }
+
+    pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.clock_mhz * 1e3)
+    }
+
+    pub fn fps(&self, cycles_per_frame: u64) -> f64 {
+        self.clock_mhz * 1e6 / cycles_per_frame as f64
+    }
+}
+
+/// BRAM36 blocks needed for a memory of `depth` words x `width` bits,
+/// taking the min over the block's hard aspect-ratio configs
+/// (512x72, 1Kx36, 2Kx18, 4Kx9) — the standard Xilinx packing model.
+pub fn bram36_for(depth: u64, width: u64) -> f64 {
+    if depth == 0 || width == 0 {
+        return 0.0;
+    }
+    let configs: [(u64, u64); 4] = [(512, 72), (1024, 36), (2048, 18), (4096, 9)];
+    let mut best = f64::MAX;
+    for (d, w) in configs {
+        let blocks = (depth.div_ceil(d)) * (width.div_ceil(w));
+        best = best.min(blocks as f64);
+    }
+    // An 18Kb half-block suffices for small memories (Vivado packs pairs).
+    if depth * width <= 18 * 1024 && width <= 36 && depth <= 1024 {
+        best = best.min(0.5);
+    }
+    best
+}
+
+/// Utilization table row (Table III formatting).
+pub fn utilization_line(name: &str, r: &Resources, device: &Device) -> String {
+    let b = &device.budget;
+    format!(
+        "{name:<28} LUT {:>6.0} ({:>4.1}%)  FF {:>6.0} ({:>4.1}%)  BRAM36 {:>6.1} ({:>4.1}%)  DSP {:>4.0} ({:>4.1}%)",
+        r.lut,
+        100.0 * r.lut / b.lut,
+        r.ff,
+        100.0 * r.ff / b.ff,
+        r.bram36,
+        100.0 * r.bram36 / b.bram36,
+        r.dsp,
+        100.0 * r.dsp / b.dsp,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_fits() {
+        let a = Resources::new(100.0, 200.0, 1.0, 2.0);
+        let b = Resources::new(50.0, 100.0, 0.5, 1.0);
+        let s = a + b;
+        assert_eq!(s.lut, 150.0);
+        assert!(s.fits(&Device::pynq_z1().budget));
+        assert!(!Resources::new(1e6, 0.0, 0.0, 0.0).fits(&Device::pynq_z1().budget));
+    }
+
+    #[test]
+    fn pynq_budget_matches_datasheet() {
+        let d = Device::pynq_z1();
+        assert_eq!(d.budget.lut, 53_200.0);
+        assert_eq!(d.budget.bram36, 140.0);
+        assert_eq!(d.budget.dsp, 220.0);
+        assert_eq!(d.clock_mhz, 125.0);
+    }
+
+    #[test]
+    fn cycle_time_conversions() {
+        let d = Device::pynq_z1();
+        // 16.3 ms at 125 MHz = 2.0375 M cycles (the paper's latency).
+        let cycles = (16.3e-3 * 125e6) as u64;
+        assert!((d.cycles_to_ms(cycles) - 16.3).abs() < 1e-3);
+        assert!((d.fps(cycles) - 61.35).abs() < 0.1);
+    }
+
+    #[test]
+    fn bram_packing() {
+        assert_eq!(bram36_for(0, 8), 0.0);
+        assert_eq!(bram36_for(512, 36), 0.5); // half block
+        assert_eq!(bram36_for(1024, 36), 1.0);
+        assert_eq!(bram36_for(512, 72), 1.0);
+        assert_eq!(bram36_for(4096, 9), 1.0);
+        assert_eq!(bram36_for(2048, 36), 2.0);
+        // Wide shallow memory wastes depth: 16 x 288 bits -> 4 blocks.
+        assert_eq!(bram36_for(16, 288), 4.0);
+    }
+
+    #[test]
+    fn max_utilization_picks_bottleneck() {
+        let d = Device::pynq_z1();
+        let r = Resources::new(5_320.0, 0.0, 70.0, 0.0); // 10% LUT, 50% BRAM
+        assert!((r.max_utilization(&d) - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,322 @@
+//! Tensil-baseline simulator: a systolic-array accelerator with
+//! DRAM-resident weights and activations — the architecture of the
+//! paper's Table I "Tensil" column and Table III "PEFSL [2]" row.
+//!
+//! Model (matching Tensil's published architecture for the PYNQ-Z1
+//! target and the behaviour the paper attributes to it):
+//!
+//! * an `rows x cols` MAC array (16-bit fixed-point datapath -> DSP48 per
+//!   MAC), weights loaded column-wise from DRAM before each tile;
+//! * activations stream DRAM -> local buffer -> array -> DRAM per layer
+//!   (Table I: "Weights stored in DRAM", "Can be higher [latency] due to
+//!   DRAM access overhead");
+//! * layers execute **sequentially** (no inter-layer pipelining) — the
+//!   paper contrasts this with FINN's dataflow streaming.
+//!
+//! Convolution is lowered to tiled matmul exactly as the FINN path does
+//! (same M/K/N per layer), so the two simulators disagree only in
+//! *architecture*, which is the comparison Table III makes.
+
+
+use crate::fixedpoint::QuantConfig;
+use crate::resources::{bram36_for, Resources};
+
+/// Systolic accelerator configuration (Tensil-for-PYNQ-Z1 defaults).
+#[derive(Debug, Clone)]
+pub struct SystolicConfig {
+    pub rows: u64,
+    pub cols: u64,
+    /// Datapath width in bits (Tensil: fixed 16 or 32).
+    pub data_bits: u64,
+    /// DRAM bytes per fabric cycle (64-bit AXI HP port on the Zynq).
+    pub dram_bytes_per_cycle: f64,
+    /// DRAM burst setup latency in cycles.
+    pub dram_latency: u64,
+    /// Local activation/weight buffer size in bytes.
+    pub buffer_bytes: u64,
+    /// Per-instruction decode overhead in cycles.
+    pub instr_overhead: u64,
+}
+
+impl SystolicConfig {
+    /// Tensil's PYNQ-Z1 build as used by PEFSL: a 12x12 array (144 MAC
+    /// DSPs + DMA/post-processing ~ the paper's 159 DSP row; 16x16 would
+    /// not fit the Zynq-7020's 220 DSPs), 16-bit datapath.
+    ///
+    /// DRAM constants are calibrated to the *effective* utilization the
+    /// paper's own Table III implies (35.9 ms at 125 MHz for PEFSL's
+    /// backbone ~ <10% MAC utilization — Tensil's DRAM-resident weights
+    /// and per-tile instruction issue dominate): 4 bytes/cycle sustained
+    /// on the shared HP port, 64-cycle burst setup, ~96 cycles of
+    /// instruction issue per tile.  DESIGN.md §2 records this as a
+    /// documented calibration, not a measured Tensil build.
+    pub fn tensil_pynq_z1() -> Self {
+        Self {
+            rows: 12,
+            cols: 12,
+            data_bits: 16,
+            dram_bytes_per_cycle: 4.0,
+            dram_latency: 64,
+            buffer_bytes: 96 * 1024,
+            instr_overhead: 96,
+        }
+    }
+}
+
+/// One conv layer as a matmul workload (shared with the FINN path).
+#[derive(Debug, Clone)]
+pub struct MatmulLayer {
+    pub name: String,
+    /// Output spatial positions (Ho*Wo).
+    pub m: u64,
+    /// Reduction depth (kh*kw*Cin).
+    pub k: u64,
+    /// Output channels.
+    pub n: u64,
+}
+
+/// Per-layer simulation breakdown.
+#[derive(Debug, Clone)]
+pub struct LayerTiming {
+    pub name: String,
+    pub compute_cycles: u64,
+    pub weight_dram_cycles: u64,
+    pub act_dram_cycles: u64,
+    pub total_cycles: u64,
+    pub dram_bytes: u64,
+}
+
+/// Whole-network result.
+#[derive(Debug, Clone)]
+pub struct SystolicResult {
+    pub layers: Vec<LayerTiming>,
+    pub total_cycles: u64,
+    pub total_dram_bytes: u64,
+    pub resources: Resources,
+}
+
+/// Simulate the sequential execution of all layers.
+pub fn simulate(cfg: &SystolicConfig, quant: &QuantConfig, layers: &[MatmulLayer]) -> SystolicResult {
+    let bytes_per_elem = (cfg.data_bits.max(quant.weight.bits as u64) as f64 / 8.0).ceil() as u64;
+    let mut out_layers = Vec::new();
+    let mut total = 0u64;
+    let mut total_dram = 0u64;
+
+    for layer in layers {
+        let tiles_k = layer.k.div_ceil(cfg.rows);
+        let tiles_n = layer.n.div_ceil(cfg.cols);
+        let n_tiles = tiles_k * tiles_n;
+
+        // Weight tile load: rows*cols elements over the DRAM port.
+        let w_tile_bytes = cfg.rows * cfg.cols * bytes_per_elem;
+        let w_cycles_per_tile =
+            cfg.dram_latency + (w_tile_bytes as f64 / cfg.dram_bytes_per_cycle).ceil() as u64;
+        let weight_dram_cycles = n_tiles * w_cycles_per_tile;
+
+        // Compute: M rows streamed through the array per tile, plus
+        // array fill/drain (rows + cols pipeline depth).
+        let compute_cycles =
+            n_tiles * (layer.m + cfg.rows + cfg.cols) + cfg.instr_overhead * n_tiles;
+
+        // Partial-sum traffic: every K-tile beyond the first re-reads and
+        // re-writes the M x N_tile accumulators through the local SRAM at
+        // one row per cycle (Tensil's accumulate instructions).
+        let partial_cycles = tiles_k.saturating_sub(1) * tiles_n * 2 * layer.m;
+
+        // Activations: read M*K once per K-tile-column sweep (input reuse
+        // across N tiles is limited by the local buffer), write M*N once.
+        let act_in_bytes = layer.m * layer.k * bytes_per_elem;
+        let reread = if act_in_bytes <= cfg.buffer_bytes {
+            1 // fits on-chip: single DRAM read
+        } else {
+            tiles_n.max(1) // must re-stream per output tile column
+        };
+        let act_bytes = act_in_bytes * reread + layer.m * layer.n * bytes_per_elem;
+        let act_dram_cycles = (act_bytes as f64 / cfg.dram_bytes_per_cycle).ceil() as u64
+            + cfg.dram_latency * (reread + 1);
+
+        // Sequential engine: DRAM phases and compute do not overlap
+        // (Table I: "Can be higher [latency] due to DRAM access
+        // overhead" — Tensil issues load/compute/store per instruction).
+        let total_cycles =
+            compute_cycles + partial_cycles + act_dram_cycles + weight_dram_cycles;
+        let dram_bytes = act_bytes + n_tiles * w_tile_bytes;
+
+        total += total_cycles;
+        total_dram += dram_bytes;
+        out_layers.push(LayerTiming {
+            name: layer.name.clone(),
+            compute_cycles,
+            weight_dram_cycles,
+            act_dram_cycles,
+            total_cycles,
+            dram_bytes,
+        });
+    }
+
+    SystolicResult {
+        layers: out_layers,
+        total_cycles: total,
+        total_dram_bytes: total_dram,
+        resources: resources(cfg),
+    }
+}
+
+/// Resource estimate for the systolic accelerator itself (independent of
+/// the model it runs — the array is a fixed engine, Table I).
+pub fn resources(cfg: &SystolicConfig) -> Resources {
+    let macs = (cfg.rows * cfg.cols) as f64;
+    let mut r = Resources::ZERO;
+    // One DSP48 per 16-bit MAC, plus ~15 in the DMA/post-processing path
+    // (the paper's Table III: 159 DSPs for PEFSL's 16-bit 12x12 build).
+    r.dsp = macs * (cfg.data_bits as f64 / 16.0).max(1.0).min(2.0) + 15.0;
+    // Control, AXI DMA engines, instruction decode.
+    r.lut = 9_000.0 + macs * 22.0 * (cfg.data_bits as f64 / 16.0);
+    r.ff = 5_500.0 + macs * 14.0;
+    // Local buffers (activations + accumulators), BRAM.
+    r.bram36 = bram36_for(cfg.buffer_bytes / 8, 64)
+        + bram36_for((cfg.rows * cfg.cols * 32) / 32, 32);
+    r
+}
+
+/// Extract matmul workloads from backbone layer metadata (shared with the
+/// FINN path so both simulators run the identical network).
+pub fn layers_from_meta(layers: &[crate::artifacts::LayerMeta], img: usize) -> Vec<MatmulLayer> {
+    let mut out = Vec::new();
+    let mut h = img as u64;
+    for l in layers {
+        out.push(MatmulLayer {
+            name: l.name.clone(),
+            m: h * h,
+            k: 9 * l.cin as u64,
+            n: l.cout as u64,
+        });
+        if l.pool {
+            h /= 2;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::baseline16_config;
+
+    fn tiny_layers() -> Vec<MatmulLayer> {
+        vec![
+            MatmulLayer {
+                name: "a".into(),
+                m: 1024,
+                k: 27,
+                n: 8,
+            },
+            MatmulLayer {
+                name: "b".into(),
+                m: 1024,
+                k: 72,
+                n: 16,
+            },
+        ]
+    }
+
+    #[test]
+    fn cycles_positive_and_sum() {
+        let cfg = SystolicConfig::tensil_pynq_z1();
+        let r = simulate(&cfg, &baseline16_config(), &tiny_layers());
+        assert_eq!(r.layers.len(), 2);
+        assert_eq!(
+            r.total_cycles,
+            r.layers.iter().map(|l| l.total_cycles).sum::<u64>()
+        );
+        assert!(r.total_dram_bytes > 0);
+    }
+
+    #[test]
+    fn bigger_array_fewer_compute_cycles() {
+        let small = SystolicConfig {
+            rows: 8,
+            cols: 8,
+            ..SystolicConfig::tensil_pynq_z1()
+        };
+        let big = SystolicConfig {
+            rows: 32,
+            cols: 32,
+            ..SystolicConfig::tensil_pynq_z1()
+        };
+        let quant = baseline16_config();
+        let layers = vec![MatmulLayer {
+            name: "x".into(),
+            m: 4096,
+            k: 256,
+            n: 256,
+        }];
+        let rs = simulate(&small, &quant, &layers);
+        let rb = simulate(&big, &quant, &layers);
+        assert!(
+            rb.layers[0].compute_cycles < rs.layers[0].compute_cycles,
+            "{} vs {}",
+            rb.layers[0].compute_cycles,
+            rs.layers[0].compute_cycles
+        );
+    }
+
+    #[test]
+    fn dram_traffic_includes_weights_every_tile() {
+        let cfg = SystolicConfig::tensil_pynq_z1();
+        let quant = baseline16_config();
+        let layers = vec![MatmulLayer {
+            name: "x".into(),
+            m: 16,
+            k: 64,
+            n: 64,
+        }];
+        let r = simulate(&cfg, &quant, &layers);
+        // 4 K-tiles x 4 N-tiles x 16x16x2 bytes of weights minimum.
+        assert!(r.layers[0].dram_bytes >= 16 * 64 * 64 / 16 * 2);
+        assert!(r.layers[0].weight_dram_cycles > 0);
+    }
+
+    #[test]
+    fn dsp_heavy_lut_light_vs_finn_shape() {
+        // Table III architecture shape: systolic uses many DSPs.
+        let r = resources(&SystolicConfig::tensil_pynq_z1());
+        assert!(r.dsp >= 128.0);
+        assert!(r.lut < 53_200.0 * 0.5); // well under half the device
+    }
+
+    #[test]
+    fn layers_from_meta_tracks_pooling() {
+        let metas = vec![
+            crate::artifacts::LayerMeta {
+                name: "stem".into(),
+                cin: 3,
+                cout: 8,
+                pool: false,
+                res_begin: false,
+                res_add: false,
+            },
+            crate::artifacts::LayerMeta {
+                name: "conv1".into(),
+                cin: 8,
+                cout: 16,
+                pool: true,
+                res_begin: false,
+                res_add: false,
+            },
+            crate::artifacts::LayerMeta {
+                name: "res1a".into(),
+                cin: 16,
+                cout: 16,
+                pool: false,
+                res_begin: true,
+                res_add: false,
+            },
+        ];
+        let ls = layers_from_meta(&metas, 32);
+        assert_eq!(ls[0].m, 1024);
+        assert_eq!(ls[1].m, 1024); // pool applies AFTER conv1
+        assert_eq!(ls[2].m, 256); // halved spatial
+        assert_eq!(ls[2].k, 144);
+    }
+}

@@ -1,0 +1,328 @@
+//! Small dense f32 tensor with shape/stride utilities.
+//!
+//! Deliberately minimal: the graph executor and hardware models need
+//! row-major storage, reshape/transpose, NCHW<->NHWC conversion and
+//! elementwise access — not a full ndarray library.
+
+use anyhow::{bail, Result};
+
+/// Row-major dense f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            bail!("shape {shape:?} wants {numel} elems, got {}", data.len());
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let numel = shape.iter().product();
+        Self {
+            shape,
+            data: vec![0.0; numel],
+        }
+    }
+
+    pub fn full(shape: Vec<usize>, value: f32) -> Self {
+        let numel = shape.iter().product();
+        Self {
+            shape,
+            data: vec![value; numel],
+        }
+    }
+
+    pub fn scalar(value: f32) -> Self {
+        Self {
+            shape: vec![],
+            data: vec![value],
+        }
+    }
+
+    pub fn from_fn(shape: Vec<usize>, mut f: impl FnMut(usize) -> f32) -> Self {
+        let numel: usize = shape.iter().product();
+        Self {
+            shape,
+            data: (0..numel).map(|i| f(i)).collect(),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Row-major strides for the current shape.
+    pub fn strides(&self) -> Vec<usize> {
+        strides_of(&self.shape)
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        if numel != self.data.len() {
+            bail!(
+                "reshape {:?} -> {shape:?} changes element count",
+                self.shape
+            );
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        let strides = self.strides();
+        for (i, &ix) in idx.iter().enumerate() {
+            debug_assert!(ix < self.shape[i]);
+            off += ix * strides[i];
+        }
+        self.data[off]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let mut off = 0;
+        let strides = self.strides();
+        for (i, &ix) in idx.iter().enumerate() {
+            off += ix * strides[i];
+        }
+        self.data[off] = v;
+    }
+
+    /// Generalized transpose: output axis i takes input axis `perm[i]`.
+    pub fn transpose(&self, perm: &[usize]) -> Result<Self> {
+        if perm.len() != self.shape.len() {
+            bail!("perm {perm:?} rank mismatch with {:?}", self.shape);
+        }
+        let mut seen = vec![false; perm.len()];
+        for &p in perm {
+            if p >= perm.len() || seen[p] {
+                bail!("bad permutation {perm:?}");
+            }
+            seen[p] = true;
+        }
+        let out_shape: Vec<usize> = perm.iter().map(|&p| self.shape[p]).collect();
+        let in_strides = self.strides();
+        let out_strides = strides_of(&out_shape);
+        let mut out = vec![0.0f32; self.data.len()];
+        // Iterate output linearly; map to input offset.
+        let rank = perm.len();
+        let mut idx = vec![0usize; rank];
+        for (o, slot) in out.iter_mut().enumerate() {
+            // Decompose o into output index.
+            let mut rem = o;
+            for d in 0..rank {
+                idx[d] = rem / out_strides[d];
+                rem %= out_strides[d];
+            }
+            let mut in_off = 0;
+            for d in 0..rank {
+                in_off += idx[d] * in_strides[perm[d]];
+            }
+            *slot = self.data[in_off];
+        }
+        Tensor::new(out_shape, out)
+    }
+
+    /// NCHW -> NHWC.
+    pub fn nchw_to_nhwc(&self) -> Result<Self> {
+        self.transpose(&[0, 2, 3, 1])
+    }
+
+    /// NHWC -> NCHW.
+    pub fn nhwc_to_nchw(&self) -> Result<Self> {
+        self.transpose(&[0, 3, 1, 2])
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Self {
+        Self {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Elementwise binary op with numpy-style broadcasting.
+    pub fn broadcast_with(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Self> {
+        let out_shape = broadcast_shape(&self.shape, &other.shape)?;
+        let rank = out_shape.len();
+        let a_shape = pad_shape(&self.shape, rank);
+        let b_shape = pad_shape(&other.shape, rank);
+        let a_str = broadcast_strides(&a_shape, &strides_of(&a_shape));
+        let b_str = broadcast_strides(&b_shape, &strides_of(&b_shape));
+        let out_strides = strides_of(&out_shape);
+        let numel: usize = out_shape.iter().product();
+        let mut out = vec![0.0f32; numel];
+        let mut idx = vec![0usize; rank];
+        for (o, slot) in out.iter_mut().enumerate() {
+            let mut rem = o;
+            for d in 0..rank {
+                idx[d] = rem / out_strides[d];
+                rem %= out_strides[d];
+            }
+            let mut ao = 0;
+            let mut bo = 0;
+            for d in 0..rank {
+                ao += if a_shape[d] == 1 { 0 } else { idx[d] } * a_str[d];
+                bo += if b_shape[d] == 1 { 0 } else { idx[d] } * b_str[d];
+            }
+            *slot = f(self.data[ao], other.data[bo]);
+        }
+        Tensor::new(out_shape, out)
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {
+        self.shape == other.shape && self.max_abs_diff(other) <= atol
+    }
+}
+
+pub fn strides_of(shape: &[usize]) -> Vec<usize> {
+    let mut strides = vec![1usize; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        strides[i] = strides[i + 1] * shape[i + 1];
+    }
+    strides
+}
+
+fn pad_shape(shape: &[usize], rank: usize) -> Vec<usize> {
+    let mut s = vec![1usize; rank - shape.len()];
+    s.extend_from_slice(shape);
+    s
+}
+
+fn broadcast_strides(shape: &[usize], strides: &[usize]) -> Vec<usize> {
+    shape
+        .iter()
+        .zip(strides)
+        .map(|(&s, &st)| if s == 1 { 0 } else { st })
+        .collect()
+}
+
+pub fn broadcast_shape(a: &[usize], b: &[usize]) -> Result<Vec<usize>> {
+    let rank = a.len().max(b.len());
+    let a = pad_shape(a, rank);
+    let b = pad_shape(b, rank);
+    let mut out = Vec::with_capacity(rank);
+    for (&x, &y) in a.iter().zip(&b) {
+        if x == y || x == 1 || y == 1 {
+            out.push(x.max(y));
+        } else {
+            bail!("cannot broadcast {a:?} with {b:?}");
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_element_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn strides_row_major() {
+        let t = Tensor::zeros(vec![2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn at_and_set() {
+        let mut t = Tensor::zeros(vec![2, 3]);
+        t.set(&[1, 2], 5.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+        assert_eq!(t.at(&[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn transpose_2d() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let tt = t.transpose(&[1, 0]).unwrap();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.data(), &[1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn transpose_round_trip_nchw_nhwc() {
+        let t = Tensor::from_fn(vec![1, 3, 4, 4], |i| i as f32);
+        let back = t.nchw_to_nhwc().unwrap().nhwc_to_nchw().unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn transpose_rejects_bad_perm() {
+        let t = Tensor::zeros(vec![2, 3]);
+        assert!(t.transpose(&[0, 0]).is_err());
+        assert!(t.transpose(&[0]).is_err());
+    }
+
+    #[test]
+    fn broadcast_scalar() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::scalar(10.0);
+        let c = a.broadcast_with(&b, |x, y| x * y).unwrap();
+        assert_eq!(c.data(), &[10., 20., 30., 40.]);
+    }
+
+    #[test]
+    fn broadcast_per_channel_bias_nchw() {
+        // [1,2,2,2] + [2,1,1] channel bias (as exported biases broadcast).
+        let a = Tensor::from_fn(vec![1, 2, 2, 2], |_| 0.0);
+        let b = Tensor::new(vec![2, 1, 1], vec![1.0, 2.0]).unwrap();
+        let c = a.broadcast_with(&b, |x, y| x + y).unwrap();
+        assert_eq!(c.shape(), &[1, 2, 2, 2]);
+        assert_eq!(c.data()[0..4], [1.0; 4]);
+        assert_eq!(c.data()[4..8], [2.0; 4]);
+    }
+
+    #[test]
+    fn broadcast_incompatible_fails() {
+        let a = Tensor::zeros(vec![2, 3]);
+        let b = Tensor::zeros(vec![2, 4]);
+        assert!(a.broadcast_with(&b, |x, _| x).is_err());
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let r = t.clone().reshape(vec![3, 2]).unwrap();
+        assert_eq!(r.data(), t.data());
+        assert!(t.reshape(vec![4, 2]).is_err());
+    }
+}

@@ -1,0 +1,360 @@
+//! "Convert to HW Layer" — map the streamlined NHWC graph onto FINN-style
+//! hardware layers (paper Fig. 3, Network Preparation's last step).
+//!
+//! Patterns handled (all NHWC after the §III-C passes):
+//!
+//! * `Im2Col`                              -> `ConvolutionInputGenerator` (SWG)
+//! * `MatMul -> Add(bias) -> MultiThreshold` -> `MVAU` (apply_act=1)
+//! * `MatMul -> Add(bias)`                 -> `MVAU` (apply_act=0, residual 2nd conv)
+//! * `MultiThreshold` (standalone)         -> `Thresholding`
+//! * `MaxPoolNHWC`                         -> `StreamingMaxPool`
+//! * `Add` (two streams)                   -> `AddStreams`
+//! * `GlobalAccPool`                       -> `GlobalAccPool_hw`
+//! * `Mul` (scalar, after GAP)             -> `ChannelwiseMul`
+//!
+//! Folding attributes (PE/SIMD) are initialized to 1 and later set by the
+//! folding search in [`crate::build`].
+
+use anyhow::Result;
+
+use super::Transform;
+use crate::graph::{AttrVal, Graph, Node};
+
+pub struct ConvertToHwLayers;
+
+impl ConvertToHwLayers {
+    /// MatMul (+bias Add) (+MultiThreshold) -> MVAU.
+    fn try_mvau(&self, graph: &mut Graph) -> Result<bool> {
+        for mm_idx in 0..graph.nodes.len() {
+            if graph.nodes[mm_idx].op != "MatMul" {
+                continue;
+            }
+            let mm_out = graph.nodes[mm_idx].outputs[0].clone();
+            let consumers = graph.consumers(&mm_out);
+            if consumers.len() != 1 || graph.nodes[consumers[0]].op != "Add" {
+                continue;
+            }
+            let add_idx = consumers[0];
+            // bias = the Add input that is an initializer.
+            let add = &graph.nodes[add_idx];
+            let bias = add
+                .inputs
+                .iter()
+                .find(|t| graph.is_initializer(t))
+                .cloned();
+            let Some(bias) = bias else { continue };
+            let add_out = graph.nodes[add_idx].outputs[0].clone();
+
+            let x = graph.nodes[mm_idx].inputs[0].clone();
+            let w = graph.nodes[mm_idx].inputs[1].clone();
+            let mm_name = graph.nodes[mm_idx].name.clone();
+            let base = mm_name.trim_end_matches("_matmul").to_string();
+
+            // Optional fused activation.
+            let add_consumers = graph.consumers(&add_out);
+            let fuse_mt = add_consumers.len() == 1
+                && graph.nodes[add_consumers[0]].op == "MultiThreshold"
+                && graph.nodes[add_consumers[0]]
+                    .attrs
+                    .str_or("data_layout", "NCHW")
+                    == "NHWC";
+
+            let (inputs, outputs, attrs, remove) = if fuse_mt {
+                let mt_idx = add_consumers[0];
+                let thresh = graph.nodes[mt_idx].inputs[1].clone();
+                let mt_out = graph.nodes[mt_idx].outputs[0].clone();
+                let mut attrs = graph.nodes[mt_idx].attrs.clone();
+                attrs.set("apply_act", AttrVal::Int(1));
+                attrs.set("data_layout", AttrVal::Str("NHWC".into()));
+                (
+                    vec![x, w, bias, thresh],
+                    vec![mt_out],
+                    attrs,
+                    vec![mm_idx, add_idx, mt_idx],
+                )
+            } else {
+                let mut attrs = crate::graph::Attrs::new();
+                attrs.set("apply_act", AttrVal::Int(0));
+                (
+                    vec![x, w, bias],
+                    vec![add_out.clone()],
+                    attrs,
+                    vec![mm_idx, add_idx],
+                )
+            };
+
+            let mut attrs = attrs;
+            attrs.set("pe", AttrVal::Int(1));
+            attrs.set("simd", AttrVal::Int(1));
+            let mvau = Node::new("MVAU", &format!("{base}_mvau"), inputs, outputs)
+                .with_attrs(attrs);
+            if fuse_mt {
+                graph.shapes.remove(&add_out);
+            }
+            graph.shapes.remove(&mm_out);
+            graph.remove_nodes(remove);
+            graph.nodes.push(mvau);
+            graph.toposort()?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Single-node renames: Im2Col->SWG, MaxPoolNHWC->StreamingMaxPool, ...
+    fn try_rename(&self, graph: &mut Graph) -> Result<bool> {
+        for idx in 0..graph.nodes.len() {
+            let new_op = match graph.nodes[idx].op.as_str() {
+                "Im2Col" => "ConvolutionInputGenerator",
+                "MaxPoolNHWC" => "StreamingMaxPool",
+                "GlobalAccPool" => "GlobalAccPool_hw",
+                _ => continue,
+            };
+            graph.nodes[idx].op = new_op.to_string();
+            if new_op == "ConvolutionInputGenerator" {
+                graph.nodes[idx].attrs.set("simd", AttrVal::Int(1));
+            }
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Standalone NHWC MultiThreshold -> Thresholding (input quantizer and
+    /// the post-residual quantizer).
+    fn try_thresholding(&self, graph: &mut Graph) -> Result<bool> {
+        for idx in 0..graph.nodes.len() {
+            if graph.nodes[idx].op != "MultiThreshold" {
+                continue;
+            }
+            if graph.nodes[idx].attrs.str_or("data_layout", "NCHW") != "NHWC" {
+                continue;
+            }
+            graph.nodes[idx].op = "Thresholding".to_string();
+            graph.nodes[idx].attrs.set("pe", AttrVal::Int(1));
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Stream-stream Add -> AddStreams; scalar Mul -> ChannelwiseMul.
+    fn try_eltwise(&self, graph: &mut Graph) -> Result<bool> {
+        for idx in 0..graph.nodes.len() {
+            match graph.nodes[idx].op.as_str() {
+                "Add" => {
+                    let any_init = graph.nodes[idx]
+                        .inputs
+                        .iter()
+                        .any(|t| graph.is_initializer(t));
+                    if !any_init {
+                        graph.nodes[idx].op = "AddStreams".to_string();
+                        return Ok(true);
+                    }
+                }
+                "Mul" => {
+                    let has_scalar_init = graph.nodes[idx].inputs.iter().any(|t| {
+                        graph
+                            .initializers
+                            .get(t)
+                            .map(|i| i.numel() == 1)
+                            .unwrap_or(false)
+                    });
+                    if has_scalar_init {
+                        graph.nodes[idx].op = "ChannelwiseMul".to_string();
+                        return Ok(true);
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(false)
+    }
+}
+
+impl Transform for ConvertToHwLayers {
+    fn name(&self) -> &'static str {
+        "ConvertToHwLayers"
+    }
+
+    fn apply(&self, graph: &mut Graph) -> Result<bool> {
+        if self.try_mvau(graph)? {
+            return Ok(true);
+        }
+        if self.try_thresholding(graph)? {
+            return Ok(true);
+        }
+        if self.try_rename(graph)? {
+            return Ok(true);
+        }
+        self.try_eltwise(graph)
+    }
+}
+
+/// Ops that constitute a fully HW-mapped dataflow graph (plus Transpose,
+/// which survives only as the single input layout conversion).
+pub const HW_OPS: &[&str] = &[
+    "ConvolutionInputGenerator",
+    "MVAU",
+    "Thresholding",
+    "StreamingMaxPool",
+    "GlobalAccPool_hw",
+    "AddStreams",
+    "ChannelwiseMul",
+];
+
+/// True when every compute node is a HW layer (the build pipeline's
+/// post-condition; the remaining Transpose is the host-side NCHW->NHWC
+/// conversion done during DMA, as in FINN's driver).
+pub fn is_fully_hw(graph: &Graph) -> bool {
+    graph
+        .nodes
+        .iter()
+        .all(|n| HW_OPS.contains(&n.op.as_str()) || n.op == "Transpose")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Attrs;
+    use crate::tensor::Tensor;
+    use crate::transforms::run_to_fixpoint;
+    use std::collections::HashMap;
+
+    /// NHWC: x -> MatMul(w) -> Add(b) -> MultiThreshold -> y
+    fn mvau_pattern() -> Graph {
+        let mut g = Graph::new("m");
+        g.inputs = vec!["x".into()];
+        g.outputs = vec!["y".into()];
+        g.shapes.insert("x".into(), vec![1, 2, 2, 3]);
+        g.shapes.insert("w".into(), vec![3, 4]);
+        g.shapes.insert("b".into(), vec![4]);
+        g.shapes.insert("mm".into(), vec![1, 2, 2, 4]);
+        g.shapes.insert("biased".into(), vec![1, 2, 2, 4]);
+        g.shapes.insert("thr".into(), vec![1, 3]);
+        g.shapes.insert("y".into(), vec![1, 2, 2, 4]);
+        let mut rng = crate::rng::Rng::new(14);
+        g.initializers
+            .insert("w".into(), Tensor::from_fn(vec![3, 4], |_| rng.normal()));
+        g.initializers
+            .insert("b".into(), Tensor::from_fn(vec![4], |_| rng.normal()));
+        g.initializers.insert(
+            "thr".into(),
+            Tensor::new(vec![1, 3], vec![0.25, 0.75, 1.25]).unwrap(),
+        );
+        g.nodes.push(Node::new(
+            "MatMul",
+            "l0_matmul",
+            vec!["x".into(), "w".into()],
+            vec!["mm".into()],
+        ));
+        g.nodes.push(Node::new(
+            "Add",
+            "l0_bias",
+            vec!["mm".into(), "b".into()],
+            vec!["biased".into()],
+        ));
+        g.nodes.push(
+            Node::new(
+                "MultiThreshold",
+                "l0_quant",
+                vec!["biased".into(), "thr".into()],
+                vec!["y".into()],
+            )
+            .with_attrs(
+                Attrs::new()
+                    .with("data_layout", AttrVal::Str("NHWC".into()))
+                    .with("out_scale", AttrVal::Float(0.25)),
+            ),
+        );
+        g
+    }
+
+    #[test]
+    fn fuses_matmul_bias_mt_into_mvau() {
+        let mut g = mvau_pattern();
+        let mut rng = crate::rng::Rng::new(31);
+        let mut feeds = HashMap::new();
+        feeds.insert(
+            "x".to_string(),
+            Tensor::from_fn(vec![1, 2, 2, 3], |_| rng.normal()),
+        );
+        let want = crate::ops::execute(&g, &feeds).unwrap()["y"].clone();
+        run_to_fixpoint(&mut g, &ConvertToHwLayers).unwrap();
+        assert_eq!(g.count_op("MVAU"), 1);
+        assert_eq!(g.count_op("MatMul"), 0);
+        assert_eq!(g.count_op("Add"), 0);
+        assert_eq!(g.count_op("MultiThreshold"), 0);
+        let mvau = g.nodes.iter().find(|n| n.op == "MVAU").unwrap();
+        assert_eq!(mvau.attrs.int("apply_act").unwrap(), 1);
+        assert_eq!(mvau.inputs.len(), 4);
+        let got = crate::ops::execute(&g, &feeds).unwrap()["y"].clone();
+        assert_eq!(got, want);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn matmul_bias_without_mt_becomes_raw_mvau() {
+        let mut g = mvau_pattern();
+        // Cut the MT off: route graph output from `biased`.
+        g.nodes.pop();
+        g.outputs = vec!["biased".into()];
+        g.shapes.remove(&"y".to_string());
+        let mut rng = crate::rng::Rng::new(32);
+        let mut feeds = HashMap::new();
+        feeds.insert(
+            "x".to_string(),
+            Tensor::from_fn(vec![1, 2, 2, 3], |_| rng.normal()),
+        );
+        let want = crate::ops::execute(&g, &feeds).unwrap()["biased"].clone();
+        run_to_fixpoint(&mut g, &ConvertToHwLayers).unwrap();
+        let mvau = g.nodes.iter().find(|n| n.op == "MVAU").unwrap();
+        assert_eq!(mvau.attrs.int("apply_act").unwrap(), 0);
+        assert_eq!(mvau.inputs.len(), 3);
+        let got = crate::ops::execute(&g, &feeds).unwrap()["biased"].clone();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn renames_and_hw_predicate() {
+        let mut g = Graph::new("r");
+        g.inputs = vec!["x".into()];
+        g.outputs = vec!["y".into()];
+        g.shapes.insert("x".into(), vec![1, 4, 4, 2]);
+        g.shapes.insert("p".into(), vec![1, 2, 2, 2]);
+        g.shapes.insert("y".into(), vec![1, 2]);
+        g.nodes.push(
+            Node::new("MaxPoolNHWC", "mp", vec!["x".into()], vec!["p".into()]).with_attrs(
+                Attrs::new()
+                    .with("kernel", AttrVal::Ints(vec![2, 2]))
+                    .with("stride", AttrVal::Ints(vec![2, 2])),
+            ),
+        );
+        g.nodes.push(Node::new(
+            "GlobalAccPool",
+            "gap",
+            vec!["p".into()],
+            vec!["y".into()],
+        ));
+        assert!(!is_fully_hw(&g));
+        run_to_fixpoint(&mut g, &ConvertToHwLayers).unwrap();
+        assert_eq!(g.count_op("StreamingMaxPool"), 1);
+        assert_eq!(g.count_op("GlobalAccPool_hw"), 1);
+        assert!(is_fully_hw(&g));
+    }
+
+    #[test]
+    fn stream_add_becomes_addstreams_but_bias_add_does_not() {
+        let mut g = Graph::new("a");
+        g.inputs = vec!["a".into(), "b".into()];
+        g.outputs = vec!["y".into()];
+        for t in ["a", "b", "y"] {
+            g.shapes.insert(t.into(), vec![1, 4]);
+        }
+        g.nodes.push(Node::new(
+            "Add",
+            "resadd",
+            vec!["a".into(), "b".into()],
+            vec!["y".into()],
+        ));
+        run_to_fixpoint(&mut g, &ConvertToHwLayers).unwrap();
+        assert_eq!(g.count_op("AddStreams"), 1);
+    }
+}

@@ -1,0 +1,228 @@
+//! ReduceMean -> GlobalAccPool conversion — the paper's §III-D
+//! contribution.
+//!
+//! The backbone's final layer is a spatial `reduce_mean`.  Neither Tensil
+//! nor FINN executes it directly; FINN's `GlobalAccPool` computes the
+//! cumulative *sum* over the spatial dims and — to avoid a hardware
+//! divider — the averaging is applied as a scalar `Mul` with 1/(H*W)
+//! afterwards.  This pass implements exactly that conversion, in both the
+//! post-lowering form (Transpose(NHWC->NCHW) -> ReduceMean) and the
+//! direct NCHW form (a leading Transpose is inserted).
+
+use anyhow::Result;
+
+use super::lower_conv::{TO_NCHW, TO_NHWC};
+use super::Transform;
+use crate::graph::{AttrVal, Attrs, Graph, Node};
+use crate::tensor::Tensor;
+
+pub struct ConvertReduceMeanToGap;
+
+impl Transform for ConvertReduceMeanToGap {
+    fn name(&self) -> &'static str {
+        "ConvertReduceMeanToGap"
+    }
+
+    fn apply(&self, graph: &mut Graph) -> Result<bool> {
+        for rm_idx in 0..graph.nodes.len() {
+            if graph.nodes[rm_idx].op != "ReduceMean" {
+                continue;
+            }
+            let axes = graph.nodes[rm_idx].attrs.ints("axes")?;
+            if axes != vec![2, 3] || graph.nodes[rm_idx].attrs.int_or("keepdims", 0) != 0 {
+                continue; // only the spatial NCHW form the backbone emits
+            }
+            let x = graph.nodes[rm_idx].inputs[0].clone();
+            let out = graph.nodes[rm_idx].outputs[0].clone();
+            let rm_name = graph.nodes[rm_idx].name.clone();
+
+            // If the input is produced by a NHWC->NCHW Transpose feeding
+            // only us, absorb it; otherwise insert our own conversion.
+            let producer = graph.producer(&x);
+            let (nhwc_src, remove_also) = match producer {
+                Some(p_idx)
+                    if graph.nodes[p_idx].op == "Transpose"
+                        && graph.nodes[p_idx].attrs.ints("perm").ok().as_deref()
+                            == Some(&TO_NCHW)
+                        && graph.consumers(&x).len() == 1 =>
+                {
+                    (graph.nodes[p_idx].inputs[0].clone(), Some(p_idx))
+                }
+                _ => {
+                    let nchw = graph.shape_of(&x)?.to_vec();
+                    let nhwc: Vec<usize> =
+                        TO_NHWC.iter().map(|&p| nchw[p as usize]).collect();
+                    let t_out = graph.fresh_tensor(&format!("{rm_name}_nhwc_in"), nhwc);
+                    graph.nodes.push(
+                        Node::new(
+                            "Transpose",
+                            &format!("{rm_name}_to_nhwc"),
+                            vec![x.clone()],
+                            vec![t_out.clone()],
+                        )
+                        .with_attrs(
+                            Attrs::new().with("perm", AttrVal::Ints(TO_NHWC.to_vec())),
+                        ),
+                    );
+                    (t_out, None)
+                }
+            };
+
+            let nhwc_shape = graph.shape_of(&nhwc_src)?.to_vec();
+            let (n, h, w, c) = (nhwc_shape[0], nhwc_shape[1], nhwc_shape[2], nhwc_shape[3]);
+            let acc = graph.fresh_tensor(&format!("{rm_name}_acc"), vec![n, c]);
+            let scale_name = graph.fresh_tensor(&format!("{rm_name}_inv_hw"), vec![]);
+            graph
+                .initializers
+                .insert(scale_name.clone(), Tensor::scalar(1.0 / (h * w) as f32));
+
+            let gap = Node::new(
+                "GlobalAccPool",
+                &format!("{rm_name}_accpool"),
+                vec![nhwc_src],
+                vec![acc.clone()],
+            );
+            // "The averaging is then achieved by applying scalar
+            // multiplication through a Mul node" (§III-D).
+            let mul = Node::new(
+                "Mul",
+                &format!("{rm_name}_avg"),
+                vec![acc, scale_name],
+                vec![out],
+            );
+
+            let mut to_remove = vec![rm_idx];
+            if let Some(p) = remove_also {
+                to_remove.push(p);
+                graph.shapes.remove(&x);
+            }
+            graph.remove_nodes(to_remove);
+            graph.nodes.push(gap);
+            graph.nodes.push(mul);
+            graph.toposort()?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transforms::run_to_fixpoint;
+    use std::collections::HashMap;
+
+    fn feeds() -> HashMap<String, Tensor> {
+        let mut rng = crate::rng::Rng::new(21);
+        let mut f = HashMap::new();
+        f.insert(
+            "x".to_string(),
+            Tensor::from_fn(vec![1, 3, 4, 4], |_| rng.normal()),
+        );
+        f
+    }
+
+    #[test]
+    fn direct_nchw_reduce_mean_converted() {
+        let mut g = Graph::new("g");
+        g.inputs = vec!["x".into()];
+        g.outputs = vec!["y".into()];
+        g.shapes.insert("x".into(), vec![1, 3, 4, 4]);
+        g.shapes.insert("y".into(), vec![1, 3]);
+        g.nodes.push(
+            Node::new("ReduceMean", "gap", vec!["x".into()], vec!["y".into()]).with_attrs(
+                Attrs::new()
+                    .with("axes", AttrVal::Ints(vec![2, 3]))
+                    .with("keepdims", AttrVal::Int(0)),
+            ),
+        );
+        let f = feeds();
+        let want = crate::ops::execute(&g, &f).unwrap()["y"].clone();
+        let n = run_to_fixpoint(&mut g, &ConvertReduceMeanToGap).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(g.count_op("ReduceMean"), 0);
+        assert_eq!(g.count_op("GlobalAccPool"), 1);
+        assert_eq!(g.count_op("Mul"), 1);
+        let got = crate::ops::execute(&g, &f).unwrap()["y"].clone();
+        assert!(got.allclose(&want, 1e-5));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn absorbs_preceding_transpose() {
+        // NHWC stream -> Transpose(NCHW) -> ReduceMean: the transpose is
+        // consumed by the conversion (no extra layout node remains).
+        let mut g = Graph::new("g");
+        g.inputs = vec!["x".into()];
+        g.outputs = vec!["y".into()];
+        g.shapes.insert("x".into(), vec![1, 4, 4, 3]);
+        g.shapes.insert("xt".into(), vec![1, 3, 4, 4]);
+        g.shapes.insert("y".into(), vec![1, 3]);
+        g.nodes.push(
+            Node::new("Transpose", "t", vec!["x".into()], vec!["xt".into()])
+                .with_attrs(Attrs::new().with("perm", AttrVal::Ints(TO_NCHW.to_vec()))),
+        );
+        g.nodes.push(
+            Node::new("ReduceMean", "gap", vec!["xt".into()], vec!["y".into()]).with_attrs(
+                Attrs::new()
+                    .with("axes", AttrVal::Ints(vec![2, 3]))
+                    .with("keepdims", AttrVal::Int(0)),
+            ),
+        );
+        let mut rng = crate::rng::Rng::new(2);
+        let mut f = HashMap::new();
+        f.insert(
+            "x".to_string(),
+            Tensor::from_fn(vec![1, 4, 4, 3], |_| rng.normal()),
+        );
+        let want = crate::ops::execute(&g, &f).unwrap()["y"].clone();
+        run_to_fixpoint(&mut g, &ConvertReduceMeanToGap).unwrap();
+        assert_eq!(g.count_op("Transpose"), 0);
+        assert_eq!(g.count_op("GlobalAccPool"), 1);
+        let got = crate::ops::execute(&g, &f).unwrap()["y"].clone();
+        assert!(got.allclose(&want, 1e-5));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn gap_mul_scale_is_inv_hw() {
+        let mut g = Graph::new("g");
+        g.inputs = vec!["x".into()];
+        g.outputs = vec!["y".into()];
+        g.shapes.insert("x".into(), vec![1, 3, 4, 4]);
+        g.shapes.insert("y".into(), vec![1, 3]);
+        g.nodes.push(
+            Node::new("ReduceMean", "gap", vec!["x".into()], vec!["y".into()]).with_attrs(
+                Attrs::new()
+                    .with("axes", AttrVal::Ints(vec![2, 3]))
+                    .with("keepdims", AttrVal::Int(0)),
+            ),
+        );
+        run_to_fixpoint(&mut g, &ConvertReduceMeanToGap).unwrap();
+        let scale = g
+            .initializers
+            .iter()
+            .find(|(k, _)| k.contains("inv_hw"))
+            .unwrap()
+            .1;
+        assert_eq!(scale.data()[0], 1.0 / 16.0);
+    }
+
+    #[test]
+    fn non_spatial_reduce_mean_untouched() {
+        let mut g = Graph::new("g");
+        g.inputs = vec!["x".into()];
+        g.outputs = vec!["y".into()];
+        g.shapes.insert("x".into(), vec![1, 3, 4, 4]);
+        g.shapes.insert("y".into(), vec![1, 4, 4]);
+        g.nodes.push(
+            Node::new("ReduceMean", "rm", vec!["x".into()], vec!["y".into()]).with_attrs(
+                Attrs::new()
+                    .with("axes", AttrVal::Ints(vec![1]))
+                    .with("keepdims", AttrVal::Int(0)),
+            ),
+        );
+        let n = run_to_fixpoint(&mut g, &ConvertReduceMeanToGap).unwrap();
+        assert_eq!(n, 0);
+    }
+}

@@ -1,0 +1,224 @@
+//! Conv lowering — FINN's "Convert to HW Layer" prerequisite (Fig. 3).
+//!
+//! Each NCHW `Conv` becomes the NHWC stream form the FINN HLS library
+//! executes:
+//!
+//! ```text
+//! Transpose(NCHW->NHWC) -> Im2Col -> MatMul(W_km) -> Add(bias)
+//!     -> Transpose(NHWC->NCHW)
+//! ```
+//!
+//! The weight initializer is re-laid-out from OIHW to a K x O matrix with
+//! (dy, dx, cin)-major K — the same ordering as the Pallas kernel's
+//! im2col (python/compile/kernels/ref.py), so all three layers agree on
+//! the weight stream.
+//!
+//! The trailing Transpose is precisely the node §III-C is about: it lands
+//! in front of the next MultiThreshold and must be absorbed
+//! ([`super::transpose_opt::AbsorbTransposeIntoMultiThreshold`]) for the
+//! MVAU weight mapping to be correct (paper Fig. 4).
+
+use anyhow::{bail, Result};
+
+use super::Transform;
+use crate::graph::{AttrVal, Attrs, Graph, Node};
+
+pub const TO_NHWC: [i64; 4] = [0, 2, 3, 1];
+pub const TO_NCHW: [i64; 4] = [0, 3, 1, 2];
+
+pub struct LowerConvToMatMul;
+
+impl Transform for LowerConvToMatMul {
+    fn name(&self) -> &'static str {
+        "LowerConvToMatMul"
+    }
+
+    fn apply(&self, graph: &mut Graph) -> Result<bool> {
+        for idx in 0..graph.nodes.len() {
+            if graph.nodes[idx].op != "Conv" {
+                continue;
+            }
+            let node = graph.nodes[idx].clone();
+            if node.attrs.int_or("group", 1) != 1 {
+                bail!("grouped conv not supported by lowering");
+            }
+            let kernel = node.attrs.ints("kernel")?;
+            let stride = node.attrs.ints("stride")?;
+            let pad = node.attrs.ints("pad")?;
+            let x = node.inputs[0].clone();
+            let w_name = node.inputs[1].clone();
+            let bias = node.inputs.get(2).cloned();
+            let y = node.outputs[0].clone();
+
+            let x_shape = graph.shape_of(&x)?.to_vec();
+            let y_shape = graph.shape_of(&y)?.to_vec();
+            let [n, cin, h, wdim] = [x_shape[0], x_shape[1], x_shape[2], x_shape[3]];
+            let [cout, ho, wo] = [y_shape[1], y_shape[2], y_shape[3]];
+            let (kh, kw) = (kernel[0] as usize, kernel[1] as usize);
+            let k = kh * kw * cin;
+
+            // Re-layout the weight: OIHW -> (dy, dx, cin)-major [K, O].
+            let w_oihw = graph
+                .initializers
+                .get(&w_name)
+                .ok_or_else(|| anyhow::anyhow!("conv weight {w_name} must be an initializer"))?
+                .clone();
+            let w_km = w_oihw
+                .transpose(&[2, 3, 1, 0])? // OIHW -> (kh, kw, cin, cout)
+                .reshape(vec![k, cout])?;
+            let w_mat_name = graph.fresh_tensor(&format!("{}_wmat", node.name), vec![k, cout]);
+            graph.initializers.insert(w_mat_name.clone(), w_km);
+
+            // Intermediate tensors.
+            let x_nhwc = graph.fresh_tensor(&format!("{}_nhwc", node.name), vec![n, h, wdim, cin]);
+            let cols = graph.fresh_tensor(&format!("{}_cols", node.name), vec![n, ho, wo, k]);
+            let mm = graph.fresh_tensor(&format!("{}_mm", node.name), vec![n, ho, wo, cout]);
+            let pre_t = graph.fresh_tensor(&format!("{}_biased", node.name), vec![n, ho, wo, cout]);
+
+            let mut new_nodes = vec![
+                Node::new(
+                    "Transpose",
+                    &format!("{}_to_nhwc", node.name),
+                    vec![x],
+                    vec![x_nhwc.clone()],
+                )
+                .with_attrs(Attrs::new().with("perm", AttrVal::Ints(TO_NHWC.to_vec()))),
+                Node::new(
+                    "Im2Col",
+                    &format!("{}_im2col", node.name),
+                    vec![x_nhwc],
+                    vec![cols.clone()],
+                )
+                .with_attrs(
+                    Attrs::new()
+                        .with("kernel", AttrVal::Ints(kernel.clone()))
+                        .with("stride", AttrVal::Ints(stride.clone()))
+                        .with("pad", AttrVal::Ints(pad.clone())),
+                ),
+                Node::new(
+                    "MatMul",
+                    &format!("{}_matmul", node.name),
+                    vec![cols, w_mat_name],
+                    vec![mm.clone()],
+                ),
+            ];
+            let last_nhwc = if let Some(bias) = bias {
+                new_nodes.push(Node::new(
+                    "Add",
+                    &format!("{}_bias", node.name),
+                    vec![mm, bias],
+                    vec![pre_t.clone()],
+                ));
+                pre_t
+            } else {
+                graph.shapes.remove(&pre_t);
+                mm
+            };
+            new_nodes.push(
+                Node::new(
+                    "Transpose",
+                    &format!("{}_to_nchw", node.name),
+                    vec![last_nhwc],
+                    vec![y],
+                )
+                .with_attrs(Attrs::new().with("perm", AttrVal::Ints(TO_NCHW.to_vec()))),
+            );
+
+            // Drop the old weight initializer if nothing else reads it.
+            graph.remove_nodes(vec![idx]);
+            if graph.consumers(&w_name).is_empty() {
+                graph.initializers.remove(&w_name);
+                graph.shapes.remove(&w_name);
+            }
+            graph.nodes.extend(new_nodes);
+            graph.toposort()?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::transforms::run_to_fixpoint;
+    use std::collections::HashMap;
+
+    fn conv_graph() -> Graph {
+        let mut g = Graph::new("c");
+        g.inputs = vec!["x".into()];
+        g.outputs = vec!["y".into()];
+        g.shapes.insert("x".into(), vec![1, 3, 6, 6]);
+        g.shapes.insert("w".into(), vec![4, 3, 3, 3]);
+        g.shapes.insert("b".into(), vec![4]);
+        g.shapes.insert("y".into(), vec![1, 4, 6, 6]);
+        let mut rng = crate::rng::Rng::new(5);
+        g.initializers.insert(
+            "w".into(),
+            Tensor::from_fn(vec![4, 3, 3, 3], |_| rng.normal()),
+        );
+        g.initializers
+            .insert("b".into(), Tensor::from_fn(vec![4], |_| rng.normal()));
+        g.nodes.push(
+            Node::new("Conv", "conv0", vec!["x".into(), "w".into(), "b".into()], vec!["y".into()])
+                .with_attrs(
+                    Attrs::new()
+                        .with("kernel", AttrVal::Ints(vec![3, 3]))
+                        .with("stride", AttrVal::Ints(vec![1, 1]))
+                        .with("pad", AttrVal::Ints(vec![1, 1]))
+                        .with("group", AttrVal::Int(1)),
+                ),
+        );
+        g
+    }
+
+    #[test]
+    fn lowering_preserves_conv_semantics() {
+        let mut g = conv_graph();
+        let mut rng = crate::rng::Rng::new(9);
+        let mut feeds = HashMap::new();
+        feeds.insert(
+            "x".to_string(),
+            Tensor::from_fn(vec![1, 3, 6, 6], |_| rng.normal()),
+        );
+        let want = crate::ops::execute(&g, &feeds).unwrap()["y"].clone();
+        let n = run_to_fixpoint(&mut g, &LowerConvToMatMul).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(g.count_op("Conv"), 0);
+        assert_eq!(g.count_op("Transpose"), 2);
+        assert_eq!(g.count_op("Im2Col"), 1);
+        assert_eq!(g.count_op("MatMul"), 1);
+        assert_eq!(g.count_op("Add"), 1);
+        let got = crate::ops::execute(&g, &feeds).unwrap()["y"].clone();
+        assert!(
+            got.allclose(&want, 1e-4),
+            "max diff {}",
+            got.max_abs_diff(&want)
+        );
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn weight_matrix_shape_and_old_weight_removed() {
+        let mut g = conv_graph();
+        run_to_fixpoint(&mut g, &LowerConvToMatMul).unwrap();
+        assert!(!g.initializers.contains_key("w"));
+        let wmat = g
+            .initializers
+            .iter()
+            .find(|(k, _)| k.contains("wmat"))
+            .unwrap()
+            .1;
+        assert_eq!(wmat.shape(), &[27, 4]);
+    }
+
+    #[test]
+    fn bias_free_conv_lowered_without_add() {
+        let mut g = conv_graph();
+        g.nodes[0].inputs.truncate(2);
+        run_to_fixpoint(&mut g, &LowerConvToMatMul).unwrap();
+        assert_eq!(g.count_op("Add"), 0);
+        g.validate().unwrap();
+    }
+}

@@ -1,0 +1,161 @@
+//! Graph transformation passes — the rust re-implementation of FINN's
+//! "Network Preparation" phase (paper Fig. 3), including the paper's two
+//! custom contributions:
+//!
+//! * [`transpose_opt::AbsorbTransposeIntoMultiThreshold`] — §III-C /
+//!   Fig. 4: merge the NHWC->NCHW Transpose that conv lowering inserts
+//!   into the following MultiThreshold (re-typed to NHWC) and re-insert
+//!   the Transpose after it, so the weight stream maps correctly onto the
+//!   MVAU.
+//! * [`gap::ConvertReduceMeanToGap`] — §III-D: replace the backbone's
+//!   final spatial `reduce_mean` with `GlobalAccPool` (cumulative sum)
+//!   followed by a scalar `Mul` with 1/(H*W), avoiding a division unit.
+//!
+//! Every pass implements [`Transform`]: a semantics-preserving rewrite
+//! returning whether it changed the graph.  [`apply_pipeline`] runs a
+//! stage list to fixpoint, optionally checking numerical equivalence
+//! after every stage (ops::execute on a probe input) — the FINN
+//! methodology, mechanized.
+
+pub mod convert_to_hw;
+pub mod gap;
+pub mod lower_conv;
+pub mod streamline;
+pub mod transpose_opt;
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::graph::Graph;
+use crate::ops;
+use crate::tensor::Tensor;
+
+/// A semantics-preserving graph rewrite.
+pub trait Transform {
+    fn name(&self) -> &'static str;
+
+    /// Apply once; return true if the graph changed.
+    fn apply(&self, graph: &mut Graph) -> Result<bool>;
+}
+
+/// Run one transform to fixpoint; returns number of applications.
+pub fn run_to_fixpoint(graph: &mut Graph, t: &dyn Transform) -> Result<usize> {
+    let mut n = 0;
+    loop {
+        if !t.apply(graph)? {
+            break;
+        }
+        n += 1;
+        if n > 10_000 {
+            bail!("transform {} does not converge", t.name());
+        }
+    }
+    graph.toposort()?;
+    Ok(n)
+}
+
+/// One log entry per stage of a pipeline run.
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    pub transform: String,
+    pub applications: usize,
+    pub nodes_after: usize,
+    pub max_divergence: Option<f32>,
+}
+
+/// Apply a list of transforms in order (each to fixpoint).
+///
+/// When `probe` is given, the graph is executed after every stage and the
+/// outputs compared against the pre-pipeline reference; any divergence
+/// greater than `tol` aborts — a transform broke semantics.
+pub fn apply_pipeline(
+    graph: &mut Graph,
+    transforms: &[&dyn Transform],
+    probe: Option<&HashMap<String, Tensor>>,
+    tol: f32,
+) -> Result<Vec<StageReport>> {
+    let reference = match probe {
+        Some(feeds) => Some(ops::execute(graph, feeds)?),
+        None => None,
+    };
+    let mut reports = Vec::new();
+    for t in transforms {
+        let n = run_to_fixpoint(graph, *t)?;
+        let mut max_div = None;
+        if let (Some(feeds), Some(want)) = (probe, reference.as_ref()) {
+            let got = ops::execute(graph, feeds)
+                .map_err(|e| anyhow::anyhow!("after {}: {e}", t.name()))?;
+            let mut stage_max = 0.0f32;
+            for (name, w) in want {
+                let g = &got[name];
+                if g.shape() != w.shape() {
+                    bail!(
+                        "transform {} changed output {name} shape {:?} -> {:?}",
+                        t.name(),
+                        w.shape(),
+                        g.shape()
+                    );
+                }
+                stage_max = stage_max.max(g.max_abs_diff(w));
+            }
+            if stage_max > tol {
+                bail!(
+                    "transform {} diverged: max |diff| = {stage_max} > {tol}",
+                    t.name()
+                );
+            }
+            max_div = Some(stage_max);
+        }
+        graph.validate()?;
+        reports.push(StageReport {
+            transform: t.name().to_string(),
+            applications: n,
+            nodes_after: graph.nodes.len(),
+            max_divergence: max_div,
+        });
+    }
+    Ok(reports)
+}
+
+/// The full build pipeline in FINN order: streamline -> lower convs ->
+/// transpose optimization (§III-C) -> GAP conversion (§III-D) -> HW
+/// mapping.  This is what `build::DesignEnvironment` runs.
+pub fn default_pipeline() -> Vec<Box<dyn Transform>> {
+    vec![
+        Box::new(streamline::CollapseMulIntoMultiThreshold),
+        Box::new(streamline::CollapseRepeatedMul),
+        Box::new(streamline::RemoveIdentityMul),
+        Box::new(lower_conv::LowerConvToMatMul),
+        Box::new(transpose_opt::AbsorbTransposeIntoMultiThreshold),
+        Box::new(transpose_opt::MoveTransposePastMultiThreshold),
+        Box::new(transpose_opt::MoveTransposePastMaxPool),
+        Box::new(transpose_opt::MoveTransposePastEltwiseAdd),
+        Box::new(transpose_opt::ComposeAdjacentTransposes),
+        Box::new(transpose_opt::RemoveIdentityTranspose),
+        Box::new(streamline::DeadNodeElimination),
+        // A second round: moving transposes exposes new cancellations.
+        Box::new(transpose_opt::AbsorbTransposeIntoMultiThreshold),
+        Box::new(transpose_opt::MoveTransposePastMaxPool),
+        Box::new(transpose_opt::MoveTransposePastEltwiseAdd),
+        Box::new(transpose_opt::ComposeAdjacentTransposes),
+        Box::new(transpose_opt::RemoveIdentityTranspose),
+        Box::new(gap::ConvertReduceMeanToGap),
+        Box::new(transpose_opt::ComposeAdjacentTransposes),
+        Box::new(transpose_opt::RemoveIdentityTranspose),
+        Box::new(streamline::DeadNodeElimination),
+        Box::new(convert_to_hw::ConvertToHwLayers),
+        Box::new(streamline::DeadNodeElimination),
+    ]
+}
+
+/// Run the default pipeline with optional equivalence probing.
+pub fn run_default_pipeline(
+    graph: &mut Graph,
+    probe: Option<&HashMap<String, Tensor>>,
+    tol: f32,
+) -> Result<Vec<StageReport>> {
+    let pipeline = default_pipeline();
+    let refs: Vec<&dyn Transform> = pipeline.iter().map(|b| b.as_ref()).collect();
+    apply_pipeline(graph, &refs, probe, tol)
+}

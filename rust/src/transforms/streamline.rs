@@ -1,0 +1,328 @@
+//! Streamlining passes (FINN's "Streamline" step, paper Fig. 3).
+//!
+//! These collapse the float scale factors the quantized export leaves
+//! behind (MultiThreshold -> Mul chains) into MultiThreshold attributes,
+//! so the later HW conversion sees pure integer-threshold units — exactly
+//! what FINN's streamlining does before MVAU mapping.
+
+use anyhow::Result;
+
+use super::Transform;
+use crate::graph::{AttrVal, Graph};
+
+/// Get the scalar value of an initializer tensor if it is one element.
+fn scalar_init(graph: &Graph, tensor: &str) -> Option<f32> {
+    let t = graph.initializers.get(tensor)?;
+    if t.numel() == 1 {
+        Some(t.data()[0])
+    } else {
+        None
+    }
+}
+
+/// `MultiThreshold -> Mul(scalar)` ==> MultiThreshold with scaled
+/// out_scale/out_bias.  (FINN: AbsorbMulIntoMultiThreshold.)
+pub struct CollapseMulIntoMultiThreshold;
+
+impl Transform for CollapseMulIntoMultiThreshold {
+    fn name(&self) -> &'static str {
+        "CollapseMulIntoMultiThreshold"
+    }
+
+    fn apply(&self, graph: &mut Graph) -> Result<bool> {
+        for mt_idx in 0..graph.nodes.len() {
+            if graph.nodes[mt_idx].op != "MultiThreshold" {
+                continue;
+            }
+            let mt_out = graph.nodes[mt_idx].outputs[0].clone();
+            let consumers = graph.consumers(&mt_out);
+            if consumers.len() != 1 {
+                continue;
+            }
+            let mul_idx = consumers[0];
+            if graph.nodes[mul_idx].op != "Mul" {
+                continue;
+            }
+            // Which input is the scalar?
+            let mul = &graph.nodes[mul_idx];
+            let other: Vec<&String> = mul.inputs.iter().filter(|i| **i != mt_out).collect();
+            if other.len() != 1 {
+                continue;
+            }
+            let Some(scale) = scalar_init(graph, other[0]) else {
+                continue;
+            };
+            let mul_out = graph.nodes[mul_idx].outputs[0].clone();
+            // Fold: out = scale * (s*q + b) = (scale*s) q + scale*b.
+            let s = graph.nodes[mt_idx].attrs.float_or("out_scale", 1.0);
+            let b = graph.nodes[mt_idx].attrs.float_or("out_bias", 0.0);
+            graph.nodes[mt_idx]
+                .attrs
+                .set("out_scale", AttrVal::Float(s * scale as f64));
+            graph.nodes[mt_idx]
+                .attrs
+                .set("out_bias", AttrVal::Float(b * scale as f64));
+            graph.nodes[mt_idx].outputs[0] = mul_out;
+            graph.remove_nodes(vec![mul_idx]);
+            // mt_out tensor is now orphaned; drop its shape entry.
+            graph.shapes.remove(&mt_out);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+}
+
+/// `Mul(scalar) -> Mul(scalar)` ==> single Mul with the product.
+pub struct CollapseRepeatedMul;
+
+impl Transform for CollapseRepeatedMul {
+    fn name(&self) -> &'static str {
+        "CollapseRepeatedMul"
+    }
+
+    fn apply(&self, graph: &mut Graph) -> Result<bool> {
+        for i in 0..graph.nodes.len() {
+            if graph.nodes[i].op != "Mul" {
+                continue;
+            }
+            let out1 = graph.nodes[i].outputs[0].clone();
+            let consumers = graph.consumers(&out1);
+            if consumers.len() != 1 || graph.nodes[consumers[0]].op != "Mul" {
+                continue;
+            }
+            let j = consumers[0];
+            let s1 = graph.nodes[i]
+                .inputs
+                .iter()
+                .find_map(|t| scalar_init(graph, t));
+            let s2 = graph.nodes[j]
+                .inputs
+                .iter()
+                .find_map(|t| scalar_init(graph, t));
+            let (Some(s1), Some(s2)) = (s1, s2) else {
+                continue;
+            };
+            // Data input of the first Mul.
+            let data_in = graph.nodes[i]
+                .inputs
+                .iter()
+                .find(|t| scalar_init(graph, t).is_none())
+                .cloned();
+            let Some(data_in) = data_in else { continue };
+            let out2 = graph.nodes[j].outputs[0].clone();
+            let combined = graph.fresh_tensor("mul_scale", vec![]);
+            graph
+                .initializers
+                .insert(combined.clone(), crate::tensor::Tensor::scalar(s1 * s2));
+            let node = &mut graph.nodes[i];
+            node.inputs = vec![data_in, combined];
+            node.outputs = vec![out2];
+            graph.remove_nodes(vec![j]);
+            graph.shapes.remove(&out1);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+}
+
+/// Remove `Mul` by exactly 1.0.
+pub struct RemoveIdentityMul;
+
+impl Transform for RemoveIdentityMul {
+    fn name(&self) -> &'static str {
+        "RemoveIdentityMul"
+    }
+
+    fn apply(&self, graph: &mut Graph) -> Result<bool> {
+        for i in 0..graph.nodes.len() {
+            if graph.nodes[i].op != "Mul" {
+                continue;
+            }
+            let scalar = graph.nodes[i]
+                .inputs
+                .iter()
+                .find_map(|t| scalar_init(graph, t).map(|s| (t.clone(), s)));
+            let Some((_, s)) = scalar else { continue };
+            if s != 1.0 {
+                continue;
+            }
+            let data_in = graph.nodes[i]
+                .inputs
+                .iter()
+                .find(|t| scalar_init(graph, t).is_none())
+                .cloned();
+            let Some(data_in) = data_in else { continue };
+            let out = graph.nodes[i].outputs[0].clone();
+            if graph.outputs.contains(&out) {
+                continue; // keep graph output names stable
+            }
+            for c in graph.consumers(&out) {
+                for input in &mut graph.nodes[c].inputs {
+                    if *input == out {
+                        *input = data_in.clone();
+                    }
+                }
+            }
+            graph.remove_nodes(vec![i]);
+            graph.shapes.remove(&out);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+}
+
+/// Remove nodes whose outputs nobody consumes (and that aren't graph
+/// outputs) — transposes orphaned by the §III-C rewrites, dead scale
+/// initializer chains, etc.
+pub struct DeadNodeElimination;
+
+impl Transform for DeadNodeElimination {
+    fn name(&self) -> &'static str {
+        "DeadNodeElimination"
+    }
+
+    fn apply(&self, graph: &mut Graph) -> Result<bool> {
+        for i in 0..graph.nodes.len() {
+            let dead = graph.nodes[i].outputs.iter().all(|out| {
+                !graph.outputs.contains(out) && graph.consumers(out).is_empty()
+            });
+            if dead {
+                for out in graph.nodes[i].outputs.clone() {
+                    graph.shapes.remove(&out);
+                }
+                graph.remove_nodes(vec![i]);
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Attrs, Node};
+    use crate::tensor::Tensor;
+    use crate::transforms::run_to_fixpoint;
+    use std::collections::HashMap;
+
+    /// MT -> Mul -> out graph with given scale.
+    fn mt_mul_graph(scale: f32) -> Graph {
+        let mut g = Graph::new("t");
+        g.inputs = vec!["x".into()];
+        g.outputs = vec!["y".into()];
+        g.shapes.insert("x".into(), vec![1, 4]);
+        g.shapes.insert("t".into(), vec![1, 3]);
+        g.shapes.insert("q".into(), vec![1, 4]);
+        g.shapes.insert("s".into(), vec![]);
+        g.shapes.insert("y".into(), vec![1, 4]);
+        g.initializers.insert(
+            "t".into(),
+            Tensor::new(vec![1, 3], vec![0.5, 1.5, 2.5]).unwrap(),
+        );
+        g.initializers.insert("s".into(), Tensor::scalar(scale));
+        g.nodes.push(
+            Node::new("MultiThreshold", "mt", vec!["x".into(), "t".into()], vec!["q".into()])
+                .with_attrs(Attrs::new().with("data_layout", crate::graph::AttrVal::Str("NC".into()))),
+        );
+        g.nodes
+            .push(Node::new("Mul", "mul", vec!["q".into(), "s".into()], vec!["y".into()]));
+        g
+    }
+
+    fn run(g: &Graph) -> Vec<f32> {
+        let mut feeds = HashMap::new();
+        feeds.insert(
+            "x".to_string(),
+            Tensor::new(vec![1, 4], vec![-1.0, 0.7, 1.6, 9.0]).unwrap(),
+        );
+        crate::ops::execute(g, &feeds).unwrap()["y"].data().to_vec()
+    }
+
+    #[test]
+    fn collapse_mul_into_mt_preserves_semantics() {
+        let mut g = mt_mul_graph(0.25);
+        let want = run(&g);
+        let n = run_to_fixpoint(&mut g, &CollapseMulIntoMultiThreshold).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(g.count_op("Mul"), 0);
+        assert_eq!(g.count_op("MultiThreshold"), 1);
+        assert_eq!(
+            g.nodes[0].attrs.float("out_scale").unwrap(),
+            0.25
+        );
+        assert_eq!(run(&g), want);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn collapse_repeated_mul() {
+        let mut g = mt_mul_graph(0.5);
+        // Append a second Mul by 4.0.
+        g.shapes.insert("s2".into(), vec![]);
+        g.shapes.insert("y2".into(), vec![1, 4]);
+        g.initializers.insert("s2".into(), Tensor::scalar(4.0));
+        g.nodes
+            .push(Node::new("Mul", "mul2", vec!["y".into(), "s2".into()], vec!["y2".into()]));
+        g.outputs = vec!["y2".into()];
+        let want = run_out(&g, "y2");
+        let n = run_to_fixpoint(&mut g, &CollapseRepeatedMul).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(g.count_op("Mul"), 1);
+        assert_eq!(run_out(&g, "y2"), want);
+        g.validate().unwrap();
+    }
+
+    fn run_out(g: &Graph, out: &str) -> Vec<f32> {
+        let mut feeds = HashMap::new();
+        feeds.insert(
+            "x".to_string(),
+            Tensor::new(vec![1, 4], vec![-1.0, 0.7, 1.6, 9.0]).unwrap(),
+        );
+        crate::ops::execute(g, &feeds).unwrap()[out].data().to_vec()
+    }
+
+    #[test]
+    fn remove_identity_mul() {
+        let mut g = mt_mul_graph(1.0);
+        // Add a consumer after the Mul so y isn't the graph output.
+        g.shapes.insert("s2".into(), vec![]);
+        g.shapes.insert("z".into(), vec![1, 4]);
+        g.initializers.insert("s2".into(), Tensor::scalar(2.0));
+        g.nodes
+            .push(Node::new("Mul", "mul2", vec!["y".into(), "s2".into()], vec!["z".into()]));
+        g.outputs = vec!["z".into()];
+        let want = run_out(&g, "z");
+        run_to_fixpoint(&mut g, &RemoveIdentityMul).unwrap();
+        assert_eq!(g.count_op("Mul"), 1); // only the x2 one left
+        assert_eq!(run_out(&g, "z"), want);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn dead_node_elimination() {
+        let mut g = mt_mul_graph(0.5);
+        // Orphan node writing nowhere-consumed tensor.
+        g.shapes.insert("dead".into(), vec![1, 4]);
+        g.nodes
+            .push(Node::new("Mul", "deadmul", vec!["x".into(), "s".into()], vec!["dead".into()]));
+        let n = run_to_fixpoint(&mut g, &DeadNodeElimination).unwrap();
+        assert_eq!(n, 1);
+        assert!(g.node_by_name("deadmul").is_none());
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn collapse_ignores_tensor_scale_mul() {
+        // Mul by a non-scalar must NOT be absorbed.
+        let mut g = mt_mul_graph(0.5);
+        g.initializers.insert(
+            "s".into(),
+            Tensor::new(vec![1, 4], vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
+        );
+        g.shapes.insert("s".into(), vec![1, 4]);
+        let n = run_to_fixpoint(&mut g, &CollapseMulIntoMultiThreshold).unwrap();
+        assert_eq!(n, 0);
+        assert_eq!(g.count_op("Mul"), 1);
+    }
+}

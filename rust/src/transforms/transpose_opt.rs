@@ -1,0 +1,562 @@
+//! Transpose-node optimization — the paper's §III-C contribution (Fig. 4).
+//!
+//! Conv lowering leaves the graph littered with NCHW<->NHWC Transposes:
+//! the conv-lowered MatMul outputs NHWC while the following MultiThreshold
+//! (and MaxPool / residual Add / ReduceMean) still expects NCHW.  In the
+//! paper this mismatch "prevented the proper transfer of weights to the
+//! MVAU"; the fix is `AbsorbTransposeIntoMultiThreshold`: merge the
+//! Transpose into the MultiThreshold (re-typing it to NHWC) and re-insert
+//! a Transpose *after* it.  The companion move/compose/cancel passes then
+//! push every re-inserted Transpose down the graph until adjacent pairs
+//! annihilate, leaving a single layout conversion at the graph input.
+
+use anyhow::Result;
+
+use super::lower_conv::{TO_NCHW, TO_NHWC};
+use super::Transform;
+use crate::graph::{AttrVal, Attrs, Graph, Node};
+
+fn perm_of(node: &Node) -> Option<Vec<i64>> {
+    node.attrs.ints("perm").ok()
+}
+
+fn is_to_nchw(node: &Node) -> bool {
+    node.op == "Transpose" && perm_of(node).as_deref() == Some(&TO_NCHW)
+}
+
+fn is_to_nhwc(node: &Node) -> bool {
+    node.op == "Transpose" && perm_of(node).as_deref() == Some(&TO_NHWC)
+}
+
+/// Permute a shape by a transpose perm.
+fn permute(shape: &[usize], perm: &[i64]) -> Vec<usize> {
+    perm.iter().map(|&p| shape[p as usize]).collect()
+}
+
+/// §III-C: `Transpose(NHWC->NCHW) -> MultiThreshold(NCHW)` ==>
+/// `MultiThreshold(NHWC) -> Transpose(NHWC->NCHW)`.
+///
+/// The MultiThreshold itself is layout-agnostic up to the channel-axis
+/// attribute, so absorbing the Transpose is exact; the re-inserted
+/// Transpose keeps downstream NCHW consumers working until the move
+/// passes clean them up (paper: "inserting a Transpose node afterward").
+pub struct AbsorbTransposeIntoMultiThreshold;
+
+impl Transform for AbsorbTransposeIntoMultiThreshold {
+    fn name(&self) -> &'static str {
+        "AbsorbTransposeIntoMultiThreshold"
+    }
+
+    fn apply(&self, graph: &mut Graph) -> Result<bool> {
+        for t_idx in 0..graph.nodes.len() {
+            if !is_to_nchw(&graph.nodes[t_idx]) {
+                continue;
+            }
+            let t_out = graph.nodes[t_idx].outputs[0].clone();
+            let consumers = graph.consumers(&t_out);
+            if consumers.len() != 1 {
+                continue;
+            }
+            let mt_idx = consumers[0];
+            if graph.nodes[mt_idx].op != "MultiThreshold"
+                || graph.nodes[mt_idx].attrs.str_or("data_layout", "NCHW") != "NCHW"
+            {
+                continue;
+            }
+            let x_nhwc = graph.nodes[t_idx].inputs[0].clone();
+            let thresh = graph.nodes[mt_idx].inputs[1].clone();
+            let mt_out = graph.nodes[mt_idx].outputs[0].clone();
+            let nhwc_shape = graph.shape_of(&x_nhwc)?.to_vec();
+            let mt_name = graph.nodes[mt_idx].name.clone();
+            let mut attrs = graph.nodes[mt_idx].attrs.clone();
+            attrs.set("data_layout", AttrVal::Str("NHWC".into()));
+
+            let new_out = graph.fresh_tensor(&format!("{mt_name}_nhwc"), nhwc_shape);
+            let new_mt = Node::new(
+                "MultiThreshold",
+                &mt_name,
+                vec![x_nhwc, thresh],
+                vec![new_out.clone()],
+            )
+            .with_attrs(attrs);
+            let new_t = Node::new(
+                "Transpose",
+                &format!("{mt_name}_to_nchw"),
+                vec![new_out],
+                vec![mt_out],
+            )
+            .with_attrs(Attrs::new().with("perm", AttrVal::Ints(TO_NCHW.to_vec())));
+
+            graph.remove_nodes(vec![t_idx, mt_idx]);
+            graph.shapes.remove(&t_out);
+            graph.nodes.push(new_mt);
+            graph.nodes.push(new_t);
+            graph.toposort()?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+}
+
+/// `MultiThreshold(NCHW) -> Transpose(NCHW->NHWC)` ==>
+/// `Transpose -> MultiThreshold(NHWC)` — floats the input-quantizer's
+/// layout conversion to the very top of the graph.
+pub struct MoveTransposePastMultiThreshold;
+
+impl Transform for MoveTransposePastMultiThreshold {
+    fn name(&self) -> &'static str {
+        "MoveTransposePastMultiThreshold"
+    }
+
+    fn apply(&self, graph: &mut Graph) -> Result<bool> {
+        for mt_idx in 0..graph.nodes.len() {
+            if graph.nodes[mt_idx].op != "MultiThreshold"
+                || graph.nodes[mt_idx].attrs.str_or("data_layout", "NCHW") != "NCHW"
+            {
+                continue;
+            }
+            let mt_out = graph.nodes[mt_idx].outputs[0].clone();
+            let consumers = graph.consumers(&mt_out);
+            if consumers.len() != 1 || !is_to_nhwc(&graph.nodes[consumers[0]]) {
+                continue;
+            }
+            let t_idx = consumers[0];
+            let x_nchw = graph.nodes[mt_idx].inputs[0].clone();
+            let thresh = graph.nodes[mt_idx].inputs[1].clone();
+            let t_out = graph.nodes[t_idx].outputs[0].clone();
+            let mt_name = graph.nodes[mt_idx].name.clone();
+            let nchw_shape = graph.shape_of(&x_nchw)?.to_vec();
+            let nhwc_shape = permute(&nchw_shape, &TO_NHWC);
+            let mut attrs = graph.nodes[mt_idx].attrs.clone();
+            attrs.set("data_layout", AttrVal::Str("NHWC".into()));
+
+            let x_nhwc = graph.fresh_tensor(&format!("{mt_name}_in_nhwc"), nhwc_shape);
+            let new_t = Node::new(
+                "Transpose",
+                &format!("{mt_name}_to_nhwc"),
+                vec![x_nchw],
+                vec![x_nhwc.clone()],
+            )
+            .with_attrs(Attrs::new().with("perm", AttrVal::Ints(TO_NHWC.to_vec())));
+            let new_mt =
+                Node::new("MultiThreshold", &mt_name, vec![x_nhwc, thresh], vec![t_out])
+                    .with_attrs(attrs);
+
+            graph.remove_nodes(vec![mt_idx, t_idx]);
+            graph.shapes.remove(&mt_out);
+            graph.nodes.push(new_t);
+            graph.nodes.push(new_mt);
+            graph.toposort()?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+}
+
+/// `Transpose(NHWC->NCHW) -> MaxPool(NCHW)` ==>
+/// `MaxPoolNHWC -> Transpose(NHWC->NCHW)`.
+pub struct MoveTransposePastMaxPool;
+
+impl Transform for MoveTransposePastMaxPool {
+    fn name(&self) -> &'static str {
+        "MoveTransposePastMaxPool"
+    }
+
+    fn apply(&self, graph: &mut Graph) -> Result<bool> {
+        for t_idx in 0..graph.nodes.len() {
+            if !is_to_nchw(&graph.nodes[t_idx]) {
+                continue;
+            }
+            let t_out = graph.nodes[t_idx].outputs[0].clone();
+            let consumers = graph.consumers(&t_out);
+            if consumers.len() != 1 || graph.nodes[consumers[0]].op != "MaxPool" {
+                continue;
+            }
+            let mp_idx = consumers[0];
+            let x_nhwc = graph.nodes[t_idx].inputs[0].clone();
+            let mp_out = graph.nodes[mp_idx].outputs[0].clone();
+            let mp_name = graph.nodes[mp_idx].name.clone();
+            let mp_attrs = graph.nodes[mp_idx].attrs.clone();
+            let out_nchw_shape = graph.shape_of(&mp_out)?.to_vec();
+            let out_nhwc_shape = permute(&out_nchw_shape, &TO_NHWC);
+
+            let pooled = graph.fresh_tensor(&format!("{mp_name}_nhwc"), out_nhwc_shape);
+            let new_mp = Node::new("MaxPoolNHWC", &mp_name, vec![x_nhwc], vec![pooled.clone()])
+                .with_attrs(mp_attrs);
+            let new_t = Node::new(
+                "Transpose",
+                &format!("{mp_name}_to_nchw"),
+                vec![pooled],
+                vec![mp_out],
+            )
+            .with_attrs(Attrs::new().with("perm", AttrVal::Ints(TO_NCHW.to_vec())));
+
+            graph.remove_nodes(vec![t_idx, mp_idx]);
+            graph.shapes.remove(&t_out);
+            graph.nodes.push(new_mp);
+            graph.nodes.push(new_t);
+            graph.toposort()?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+}
+
+/// `Add(Transpose(a), Transpose(b))` with equal perms ==>
+/// `Transpose(Add(a, b))` — the residual-connection case.  The original
+/// Transposes stay if they feed other consumers (DeadNodeElimination
+/// sweeps them otherwise).
+pub struct MoveTransposePastEltwiseAdd;
+
+impl Transform for MoveTransposePastEltwiseAdd {
+    fn name(&self) -> &'static str {
+        "MoveTransposePastEltwiseAdd"
+    }
+
+    fn apply(&self, graph: &mut Graph) -> Result<bool> {
+        for add_idx in 0..graph.nodes.len() {
+            if graph.nodes[add_idx].op != "Add" || graph.nodes[add_idx].inputs.len() != 2 {
+                continue;
+            }
+            let a_t = graph.nodes[add_idx].inputs[0].clone();
+            let b_t = graph.nodes[add_idx].inputs[1].clone();
+            let (Some(pa_idx), Some(pb_idx)) = (graph.producer(&a_t), graph.producer(&b_t))
+            else {
+                continue;
+            };
+            if !is_to_nchw(&graph.nodes[pa_idx]) || !is_to_nchw(&graph.nodes[pb_idx]) {
+                continue;
+            }
+            let a = graph.nodes[pa_idx].inputs[0].clone();
+            let b = graph.nodes[pb_idx].inputs[0].clone();
+            let add_out = graph.nodes[add_idx].outputs[0].clone();
+            let add_name = graph.nodes[add_idx].name.clone();
+            let nhwc_shape = graph.shape_of(&a)?.to_vec();
+
+            let sum_nhwc = graph.fresh_tensor(&format!("{add_name}_nhwc"), nhwc_shape);
+            let new_add = Node::new("Add", &add_name, vec![a, b], vec![sum_nhwc.clone()]);
+            let new_t = Node::new(
+                "Transpose",
+                &format!("{add_name}_to_nchw"),
+                vec![sum_nhwc],
+                vec![add_out],
+            )
+            .with_attrs(Attrs::new().with("perm", AttrVal::Ints(TO_NCHW.to_vec())));
+
+            graph.remove_nodes(vec![add_idx]);
+            graph.nodes.push(new_add);
+            graph.nodes.push(new_t);
+            graph.toposort()?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+}
+
+/// Compose `Transpose -> Transpose` into one Transpose (when the
+/// intermediate tensor has no other consumer).
+pub struct ComposeAdjacentTransposes;
+
+impl Transform for ComposeAdjacentTransposes {
+    fn name(&self) -> &'static str {
+        "ComposeAdjacentTransposes"
+    }
+
+    fn apply(&self, graph: &mut Graph) -> Result<bool> {
+        for i in 0..graph.nodes.len() {
+            if graph.nodes[i].op != "Transpose" {
+                continue;
+            }
+            let mid = graph.nodes[i].outputs[0].clone();
+            let consumers = graph.consumers(&mid);
+            if consumers.len() != 1 || graph.nodes[consumers[0]].op != "Transpose" {
+                continue;
+            }
+            let j = consumers[0];
+            let p1 = perm_of(&graph.nodes[i]).unwrap();
+            let p2 = perm_of(&graph.nodes[j]).unwrap();
+            // Output axis a of the pair reads input axis p1[p2[a]].
+            let composed: Vec<i64> = p2.iter().map(|&a| p1[a as usize]).collect();
+            let x = graph.nodes[i].inputs[0].clone();
+            let y = graph.nodes[j].outputs[0].clone();
+            let name = graph.nodes[j].name.clone();
+            let new_t = Node::new("Transpose", &name, vec![x], vec![y])
+                .with_attrs(Attrs::new().with("perm", AttrVal::Ints(composed)));
+            graph.remove_nodes(vec![i, j]);
+            graph.shapes.remove(&mid);
+            graph.nodes.push(new_t);
+            graph.toposort()?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+}
+
+/// Remove identity-perm Transposes by rewiring consumers (kept if the
+/// output is a graph output — names must stay stable).
+pub struct RemoveIdentityTranspose;
+
+impl Transform for RemoveIdentityTranspose {
+    fn name(&self) -> &'static str {
+        "RemoveIdentityTranspose"
+    }
+
+    fn apply(&self, graph: &mut Graph) -> Result<bool> {
+        for i in 0..graph.nodes.len() {
+            if graph.nodes[i].op != "Transpose" {
+                continue;
+            }
+            let perm = perm_of(&graph.nodes[i]).unwrap_or_default();
+            if !perm.iter().enumerate().all(|(a, &p)| a as i64 == p) {
+                continue;
+            }
+            let out = graph.nodes[i].outputs[0].clone();
+            if graph.outputs.contains(&out) {
+                continue;
+            }
+            let x = graph.nodes[i].inputs[0].clone();
+            for c in graph.consumers(&out) {
+                for input in &mut graph.nodes[c].inputs {
+                    if *input == out {
+                        *input = x.clone();
+                    }
+                }
+            }
+            graph.remove_nodes(vec![i]);
+            graph.shapes.remove(&out);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::transforms::run_to_fixpoint;
+    use std::collections::HashMap;
+
+    fn feeds_nhwc() -> HashMap<String, Tensor> {
+        let mut rng = crate::rng::Rng::new(3);
+        let mut feeds = HashMap::new();
+        feeds.insert(
+            "x".to_string(),
+            Tensor::from_fn(vec![1, 4, 4, 2], |_| rng.normal() + 1.0),
+        );
+        feeds
+    }
+
+    /// x(NHWC) -> Transpose(NCHW) -> MultiThreshold(NCHW) -> y(NCHW)
+    fn absorb_graph() -> Graph {
+        let mut g = Graph::new("a");
+        g.inputs = vec!["x".into()];
+        g.outputs = vec!["y".into()];
+        g.shapes.insert("x".into(), vec![1, 4, 4, 2]);
+        g.shapes.insert("xt".into(), vec![1, 2, 4, 4]);
+        g.shapes.insert("thr".into(), vec![2, 3]);
+        g.shapes.insert("y".into(), vec![1, 2, 4, 4]);
+        g.initializers.insert(
+            "thr".into(),
+            Tensor::new(vec![2, 3], vec![0.25, 0.5, 1.0, 0.5, 1.0, 2.0]).unwrap(),
+        );
+        g.nodes.push(
+            Node::new("Transpose", "t0", vec!["x".into()], vec!["xt".into()]).with_attrs(
+                Attrs::new().with("perm", AttrVal::Ints(TO_NCHW.to_vec())),
+            ),
+        );
+        g.nodes.push(
+            Node::new(
+                "MultiThreshold",
+                "mt0",
+                vec!["xt".into(), "thr".into()],
+                vec!["y".into()],
+            )
+            .with_attrs(
+                Attrs::new()
+                    .with("data_layout", AttrVal::Str("NCHW".into()))
+                    .with("out_scale", AttrVal::Float(0.5)),
+            ),
+        );
+        g
+    }
+
+    #[test]
+    fn absorb_transpose_into_multithreshold() {
+        // The paper's Fig. 4 rewrite, checked for exact semantics.
+        let mut g = absorb_graph();
+        let feeds = feeds_nhwc();
+        let want = crate::ops::execute(&g, &feeds).unwrap()["y"].clone();
+        let n = run_to_fixpoint(&mut g, &AbsorbTransposeIntoMultiThreshold).unwrap();
+        assert_eq!(n, 1);
+        // MT is now NHWC and comes BEFORE the (re-inserted) Transpose.
+        let mt = g.node_by_name("mt0").unwrap();
+        assert_eq!(mt.attrs.str("data_layout").unwrap(), "NHWC");
+        let mt_pos = g.nodes.iter().position(|n| n.name == "mt0").unwrap();
+        let t_pos = g.nodes.iter().position(|n| n.op == "Transpose").unwrap();
+        assert!(mt_pos < t_pos);
+        let got = crate::ops::execute(&g, &feeds).unwrap()["y"].clone();
+        assert_eq!(got, want);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn absorb_requires_single_consumer() {
+        let mut g = absorb_graph();
+        // Second consumer of the transposed tensor blocks the rewrite.
+        g.shapes.insert("z".into(), vec![1, 2, 4, 4]);
+        g.shapes.insert("s".into(), vec![]);
+        g.initializers.insert("s".into(), Tensor::scalar(2.0));
+        g.nodes.push(Node::new(
+            "Mul",
+            "m",
+            vec!["xt".into(), "s".into()],
+            vec!["z".into()],
+        ));
+        g.outputs.push("z".into());
+        let n = run_to_fixpoint(&mut g, &AbsorbTransposeIntoMultiThreshold).unwrap();
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn compose_and_remove_identity() {
+        // NHWC->NCHW then NCHW->NHWC composes to identity and disappears.
+        let mut g = Graph::new("c");
+        g.inputs = vec!["x".into()];
+        g.outputs = vec!["y".into()];
+        g.shapes.insert("x".into(), vec![1, 4, 4, 2]);
+        g.shapes.insert("t1".into(), vec![1, 2, 4, 4]);
+        g.shapes.insert("t2".into(), vec![1, 4, 4, 2]);
+        g.shapes.insert("s".into(), vec![]);
+        g.shapes.insert("y".into(), vec![1, 4, 4, 2]);
+        g.initializers.insert("s".into(), Tensor::scalar(3.0));
+        g.nodes.push(
+            Node::new("Transpose", "a", vec!["x".into()], vec!["t1".into()])
+                .with_attrs(Attrs::new().with("perm", AttrVal::Ints(TO_NCHW.to_vec()))),
+        );
+        g.nodes.push(
+            Node::new("Transpose", "b", vec!["t1".into()], vec!["t2".into()])
+                .with_attrs(Attrs::new().with("perm", AttrVal::Ints(TO_NHWC.to_vec()))),
+        );
+        g.nodes.push(Node::new(
+            "Mul",
+            "m",
+            vec!["t2".into(), "s".into()],
+            vec!["y".into()],
+        ));
+        let feeds = feeds_nhwc();
+        let want = crate::ops::execute(&g, &feeds).unwrap()["y"].clone();
+        run_to_fixpoint(&mut g, &ComposeAdjacentTransposes).unwrap();
+        assert_eq!(g.count_op("Transpose"), 1);
+        run_to_fixpoint(&mut g, &RemoveIdentityTranspose).unwrap();
+        assert_eq!(g.count_op("Transpose"), 0);
+        let got = crate::ops::execute(&g, &feeds).unwrap()["y"].clone();
+        assert_eq!(got, want);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn move_transpose_past_maxpool() {
+        let mut g = Graph::new("p");
+        g.inputs = vec!["x".into()];
+        g.outputs = vec!["y".into()];
+        g.shapes.insert("x".into(), vec![1, 4, 4, 2]);
+        g.shapes.insert("xt".into(), vec![1, 2, 4, 4]);
+        g.shapes.insert("y".into(), vec![1, 2, 2, 2]);
+        g.nodes.push(
+            Node::new("Transpose", "t", vec!["x".into()], vec!["xt".into()])
+                .with_attrs(Attrs::new().with("perm", AttrVal::Ints(TO_NCHW.to_vec()))),
+        );
+        g.nodes.push(
+            Node::new("MaxPool", "mp", vec!["xt".into()], vec!["y".into()]).with_attrs(
+                Attrs::new()
+                    .with("kernel", AttrVal::Ints(vec![2, 2]))
+                    .with("stride", AttrVal::Ints(vec![2, 2])),
+            ),
+        );
+        let feeds = feeds_nhwc();
+        let want = crate::ops::execute(&g, &feeds).unwrap()["y"].clone();
+        let n = run_to_fixpoint(&mut g, &MoveTransposePastMaxPool).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(g.count_op("MaxPoolNHWC"), 1);
+        let got = crate::ops::execute(&g, &feeds).unwrap()["y"].clone();
+        assert_eq!(got, want);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn move_transpose_past_residual_add() {
+        let mut g = Graph::new("r");
+        g.inputs = vec!["a".into(), "b".into()];
+        g.outputs = vec!["y".into()];
+        for t in ["a", "b"] {
+            g.shapes.insert(t.into(), vec![1, 4, 4, 2]);
+        }
+        g.shapes.insert("at".into(), vec![1, 2, 4, 4]);
+        g.shapes.insert("bt".into(), vec![1, 2, 4, 4]);
+        g.shapes.insert("y".into(), vec![1, 2, 4, 4]);
+        for (n, (i, o)) in [("ta", ("a", "at")), ("tb", ("b", "bt"))] {
+            g.nodes.push(
+                Node::new("Transpose", n, vec![i.into()], vec![o.into()]).with_attrs(
+                    Attrs::new().with("perm", AttrVal::Ints(TO_NCHW.to_vec())),
+                ),
+            );
+        }
+        g.nodes.push(Node::new(
+            "Add",
+            "add",
+            vec!["at".into(), "bt".into()],
+            vec!["y".into()],
+        ));
+        let mut rng = crate::rng::Rng::new(8);
+        let mut feeds = HashMap::new();
+        feeds.insert("a".to_string(), Tensor::from_fn(vec![1, 4, 4, 2], |_| rng.normal()));
+        feeds.insert("b".to_string(), Tensor::from_fn(vec![1, 4, 4, 2], |_| rng.normal()));
+        let want = crate::ops::execute(&g, &feeds).unwrap()["y"].clone();
+        let n = run_to_fixpoint(&mut g, &MoveTransposePastEltwiseAdd).unwrap();
+        assert_eq!(n, 1);
+        // Add now operates NHWC; old transposes become dead.
+        run_to_fixpoint(&mut g, &crate::transforms::streamline::DeadNodeElimination).unwrap();
+        assert_eq!(g.count_op("Transpose"), 1); // only the re-inserted one
+        let got = crate::ops::execute(&g, &feeds).unwrap()["y"].clone();
+        assert_eq!(got, want);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn move_transpose_past_multithreshold_floats_input_conversion() {
+        // MT(NCHW) -> Transpose(->NHWC) becomes Transpose -> MT(NHWC).
+        let mut g = Graph::new("m");
+        g.inputs = vec!["x".into()];
+        g.outputs = vec!["y".into()];
+        g.shapes.insert("x".into(), vec![1, 2, 4, 4]);
+        g.shapes.insert("q".into(), vec![1, 2, 4, 4]);
+        g.shapes.insert("thr".into(), vec![1, 2]);
+        g.shapes.insert("y".into(), vec![1, 4, 4, 2]);
+        g.initializers
+            .insert("thr".into(), Tensor::new(vec![1, 2], vec![0.5, 1.5]).unwrap());
+        g.nodes.push(
+            Node::new(
+                "MultiThreshold",
+                "mt",
+                vec!["x".into(), "thr".into()],
+                vec!["q".into()],
+            )
+            .with_attrs(Attrs::new().with("data_layout", AttrVal::Str("NCHW".into()))),
+        );
+        g.nodes.push(
+            Node::new("Transpose", "t", vec!["q".into()], vec!["y".into()])
+                .with_attrs(Attrs::new().with("perm", AttrVal::Ints(TO_NHWC.to_vec()))),
+        );
+        let mut rng = crate::rng::Rng::new(4);
+        let mut feeds = HashMap::new();
+        feeds.insert("x".to_string(), Tensor::from_fn(vec![1, 2, 4, 4], |_| rng.normal() + 1.0));
+        let want = crate::ops::execute(&g, &feeds).unwrap()["y"].clone();
+        let n = run_to_fixpoint(&mut g, &MoveTransposePastMultiThreshold).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(g.nodes[0].op, "Transpose"); // conversion floated to top
+        let got = crate::ops::execute(&g, &feeds).unwrap()["y"].clone();
+        assert_eq!(got, want);
+        g.validate().unwrap();
+    }
+}

@@ -1,0 +1,22 @@
+//! Shared helpers for integration tests.
+//!
+//! Tests that need `make artifacts` output skip gracefully (with a
+//! message) when it is missing, so `cargo test` works on a fresh clone.
+
+use bwade::artifacts::ArtifactPaths;
+
+pub fn artifacts() -> Option<ArtifactPaths> {
+    let paths = ArtifactPaths::default_dir();
+    if paths.exists() {
+        Some(paths)
+    } else {
+        eprintln!("NOTE: artifacts missing — run `make artifacts`; test skipped");
+        None
+    }
+}
+
+/// Deterministic [0,1) image batch.
+pub fn random_images(count: usize, img: usize, seed: u64) -> Vec<f32> {
+    let mut rng = bwade::rng::Rng::new(seed);
+    (0..count * img * img * 3).map(|_| rng.next_f32()).collect()
+}

@@ -1,0 +1,147 @@
+//! Integration: the design environment end-to-end on the exported graph
+//! (requires `make artifacts`) and on synthesized graphs at several
+//! scales/configs.
+
+mod common;
+
+use bwade::build::{build, requantize_graph, synth_backbone_graph, DesignConfig};
+use bwade::fixedpoint::{table2_configs, QuantConfig};
+use bwade::graph::Graph;
+use bwade::resources::Device;
+use bwade::transforms::convert_to_hw::is_fully_hw;
+
+fn load_exported() -> Option<Graph> {
+    let paths = common::artifacts()?;
+    Some(Graph::load(&paths.graph_json(), &paths.graph_weights()).expect("graph load"))
+}
+
+#[test]
+fn exported_graph_builds_fully_hw_with_verification() {
+    let Some(mut graph) = load_exported() else { return };
+    let report = build(
+        &mut graph,
+        &DesignConfig {
+            verify: true,
+            ..DesignConfig::default()
+        },
+        &Device::pynq_z1(),
+    )
+    .expect("build");
+    assert!(is_fully_hw(&graph), "census: {:?}", graph.op_census());
+    // Every verified stage must be numerically silent.
+    for s in &report.stages {
+        if let Some(d) = s.max_divergence {
+            assert!(d <= 2e-3, "stage {} diverged by {d}", s.transform);
+        }
+    }
+    assert!(report.fps > 0.0 && report.latency_ms > 0.0);
+    assert!(report.weight_bits > 0);
+}
+
+#[test]
+fn exported_graph_structure_matches_fig3_flow() {
+    let Some(graph) = load_exported() else { return };
+    // Pre-compilation census: the Brevitas-export analogue.
+    assert_eq!(graph.count_op("Conv"), 8);
+    assert_eq!(graph.count_op("MultiThreshold"), 9);
+    assert_eq!(graph.count_op("ReduceMean"), 1);
+    assert_eq!(graph.count_op("Add"), 2);
+    assert_eq!(graph.count_op("MaxPool"), 3);
+    graph.validate().expect("valid");
+}
+
+#[test]
+fn bitwidth_changes_resources_monotonically() {
+    let Some(paths) = common::artifacts() else { return };
+    let device = Device::pynq_z1();
+    let mut brams = Vec::new();
+    for (_, quant) in [
+        ("w4", QuantConfig::from_split(1, 3, 2, 2).unwrap()),
+        ("w6", QuantConfig::from_split(1, 5, 2, 2).unwrap()),
+        ("w16", QuantConfig::from_split(8, 8, 8, 8).unwrap()),
+    ] {
+        let mut g = Graph::load(&paths.graph_json(), &paths.graph_weights()).unwrap();
+        let report = build(
+            &mut g,
+            &DesignConfig {
+                quant,
+                target_fps: Some(60.0),
+                max_utilization: 0.85,
+                verify: false,
+            },
+            &device,
+        )
+        .expect("build");
+        brams.push(report.weight_bits);
+    }
+    // Weight memory grows with weight bit-width: 4 < 6 < 16.
+    assert!(brams[0] < brams[1] && brams[1] < brams[2], "{brams:?}");
+}
+
+#[test]
+fn all_table2_configs_build_on_synth_graph() {
+    // Tensil can't do any of these except the 16-bit row — FINN's
+    // arbitrary-bit-width support is the paper's core claim.
+    let device = Device::pynq_z1();
+    for (name, quant) in table2_configs() {
+        let mut g = synth_backbone_graph([4, 8, 8, 16], 16, quant.act.bits, quant.act.frac_bits);
+        let report = build(
+            &mut g,
+            &DesignConfig {
+                quant,
+                target_fps: Some(100.0),
+                max_utilization: 0.85,
+                verify: false,
+            },
+            &device,
+        )
+        .unwrap_or_else(|e| panic!("config {name} failed: {e}"));
+        assert!(is_fully_hw(&g), "{name}");
+        assert!(report.fps > 0.0, "{name}");
+    }
+}
+
+#[test]
+fn fifo_sizing_prevents_deadlock_on_residual_graph() {
+    let mut g = synth_backbone_graph([4, 8, 8, 16], 16, 4, 2);
+    let report = build(&mut g, &DesignConfig::default(), &Device::pynq_z1()).expect("build");
+    // The residual skip FIFO must have been sized beyond trivial depth.
+    let max_depth = report.fifo_depths.values().max().copied().unwrap_or(0);
+    assert!(max_depth >= 8, "depths: {:?}", report.fifo_depths);
+    // The bounded simulation completed 3 frames (checked inside build),
+    // so steady_cycles is a real steady-state measurement.
+    assert!(report.steady_cycles > 0);
+    assert!(report.latency_cycles >= report.steady_cycles);
+}
+
+#[test]
+fn requantize_is_idempotent() {
+    let mut a = synth_backbone_graph([4, 8, 8, 16], 16, 4, 2);
+    let quant = QuantConfig::from_split(1, 5, 2, 2).unwrap();
+    requantize_graph(&mut a, &quant).unwrap();
+    let mut b = a.clone();
+    requantize_graph(&mut b, &quant).unwrap();
+    for (name, t) in &a.initializers {
+        assert_eq!(t, &b.initializers[name], "initializer {name} changed");
+    }
+}
+
+#[test]
+fn folding_search_respects_cap() {
+    let mut g = synth_backbone_graph([8, 16, 32, 64], 32, 4, 2);
+    let device = Device::pynq_z1();
+    let cfg = DesignConfig {
+        target_fps: None,
+        max_utilization: 0.30, // tight cap
+        verify: false,
+        ..DesignConfig::default()
+    };
+    requantize_graph(&mut g, &cfg.quant).unwrap();
+    bwade::transforms::run_default_pipeline(&mut g, None, 0.0).unwrap();
+    let models = bwade::build::folding_search(&mut g, &cfg, &device).expect("folding");
+    let total = bwade::hw::total_resources(&models);
+    // LUT/FF/DSP within the cap (BRAM may exceed at minimal folding —
+    // the relaxation documented in build::folding_search).
+    assert!(total.lut <= device.budget.lut * 0.30 + 1.0, "{total}");
+    assert!(total.dsp <= device.budget.dsp * 0.30 + 1.0, "{total}");
+}

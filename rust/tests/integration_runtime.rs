@@ -1,0 +1,155 @@
+//! Integration: PJRT artifact execution, and the cross-layer contract —
+//! the rust graph executor, the rust fixed-point semantics, and the
+//! python-lowered HLO must agree on the same numbers.
+
+mod common;
+
+use bwade::fixedpoint::{headline_config, FxpFormat};
+use bwade::graph::Graph;
+use bwade::runtime::{run_test_mvau, BackboneRunner, Runtime};
+use bwade::tensor::Tensor;
+
+#[test]
+fn test_mvau_artifact_matches_rust_semantics_exactly() {
+    let Some(paths) = common::artifacts() else { return };
+    let runtime = Runtime::new().expect("pjrt");
+    let mut rng = bwade::rng::Rng::new(99);
+    let x: Vec<f32> = (0..8 * 12).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..12 * 5).map(|_| rng.normal()).collect();
+    let b: Vec<f32> = (0..5).map(|_| rng.normal()).collect();
+    let fmt = FxpFormat::unsigned(4, 2).unwrap();
+    let got = run_test_mvau(
+        &runtime,
+        &paths.test_mvau_hlo(),
+        &x,
+        &w,
+        &b,
+        fmt.scale() as f32,
+        fmt.qmax() as f32,
+    )
+    .expect("mvau artifact");
+
+    // Rust-side oracle: y = clip(floor((x@w + b) * s + 0.5), 0, q) / s.
+    let mut want = vec![0.0f32; 8 * 5];
+    for i in 0..8 {
+        for j in 0..5 {
+            let mut acc = b[j];
+            for k in 0..12 {
+                acc += x[i * 12 + k] * w[k * 5 + j];
+            }
+            let q = (acc as f64 * fmt.scale() + 0.5)
+                .floor()
+                .clamp(0.0, fmt.qmax() as f64);
+            want[i * 5 + j] = (q / fmt.scale()) as f32;
+        }
+    }
+    assert_eq!(got, want, "pallas-lowered HLO != rust fixed-point semantics");
+}
+
+#[test]
+fn backbone_runner_shapes_and_determinism() {
+    let Some(paths) = common::artifacts() else { return };
+    let runtime = Runtime::new().expect("pjrt");
+    let bundle = paths.model_bundle().expect("bundle");
+    let runner = BackboneRunner::new(
+        &runtime,
+        &bundle,
+        &paths.backbone_hlo(1),
+        1,
+        headline_config(),
+    )
+    .expect("runner");
+    let images = common::random_images(1, bundle.img, 3);
+    let f1 = runner.extract(&images).expect("extract");
+    let f2 = runner.extract(&images).expect("extract");
+    assert_eq!(f1.len(), bundle.feature_dim);
+    assert_eq!(f1, f2, "feature extraction must be deterministic");
+    assert!(f1.iter().any(|&v| v != 0.0), "features must be non-trivial");
+}
+
+#[test]
+fn batch1_and_batch8_agree() {
+    let Some(paths) = common::artifacts() else { return };
+    let runtime = Runtime::new().expect("pjrt");
+    let bundle = paths.model_bundle().expect("bundle");
+    let cfg = headline_config();
+    let r1 = BackboneRunner::new(&runtime, &bundle, &paths.backbone_hlo(1), 1, cfg).unwrap();
+    let r8 = BackboneRunner::new(&runtime, &bundle, &paths.backbone_hlo(8), 8, cfg).unwrap();
+    let images = common::random_images(8, bundle.img, 17);
+    let f8 = r8.extract(&images).unwrap();
+    for i in 0..3 {
+        let per = bundle.img * bundle.img * 3;
+        let f1 = r1.extract(&images[i * per..(i + 1) * per]).unwrap();
+        assert_eq!(
+            f1,
+            f8[i * bundle.feature_dim..(i + 1) * bundle.feature_dim].to_vec(),
+            "image {i}: batch-1 and batch-8 disagree"
+        );
+    }
+}
+
+#[test]
+fn extract_all_handles_ragged_tail() {
+    let Some(paths) = common::artifacts() else { return };
+    let runtime = Runtime::new().expect("pjrt");
+    let bundle = paths.model_bundle().expect("bundle");
+    let runner = BackboneRunner::new(
+        &runtime,
+        &bundle,
+        &paths.backbone_hlo(8),
+        8,
+        headline_config(),
+    )
+    .unwrap();
+    let images = common::random_images(11, bundle.img, 5); // 8 + 3 tail
+    let all = runner.extract_all(&images, 11).unwrap();
+    assert_eq!(all.len(), 11 * bundle.feature_dim);
+    // Tail features equal a fresh batched run of the same images.
+    let per = bundle.img * bundle.img * 3;
+    let mut tail_batch = vec![0.0f32; runner.input_elems()];
+    tail_batch[..3 * per].copy_from_slice(&images[8 * per..]);
+    let tail = runner.extract(&tail_batch).unwrap();
+    assert_eq!(
+        &all[8 * bundle.feature_dim..],
+        &tail[..3 * bundle.feature_dim]
+    );
+}
+
+/// THE cross-layer contract: the rust graph executor running the exported
+/// compiler graph (with rust-side PTQ) must reproduce the PJRT backbone's
+/// features for the same image and config.
+#[test]
+fn graph_executor_matches_pjrt_backbone() {
+    let Some(paths) = common::artifacts() else { return };
+    let runtime = Runtime::new().expect("pjrt");
+    let bundle = paths.model_bundle().expect("bundle");
+    let cfg = headline_config();
+    let runner =
+        BackboneRunner::new(&runtime, &bundle, &paths.backbone_hlo(1), 1, cfg).unwrap();
+
+    let mut graph = Graph::load(&paths.graph_json(), &paths.graph_weights()).unwrap();
+    bwade::build::requantize_graph(&mut graph, &cfg).unwrap();
+
+    let images = common::random_images(1, bundle.img, 23);
+    let pjrt_feats = runner.extract(&images).unwrap();
+
+    // NHWC -> NCHW for the imported graph.
+    let img = bundle.img;
+    let x_nhwc = Tensor::new(vec![1, img, img, 3], images).unwrap();
+    let x_nchw = x_nhwc.nhwc_to_nchw().unwrap();
+    let mut feeds = std::collections::HashMap::new();
+    feeds.insert("global_in".to_string(), x_nchw);
+    let out = bwade::ops::execute(&graph, &feeds).expect("graph execution");
+    let graph_feats = out["global_out"].data();
+
+    assert_eq!(graph_feats.len(), pjrt_feats.len());
+    let max_diff = graph_feats
+        .iter()
+        .zip(&pjrt_feats)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        max_diff < 2e-4,
+        "rust graph executor and PJRT disagree by {max_diff}"
+    );
+}

@@ -1,0 +1,139 @@
+//! Integration: the Fig.-5 serving pipeline against the real PJRT
+//! backbone — classification plumbing, batching policy, episode-level
+//! accuracy through the full python-free request path.
+
+mod common;
+
+use std::time::Duration;
+
+use bwade::artifacts::FewshotBank;
+use bwade::coordinator::{serve, BatchPolicy, FrameSource};
+use bwade::fewshot::{evaluate, sample_episode, NcmClassifier};
+use bwade::fixedpoint::{headline_config, table2_configs};
+use bwade::rng::Rng;
+use bwade::runtime::{BackboneRunner, Runtime};
+
+#[test]
+fn serving_classifies_every_frame() {
+    let Some(paths) = common::artifacts() else { return };
+    let runtime = Runtime::new().expect("pjrt");
+    let bundle = paths.model_bundle().expect("bundle");
+    let bank = FewshotBank::load(&paths.fewshot_bank()).expect("bank");
+    let runner = BackboneRunner::new(
+        &runtime,
+        &bundle,
+        &paths.backbone_hlo(8),
+        8,
+        headline_config(),
+    )
+    .expect("runner");
+
+    let mut rng = Rng::new(3);
+    let ep = sample_episode(&mut rng, bank.num_classes, bank.per_class, 5, 5, 1).unwrap();
+    let mut sup = Vec::new();
+    for &i in &ep.support {
+        sup.extend_from_slice(bank.image(i));
+    }
+    let sup_feats = runner.extract_all(&sup, ep.support.len()).unwrap();
+    let ncm = NcmClassifier::fit(&sup_feats, bundle.feature_dim, &ep.support_labels, 5).unwrap();
+
+    let rx = FrameSource {
+        count: 40,
+        rate_fps: None,
+        img: bundle.img,
+        seed: 2,
+    }
+    .spawn(16);
+    let (metrics, results) = serve(
+        &runner,
+        &ncm,
+        rx,
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        },
+    )
+    .expect("serve");
+
+    assert_eq!(metrics.frames, 40);
+    assert_eq!(results.len(), 40);
+    // Every frame id classified exactly once, classes within range.
+    let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..40).collect::<Vec<_>>());
+    assert!(results.iter().all(|r| r.class < 5));
+    assert!(metrics.fps() > 0.0);
+    assert!(metrics.mean_batch_size() > 1.5, "batching never engaged");
+}
+
+#[test]
+fn batch_policy_cap_respected() {
+    let Some(paths) = common::artifacts() else { return };
+    let runtime = Runtime::new().expect("pjrt");
+    let bundle = paths.model_bundle().expect("bundle");
+    let bank = FewshotBank::load(&paths.fewshot_bank()).expect("bank");
+    let runner = BackboneRunner::new(
+        &runtime,
+        &bundle,
+        &paths.backbone_hlo(8),
+        8,
+        headline_config(),
+    )
+    .unwrap();
+    let mut rng = Rng::new(4);
+    let ep = sample_episode(&mut rng, bank.num_classes, bank.per_class, 5, 5, 1).unwrap();
+    let mut sup = Vec::new();
+    for &i in &ep.support {
+        sup.extend_from_slice(bank.image(i));
+    }
+    let sup_feats = runner.extract_all(&sup, ep.support.len()).unwrap();
+    let ncm = NcmClassifier::fit(&sup_feats, bundle.feature_dim, &ep.support_labels, 5).unwrap();
+
+    let rx = FrameSource {
+        count: 24,
+        rate_fps: None,
+        img: bundle.img,
+        seed: 6,
+    }
+    .spawn(32);
+    let (metrics, _) = serve(
+        &runner,
+        &ncm,
+        rx,
+        BatchPolicy {
+            max_batch: 2, // cap below the executable batch
+            max_wait: Duration::from_millis(1),
+        },
+    )
+    .unwrap();
+    assert!(metrics.mean_batch_size() <= 2.0 + 1e-9);
+    assert_eq!(metrics.frames, 24);
+}
+
+/// Few-shot accuracy through the serving path must beat chance by a wide
+/// margin and degrade monotonically-ish from 16-bit to the bad 5-bit
+/// split — the Table-II signal surviving the full system.
+#[test]
+fn episode_accuracy_through_full_path() {
+    let Some(paths) = common::artifacts() else { return };
+    let runtime = Runtime::new().expect("pjrt");
+    let bundle = paths.model_bundle().expect("bundle");
+    let bank = FewshotBank::load(&paths.fewshot_bank()).expect("bank");
+    let configs = table2_configs();
+    let mut rng = Rng::new(0xAB);
+    let eps: Vec<_> = (0..40)
+        .map(|_| sample_episode(&mut rng, bank.num_classes, bank.per_class, 5, 5, 15).unwrap())
+        .collect();
+
+    let acc_of = |cfg| {
+        let runner =
+            BackboneRunner::new(&runtime, &bundle, &paths.backbone_hlo(8), 8, cfg).unwrap();
+        let feats = runner.extract_all(&bank.images, bank.num_images()).unwrap();
+        evaluate(&feats, bundle.feature_dim, &eps).unwrap().mean
+    };
+
+    let acc16 = acc_of(configs[7].1);
+    let acc5 = acc_of(configs[0].1);
+    assert!(acc16 > 0.5, "16-bit accuracy {acc16} too low");
+    assert!(acc16 > acc5 + 0.02, "no degradation: 16b {acc16} vs 5b {acc5}");
+}

@@ -1,0 +1,135 @@
+//! Integration: the full transform pipeline on realistic graphs — the
+//! Fig. 4 invariants (§III-C) and the §III-D conversion, end to end.
+
+mod common;
+
+use std::collections::HashMap;
+
+use bwade::build::{requantize_graph, synth_backbone_graph};
+use bwade::fixedpoint::{headline_config, QuantConfig};
+use bwade::graph::Graph;
+use bwade::ops::execute;
+use bwade::rng::Rng;
+use bwade::tensor::Tensor;
+use bwade::transforms::{run_default_pipeline, run_to_fixpoint};
+
+fn probe_feeds(graph: &Graph, seed: u64) -> HashMap<String, Tensor> {
+    let name = graph.inputs[0].clone();
+    let shape = graph.shape_of(&name).unwrap().to_vec();
+    let mut rng = Rng::new(seed);
+    let mut feeds = HashMap::new();
+    feeds.insert(name, Tensor::from_fn(shape, |_| rng.next_f32()));
+    feeds
+}
+
+#[test]
+fn default_pipeline_is_numerically_exact_on_synth_backbone() {
+    let mut graph = synth_backbone_graph([4, 8, 8, 16], 16, 4, 2);
+    requantize_graph(&mut graph, &headline_config()).unwrap();
+    let feeds = probe_feeds(&graph, 7);
+    let reports = run_default_pipeline(&mut graph, Some(&feeds), 1e-4).expect("pipeline");
+    // The probe ran after EVERY stage; none may diverge.
+    for r in &reports {
+        assert!(
+            r.max_divergence.unwrap_or(0.0) <= 1e-4,
+            "stage {} diverged",
+            r.transform
+        );
+    }
+}
+
+#[test]
+fn fig4_invariants_on_exported_graph() {
+    let Some(paths) = common::artifacts() else { return };
+    let mut graph = Graph::load(&paths.graph_json(), &paths.graph_weights()).unwrap();
+    requantize_graph(&mut graph, &headline_config()).unwrap();
+    let feeds = probe_feeds(&graph, 13);
+    let before = execute(&graph, &feeds).unwrap();
+
+    run_default_pipeline(&mut graph, None, 0.0).unwrap();
+
+    // §III-C end state: a single Transpose (the host-side input layout
+    // conversion), all MultiThresholds absorbed into HW units.
+    assert_eq!(graph.count_op("Transpose"), 1, "{:?}", graph.op_census());
+    assert_eq!(graph.count_op("MultiThreshold"), 0);
+    // 8 MVAUs: 6 with fused activation, 2 raw (residual second convs).
+    let mvaus: Vec<_> = graph.nodes.iter().filter(|n| n.op == "MVAU").collect();
+    assert_eq!(mvaus.len(), 8);
+    let fused = mvaus
+        .iter()
+        .filter(|n| n.attrs.int_or("apply_act", 0) == 1)
+        .count();
+    assert_eq!(fused, 6);
+    // §III-D end state: no ReduceMean; GlobalAccPool + scalar mul.
+    assert_eq!(graph.count_op("ReduceMean"), 0);
+    assert_eq!(graph.count_op("GlobalAccPool_hw"), 1);
+    assert_eq!(graph.count_op("ChannelwiseMul"), 1);
+
+    // Numerical equivalence of the fully-lowered HW graph.
+    let after = execute(&graph, &feeds).unwrap();
+    for (name, want) in &before {
+        let got = &after[name];
+        assert!(
+            got.allclose(want, 1e-4),
+            "{name} diverged by {}",
+            got.max_abs_diff(want)
+        );
+    }
+}
+
+#[test]
+fn pipeline_exact_across_multiple_configs() {
+    for (wi, wf, ai, af) in [(2u8, 3u8, 2u8, 2u8), (4, 4, 4, 4), (8, 8, 8, 8)] {
+        let quant = QuantConfig::from_split(wi, wf, ai, af).unwrap();
+        let mut graph = synth_backbone_graph([4, 8, 8, 16], 16, quant.act.bits, quant.act.frac_bits);
+        requantize_graph(&mut graph, &quant).unwrap();
+        let feeds = probe_feeds(&graph, 100 + wi as u64);
+        run_default_pipeline(&mut graph, Some(&feeds), 1e-4)
+            .unwrap_or_else(|e| panic!("config w{wi}.{wf} a{ai}.{af}: {e}"));
+    }
+}
+
+#[test]
+fn pipeline_is_deterministic() {
+    let build_once = || {
+        let mut g = synth_backbone_graph([4, 8, 8, 16], 16, 4, 2);
+        requantize_graph(&mut g, &headline_config()).unwrap();
+        run_default_pipeline(&mut g, None, 0.0).unwrap();
+        let mut census: Vec<(String, usize)> = g.op_census().into_iter().collect();
+        census.sort();
+        (g.nodes.len(), census)
+    };
+    assert_eq!(build_once(), build_once());
+}
+
+#[test]
+fn individual_absorb_requires_nchw_multithreshold() {
+    use bwade::graph::{AttrVal, Attrs, Node};
+    use bwade::transforms::transpose_opt::AbsorbTransposeIntoMultiThreshold;
+    // NHWC-typed MT after a transpose must NOT be absorbed again.
+    let mut g = Graph::new("t");
+    g.inputs = vec!["x".into()];
+    g.outputs = vec!["y".into()];
+    g.shapes.insert("x".into(), vec![1, 4, 4, 2]);
+    g.shapes.insert("xt".into(), vec![1, 2, 4, 4]);
+    g.shapes.insert("thr".into(), vec![1, 2]);
+    g.shapes.insert("y".into(), vec![1, 2, 4, 4]);
+    g.initializers
+        .insert("thr".into(), Tensor::new(vec![1, 2], vec![0.5, 1.0]).unwrap());
+    g.nodes.push(
+        Node::new("Transpose", "t0", vec!["x".into()], vec!["xt".into()]).with_attrs(
+            Attrs::new().with("perm", AttrVal::Ints(vec![0, 3, 1, 2])),
+        ),
+    );
+    g.nodes.push(
+        Node::new(
+            "MultiThreshold",
+            "mt",
+            vec!["xt".into(), "thr".into()],
+            vec!["y".into()],
+        )
+        .with_attrs(Attrs::new().with("data_layout", AttrVal::Str("NHWC".into()))),
+    );
+    let n = run_to_fixpoint(&mut g, &AbsorbTransposeIntoMultiThreshold).unwrap();
+    assert_eq!(n, 0, "NHWC MT must not be re-absorbed");
+}
