@@ -14,6 +14,7 @@
 use anyhow::{Context, Result};
 use bwade::artifacts::{ArtifactPaths, FewshotBank};
 use bwade::build::{build, DesignConfig};
+use bwade::coordinator::FeatureExtractor;
 use bwade::fewshot::{evaluate, sample_episode};
 use bwade::fixedpoint::table2_configs;
 use bwade::graph::Graph;

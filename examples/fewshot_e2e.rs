@@ -23,7 +23,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 use bwade::artifacts::{ArtifactPaths, FewshotBank};
 use bwade::build::{build, DesignConfig};
-use bwade::coordinator::{serve, BatchPolicy, FrameSource};
+use bwade::coordinator::{serve, BatchPolicy, FeatureExtractor, FrameSource};
 use bwade::fewshot::{evaluate, sample_episode, NcmClassifier};
 use bwade::fixedpoint::{baseline16_config, headline_config};
 use bwade::graph::Graph;

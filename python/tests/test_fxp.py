@@ -7,6 +7,8 @@ the two implementations must agree bit-exactly (same round-half-up rule).
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

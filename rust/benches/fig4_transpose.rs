@@ -20,7 +20,7 @@ use bwade::benchutil::bench;
 use bwade::build::{requantize_graph, synth_backbone_graph};
 use bwade::fixedpoint::headline_config;
 use bwade::graph::Graph;
-use bwade::ops::execute;
+use bwade::plan::ExecutionPlan;
 use bwade::rng::Rng;
 use bwade::tensor::Tensor;
 use bwade::transforms::{self, run_to_fixpoint, Transform};
@@ -47,7 +47,11 @@ fn main() {
     let mut graph = load_or_synth();
     requantize_graph(&mut graph, &headline_config()).unwrap();
     let feeds = probe(&graph);
-    let reference = execute(&graph, &feeds).expect("reference execution");
+    // One compiled plan per side of the rewrite (the transform-harness
+    // pattern): reference plan here, post-rewrite plan below.
+    let reference = ExecutionPlan::compile(&graph)
+        .and_then(|p| p.run(&feeds))
+        .expect("reference execution");
 
     println!("== E4 / Fig. 4: Transpose-node optimization ==\n");
     println!("imported graph: {} nodes, {} Transpose", graph.nodes.len(), graph.count_op("Transpose"));
@@ -123,7 +127,9 @@ fn main() {
     );
 
     // Equivalence across the whole rewrite.
-    let after = execute(&graph, &feeds).expect("post-rewrite execution");
+    let after = ExecutionPlan::compile(&graph)
+        .and_then(|p| p.run(&feeds))
+        .expect("post-rewrite execution");
     let max_div = reference
         .iter()
         .map(|(k, v)| after[k].max_abs_diff(v))

@@ -12,7 +12,7 @@ use std::time::Duration;
 
 use bwade::artifacts::{ArtifactPaths, FewshotBank};
 use bwade::benchutil::env_usize;
-use bwade::coordinator::{serve, BatchPolicy, FrameSource};
+use bwade::coordinator::{serve, BatchPolicy, FeatureExtractor, FrameSource};
 use bwade::fewshot::{sample_episode, NcmClassifier};
 use bwade::fixedpoint::headline_config;
 use bwade::rng::Rng;

@@ -4,7 +4,9 @@
 //!
 //! Covers every request-path and build-path hot loop:
 //!   * dataflow cycle simulator (target: >= 10M simulated cycles/s),
-//!   * graph reference executor (transform-verification cost),
+//!   * execution engine: string-keyed interpreter vs compiled plan, on
+//!     both the compute-bound backbone and an overhead-bound elementwise
+//!     chain (the serving regime PEFSL showed dominates small models),
 //!   * fixed-point PTQ of the full weight set,
 //!   * NCM fit+predict (the per-frame CPU-side work of Fig. 5),
 //!   * episode sampling,
@@ -14,10 +16,39 @@ use bwade::benchutil::{bench, throughput};
 use bwade::build::{requantize_graph, synth_backbone_graph, DesignConfig};
 use bwade::fewshot::{sample_episode, NcmClassifier};
 use bwade::fixedpoint::{headline_config, FxpFormat};
+use bwade::graph::{AttrVal, Attrs, Graph, Node};
+use bwade::plan::{ExecutionPlan, PlanScratch};
 use bwade::resources::Device;
 use bwade::rng::Rng;
 use bwade::systolic::{simulate, MatmulLayer, SystolicConfig};
 use bwade::tensor::Tensor;
+
+/// A deep chain of cheap elementwise ops on a small tensor: per-node
+/// dispatch overhead dominates, which is the regime where the plan engine
+/// (no clone/toposort/hashing, arena buffers, in-place elementwise) wins.
+fn overhead_chain(depth: usize, width: usize) -> Graph {
+    let mut g = Graph::new("overhead_chain");
+    g.inputs = vec!["t0".into()];
+    g.shapes.insert("t0".into(), vec![1, width]);
+    g.shapes.insert("s".into(), vec![]);
+    g.initializers.insert("s".into(), bwade::tensor::Tensor::scalar(1.0009765625));
+    for i in 0..depth {
+        let (a, b) = (format!("t{i}"), format!("t{}", i + 1));
+        g.shapes.insert(b.clone(), vec![1, width]);
+        let op = if i % 2 == 0 { "Mul" } else { "Add" };
+        g.nodes.push(Node::new(op, &format!("n{i}"), vec![a, "s".into()], vec![b]));
+    }
+    let last = format!("t{depth}");
+    let out = "out".to_string();
+    g.shapes.insert(out.clone(), vec![width, 1]);
+    g.nodes.push(
+        Node::new("Reshape", "rs", vec![last], vec![out.clone()]).with_attrs(
+            Attrs::new().with("shape", AttrVal::Ints(vec![width as i64, 1])),
+        ),
+    );
+    g.outputs = vec![out];
+    g
+}
 
 fn main() {
     println!("== hotpath micro-benchmarks (L3 §Perf) ==\n");
@@ -49,7 +80,7 @@ fn main() {
     let cps = sim_cycles_total as f64 / r.mean().as_secs_f64();
     println!("  -> {sim_cycles_total} cycles simulated, {:.2} Mcycles/s", cps / 1e6);
 
-    // ---- graph reference executor ------------------------------------
+    // ---- execution engine: interpreter vs compiled plan ---------------
     let exec_graph = {
         let mut g = synth_backbone_graph([8, 16, 32, 64], 32, 4, 2);
         requantize_graph(&mut g, &headline_config()).unwrap();
@@ -62,9 +93,38 @@ fn main() {
         exec_graph.inputs[0].clone(),
         Tensor::from_fn(in_shape, |_| rng.next_f32()),
     );
-    bench("graph executor: NCHW backbone, 1 image", 1, 3, || {
-        bwade::ops::execute(&exec_graph, &feeds).unwrap();
+    let r_interp = bench("engine: interpreter, NCHW backbone, 1 image", 1, 3, || {
+        bwade::ops::execute_interpreted(&exec_graph, &feeds).unwrap();
     });
+    let backbone_plan = ExecutionPlan::compile(&exec_graph).unwrap();
+    let mut scratch = PlanScratch::default();
+    let r_plan = bench("engine: compiled plan,  same backbone image", 1, 3, || {
+        backbone_plan.run_with(&feeds, &mut scratch).unwrap();
+    });
+    println!(
+        "  -> plan speedup over interpreter (compute-bound backbone): {:.2}x",
+        r_interp.mean().as_secs_f64() / r_plan.mean().as_secs_f64().max(1e-12)
+    );
+
+    // Overhead-bound regime: deep elementwise chain, tiny tensors — the
+    // per-node dispatch cost the paper's deployment story is about.
+    let chain = overhead_chain(256, 64);
+    let mut chain_feeds = std::collections::HashMap::new();
+    chain_feeds.insert("t0".to_string(), Tensor::from_fn(vec![1, 64], |i| i as f32 * 1e-3));
+    let r_interp = bench("engine: interpreter, 256-op elementwise chain", 5, 50, || {
+        bwade::ops::execute_interpreted(&chain, &chain_feeds).unwrap();
+    });
+    let chain_plan = ExecutionPlan::compile(&chain).unwrap();
+    let mut scratch = PlanScratch::default();
+    let r_plan = bench("engine: compiled plan,  256-op elementwise chain", 5, 50, || {
+        chain_plan.run_with(&chain_feeds, &mut scratch).unwrap();
+    });
+    println!(
+        "  -> plan speedup over interpreter (overhead-bound chain): {:.2}x  ({} of {} steps in-place)",
+        r_interp.mean().as_secs_f64() / r_plan.mean().as_secs_f64().max(1e-12),
+        chain_plan.num_inplace_steps(),
+        chain_plan.num_steps()
+    );
 
     // ---- fixed-point quantization -------------------------------------
     let fmt = FxpFormat::signed(6, 5).unwrap();

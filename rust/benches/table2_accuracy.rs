@@ -12,6 +12,7 @@ use std::time::Instant;
 
 use bwade::artifacts::{ArtifactPaths, FewshotBank};
 use bwade::benchutil::env_usize;
+use bwade::coordinator::FeatureExtractor;
 use bwade::fewshot::{evaluate, sample_episode};
 use bwade::fixedpoint::table2_configs;
 use bwade::rng::Rng;

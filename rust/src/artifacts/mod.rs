@@ -1,0 +1,317 @@
+//! Artifact access — the rust side of the `make artifacts` contract.
+//!
+//! python/compile/aot.py writes everything the request path needs into
+//! ./artifacts (override with `BWADE_ARTIFACTS`):
+//!
+//! * `graph.json` + `graph_weights.bin` — the pre-streamlining NCHW
+//!   compiler graph ([`crate::graph::Graph::load`]);
+//! * `model_manifest.json` + `model_weights.bin` — folded float weights
+//!   in HLO argument order ([`ModelBundle`]); the rust side PTQs them per
+//!   bit-width config ([`ModelBundle::quantized_args`]);
+//! * `fewshot_bank.bin` — the novel-class image bank ([`FewshotBank`]);
+//! * `backbone_b{1,8}.hlo.txt` / `test_mvau.hlo.txt` — AOT-lowered HLO
+//!   for the PJRT runtime;
+//! * `.stamp` — the completion sentinel [`ArtifactPaths::exists`] checks.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::fixedpoint::FxpFormat;
+use crate::json::Json;
+use crate::tensor::Tensor;
+
+/// Reinterpret a little-endian byte slice as f32 values.
+pub fn read_f32_slice(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Well-known locations of the exported artifacts.
+#[derive(Debug, Clone)]
+pub struct ArtifactPaths {
+    pub dir: PathBuf,
+}
+
+impl ArtifactPaths {
+    /// `./artifacts`, overridden by `BWADE_ARTIFACTS`.
+    pub fn default_dir() -> Self {
+        let dir = std::env::var("BWADE_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self {
+            dir: PathBuf::from(dir),
+        }
+    }
+
+    pub fn at(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into() }
+    }
+
+    /// True when `make artifacts` completed (the sentinel file exists).
+    pub fn exists(&self) -> bool {
+        self.dir.join(".stamp").exists()
+    }
+
+    pub fn graph_json(&self) -> PathBuf {
+        self.dir.join("graph.json")
+    }
+
+    pub fn graph_weights(&self) -> PathBuf {
+        self.dir.join("graph_weights.bin")
+    }
+
+    pub fn model_manifest(&self) -> PathBuf {
+        self.dir.join("model_manifest.json")
+    }
+
+    pub fn model_weights(&self) -> PathBuf {
+        self.dir.join("model_weights.bin")
+    }
+
+    pub fn fewshot_bank(&self) -> PathBuf {
+        self.dir.join("fewshot_bank.bin")
+    }
+
+    pub fn backbone_hlo(&self, batch: usize) -> PathBuf {
+        self.dir.join(format!("backbone_b{batch}.hlo.txt"))
+    }
+
+    pub fn test_mvau_hlo(&self) -> PathBuf {
+        self.dir.join("test_mvau.hlo.txt")
+    }
+
+    /// Load the model bundle (manifest + weights blob).
+    pub fn model_bundle(&self) -> Result<ModelBundle> {
+        ModelBundle::load(&self.model_manifest(), &self.model_weights())
+    }
+}
+
+/// One backbone conv layer's metadata (aot.py `meta["layers"]`).
+#[derive(Debug, Clone)]
+pub struct LayerMeta {
+    pub name: String,
+    pub cin: usize,
+    pub cout: usize,
+    pub pool: bool,
+    pub res_begin: bool,
+    pub res_add: bool,
+}
+
+/// One HLO argument's metadata (model_manifest.json `args`).
+#[derive(Debug, Clone)]
+pub struct ArgMeta {
+    pub name: String,
+    /// "weight" (HWIO conv kernel) or "bias".
+    pub kind: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub elems: usize,
+}
+
+/// The deployed model: folded float weights in HLO argument order plus
+/// the architecture metadata the serving side needs.
+#[derive(Debug, Clone)]
+pub struct ModelBundle {
+    pub widths: Vec<usize>,
+    pub feature_dim: usize,
+    pub img: usize,
+    pub batch_sizes: Vec<usize>,
+    pub layers: Vec<LayerMeta>,
+    pub args: Vec<ArgMeta>,
+    /// Float tensors aligned with `args` (pre-quantization).
+    pub arg_data: Vec<Tensor>,
+}
+
+impl ModelBundle {
+    pub fn load(manifest_path: &Path, weights_path: &Path) -> Result<Self> {
+        let doc = Json::parse_file(manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let blob = std::fs::read(weights_path)
+            .with_context(|| format!("reading {}", weights_path.display()))?;
+
+        let mut args = Vec::new();
+        let mut arg_data = Vec::new();
+        for a in doc.get("args")?.as_arr()? {
+            let meta = ArgMeta {
+                name: a.get("name")?.as_str()?.to_string(),
+                kind: a.get("kind")?.as_str()?.to_string(),
+                shape: a.get("shape")?.as_usize_vec()?,
+                offset: a.get("offset")?.as_usize()?,
+                elems: a.get("elems")?.as_usize()?,
+            };
+            let end = meta.offset + meta.elems * 4;
+            if end > blob.len() {
+                bail!("arg {} overruns weights blob", meta.name);
+            }
+            let data = read_f32_slice(&blob[meta.offset..end]);
+            arg_data.push(Tensor::new(meta.shape.clone(), data)?);
+            args.push(meta);
+        }
+
+        let mut layers = Vec::new();
+        for l in doc.get("layers")?.as_arr()? {
+            layers.push(LayerMeta {
+                name: l.get("name")?.as_str()?.to_string(),
+                cin: l.get("cin")?.as_usize()?,
+                cout: l.get("cout")?.as_usize()?,
+                pool: l.get("pool")?.as_bool()?,
+                res_begin: l.get("res_begin")?.as_bool()?,
+                res_add: l.get("res_add")?.as_bool()?,
+            });
+        }
+
+        Ok(Self {
+            widths: doc.get("widths")?.as_usize_vec()?,
+            feature_dim: doc.get("feature_dim")?.as_usize()?,
+            img: doc.get("img")?.as_usize()?,
+            batch_sizes: doc.get("batch_sizes")?.as_usize_vec()?,
+            layers,
+            args,
+            arg_data,
+        })
+    }
+
+    /// Total parameter count of the deployed backbone.
+    pub fn param_count(&self) -> usize {
+        self.args.iter().map(|a| a.elems).sum()
+    }
+
+    /// PTQ the float args for one bit-width config: conv weights onto
+    /// `weight_fmt`, biases onto the (wide) accumulator format — exactly
+    /// what python's `model.ptq` does at export time.
+    pub fn quantized_args(&self, weight_fmt: FxpFormat, acc_fmt: FxpFormat) -> Vec<Tensor> {
+        self.args
+            .iter()
+            .zip(&self.arg_data)
+            .map(|(meta, tensor)| {
+                let fmt = if meta.kind == "weight" { weight_fmt } else { acc_fmt };
+                let mut t = tensor.clone();
+                fmt.quantize_slice(t.data_mut());
+                t
+            })
+            .collect()
+    }
+}
+
+/// The novel-class image bank (fewshot_bank.bin, dataset.py format):
+/// class-major NHWC f32 images; image `i` belongs to class `i / per_class`.
+#[derive(Debug, Clone)]
+pub struct FewshotBank {
+    pub num_classes: usize,
+    pub per_class: usize,
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    /// Flat `[num_images, h, w, c]` pixel data.
+    pub images: Vec<f32>,
+}
+
+const BANK_MAGIC: u32 = 0x4257_5A46;
+const BANK_VERSION: u32 = 1;
+
+impl FewshotBank {
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() < 28 {
+            bail!("fewshot bank {} truncated", path.display());
+        }
+        let u32_at = |i: usize| {
+            u32::from_le_bytes([bytes[i * 4], bytes[i * 4 + 1], bytes[i * 4 + 2], bytes[i * 4 + 3]])
+        };
+        if u32_at(0) != BANK_MAGIC || u32_at(1) != BANK_VERSION {
+            bail!("bad fewshot bank header in {}", path.display());
+        }
+        let (nc, per, h, w, c) = (
+            u32_at(2) as usize,
+            u32_at(3) as usize,
+            u32_at(4) as usize,
+            u32_at(5) as usize,
+            u32_at(6) as usize,
+        );
+        let images = read_f32_slice(&bytes[28..]);
+        if images.len() != nc * per * h * w * c {
+            bail!(
+                "fewshot bank data length {} != {}x{}x{}x{}x{}",
+                images.len(),
+                nc,
+                per,
+                h,
+                w,
+                c
+            );
+        }
+        Ok(Self {
+            num_classes: nc,
+            per_class: per,
+            height: h,
+            width: w,
+            channels: c,
+            images,
+        })
+    }
+
+    pub fn num_images(&self) -> usize {
+        self.num_classes * self.per_class
+    }
+
+    /// Pixels of one image (flat HWC).
+    pub fn image(&self, i: usize) -> &[f32] {
+        let per = self.height * self.width * self.channels;
+        &self.images[i * per..(i + 1) * per]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_slice_round_trips() {
+        let vals = [1.5f32, -2.25, 0.0, f32::MAX];
+        let mut bytes = Vec::new();
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(read_f32_slice(&bytes), vals);
+    }
+
+    #[test]
+    fn default_dir_respects_env() {
+        // Don't mutate the env (tests run in parallel) — just shape checks.
+        let p = ArtifactPaths::at("/tmp/xyz");
+        assert_eq!(p.backbone_hlo(8), PathBuf::from("/tmp/xyz/backbone_b8.hlo.txt"));
+        assert_eq!(p.graph_json(), PathBuf::from("/tmp/xyz/graph.json"));
+        assert!(!ArtifactPaths::at("/nonexistent_bwade").exists());
+    }
+
+    #[test]
+    fn bank_rejects_garbage() {
+        let dir = std::env::temp_dir().join("bwade_bank_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, [0u8; 32]).unwrap();
+        assert!(FewshotBank::load(&path).is_err());
+    }
+
+    #[test]
+    fn bank_parses_valid_header() {
+        let dir = std::env::temp_dir().join("bwade_bank_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ok.bin");
+        let (nc, per, h, w, c) = (2u32, 3u32, 2u32, 2u32, 1u32);
+        let mut bytes = Vec::new();
+        for v in [BANK_MAGIC, BANK_VERSION, nc, per, h, w, c] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let n = (nc * per * h * w * c) as usize;
+        for i in 0..n {
+            bytes.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let bank = FewshotBank::load(&path).unwrap();
+        assert_eq!(bank.num_images(), 6);
+        assert_eq!(bank.image(1)[0], 4.0); // second image starts at elem 4
+    }
+}

@@ -1,0 +1,637 @@
+//! The design environment driver — the paper's Fig. 3 "build" flow as one
+//! call: requantize -> streamline/lower/§III-C/§III-D -> HW mapping ->
+//! folding search against the device budget -> FIFO sizing -> bounded
+//! dataflow simulation -> Table-III-style report.
+//!
+//! Also home of [`synth_backbone_graph`] (the ResNet-9 import synthesized
+//! at arbitrary widths — mirrors python/compile/export_graph.py so the
+//! whole pipeline runs without `make artifacts`) and [`requantize_graph`]
+//! (rust-side PTQ: the bit-width is a *design parameter* here, the
+//! paper's core claim vs Tensil's fixed 16/32-bit).
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{bail, Result};
+
+use crate::dataflow::{size_fifos, DataflowSim};
+use crate::fixedpoint::{headline_config, FxpFormat, QuantConfig};
+use crate::graph::{AttrVal, Attrs, Graph, Node};
+use crate::hw::{initiation_interval, model_graph, total_resources, total_weight_bits, HwNodeModel};
+use crate::resources::{Device, Resources};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use crate::transforms::{convert_to_hw, run_default_pipeline, StageReport};
+
+/// One design point: bit-width config + throughput/utilization targets.
+#[derive(Debug, Clone)]
+pub struct DesignConfig {
+    pub quant: QuantConfig,
+    /// Fold until this frame rate is met (None = fold until the
+    /// utilization cap stops paying).
+    pub target_fps: Option<f64>,
+    /// Per-resource utilization ceiling for the folding search (LUT / FF
+    /// / DSP; BRAM is relaxed — weight memory is a floor set by the model,
+    /// not a foldable quantity).
+    pub max_utilization: f64,
+    /// Numerically verify every transform stage against a probe input.
+    pub verify: bool,
+}
+
+impl Default for DesignConfig {
+    fn default() -> Self {
+        Self {
+            quant: headline_config(),
+            target_fps: Some(60.0),
+            max_utilization: 0.85,
+            verify: false,
+        }
+    }
+}
+
+/// Everything `build` learned about one design point.
+#[derive(Debug, Clone)]
+pub struct BuildReport {
+    pub stages: Vec<StageReport>,
+    pub census_before: HashMap<String, usize>,
+    pub census_after: HashMap<String, usize>,
+    pub models: Vec<HwNodeModel>,
+    pub config: QuantConfig,
+    pub total_resources: Resources,
+    /// BRAM-resident weight bits (Table I's "weights stored in BRAM").
+    pub weight_bits: u64,
+    pub fifo_depths: HashMap<String, u64>,
+    /// Cycles until frame 0 exits (single-frame latency).
+    pub latency_cycles: u64,
+    /// Steady-state cycles per frame (the initiation interval actually
+    /// achieved with sized FIFOs).
+    pub steady_cycles: u64,
+    pub latency_ms: f64,
+    pub fps: f64,
+}
+
+impl BuildReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "config {}  |  {} HW layers  |  {}  |  weights {:.1} KiB on-chip  |  latency {:.2} ms  {:.1} fps (II {} cycles)",
+            self.config.describe(),
+            self.models.len(),
+            self.total_resources,
+            self.weight_bits as f64 / 8192.0,
+            self.latency_ms,
+            self.fps,
+            self.steady_cycles
+        )
+    }
+}
+
+/// Run the whole design environment on an imported (or synthesized) NCHW
+/// graph.  The graph is rewritten in place to its fully-lowered HW form.
+pub fn build(graph: &mut Graph, cfg: &DesignConfig, device: &Device) -> Result<BuildReport> {
+    let census_before = graph.op_census();
+    requantize_graph(graph, &cfg.quant)?;
+
+    // Probe input for per-stage numerical verification.  Weights and
+    // activations sit on the fixed-point grid after requantization, so
+    // every rewrite is exact up to threshold-boundary float noise; 2e-3
+    // is the documented stage tolerance.
+    let probe = if cfg.verify {
+        let mut rng = Rng::new(0xBEEF);
+        let mut feeds = HashMap::new();
+        for input in &graph.inputs {
+            let shape = graph.shape_of(input)?.to_vec();
+            feeds.insert(input.clone(), Tensor::from_fn(shape, |_| rng.next_f32()));
+        }
+        Some(feeds)
+    } else {
+        None
+    };
+    let stages = run_default_pipeline(graph, probe.as_ref(), 2e-3)?;
+    if !convert_to_hw::is_fully_hw(graph) {
+        bail!(
+            "build left non-HW ops in the graph: {:?}",
+            graph.op_census()
+        );
+    }
+    let census_after = graph.op_census();
+
+    let models = folding_search(graph, cfg, device)?;
+    let frame_in: u64 = graph
+        .shape_of(&graph.inputs[0])?
+        .iter()
+        .product::<usize>() as u64;
+
+    // FIFO sizing: unbounded run, capacities = observed peaks; then a
+    // bounded 3-frame run proves the sized design streams without
+    // deadlock and measures the achieved latency/II.
+    let fifo_depths = size_fifos(&models, &graph.inputs, &graph.outputs, frame_in)?;
+    let mut sim = DataflowSim::new(&models, &graph.inputs, &graph.outputs, 2)?;
+    for (name, depth) in &fifo_depths {
+        sim.set_capacity(name, *depth);
+    }
+    let sim_res = sim.run(3, frame_in)?;
+
+    let total = total_resources(&models);
+    let weight_bits = total_weight_bits(&models);
+    let steady = sim_res.steady_interval.max(1);
+    Ok(BuildReport {
+        stages,
+        census_before,
+        census_after,
+        config: cfg.quant,
+        total_resources: total,
+        weight_bits,
+        fifo_depths,
+        latency_cycles: sim_res.first_frame_latency,
+        steady_cycles: steady,
+        latency_ms: device.cycles_to_ms(sim_res.first_frame_latency),
+        fps: device.fps(steady),
+        models,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Rust-side PTQ
+// ---------------------------------------------------------------------------
+
+/// Quantize the graph's weight/bias initializers onto `quant`'s grids:
+/// conv/matmul weights onto the weight format, biases onto the (wide)
+/// accumulator format — mirroring python `model.ptq`.  Thresholds and
+/// scale constants are already exact grid values and are left alone.
+/// Idempotent (quantization is a projection).
+pub fn requantize_graph(graph: &mut Graph, quant: &QuantConfig) -> Result<()> {
+    let acc = quant.acc_format();
+    let mut jobs: Vec<(String, FxpFormat)> = Vec::new();
+    for node in &graph.nodes {
+        match node.op.as_str() {
+            "Conv" => {
+                jobs.push((node.inputs[1].clone(), quant.weight));
+                if let Some(b) = node.inputs.get(2) {
+                    jobs.push((b.clone(), acc));
+                }
+            }
+            "MatMul" => {
+                jobs.push((node.inputs[1].clone(), quant.weight));
+            }
+            "MVAU" => {
+                jobs.push((node.inputs[1].clone(), quant.weight));
+                if let Some(b) = node.inputs.get(2) {
+                    jobs.push((b.clone(), acc));
+                }
+            }
+            // Bias Adds from conv lowering carry one initializer input.
+            "Add" => {
+                for t in &node.inputs {
+                    if graph.is_initializer(t) {
+                        jobs.push((t.clone(), acc));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    for (name, fmt) in jobs {
+        if let Some(t) = graph.initializers.get_mut(&name) {
+            fmt.quantize_slice(t.data_mut());
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic backbone import
+// ---------------------------------------------------------------------------
+
+/// FINN-style [C, K] threshold matrix for an unsigned quantizer:
+/// `t_k = (k + 0.5) * 2^-f`, replicated per channel — the same matrix
+/// export_graph.py emits.
+fn thresholds(channels: usize, bits: u8, frac_bits: u8) -> Tensor {
+    let k = ((1u32 << bits) - 1) as usize;
+    let scale = (1u64 << frac_bits) as f32;
+    let row: Vec<f32> = (0..k).map(|i| (i as f32 + 0.5) / scale).collect();
+    let mut data = Vec::with_capacity(channels * k);
+    for _ in 0..channels {
+        data.extend_from_slice(&row);
+    }
+    Tensor::new(vec![channels, k], data).expect("threshold matrix")
+}
+
+/// Synthesize the pre-streamlining ResNet-9 NCHW import at arbitrary
+/// widths — structurally identical to what export_graph.py writes for the
+/// trained model (8 Convs, 9 MultiThresholds + scale Muls, 2 residual
+/// Adds, 3 MaxPools, final spatial ReduceMean), with deterministic
+/// He-initialized weights.  `act_bits`/`act_frac` set the layer
+/// activation quantizers; the input quantizer is fixed at u8.8 (the
+/// camera interface, python model.INPUT_FMT).
+pub fn synth_backbone_graph(
+    widths: [usize; 4],
+    img: usize,
+    act_bits: u8,
+    act_frac: u8,
+) -> Graph {
+    let [c0, c1, c2, c3] = widths;
+    // (name, cin, cout, pool, res_begin, res_add) — python model.arch().
+    let specs: [(&str, usize, usize, bool, bool, bool); 8] = [
+        ("stem", 3, c0, false, false, false),
+        ("conv1", c0, c1, true, false, false),
+        ("res1a", c1, c1, false, true, false),
+        ("res1b", c1, c1, false, false, true),
+        ("conv2", c1, c2, true, false, false),
+        ("conv3", c2, c3, true, false, false),
+        ("res2a", c3, c3, false, true, false),
+        ("res2b", c3, c3, false, false, true),
+    ];
+    let mut g = Graph::new(&format!("synth_resnet9_{c0}_{c1}_{c2}_{c3}_img{img}"));
+    let mut rng = Rng::new(0xB3ADE);
+
+    g.inputs = vec!["global_in".to_string()];
+    g.shapes.insert("global_in".into(), vec![1, 3, img, img]);
+
+    // Input quantizer (u8.8): MultiThreshold (codes) + Mul (scale back).
+    g.shapes.insert("in_thresh".into(), vec![3, 255]);
+    g.initializers.insert("in_thresh".into(), thresholds(3, 8, 8));
+    g.shapes.insert("in_codes".into(), vec![1, 3, img, img]);
+    g.nodes.push(
+        Node::new(
+            "MultiThreshold",
+            "quant_in",
+            vec!["global_in".into(), "in_thresh".into()],
+            vec!["in_codes".into()],
+        )
+        .with_attrs(
+            Attrs::new()
+                .with("out_scale", AttrVal::Float(1.0))
+                .with("out_bias", AttrVal::Float(0.0))
+                .with("data_layout", AttrVal::Str("NCHW".into())),
+        ),
+    );
+    g.shapes.insert("in_scale".into(), vec![]);
+    g.initializers
+        .insert("in_scale".into(), Tensor::scalar(1.0 / 256.0));
+    g.shapes.insert("in_q".into(), vec![1, 3, img, img]);
+    g.nodes.push(Node::new(
+        "Mul",
+        "quant_in_scale",
+        vec!["in_codes".into(), "in_scale".into()],
+        vec!["in_q".into()],
+    ));
+
+    let act_scale = (1u64 << act_frac) as f32;
+    let n_thresh = ((1u32 << act_bits) - 1) as usize;
+    let mut cur = "in_q".to_string();
+    let mut h = img;
+    let mut skip: Option<String> = None;
+    for (name, cin, cout, pool, res_begin, res_add) in specs {
+        if res_begin {
+            skip = Some(cur.clone());
+        }
+        // Conv weights: OIHW, He-init; bias small.
+        let fan_in = 9 * cin;
+        let std = (2.0 / fan_in as f32).sqrt();
+        let w = Tensor::from_fn(vec![cout, cin, 3, 3], |_| rng.normal() * std);
+        let b = Tensor::from_fn(vec![cout], |_| rng.normal() * 0.05);
+        g.shapes.insert(format!("{name}_w"), vec![cout, cin, 3, 3]);
+        g.initializers.insert(format!("{name}_w"), w);
+        g.shapes.insert(format!("{name}_b"), vec![cout]);
+        g.initializers.insert(format!("{name}_b"), b);
+        let conv_out = format!("{name}_conv");
+        g.shapes.insert(conv_out.clone(), vec![1, cout, h, h]);
+        g.nodes.push(
+            Node::new(
+                "Conv",
+                name,
+                vec![cur.clone(), format!("{name}_w"), format!("{name}_b")],
+                vec![conv_out.clone()],
+            )
+            .with_attrs(
+                Attrs::new()
+                    .with("kernel", AttrVal::Ints(vec![3, 3]))
+                    .with("stride", AttrVal::Ints(vec![1, 1]))
+                    .with("pad", AttrVal::Ints(vec![1, 1]))
+                    .with("group", AttrVal::Int(1)),
+            ),
+        );
+        cur = conv_out;
+        if res_add {
+            let s = skip.clone().expect("res_add without res_begin");
+            let add_out = format!("{name}_add");
+            g.shapes.insert(add_out.clone(), vec![1, cout, h, h]);
+            g.nodes.push(Node::new(
+                "Add",
+                &format!("{name}_res"),
+                vec![cur.clone(), s],
+                vec![add_out.clone()],
+            ));
+            cur = add_out;
+        }
+        // Activation quantizer (absorbs ReLU): MultiThreshold + Mul.
+        g.shapes
+            .insert(format!("{name}_thresh"), vec![cout, n_thresh]);
+        g.initializers
+            .insert(format!("{name}_thresh"), thresholds(cout, act_bits, act_frac));
+        let codes = format!("{name}_codes");
+        g.shapes.insert(codes.clone(), vec![1, cout, h, h]);
+        g.nodes.push(
+            Node::new(
+                "MultiThreshold",
+                &format!("{name}_quant"),
+                vec![cur.clone(), format!("{name}_thresh")],
+                vec![codes.clone()],
+            )
+            .with_attrs(
+                Attrs::new()
+                    .with("out_scale", AttrVal::Float(1.0))
+                    .with("out_bias", AttrVal::Float(0.0))
+                    .with("data_layout", AttrVal::Str("NCHW".into())),
+            ),
+        );
+        g.shapes.insert(format!("{name}_actscale"), vec![]);
+        g.initializers
+            .insert(format!("{name}_actscale"), Tensor::scalar(1.0 / act_scale));
+        let scaled = format!("{name}_q");
+        g.shapes.insert(scaled.clone(), vec![1, cout, h, h]);
+        g.nodes.push(Node::new(
+            "Mul",
+            &format!("{name}_quant_scale"),
+            vec![codes, format!("{name}_actscale")],
+            vec![scaled.clone()],
+        ));
+        cur = scaled;
+        if pool {
+            h /= 2;
+            let pool_out = format!("{name}_pool");
+            g.shapes.insert(pool_out.clone(), vec![1, cout, h, h]);
+            g.nodes.push(
+                Node::new(
+                    "MaxPool",
+                    &format!("{name}_maxpool"),
+                    vec![cur.clone()],
+                    vec![pool_out.clone()],
+                )
+                .with_attrs(
+                    Attrs::new()
+                        .with("kernel", AttrVal::Ints(vec![2, 2]))
+                        .with("stride", AttrVal::Ints(vec![2, 2])),
+                ),
+            );
+            cur = pool_out;
+        }
+    }
+
+    // The backbone's final node — the paper's §III-D target.
+    g.outputs = vec!["global_out".to_string()];
+    g.shapes.insert("global_out".into(), vec![1, c3]);
+    g.nodes.push(
+        Node::new("ReduceMean", "gap", vec![cur], vec!["global_out".into()]).with_attrs(
+            Attrs::new()
+                .with("axes", AttrVal::Ints(vec![2, 3]))
+                .with("keepdims", AttrVal::Int(0)),
+        ),
+    );
+    g
+}
+
+// ---------------------------------------------------------------------------
+// Folding search
+// ---------------------------------------------------------------------------
+
+/// Greedy folding (PE/SIMD) search: repeatedly double the parallelism of
+/// the initiation-interval bottleneck until the fps target is met or the
+/// LUT/FF/DSP utilization cap would be exceeded (BRAM is relaxed — at
+/// minimal folding the weight memory is a fixed floor).  Writes the
+/// chosen pe/simd attributes into the graph and returns the node models
+/// at the final folding.
+pub fn folding_search(
+    graph: &mut Graph,
+    cfg: &DesignConfig,
+    device: &Device,
+) -> Result<Vec<HwNodeModel>> {
+    let cap_lut = device.budget.lut * cfg.max_utilization;
+    let cap_ff = device.budget.ff * cfg.max_utilization;
+    let cap_dsp = device.budget.dsp * cfg.max_utilization;
+    let fits = |r: &Resources| r.lut <= cap_lut && r.ff <= cap_ff && r.dsp <= cap_dsp;
+    let target_ii: Option<u64> = cfg
+        .target_fps
+        .map(|fps| (device.clock_mhz * 1e6 / fps).max(1.0) as u64);
+
+    let mut frozen: HashSet<String> = HashSet::new();
+    for _ in 0..10_000 {
+        let models = model_graph(graph, &cfg.quant)?;
+        let ii = initiation_interval(&models);
+        if let Some(t) = target_ii {
+            if ii <= t {
+                break;
+            }
+        }
+        // The bottleneck bounds the II; folding anything else is wasted
+        // area.  If the bottleneck can't improve, the search is done.
+        let Some(bottleneck) = models.iter().max_by_key(|m| m.cycles) else {
+            break;
+        };
+        if bottleneck.cycles <= 1 || frozen.contains(&bottleneck.name) {
+            break;
+        }
+        let name = bottleneck.name.clone();
+        let saved = save_folding(graph, &name);
+        if !bump_folding(graph, &name)? {
+            frozen.insert(name);
+            break;
+        }
+        let after = model_graph(graph, &cfg.quant)?;
+        if !fits(&total_resources(&after)) {
+            restore_folding(graph, &name, saved);
+            frozen.insert(name);
+            break;
+        }
+    }
+    model_graph(graph, &cfg.quant)
+}
+
+fn node_index(graph: &Graph, name: &str) -> Option<usize> {
+    graph.nodes.iter().position(|n| n.name == name)
+}
+
+fn save_folding(graph: &Graph, name: &str) -> (i64, i64) {
+    let node = &graph.nodes[node_index(graph, name).expect("folding node")];
+    (node.attrs.int_or("pe", 1), node.attrs.int_or("simd", 1))
+}
+
+fn restore_folding(graph: &mut Graph, name: &str, saved: (i64, i64)) {
+    let idx = node_index(graph, name).expect("folding node");
+    graph.nodes[idx].attrs.set("pe", AttrVal::Int(saved.0));
+    graph.nodes[idx].attrs.set("simd", AttrVal::Int(saved.1));
+}
+
+/// Double one folding knob of the named node; false when maxed out.
+fn bump_folding(graph: &mut Graph, name: &str) -> Result<bool> {
+    let Some(idx) = node_index(graph, name) else {
+        bail!("folding target {name} not in graph");
+    };
+    // Read bounds with an immutable borrow first.
+    let (op, pe, simd, k, n) = {
+        let node = &graph.nodes[idx];
+        let pe = node.attrs.int_or("pe", 1).max(1);
+        let simd = node.attrs.int_or("simd", 1).max(1);
+        let (k, n): (i64, i64) = match node.op.as_str() {
+            "MVAU" => {
+                let w = graph.shape_of(&node.inputs[1])?;
+                (w[0] as i64, w[1] as i64)
+            }
+            "ConvolutionInputGenerator" | "GlobalAccPool_hw" => {
+                let x = graph.shape_of(&node.inputs[0])?;
+                (*x.last().unwrap_or(&1) as i64, 1)
+            }
+            "Thresholding" | "StreamingMaxPool" | "AddStreams" | "ChannelwiseMul" => {
+                let y = graph.shape_of(&node.outputs[0])?;
+                (1, *y.last().unwrap_or(&1) as i64)
+            }
+            // Transpose (host-side DMA) and anything else: not foldable.
+            _ => (1, 1),
+        };
+        (node.op.clone(), pe, simd, k, n)
+    };
+    let node = &mut graph.nodes[idx];
+    match op.as_str() {
+        "MVAU" => {
+            if simd < k {
+                node.attrs.set("simd", AttrVal::Int((simd * 2).min(k)));
+            } else if pe < n {
+                node.attrs.set("pe", AttrVal::Int((pe * 2).min(n)));
+            } else {
+                return Ok(false);
+            }
+            Ok(true)
+        }
+        "ConvolutionInputGenerator" | "GlobalAccPool_hw" => {
+            if simd < k {
+                node.attrs.set("simd", AttrVal::Int((simd * 2).min(k)));
+                Ok(true)
+            } else {
+                Ok(false)
+            }
+        }
+        "Thresholding" | "StreamingMaxPool" | "AddStreams" | "ChannelwiseMul" => {
+            if pe < n {
+                node.attrs.set("pe", AttrVal::Int((pe * 2).min(n)));
+                Ok(true)
+            } else {
+                Ok(false)
+            }
+        }
+        _ => Ok(false),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_graph_matches_export_structure() {
+        let g = synth_backbone_graph([4, 8, 8, 16], 16, 4, 2);
+        g.validate().expect("valid synth graph");
+        assert_eq!(g.count_op("Conv"), 8);
+        assert_eq!(g.count_op("MultiThreshold"), 9); // 8 act + 1 input
+        assert_eq!(g.count_op("Mul"), 9); // matching scale muls
+        assert_eq!(g.count_op("ReduceMean"), 1);
+        assert_eq!(g.count_op("Add"), 2);
+        assert_eq!(g.count_op("MaxPool"), 3);
+        assert_eq!(g.shape_of("global_in").unwrap(), &[1, 3, 16, 16]);
+        assert_eq!(g.shape_of("global_out").unwrap(), &[1, 16]);
+    }
+
+    #[test]
+    fn synth_graph_is_deterministic() {
+        let a = synth_backbone_graph([4, 8, 8, 16], 16, 4, 2);
+        let b = synth_backbone_graph([4, 8, 8, 16], 16, 4, 2);
+        for (name, t) in &a.initializers {
+            assert_eq!(t, &b.initializers[name], "initializer {name}");
+        }
+    }
+
+    #[test]
+    fn synth_graph_executes() {
+        let g = synth_backbone_graph([4, 8, 8, 16], 16, 4, 2);
+        let mut rng = Rng::new(1);
+        let mut feeds = HashMap::new();
+        feeds.insert(
+            "global_in".to_string(),
+            Tensor::from_fn(vec![1, 3, 16, 16], |_| rng.next_f32()),
+        );
+        let out = crate::ops::execute(&g, &feeds).unwrap();
+        assert_eq!(out["global_out"].shape(), &[1, 16]);
+        assert!(out["global_out"].data().iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn requantize_puts_weights_on_grid() {
+        let mut g = synth_backbone_graph([4, 8, 8, 16], 16, 4, 2);
+        let quant = headline_config(); // s6.5 weights
+        requantize_graph(&mut g, &quant).unwrap();
+        let w = &g.initializers["stem_w"];
+        for &v in w.data() {
+            let code = v as f64 * quant.weight.scale();
+            assert_eq!(code, code.round(), "weight {v} off the s6.5 grid");
+        }
+        // Thresholds untouched (already exact).
+        assert_eq!(
+            g.initializers["stem_thresh"],
+            synth_backbone_graph([4, 8, 8, 16], 16, 4, 2).initializers["stem_thresh"]
+        );
+    }
+
+    #[test]
+    fn folding_search_reduces_ii_under_target() {
+        let device = Device::pynq_z1();
+        let mut g = synth_backbone_graph([4, 8, 8, 16], 16, 4, 2);
+        let cfg = DesignConfig {
+            target_fps: Some(5_000.0), // aggressive: forces real folding
+            max_utilization: 0.85,
+            ..DesignConfig::default()
+        };
+        requantize_graph(&mut g, &cfg.quant).unwrap();
+        run_default_pipeline(&mut g, None, 0.0).unwrap();
+        let baseline = model_graph(&g, &cfg.quant).unwrap();
+        let ii0 = initiation_interval(&baseline);
+        let models = folding_search(&mut g, &cfg, &device).unwrap();
+        let ii1 = initiation_interval(&models);
+        assert!(ii1 < ii0, "folding did not improve II: {ii0} -> {ii1}");
+    }
+
+    #[test]
+    fn build_end_to_end_on_synth_graph() {
+        let device = Device::pynq_z1();
+        let mut g = synth_backbone_graph([4, 8, 8, 16], 16, 4, 2);
+        let report = build(&mut g, &DesignConfig::default(), &device).expect("build");
+        assert!(convert_to_hw::is_fully_hw(&g));
+        assert!(report.fps > 0.0);
+        assert!(report.latency_ms > 0.0);
+        assert!(report.weight_bits > 0);
+        assert!(report.latency_cycles >= report.steady_cycles);
+        assert_eq!(report.census_before["Conv"], 8);
+        assert!(!report.fifo_depths.is_empty());
+        // The report prints.
+        assert!(report.summary().contains("fps"));
+    }
+
+    #[test]
+    fn build_with_verification_is_numerically_silent() {
+        let device = Device::pynq_z1();
+        let mut g = synth_backbone_graph([4, 8, 8, 16], 16, 4, 2);
+        let report = build(
+            &mut g,
+            &DesignConfig {
+                verify: true,
+                ..DesignConfig::default()
+            },
+            &device,
+        )
+        .expect("build");
+        for s in &report.stages {
+            assert!(
+                s.max_divergence.unwrap_or(0.0) <= 2e-3,
+                "stage {} diverged",
+                s.transform
+            );
+        }
+    }
+}

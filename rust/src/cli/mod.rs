@@ -107,14 +107,21 @@ COMMANDS
              --max-util <f>              device utilization cap (default 0.85)
              --verify                    numerically verify each transform stage
   compare    FINN dataflow vs Tensil systolic (Table III / Table I)
-  table2     accuracy sweep over the eight Table-II configs (needs PJRT)
+  table2     accuracy sweep over the eight Table-II configs
              --episodes <n>              episodes per config (default 200)
+             --engine <pjrt|plan>        backbone engine (default: pjrt if
+                                         built with the feature, else plan)
   serve      run the Fig.-5 serving pipeline on synthetic frames
              --frames <n>  --batch <n>  --rate <fps>  --config <...>
+             --engine <pjrt|plan>
   episodes   few-shot evaluation for one config
              --config <...>  --episodes <n>  --shot <k>  --way <n>
+             --engine <pjrt|plan>
   info       print artifact + model metadata
   help       this text
+
+The `plan` engine executes the exported compiler graph through the
+compiled ExecutionPlan (rust/src/plan/) — python-free and XLA-free.
 
 Artifacts are read from ./artifacts (override with BWADE_ARTIFACTS).";
 

@@ -8,19 +8,81 @@
 //! paper reports as 16.3 ms / 61.5 fps.
 //!
 //! Threading: the frame source runs on its own std thread (no tokio in
-//! the offline crate set — DESIGN.md §2); the PJRT executable stays on
+//! the offline crate set — DESIGN.md §2); the backbone executor stays on
 //! the coordinator thread.  Frames are plain `Vec<f32>` so nothing
 //! non-Send crosses threads.
+//!
+//! The backbone is abstracted behind [`FeatureExtractor`] so the same
+//! serving loop drives either the PJRT executable
+//! (`runtime::BackboneRunner`) or the compiled-plan engine
+//! (`plan::PlanRunner`) — the python-free fallback that needs no XLA at
+//! all.
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::fewshot::NcmClassifier;
 use crate::rng::Rng;
-use crate::runtime::BackboneRunner;
+
+/// A deployed backbone: turns flat NHWC image batches into features.
+///
+/// `extract` consumes exactly `input_elems()` floats (`batch()` frames,
+/// zero-padded by the caller when short) and returns
+/// `batch() * feature_dim()` features.
+pub trait FeatureExtractor {
+    /// Frames per `extract` invocation.
+    fn batch(&self) -> usize;
+
+    /// Square image side length.
+    fn img(&self) -> usize;
+
+    /// Features per frame.
+    fn feature_dim(&self) -> usize;
+
+    /// Elements of one input batch.
+    fn input_elems(&self) -> usize {
+        self.batch() * self.img() * self.img() * 3
+    }
+
+    /// Run one batch of NHWC images (flat, `input_elems()` long).
+    fn extract(&self, images: &[f32]) -> Result<Vec<f32>>;
+
+    /// Extract features for the first `live` frames of a full batch
+    /// buffer (the rest is zero padding).  The default runs the whole
+    /// batch — correct for fixed-batch engines like a compiled PJRT
+    /// executable; batch-flexible engines (the plan runner) override it
+    /// to skip the padding entirely.
+    fn extract_live(&self, images: &[f32], live: usize) -> Result<Vec<f32>> {
+        let mut feats = self.extract(images)?;
+        feats.truncate(live.min(self.batch()) * self.feature_dim());
+        Ok(feats)
+    }
+
+    /// Extract features for an arbitrary number of images, batching and
+    /// zero-padding the tail.
+    fn extract_all(&self, images: &[f32], count: usize) -> Result<Vec<f32>> {
+        let per = self.img() * self.img() * 3;
+        if images.len() != count * per {
+            bail!("image buffer size mismatch");
+        }
+        let dim = self.feature_dim();
+        let mut feats = Vec::with_capacity(count * dim);
+        let mut batch_buf = vec![0.0f32; self.input_elems()];
+        let mut i = 0;
+        while i < count {
+            let take = (count - i).min(self.batch());
+            batch_buf[..take * per].copy_from_slice(&images[i * per..(i + take) * per]);
+            batch_buf[take * per..].fill(0.0);
+            let out = self.extract_live(&batch_buf, take)?;
+            feats.extend_from_slice(&out[..take * dim]);
+            i += take;
+        }
+        Ok(feats)
+    }
+}
 
 /// One frame entering the pipeline.
 pub struct Frame {
@@ -144,20 +206,21 @@ impl FrameSource {
 
 /// Serve frames through backbone + NCM until the source is exhausted.
 ///
-/// Returns (metrics, classifications).
+/// Returns (metrics, classifications).  Takes any [`FeatureExtractor`]
+/// (PJRT backbone or compiled-plan engine).
 pub fn serve(
-    runner: &BackboneRunner,
+    runner: &dyn FeatureExtractor,
     ncm: &NcmClassifier,
     rx: mpsc::Receiver<Frame>,
     policy: BatchPolicy,
 ) -> Result<(Metrics, Vec<Classified>)> {
     let mut metrics = Metrics::default();
     let mut results = Vec::new();
-    let per = runner.img * runner.img * 3;
+    let per = runner.img() * runner.img() * 3;
     let mut batch_buf = vec![0.0f32; runner.input_elems()];
     let mut pending: VecDeque<Frame> = VecDeque::new();
     let start = Instant::now();
-    let max_batch = policy.max_batch.min(runner.batch).max(1);
+    let max_batch = policy.max_batch.min(runner.batch()).max(1);
 
     'outer: loop {
         // Block for the first frame of the batch.
@@ -196,10 +259,11 @@ pub fn serve(
             batch_buf[i * per..(i + 1) * per].copy_from_slice(&f.pixels);
         }
         batch_buf[take * per..].fill(0.0);
-        let feats = runner.extract(&batch_buf)?;
+        let feats = runner.extract_live(&batch_buf, take)?;
         let done = Instant::now();
+        let dim = runner.feature_dim();
         for (i, f) in batch.iter().enumerate() {
-            let class = ncm.predict(&feats[i * runner.feature_dim..(i + 1) * runner.feature_dim]);
+            let class = ncm.predict(&feats[i * dim..(i + 1) * dim]);
             let latency = done.duration_since(f.enqueued);
             metrics.latencies_us.push(latency.as_micros() as u64);
             results.push(Classified {

@@ -360,8 +360,10 @@ impl Graph {
         }
     }
 
-    /// Topologically sort nodes by tensor dependencies.
-    pub fn toposort(&mut self) -> Result<()> {
+    /// Topological order of the node indices, without mutating or cloning
+    /// the graph — the plan compiler's entry point, and the backing of
+    /// [`Graph::toposort`].
+    pub fn toposort_order(&self) -> Result<Vec<usize>> {
         let n = self.nodes.len();
         // tensor -> producing node index
         let mut producer: HashMap<&str, usize> = HashMap::new();
@@ -399,11 +401,18 @@ impl Graph {
         if order.len() != n {
             bail!("graph has a cycle");
         }
-        let mut new_nodes = Vec::with_capacity(n);
-        for &i in &order {
-            new_nodes.push(self.nodes[i].clone());
-        }
-        self.nodes = new_nodes;
+        Ok(order)
+    }
+
+    /// Topologically sort nodes by tensor dependencies (in place; nodes
+    /// are moved, not cloned).
+    pub fn toposort(&mut self) -> Result<()> {
+        let order = self.toposort_order()?;
+        let mut slots: Vec<Option<Node>> = self.nodes.drain(..).map(Some).collect();
+        self.nodes = order
+            .into_iter()
+            .map(|i| slots[i].take().expect("order is a permutation"))
+            .collect();
         Ok(())
     }
 
@@ -424,12 +433,13 @@ impl Graph {
         for init in self.initializers.keys() {
             available.insert(init.as_str());
         }
-        // Must be checkable in topological order.
-        let mut g = self.clone();
-        g.toposort()?;
-        for node in &g.nodes {
+        // Must be checkable in topological order (cycle detection), but
+        // no clone is needed: producer() is order-independent.
+        let order = self.toposort_order()?;
+        for &i in &order {
+            let node = &self.nodes[i];
             for input in &node.inputs {
-                if !available.contains(input.as_str()) && g.producer(input).is_none() {
+                if !available.contains(input.as_str()) && self.producer(input).is_none() {
                     bail!("node {} reads undefined tensor {input}", node.name);
                 }
             }

@@ -8,11 +8,22 @@
 //! * L1/L2 live in `python/compile/` (Pallas MVAU kernel, ResNet-9 QAT
 //!   model) and are AOT-lowered to `artifacts/*.hlo.txt` by `make
 //!   artifacts`;
-//! * L3 is this crate: the FINN-style compiler ([`graph`], [`transforms`],
-//!   [`hw`]), the dataflow + systolic simulators ([`dataflow`],
-//!   [`systolic`]), the PJRT runtime ([`runtime`]) and the serving
-//!   coordinator ([`coordinator`]), all driven by the design-environment
-//!   pipeline in [`build`].
+//! * L3 is this crate, split along the compile/execute seam:
+//!   - **compile time** — the FINN-style compiler ([`graph`],
+//!     [`transforms`], [`hw`]), the folding search and design-environment
+//!     pipeline in [`build`], and the dataflow + systolic simulators
+//!     ([`dataflow`], [`systolic`]);
+//!   - **request time** — the compiled-plan engine ([`plan`]): a [`graph`]
+//!     is compiled ONCE into an `ExecutionPlan` (toposort resolved at
+//!     build time, tensor names interned to dense slot ids, initializers
+//!     bound up front, liveness-driven buffer arena), then executed with
+//!     zero graph work per call.  `ops::execute` is a thin compatibility
+//!     wrapper over it; the old string-keyed interpreter survives only as
+//!     `ops::execute_interpreted` for differential tests and benchmarks.
+//!   - **serving** — the coordinator ([`coordinator`]) drives any
+//!     `FeatureExtractor`: the PJRT runtime ([`runtime`], `pjrt` feature)
+//!     or the plan engine's `PlanRunner`, plus the CPU-side few-shot
+//!     classifier ([`fewshot`]).
 pub mod artifacts;
 pub mod benchutil;
 pub mod build;
@@ -25,6 +36,7 @@ pub mod graph;
 pub mod hw;
 pub mod json;
 pub mod ops;
+pub mod plan;
 pub mod resources;
 pub mod rng;
 pub mod runtime;

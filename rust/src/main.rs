@@ -5,13 +5,14 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use bwade::artifacts::{ArtifactPaths, FewshotBank};
-use bwade::build::{build, DesignConfig};
+use bwade::artifacts::{ArtifactPaths, FewshotBank, ModelBundle};
+use bwade::build::{build, requantize_graph, DesignConfig};
 use bwade::cli::{parse_config, Args, USAGE};
-use bwade::coordinator::{serve, BatchPolicy, FrameSource};
+use bwade::coordinator::{serve, BatchPolicy, FeatureExtractor, FrameSource};
 use bwade::fewshot::{evaluate, sample_episode, NcmClassifier};
-use bwade::fixedpoint::{baseline16_config, table2_configs};
+use bwade::fixedpoint::{baseline16_config, table2_configs, QuantConfig};
 use bwade::graph::Graph;
+use bwade::plan::PlanRunner;
 use bwade::resources::{utilization_line, Device};
 use bwade::rng::Rng;
 use bwade::runtime::{BackboneRunner, Runtime};
@@ -45,6 +46,72 @@ fn run(argv: &[String]) -> Result<()> {
 fn load_graph(paths: &ArtifactPaths) -> Result<Graph> {
     Graph::load(&paths.graph_json(), &paths.graph_weights())
         .context("loading artifacts/graph.json — run `make artifacts` first")
+}
+
+/// Default backbone engine: PJRT when compiled in, else the plan engine.
+fn default_engine() -> &'static str {
+    if cfg!(feature = "pjrt") {
+        "pjrt"
+    } else {
+        "plan"
+    }
+}
+
+/// Backbone engine factory (`--engine pjrt|plan`): loads the shared state
+/// once — the PJRT client for `pjrt`, the float compiler graph for `plan`
+/// — and builds one extractor per bit-width config.
+///
+/// Declare the factory BEFORE the extractors it produces: locals drop in
+/// reverse declaration order, so the PJRT client outlives every
+/// executable built from it.
+struct EngineFactory {
+    engine: String,
+    runtime: Option<Runtime>,
+    graph: Option<Graph>,
+}
+
+impl EngineFactory {
+    fn new(engine: &str, paths: &ArtifactPaths) -> Result<Self> {
+        let (runtime, graph) = match engine {
+            "pjrt" => (Some(Runtime::new()?), None),
+            // The compiled-plan engine executes the exported compiler
+            // graph directly — no XLA, no python, weights PTQ'd in rust.
+            "plan" => (None, Some(load_graph(paths)?)),
+            other => bail!("unknown engine {other:?} (use pjrt or plan)"),
+        };
+        Ok(Self {
+            engine: engine.to_string(),
+            runtime,
+            graph,
+        })
+    }
+
+    fn make(
+        &self,
+        paths: &ArtifactPaths,
+        bundle: &ModelBundle,
+        batch: usize,
+        cfg: QuantConfig,
+    ) -> Result<Box<dyn FeatureExtractor>> {
+        match self.engine.as_str() {
+            "pjrt" => {
+                let runtime = self.runtime.as_ref().expect("pjrt factory has a client");
+                Ok(Box::new(BackboneRunner::new(
+                    runtime,
+                    bundle,
+                    &paths.backbone_hlo(batch),
+                    batch,
+                    cfg,
+                )?))
+            }
+            _ => {
+                // PTQ a fresh copy of the float import per config.
+                let mut graph = self.graph.clone().expect("plan factory has a graph");
+                requantize_graph(&mut graph, &cfg)?;
+                Ok(Box::new(PlanRunner::new(&graph, batch)?))
+            }
+        }
+    }
 }
 
 fn cmd_build(args: &Args) -> Result<()> {
@@ -198,21 +265,21 @@ fn cmd_compare(args: &Args) -> Result<()> {
 
 fn cmd_table2(args: &Args) -> Result<()> {
     let episodes = args.get_usize("episodes", 200)?;
+    let engine = args.get_or("engine", default_engine()).to_string();
     let paths = ArtifactPaths::default_dir();
     let bundle = paths.model_bundle()?;
     let bank = FewshotBank::load(&paths.fewshot_bank())?;
-    let runtime = Runtime::new()?;
     let batch = *bundle.batch_sizes.iter().max().unwrap_or(&1);
-    let hlo = paths.backbone_hlo(batch);
+    let factory = EngineFactory::new(&engine, &paths)?;
 
-    println!("== Table II: accuracy on the synthetic novel split (5-way 5-shot) ==");
+    println!("== Table II: accuracy on the synthetic novel split (5-way 5-shot, engine {engine}) ==");
     println!("{:<16} {:>8} {:>12} {:>10}", "config", "max bits", "acc [%]", "ci95");
     let mut rng = Rng::new(0xEE);
     let eps: Vec<_> = (0..episodes)
         .map(|_| sample_episode(&mut rng, bank.num_classes, bank.per_class, 5, 5, 15))
         .collect::<Result<_>>()?;
     for (name, cfg) in table2_configs() {
-        let runner = BackboneRunner::new(&runtime, &bundle, &hlo, batch, cfg)?;
+        let runner = factory.make(&paths, &bundle, batch, cfg)?;
         let feats = runner.extract_all(&bank.images, bank.num_images())?;
         let report = evaluate(&feats, bundle.feature_dim, &eps)?;
         println!(
@@ -231,27 +298,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let frames = args.get_usize("frames", 256)?;
     let batch_opt = args.get_usize("batch", 0)?;
     let rate = args.get_f64("rate", 0.0)?;
+    let engine = args.get_or("engine", default_engine()).to_string();
     let paths = ArtifactPaths::default_dir();
     let bundle = paths.model_bundle()?;
-    let runtime = Runtime::new()?;
     let cfg = parse_config(args.get_or("config", "b6_c1.5_r2.2"))?;
+    // PJRT executables exist only at the exported batch sizes; the plan
+    // engine batches at any size.
     let exec_batch = if batch_opt > 0 {
-        *bundle
-            .batch_sizes
-            .iter()
-            .filter(|&&b| b >= batch_opt)
-            .min()
-            .unwrap_or_else(|| bundle.batch_sizes.iter().max().unwrap())
+        if engine == "plan" {
+            batch_opt
+        } else {
+            *bundle
+                .batch_sizes
+                .iter()
+                .filter(|&&b| b >= batch_opt)
+                .min()
+                .unwrap_or_else(|| bundle.batch_sizes.iter().max().unwrap())
+        }
     } else {
         *bundle.batch_sizes.iter().max().unwrap_or(&1)
     };
-    let runner = BackboneRunner::new(
-        &runtime,
-        &bundle,
-        &paths.backbone_hlo(exec_batch),
-        exec_batch,
-        cfg,
-    )?;
+    let factory = EngineFactory::new(&engine, &paths)?;
+    let runner = factory.make(&paths, &bundle, exec_batch, cfg)?;
 
     // Prototypes from the bank (5-way support) so classification is real.
     let bank = FewshotBank::load(&paths.fewshot_bank())?;
@@ -276,11 +344,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 5)? as u64),
     };
     println!(
-        "serving {frames} frames (config {}, exec batch {exec_batch}, policy batch {}) ...",
+        "serving {frames} frames (engine {engine}, config {}, exec batch {exec_batch}, policy batch {}) ...",
         cfg.describe(),
         policy.max_batch
     );
-    let (metrics, _) = serve(&runner, &ncm, rx, policy)?;
+    let (metrics, _) = serve(runner.as_ref(), &ncm, rx, policy)?;
     println!("{}", metrics.summary());
     println!("paper Fig. 5 reference: 16.3 ms backbone latency, 61.5 fps");
     Ok(())
@@ -290,14 +358,18 @@ fn cmd_episodes(args: &Args) -> Result<()> {
     let n_eps = args.get_usize("episodes", 200)?;
     let way = args.get_usize("way", 5)?;
     let shot = args.get_usize("shot", 5)?;
+    let engine = args.get_or("engine", default_engine()).to_string();
     let cfg = parse_config(args.get_or("config", "b6_c1.5_r2.2"))?;
     let paths = ArtifactPaths::default_dir();
     let bundle = paths.model_bundle()?;
     let bank = FewshotBank::load(&paths.fewshot_bank())?;
-    let runtime = Runtime::new()?;
     let batch = *bundle.batch_sizes.iter().max().unwrap_or(&1);
-    let runner = BackboneRunner::new(&runtime, &bundle, &paths.backbone_hlo(batch), batch, cfg)?;
-    println!("extracting features for {} bank images ...", bank.num_images());
+    let factory = EngineFactory::new(&engine, &paths)?;
+    let runner = factory.make(&paths, &bundle, batch, cfg)?;
+    println!(
+        "extracting features for {} bank images (engine {engine}) ...",
+        bank.num_images()
+    );
     let feats = runner.extract_all(&bank.images, bank.num_images())?;
     let mut rng = Rng::new(args.get_usize("seed", 0xEE)? as u64);
     let eps: Vec<_> = (0..n_eps)

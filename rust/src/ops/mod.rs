@@ -1,5 +1,20 @@
 //! Reference executors for every graph op — the rust analogue of FINN's
-//! `execute_onnx`.
+//! `execute_onnx`, refactored around the compiled-plan engine.
+//!
+//! Three layers of API, fastest first:
+//!
+//! * [`execute_node_into`] / [`execute_node_inplace`] — kernels that write
+//!   into plan-provided buffers (the [`crate::plan`] engine's path: no
+//!   per-node allocation, elementwise ops mutate their input in place);
+//! * [`execute_node`] — compatibility form: infers the output shape
+//!   ([`infer_output_shape`]), allocates, and delegates to the into-form;
+//! * [`execute`] — whole-graph execution; now a thin wrapper that compiles
+//!   an [`crate::plan::ExecutionPlan`] and runs it.  The original
+//!   string-keyed interpreter survives as [`execute_interpreted`] for
+//!   differential tests and the hotpath_micro engine comparison — it
+//!   re-clones and re-toposorts the graph and resolves every tensor
+//!   through `HashMap<String, Tensor>` per call, which is exactly the
+//!   overhead the plan engine removes.
 //!
 //! Transform correctness is proven by executing the graph before and after
 //! each rewrite on the same input and requiring (near-)exact equality; the
@@ -17,10 +32,33 @@ use std::collections::HashMap;
 use anyhow::{anyhow, bail, Result};
 
 use crate::graph::{Graph, Node};
-use crate::tensor::Tensor;
+use crate::tensor::{broadcast_shape, Tensor};
 
 /// Execute the graph on named input tensors; returns all graph outputs.
+///
+/// Compatibility wrapper over the plan engine: compiles an
+/// [`crate::plan::ExecutionPlan`] for this call and runs it once.  Callers
+/// that execute the same graph repeatedly should compile the plan
+/// themselves and call [`crate::plan::ExecutionPlan::run_with`].
+///
+/// Contract note: plan compilation sizes buffers from the graph's shape
+/// table, so every node output needs a `shapes` entry — the same
+/// invariant [`Graph::validate`] enforces.  A hand-built graph without
+/// annotations (which the old interpreter would run) fails at compile
+/// with an "unknown tensor" error; annotate the shapes or use
+/// [`execute_interpreted`].
 pub fn execute(graph: &Graph, feeds: &HashMap<String, Tensor>) -> Result<HashMap<String, Tensor>> {
+    crate::plan::ExecutionPlan::compile(graph)?.run(feeds)
+}
+
+/// The legacy string-keyed interpreter, preserved verbatim for
+/// differential testing against the plan engine and for the
+/// interpreter-vs-plan benchmark: clones + toposorts the graph and keys
+/// every tensor through a `HashMap<String, Tensor>` on every call.
+pub fn execute_interpreted(
+    graph: &Graph,
+    feeds: &HashMap<String, Tensor>,
+) -> Result<HashMap<String, Tensor>> {
     let mut env: HashMap<String, Tensor> = HashMap::new();
     for (k, v) in feeds {
         env.insert(k.clone(), v.clone());
@@ -61,44 +99,205 @@ pub fn execute(graph: &Graph, feeds: &HashMap<String, Tensor>) -> Result<HashMap
     Ok(result)
 }
 
-/// Execute a single node on resolved input tensors.
+/// Execute a single node on resolved input tensors (compatibility form:
+/// infers the output shape, allocates, delegates to the into-form).
 pub fn execute_node(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape()).collect();
+    let out_shape = infer_output_shape(node, &shapes)?;
+    let mut out = Tensor::zeros(out_shape);
+    execute_node_into(node, inputs, &mut out)?;
+    Ok(vec![out])
+}
+
+/// Output shape of a node given its input shapes — shared by the compat
+/// executor and the plan compiler's shape cross-check.
+pub fn infer_output_shape(node: &Node, inputs: &[&[usize]]) -> Result<Vec<usize>> {
+    let in_shape = |i: usize| -> Result<&[usize]> {
+        inputs
+            .get(i)
+            .copied()
+            .ok_or_else(|| anyhow!("node {}: missing input {i}", node.name))
+    };
     match node.op.as_str() {
-        "Conv" => conv(node, inputs),
-        "MultiThreshold" => multithreshold(node, inputs),
-        "Mul" => Ok(vec![inputs[0].broadcast_with(inputs[1], |a, b| a * b)?]),
-        "Add" => Ok(vec![inputs[0].broadcast_with(inputs[1], |a, b| a + b)?]),
-        "MaxPool" => maxpool(node, inputs),
-        "MaxPoolNHWC" => maxpool_nhwc(inputs),
-        "ReduceMean" => reduce_mean(node, inputs),
+        "Conv" => {
+            let kernel = node.attrs.ints("kernel")?;
+            let stride = node.attrs.ints("stride")?;
+            let pad = node.attrs.ints("pad")?;
+            let x = in_shape(0)?;
+            let w = in_shape(1)?;
+            if x.len() != 4 || w.len() != 4 {
+                bail!("conv input/weight must be 4-D, got {x:?} / {w:?}");
+            }
+            let ho = (x[2] + 2 * pad[0] as usize - kernel[0] as usize) / stride[0] as usize + 1;
+            let wo = (x[3] + 2 * pad[1] as usize - kernel[1] as usize) / stride[1] as usize + 1;
+            Ok(vec![x[0], w[0], ho, wo])
+        }
+        "MultiThreshold" | "Thresholding" => Ok(in_shape(0)?.to_vec()),
+        "Mul" | "Add" | "AddStreams" | "ChannelwiseMul" => {
+            broadcast_shape(in_shape(0)?, in_shape(1)?)
+        }
+        "MaxPool" => {
+            let kernel = node.attrs.ints("kernel")?;
+            let x = in_shape(0)?;
+            if x.len() != 4 {
+                bail!("maxpool input must be 4-D");
+            }
+            Ok(vec![x[0], x[1], x[2] / kernel[0] as usize, x[3] / kernel[1] as usize])
+        }
+        "MaxPoolNHWC" | "StreamingMaxPool" => {
+            let x = in_shape(0)?;
+            if x.len() != 4 {
+                bail!("pool input must be 4-D");
+            }
+            Ok(vec![x[0], x[1] / 2, x[2] / 2, x[3]])
+        }
+        "ReduceMean" => {
+            let axes: Vec<usize> = node.attrs.ints("axes")?.iter().map(|&a| a as usize).collect();
+            let keepdims = node.attrs.int_or("keepdims", 0) != 0;
+            let x = in_shape(0)?;
+            let mut out = Vec::new();
+            for (i, &d) in x.iter().enumerate() {
+                if axes.contains(&i) {
+                    if keepdims {
+                        out.push(1);
+                    }
+                } else {
+                    out.push(d);
+                }
+            }
+            Ok(out)
+        }
         "Transpose" => {
-            let perm: Vec<usize> = node.attrs.ints("perm")?.iter().map(|&i| i as usize).collect();
-            Ok(vec![inputs[0].transpose(&perm)?])
+            let perm: Vec<usize> = node.attrs.ints("perm")?.iter().map(|&p| p as usize).collect();
+            let x = in_shape(0)?;
+            if perm.len() != x.len() {
+                bail!("perm {perm:?} rank mismatch with {x:?}");
+            }
+            Ok(perm.iter().map(|&p| x[p]).collect())
         }
         "Reshape" => {
-            let shape: Vec<usize> =
-                node.attrs.ints("shape")?.iter().map(|&i| i as usize).collect();
-            Ok(vec![inputs[0].clone().reshape(shape)?])
+            Ok(node.attrs.ints("shape")?.iter().map(|&d| d as usize).collect())
         }
-        "Im2Col" => im2col(node, inputs),
-        "MatMul" => matmul(inputs),
-        "GlobalAccPool" => global_acc_pool(inputs),
-        // HW layers (behavioural semantics; cycle/resource models in hw/).
-        "MVAU" => mvau(node, inputs),
-        "Thresholding" => multithreshold(node, inputs),
-        "ConvolutionInputGenerator" => im2col(node, inputs),
-        "StreamingMaxPool" => maxpool_nhwc(inputs),
-        "GlobalAccPool_hw" => global_acc_pool(inputs),
-        "AddStreams" => Ok(vec![inputs[0].broadcast_with(inputs[1], |a, b| a + b)?]),
-        "ChannelwiseMul" => Ok(vec![inputs[0].broadcast_with(inputs[1], |a, b| a * b)?]),
+        "Im2Col" | "ConvolutionInputGenerator" => {
+            let kernel = node.attrs.ints("kernel")?;
+            let stride = node.attrs.ints("stride")?;
+            let pad = node.attrs.ints("pad")?;
+            let x = in_shape(0)?;
+            if x.len() != 4 {
+                bail!("im2col input must be 4-D");
+            }
+            let (kh, kw) = (kernel[0] as usize, kernel[1] as usize);
+            let ho = (x[1] + 2 * pad[0] as usize - kh) / stride[0] as usize + 1;
+            let wo = (x[2] + 2 * pad[1] as usize - kw) / stride[1] as usize + 1;
+            Ok(vec![x[0], ho, wo, kh * kw * x[3]])
+        }
+        "MatMul" | "MVAU" => {
+            let x = in_shape(0)?;
+            let w = in_shape(1)?;
+            if x.is_empty() || w.len() != 2 {
+                bail!("matmul shapes {x:?} x {w:?} unsupported");
+            }
+            let mut out = x[..x.len() - 1].to_vec();
+            out.push(w[1]);
+            Ok(out)
+        }
+        "GlobalAccPool" | "GlobalAccPool_hw" => {
+            let x = in_shape(0)?;
+            if x.len() != 4 {
+                bail!("gap input must be 4-D");
+            }
+            Ok(vec![x[0], x[3]])
+        }
         other => bail!("no executor for op {other}"),
     }
+}
+
+/// Execute a single-output node into a caller-provided buffer.
+///
+/// `out` must already have the node's output shape ([`infer_output_shape`]);
+/// its *contents* may be arbitrary — every kernel either fully overwrites
+/// or zero-fills before accumulating.
+pub fn execute_node_into(node: &Node, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
+    match node.op.as_str() {
+        "Conv" => conv_into(node, inputs, out),
+        "MultiThreshold" | "Thresholding" => {
+            copy_into(inputs[0], out)?;
+            threshold_in_place(
+                out,
+                inputs[1],
+                node.attrs.str_or("data_layout", "NCHW"),
+                node.attrs.float_or("out_scale", 1.0) as f32,
+                node.attrs.float_or("out_bias", 0.0) as f32,
+            )
+        }
+        "Mul" | "ChannelwiseMul" => inputs[0].broadcast_into(inputs[1], |a, b| a * b, out),
+        "Add" | "AddStreams" => inputs[0].broadcast_into(inputs[1], |a, b| a + b, out),
+        "MaxPool" => maxpool_into(node, inputs, out),
+        "MaxPoolNHWC" | "StreamingMaxPool" => maxpool_nhwc_into(inputs, out),
+        "ReduceMean" => reduce_mean_into(node, inputs, out),
+        "Transpose" => {
+            let perm: Vec<usize> = node.attrs.ints("perm")?.iter().map(|&i| i as usize).collect();
+            inputs[0].transpose_into(&perm, out)
+        }
+        "Reshape" => copy_into(inputs[0], out),
+        "Im2Col" | "ConvolutionInputGenerator" => im2col_into(node, inputs, out),
+        "MatMul" => matmul_into(inputs[0], inputs[1], out),
+        "GlobalAccPool" | "GlobalAccPool_hw" => global_acc_pool_into(inputs, out),
+        "MVAU" => mvau_into(node, inputs, out),
+        other => bail!("no executor for op {other}"),
+    }
+}
+
+/// Ops the plan engine may execute in place, mutating the first input's
+/// buffer instead of allocating an output (requires equal element count;
+/// for non-Reshape ops, equal shape — the plan compiler checks).
+pub fn supports_inplace(op: &str) -> bool {
+    matches!(
+        op,
+        "Mul" | "Add" | "AddStreams" | "ChannelwiseMul" | "MultiThreshold" | "Thresholding"
+            | "Reshape"
+    )
+}
+
+/// In-place form: `buf` arrives as the first input and leaves as the
+/// output; `rest` are the remaining inputs (thresholds, the other
+/// elementwise operand, ...).
+pub fn execute_node_inplace(node: &Node, buf: &mut Tensor, rest: &[&Tensor]) -> Result<()> {
+    match node.op.as_str() {
+        "Mul" | "ChannelwiseMul" => buf.broadcast_assign(rest[0], |a, b| a * b),
+        "Add" | "AddStreams" => buf.broadcast_assign(rest[0], |a, b| a + b),
+        "MultiThreshold" | "Thresholding" => threshold_in_place(
+            buf,
+            rest[0],
+            node.attrs.str_or("data_layout", "NCHW"),
+            node.attrs.float_or("out_scale", 1.0) as f32,
+            node.attrs.float_or("out_bias", 0.0) as f32,
+        ),
+        "Reshape" => {
+            let shape: Vec<usize> =
+                node.attrs.ints("shape")?.iter().map(|&d| d as usize).collect();
+            buf.reshape_in_place(shape)
+        }
+        other => bail!("op {other} has no in-place executor"),
+    }
+}
+
+fn copy_into(src: &Tensor, out: &mut Tensor) -> Result<()> {
+    if src.numel() != out.numel() {
+        bail!(
+            "copy_into: element count mismatch {:?} -> {:?}",
+            src.shape(),
+            out.shape()
+        );
+    }
+    out.data_mut().copy_from_slice(src.data());
+    Ok(())
 }
 
 // ---------------------------------------------------------------- Conv
 
 /// NCHW x OIHW convolution with symmetric padding, stride and bias.
-fn conv(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+fn conv_into(node: &Node, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
     let (x, w) = (inputs[0], inputs[1]);
     let bias = inputs.get(2).copied();
     let kernel = node.attrs.ints("kernel")?;
@@ -114,7 +313,9 @@ fn conv(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
     }
     let ho = (h + 2 * ph - kh) / sh + 1;
     let wo = (wdim + 2 * pw - kw) / sw + 1;
-    let mut out = Tensor::zeros(vec![n, cout, ho, wo]);
+    if out.shape() != [n, cout, ho, wo] {
+        bail!("conv output buffer {:?} != [{n}, {cout}, {ho}, {wo}]", out.shape());
+    }
     let xs = x.data();
     let ws = w.data();
     let od = out.data_mut();
@@ -148,41 +349,42 @@ fn conv(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
             }
         }
     }
-    Ok(vec![out])
+    Ok(())
 }
 
 // ------------------------------------------------------- MultiThreshold
 
-/// FINN MultiThreshold: `q[c] = #{k : x >= T[c, k]}`, then
-/// `y = out_scale * q + out_bias`.
+/// FINN MultiThreshold, applied in place: `q[c] = #{k : x >= T[c, k]}`,
+/// then `y = out_scale * q + out_bias`.
 ///
-/// `data_layout` attr selects which axis is the channel axis ("NCHW" ->
-/// axis 1, "NHWC" -> last).  The threshold matrix is [C, K]; rows may be
-/// identical (uniform quantizer) but per-channel rows are supported — the
-/// paper's AbsorbTransposeIntoMultiThreshold requires re-interpreting the
-/// channel axis, which is exactly this attribute (Fig. 4).
-fn multithreshold(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-    let (x, t) = (inputs[0], inputs[1]);
-    let layout = node.attrs.str_or("data_layout", "NCHW");
-    let out_scale = node.attrs.float_or("out_scale", 1.0) as f32;
-    let out_bias = node.attrs.float_or("out_bias", 0.0) as f32;
+/// `layout` selects the channel axis ("NCHW" -> axis 1, "NHWC" -> last).
+/// The threshold matrix is [C, K]; rows may be identical (uniform
+/// quantizer) but per-channel rows are supported — the paper's
+/// AbsorbTransposeIntoMultiThreshold requires re-interpreting the channel
+/// axis, which is exactly this parameter (Fig. 4).
+fn threshold_in_place(
+    buf: &mut Tensor,
+    t: &Tensor,
+    layout: &str,
+    out_scale: f32,
+    out_bias: f32,
+) -> Result<()> {
     let [c_t, k] = [t.shape()[0], t.shape()[1]];
     let chan_axis = match layout {
         "NCHW" => 1,
-        "NHWC" => x.ndim() - 1,
+        "NHWC" => buf.ndim() - 1,
         "NC" => 1,
         other => bail!("unknown data_layout {other}"),
     };
-    let c = x.shape()[chan_axis];
+    let c = buf.shape()[chan_axis];
     if c_t != c && c_t != 1 {
         bail!("threshold rows {c_t} != channels {c}");
     }
-    let strides = x.strides();
+    let strides = buf.strides();
     let chan_stride = strides[chan_axis];
-    let chan_extent = x.shape()[chan_axis];
-    let mut out = x.clone();
+    let chan_extent = buf.shape()[chan_axis];
     let ts = t.data();
-    let xs = out.data_mut();
+    let xs = buf.data_mut();
     for (i, v) in xs.iter_mut().enumerate() {
         let ch = (i / chan_stride) % chan_extent;
         let row = if c_t == 1 { 0 } else { ch };
@@ -192,19 +394,18 @@ fn multithreshold(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         let q = thresholds.partition_point(|&t| t <= *v);
         *v = out_scale * q as f32 + out_bias;
     }
-    Ok(vec![out])
+    Ok(())
 }
 
 // -------------------------------------------------------------- MaxPool
 
 /// NCHW max-pool (kernel = stride, the only form the backbone uses).
-fn maxpool(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+fn maxpool_into(node: &Node, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
     let x = inputs[0];
     let kernel = node.attrs.ints("kernel")?;
     let (kh, kw) = (kernel[0] as usize, kernel[1] as usize);
     let [n, c, h, w]: [usize; 4] = x.shape().try_into().map_err(|_| anyhow!("maxpool input must be 4-D"))?;
     let (ho, wo) = (h / kh, w / kw);
-    let mut out = Tensor::zeros(vec![n, c, ho, wo]);
     let xs = x.data();
     let od = out.data_mut();
     for b in 0..n {
@@ -223,15 +424,14 @@ fn maxpool(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
             }
         }
     }
-    Ok(vec![out])
+    Ok(())
 }
 
 /// NHWC 2x2/2 max-pool (the streaming HW form).
-fn maxpool_nhwc(inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+fn maxpool_nhwc_into(inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
     let x = inputs[0];
     let [n, h, w, c]: [usize; 4] = x.shape().try_into().map_err(|_| anyhow!("pool input must be 4-D"))?;
     let (ho, wo) = (h / 2, w / 2);
-    let mut out = Tensor::zeros(vec![n, ho, wo, c]);
     let xs = x.data();
     let od = out.data_mut();
     for b in 0..n {
@@ -251,29 +451,17 @@ fn maxpool_nhwc(inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
             }
         }
     }
-    Ok(vec![out])
+    Ok(())
 }
 
 // ----------------------------------------------------------- ReduceMean
 
-fn reduce_mean(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+fn reduce_mean_into(node: &Node, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
     let x = inputs[0];
     let axes: Vec<usize> = node.attrs.ints("axes")?.iter().map(|&a| a as usize).collect();
-    let keepdims = node.attrs.int_or("keepdims", 0) != 0;
-    let shape = x.shape();
-    let mut out_shape = Vec::new();
-    for (i, &d) in shape.iter().enumerate() {
-        if axes.contains(&i) {
-            if keepdims {
-                out_shape.push(1);
-            }
-        } else {
-            out_shape.push(d);
-        }
-    }
+    let shape = x.shape().to_vec();
     let reduce_count: usize = axes.iter().map(|&a| shape[a]).product();
     let strides = x.strides();
-    let mut out = Tensor::zeros(out_shape.clone());
     let xs = x.data();
     // Iterate all elements, accumulate into the output slot.
     let kept: Vec<usize> = (0..shape.len()).filter(|i| !axes.contains(i)).collect();
@@ -281,6 +469,7 @@ fn reduce_mean(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         &kept.iter().map(|&i| shape[i]).collect::<Vec<_>>(),
     );
     let od = out.data_mut();
+    od.fill(0.0);
     for (lin, &v) in xs.iter().enumerate() {
         let mut off = 0;
         for (j, &axis) in kept.iter().enumerate() {
@@ -292,7 +481,7 @@ fn reduce_mean(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
     for v in od.iter_mut() {
         *v /= reduce_count as f32;
     }
-    Ok(vec![out])
+    Ok(())
 }
 
 // --------------------------------------------------------------- Im2Col
@@ -300,7 +489,7 @@ fn reduce_mean(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
 /// NHWC im2col (the SWG's functional semantics): [N,H,W,C] ->
 /// [N, Ho, Wo, kh*kw*C], patch-major (dy, dx, c) — matching
 /// python/compile/kernels/ref.py::im2col_ref.
-fn im2col(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+fn im2col_into(node: &Node, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
     let x = inputs[0];
     let kernel = node.attrs.ints("kernel")?;
     let stride = node.attrs.ints("stride")?;
@@ -312,7 +501,6 @@ fn im2col(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
     let ho = (h + 2 * ph - kh) / sh + 1;
     let wo = (w + 2 * pw - kw) / sw + 1;
     let k = kh * kw * c;
-    let mut out = Tensor::zeros(vec![n, ho, wo, k]);
     let xs = x.data();
     let od = out.data_mut();
     for b in 0..n {
@@ -338,26 +526,26 @@ fn im2col(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
             }
         }
     }
-    Ok(vec![out])
+    Ok(())
 }
 
 // --------------------------------------------------------------- MatMul
 
 /// Batched-free matmul over the last axis: [..., K] x [K, N] -> [..., N].
-fn matmul(inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-    let (x, w) = (inputs[0], inputs[1]);
+fn matmul_into(x: &Tensor, w: &Tensor, out: &mut Tensor) -> Result<()> {
     let k = *x.shape().last().ok_or_else(|| anyhow!("matmul on scalar"))?;
     let [wk, n]: [usize; 2] = w.shape().try_into().map_err(|_| anyhow!("matmul weight must be 2-D"))?;
     if wk != k {
         bail!("matmul inner dim {k} != weight rows {wk}");
     }
     let rows: usize = x.shape()[..x.ndim() - 1].iter().product();
-    let mut out_shape = x.shape()[..x.ndim() - 1].to_vec();
-    out_shape.push(n);
-    let mut out = Tensor::zeros(out_shape);
+    if out.numel() != rows * n {
+        bail!("matmul output buffer {:?} != {rows}x{n}", out.shape());
+    }
     let xs = x.data();
     let ws = w.data();
     let od = out.data_mut();
+    od.fill(0.0);
     for r in 0..rows {
         let xrow = &xs[r * k..(r + 1) * k];
         let orow = &mut od[r * n..(r + 1) * n];
@@ -371,19 +559,19 @@ fn matmul(inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
             }
         }
     }
-    Ok(vec![out])
+    Ok(())
 }
 
 // -------------------------------------------------------- GlobalAccPool
 
 /// FINN GlobalAccPool: NHWC -> [N, C] cumulative SUM over spatial dims
 /// (no division — the following Mul applies 1/HW, §III-D).
-fn global_acc_pool(inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+fn global_acc_pool_into(inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
     let x = inputs[0];
     let [n, h, w, c]: [usize; 4] = x.shape().try_into().map_err(|_| anyhow!("gap input must be 4-D"))?;
-    let mut out = Tensor::zeros(vec![n, c]);
     let xs = x.data();
     let od = out.data_mut();
+    od.fill(0.0);
     for b in 0..n {
         for y in 0..h {
             for xcol in 0..w {
@@ -393,32 +581,36 @@ fn global_acc_pool(inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
             }
         }
     }
-    Ok(vec![out])
+    Ok(())
 }
 
 // ----------------------------------------------------------------- MVAU
 
-/// Matrix-Vector-Activation Unit: MatMul + bias + optional MultiThreshold.
+/// Matrix-Vector-Activation Unit: MatMul + bias + optional MultiThreshold,
+/// fused into the output buffer (matmul writes `out`, bias and the
+/// threshold stage then mutate it in place — no intermediates).
 ///
 /// inputs: [x(..., K), w(K, N), bias(N), thresholds(C_or_1, T)?]
 /// attrs:  out_scale / out_bias for the threshold stage; `apply_act`.
-fn mvau(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-    let mm = matmul(&[inputs[0], inputs[1]])?.pop().unwrap();
+fn mvau_into(node: &Node, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
+    matmul_into(inputs[0], inputs[1], out)?;
     let bias = inputs[2];
-    let with_bias = mm.broadcast_with(bias, |a, b| a + b)?;
+    out.broadcast_assign(bias, |a, b| a + b)?;
     let apply_act = node.attrs.int_or("apply_act", 1) != 0;
     if !apply_act {
-        return Ok(vec![with_bias]);
+        return Ok(());
     }
     let thresholds = inputs
         .get(3)
         .ok_or_else(|| anyhow!("MVAU with apply_act needs thresholds input"))?;
-    let mut thresh_node = Node::new("Thresholding", &node.name, vec![], vec![]);
-    thresh_node.attrs = node.attrs.clone();
-    thresh_node
-        .attrs
-        .set("data_layout", crate::graph::AttrVal::Str("NHWC".into()));
-    multithreshold(&thresh_node, &[&with_bias, thresholds])
+    // The fused activation always sees the NHWC stream layout.
+    threshold_in_place(
+        out,
+        thresholds,
+        "NHWC",
+        node.attrs.float_or("out_scale", 1.0) as f32,
+        node.attrs.float_or("out_bias", 0.0) as f32,
+    )
 }
 
 #[cfg(test)]
@@ -428,6 +620,12 @@ mod tests {
 
     fn node(op: &str, attrs: Attrs) -> Node {
         Node::new(op, "t", vec![], vec![]).with_attrs(attrs)
+    }
+
+    /// Run one node through the compat path (infer + into) and pop the
+    /// single output.
+    fn run1(n: &Node, inputs: &[&Tensor]) -> Tensor {
+        execute_node(n, inputs).unwrap().pop().unwrap()
     }
 
     #[test]
@@ -441,7 +639,7 @@ mod tests {
             .with("kernel", AttrVal::Ints(vec![1, 1]))
             .with("stride", AttrVal::Ints(vec![1, 1]))
             .with("pad", AttrVal::Ints(vec![0, 0]));
-        let y = conv(&node("Conv", attrs), &[&x, &w]).unwrap().pop().unwrap();
+        let y = run1(&node("Conv", attrs), &[&x, &w]);
         assert_eq!(y, x);
     }
 
@@ -455,7 +653,7 @@ mod tests {
             .with("kernel", AttrVal::Ints(vec![3, 3]))
             .with("stride", AttrVal::Ints(vec![1, 1]))
             .with("pad", AttrVal::Ints(vec![1, 1]));
-        let y = conv(&node("Conv", attrs), &[&x, &w]).unwrap().pop().unwrap();
+        let y = run1(&node("Conv", attrs), &[&x, &w]);
         assert_eq!(y.at(&[0, 0, 1, 1]), 9.0);
         assert_eq!(y.at(&[0, 0, 0, 0]), 4.0);
         assert_eq!(y.at(&[0, 0, 0, 1]), 6.0);
@@ -470,7 +668,7 @@ mod tests {
             .with("kernel", AttrVal::Ints(vec![1, 1]))
             .with("stride", AttrVal::Ints(vec![1, 1]))
             .with("pad", AttrVal::Ints(vec![0, 0]));
-        let y = conv(&node("Conv", attrs), &[&x, &w, &b]).unwrap().pop().unwrap();
+        let y = run1(&node("Conv", attrs), &[&x, &w, &b]);
         assert_eq!(y.at(&[0, 0, 0, 0]), 1.0);
         assert_eq!(y.at(&[0, 2, 1, 1]), 3.0);
     }
@@ -481,10 +679,7 @@ mod tests {
         let x = Tensor::new(vec![1, 1, 1, 3], vec![-1.0, 2.0, 9.0]).unwrap();
         let t = Tensor::new(vec![1, 3], vec![0.5, 1.5, 2.5]).unwrap();
         let attrs = Attrs::new().with("data_layout", AttrVal::Str("NCHW".into()));
-        let y = multithreshold(&node("MultiThreshold", attrs), &[&x, &t])
-            .unwrap()
-            .pop()
-            .unwrap();
+        let y = run1(&node("MultiThreshold", attrs), &[&x, &t]);
         assert_eq!(y.data(), &[0.0, 2.0, 3.0]);
     }
 
@@ -494,10 +689,7 @@ mod tests {
         let x = Tensor::new(vec![1, 1], vec![1.5]).unwrap();
         let t = Tensor::new(vec![1, 3], vec![0.5, 1.5, 2.5]).unwrap();
         let attrs = Attrs::new().with("data_layout", AttrVal::Str("NC".into()));
-        let y = multithreshold(&node("MultiThreshold", attrs), &[&x, &t])
-            .unwrap()
-            .pop()
-            .unwrap();
+        let y = run1(&node("MultiThreshold", attrs), &[&x, &t]);
         assert_eq!(y.data(), &[2.0]);
     }
 
@@ -507,12 +699,12 @@ mod tests {
         let t = Tensor::new(vec![2, 1], vec![0.5, 5.0]).unwrap();
         let x_nchw = Tensor::new(vec![1, 2, 1, 2], vec![1.0, 1.0, 1.0, 6.0]).unwrap();
         let attrs = Attrs::new().with("data_layout", AttrVal::Str("NCHW".into()));
-        let y = multithreshold(&node("MT", attrs), &[&x_nchw, &t]).unwrap().pop().unwrap();
+        let y = run1(&node("MultiThreshold", attrs), &[&x_nchw, &t]);
         assert_eq!(y.data(), &[1.0, 1.0, 0.0, 1.0]);
         // Same data in NHWC must give the transposed result.
         let x_nhwc = x_nchw.nchw_to_nhwc().unwrap();
         let attrs = Attrs::new().with("data_layout", AttrVal::Str("NHWC".into()));
-        let y2 = multithreshold(&node("MT", attrs), &[&x_nhwc, &t]).unwrap().pop().unwrap();
+        let y2 = run1(&node("MultiThreshold", attrs), &[&x_nhwc, &t]);
         assert_eq!(y2, y.nchw_to_nhwc().unwrap());
     }
 
@@ -524,7 +716,7 @@ mod tests {
             .with("data_layout", AttrVal::Str("NC".into()))
             .with("out_scale", AttrVal::Float(0.25))
             .with("out_bias", AttrVal::Float(-1.0));
-        let y = multithreshold(&node("MT", attrs), &[&x, &t]).unwrap().pop().unwrap();
+        let y = run1(&node("MultiThreshold", attrs), &[&x, &t]);
         assert_eq!(y.data(), &[0.25 * 2.0 - 1.0]);
     }
 
@@ -538,7 +730,7 @@ mod tests {
         let attrs = Attrs::new()
             .with("kernel", AttrVal::Ints(vec![2, 2]))
             .with("stride", AttrVal::Ints(vec![2, 2]));
-        let y = maxpool(&node("MaxPool", attrs), &[&x]).unwrap().pop().unwrap();
+        let y = run1(&node("MaxPool", attrs), &[&x]);
         assert_eq!(y.shape(), &[1, 1, 1, 2]);
         assert_eq!(y.data(), &[6.0, 8.0]);
     }
@@ -549,8 +741,11 @@ mod tests {
         let attrs = Attrs::new()
             .with("kernel", AttrVal::Ints(vec![2, 2]))
             .with("stride", AttrVal::Ints(vec![2, 2]));
-        let want = maxpool(&node("MaxPool", attrs), &[&x]).unwrap().pop().unwrap();
-        let got = maxpool_nhwc(&[&x.nchw_to_nhwc().unwrap()]).unwrap().pop().unwrap();
+        let want = run1(&node("MaxPool", attrs), &[&x]);
+        let got = run1(
+            &node("MaxPoolNHWC", Attrs::new()),
+            &[&x.nchw_to_nhwc().unwrap()],
+        );
         assert_eq!(got.nhwc_to_nchw().unwrap(), want);
     }
 
@@ -560,7 +755,7 @@ mod tests {
         let attrs = Attrs::new()
             .with("axes", AttrVal::Ints(vec![2, 3]))
             .with("keepdims", AttrVal::Int(0));
-        let y = reduce_mean(&node("ReduceMean", attrs), &[&x]).unwrap().pop().unwrap();
+        let y = run1(&node("ReduceMean", attrs), &[&x]);
         assert_eq!(y.shape(), &[1, 2]);
         assert_eq!(y.data(), &[1.5, 5.5]);
     }
@@ -572,7 +767,7 @@ mod tests {
             .with("kernel", AttrVal::Ints(vec![3, 3]))
             .with("stride", AttrVal::Ints(vec![1, 1]))
             .with("pad", AttrVal::Ints(vec![1, 1]));
-        let y = im2col(&node("Im2Col", attrs), &[&x]).unwrap().pop().unwrap();
+        let y = run1(&node("Im2Col", attrs), &[&x]);
         assert_eq!(y.shape(), &[1, 4, 4, 9]);
         // Patch at (1,1) = rows 0..3 x cols 0..3 of the image.
         let patch: Vec<f32> = (0..9).map(|i| y.at(&[0, 1, 1, i])).collect();
@@ -589,17 +784,14 @@ mod tests {
             .with("kernel", AttrVal::Ints(vec![3, 3]))
             .with("stride", AttrVal::Ints(vec![1, 1]))
             .with("pad", AttrVal::Ints(vec![1, 1]));
-        let want = conv(&node("Conv", conv_attrs.clone()), &[&x_nchw, &w_oihw])
-            .unwrap()
-            .pop()
-            .unwrap();
+        let want = run1(&node("Conv", conv_attrs.clone()), &[&x_nchw, &w_oihw]);
 
         let x_nhwc = x_nchw.nchw_to_nhwc().unwrap();
-        let cols = im2col(&node("Im2Col", conv_attrs), &[&x_nhwc]).unwrap().pop().unwrap();
+        let cols = run1(&node("Im2Col", conv_attrs), &[&x_nhwc]);
         // OIHW -> (dy, dx, cin)-major K x O matrix = transpose to HWIO then
         // reshape.
         let w_k_o = w_oihw.transpose(&[2, 3, 1, 0]).unwrap().reshape(vec![27, 4]).unwrap();
-        let got_nhwc = matmul(&[&cols, &w_k_o]).unwrap().pop().unwrap();
+        let got_nhwc = run1(&node("MatMul", Attrs::new()), &[&cols, &w_k_o]);
         let got = got_nhwc.nhwc_to_nchw().unwrap();
         assert!(got.allclose(&want, 1e-4), "max diff {}", got.max_abs_diff(&want));
     }
@@ -607,7 +799,7 @@ mod tests {
     #[test]
     fn global_acc_pool_sums() {
         let x = Tensor::full(vec![1, 2, 2, 3], 1.5);
-        let y = global_acc_pool(&[&x]).unwrap().pop().unwrap();
+        let y = run1(&node("GlobalAccPool", Attrs::new()), &[&x]);
         assert_eq!(y.shape(), &[1, 3]);
         assert_eq!(y.data(), &[6.0, 6.0, 6.0]);
     }
@@ -621,7 +813,7 @@ mod tests {
         let attrs = Attrs::new()
             .with("apply_act", AttrVal::Int(1))
             .with("out_scale", AttrVal::Float(0.5));
-        let y = mvau(&node("MVAU", attrs), &[&x, &w, &b, &t]).unwrap().pop().unwrap();
+        let y = run1(&node("MVAU", attrs), &[&x, &w, &b, &t]);
         // acc = 2.5 -> crosses 0.5, 1.0, 2.0 -> q=3 -> 1.5 after scale.
         assert_eq!(y.data(), &[1.5]);
     }
@@ -632,8 +824,54 @@ mod tests {
         let w = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
         let b = Tensor::new(vec![2], vec![10.0, 20.0]).unwrap();
         let attrs = Attrs::new().with("apply_act", AttrVal::Int(0));
-        let y = mvau(&node("MVAU", attrs), &[&x, &w, &b]).unwrap().pop().unwrap();
+        let y = run1(&node("MVAU", attrs), &[&x, &w, &b]);
         assert_eq!(y.data(), &[12.0, 23.0]);
+    }
+
+    #[test]
+    fn inplace_matches_into_for_elementwise() {
+        let mut rng = crate::rng::Rng::new(10);
+        let a = Tensor::from_fn(vec![1, 3, 4, 4], |_| rng.normal());
+        let s = Tensor::scalar(0.5);
+        for op in ["Mul", "Add", "ChannelwiseMul", "AddStreams"] {
+            assert!(supports_inplace(op));
+            let n = node(op, Attrs::new());
+            let want = run1(&n, &[&a, &s]);
+            let mut buf = a.clone();
+            execute_node_inplace(&n, &mut buf, &[&s]).unwrap();
+            assert_eq!(buf, want, "op {op}");
+        }
+        // Threshold in place.
+        let t = Tensor::new(vec![1, 2], vec![0.0, 0.5]).unwrap();
+        let n = node(
+            "MultiThreshold",
+            Attrs::new().with("data_layout", AttrVal::Str("NCHW".into())),
+        );
+        let want = run1(&n, &[&a, &t]);
+        let mut buf = a.clone();
+        execute_node_inplace(&n, &mut buf, &[&t]).unwrap();
+        assert_eq!(buf, want);
+        // Reshape in place is metadata-only.
+        let n = node("Reshape", Attrs::new().with("shape", AttrVal::Ints(vec![3, 16])));
+        let want = run1(&n, &[&a]);
+        let mut buf = a.clone();
+        execute_node_inplace(&n, &mut buf, &[]).unwrap();
+        assert_eq!(buf, want);
+    }
+
+    #[test]
+    fn infer_shapes_match_execution() {
+        let mut rng = crate::rng::Rng::new(11);
+        let x = Tensor::from_fn(vec![1, 3, 6, 6], |_| rng.normal());
+        let w = Tensor::from_fn(vec![4, 3, 3, 3], |_| rng.normal());
+        let attrs = Attrs::new()
+            .with("kernel", AttrVal::Ints(vec![3, 3]))
+            .with("stride", AttrVal::Ints(vec![1, 1]))
+            .with("pad", AttrVal::Ints(vec![1, 1]));
+        let n = node("Conv", attrs);
+        let inferred = infer_output_shape(&n, &[x.shape(), w.shape()]).unwrap();
+        let y = run1(&n, &[&x, &w]);
+        assert_eq!(y.shape(), inferred.as_slice());
     }
 
     #[test]
@@ -651,6 +889,9 @@ mod tests {
         feeds.insert("x".to_string(), Tensor::new(vec![1, 2], vec![1.0, 2.0]).unwrap());
         let out = execute(&g, &feeds).unwrap();
         assert_eq!(out["y"].data(), &[3.0, 6.0]);
+        // The legacy interpreter agrees bit for bit.
+        let legacy = execute_interpreted(&g, &feeds).unwrap();
+        assert_eq!(legacy["y"], out["y"]);
     }
 
     #[test]
@@ -660,5 +901,6 @@ mod tests {
         g.inputs = vec!["x".into()];
         let feeds = HashMap::new();
         assert!(execute(&g, &feeds).is_err());
+        assert!(execute_interpreted(&g, &feeds).is_err());
     }
 }

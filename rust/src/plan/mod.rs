@@ -1,0 +1,803 @@
+//! Compiled execution plans — the engine behind graph execution.
+//!
+//! The original executor (`ops::execute_interpreted`) re-cloned and
+//! re-toposorted the whole [`Graph`] on every call and resolved every
+//! tensor through `HashMap<String, Tensor>` lookups — per node, per call.
+//! PEFSL (arXiv:2404.19354) and the MLPerf-Tiny FPGA codesign line both
+//! show that deployment-pipeline overhead, not kernel math, dominates
+//! small-model latency on edge SoCs; the ROADMAP's "fast as the hardware
+//! allows" requires the same discipline on the software request path.
+//!
+//! [`ExecutionPlan::compile`] does all graph-shaped work ONCE:
+//!
+//! * topological order resolved at compile time (`Graph::toposort_order`,
+//!   no clone);
+//! * every tensor name interned to a dense slot id — the run loop indexes
+//!   arrays, it never hashes a string;
+//! * initializers bound to their slots once, not looked up per node per
+//!   call;
+//! * per-step output shapes resolved and cross-checked against
+//!   [`crate::ops::infer_output_shape`] (stale shape annotations fail at
+//!   compile, not as corrupted buffers at run time);
+//! * a liveness analysis records each activation's last use; the run loop
+//!   returns dead buffers to a reusable arena ([`PlanScratch`]) instead of
+//!   dropping them, and steals a dying input's buffer outright for
+//!   elementwise/reshape steps (`ops::supports_inplace`).
+//!
+//! [`ExecutionPlan::run`] then touches no graph structure at all: slots
+//! in, slots out.  [`ExecutionPlan::run_batch`] / [`run_with`] amortize
+//! the arena across frames — the serving coordinator's path.
+//!
+//! [`run_with`]: ExecutionPlan::run_with
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::graph::{Graph, Node};
+use crate::ops;
+use crate::tensor::Tensor;
+
+/// One compiled step: a node with its IO resolved to dense slot ids.
+#[derive(Debug, Clone)]
+struct PlanStep {
+    node: Node,
+    /// Input slot per node input, in node order.
+    inputs: Vec<u32>,
+    /// The (single) output slot.
+    output: u32,
+    /// Resolved output shape (from the graph's shape table, verified
+    /// against shape inference at compile time).
+    out_shape: Vec<usize>,
+    /// Activation slots whose last use is this step — their buffers go
+    /// back to the arena right after execution.
+    release: Vec<u32>,
+    /// Steal `inputs[0]`'s buffer and mutate it in place instead of
+    /// allocating an output (elementwise/reshape steps whose first input
+    /// dies here).
+    inplace: bool,
+}
+
+/// A graph input: where its tensor goes and what shape it must have.
+#[derive(Debug, Clone)]
+struct FeedSpec {
+    name: String,
+    slot: u32,
+    /// Expected shape when the graph records one (checked at run time).
+    shape: Option<Vec<usize>>,
+}
+
+/// Reusable per-run state: the slot environment and the buffer arena.
+///
+/// Keep one of these alive across calls (`run_with` / `run_batch`) and
+/// steady-state execution performs no heap allocation for activations —
+/// every output buffer is recycled from a prior frame.
+#[derive(Debug, Default)]
+pub struct PlanScratch {
+    /// Materialized activations, slot-indexed.
+    act: Vec<Option<Tensor>>,
+    /// Free buffers returned by dead activations.
+    pool: Vec<Vec<f32>>,
+    pub stats: ArenaStats,
+}
+
+/// Arena instrumentation (exposed for tests and the §Perf bench).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ArenaStats {
+    /// Buffers allocated fresh from the system allocator.
+    pub fresh_allocs: usize,
+    /// Buffers recycled from the arena pool.
+    pub reuses: usize,
+    /// Steps that stole their input's buffer in place.
+    pub inplace_steps: usize,
+    /// Peak number of live activation buffers in any single run.
+    pub peak_live: usize,
+    live: usize,
+}
+
+impl PlanScratch {
+    fn reset(&mut self, n_slots: usize) {
+        for slot in self.act.iter_mut() {
+            if let Some(t) = slot.take() {
+                self.pool.push(t.into_data());
+            }
+        }
+        self.act.resize(n_slots, None);
+        self.stats.live = 0;
+    }
+
+    /// Carve a buffer of `numel(shape)` out of the pool: the smallest
+    /// pooled buffer whose capacity fits, else the largest (it grows
+    /// once and then fits forever).  The buffer is NOT zeroed — every
+    /// kernel behind `ops::execute_node_into` either fully overwrites or
+    /// zero-fills before accumulating, so steady-state same-size reuse
+    /// writes nothing here at all.
+    fn alloc(&mut self, shape: &[usize]) -> Result<Tensor> {
+        let numel: usize = shape.iter().product();
+        let data = if self.pool.is_empty() {
+            self.stats.fresh_allocs += 1;
+            vec![0.0f32; numel]
+        } else {
+            let mut best = 0usize;
+            for i in 1..self.pool.len() {
+                let (c, b) = (self.pool[i].capacity(), self.pool[best].capacity());
+                let better = if c >= numel { b < numel || c < b } else { b < numel && c > b };
+                if better {
+                    best = i;
+                }
+            }
+            self.stats.reuses += 1;
+            let mut buf = self.pool.swap_remove(best);
+            buf.resize(numel, 0.0);
+            buf
+        };
+        Tensor::new(shape.to_vec(), data)
+    }
+}
+
+/// A graph compiled for repeated execution.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    name: String,
+    n_slots: usize,
+    /// Number of slots produced by steps (activations).
+    n_activations: usize,
+    steps: Vec<PlanStep>,
+    feeds: Vec<FeedSpec>,
+    /// Graph outputs: (name, slot).
+    outputs: Vec<(String, u32)>,
+    /// Initializer tensors bound to their slots at compile time.
+    init: Vec<Option<Tensor>>,
+    /// Slot -> tensor name (diagnostics only).
+    slot_names: Vec<String>,
+}
+
+fn intern<'g>(
+    name: &'g str,
+    slot_of: &mut HashMap<&'g str, u32>,
+    names: &mut Vec<String>,
+) -> u32 {
+    if let Some(&s) = slot_of.get(name) {
+        return s;
+    }
+    let s = names.len() as u32;
+    names.push(name.to_string());
+    slot_of.insert(name, s);
+    s
+}
+
+impl ExecutionPlan {
+    /// Compile a graph: one toposort, one interning pass, one liveness
+    /// pass.  The graph is not modified and not needed afterwards.
+    pub fn compile(graph: &Graph) -> Result<Self> {
+        let order = graph.toposort_order()?;
+        let mut slot_of: HashMap<&str, u32> = HashMap::new();
+        let mut slot_names: Vec<String> = Vec::new();
+
+        // Feeds first so graph inputs get stable low slots.
+        let mut feeds = Vec::with_capacity(graph.inputs.len());
+        for name in &graph.inputs {
+            let slot = intern(name, &mut slot_of, &mut slot_names);
+            feeds.push(FeedSpec {
+                name: name.clone(),
+                slot,
+                shape: graph.shapes.get(name).cloned(),
+            });
+        }
+
+        // Steps in topological order, with slot-resolved IO.
+        let mut steps: Vec<PlanStep> = Vec::with_capacity(order.len());
+        // slot -> step index that produces it
+        let mut produced_by: Vec<Option<usize>> = vec![None; slot_names.len()];
+        // slot -> shape, where known (feeds + annotations + initializers)
+        let mut known: Vec<Option<Vec<usize>>> = vec![None; slot_names.len()];
+        for f in &feeds {
+            known[f.slot as usize] = f.shape.clone();
+        }
+
+        for (si, &ni) in order.iter().enumerate() {
+            let node = &graph.nodes[ni];
+            if node.outputs.len() != 1 {
+                bail!(
+                    "plan: node {} has {} outputs; only single-output nodes are executable",
+                    node.name,
+                    node.outputs.len()
+                );
+            }
+            let inputs: Vec<u32> = node
+                .inputs
+                .iter()
+                .map(|t| intern(t, &mut slot_of, &mut slot_names))
+                .collect();
+            let output = intern(&node.outputs[0], &mut slot_of, &mut slot_names);
+            produced_by.resize(slot_names.len(), None);
+            known.resize(slot_names.len(), None);
+            if produced_by[output as usize].is_some() {
+                bail!("plan: tensor {} produced twice", node.outputs[0]);
+            }
+            produced_by[output as usize] = Some(si);
+
+            // Fill input shapes from initializers on first sight.
+            for (&slot, name) in inputs.iter().zip(&node.inputs) {
+                if known[slot as usize].is_none() {
+                    if let Some(t) = graph.initializers.get(name) {
+                        known[slot as usize] = Some(t.shape().to_vec());
+                    }
+                }
+            }
+
+            let out_shape = graph.shape_of(&node.outputs[0])?.to_vec();
+            // Cross-check the annotation against shape inference when all
+            // input shapes are known — a stale annotation dies here, not
+            // as a corrupted buffer at run time.
+            let in_shapes: Option<Vec<&[usize]>> = inputs
+                .iter()
+                .map(|&s| known[s as usize].as_deref())
+                .collect();
+            if let Some(in_shapes) = in_shapes {
+                let inferred = ops::infer_output_shape(node, &in_shapes)
+                    .map_err(|e| anyhow!("plan: node {} ({}): {e}", node.name, node.op))?;
+                if inferred != out_shape {
+                    bail!(
+                        "plan: node {} ({}): graph annotates output {:?} but inference says {:?} — stale shape annotation",
+                        node.name,
+                        node.op,
+                        out_shape,
+                        inferred
+                    );
+                }
+            }
+            known[output as usize] = Some(out_shape.clone());
+
+            steps.push(PlanStep {
+                node: node.clone(),
+                inputs,
+                output,
+                out_shape,
+                release: Vec::new(),
+                inplace: false,
+            });
+        }
+
+        // Graph outputs (produced, fed, or initializer-passthrough).
+        let mut outputs = Vec::with_capacity(graph.outputs.len());
+        for name in &graph.outputs {
+            let slot = intern(name, &mut slot_of, &mut slot_names);
+            produced_by.resize(slot_names.len(), None);
+            known.resize(slot_names.len(), None);
+            let resolvable = produced_by[slot as usize].is_some()
+                || graph.inputs.contains(name)
+                || graph.initializers.contains_key(name);
+            if !resolvable {
+                bail!("plan: graph output {name} is never produced");
+            }
+            outputs.push((name.clone(), slot));
+        }
+
+        let n_slots = slot_names.len();
+
+        // Bind initializers once.
+        let mut init: Vec<Option<Tensor>> = vec![None; n_slots];
+        for (name, tensor) in &graph.initializers {
+            if let Some(&slot) = slot_of.get(name.as_str()) {
+                init[slot as usize] = Some(tensor.clone());
+            }
+        }
+
+        // Liveness: last step reading each activation slot; graph outputs
+        // are pinned (never recycled).
+        let mut last_use: Vec<usize> = (0..n_slots)
+            .map(|s| produced_by[s].unwrap_or(0))
+            .collect();
+        for (si, step) in steps.iter().enumerate() {
+            for &s in &step.inputs {
+                if produced_by[s as usize].is_some() {
+                    last_use[s as usize] = si;
+                }
+            }
+        }
+        for (_, slot) in &outputs {
+            last_use[*slot as usize] = usize::MAX;
+        }
+
+        // In-place marking: elementwise/reshape steps whose first input is
+        // an activation that dies right here (and is not read twice).
+        for (si, step) in steps.iter_mut().enumerate() {
+            if !ops::supports_inplace(&step.node.op) || step.inputs.is_empty() {
+                continue;
+            }
+            let in0 = step.inputs[0];
+            let eligible = produced_by[in0 as usize].is_some()
+                && last_use[in0 as usize] == si
+                && !step.inputs[1..].contains(&in0)
+                && match step.node.op.as_str() {
+                    "Reshape" => known[in0 as usize]
+                        .as_ref()
+                        .map(|s| s.iter().product::<usize>() == step.out_shape.iter().product())
+                        .unwrap_or(false),
+                    _ => known[in0 as usize].as_deref() == Some(step.out_shape.as_slice()),
+                };
+            step.inplace = eligible;
+        }
+
+        // Release lists: after step si, recycle activations whose last use
+        // was si — except a buffer stolen in place (it lives on as the
+        // output).
+        for s in 0..n_slots {
+            if produced_by[s].is_none() || last_use[s] == usize::MAX {
+                continue;
+            }
+            let si = last_use[s];
+            if steps[si].inplace && steps[si].inputs[0] as usize == s {
+                continue;
+            }
+            steps[si].release.push(s as u32);
+        }
+
+        let n_activations = produced_by.iter().filter(|p| p.is_some()).count();
+        Ok(Self {
+            name: graph.name.clone(),
+            n_slots,
+            n_activations,
+            steps,
+            feeds,
+            outputs,
+            init,
+            slot_names,
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn num_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    /// Number of step-produced (activation) tensors.
+    pub fn num_activation_slots(&self) -> usize {
+        self.n_activations
+    }
+
+    /// Steps compiled to mutate their input in place.
+    pub fn num_inplace_steps(&self) -> usize {
+        self.steps.iter().filter(|s| s.inplace).count()
+    }
+
+    fn resolve<'a>(
+        &'a self,
+        slot: u32,
+        act: &'a [Option<Tensor>],
+        ext: &[Option<&'a Tensor>],
+    ) -> Result<&'a Tensor> {
+        let s = slot as usize;
+        if let Some(t) = act[s].as_ref() {
+            return Ok(t);
+        }
+        if let Some(t) = ext[s] {
+            return Ok(t);
+        }
+        if let Some(t) = self.init[s].as_ref() {
+            return Ok(t);
+        }
+        bail!("tensor {} unavailable", self.slot_names[s])
+    }
+
+    /// Execute once with a fresh arena.
+    pub fn run(&self, feeds: &HashMap<String, Tensor>) -> Result<HashMap<String, Tensor>> {
+        let mut scratch = PlanScratch::default();
+        self.run_with(feeds, &mut scratch)
+    }
+
+    /// Execute a batch of feed sets, amortizing the arena: frame k's
+    /// activations are carved out of frame k-1's recycled buffers.
+    pub fn run_batch(
+        &self,
+        feeds: &[HashMap<String, Tensor>],
+    ) -> Result<Vec<HashMap<String, Tensor>>> {
+        let mut scratch = PlanScratch::default();
+        feeds
+            .iter()
+            .map(|f| self.run_with(f, &mut scratch))
+            .collect()
+    }
+
+    /// Execute once, reusing `scratch` across calls.  This is the steady-
+    /// state entry point: zero graph work, zero string hashing on the node
+    /// path, and (after warmup) zero activation allocation.
+    pub fn run_with(
+        &self,
+        feeds: &HashMap<String, Tensor>,
+        scratch: &mut PlanScratch,
+    ) -> Result<HashMap<String, Tensor>> {
+        scratch.reset(self.n_slots);
+
+        // Resolve feeds: the only name lookups in the whole run.
+        let mut ext: Vec<Option<&Tensor>> = vec![None; self.n_slots];
+        for spec in &self.feeds {
+            let t = feeds
+                .get(&spec.name)
+                .ok_or_else(|| anyhow!("missing feed for graph input {}", spec.name))?;
+            if let Some(shape) = &spec.shape {
+                if t.shape() != shape.as_slice() {
+                    bail!(
+                        "feed {} has shape {:?}, graph expects {:?}",
+                        spec.name,
+                        t.shape(),
+                        shape
+                    );
+                }
+            }
+            ext[spec.slot as usize] = Some(t);
+        }
+
+        for step in &self.steps {
+            if step.inplace {
+                let mut buf = scratch.act[step.inputs[0] as usize].take().ok_or_else(|| {
+                    anyhow!(
+                        "plan bug: in-place input of {} not materialized",
+                        step.node.name
+                    )
+                })?;
+                {
+                    let rest: Vec<&Tensor> = step.inputs[1..]
+                        .iter()
+                        .map(|&s| self.resolve(s, &scratch.act, &ext))
+                        .collect::<Result<_>>()?;
+                    ops::execute_node_inplace(&step.node, &mut buf, &rest).map_err(|e| {
+                        anyhow!("executing {} ({}): {e}", step.node.name, step.node.op)
+                    })?;
+                }
+                scratch.stats.inplace_steps += 1;
+                scratch.act[step.output as usize] = Some(buf);
+            } else {
+                let mut out = scratch.alloc(&step.out_shape)?;
+                {
+                    let inputs: Vec<&Tensor> = step
+                        .inputs
+                        .iter()
+                        .map(|&s| self.resolve(s, &scratch.act, &ext))
+                        .collect::<Result<_>>()?;
+                    ops::execute_node_into(&step.node, &inputs, &mut out).map_err(|e| {
+                        anyhow!("executing {} ({}): {e}", step.node.name, step.node.op)
+                    })?;
+                }
+                scratch.stats.live += 1;
+                scratch.stats.peak_live = scratch.stats.peak_live.max(scratch.stats.live);
+                scratch.act[step.output as usize] = Some(out);
+            }
+            for &dead in &step.release {
+                if let Some(t) = scratch.act[dead as usize].take() {
+                    scratch.stats.live -= 1;
+                    scratch.pool.push(t.into_data());
+                }
+            }
+        }
+
+        let mut result = HashMap::with_capacity(self.outputs.len());
+        for (name, slot) in &self.outputs {
+            let s = *slot as usize;
+            let t = if let Some(t) = scratch.act[s].take() {
+                scratch.stats.live = scratch.stats.live.saturating_sub(1);
+                t
+            } else if let Some(t) = ext[s] {
+                t.clone()
+            } else if let Some(t) = self.init[s].as_ref() {
+                t.clone()
+            } else {
+                bail!("graph output {name} not produced");
+            };
+            result.insert(name.clone(), t);
+        }
+        Ok(result)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PlanRunner — the plan engine as a serving feature extractor
+// ---------------------------------------------------------------------------
+
+/// Backbone feature extraction over a compiled plan: the python-free,
+/// PJRT-free request path.  Accepts flat NHWC image batches (the same
+/// contract as the PJRT `BackboneRunner`), converts to the graph's NCHW
+/// import layout, and runs the plan once per frame with a shared arena —
+/// the batch amortizes plan lookup and buffer allocation.
+pub struct PlanRunner {
+    plan: ExecutionPlan,
+    input: String,
+    output: String,
+    img: usize,
+    feature_dim: usize,
+    batch: usize,
+    scratch: RefCell<PlanScratch>,
+}
+
+impl PlanRunner {
+    /// Compile `graph` (an NCHW import with input [1, 3, img, img] and
+    /// output [1, feat]) into a batched extractor.
+    pub fn new(graph: &Graph, batch: usize) -> Result<Self> {
+        if graph.inputs.len() != 1 || graph.outputs.len() != 1 {
+            bail!(
+                "PlanRunner needs a single-input single-output graph, got {} in / {} out",
+                graph.inputs.len(),
+                graph.outputs.len()
+            );
+        }
+        let in_shape = graph.shape_of(&graph.inputs[0])?.to_vec();
+        if in_shape.len() != 4 || in_shape[0] != 1 || in_shape[1] != 3 {
+            bail!("PlanRunner expects NCHW input [1, 3, H, W], got {in_shape:?}");
+        }
+        if in_shape[2] != in_shape[3] {
+            bail!("PlanRunner expects square images, got {in_shape:?}");
+        }
+        let out_shape = graph.shape_of(&graph.outputs[0])?.to_vec();
+        let feature_dim = *out_shape
+            .last()
+            .ok_or_else(|| anyhow!("scalar graph output"))?;
+        Ok(Self {
+            plan: ExecutionPlan::compile(graph)?,
+            input: graph.inputs[0].clone(),
+            output: graph.outputs[0].clone(),
+            img: in_shape[2],
+            feature_dim,
+            batch: batch.max(1),
+            scratch: RefCell::new(PlanScratch::default()),
+        })
+    }
+
+    /// Arena statistics accumulated over every extract call so far.
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.scratch.borrow().stats
+    }
+
+    /// Run the plan for the first `live` frames of a full batch buffer —
+    /// padded filler frames are never executed (the plan is per-frame,
+    /// unlike a fixed-batch PJRT executable).
+    fn extract_frames(&self, images: &[f32], live: usize) -> Result<Vec<f32>> {
+        let per = self.img * self.img * 3;
+        if images.len() != self.batch * per {
+            bail!(
+                "expected {} input elements, got {}",
+                self.batch * per,
+                images.len()
+            );
+        }
+        let live = live.min(self.batch);
+        let mut feats = Vec::with_capacity(live * self.feature_dim);
+        let mut scratch = self.scratch.borrow_mut();
+        let mut feeds = HashMap::with_capacity(1);
+        for i in 0..live {
+            let x_nhwc = Tensor::new(
+                vec![1, self.img, self.img, 3],
+                images[i * per..(i + 1) * per].to_vec(),
+            )?;
+            feeds.insert(self.input.clone(), x_nhwc.nhwc_to_nchw()?);
+            let mut out = self.plan.run_with(&feeds, &mut scratch)?;
+            let t = out
+                .remove(&self.output)
+                .ok_or_else(|| anyhow!("plan produced no {}", self.output))?;
+            feats.extend_from_slice(t.data());
+        }
+        Ok(feats)
+    }
+}
+
+impl crate::coordinator::FeatureExtractor for PlanRunner {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn img(&self) -> usize {
+        self.img
+    }
+
+    fn feature_dim(&self) -> usize {
+        self.feature_dim
+    }
+
+    fn extract(&self, images: &[f32]) -> Result<Vec<f32>> {
+        self.extract_frames(images, self.batch)
+    }
+
+    fn extract_live(&self, images: &[f32], live: usize) -> Result<Vec<f32>> {
+        self.extract_frames(images, live)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{AttrVal, Attrs, Node};
+
+    /// in -> Mul(s) -> t1 ; t1 -> Add(t1, b) -> t2 ; t2 -> Reshape -> out
+    fn chain_graph() -> Graph {
+        let mut g = Graph::new("chain");
+        g.inputs = vec!["in".into()];
+        g.outputs = vec!["out".into()];
+        g.shapes.insert("in".into(), vec![2, 3]);
+        g.shapes.insert("s".into(), vec![]);
+        g.shapes.insert("b".into(), vec![3]);
+        g.shapes.insert("t1".into(), vec![2, 3]);
+        g.shapes.insert("t2".into(), vec![2, 3]);
+        g.shapes.insert("out".into(), vec![3, 2]);
+        g.initializers.insert("s".into(), Tensor::scalar(2.0));
+        g.initializers
+            .insert("b".into(), Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap());
+        g.nodes.push(Node::new("Mul", "m", vec!["in".into(), "s".into()], vec!["t1".into()]));
+        g.nodes.push(Node::new("Add", "a", vec!["t1".into(), "b".into()], vec!["t2".into()]));
+        g.nodes.push(
+            Node::new("Reshape", "r", vec!["t2".into()], vec!["out".into()])
+                .with_attrs(Attrs::new().with("shape", AttrVal::Ints(vec![3, 2]))),
+        );
+        g
+    }
+
+    fn chain_feeds() -> HashMap<String, Tensor> {
+        let mut feeds = HashMap::new();
+        feeds.insert(
+            "in".to_string(),
+            Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap(),
+        );
+        feeds
+    }
+
+    #[test]
+    fn plan_matches_interpreter_on_chain() {
+        let g = chain_graph();
+        let feeds = chain_feeds();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        let got = plan.run(&feeds).unwrap();
+        let want = crate::ops::execute_interpreted(&g, &feeds).unwrap();
+        assert_eq!(got["out"], want["out"]);
+    }
+
+    #[test]
+    fn chain_runs_in_place_after_first_alloc() {
+        // Step 0's input is the (borrowed) graph input — it must NOT be
+        // stolen; it allocates one buffer.  The Add and Reshape then
+        // steal that buffer: one allocation for the whole chain.
+        let g = chain_graph();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        assert_eq!(plan.num_inplace_steps(), 2);
+        let mut scratch = PlanScratch::default();
+        let out = plan.run_with(&chain_feeds(), &mut scratch).unwrap();
+        assert_eq!(scratch.stats.fresh_allocs, 1);
+        assert_eq!(scratch.stats.inplace_steps, 2);
+        assert_eq!(scratch.stats.peak_live, 1);
+        assert_eq!(out["out"].shape(), &[3, 2]);
+        // [1..6] * 2, + bias [1,2,3] per row: [[3,6,9],[9,12,15]].
+        assert_eq!(out["out"].data(), &[3., 6., 9., 9., 12., 15.]);
+    }
+
+    #[test]
+    fn arena_reuses_buffers_across_batch() {
+        let g = chain_graph();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        let mut scratch = PlanScratch::default();
+        for _ in 0..5 {
+            plan.run_with(&chain_feeds(), &mut scratch).unwrap();
+        }
+        // One fresh buffer per frame for the first frame's alloc; later
+        // frames recycle the... outputs are moved to the caller, so each
+        // frame allocates one buffer but nothing accumulates beyond that.
+        assert!(scratch.stats.fresh_allocs <= 5);
+        assert_eq!(scratch.stats.peak_live, 1);
+    }
+
+    #[test]
+    fn diamond_releases_skip_only_after_join() {
+        // in -> A(Mul s) -> t1 ; t1 -> B(Mul s) -> t2 ; t1,t2 -> Add -> out
+        // t1 must stay live until the Add, then be recycled.
+        let mut g = Graph::new("diamond");
+        g.inputs = vec!["in".into()];
+        g.outputs = vec!["out".into()];
+        for t in ["in", "t1", "t2", "out"] {
+            g.shapes.insert(t.into(), vec![4]);
+        }
+        g.shapes.insert("s".into(), vec![]);
+        g.initializers.insert("s".into(), Tensor::scalar(3.0));
+        g.nodes.push(Node::new("Mul", "A", vec!["in".into(), "s".into()], vec!["t1".into()]));
+        g.nodes.push(Node::new("Mul", "B", vec!["t1".into(), "s".into()], vec!["t2".into()]));
+        g.nodes.push(Node::new("Add", "C", vec!["t1".into(), "t2".into()], vec!["out".into()]));
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        // B cannot steal t1 (C still reads it); C can steal t1.
+        let mut feeds = HashMap::new();
+        feeds.insert("in".to_string(), Tensor::new(vec![4], vec![1., 2., 3., 4.]).unwrap());
+        let mut scratch = PlanScratch::default();
+        let out = plan.run_with(&feeds, &mut scratch).unwrap();
+        assert_eq!(out["out"].data(), &[12., 24., 36., 48.]);
+        assert!(scratch.stats.peak_live <= 2);
+        let want = crate::ops::execute_interpreted(&g, &feeds).unwrap();
+        assert_eq!(out["out"], want["out"]);
+    }
+
+    #[test]
+    fn missing_feed_and_bad_shape_error() {
+        let g = chain_graph();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        let err = plan.run(&HashMap::new()).unwrap_err().to_string();
+        assert!(err.contains("missing feed"), "{err}");
+        let mut feeds = HashMap::new();
+        feeds.insert("in".to_string(), Tensor::zeros(vec![3, 2]));
+        let err = plan.run(&feeds).unwrap_err().to_string();
+        assert!(err.contains("shape"), "{err}");
+    }
+
+    #[test]
+    fn stale_shape_annotation_fails_at_compile() {
+        let mut g = chain_graph();
+        g.shapes.insert("t1".into(), vec![6, 1]); // stale: Mul keeps [2,3]
+        let err = ExecutionPlan::compile(&g).unwrap_err().to_string();
+        assert!(err.contains("stale"), "{err}");
+    }
+
+    #[test]
+    fn feed_passthrough_output() {
+        // A graph output that is directly a graph input.
+        let mut g = Graph::new("pass");
+        g.inputs = vec!["x".into()];
+        g.outputs = vec!["x".into()];
+        g.shapes.insert("x".into(), vec![2]);
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        let mut feeds = HashMap::new();
+        feeds.insert("x".to_string(), Tensor::new(vec![2], vec![7.0, 8.0]).unwrap());
+        let out = plan.run(&feeds).unwrap();
+        assert_eq!(out["x"].data(), &[7.0, 8.0]);
+    }
+
+    #[test]
+    fn compile_rejects_unproduced_output() {
+        let mut g = chain_graph();
+        g.outputs = vec!["ghost".into()];
+        assert!(ExecutionPlan::compile(&g).is_err());
+    }
+
+    #[test]
+    fn plan_runner_shapes_and_determinism() {
+        // Tiny NCHW "backbone": input quant-free, one Conv + ReduceMean.
+        let mut g = Graph::new("tiny_bb");
+        g.inputs = vec!["global_in".into()];
+        g.outputs = vec!["global_out".into()];
+        g.shapes.insert("global_in".into(), vec![1, 3, 4, 4]);
+        g.shapes.insert("w".into(), vec![5, 3, 3, 3]);
+        g.shapes.insert("c".into(), vec![1, 5, 4, 4]);
+        g.shapes.insert("global_out".into(), vec![1, 5]);
+        let mut rng = crate::rng::Rng::new(9);
+        g.initializers
+            .insert("w".into(), Tensor::from_fn(vec![5, 3, 3, 3], |_| rng.normal()));
+        g.nodes.push(
+            Node::new("Conv", "c0", vec!["global_in".into(), "w".into()], vec!["c".into()])
+                .with_attrs(
+                    Attrs::new()
+                        .with("kernel", AttrVal::Ints(vec![3, 3]))
+                        .with("stride", AttrVal::Ints(vec![1, 1]))
+                        .with("pad", AttrVal::Ints(vec![1, 1])),
+                ),
+        );
+        g.nodes.push(
+            Node::new("ReduceMean", "gap", vec!["c".into()], vec!["global_out".into()])
+                .with_attrs(
+                    Attrs::new()
+                        .with("axes", AttrVal::Ints(vec![2, 3]))
+                        .with("keepdims", AttrVal::Int(0)),
+                ),
+        );
+        let runner = PlanRunner::new(&g, 2).unwrap();
+        use crate::coordinator::FeatureExtractor;
+        assert_eq!(runner.img(), 4);
+        assert_eq!(runner.feature_dim(), 5);
+        assert_eq!(runner.batch(), 2);
+        let images: Vec<f32> = (0..runner.input_elems()).map(|i| (i % 7) as f32 * 0.1).collect();
+        let f1 = runner.extract(&images).unwrap();
+        let f2 = runner.extract(&images).unwrap();
+        assert_eq!(f1.len(), 2 * 5);
+        assert_eq!(f1, f2, "plan extraction must be deterministic");
+        assert!(f1.iter().any(|&v| v != 0.0));
+    }
+}

@@ -1,6 +1,15 @@
 //! PJRT runtime — loads the AOT-compiled HLO artifacts and executes them
 //! on the request path.  Python is never involved here (DESIGN.md §4).
 //!
+//! The real implementation needs the `xla` crate, which is not part of
+//! the offline crate set — it is gated behind the `pjrt` cargo feature
+//! (see Cargo.toml's header note for how to enable it).  Without the
+//! feature this module exposes an API-identical stub whose constructors
+//! return errors, so every caller compiles and the artifact-gated tests
+//! skip exactly as they do when `make artifacts` has not run.  The
+//! python-free request path without PJRT is the compiled-plan engine:
+//! [`crate::plan::PlanRunner`].
+//!
 //! The interchange format is HLO *text*: jax >= 0.5 serializes protos
 //! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
 //! text parser reassigns ids (see /opt/xla-example/README.md).
@@ -13,183 +22,262 @@
 //! format; the weight quantization is re-done in rust per config via
 //! [`crate::fixedpoint`].
 
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+    use anyhow::{anyhow, bail, Context, Result};
 
-use crate::artifacts::ModelBundle;
-use crate::fixedpoint::QuantConfig;
+    use crate::artifacts::ModelBundle;
+    use crate::fixedpoint::QuantConfig;
 
-/// Shared PJRT CPU client (compile + execute).
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    pub fn new() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Self { client })
+    /// Shared PJRT CPU client (compile + execute).
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    impl Runtime {
+        pub fn new() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(Self { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO text artifact.
+        pub fn compile_hlo(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+        }
     }
 
-    /// Load + compile an HLO text artifact.
-    pub fn compile_hlo(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+    /// A deployed backbone: executable + quantized weights for one config.
+    pub struct BackboneRunner {
+        exe: xla::PjRtLoadedExecutable,
+        /// PTQ'd weights in HLO argument order (weights, then act params).
+        weight_literals: Vec<xla::Literal>,
+        act_scale: xla::Literal,
+        act_qmax: xla::Literal,
+        pub batch: usize,
+        pub img: usize,
+        pub feature_dim: usize,
+        pub config: QuantConfig,
     }
-}
 
-/// A deployed backbone: executable + quantized weights for one config.
-pub struct BackboneRunner {
-    exe: xla::PjRtLoadedExecutable,
-    /// PTQ'd weights in HLO argument order (weights, then act params).
-    weight_literals: Vec<xla::Literal>,
-    act_scale: xla::Literal,
-    act_qmax: xla::Literal,
-    pub batch: usize,
-    pub img: usize,
-    pub feature_dim: usize,
-    pub config: QuantConfig,
-}
+    impl BackboneRunner {
+        /// Build from a model bundle + HLO path for `batch`, quantizing the
+        /// float weights to `config` (the request-path bit-width knob).
+        pub fn new(
+            runtime: &Runtime,
+            bundle: &ModelBundle,
+            hlo_path: &Path,
+            batch: usize,
+            config: QuantConfig,
+        ) -> Result<Self> {
+            let exe = runtime.compile_hlo(hlo_path)?;
+            let quantized = bundle.quantized_args(config.weight, config.acc_format());
+            let mut weight_literals = Vec::with_capacity(quantized.len());
+            for (tensor, arg) in quantized.iter().zip(&bundle.args) {
+                let dims: Vec<i64> = arg.shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(tensor.data());
+                let lit = if dims.is_empty() {
+                    lit
+                } else {
+                    lit.reshape(&dims)
+                        .map_err(|e| anyhow!("reshaping {}: {e:?}", arg.name))?
+                };
+                weight_literals.push(lit);
+            }
+            Ok(Self {
+                exe,
+                weight_literals,
+                act_scale: xla::Literal::from(config.act.scale() as f32),
+                act_qmax: xla::Literal::from(config.act.qmax() as f32),
+                batch,
+                img: bundle.img,
+                feature_dim: bundle.feature_dim,
+                config,
+            })
+        }
 
-impl BackboneRunner {
-    /// Build from a model bundle + HLO path for `batch`, quantizing the
-    /// float weights to `config` (the request-path bit-width knob).
-    pub fn new(
+    }
+
+    /// The serving contract lives on the trait — batching / tail padding
+    /// come from `FeatureExtractor`'s defaults, only the raw batch
+    /// execution is PJRT-specific.
+    impl crate::coordinator::FeatureExtractor for BackboneRunner {
+        fn batch(&self) -> usize {
+            self.batch
+        }
+
+        fn img(&self) -> usize {
+            self.img
+        }
+
+        fn feature_dim(&self) -> usize {
+            self.feature_dim
+        }
+
+        /// Run one batch of NHWC images (flat, `input_elems()` long),
+        /// return `batch * feature_dim` features.
+        fn extract(&self, images: &[f32]) -> Result<Vec<f32>> {
+            if images.len() != self.input_elems() {
+                bail!(
+                    "expected {} input elements, got {}",
+                    self.input_elems(),
+                    images.len()
+                );
+            }
+            let x = xla::Literal::vec1(images)
+                .reshape(&[self.batch as i64, self.img as i64, self.img as i64, 3])
+                .map_err(|e| anyhow!("image literal: {e:?}"))?;
+            let mut args: Vec<xla::Literal> = self.weight_literals.clone();
+            args.push(self.act_scale.clone());
+            args.push(self.act_qmax.clone());
+            args.push(x);
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&args)
+                .map_err(|e| anyhow!("execute: {e:?}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            // Lowered with return_tuple=True -> 1-tuple.
+            let out = lit.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+            let feats = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            if feats.len() != self.batch * self.feature_dim {
+                bail!(
+                    "feature count {} != batch {} x dim {}",
+                    feats.len(),
+                    self.batch,
+                    self.feature_dim
+                );
+            }
+            Ok(feats)
+        }
+    }
+
+    /// Compile-and-run helper for tests: the tiny MVAU artifact
+    /// (artifacts/test_mvau.hlo.txt, shapes fixed at x[8,12] w[12,5]).
+    pub fn run_test_mvau(
         runtime: &Runtime,
-        bundle: &ModelBundle,
-        hlo_path: &Path,
-        batch: usize,
-        config: QuantConfig,
-    ) -> Result<Self> {
-        let exe = runtime.compile_hlo(hlo_path)?;
-        let quantized = bundle.quantized_args(config.weight, config.acc_format());
-        let mut weight_literals = Vec::with_capacity(quantized.len());
-        for (tensor, arg) in quantized.iter().zip(&bundle.args) {
-            let dims: Vec<i64> = arg.shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(tensor.data());
-            let lit = if dims.is_empty() {
-                lit
-            } else {
-                lit.reshape(&dims)
-                    .map_err(|e| anyhow!("reshaping {}: {e:?}", arg.name))?
-            };
-            weight_literals.push(lit);
-        }
-        Ok(Self {
-            exe,
-            weight_literals,
-            act_scale: xla::Literal::from(config.act.scale() as f32),
-            act_qmax: xla::Literal::from(config.act.qmax() as f32),
-            batch,
-            img: bundle.img,
-            feature_dim: bundle.feature_dim,
-            config,
-        })
-    }
-
-    /// Elements of one input batch.
-    pub fn input_elems(&self) -> usize {
-        self.batch * self.img * self.img * 3
-    }
-
-    /// Run one batch of NHWC images (flat, `input_elems()` long), return
-    /// `batch * feature_dim` features.
-    pub fn extract(&self, images: &[f32]) -> Result<Vec<f32>> {
-        if images.len() != self.input_elems() {
-            bail!(
-                "expected {} input elements, got {}",
-                self.input_elems(),
-                images.len()
-            );
-        }
-        let x = xla::Literal::vec1(images)
-            .reshape(&[self.batch as i64, self.img as i64, self.img as i64, 3])
-            .map_err(|e| anyhow!("image literal: {e:?}"))?;
-        let mut args: Vec<xla::Literal> = self.weight_literals.clone();
-        args.push(self.act_scale.clone());
-        args.push(self.act_qmax.clone());
-        args.push(x);
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&args)
-            .map_err(|e| anyhow!("execute: {e:?}"))?;
-        let lit = result[0][0]
+        path: &Path,
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+        act_scale: f32,
+        act_qmax: f32,
+    ) -> Result<Vec<f32>> {
+        let exe = runtime.compile_hlo(path)?;
+        let xl = xla::Literal::vec1(x)
+            .reshape(&[8, 12])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let wl = xla::Literal::vec1(w)
+            .reshape(&[12, 5])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let bl = xla::Literal::vec1(b);
+        let sl = xla::Literal::from(act_scale);
+        let ql = xla::Literal::from(act_qmax);
+        let out = exe
+            .execute::<xla::Literal>(&[xl, wl, bl, sl, ql])
+            .map_err(|e| anyhow!("{e:?}"))?[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        // Lowered with return_tuple=True -> 1-tuple.
-        let out = lit.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
-        let feats = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-        if feats.len() != self.batch * self.feature_dim {
-            bail!(
-                "feature count {} != batch {} x dim {}",
-                feats.len(),
-                self.batch,
-                self.feature_dim
-            );
-        }
-        Ok(feats)
-    }
-
-    /// Extract features for an arbitrary number of images, batching and
-    /// zero-padding the tail.
-    pub fn extract_all(&self, images: &[f32], count: usize) -> Result<Vec<f32>> {
-        let per = self.img * self.img * 3;
-        if images.len() != count * per {
-            bail!("image buffer size mismatch");
-        }
-        let mut feats = Vec::with_capacity(count * self.feature_dim);
-        let mut batch_buf = vec![0.0f32; self.input_elems()];
-        let mut i = 0;
-        while i < count {
-            let take = (count - i).min(self.batch);
-            batch_buf[..take * per].copy_from_slice(&images[i * per..(i + take) * per]);
-            batch_buf[take * per..].fill(0.0);
-            let out = self.extract(&batch_buf)?;
-            feats.extend_from_slice(&out[..take * self.feature_dim]);
-            i += take;
-        }
-        Ok(feats)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let t = out.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
+        t.to_vec::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))
+            .context("reading MVAU output")
     }
 }
 
-/// Compile-and-run helper for tests: the tiny MVAU artifact
-/// (artifacts/test_mvau.hlo.txt, shapes fixed at x[8,12] w[12,5]).
-pub fn run_test_mvau(
-    runtime: &Runtime,
-    path: &Path,
-    x: &[f32],
-    w: &[f32],
-    b: &[f32],
-    act_scale: f32,
-    act_qmax: f32,
-) -> Result<Vec<f32>> {
-    let exe = runtime.compile_hlo(path)?;
-    let xl = xla::Literal::vec1(x)
-        .reshape(&[8, 12])
-        .map_err(|e| anyhow!("{e:?}"))?;
-    let wl = xla::Literal::vec1(w)
-        .reshape(&[12, 5])
-        .map_err(|e| anyhow!("{e:?}"))?;
-    let bl = xla::Literal::vec1(b);
-    let sl = xla::Literal::from(act_scale);
-    let ql = xla::Literal::from(act_qmax);
-    let out = exe
-        .execute::<xla::Literal>(&[xl, wl, bl, sl, ql])
-        .map_err(|e| anyhow!("{e:?}"))?[0][0]
-        .to_literal_sync()
-        .map_err(|e| anyhow!("{e:?}"))?;
-    let t = out.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
-    t.to_vec::<f32>()
-        .map_err(|e| anyhow!("{e:?}"))
-        .context("reading MVAU output")
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use crate::artifacts::ModelBundle;
+    use crate::fixedpoint::QuantConfig;
+
+    const UNAVAILABLE: &str = "PJRT runtime unavailable: built without the `pjrt` feature \
+         (the offline crate set has no `xla`); use the compiled-plan engine \
+         (`--engine plan` / plan::PlanRunner), or add the vendored `xla` crate \
+         to Cargo.toml (see its header note) and rebuild with --features pjrt";
+
+    /// Stub PJRT client: construction always fails with a pointer at the
+    /// plan-engine fallback.
+    pub struct Runtime {
+        _private: (),
+    }
+
+    impl Runtime {
+        pub fn new() -> Result<Self> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+    }
+
+    /// Stub backbone runner: same fields and trait surface as the real
+    /// one so every call site compiles; `new` always fails.
+    pub struct BackboneRunner {
+        pub batch: usize,
+        pub img: usize,
+        pub feature_dim: usize,
+        pub config: QuantConfig,
+    }
+
+    impl BackboneRunner {
+        pub fn new(
+            _runtime: &Runtime,
+            _bundle: &ModelBundle,
+            _hlo_path: &Path,
+            _batch: usize,
+            _config: QuantConfig,
+        ) -> Result<Self> {
+            bail!(UNAVAILABLE)
+        }
+    }
+
+    impl crate::coordinator::FeatureExtractor for BackboneRunner {
+        fn batch(&self) -> usize {
+            self.batch
+        }
+
+        fn img(&self) -> usize {
+            self.img
+        }
+
+        fn feature_dim(&self) -> usize {
+            self.feature_dim
+        }
+
+        fn extract(&self, _images: &[f32]) -> Result<Vec<f32>> {
+            bail!(UNAVAILABLE)
+        }
+    }
+
+    pub fn run_test_mvau(
+        _runtime: &Runtime,
+        _path: &Path,
+        _x: &[f32],
+        _w: &[f32],
+        _b: &[f32],
+        _act_scale: f32,
+        _act_qmax: f32,
+    ) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
 }
+
+pub use imp::{run_test_mvau, BackboneRunner, Runtime};

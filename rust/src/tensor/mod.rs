@@ -83,6 +83,13 @@ impl Tensor {
     }
 
     pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        self.reshape_in_place(shape)?;
+        Ok(self)
+    }
+
+    /// Metadata-only reshape of an owned buffer (the plan engine's
+    /// zero-copy Reshape path).
+    pub fn reshape_in_place(&mut self, shape: Vec<usize>) -> Result<()> {
         let numel: usize = shape.iter().product();
         if numel != self.data.len() {
             bail!(
@@ -91,24 +98,46 @@ impl Tensor {
             );
         }
         self.shape = shape;
-        Ok(self)
+        Ok(())
     }
 
     pub fn at(&self, idx: &[usize]) -> f32 {
-        debug_assert_eq!(idx.len(), self.shape.len());
+        debug_assert_eq!(
+            idx.len(),
+            self.shape.len(),
+            "at(): index arity {} != tensor rank {}",
+            idx.len(),
+            self.shape.len()
+        );
         let mut off = 0;
         let strides = self.strides();
         for (i, &ix) in idx.iter().enumerate() {
-            debug_assert!(ix < self.shape[i]);
+            debug_assert!(
+                ix < self.shape[i],
+                "at(): index {ix} out of bounds for axis {i} (extent {})",
+                self.shape[i]
+            );
             off += ix * strides[i];
         }
         self.data[off]
     }
 
     pub fn set(&mut self, idx: &[usize], v: f32) {
+        debug_assert_eq!(
+            idx.len(),
+            self.shape.len(),
+            "set(): index arity {} != tensor rank {}",
+            idx.len(),
+            self.shape.len()
+        );
         let mut off = 0;
         let strides = self.strides();
         for (i, &ix) in idx.iter().enumerate() {
+            debug_assert!(
+                ix < self.shape[i],
+                "set(): index {ix} out of bounds for axis {i} (extent {})",
+                self.shape[i]
+            );
             off += ix * strides[i];
         }
         self.data[off] = v;
@@ -116,6 +145,14 @@ impl Tensor {
 
     /// Generalized transpose: output axis i takes input axis `perm[i]`.
     pub fn transpose(&self, perm: &[usize]) -> Result<Self> {
+        let out_shape: Vec<usize> = self.transposed_shape(perm)?;
+        let mut out = Tensor::new(out_shape, vec![0.0f32; self.data.len()])?;
+        self.transpose_into(perm, &mut out)?;
+        Ok(out)
+    }
+
+    /// The shape a transpose by `perm` would produce (validates `perm`).
+    pub fn transposed_shape(&self, perm: &[usize]) -> Result<Vec<usize>> {
         if perm.len() != self.shape.len() {
             bail!("perm {perm:?} rank mismatch with {:?}", self.shape);
         }
@@ -126,14 +163,25 @@ impl Tensor {
             }
             seen[p] = true;
         }
-        let out_shape: Vec<usize> = perm.iter().map(|&p| self.shape[p]).collect();
+        Ok(perm.iter().map(|&p| self.shape[p]).collect())
+    }
+
+    /// Transpose into a caller-provided buffer (the plan engine's path;
+    /// `out` must already have the permuted shape).
+    pub fn transpose_into(&self, perm: &[usize], out: &mut Tensor) -> Result<()> {
+        let out_shape = self.transposed_shape(perm)?;
+        if out.shape != out_shape {
+            bail!(
+                "transpose_into: out shape {:?} != permuted shape {out_shape:?}",
+                out.shape
+            );
+        }
         let in_strides = self.strides();
         let out_strides = strides_of(&out_shape);
-        let mut out = vec![0.0f32; self.data.len()];
         // Iterate output linearly; map to input offset.
         let rank = perm.len();
         let mut idx = vec![0usize; rank];
-        for (o, slot) in out.iter_mut().enumerate() {
+        for (o, slot) in out.data.iter_mut().enumerate() {
             // Decompose o into output index.
             let mut rem = o;
             for d in 0..rank {
@@ -146,7 +194,7 @@ impl Tensor {
             }
             *slot = self.data[in_off];
         }
-        Tensor::new(out_shape, out)
+        Ok(())
     }
 
     /// NCHW -> NHWC.
@@ -169,16 +217,51 @@ impl Tensor {
     /// Elementwise binary op with numpy-style broadcasting.
     pub fn broadcast_with(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Self> {
         let out_shape = broadcast_shape(&self.shape, &other.shape)?;
+        let numel: usize = out_shape.iter().product();
+        let mut out = Tensor::new(out_shape, vec![0.0f32; numel])?;
+        self.broadcast_into(other, f, &mut out)?;
+        Ok(out)
+    }
+
+    /// Broadcasting binary op into a caller-provided buffer (`out` must
+    /// already have the broadcast shape; aliasing `out` with `self` or
+    /// `other` is not supported).
+    pub fn broadcast_into(
+        &self,
+        other: &Tensor,
+        f: impl Fn(f32, f32) -> f32,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        let out_shape = broadcast_shape(&self.shape, &other.shape)?;
+        if out.shape != out_shape {
+            bail!(
+                "broadcast_into: out shape {:?} != broadcast shape {out_shape:?}",
+                out.shape
+            );
+        }
+        // Fast paths: same-shape zip and scalar rhs cover almost every op
+        // on the request path (bias adds, residual adds, scale muls).
+        if other.numel() == 1 {
+            let b = other.data[0];
+            for (slot, &a) in out.data.iter_mut().zip(&self.data) {
+                *slot = f(a, b);
+            }
+            return Ok(());
+        }
+        if self.shape == other.shape {
+            for ((slot, &a), &b) in out.data.iter_mut().zip(&self.data).zip(&other.data) {
+                *slot = f(a, b);
+            }
+            return Ok(());
+        }
         let rank = out_shape.len();
         let a_shape = pad_shape(&self.shape, rank);
         let b_shape = pad_shape(&other.shape, rank);
         let a_str = broadcast_strides(&a_shape, &strides_of(&a_shape));
         let b_str = broadcast_strides(&b_shape, &strides_of(&b_shape));
         let out_strides = strides_of(&out_shape);
-        let numel: usize = out_shape.iter().product();
-        let mut out = vec![0.0f32; numel];
         let mut idx = vec![0usize; rank];
-        for (o, slot) in out.iter_mut().enumerate() {
+        for (o, slot) in out.data.iter_mut().enumerate() {
             let mut rem = o;
             for d in 0..rank {
                 idx[d] = rem / out_strides[d];
@@ -192,7 +275,56 @@ impl Tensor {
             }
             *slot = f(self.data[ao], other.data[bo]);
         }
-        Tensor::new(out_shape, out)
+        Ok(())
+    }
+
+    /// In-place broadcasting binary op: `self[i] = f(self[i], other[...])`.
+    /// Requires the broadcast shape to equal `self`'s shape (i.e. `other`
+    /// broadcasts into `self`) — the plan engine's in-place elementwise
+    /// path, which avoids one buffer per node.
+    pub fn broadcast_assign(
+        &mut self,
+        other: &Tensor,
+        f: impl Fn(f32, f32) -> f32,
+    ) -> Result<()> {
+        let out_shape = broadcast_shape(&self.shape, &other.shape)?;
+        if out_shape != self.shape {
+            bail!(
+                "broadcast_assign: result shape {out_shape:?} != lhs shape {:?}",
+                self.shape
+            );
+        }
+        if other.numel() == 1 {
+            let b = other.data[0];
+            for a in self.data.iter_mut() {
+                *a = f(*a, b);
+            }
+            return Ok(());
+        }
+        if self.shape == other.shape {
+            for (a, &b) in self.data.iter_mut().zip(&other.data) {
+                *a = f(*a, b);
+            }
+            return Ok(());
+        }
+        let rank = self.shape.len();
+        let b_shape = pad_shape(&other.shape, rank);
+        let b_str = broadcast_strides(&b_shape, &strides_of(&b_shape));
+        let out_strides = strides_of(&self.shape);
+        let mut idx = vec![0usize; rank];
+        for (o, a) in self.data.iter_mut().enumerate() {
+            let mut rem = o;
+            for d in 0..rank {
+                idx[d] = rem / out_strides[d];
+                rem %= out_strides[d];
+            }
+            let mut bo = 0;
+            for d in 0..rank {
+                bo += if b_shape[d] == 1 { 0 } else { idx[d] } * b_str[d];
+            }
+            *a = f(*a, other.data[bo]);
+        }
+        Ok(())
     }
 
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
@@ -316,6 +448,45 @@ mod tests {
         let a = Tensor::zeros(vec![2, 3]);
         let b = Tensor::zeros(vec![2, 4]);
         assert!(a.broadcast_with(&b, |x, _| x).is_err());
+    }
+
+    #[test]
+    fn broadcast_assign_matches_broadcast_with() {
+        let a = Tensor::from_fn(vec![1, 2, 2, 2], |i| i as f32);
+        let b = Tensor::new(vec![2, 1, 1], vec![1.0, 2.0]).unwrap();
+        let want = a.broadcast_with(&b, |x, y| x + y).unwrap();
+        let mut got = a.clone();
+        got.broadcast_assign(&b, |x, y| x + y).unwrap();
+        assert_eq!(got, want);
+        // Scalar rhs fast path.
+        let s = Tensor::scalar(3.0);
+        let want = a.broadcast_with(&s, |x, y| x * y).unwrap();
+        let mut got = a.clone();
+        got.broadcast_assign(&s, |x, y| x * y).unwrap();
+        assert_eq!(got, want);
+        // Result shape growing beyond lhs must be rejected.
+        let wide = Tensor::zeros(vec![3, 1]);
+        assert!(Tensor::zeros(vec![1, 4]).broadcast_assign(&wide, |x, _| x).is_err());
+    }
+
+    #[test]
+    fn transpose_into_validates_out_shape() {
+        let t = Tensor::from_fn(vec![2, 3], |i| i as f32);
+        let mut bad = Tensor::zeros(vec![2, 3]);
+        assert!(t.transpose_into(&[1, 0], &mut bad).is_err());
+        let mut good = Tensor::zeros(vec![3, 2]);
+        t.transpose_into(&[1, 0], &mut good).unwrap();
+        assert_eq!(good, t.transpose(&[1, 0]).unwrap());
+    }
+
+    #[test]
+    fn reshape_in_place_is_metadata_only() {
+        let mut t = Tensor::from_fn(vec![2, 3], |i| i as f32);
+        let ptr = t.data().as_ptr();
+        t.reshape_in_place(vec![3, 2]).unwrap();
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.data().as_ptr(), ptr);
+        assert!(t.reshape_in_place(vec![7]).is_err());
     }
 
     #[test]

@@ -14,8 +14,8 @@
 //! Every pass implements [`Transform`]: a semantics-preserving rewrite
 //! returning whether it changed the graph.  [`apply_pipeline`] runs a
 //! stage list to fixpoint, optionally checking numerical equivalence
-//! after every stage (ops::execute on a probe input) — the FINN
-//! methodology, mechanized.
+//! after every stage (one compiled [`ExecutionPlan`] per side of the
+//! rewrite, run on a probe input) — the FINN methodology, mechanized.
 
 pub mod convert_to_hw;
 pub mod gap;
@@ -28,7 +28,7 @@ use std::collections::HashMap;
 use anyhow::{bail, Result};
 
 use crate::graph::Graph;
-use crate::ops;
+use crate::plan::ExecutionPlan;
 use crate::tensor::Tensor;
 
 /// A semantics-preserving graph rewrite.
@@ -68,7 +68,9 @@ pub struct StageReport {
 ///
 /// When `probe` is given, the graph is executed after every stage and the
 /// outputs compared against the pre-pipeline reference; any divergence
-/// greater than `tol` aborts — a transform broke semantics.
+/// greater than `tol` aborts — a transform broke semantics.  Each side of
+/// the comparison compiles one [`ExecutionPlan`] (reference once, rewritten
+/// graph once per stage — the graph changed, so its plan must too).
 pub fn apply_pipeline(
     graph: &mut Graph,
     transforms: &[&dyn Transform],
@@ -76,7 +78,7 @@ pub fn apply_pipeline(
     tol: f32,
 ) -> Result<Vec<StageReport>> {
     let reference = match probe {
-        Some(feeds) => Some(ops::execute(graph, feeds)?),
+        Some(feeds) => Some(ExecutionPlan::compile(graph)?.run(feeds)?),
         None => None,
     };
     let mut reports = Vec::new();
@@ -84,7 +86,8 @@ pub fn apply_pipeline(
         let n = run_to_fixpoint(graph, *t)?;
         let mut max_div = None;
         if let (Some(feeds), Some(want)) = (probe, reference.as_ref()) {
-            let got = ops::execute(graph, feeds)
+            let got = ExecutionPlan::compile(graph)
+                .and_then(|plan| plan.run(feeds))
                 .map_err(|e| anyhow::anyhow!("after {}: {e}", t.name()))?;
             let mut stage_max = 0.0f32;
             for (name, w) in want {

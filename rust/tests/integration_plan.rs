@@ -1,0 +1,198 @@
+//! Integration: the compiled ExecutionPlan engine vs the legacy
+//! interpreter on realistic graphs — bitwise equality on the imported and
+//! fully-lowered ResNet-9, buffer-arena behaviour, and the plan-backed
+//! serving path (no PJRT, no artifacts needed).
+
+mod common;
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use bwade::build::{requantize_graph, synth_backbone_graph};
+use bwade::coordinator::{serve, BatchPolicy, FeatureExtractor, FrameSource};
+use bwade::fewshot::NcmClassifier;
+use bwade::fixedpoint::headline_config;
+use bwade::graph::Graph;
+use bwade::ops::execute_interpreted;
+use bwade::plan::{ExecutionPlan, PlanRunner, PlanScratch};
+use bwade::rng::Rng;
+use bwade::tensor::Tensor;
+use bwade::transforms::run_default_pipeline;
+
+fn probe_feeds(graph: &Graph, seed: u64) -> HashMap<String, Tensor> {
+    let name = graph.inputs[0].clone();
+    let shape = graph.shape_of(&name).unwrap().to_vec();
+    let mut rng = Rng::new(seed);
+    let mut feeds = HashMap::new();
+    feeds.insert(name, Tensor::from_fn(shape, |_| rng.next_f32()));
+    feeds
+}
+
+/// The acceptance criterion: plan output is bitwise identical to the
+/// legacy interpreter on the imported NCHW backbone AND on the fully
+/// lowered HW graph.
+#[test]
+fn plan_matches_interpreter_on_imported_and_lowered_resnet9() {
+    let mut graph = synth_backbone_graph([4, 8, 8, 16], 16, 4, 2);
+    requantize_graph(&mut graph, &headline_config()).unwrap();
+    let feeds = probe_feeds(&graph, 42);
+
+    // Imported (pre-streamlining) graph.
+    let want = execute_interpreted(&graph, &feeds).unwrap();
+    let plan = ExecutionPlan::compile(&graph).unwrap();
+    let got = plan.run(&feeds).unwrap();
+    for (name, w) in &want {
+        assert_eq!(&got[name], w, "imported graph: output {name} differs");
+    }
+
+    // Fully lowered HW graph (after the whole Fig.-3 pipeline).
+    run_default_pipeline(&mut graph, None, 0.0).unwrap();
+    let want = execute_interpreted(&graph, &feeds).unwrap();
+    let plan = ExecutionPlan::compile(&graph).unwrap();
+    let got = plan.run(&feeds).unwrap();
+    for (name, w) in &want {
+        assert_eq!(&got[name], w, "lowered graph: output {name} differs");
+    }
+}
+
+/// The arena must actually reuse memory: the peak number of live
+/// activation buffers stays well below the total activation tensor count,
+/// and elementwise steps run in place.
+#[test]
+fn plan_arena_reuses_buffers_on_lowered_graph() {
+    let mut graph = synth_backbone_graph([4, 8, 8, 16], 16, 4, 2);
+    requantize_graph(&mut graph, &headline_config()).unwrap();
+    run_default_pipeline(&mut graph, None, 0.0).unwrap();
+    let plan = ExecutionPlan::compile(&graph).unwrap();
+    let feeds = probe_feeds(&graph, 7);
+
+    let mut scratch = PlanScratch::default();
+    plan.run_with(&feeds, &mut scratch).unwrap();
+    let stats = scratch.stats;
+    assert!(
+        stats.peak_live < plan.num_activation_slots(),
+        "peak live {} should be below total activations {}",
+        stats.peak_live,
+        plan.num_activation_slots()
+    );
+    assert!(
+        stats.inplace_steps > 0,
+        "lowered graph has thresholding steps that must run in place"
+    );
+
+    // Second frame: activations come from the arena, not the allocator.
+    let fresh_before = stats.fresh_allocs;
+    plan.run_with(&feeds, &mut scratch).unwrap();
+    assert!(
+        scratch.stats.fresh_allocs <= fresh_before + 1,
+        "second frame allocated {} fresh buffers (arena not reused)",
+        scratch.stats.fresh_allocs - fresh_before
+    );
+    assert!(scratch.stats.reuses > 0);
+}
+
+#[test]
+fn plan_errors_on_missing_feed_at_run_time() {
+    let graph = synth_backbone_graph([4, 8, 8, 16], 16, 4, 2);
+    let plan = ExecutionPlan::compile(&graph).unwrap();
+    // Compilation succeeded; the missing feed is a *run-time* error.
+    let err = plan.run(&HashMap::new()).unwrap_err().to_string();
+    assert!(
+        err.contains("missing feed for graph input global_in"),
+        "unexpected error: {err}"
+    );
+}
+
+#[test]
+fn run_batch_amortizes_one_arena_across_frames() {
+    let mut graph = synth_backbone_graph([4, 8, 8, 16], 16, 4, 2);
+    requantize_graph(&mut graph, &headline_config()).unwrap();
+    let plan = ExecutionPlan::compile(&graph).unwrap();
+    let frames: Vec<HashMap<String, Tensor>> =
+        (0..3).map(|i| probe_feeds(&graph, 100 + i)).collect();
+    let outs = plan.run_batch(&frames).unwrap();
+    assert_eq!(outs.len(), 3);
+    // Frames are independent: batch results equal one-shot results.
+    for (feeds, out) in frames.iter().zip(&outs) {
+        let solo = plan.run(feeds).unwrap();
+        assert_eq!(solo["global_out"], out["global_out"]);
+    }
+}
+
+/// The Fig.-5 serving pipeline end to end on the plan engine: frame
+/// source -> batcher -> compiled plan backbone -> NCM — python-free,
+/// XLA-free, artifact-free.
+#[test]
+fn serving_pipeline_runs_on_plan_engine() {
+    let mut graph = synth_backbone_graph([4, 8, 8, 16], 16, 4, 2);
+    requantize_graph(&mut graph, &headline_config()).unwrap();
+    let runner = PlanRunner::new(&graph, 4).unwrap();
+    assert_eq!(runner.img(), 16);
+    assert_eq!(runner.feature_dim(), 16);
+
+    // Synthetic 3-way support set: distinct constant-ish images.
+    let per = 16 * 16 * 3;
+    let mut sup = Vec::new();
+    let mut labels = Vec::new();
+    let mut rng = Rng::new(5);
+    for class in 0..3usize {
+        for _ in 0..2 {
+            for _ in 0..per {
+                sup.push(class as f32 * 0.3 + 0.1 * rng.next_f32());
+            }
+            labels.push(class);
+        }
+    }
+    let sup_feats = runner.extract_all(&sup, 6).unwrap();
+    assert_eq!(sup_feats.len(), 6 * 16);
+    let ncm = NcmClassifier::fit(&sup_feats, 16, &labels, 3).unwrap();
+
+    let rx = FrameSource {
+        count: 20,
+        rate_fps: None,
+        img: 16,
+        seed: 2,
+    }
+    .spawn(8);
+    let (metrics, results) = serve(
+        &runner,
+        &ncm,
+        rx,
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+    )
+    .expect("serve");
+    assert_eq!(metrics.frames, 20);
+    assert_eq!(results.len(), 20);
+    assert!(results.iter().all(|r| r.class < 3));
+    let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..20).collect::<Vec<_>>());
+    // The batch amortized the arena: far fewer fresh allocations than
+    // frames x activations.
+    let stats = runner.arena_stats();
+    assert!(stats.reuses > stats.fresh_allocs, "{stats:?}");
+}
+
+/// Deterministic extraction and batch-size independence on the plan path
+/// (mirrors the PJRT batch1-vs-batch8 contract test, no artifacts needed).
+#[test]
+fn plan_runner_batch_sizes_agree() {
+    let mut graph = synth_backbone_graph([4, 8, 8, 16], 16, 4, 2);
+    requantize_graph(&mut graph, &headline_config()).unwrap();
+    let r1 = PlanRunner::new(&graph, 1).unwrap();
+    let r4 = PlanRunner::new(&graph, 4).unwrap();
+    let images = common::random_images(4, 16, 17);
+    let f4 = r4.extract(&images).unwrap();
+    let per = 16 * 16 * 3;
+    for i in 0..4 {
+        let f1 = r1.extract(&images[i * per..(i + 1) * per]).unwrap();
+        assert_eq!(
+            f1,
+            f4[i * 16..(i + 1) * 16].to_vec(),
+            "image {i}: batch-1 and batch-4 disagree"
+        );
+    }
+}

@@ -4,6 +4,7 @@
 
 mod common;
 
+use bwade::coordinator::FeatureExtractor;
 use bwade::fixedpoint::{headline_config, FxpFormat};
 use bwade::graph::Graph;
 use bwade::runtime::{run_test_mvau, BackboneRunner, Runtime};

@@ -7,7 +7,7 @@ mod common;
 use std::time::Duration;
 
 use bwade::artifacts::FewshotBank;
-use bwade::coordinator::{serve, BatchPolicy, FrameSource};
+use bwade::coordinator::{serve, BatchPolicy, FeatureExtractor, FrameSource};
 use bwade::fewshot::{evaluate, sample_episode, NcmClassifier};
 use bwade::fixedpoint::{headline_config, table2_configs};
 use bwade::rng::Rng;
