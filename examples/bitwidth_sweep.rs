@@ -1,26 +1,18 @@
 //! Table II reproduction: few-shot accuracy as a function of fixed-point
-//! bit-width, over the paper's eight configurations.
+//! bit-width, over the paper's eight configurations — now running on the
+//! `dse` subsystem, so it needs neither trained artifacts nor the `pjrt`
+//! feature (the backbone is synthesized and executed through the compiled
+//! plan engine) and works in the offline container:
 //!
-//!     make artifacts && cargo run --release --example bitwidth_sweep -- [episodes]
+//!     cargo run --release --example bitwidth_sweep -- [episodes]
 //!
-//! One HLO artifact serves all eight rows: activation parameters are
-//! runtime scalars and weight PTQ happens in rust (fixedpoint module), so
-//! the sweep exercises the *bit-width-aware* part of the design
-//! environment on the request path.  Alongside accuracy, each row also
-//! reports the hardware cost of that configuration (design-environment
-//! build), giving the accuracy/resource trade-off the paper's Table II +
-//! Table III imply.
+//! Alongside accuracy, each row reports the hardware cost of that
+//! configuration from the same design-environment build the sweep runs
+//! (folding to an 0.85 utilization cap), giving the accuracy/resource
+//! trade-off the paper's Table II + Table III imply.
 
 use anyhow::{Context, Result};
-use bwade::artifacts::{ArtifactPaths, FewshotBank};
-use bwade::build::{build, DesignConfig};
-use bwade::coordinator::FeatureExtractor;
-use bwade::fewshot::{evaluate, sample_episode};
-use bwade::fixedpoint::table2_configs;
-use bwade::graph::Graph;
-use bwade::resources::Device;
-use bwade::rng::Rng;
-use bwade::runtime::{BackboneRunner, Runtime};
+use bwade::dse::{run_sweep, SweepSpec};
 
 const PAPER_ACC: [f64; 8] = [44.89, 59.70, 44.72, 60.92, 62.58, 62.69, 62.47, 62.78];
 
@@ -32,54 +24,33 @@ fn main() -> Result<()> {
         .context("episodes must be an integer")?
         .unwrap_or(300);
 
-    let paths = ArtifactPaths::default_dir();
-    anyhow::ensure!(paths.exists(), "run `make artifacts` first");
-    let bundle = paths.model_bundle()?;
-    let bank = FewshotBank::load(&paths.fewshot_bank())?;
-    let runtime = Runtime::new()?;
-    let batch = *bundle.batch_sizes.iter().max().unwrap();
-    let hlo = paths.backbone_hlo(batch);
-    let device = Device::pynq_z1();
+    // One cap: this example is the Table-II axis of the grid.  Everything
+    // else (widths, bank, seed) is the sweep default, so rows here match
+    // `bwade dse` output exactly.
+    let spec = SweepSpec {
+        caps: vec![0.85],
+        episodes: n_episodes,
+        ..SweepSpec::default()
+    };
+    let result = run_sweep(&spec, 4, None)?;
 
-    let mut rng = Rng::new(0xEE);
-    let episodes: Vec<_> = (0..n_episodes)
-        .map(|_| sample_episode(&mut rng, bank.num_classes, bank.per_class, 5, 5, 15))
-        .collect::<Result<_>>()?;
-
-    println!("== Table II: accuracy vs bit-width (5-way 5-shot, {n_episodes} episodes) ==");
+    println!(
+        "== Table II: accuracy vs bit-width (5-way 5-shot, {n_episodes} episodes, plan engine) =="
+    );
     println!(
         "{:<16} {:>4} {:>10} {:>8} | {:>9} {:>8} {:>7} | {:>10}",
         "config", "bits", "acc[%]", "ci95", "LUT", "BRAM36", "lat[ms]", "paper acc"
     );
-
-    for ((name, cfg), paper) in table2_configs().into_iter().zip(PAPER_ACC) {
-        // Accuracy through the PJRT artifact.
-        let runner = BackboneRunner::new(&runtime, &bundle, &hlo, batch, cfg)?;
-        let feats = runner.extract_all(&bank.images, bank.num_images())?;
-        let acc = evaluate(&feats, bundle.feature_dim, &episodes)?;
-
-        // Hardware cost of this configuration (design environment).
-        let mut graph = Graph::load(&paths.graph_json(), &paths.graph_weights())?;
-        let report = build(
-            &mut graph,
-            &DesignConfig {
-                quant: cfg,
-                target_fps: Some(60.0),
-                max_utilization: 0.85,
-                verify: false,
-            },
-            &device,
-        )?;
-
+    for (o, paper) in result.outcomes.iter().zip(PAPER_ACC) {
         println!(
             "{:<16} {:>4} {:>9.2}% {:>7.2}% | {:>9.0} {:>8.1} {:>7.2} | {:>9.2}%",
-            name,
-            cfg.max_bits(),
-            acc.mean * 100.0,
-            acc.ci95 * 100.0,
-            report.total_resources.lut,
-            report.total_resources.bram36,
-            report.latency_ms,
+            o.point.name,
+            o.point.quant.max_bits(),
+            o.metrics.acc_mean * 100.0,
+            o.metrics.acc_ci95 * 100.0,
+            o.metrics.lut,
+            o.metrics.bram36,
+            o.metrics.latency_ms,
             paper
         );
     }

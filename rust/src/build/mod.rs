@@ -9,7 +9,7 @@
 //! (rust-side PTQ: the bit-width is a *design parameter* here, the
 //! paper's core claim vs Tensil's fixed 16/32-bit).
 
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
@@ -112,6 +112,23 @@ pub fn build(graph: &mut Graph, cfg: &DesignConfig, device: &Device) -> Result<B
             graph.op_census()
         );
     }
+    let mut report = implement_lowered(graph, cfg, device)?;
+    report.stages = stages;
+    report.census_before = census_before;
+    Ok(report)
+}
+
+/// The cap-dependent tail of [`build`]: folding search + FIFO sizing +
+/// bounded dataflow sim on an **already-lowered** HW graph.  Callable
+/// once per utilization cap on a clone of one lowered graph (the dse
+/// sweep lowers each config once and implements it per cap); `stages` and
+/// `census_before` in the returned report are empty here — [`build`]
+/// fills them.
+pub fn implement_lowered(
+    graph: &mut Graph,
+    cfg: &DesignConfig,
+    device: &Device,
+) -> Result<BuildReport> {
     let census_after = graph.op_census();
 
     let models = folding_search(graph, cfg, device)?;
@@ -134,8 +151,8 @@ pub fn build(graph: &mut Graph, cfg: &DesignConfig, device: &Device) -> Result<B
     let weight_bits = total_weight_bits(&models);
     let steady = sim_res.steady_interval.max(1);
     Ok(BuildReport {
-        stages,
-        census_before,
+        stages: Vec::new(),
+        census_before: HashMap::new(),
         census_after,
         config: cfg.quant,
         total_resources: total,
@@ -405,6 +422,19 @@ pub fn folding_search(
     cfg: &DesignConfig,
     device: &Device,
 ) -> Result<Vec<HwNodeModel>> {
+    Ok(folding_search_traced(graph, cfg, device)?.0)
+}
+
+/// [`folding_search`] plus the initiation interval observed at the top of
+/// every greedy iteration and after the final model (test/report
+/// instrumentation).  The trace is non-increasing by construction: only
+/// the bottleneck's parallelism is ever bumped, and folding never slows a
+/// node down; a bump that breaks the utilization cap is rolled back.
+pub fn folding_search_traced(
+    graph: &mut Graph,
+    cfg: &DesignConfig,
+    device: &Device,
+) -> Result<(Vec<HwNodeModel>, Vec<u64>)> {
     let cap_lut = device.budget.lut * cfg.max_utilization;
     let cap_ff = device.budget.ff * cfg.max_utilization;
     let cap_dsp = device.budget.dsp * cfg.max_utilization;
@@ -413,37 +443,39 @@ pub fn folding_search(
         .target_fps
         .map(|fps| (device.clock_mhz * 1e6 / fps).max(1.0) as u64);
 
-    let mut frozen: HashSet<String> = HashSet::new();
+    let mut trace: Vec<u64> = Vec::new();
     for _ in 0..10_000 {
         let models = model_graph(graph, &cfg.quant)?;
         let ii = initiation_interval(&models);
+        trace.push(ii);
         if let Some(t) = target_ii {
             if ii <= t {
                 break;
             }
         }
         // The bottleneck bounds the II; folding anything else is wasted
-        // area.  If the bottleneck can't improve, the search is done.
+        // area.  If the bottleneck can't improve — maxed out, or its next
+        // bump would break the cap — the search is done.
         let Some(bottleneck) = models.iter().max_by_key(|m| m.cycles) else {
             break;
         };
-        if bottleneck.cycles <= 1 || frozen.contains(&bottleneck.name) {
+        if bottleneck.cycles <= 1 {
             break;
         }
         let name = bottleneck.name.clone();
         let saved = save_folding(graph, &name);
         if !bump_folding(graph, &name)? {
-            frozen.insert(name);
             break;
         }
         let after = model_graph(graph, &cfg.quant)?;
         if !fits(&total_resources(&after)) {
             restore_folding(graph, &name, saved);
-            frozen.insert(name);
             break;
         }
     }
-    model_graph(graph, &cfg.quant)
+    let models = model_graph(graph, &cfg.quant)?;
+    trace.push(initiation_interval(&models));
+    Ok((models, trace))
 }
 
 fn node_index(graph: &Graph, name: &str) -> Option<usize> {

@@ -95,6 +95,27 @@ pub fn parse_config(spec: &str) -> Result<crate::fixedpoint::QuantConfig> {
     )
 }
 
+/// Comma-separated f64 list, e.g. "0.5,0.85".
+pub fn parse_f64_list(s: &str) -> Result<Vec<f64>> {
+    s.split(',')
+        .map(|p| {
+            p.trim()
+                .parse::<f64>()
+                .map_err(|_| anyhow!("bad number {p:?} in list {s:?}"))
+        })
+        .collect()
+}
+
+/// Comma-separated config list (Table-II names or wI.F_aI.F specs).
+pub fn parse_config_list(s: &str) -> Result<Vec<(String, crate::fixedpoint::QuantConfig)>> {
+    s.split(',')
+        .map(|p| {
+            let p = p.trim();
+            Ok((p.to_string(), parse_config(p)?))
+        })
+        .collect()
+}
+
 pub const USAGE: &str = "\
 bwade — Bit-Width-Aware Design Environment (ISCAS reproduction)
 
@@ -111,6 +132,18 @@ COMMANDS
              --episodes <n>              episodes per config (default 200)
              --engine <pjrt|plan>        backbone engine (default: pjrt if
                                          built with the feature, else plan)
+  dse        parallel design-space exploration: quant configs x
+             utilization caps -> Pareto frontier + EXPERIMENTS.md
+             (offline: synthesized backbone + compiled plan engine)
+             --workers <n>               worker threads (default 4)
+             --episodes <n>              episodes per point (default 50)
+             --configs <a,b,...>         config subset (default: all 8 Table-II rows)
+             --caps <f,f,...>            utilization caps (default 0.5,0.85)
+             --target-fps <f>            folding target (default: fold to cap)
+             --cache [dir]               reuse/populate result cache
+                                         (default dir .dse-cache)
+             --out <path>                report path (default EXPERIMENTS.md)
+             --seed <n>  --img <n>       bank seed / input size
   serve      run the Fig.-5 serving pipeline on synthetic frames
              --frames <n>  --batch <n>  --rate <fps>  --config <...>
              --engine <pjrt|plan>
@@ -158,6 +191,17 @@ mod tests {
     #[test]
     fn empty_means_help() {
         assert_eq!(Args::parse(&[]).unwrap().command, "help");
+    }
+
+    #[test]
+    fn list_parsers() {
+        assert_eq!(parse_f64_list("0.5, 0.85").unwrap(), vec![0.5, 0.85]);
+        assert!(parse_f64_list("0.5,nope").is_err());
+        let cfgs = parse_config_list("b6_c1.5_r2.2, w4.4_a4.4").unwrap();
+        assert_eq!(cfgs.len(), 2);
+        assert_eq!(cfgs[0].0, "b6_c1.5_r2.2");
+        assert_eq!(cfgs[1].1.weight.describe(), "s8.4");
+        assert!(parse_config_list("b6_c1.5_r2.2,junk").is_err());
     }
 
     #[test]

@@ -1,0 +1,233 @@
+//! Content-hashed on-disk result cache for the sweep.
+//!
+//! The cache key is an FNV-1a hash of a canonical description string that
+//! names every input affecting a point's metrics: the quant config, the
+//! utilization cap, the folding target, the device (name, clock, budget),
+//! the backbone geometry, the bank/episode shape and the seed.  A second
+//! sweep over an unchanged spec therefore re-evaluates zero points, while
+//! touching any knob (or bumping [`CACHE_VERSION`] when the evaluation
+//! pipeline itself changes meaning) silently misses and re-runs.
+//!
+//! Values are stored one JSON file per point via the hand-rolled
+//! [`crate::json`] module (no serde offline); the stored description is
+//! compared on load, so a hash collision or stale schema degrades to a
+//! cache miss, never to wrong metrics.  f64 round-trips are exact (the
+//! emitter prints shortest-roundtrip), so cache hits return bitwise-
+//! identical points.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::json::{obj, Json};
+
+use super::{DesignPoint, PointMetrics, SweepSpec};
+
+/// Bump when the evaluation pipeline (`prepare_config` +
+/// `build_hw_metrics`) changes meaning — invalidates every entry.
+pub const CACHE_VERSION: u32 = 1;
+
+/// 64-bit FNV-1a — tiny, dependency-free, good enough for file naming
+/// (the stored description string is the real collision guard).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Canonical description of one design point under one spec — the cache
+/// key preimage.  Floats use `{:?}` (shortest-roundtrip), so specs that
+/// differ by any representable amount never share a description.
+pub fn point_desc(spec: &SweepSpec, point: &DesignPoint) -> String {
+    let b = &spec.device.budget;
+    format!(
+        "v{CACHE_VERSION}|quant={}|cap={:?}|fps={:?}|dev={}|clk={:?}|budget={:?}/{:?}/{:?}/{:?}|widths={:?}|img={}|bank={}x{}|ep={}x{}w{}s{}q|seed={}",
+        point.quant.describe(),
+        point.max_utilization,
+        spec.target_fps,
+        spec.device.name,
+        spec.device.clock_mhz,
+        b.lut,
+        b.ff,
+        b.bram36,
+        b.dsp,
+        spec.widths,
+        spec.img,
+        spec.num_classes,
+        spec.per_class,
+        spec.episodes,
+        spec.n_way,
+        spec.k_shot,
+        spec.n_query,
+        spec.seed,
+    )
+}
+
+/// A directory of `<fnv1a64(desc)>.json` result files.
+#[derive(Debug, Clone)]
+pub struct ResultCache {
+    dir: PathBuf,
+}
+
+impl ResultCache {
+    /// Open (creating if needed) a cache directory.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        Ok(Self { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path_for(&self, desc: &str) -> PathBuf {
+        self.dir.join(format!("{:016x}.json", fnv1a64(desc.as_bytes())))
+    }
+
+    /// Cached metrics for a point, or `None` on miss / unreadable entry /
+    /// description mismatch.
+    pub fn lookup(&self, spec: &SweepSpec, point: &DesignPoint) -> Option<PointMetrics> {
+        let desc = point_desc(spec, point);
+        let doc = Json::parse_file(&self.path_for(&desc)).ok()?;
+        if doc.opt("desc").and_then(|d| d.as_str().ok()) != Some(desc.as_str()) {
+            return None;
+        }
+        metrics_from_json(doc.opt("metrics")?).ok()
+    }
+
+    /// Persist one evaluated point.
+    pub fn store(
+        &self,
+        spec: &SweepSpec,
+        point: &DesignPoint,
+        metrics: &PointMetrics,
+    ) -> Result<()> {
+        let desc = point_desc(spec, point);
+        let path = self.path_for(&desc);
+        let doc = obj(vec![
+            ("desc", Json::str(desc)),
+            ("config", Json::str(point.name.clone())),
+            ("metrics", metrics_to_json(metrics)),
+        ]);
+        std::fs::write(&path, doc.to_string_pretty())
+            .with_context(|| format!("writing cache entry {}", path.display()))
+    }
+}
+
+fn metrics_to_json(m: &PointMetrics) -> Json {
+    obj(vec![
+        ("acc_mean", Json::num(m.acc_mean)),
+        ("acc_ci95", Json::num(m.acc_ci95)),
+        ("fps", Json::num(m.fps)),
+        ("latency_ms", Json::num(m.latency_ms)),
+        ("steady_cycles", Json::num(m.steady_cycles as f64)),
+        ("lut", Json::num(m.lut)),
+        ("ff", Json::num(m.ff)),
+        ("bram36", Json::num(m.bram36)),
+        ("dsp", Json::num(m.dsp)),
+        ("weight_bits", Json::num(m.weight_bits as f64)),
+        ("utilization", Json::num(m.utilization)),
+        ("hw_layers", Json::num(m.hw_layers as f64)),
+    ])
+}
+
+fn metrics_from_json(j: &Json) -> Result<PointMetrics> {
+    Ok(PointMetrics {
+        acc_mean: j.get("acc_mean")?.as_f64()?,
+        acc_ci95: j.get("acc_ci95")?.as_f64()?,
+        fps: j.get("fps")?.as_f64()?,
+        latency_ms: j.get("latency_ms")?.as_f64()?,
+        steady_cycles: j.get("steady_cycles")?.as_f64()? as u64,
+        lut: j.get("lut")?.as_f64()?,
+        ff: j.get("ff")?.as_f64()?,
+        bram36: j.get("bram36")?.as_f64()?,
+        dsp: j.get("dsp")?.as_f64()?,
+        weight_bits: j.get("weight_bits")?.as_f64()? as u64,
+        utilization: j.get("utilization")?.as_f64()?,
+        hw_layers: j.get("hw_layers")?.as_usize()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_metrics() -> PointMetrics {
+        PointMetrics {
+            acc_mean: 0.59703125,
+            acc_ci95: 0.0123456789,
+            fps: 61.53e3 / 1000.7,
+            latency_ms: 16.3000001,
+            steady_cycles: 2_031_250,
+            lut: 37_263.25,
+            ff: 44_617.0,
+            bram36: 131.5,
+            dsp: 22.0,
+            weight_bits: 1_234_567,
+            utilization: 0.8533,
+            hw_layers: 40,
+        }
+    }
+
+    #[test]
+    fn fnv_is_stable_and_spread() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv1a64(b"a"), fnv1a64(b"b"));
+    }
+
+    #[test]
+    fn metrics_round_trip_bitwise() {
+        let m = sample_metrics();
+        let j = metrics_to_json(&m);
+        let back = metrics_from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn desc_changes_with_every_knob() {
+        let spec = SweepSpec::default();
+        let pts = spec.points();
+        let p = &pts[0];
+        let base = point_desc(&spec, p);
+        let mut p2 = p.clone();
+        p2.max_utilization += 0.01;
+        assert_ne!(base, point_desc(&spec, &p2));
+        // Sub-rounding differences must still change the key (shortest-
+        // roundtrip formatting, no fixed precision).
+        let mut p3 = p.clone();
+        p3.max_utilization += 1e-9;
+        assert_ne!(base, point_desc(&spec, &p3));
+        let mut s2 = spec.clone();
+        s2.seed += 1;
+        assert_ne!(base, point_desc(&s2, p));
+        let mut s2 = spec.clone();
+        s2.episodes += 1;
+        assert_ne!(base, point_desc(&s2, p));
+        let mut s2 = spec.clone();
+        s2.target_fps = Some(60.0);
+        assert_ne!(base, point_desc(&s2, p));
+    }
+
+    #[test]
+    fn store_lookup_and_mismatch_miss() {
+        let dir = std::env::temp_dir().join(format!("bwade_cache_unit_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = ResultCache::open(&dir).unwrap();
+        let spec = SweepSpec::default();
+        let p = spec.points()[0].clone();
+        assert!(cache.lookup(&spec, &p).is_none());
+        let m = sample_metrics();
+        cache.store(&spec, &p, &m).unwrap();
+        assert_eq!(cache.lookup(&spec, &p), Some(m));
+        // A different spec misses even though the directory has entries.
+        let mut s2 = spec.clone();
+        s2.seed ^= 1;
+        assert!(cache.lookup(&s2, &p).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,527 @@
+//! Design-space exploration — the paper's headline artifact as a
+//! subsystem, not a hand-run loop.
+//!
+//! Table II sweeps eight fixed-point configurations and Table III trades
+//! resources against throughput; PEFSL (arXiv:2404.19354) and the
+//! MLPerf-Tiny FPGA codesign line (arXiv:2206.11791) both show the value
+//! of such pipelines is *systematic* co-exploration of quantization ×
+//! parallelism under a device budget.  This module enumerates a
+//! [`SweepSpec`] grid (quant configs × utilization caps on one device),
+//! evaluates every [`DesignPoint`] on a hand-rolled `std::thread` worker
+//! pool (offline crate set — no rayon), and prunes the results to a
+//! Pareto frontier over (few-shot accuracy ↑, fps ↑, device utilization ↓).
+//!
+//! Every point runs the full design environment, split along the
+//! cap-independence seam: once per config ([`prepare_config`]) the
+//! synthesized backbone ([`crate::build::synth_backbone_graph`]) is
+//! PTQ'd, scored for few-shot accuracy through the compiled plan engine
+//! ([`crate::plan::PlanRunner`] + [`crate::fewshot::evaluate`]) on a
+//! deterministic synthetic bank, and lowered through the streamline/
+//! lower/§III-C/§III-D pipeline; once per point ([`build_hw_metrics`])
+//! the lowered graph is folded against the cap and FIFO-sized-simulated
+//! — no PJRT, no trained artifacts anywhere.  A content-hashed on-disk
+//! cache ([`cache::ResultCache`]) makes re-sweeps incremental (successes
+//! are stored from the workers, so interrupted sweeps resume), and
+//! [`report`] renders a deterministic `EXPERIMENTS.md` (Table
+//! II/III-shaped tables + the Pareto set).  CLI: `bwade dse`.
+
+pub mod cache;
+pub mod pareto;
+pub mod report;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::build::{implement_lowered, requantize_graph, synth_backbone_graph, DesignConfig};
+use crate::coordinator::FeatureExtractor;
+use crate::fewshot::{evaluate, sample_episode, AccuracyReport, Episode};
+use crate::fixedpoint::{table2_configs, QuantConfig};
+use crate::graph::Graph;
+use crate::plan::PlanRunner;
+use crate::resources::Device;
+use crate::rng::Rng;
+use crate::transforms::{convert_to_hw, run_default_pipeline};
+
+pub use cache::ResultCache;
+pub use report::{render_report, write_report};
+
+/// The sweep grid plus everything that makes a point reproducible: one
+/// synthesized backbone, one deterministic few-shot bank, one episode
+/// set — shared by every design point so rows are comparable.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// (row name, quantization config) — Table II rows by default.
+    pub configs: Vec<(String, QuantConfig)>,
+    /// Per-resource utilization ceilings for the folding search.
+    pub caps: Vec<f64>,
+    /// Folding target; `None` folds until the cap stops paying (the
+    /// resource/throughput trade axis of Table III).
+    pub target_fps: Option<f64>,
+    pub device: Device,
+    /// Backbone widths [c0, c1, c2, c3] of the synthesized ResNet-9.
+    pub widths: [usize; 4],
+    /// Square input image side.
+    pub img: usize,
+    /// Synthetic bank geometry (class-major, `per_class` images each).
+    pub num_classes: usize,
+    pub per_class: usize,
+    /// Episode shape: n-way k-shot with n_query queries per class.
+    pub n_way: usize,
+    pub k_shot: usize,
+    pub n_query: usize,
+    pub episodes: usize,
+    /// Seeds the bank, the episode sampler — and nothing else, so equal
+    /// specs give bitwise-equal sweeps regardless of worker count.
+    pub seed: u64,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        Self {
+            configs: table2_configs(),
+            caps: vec![0.5, 0.85],
+            target_fps: None,
+            device: Device::pynq_z1(),
+            widths: [4, 8, 8, 16],
+            img: 16,
+            num_classes: 6,
+            per_class: 20,
+            n_way: 5,
+            k_shot: 5,
+            n_query: 15,
+            episodes: 50,
+            seed: 0xD5E,
+        }
+    }
+}
+
+impl SweepSpec {
+    pub fn validate(&self) -> Result<()> {
+        if self.configs.is_empty() {
+            bail!("sweep has no quantization configs");
+        }
+        if self.caps.is_empty() {
+            bail!("sweep has no utilization caps");
+        }
+        for &c in &self.caps {
+            if !(c > 0.0 && c <= 1.0) {
+                bail!("utilization cap {c} outside (0, 1]");
+            }
+        }
+        if let Some(f) = self.target_fps {
+            if !(f > 0.0 && f.is_finite()) {
+                bail!("target fps {f} must be positive and finite");
+            }
+        }
+        if self.n_way > self.num_classes {
+            bail!("n_way {} > bank classes {}", self.n_way, self.num_classes);
+        }
+        if self.k_shot + self.n_query > self.per_class {
+            bail!(
+                "k_shot + n_query {} > per_class {}",
+                self.k_shot + self.n_query,
+                self.per_class
+            );
+        }
+        if self.episodes == 0 {
+            bail!("sweep needs at least one episode");
+        }
+        Ok(())
+    }
+
+    /// The grid in canonical order (config-major, caps inner) — the order
+    /// of every result vector and of the report rows.
+    pub fn points(&self) -> Vec<DesignPoint> {
+        let mut pts = Vec::with_capacity(self.configs.len() * self.caps.len());
+        for (name, quant) in &self.configs {
+            for &cap in &self.caps {
+                pts.push(DesignPoint {
+                    name: name.clone(),
+                    quant: *quant,
+                    max_utilization: cap,
+                });
+            }
+        }
+        pts
+    }
+
+    /// Deterministic class-structured image bank (flat NHWC, values in
+    /// [0, 1) — the camera-interface range the input quantizer expects).
+    /// Images of one class share a prototype pattern plus per-image noise,
+    /// so a deterministic backbone separates classes above chance and the
+    /// separation degrades with quantization — the Table II shape.
+    pub fn make_bank(&self) -> Vec<f32> {
+        let per = self.img * self.img * 3;
+        let mut rng = Rng::new(self.seed ^ 0xBA4B);
+        let mut bank = Vec::with_capacity(self.num_classes * self.per_class * per);
+        for _ in 0..self.num_classes {
+            let mut crng = rng.fork();
+            let proto: Vec<f32> = (0..per).map(|_| crng.next_f32()).collect();
+            for _ in 0..self.per_class {
+                for &p in &proto {
+                    bank.push(0.7 * p + 0.3 * crng.next_f32());
+                }
+            }
+        }
+        bank
+    }
+
+    /// The shared episode set (same episodes for every design point, so
+    /// accuracy differences are attributable to the config alone).
+    pub fn make_episodes(&self) -> Result<Vec<Episode>> {
+        let mut rng = Rng::new(self.seed ^ 0xE9);
+        (0..self.episodes)
+            .map(|_| {
+                sample_episode(
+                    &mut rng,
+                    self.num_classes,
+                    self.per_class,
+                    self.n_way,
+                    self.k_shot,
+                    self.n_query,
+                )
+            })
+            .collect()
+    }
+}
+
+/// One point of the grid: a quantization config under a utilization cap.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub name: String,
+    pub quant: QuantConfig,
+    pub max_utilization: f64,
+}
+
+/// Everything the sweep measures about one design point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PointMetrics {
+    pub acc_mean: f64,
+    pub acc_ci95: f64,
+    pub fps: f64,
+    pub latency_ms: f64,
+    pub steady_cycles: u64,
+    pub lut: f64,
+    pub ff: f64,
+    pub bram36: f64,
+    pub dsp: f64,
+    /// BRAM-resident weight bits (Table I's row).
+    pub weight_bits: u64,
+    /// Worst-component utilization fraction against the device budget.
+    pub utilization: f64,
+    pub hw_layers: usize,
+}
+
+/// A point plus its metrics and provenance.
+#[derive(Debug, Clone)]
+pub struct PointOutcome {
+    pub point: DesignPoint,
+    pub metrics: PointMetrics,
+    /// True when the metrics came from the on-disk cache.
+    pub cached: bool,
+}
+
+/// The whole sweep: outcomes in grid order plus the Pareto frontier.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub outcomes: Vec<PointOutcome>,
+    /// Points evaluated this run.
+    pub evaluated: usize,
+    /// Points answered from the cache.
+    pub cached: usize,
+    /// Ascending indices into `outcomes` of the non-dominated set over
+    /// (accuracy ↑, fps ↑, utilization ↓).
+    pub pareto: Vec<usize>,
+}
+
+/// Everything cap-independent about one quantization config, done once
+/// per config instead of once per grid point: few-shot accuracy
+/// (synthesized backbone, rust-side PTQ, compiled-plan extraction over
+/// the shared episodes) plus the lowered pre-folding HW graph (the
+/// streamline/lower/§III-C/§III-D pipeline).
+pub fn prepare_config(
+    spec: &SweepSpec,
+    quant: &QuantConfig,
+    bank: &[f32],
+    episodes: &[Episode],
+) -> Result<(AccuracyReport, Graph)> {
+    let mut graph =
+        synth_backbone_graph(spec.widths, spec.img, quant.act.bits, quant.act.frac_bits);
+    // PTQ first so accuracy is scored on the exact grids the build
+    // deploys (quantization is a projection — the pipeline preserves it).
+    requantize_graph(&mut graph, quant)?;
+    let n_images = spec.num_classes * spec.per_class;
+    let runner = PlanRunner::new(&graph, n_images.clamp(1, 8))?;
+    let feats = runner.extract_all(bank, n_images)?;
+    let acc = evaluate(&feats, runner.feature_dim(), episodes)?;
+
+    run_default_pipeline(&mut graph, None, 0.0)?;
+    if !convert_to_hw::is_fully_hw(&graph) {
+        bail!("pipeline left non-HW ops in the graph: {:?}", graph.op_census());
+    }
+    Ok((acc, graph))
+}
+
+/// Hardware metrics of one design point: the cap-dependent tail (folding
+/// search + FIFO-sized sim via [`implement_lowered`]) on a clone of the
+/// config's prepared graph, merged with its accuracy score.
+pub fn build_hw_metrics(
+    spec: &SweepSpec,
+    point: &DesignPoint,
+    acc: AccuracyReport,
+    lowered: &Graph,
+) -> Result<PointMetrics> {
+    let mut graph = lowered.clone();
+    let cfg = DesignConfig {
+        quant: point.quant,
+        target_fps: spec.target_fps,
+        max_utilization: point.max_utilization,
+        verify: false,
+    };
+    let report = implement_lowered(&mut graph, &cfg, &spec.device)?;
+    let r = report.total_resources;
+    Ok(PointMetrics {
+        acc_mean: acc.mean,
+        acc_ci95: acc.ci95,
+        fps: report.fps,
+        latency_ms: report.latency_ms,
+        steady_cycles: report.steady_cycles,
+        lut: r.lut,
+        ff: r.ff,
+        bram36: r.bram36,
+        dsp: r.dsp,
+        weight_bits: report.weight_bits,
+        utilization: r.max_utilization(&spec.device),
+        hw_layers: report.models.len(),
+    })
+}
+
+/// Map `f` over `jobs` on a hand-rolled scoped worker pool (offline crate
+/// set — no rayon): an atomic cursor hands out indices, results come back
+/// in job order regardless of scheduling.
+fn parallel_map<T, R, F>(jobs: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n_workers = workers.max(1).min(jobs.len().max(1));
+    let cursor = AtomicUsize::new(0);
+    let unordered: Vec<(usize, R)> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            let cursor = &cursor;
+            let f = &f;
+            handles.push(scope.spawn(move || {
+                let mut mine = Vec::new();
+                loop {
+                    let k = cursor.fetch_add(1, Ordering::Relaxed);
+                    if k >= jobs.len() {
+                        break;
+                    }
+                    mine.push((k, f(k, &jobs[k])));
+                }
+                mine
+            }));
+        }
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("dse worker panicked"))
+            .collect()
+    });
+    let mut slots: Vec<Option<R>> = (0..jobs.len()).map(|_| None).collect();
+    for (k, r) in unordered {
+        slots[k] = Some(r);
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("every job resolved"))
+        .collect()
+}
+
+/// Run the sweep on `workers` OS threads.  Points already in `cache` are
+/// not re-evaluated; fresh results are written back *per point*, so a
+/// failing or interrupted sweep keeps everything that finished.  The
+/// outcome order (and therefore the report) depends only on the spec,
+/// never on worker scheduling.
+pub fn run_sweep(
+    spec: &SweepSpec,
+    workers: usize,
+    cache: Option<&ResultCache>,
+) -> Result<SweepResult> {
+    spec.validate()?;
+    let points = spec.points();
+    let bank = spec.make_bank();
+    let episodes = spec.make_episodes()?;
+
+    // Cache probe — serial, it's a handful of small file reads.
+    let mut outcomes: Vec<Option<PointOutcome>> = vec![None; points.len()];
+    let mut todo: Vec<usize> = Vec::new();
+    for (i, p) in points.iter().enumerate() {
+        match cache.and_then(|c| c.lookup(spec, p)) {
+            Some(metrics) => {
+                outcomes[i] = Some(PointOutcome {
+                    point: p.clone(),
+                    metrics,
+                    cached: true,
+                })
+            }
+            None => todo.push(i),
+        }
+    }
+    let cached = points.len() - todo.len();
+    let evaluated = todo.len();
+
+    // Phase 1: once per distinct quant config among the uncached points —
+    // accuracy scoring and graph lowering are cap-independent, so running
+    // them per point would multiply the sweep's dominant cost by the caps
+    // axis.  A failing config is recorded, not fatal: the healthy configs
+    // still proceed to phase 2 (and the cache), then the error surfaces.
+    let mut cfg_keys: Vec<String> = Vec::new();
+    let mut cfg_quants: Vec<QuantConfig> = Vec::new();
+    for &i in &todo {
+        let key = points[i].quant.describe();
+        if !cfg_keys.contains(&key) {
+            cfg_keys.push(key);
+            cfg_quants.push(points[i].quant);
+        }
+    }
+    let prep_results = parallel_map(&cfg_quants, workers, |_, q| {
+        prepare_config(spec, q, &bank, &episodes)
+    });
+    let mut first_err: Option<anyhow::Error> = None;
+    let mut prepared: HashMap<String, (AccuracyReport, Graph)> = HashMap::new();
+    for (key, res) in cfg_keys.iter().zip(prep_results) {
+        match res {
+            Ok(p) => {
+                prepared.insert(key.clone(), p);
+            }
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(anyhow!("config {key}: {e}"));
+                }
+            }
+        }
+    }
+
+    // Phase 2: the cap-dependent hardware build per grid point (for every
+    // point whose config prepared).  Each success is written to the cache
+    // from the worker itself, so an interrupted or partially failing
+    // sweep keeps everything that finished.
+    let ready: Vec<usize> = todo
+        .iter()
+        .copied()
+        .filter(|&i| prepared.contains_key(&points[i].quant.describe()))
+        .collect();
+    let hw_results = parallel_map(&ready, workers, |_, &i| -> Result<PointMetrics> {
+        let (acc, lowered) = &prepared[&points[i].quant.describe()];
+        let metrics = build_hw_metrics(spec, &points[i], *acc, lowered)?;
+        if let Some(c) = cache {
+            // A cache-write failure (disk full, dir removed mid-run) must
+            // not discard a successfully computed point.
+            if let Err(e) = c.store(spec, &points[i], &metrics) {
+                eprintln!(
+                    "warning: cache write failed for {} @ cap {:.2}: {e:#}",
+                    points[i].name, points[i].max_utilization
+                );
+            }
+        }
+        Ok(metrics)
+    });
+    for (&i, res) in ready.iter().zip(hw_results) {
+        match res {
+            Ok(metrics) => {
+                outcomes[i] = Some(PointOutcome {
+                    point: points[i].clone(),
+                    metrics,
+                    cached: false,
+                });
+            }
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(anyhow!(
+                        "design point {} @ cap {:.2}: {e}",
+                        points[i].name,
+                        points[i].max_utilization
+                    ));
+                }
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+
+    let outcomes: Vec<PointOutcome> = outcomes
+        .into_iter()
+        .map(|o| o.expect("every grid point resolved"))
+        .collect();
+    let pareto = pareto::pareto_frontier(&outcomes);
+    Ok(SweepResult {
+        outcomes,
+        evaluated,
+        cached,
+        pareto,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_order_is_config_major() {
+        let spec = SweepSpec {
+            caps: vec![0.4, 0.8],
+            ..SweepSpec::default()
+        };
+        let pts = spec.points();
+        assert_eq!(pts.len(), spec.configs.len() * 2);
+        assert_eq!(pts[0].name, spec.configs[0].0);
+        assert_eq!(pts[0].max_utilization, 0.4);
+        assert_eq!(pts[1].name, spec.configs[0].0);
+        assert_eq!(pts[1].max_utilization, 0.8);
+        assert_eq!(pts[2].name, spec.configs[1].0);
+    }
+
+    #[test]
+    fn bank_and_episodes_are_deterministic() {
+        let spec = SweepSpec::default();
+        assert_eq!(spec.make_bank(), spec.make_bank());
+        let a = spec.make_episodes().unwrap();
+        let b = spec.make_episodes().unwrap();
+        assert_eq!(a.len(), spec.episodes);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.support, y.support);
+            assert_eq!(x.query, y.query);
+        }
+        // Bank values stay in the input quantizer's [0, 1) range.
+        assert!(spec.make_bank().iter().all(|&v| (0.0..1.0).contains(&v)));
+    }
+
+    #[test]
+    fn validation_rejects_bad_grids() {
+        let ok = SweepSpec::default();
+        ok.validate().unwrap();
+        let mut s = ok.clone();
+        s.caps.clear();
+        assert!(s.validate().is_err());
+        let mut s = ok.clone();
+        s.caps = vec![1.5];
+        assert!(s.validate().is_err());
+        let mut s = ok.clone();
+        s.n_way = s.num_classes + 1;
+        assert!(s.validate().is_err());
+        let mut s = ok.clone();
+        s.per_class = s.k_shot + s.n_query - 1;
+        assert!(s.validate().is_err());
+        let mut s = ok.clone();
+        s.target_fps = Some(0.0);
+        assert!(s.validate().is_err());
+        let mut s = ok;
+        s.episodes = 0;
+        assert!(s.validate().is_err());
+    }
+}

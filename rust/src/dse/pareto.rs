@@ -1,0 +1,97 @@
+//! Dominated-point pruning over (accuracy ↑, fps ↑, utilization ↓).
+//!
+//! The frontier is what the design environment is *for*: of the whole
+//! quantization × parallelism grid, only the non-dominated points are
+//! deployment candidates.  Returned indices are ascending (grid order),
+//! so the frontier listing is deterministic for a given spec.
+
+use super::PointOutcome;
+
+/// Objective vector of one outcome, flipped to all-maximized orientation
+/// (utilization is negated).
+fn objectives(o: &PointOutcome) -> [f64; 3] {
+    [o.metrics.acc_mean, o.metrics.fps, -o.metrics.utilization]
+}
+
+/// `a` dominates `b`: no worse on every objective, strictly better on at
+/// least one.  Exact ties dominate in neither direction, so duplicated
+/// points both survive (and keep the frontier deterministic).
+fn dominates(a: &[f64; 3], b: &[f64; 3]) -> bool {
+    let mut strictly_better = false;
+    for (x, y) in a.iter().zip(b) {
+        if x < y {
+            return false;
+        }
+        if x > y {
+            strictly_better = true;
+        }
+    }
+    strictly_better
+}
+
+/// Non-dominated indices over all-maximized objective vectors, ascending.
+pub fn pareto_indices(objs: &[[f64; 3]]) -> Vec<usize> {
+    (0..objs.len())
+        .filter(|&i| {
+            !objs
+                .iter()
+                .enumerate()
+                .any(|(j, o)| j != i && dominates(o, &objs[i]))
+        })
+        .collect()
+}
+
+/// The sweep's frontier: indices into `outcomes`, ascending.
+pub fn pareto_frontier(outcomes: &[PointOutcome]) -> Vec<usize> {
+    let objs: Vec<[f64; 3]> = outcomes.iter().map(objectives).collect();
+    pareto_indices(&objs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominated_points_are_pruned() {
+        // p1 dominates p0 (better everywhere); p2 trades off (kept).
+        let objs = [
+            [0.5, 100.0, -0.8],
+            [0.6, 200.0, -0.7],
+            [0.7, 50.0, -0.9],
+        ];
+        assert_eq!(pareto_indices(&objs), vec![1, 2]);
+    }
+
+    #[test]
+    fn single_point_is_always_on_the_frontier() {
+        assert_eq!(pareto_indices(&[[0.1, 1.0, -1.0]]), vec![0]);
+        assert!(pareto_indices(&[]).is_empty());
+    }
+
+    #[test]
+    fn ties_keep_both_and_order_is_ascending() {
+        let objs = [
+            [0.5, 100.0, -0.5],
+            [0.5, 100.0, -0.5],
+            [0.4, 100.0, -0.5], // dominated by both duplicates
+        ];
+        assert_eq!(pareto_indices(&objs), vec![0, 1]);
+    }
+
+    #[test]
+    fn partial_improvement_does_not_dominate() {
+        // Better accuracy but worse utilization: both survive.
+        let objs = [[0.5, 100.0, -0.5], [0.6, 100.0, -0.9]];
+        assert_eq!(pareto_indices(&objs), vec![0, 1]);
+    }
+
+    #[test]
+    fn chain_of_dominance_leaves_one() {
+        let objs = [
+            [0.1, 1.0, -0.9],
+            [0.2, 2.0, -0.8],
+            [0.3, 3.0, -0.7],
+        ];
+        assert_eq!(pareto_indices(&objs), vec![2]);
+    }
+}

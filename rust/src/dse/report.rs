@@ -1,0 +1,204 @@
+//! Deterministic `EXPERIMENTS.md` writer: Table II- and Table III-shaped
+//! markdown plus the Pareto set.
+//!
+//! The rendering depends only on the spec and the metrics — never on
+//! cache state, worker count or wall-clock — so a cached re-sweep
+//! reproduces the file byte for byte (the CI cache-reuse job `cmp`s it).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{SweepResult, SweepSpec};
+
+pub fn render_report(spec: &SweepSpec, result: &SweepResult) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "# EXPERIMENTS — design-space exploration");
+    let _ = writeln!(s);
+    let _ = writeln!(
+        s,
+        "Synthesized ResNet-9 backbone, widths {:?}, {}x{} input, on {}.",
+        spec.widths, spec.img, spec.img, spec.device.name
+    );
+    let _ = writeln!(
+        s,
+        "Few-shot protocol: {}-way {}-shot, {} queries/class, {} episodes over a {}x{} synthetic bank (seed {:#x}).",
+        spec.n_way, spec.k_shot, spec.n_query, spec.episodes, spec.num_classes, spec.per_class, spec.seed
+    );
+    let _ = writeln!(
+        s,
+        "Grid: {} quantization configs x {} utilization caps = {} design points; folding target: {}.",
+        spec.configs.len(),
+        spec.caps.len(),
+        result.outcomes.len(),
+        match spec.target_fps {
+            Some(f) => format!("{f:.1} fps"),
+            None => "fold until the cap stops paying".to_string(),
+        }
+    );
+    let _ = writeln!(s);
+
+    // ---- Table II shape: accuracy vs bit-width (cap-independent — the
+    // first outcome per config speaks for the row).
+    let _ = writeln!(s, "## Table II — few-shot accuracy vs bit-width");
+    let _ = writeln!(s);
+    let _ = writeln!(s, "| config | max bits | weights | acts | acc [%] | ci95 [%] |");
+    let _ = writeln!(s, "|---|---|---|---|---|---|");
+    let mut seen: Vec<&str> = Vec::new();
+    for o in &result.outcomes {
+        if seen.contains(&o.point.name.as_str()) {
+            continue;
+        }
+        seen.push(&o.point.name);
+        let _ = writeln!(
+            s,
+            "| {} | {} | {} | {} | {:.2} | {:.2} |",
+            o.point.name,
+            o.point.quant.max_bits(),
+            o.point.quant.weight.describe(),
+            o.point.quant.act.describe(),
+            o.metrics.acc_mean * 100.0,
+            o.metrics.acc_ci95 * 100.0,
+        );
+    }
+    let _ = writeln!(s);
+
+    // ---- Table III shape: resources vs throughput, one row per point.
+    let _ = writeln!(s, "## Table III — resources vs throughput");
+    let _ = writeln!(s);
+    let _ = writeln!(
+        s,
+        "| config | cap | LUT | FF | BRAM36 | DSP | util [%] | weights [KiB] | latency [ms] | fps | II [cyc] | Pareto |"
+    );
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|---|---|---|---|");
+    for (i, o) in result.outcomes.iter().enumerate() {
+        let m = &o.metrics;
+        let _ = writeln!(
+            s,
+            "| {} | {:.2} | {:.0} | {:.0} | {:.1} | {:.0} | {:.1} | {:.1} | {:.3} | {:.1} | {} | {} |",
+            o.point.name,
+            o.point.max_utilization,
+            m.lut,
+            m.ff,
+            m.bram36,
+            m.dsp,
+            m.utilization * 100.0,
+            m.weight_bits as f64 / 8192.0,
+            m.latency_ms,
+            m.fps,
+            m.steady_cycles,
+            if result.pareto.contains(&i) { "*" } else { "" },
+        );
+    }
+    let _ = writeln!(s);
+
+    // ---- The frontier itself.
+    let _ = writeln!(
+        s,
+        "## Pareto frontier (accuracy up, fps up, utilization down)"
+    );
+    let _ = writeln!(s);
+    let _ = writeln!(s, "| config | cap | acc [%] | fps | util [%] |");
+    let _ = writeln!(s, "|---|---|---|---|---|");
+    for &i in &result.pareto {
+        let o = &result.outcomes[i];
+        let _ = writeln!(
+            s,
+            "| {} | {:.2} | {:.2} | {:.1} | {:.1} |",
+            o.point.name,
+            o.point.max_utilization,
+            o.metrics.acc_mean * 100.0,
+            o.metrics.fps,
+            o.metrics.utilization * 100.0,
+        );
+    }
+    let _ = writeln!(s);
+    let _ = writeln!(
+        s,
+        "{} of {} design points are non-dominated.",
+        result.pareto.len(),
+        result.outcomes.len()
+    );
+    s
+}
+
+/// Render and write the report.
+pub fn write_report(path: &Path, spec: &SweepSpec, result: &SweepResult) -> Result<()> {
+    std::fs::write(path, render_report(spec, result))
+        .with_context(|| format!("writing report {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{PointMetrics, PointOutcome};
+
+    fn fake_result(spec: &SweepSpec) -> SweepResult {
+        let outcomes: Vec<PointOutcome> = spec
+            .points()
+            .into_iter()
+            .enumerate()
+            .map(|(i, point)| PointOutcome {
+                point,
+                metrics: PointMetrics {
+                    acc_mean: 0.4 + 0.01 * i as f64,
+                    acc_ci95: 0.02,
+                    fps: 100.0 + i as f64,
+                    latency_ms: 10.0,
+                    steady_cycles: 1000 + i as u64,
+                    lut: 1000.0,
+                    ff: 2000.0,
+                    bram36: 10.0,
+                    dsp: 4.0,
+                    weight_bits: 8192,
+                    utilization: 0.5,
+                    hw_layers: 40,
+                },
+                cached: i % 2 == 0,
+            })
+            .collect();
+        let pareto = crate::dse::pareto::pareto_frontier(&outcomes);
+        SweepResult {
+            evaluated: outcomes.len(),
+            cached: 0,
+            outcomes,
+            pareto,
+        }
+    }
+
+    #[test]
+    fn report_has_all_sections_and_rows() {
+        let spec = SweepSpec::default();
+        let result = fake_result(&spec);
+        let md = render_report(&spec, &result);
+        assert!(md.contains("# EXPERIMENTS"));
+        assert!(md.contains("## Table II"));
+        assert!(md.contains("## Table III"));
+        assert!(md.contains("## Pareto frontier"));
+        for (name, _) in &spec.configs {
+            assert!(md.contains(name.as_str()), "missing config row {name}");
+        }
+        // One Table-III row per design point.
+        assert_eq!(
+            md.matches("| 0.50 |").count() + md.matches("| 0.85 |").count(),
+            result.outcomes.len() + result.pareto.len()
+        );
+    }
+
+    #[test]
+    fn report_ignores_cache_provenance() {
+        let spec = SweepSpec::default();
+        let mut a = fake_result(&spec);
+        let mut b = a.clone();
+        for o in &mut a.outcomes {
+            o.cached = false;
+        }
+        for o in &mut b.outcomes {
+            o.cached = true;
+        }
+        b.evaluated = 0;
+        b.cached = b.outcomes.len();
+        assert_eq!(render_report(&spec, &a), render_report(&spec, &b));
+    }
+}

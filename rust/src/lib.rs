@@ -23,13 +23,18 @@
 //!   - **serving** — the coordinator ([`coordinator`]) drives any
 //!     `FeatureExtractor`: the PJRT runtime ([`runtime`], `pjrt` feature)
 //!     or the plan engine's `PlanRunner`, plus the CPU-side few-shot
-//!     classifier ([`fewshot`]).
+//!     classifier ([`fewshot`]);
+//!   - **exploration** — the design-space exploration engine ([`dse`]):
+//!     a parallel sweep over quantization × utilization-cap grids with
+//!     Pareto extraction, a content-hashed result cache and a
+//!     deterministic `EXPERIMENTS.md` report (`bwade dse`).
 pub mod artifacts;
 pub mod benchutil;
 pub mod build;
 pub mod cli;
 pub mod coordinator;
 pub mod dataflow;
+pub mod dse;
 pub mod fewshot;
 pub mod fixedpoint;
 pub mod graph;

@@ -1,13 +1,15 @@
 //! bwade CLI — leader entrypoint for the design environment and the
 //! serving runtime.  `bwade help` for usage.
 
+use std::path::Path;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use bwade::artifacts::{ArtifactPaths, FewshotBank, ModelBundle};
 use bwade::build::{build, requantize_graph, DesignConfig};
-use bwade::cli::{parse_config, Args, USAGE};
+use bwade::cli::{parse_config, parse_config_list, parse_f64_list, Args, USAGE};
+use bwade::dse::{run_sweep, write_report, ResultCache, SweepSpec};
 use bwade::coordinator::{serve, BatchPolicy, FeatureExtractor, FrameSource};
 use bwade::fewshot::{evaluate, sample_episode, NcmClassifier};
 use bwade::fixedpoint::{baseline16_config, table2_configs, QuantConfig};
@@ -30,6 +32,7 @@ fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.command.as_str() {
         "build" => cmd_build(&args),
+        "dse" => cmd_dse(&args),
         "compare" => cmd_compare(&args),
         "table2" => cmd_table2(&args),
         "serve" => cmd_serve(&args),
@@ -153,6 +156,77 @@ fn cmd_build(args: &Args) -> Result<()> {
         );
     }
     println!("\n== result ==\n{}", report.summary());
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> Result<()> {
+    let mut spec = SweepSpec::default();
+    spec.episodes = args.get_usize("episodes", spec.episodes)?;
+    spec.seed = args.get_usize("seed", spec.seed as usize)? as u64;
+    spec.img = args.get_usize("img", spec.img)?;
+    if let Some(caps) = args.get("caps") {
+        spec.caps = parse_f64_list(caps)?;
+    }
+    if let Some(configs) = args.get("configs") {
+        spec.configs = parse_config_list(configs)?;
+    }
+    if args.get("target-fps").is_some() {
+        spec.target_fps = Some(args.get_f64("target-fps", 0.0)?);
+    }
+    let workers = args.get_usize("workers", 4)?;
+    let cache = match args.get("cache") {
+        Some(dir) => Some(ResultCache::open(dir)?),
+        None if args.has_flag("cache") => Some(ResultCache::open(".dse-cache")?),
+        None => None,
+    };
+    let out = args.get_or("out", "EXPERIMENTS.md").to_string();
+
+    println!(
+        "dse: {} configs x {} caps = {} design points on {}  ({} workers, {} episodes/point, cache: {})",
+        spec.configs.len(),
+        spec.caps.len(),
+        spec.configs.len() * spec.caps.len(),
+        spec.device.name,
+        workers,
+        spec.episodes,
+        cache
+            .as_ref()
+            .map(|c| c.dir().display().to_string())
+            .unwrap_or_else(|| "off".to_string()),
+    );
+    let result = run_sweep(&spec, workers, cache.as_ref())?;
+
+    println!(
+        "\n{:<16} {:>5} {:>9} {:>8} {:>10} {:>9} {:>7}",
+        "config", "cap", "acc[%]", "util[%]", "fps", "lat[ms]", ""
+    );
+    for (i, o) in result.outcomes.iter().enumerate() {
+        println!(
+            "{:<16} {:>5.2} {:>8.2}% {:>7.1}% {:>10.1} {:>9.3} {:>7}",
+            o.point.name,
+            o.point.max_utilization,
+            o.metrics.acc_mean * 100.0,
+            o.metrics.utilization * 100.0,
+            o.metrics.fps,
+            o.metrics.latency_ms,
+            match (o.cached, result.pareto.contains(&i)) {
+                (true, true) => "cached*",
+                (true, false) => "cached",
+                (false, true) => "*",
+                (false, false) => "",
+            },
+        );
+    }
+    write_report(Path::new(&out), &spec, &result)?;
+    println!(
+        "\nPareto frontier (* above): {} of {} points",
+        result.pareto.len(),
+        result.outcomes.len()
+    );
+    println!(
+        "evaluated {} points, {} cache hits; report -> {}",
+        result.evaluated, result.cached, out
+    );
     Ok(())
 }
 

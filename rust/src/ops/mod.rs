@@ -1,11 +1,14 @@
 //! Reference executors for every graph op — the rust analogue of FINN's
 //! `execute_onnx`, refactored around the compiled-plan engine.
 //!
-//! Three layers of API, fastest first:
+//! Four layers of API, fastest first:
 //!
-//! * [`execute_node_into`] / [`execute_node_inplace`] — kernels that write
-//!   into plan-provided buffers (the [`crate::plan`] engine's path: no
-//!   per-node allocation, elementwise ops mutate their input in place);
+//! * [`execute_spec_into`] / [`execute_spec_inplace`] — kernels driven by a
+//!   pre-resolved [`OpSpec`] (the [`crate::plan`] engine's path: attributes
+//!   are parsed ONCE at plan compile, the run loop never scans an attr
+//!   string or clones an attr `Vec` again);
+//! * [`execute_node_into`] / [`execute_node_inplace`] — same kernels, with
+//!   the spec resolved from the node's `Attrs` on the spot;
 //! * [`execute_node`] — compatibility form: infers the output shape
 //!   ([`infer_output_shape`]), allocates, and delegates to the into-form;
 //! * [`execute`] — whole-graph execution; now a thin wrapper that compiles
@@ -212,40 +215,147 @@ pub fn infer_output_shape(node: &Node, inputs: &[&[usize]]) -> Result<Vec<usize>
     }
 }
 
+// ---------------------------------------------------------------- OpSpec
+
+/// Channel-axis convention of a threshold step, resolved from the
+/// `data_layout` string attribute once instead of per call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChanLayout {
+    Nchw,
+    Nhwc,
+    Nc,
+}
+
+impl ChanLayout {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "NCHW" => Ok(ChanLayout::Nchw),
+            "NHWC" => Ok(ChanLayout::Nhwc),
+            "NC" => Ok(ChanLayout::Nc),
+            other => bail!("unknown data_layout {other}"),
+        }
+    }
+
+    fn chan_axis(self, ndim: usize) -> usize {
+        match self {
+            ChanLayout::Nchw | ChanLayout::Nc => 1,
+            ChanLayout::Nhwc => ndim - 1,
+        }
+    }
+}
+
+/// Kernel parameters of one node, resolved from its `Attrs` up front —
+/// the typed alternative to re-running the attr string scan (plus a `Vec`
+/// clone per `Attrs::ints`) on every execution.  The plan compiler
+/// resolves one `OpSpec` per step; the run loop dispatches on the enum
+/// with zero attribute work per frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpSpec {
+    Conv { kernel: [usize; 2], stride: [usize; 2], pad: [usize; 2] },
+    Threshold { layout: ChanLayout, out_scale: f32, out_bias: f32 },
+    Mul,
+    Add,
+    MaxPool { kernel: [usize; 2] },
+    MaxPoolNhwc,
+    ReduceMean { axes: Vec<usize> },
+    Transpose { perm: Vec<usize> },
+    Reshape { shape: Vec<usize> },
+    Im2Col { kernel: [usize; 2], stride: [usize; 2], pad: [usize; 2] },
+    MatMul,
+    GlobalAccPool,
+    Mvau { apply_act: bool, out_scale: f32, out_bias: f32 },
+}
+
+fn attr_pair(v: Vec<i64>, what: &str) -> Result<[usize; 2]> {
+    if v.len() != 2 {
+        bail!("attr {what} must have 2 entries, got {v:?}");
+    }
+    Ok([v[0] as usize, v[1] as usize])
+}
+
+impl OpSpec {
+    /// Resolve a node's attributes into a typed spec.  Missing or
+    /// malformed attributes fail here — at plan compile time — instead of
+    /// surfacing mid-run.
+    pub fn resolve(node: &Node) -> Result<OpSpec> {
+        let a = &node.attrs;
+        Ok(match node.op.as_str() {
+            "Conv" => OpSpec::Conv {
+                kernel: attr_pair(a.ints("kernel")?, "kernel")?,
+                stride: attr_pair(a.ints("stride")?, "stride")?,
+                pad: attr_pair(a.ints("pad")?, "pad")?,
+            },
+            "MultiThreshold" | "Thresholding" => OpSpec::Threshold {
+                layout: ChanLayout::parse(a.str_or("data_layout", "NCHW"))?,
+                out_scale: a.float_or("out_scale", 1.0) as f32,
+                out_bias: a.float_or("out_bias", 0.0) as f32,
+            },
+            "Mul" | "ChannelwiseMul" => OpSpec::Mul,
+            "Add" | "AddStreams" => OpSpec::Add,
+            "MaxPool" => OpSpec::MaxPool {
+                kernel: attr_pair(a.ints("kernel")?, "kernel")?,
+            },
+            "MaxPoolNHWC" | "StreamingMaxPool" => OpSpec::MaxPoolNhwc,
+            "ReduceMean" => OpSpec::ReduceMean {
+                axes: a.ints("axes")?.iter().map(|&x| x as usize).collect(),
+            },
+            "Transpose" => OpSpec::Transpose {
+                perm: a.ints("perm")?.iter().map(|&p| p as usize).collect(),
+            },
+            "Reshape" => OpSpec::Reshape {
+                shape: a.ints("shape")?.iter().map(|&d| d as usize).collect(),
+            },
+            "Im2Col" | "ConvolutionInputGenerator" => OpSpec::Im2Col {
+                kernel: attr_pair(a.ints("kernel")?, "kernel")?,
+                stride: attr_pair(a.ints("stride")?, "stride")?,
+                pad: attr_pair(a.ints("pad")?, "pad")?,
+            },
+            "MatMul" => OpSpec::MatMul,
+            "GlobalAccPool" | "GlobalAccPool_hw" => OpSpec::GlobalAccPool,
+            "MVAU" => OpSpec::Mvau {
+                apply_act: a.int_or("apply_act", 1) != 0,
+                out_scale: a.float_or("out_scale", 1.0) as f32,
+                out_bias: a.float_or("out_bias", 0.0) as f32,
+            },
+            other => bail!("no executor for op {other}"),
+        })
+    }
+}
+
+/// Execute a pre-resolved spec into a caller-provided buffer — the plan
+/// engine's per-step entry point; touches no `Attrs`.
+pub fn execute_spec_into(spec: &OpSpec, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
+    match spec {
+        OpSpec::Conv { kernel, stride, pad } => conv_into(*kernel, *stride, *pad, inputs, out),
+        OpSpec::Threshold { layout, out_scale, out_bias } => {
+            copy_into(inputs[0], out)?;
+            threshold_in_place(out, inputs[1], *layout, *out_scale, *out_bias)
+        }
+        OpSpec::Mul => inputs[0].broadcast_into(inputs[1], |a, b| a * b, out),
+        OpSpec::Add => inputs[0].broadcast_into(inputs[1], |a, b| a + b, out),
+        OpSpec::MaxPool { kernel } => maxpool_into(*kernel, inputs, out),
+        OpSpec::MaxPoolNhwc => maxpool_nhwc_into(inputs, out),
+        OpSpec::ReduceMean { axes } => reduce_mean_into(axes, inputs, out),
+        OpSpec::Transpose { perm } => inputs[0].transpose_into(perm, out),
+        OpSpec::Reshape { .. } => copy_into(inputs[0], out),
+        OpSpec::Im2Col { kernel, stride, pad } => im2col_into(*kernel, *stride, *pad, inputs, out),
+        OpSpec::MatMul => matmul_into(inputs[0], inputs[1], out),
+        OpSpec::GlobalAccPool => global_acc_pool_into(inputs, out),
+        OpSpec::Mvau { apply_act, out_scale, out_bias } => {
+            mvau_into(*apply_act, *out_scale, *out_bias, inputs, out)
+        }
+    }
+}
+
 /// Execute a single-output node into a caller-provided buffer.
 ///
 /// `out` must already have the node's output shape ([`infer_output_shape`]);
 /// its *contents* may be arbitrary — every kernel either fully overwrites
-/// or zero-fills before accumulating.
+/// or zero-fills before accumulating.  Compatibility form: resolves the
+/// node's [`OpSpec`] on the spot; repeated executors should resolve once
+/// and call [`execute_spec_into`].
 pub fn execute_node_into(node: &Node, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
-    match node.op.as_str() {
-        "Conv" => conv_into(node, inputs, out),
-        "MultiThreshold" | "Thresholding" => {
-            copy_into(inputs[0], out)?;
-            threshold_in_place(
-                out,
-                inputs[1],
-                node.attrs.str_or("data_layout", "NCHW"),
-                node.attrs.float_or("out_scale", 1.0) as f32,
-                node.attrs.float_or("out_bias", 0.0) as f32,
-            )
-        }
-        "Mul" | "ChannelwiseMul" => inputs[0].broadcast_into(inputs[1], |a, b| a * b, out),
-        "Add" | "AddStreams" => inputs[0].broadcast_into(inputs[1], |a, b| a + b, out),
-        "MaxPool" => maxpool_into(node, inputs, out),
-        "MaxPoolNHWC" | "StreamingMaxPool" => maxpool_nhwc_into(inputs, out),
-        "ReduceMean" => reduce_mean_into(node, inputs, out),
-        "Transpose" => {
-            let perm: Vec<usize> = node.attrs.ints("perm")?.iter().map(|&i| i as usize).collect();
-            inputs[0].transpose_into(&perm, out)
-        }
-        "Reshape" => copy_into(inputs[0], out),
-        "Im2Col" | "ConvolutionInputGenerator" => im2col_into(node, inputs, out),
-        "MatMul" => matmul_into(inputs[0], inputs[1], out),
-        "GlobalAccPool" | "GlobalAccPool_hw" => global_acc_pool_into(inputs, out),
-        "MVAU" => mvau_into(node, inputs, out),
-        other => bail!("no executor for op {other}"),
-    }
+    execute_spec_into(&OpSpec::resolve(node)?, inputs, out)
 }
 
 /// Ops the plan engine may execute in place, mutating the first input's
@@ -259,27 +369,25 @@ pub fn supports_inplace(op: &str) -> bool {
     )
 }
 
-/// In-place form: `buf` arrives as the first input and leaves as the
-/// output; `rest` are the remaining inputs (thresholds, the other
-/// elementwise operand, ...).
-pub fn execute_node_inplace(node: &Node, buf: &mut Tensor, rest: &[&Tensor]) -> Result<()> {
-    match node.op.as_str() {
-        "Mul" | "ChannelwiseMul" => buf.broadcast_assign(rest[0], |a, b| a * b),
-        "Add" | "AddStreams" => buf.broadcast_assign(rest[0], |a, b| a + b),
-        "MultiThreshold" | "Thresholding" => threshold_in_place(
-            buf,
-            rest[0],
-            node.attrs.str_or("data_layout", "NCHW"),
-            node.attrs.float_or("out_scale", 1.0) as f32,
-            node.attrs.float_or("out_bias", 0.0) as f32,
-        ),
-        "Reshape" => {
-            let shape: Vec<usize> =
-                node.attrs.ints("shape")?.iter().map(|&d| d as usize).collect();
-            buf.reshape_in_place(shape)
+/// In-place form over a pre-resolved spec: `buf` arrives as the first
+/// input and leaves as the output; `rest` are the remaining inputs
+/// (thresholds, the other elementwise operand, ...).
+pub fn execute_spec_inplace(spec: &OpSpec, buf: &mut Tensor, rest: &[&Tensor]) -> Result<()> {
+    match spec {
+        OpSpec::Mul => buf.broadcast_assign(rest[0], |a, b| a * b),
+        OpSpec::Add => buf.broadcast_assign(rest[0], |a, b| a + b),
+        OpSpec::Threshold { layout, out_scale, out_bias } => {
+            threshold_in_place(buf, rest[0], *layout, *out_scale, *out_bias)
         }
-        other => bail!("op {other} has no in-place executor"),
+        OpSpec::Reshape { shape } => buf.reshape_in_place(shape.clone()),
+        other => bail!("op spec {other:?} has no in-place executor"),
     }
+}
+
+/// In-place form resolved from the node (compatibility; see
+/// [`execute_spec_inplace`]).
+pub fn execute_node_inplace(node: &Node, buf: &mut Tensor, rest: &[&Tensor]) -> Result<()> {
+    execute_spec_inplace(&OpSpec::resolve(node)?, buf, rest)
 }
 
 fn copy_into(src: &Tensor, out: &mut Tensor) -> Result<()> {
@@ -297,15 +405,18 @@ fn copy_into(src: &Tensor, out: &mut Tensor) -> Result<()> {
 // ---------------------------------------------------------------- Conv
 
 /// NCHW x OIHW convolution with symmetric padding, stride and bias.
-fn conv_into(node: &Node, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
+fn conv_into(
+    kernel: [usize; 2],
+    stride: [usize; 2],
+    pad: [usize; 2],
+    inputs: &[&Tensor],
+    out: &mut Tensor,
+) -> Result<()> {
     let (x, w) = (inputs[0], inputs[1]);
     let bias = inputs.get(2).copied();
-    let kernel = node.attrs.ints("kernel")?;
-    let stride = node.attrs.ints("stride")?;
-    let pad = node.attrs.ints("pad")?;
-    let (kh, kw) = (kernel[0] as usize, kernel[1] as usize);
-    let (sh, sw) = (stride[0] as usize, stride[1] as usize);
-    let (ph, pw) = (pad[0] as usize, pad[1] as usize);
+    let [kh, kw] = kernel;
+    let [sh, sw] = stride;
+    let [ph, pw] = pad;
     let [n, cin, h, wdim]: [usize; 4] = x.shape().try_into().map_err(|_| anyhow!("conv input must be 4-D"))?;
     let [cout, wcin, wkh, wkw]: [usize; 4] = w.shape().try_into().map_err(|_| anyhow!("conv weight must be 4-D"))?;
     if wcin != cin || wkh != kh || wkw != kw {
@@ -365,17 +476,12 @@ fn conv_into(node: &Node, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
 fn threshold_in_place(
     buf: &mut Tensor,
     t: &Tensor,
-    layout: &str,
+    layout: ChanLayout,
     out_scale: f32,
     out_bias: f32,
 ) -> Result<()> {
     let [c_t, k] = [t.shape()[0], t.shape()[1]];
-    let chan_axis = match layout {
-        "NCHW" => 1,
-        "NHWC" => buf.ndim() - 1,
-        "NC" => 1,
-        other => bail!("unknown data_layout {other}"),
-    };
+    let chan_axis = layout.chan_axis(buf.ndim());
     let c = buf.shape()[chan_axis];
     if c_t != c && c_t != 1 {
         bail!("threshold rows {c_t} != channels {c}");
@@ -400,10 +506,9 @@ fn threshold_in_place(
 // -------------------------------------------------------------- MaxPool
 
 /// NCHW max-pool (kernel = stride, the only form the backbone uses).
-fn maxpool_into(node: &Node, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
+fn maxpool_into(kernel: [usize; 2], inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
     let x = inputs[0];
-    let kernel = node.attrs.ints("kernel")?;
-    let (kh, kw) = (kernel[0] as usize, kernel[1] as usize);
+    let [kh, kw] = kernel;
     let [n, c, h, w]: [usize; 4] = x.shape().try_into().map_err(|_| anyhow!("maxpool input must be 4-D"))?;
     let (ho, wo) = (h / kh, w / kw);
     let xs = x.data();
@@ -456,9 +561,8 @@ fn maxpool_nhwc_into(inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
 
 // ----------------------------------------------------------- ReduceMean
 
-fn reduce_mean_into(node: &Node, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
+fn reduce_mean_into(axes: &[usize], inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
     let x = inputs[0];
-    let axes: Vec<usize> = node.attrs.ints("axes")?.iter().map(|&a| a as usize).collect();
     let shape = x.shape().to_vec();
     let reduce_count: usize = axes.iter().map(|&a| shape[a]).product();
     let strides = x.strides();
@@ -489,14 +593,17 @@ fn reduce_mean_into(node: &Node, inputs: &[&Tensor], out: &mut Tensor) -> Result
 /// NHWC im2col (the SWG's functional semantics): [N,H,W,C] ->
 /// [N, Ho, Wo, kh*kw*C], patch-major (dy, dx, c) — matching
 /// python/compile/kernels/ref.py::im2col_ref.
-fn im2col_into(node: &Node, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
+fn im2col_into(
+    kernel: [usize; 2],
+    stride: [usize; 2],
+    pad: [usize; 2],
+    inputs: &[&Tensor],
+    out: &mut Tensor,
+) -> Result<()> {
     let x = inputs[0];
-    let kernel = node.attrs.ints("kernel")?;
-    let stride = node.attrs.ints("stride")?;
-    let pad = node.attrs.ints("pad")?;
-    let (kh, kw) = (kernel[0] as usize, kernel[1] as usize);
-    let (sh, sw) = (stride[0] as usize, stride[1] as usize);
-    let (ph, pw) = (pad[0] as usize, pad[1] as usize);
+    let [kh, kw] = kernel;
+    let [sh, sw] = stride;
+    let [ph, pw] = pad;
     let [n, h, w, c]: [usize; 4] = x.shape().try_into().map_err(|_| anyhow!("im2col input must be 4-D"))?;
     let ho = (h + 2 * ph - kh) / sh + 1;
     let wo = (w + 2 * pw - kw) / sw + 1;
@@ -591,12 +698,17 @@ fn global_acc_pool_into(inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
 /// threshold stage then mutate it in place — no intermediates).
 ///
 /// inputs: [x(..., K), w(K, N), bias(N), thresholds(C_or_1, T)?]
-/// attrs:  out_scale / out_bias for the threshold stage; `apply_act`.
-fn mvau_into(node: &Node, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
+/// spec:   out_scale / out_bias for the threshold stage; `apply_act`.
+fn mvau_into(
+    apply_act: bool,
+    out_scale: f32,
+    out_bias: f32,
+    inputs: &[&Tensor],
+    out: &mut Tensor,
+) -> Result<()> {
     matmul_into(inputs[0], inputs[1], out)?;
     let bias = inputs[2];
     out.broadcast_assign(bias, |a, b| a + b)?;
-    let apply_act = node.attrs.int_or("apply_act", 1) != 0;
     if !apply_act {
         return Ok(());
     }
@@ -604,13 +716,7 @@ fn mvau_into(node: &Node, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
         .get(3)
         .ok_or_else(|| anyhow!("MVAU with apply_act needs thresholds input"))?;
     // The fused activation always sees the NHWC stream layout.
-    threshold_in_place(
-        out,
-        thresholds,
-        "NHWC",
-        node.attrs.float_or("out_scale", 1.0) as f32,
-        node.attrs.float_or("out_bias", 0.0) as f32,
-    )
+    threshold_in_place(out, thresholds, ChanLayout::Nhwc, out_scale, out_bias)
 }
 
 #[cfg(test)]
@@ -857,6 +963,44 @@ mod tests {
         let mut buf = a.clone();
         execute_node_inplace(&n, &mut buf, &[]).unwrap();
         assert_eq!(buf, want);
+    }
+
+    #[test]
+    fn spec_resolution_catches_bad_attrs_up_front() {
+        // Conv without kernel/stride/pad attrs: the error now surfaces at
+        // spec resolution (plan compile time), not mid-execution.
+        let n = node("Conv", Attrs::new());
+        let err = OpSpec::resolve(&n).unwrap_err().to_string();
+        assert!(err.contains("kernel"), "{err}");
+        // Bad data_layout likewise fails at resolve.
+        let n = node(
+            "MultiThreshold",
+            Attrs::new().with("data_layout", AttrVal::Str("XYZW".into())),
+        );
+        let err = OpSpec::resolve(&n).unwrap_err().to_string();
+        assert!(err.contains("data_layout"), "{err}");
+        assert!(OpSpec::resolve(&node("NoSuchOp", Attrs::new())).is_err());
+    }
+
+    #[test]
+    fn spec_executors_match_node_executors() {
+        let mut rng = crate::rng::Rng::new(21);
+        let x = Tensor::from_fn(vec![1, 3, 6, 6], |_| rng.normal());
+        let w = Tensor::from_fn(vec![4, 3, 3, 3], |_| rng.normal());
+        let attrs = Attrs::new()
+            .with("kernel", AttrVal::Ints(vec![3, 3]))
+            .with("stride", AttrVal::Ints(vec![1, 1]))
+            .with("pad", AttrVal::Ints(vec![1, 1]));
+        let n = node("Conv", attrs);
+        let spec = OpSpec::resolve(&n).unwrap();
+        assert_eq!(
+            spec,
+            OpSpec::Conv { kernel: [3, 3], stride: [1, 1], pad: [1, 1] }
+        );
+        let want = run1(&n, &[&x, &w]);
+        let mut got = Tensor::zeros(want.shape().to_vec());
+        execute_spec_into(&spec, &[&x, &w], &mut got).unwrap();
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -19,6 +19,10 @@
 //! * per-step output shapes resolved and cross-checked against
 //!   [`crate::ops::infer_output_shape`] (stale shape annotations fail at
 //!   compile, not as corrupted buffers at run time);
+//! * node attributes (kernel/stride/pad/perm/shape/axes/layout) resolved
+//!   into a typed [`crate::ops::OpSpec`] per step — the run loop never
+//!   calls `Attrs::ints()` (string scan + `Vec` clone) again, and a
+//!   malformed attribute fails at compile, not mid-frame;
 //! * a liveness analysis records each activation's last use; the run loop
 //!   returns dead buffers to a reusable arena ([`PlanScratch`]) instead of
 //!   dropping them, and steals a dying input's buffer outright for
@@ -35,14 +39,21 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::graph::{Graph, Node};
+use crate::graph::Graph;
 use crate::ops;
 use crate::tensor::Tensor;
 
-/// One compiled step: a node with its IO resolved to dense slot ids.
+/// One compiled step: a node with its IO resolved to dense slot ids and
+/// its attributes resolved to a typed kernel spec.
 #[derive(Debug, Clone)]
 struct PlanStep {
-    node: Node,
+    /// Node name (diagnostics only).
+    name: String,
+    /// Op name (diagnostics + in-place eligibility at compile).
+    op: String,
+    /// Kernel parameters pre-resolved from `Attrs` at compile time — the
+    /// run loop never scans an attribute string or clones an attr list.
+    spec: ops::OpSpec,
     /// Input slot per node input, in node order.
     inputs: Vec<u32>,
     /// The (single) output slot.
@@ -250,8 +261,12 @@ impl ExecutionPlan {
             }
             known[output as usize] = Some(out_shape.clone());
 
+            let spec = ops::OpSpec::resolve(node)
+                .map_err(|e| anyhow!("plan: node {} ({}): {e}", node.name, node.op))?;
             steps.push(PlanStep {
-                node: node.clone(),
+                name: node.name.clone(),
+                op: node.op.clone(),
+                spec,
                 inputs,
                 output,
                 out_shape,
@@ -304,14 +319,14 @@ impl ExecutionPlan {
         // In-place marking: elementwise/reshape steps whose first input is
         // an activation that dies right here (and is not read twice).
         for (si, step) in steps.iter_mut().enumerate() {
-            if !ops::supports_inplace(&step.node.op) || step.inputs.is_empty() {
+            if !ops::supports_inplace(&step.op) || step.inputs.is_empty() {
                 continue;
             }
             let in0 = step.inputs[0];
             let eligible = produced_by[in0 as usize].is_some()
                 && last_use[in0 as usize] == si
                 && !step.inputs[1..].contains(&in0)
-                && match step.node.op.as_str() {
+                && match step.op.as_str() {
                     "Reshape" => known[in0 as usize]
                         .as_ref()
                         .map(|s| s.iter().product::<usize>() == step.out_shape.iter().product())
@@ -442,7 +457,7 @@ impl ExecutionPlan {
                 let mut buf = scratch.act[step.inputs[0] as usize].take().ok_or_else(|| {
                     anyhow!(
                         "plan bug: in-place input of {} not materialized",
-                        step.node.name
+                        step.name
                     )
                 })?;
                 {
@@ -450,8 +465,8 @@ impl ExecutionPlan {
                         .iter()
                         .map(|&s| self.resolve(s, &scratch.act, &ext))
                         .collect::<Result<_>>()?;
-                    ops::execute_node_inplace(&step.node, &mut buf, &rest).map_err(|e| {
-                        anyhow!("executing {} ({}): {e}", step.node.name, step.node.op)
+                    ops::execute_spec_inplace(&step.spec, &mut buf, &rest).map_err(|e| {
+                        anyhow!("executing {} ({}): {e}", step.name, step.op)
                     })?;
                 }
                 scratch.stats.inplace_steps += 1;
@@ -464,8 +479,8 @@ impl ExecutionPlan {
                         .iter()
                         .map(|&s| self.resolve(s, &scratch.act, &ext))
                         .collect::<Result<_>>()?;
-                    ops::execute_node_into(&step.node, &inputs, &mut out).map_err(|e| {
-                        anyhow!("executing {} ({}): {e}", step.node.name, step.node.op)
+                    ops::execute_spec_into(&step.spec, &inputs, &mut out).map_err(|e| {
+                        anyhow!("executing {} ({}): {e}", step.name, step.op)
                     })?;
                 }
                 scratch.stats.live += 1;
@@ -727,6 +742,32 @@ mod tests {
         feeds.insert("in".to_string(), Tensor::zeros(vec![3, 2]));
         let err = plan.run(&feeds).unwrap_err().to_string();
         assert!(err.contains("shape"), "{err}");
+    }
+
+    #[test]
+    fn attr_resolution_happens_at_compile() {
+        // A malformed attribute (unknown data_layout) dies when the plan
+        // is compiled — the run loop only ever sees typed OpSpecs.
+        let mut g = Graph::new("badattr");
+        g.inputs = vec!["x".into()];
+        g.outputs = vec!["y".into()];
+        g.shapes.insert("x".into(), vec![1, 2]);
+        g.shapes.insert("t".into(), vec![1, 1]);
+        g.shapes.insert("y".into(), vec![1, 2]);
+        g.initializers
+            .insert("t".into(), Tensor::new(vec![1, 1], vec![0.5]).unwrap());
+        g.nodes.push(
+            Node::new(
+                "MultiThreshold",
+                "q",
+                vec!["x".into(), "t".into()],
+                vec!["y".into()],
+            )
+            .with_attrs(Attrs::new().with("data_layout", AttrVal::Str("XYZW".into()))),
+        );
+        let err = ExecutionPlan::compile(&g).unwrap_err().to_string();
+        assert!(err.contains("data_layout"), "{err}");
+        assert!(err.contains("plan: node q"), "{err}");
     }
 
     #[test]
