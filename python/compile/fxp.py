@@ -56,8 +56,16 @@ class FxpFormat:
     def __post_init__(self) -> None:
         if self.bits < 1 or self.bits > 32:
             raise ValueError(f"bits must be in [1,32], got {self.bits}")
-        if self.frac_bits < 0 or self.frac_bits > self.bits + 16:
-            raise ValueError(f"bad frac_bits {self.frac_bits}")
+        # Convention (mirrored bit-exactly by rust/src/fixedpoint/):
+        # frac_bits may exceed bits — a pure-fractional format whose whole
+        # range sits below 1.0 — but by at most 8 bits.  Beyond that the
+        # MultiThreshold generators and BRAM/datapath width models have no
+        # realization, so the bound is explicit rather than the historical
+        # (and meaningless) bits + 16.
+        if self.frac_bits < 0 or self.frac_bits > self.bits + 8:
+            raise ValueError(
+                f"frac_bits {self.frac_bits} outside [0, bits + 8 = {self.bits + 8}]"
+            )
 
     @property
     def int_bits(self) -> int:

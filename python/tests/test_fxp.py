@@ -57,6 +57,32 @@ class TestFormat:
         with pytest.raises(ValueError):
             FxpFormat(bits=40, frac_bits=0)
 
+    def test_frac_bits_bound_is_bits_plus_8(self):
+        # Mirrors rust fixedpoint::tests::frac_bound_is_bits_plus_8_exactly:
+        # up to 8 bits of pure-fractional headroom, never more.
+        for bits in (1, 2, 4, 8, 16, 24, 32):
+            FxpFormat(bits=bits, frac_bits=bits + 8)  # boundary accepted
+            with pytest.raises(ValueError):
+                FxpFormat(bits=bits, frac_bits=bits + 9)
+        with pytest.raises(ValueError):
+            FxpFormat(bits=4, frac_bits=-1)
+
+    @given(st.integers(1, 16), st.integers(1, 8))
+    @settings(max_examples=60, deadline=None)
+    def test_pure_fractional_formats_stay_consistent(self, bits, extra):
+        # Boundary-region property (mirrored in rust): frac in (bits,
+        # bits + 8] gives a pure-fractional format — negative int_bits,
+        # range below 1.0 — with all derived quantities still coherent.
+        f = FxpFormat(bits=bits, frac_bits=bits + extra, signed=False)
+        assert f.int_bits < 0
+        assert f.vmax < 1.0
+        # Independent derivation (not the definition): a b-bit quantizer
+        # spans 2^b codes -> 2^b - 1 threshold steps, regardless of
+        # fractional headroom.
+        assert f.num_thresholds == 2**bits - 1
+        q = quantize_int(jnp.float32(f.vmax), f)
+        assert int(q) == f.qmax
+
     def test_table2_has_eight_rows_matching_paper(self):
         cfgs = table2_configs()
         assert len(cfgs) == 8

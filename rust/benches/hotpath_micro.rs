@@ -13,11 +13,12 @@
 //!   * systolic simulator sweep.
 
 use bwade::benchutil::{bench, throughput};
-use bwade::build::{requantize_graph, synth_backbone_graph, DesignConfig};
+use bwade::build::{lower_bit_true, requantize_graph, synth_backbone_graph, DesignConfig};
 use bwade::fewshot::{sample_episode, NcmClassifier};
 use bwade::fixedpoint::{headline_config, FxpFormat};
 use bwade::graph::{AttrVal, Attrs, Graph, Node};
-use bwade::plan::{ExecutionPlan, PlanScratch};
+use bwade::ops::{execute_int_spec_into, execute_spec_into, ChanLayout, IntOpSpec, OpSpec};
+use bwade::plan::{Datapath, ExecutionPlan, PlanScratch};
 use bwade::resources::Device;
 use bwade::rng::Rng;
 use bwade::systolic::{simulate, MatmulLayer, SystolicConfig};
@@ -125,6 +126,120 @@ fn main() {
         chain_plan.num_inplace_steps(),
         chain_plan.num_steps()
     );
+
+    // ---- bit-true integer datapath vs f32 -----------------------------
+    // Kernel level: MVAU (matmul + bias + fused threshold) and standalone
+    // MultiThreshold, f32 vs i32 on identical on-grid data; then the
+    // whole lowered backbone through both compiled plans.
+    {
+        let mut krng = Rng::new(42);
+        let (rows, k, n) = (256usize, 144usize, 64usize);
+        let (fa, fw) = (2i32, 5i32);
+        // Activation codes (u4.2-ish) and weight codes (s6.5-ish).
+        let x_codes: Vec<i32> = (0..rows * k).map(|_| krng.below(16) as i32).collect();
+        let w_codes: Vec<i32> = (0..k * n).map(|_| krng.below(64) as i32 - 32).collect();
+        let b_codes: Vec<i32> = (0..n).map(|_| krng.below(128) as i32 - 64).collect();
+        let acc_scale = (2.0f64).powi(fa + fw);
+        let xf = Tensor::new(
+            vec![rows, k],
+            x_codes.iter().map(|&c| (c as f64 / 4.0) as f32).collect(),
+        )
+        .unwrap();
+        let wf = Tensor::new(
+            vec![k, n],
+            w_codes.iter().map(|&c| (c as f64 / 32.0) as f32).collect(),
+        )
+        .unwrap();
+        let bf = Tensor::new(
+            vec![n],
+            b_codes.iter().map(|&c| (c as f64 / acc_scale) as f32).collect(),
+        )
+        .unwrap();
+        let tf = Tensor::new(vec![1, 15], (0..15).map(|i| (i as f32 + 0.5) / 4.0).collect())
+            .unwrap();
+        let xi = Tensor::new_i32(vec![rows, k], x_codes).unwrap();
+        let wi = Tensor::new_i32(vec![k, n], w_codes).unwrap();
+        let bi = Tensor::new_i32(vec![n], b_codes).unwrap();
+        let ti = Tensor::new_i32(
+            vec![1, 15],
+            tf.data()
+                .iter()
+                .map(|&t| (t as f64 * acc_scale).ceil() as i32)
+                .collect(),
+        )
+        .unwrap();
+
+        let fspec = OpSpec::Mvau { apply_act: true, out_scale: 0.25, out_bias: 0.0 };
+        let ispec = IntOpSpec::Mvau { apply_act: true, out_mul: 1, out_add: 0 };
+        let mut of = Tensor::zeros(vec![rows, n]);
+        let r_f = bench("kernel: MVAU f32   (256x144 x 144x64 + act)", 3, 20, || {
+            execute_spec_into(&fspec, &[&xf, &wf, &bf, &tf], &mut of).unwrap();
+        });
+        let mut oi = Tensor::zeros_i32(vec![rows, n]);
+        let r_i = bench("kernel: MVAU i32   (same shapes, i64 acc)", 3, 20, || {
+            execute_int_spec_into(&ispec, &[&xi, &wi, &bi, &ti], &mut oi).unwrap();
+        });
+        println!(
+            "  -> bit-true MVAU speedup over f32: {:.2}x",
+            r_f.mean().as_secs_f64() / r_i.mean().as_secs_f64().max(1e-12)
+        );
+
+        let fspec = OpSpec::Threshold { layout: ChanLayout::Nhwc, out_scale: 0.25, out_bias: 0.0 };
+        let ispec = IntOpSpec::Threshold { layout: ChanLayout::Nhwc, out_mul: 1, out_add: 0 };
+        let tshape = vec![1usize, 32, 32, 64];
+        let act_codes: Vec<i32> =
+            (0..32 * 32 * 64).map(|_| krng.below(256) as i32).collect();
+        let af = Tensor::new(
+            tshape.clone(),
+            act_codes.iter().map(|&c| (c as f64 / 16.0) as f32).collect(),
+        )
+        .unwrap();
+        let ai = Tensor::new_i32(tshape.clone(), act_codes).unwrap();
+        let tq = Tensor::new(vec![1, 15], (0..15).map(|i| (i as f32 + 0.5) / 4.0).collect())
+            .unwrap();
+        let tqi = Tensor::new_i32(
+            vec![1, 15],
+            tq.data().iter().map(|&t| (t as f64 * 16.0).ceil() as i32).collect(),
+        )
+        .unwrap();
+        let mut of = Tensor::zeros(tshape.clone());
+        let r_f = bench("kernel: MultiThreshold f32 (1x32x32x64)", 5, 40, || {
+            execute_spec_into(&fspec, &[&af, &tq], &mut of).unwrap();
+        });
+        let mut oi = Tensor::zeros_i32(tshape.clone());
+        let r_i = bench("kernel: MultiThreshold i32 (same tensor)", 5, 40, || {
+            execute_int_spec_into(&ispec, &[&ai, &tqi], &mut oi).unwrap();
+        });
+        println!(
+            "  -> bit-true MultiThreshold speedup over f32: {:.2}x",
+            r_f.mean().as_secs_f64() / r_i.mean().as_secs_f64().max(1e-12)
+        );
+
+        // Whole backbone: f32 plan vs bit-true plan on the lowered graph.
+        let mut lowered = synth_backbone_graph([8, 16, 32, 64], 32, 4, 2);
+        lower_bit_true(&mut lowered, &headline_config()).unwrap();
+        let plan_f = ExecutionPlan::compile(&lowered).unwrap();
+        let plan_i = ExecutionPlan::compile_with(&lowered, Datapath::BitTrue).unwrap();
+        let mut brng = Rng::new(43);
+        let in_shape = lowered.shape_of(&lowered.inputs[0]).unwrap().to_vec();
+        let mut bfeeds = std::collections::HashMap::new();
+        bfeeds.insert(
+            lowered.inputs[0].clone(),
+            Tensor::from_fn(in_shape, |_| brng.next_f32()),
+        );
+        let mut scratch = PlanScratch::default();
+        let r_f = bench("engine: f32 plan,      lowered backbone, 1 image", 1, 5, || {
+            plan_f.run_with(&bfeeds, &mut scratch).unwrap();
+        });
+        let mut scratch = PlanScratch::default();
+        let r_i = bench("engine: bit-true plan, lowered backbone, 1 image", 1, 5, || {
+            plan_i.run_with(&bfeeds, &mut scratch).unwrap();
+        });
+        println!(
+            "  -> bit-true backbone speedup over f32 (lowered HW graph): {:.2}x",
+            r_f.mean().as_secs_f64() / r_i.mean().as_secs_f64().max(1e-12)
+        );
+    }
 
     // ---- fixed-point quantization -------------------------------------
     let fmt = FxpFormat::signed(6, 5).unwrap();

@@ -118,6 +118,25 @@ pub fn build(graph: &mut Graph, cfg: &DesignConfig, device: &Device) -> Result<B
     Ok(report)
 }
 
+/// The bit-true front half of [`build`]: PTQ the imported NCHW graph,
+/// lower it through the full Fig.-3 pipeline, and annotate every HW
+/// node's fixed-point formats so
+/// [`crate::plan::ExecutionPlan::compile_with`] can select integer
+/// kernels ([`crate::plan::Datapath::BitTrue`]).  After this the graph
+/// executes bit-exactly what the FPGA datapath computes — `dse` and the
+/// CLI's `--datapath bit-true` route through here.
+pub fn lower_bit_true(graph: &mut Graph, quant: &QuantConfig) -> Result<()> {
+    requantize_graph(graph, quant)?;
+    run_default_pipeline(graph, None, 0.0)?;
+    if !convert_to_hw::is_fully_hw(graph) {
+        bail!(
+            "bit-true lowering left non-HW ops in the graph: {:?}",
+            graph.op_census()
+        );
+    }
+    crate::transforms::annotate_bit_true_formats(graph)
+}
+
 /// The cap-dependent tail of [`build`]: folding search + FIFO sizing +
 /// bounded dataflow sim on an **already-lowered** HW graph.  Callable
 /// once per utilization cap on a clone of one lowered graph (the dse

@@ -132,6 +132,9 @@ COMMANDS
              --episodes <n>              episodes per config (default 200)
              --engine <pjrt|plan>        backbone engine (default: pjrt if
                                          built with the feature, else plan)
+             --datapath <f32|bit-true>   f32 simulation or bit-exact integer
+                                         execution of the lowered HW graph
+                                         (bit-true needs --engine plan)
   dse        parallel design-space exploration: quant configs x
              utilization caps -> Pareto frontier + EXPERIMENTS.md
              (offline: synthesized backbone + compiled plan engine)
@@ -144,17 +147,22 @@ COMMANDS
                                          (default dir .dse-cache)
              --out <path>                report path (default EXPERIMENTS.md)
              --seed <n>  --img <n>       bank seed / input size
+             --datapath <f32|bit-true>   accuracy arithmetic (recorded per
+                                         row; part of the cache key)
   serve      run the Fig.-5 serving pipeline on synthetic frames
              --frames <n>  --batch <n>  --rate <fps>  --config <...>
-             --engine <pjrt|plan>
+             --engine <pjrt|plan>  --datapath <f32|bit-true>
   episodes   few-shot evaluation for one config
              --config <...>  --episodes <n>  --shot <k>  --way <n>
-             --engine <pjrt|plan>
+             --engine <pjrt|plan>  --datapath <f32|bit-true>
   info       print artifact + model metadata
   help       this text
 
 The `plan` engine executes the exported compiler graph through the
 compiled ExecutionPlan (rust/src/plan/) — python-free and XLA-free.
+With `--datapath bit-true` the graph is lowered to the HW form and run
+on the integer datapath (i32 codes, i64 accumulators): features are
+bit-exactly what the FPGA computes, dequantized only at egress.
 
 Artifacts are read from ./artifacts (override with BWADE_ARTIFACTS).";
 

@@ -16,7 +16,10 @@
 //! serving loop drives either the PJRT executable
 //! (`runtime::BackboneRunner`) or the compiled-plan engine
 //! (`plan::PlanRunner`) — the python-free fallback that needs no XLA at
-//! all.
+//! all.  The plan runner comes in two datapaths: the f32 simulation and
+//! the bit-true integer engine (`PlanRunner::new_bit_true`), which
+//! serves features computed exactly as the FPGA dataflow design would
+//! (CLI: `--datapath f32|bit-true`).
 
 use std::collections::VecDeque;
 use std::sync::mpsc;

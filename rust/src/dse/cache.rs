@@ -25,7 +25,8 @@ use super::{DesignPoint, PointMetrics, SweepSpec};
 
 /// Bump when the evaluation pipeline (`prepare_config` +
 /// `build_hw_metrics`) changes meaning — invalidates every entry.
-pub const CACHE_VERSION: u32 = 1;
+/// v2: the sweep gained the `datapath` axis (f32 vs bit-true accuracy).
+pub const CACHE_VERSION: u32 = 2;
 
 /// 64-bit FNV-1a — tiny, dependency-free, good enough for file naming
 /// (the stored description string is the real collision guard).
@@ -44,7 +45,8 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
 pub fn point_desc(spec: &SweepSpec, point: &DesignPoint) -> String {
     let b = &spec.device.budget;
     format!(
-        "v{CACHE_VERSION}|quant={}|cap={:?}|fps={:?}|dev={}|clk={:?}|budget={:?}/{:?}/{:?}/{:?}|widths={:?}|img={}|bank={}x{}|ep={}x{}w{}s{}q|seed={}",
+        "v{CACHE_VERSION}|dp={}|quant={}|cap={:?}|fps={:?}|dev={}|clk={:?}|budget={:?}/{:?}/{:?}/{:?}|widths={:?}|img={}|bank={}x{}|ep={}x{}w{}s{}q|seed={}",
+        spec.datapath.describe(),
         point.quant.describe(),
         point.max_utilization,
         spec.target_fps,
@@ -210,6 +212,11 @@ mod tests {
         assert_ne!(base, point_desc(&s2, p));
         let mut s2 = spec.clone();
         s2.target_fps = Some(60.0);
+        assert_ne!(base, point_desc(&s2, p));
+        // The datapath is part of the key: f32 and bit-true sweeps must
+        // never answer each other's points.
+        let mut s2 = spec.clone();
+        s2.datapath = crate::plan::Datapath::BitTrue;
         assert_ne!(base, point_desc(&s2, p));
     }
 

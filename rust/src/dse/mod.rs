@@ -34,12 +34,14 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::build::{implement_lowered, requantize_graph, synth_backbone_graph, DesignConfig};
+use crate::build::{
+    implement_lowered, lower_bit_true, requantize_graph, synth_backbone_graph, DesignConfig,
+};
 use crate::coordinator::FeatureExtractor;
 use crate::fewshot::{evaluate, sample_episode, AccuracyReport, Episode};
 use crate::fixedpoint::{table2_configs, QuantConfig};
 use crate::graph::Graph;
-use crate::plan::PlanRunner;
+use crate::plan::{Datapath, PlanRunner};
 use crate::resources::Device;
 use crate::rng::Rng;
 use crate::transforms::{convert_to_hw, run_default_pipeline};
@@ -75,6 +77,12 @@ pub struct SweepSpec {
     /// Seeds the bank, the episode sampler — and nothing else, so equal
     /// specs give bitwise-equal sweeps regardless of worker count.
     pub seed: u64,
+    /// Which arithmetic scores accuracy: the f32 simulation of the
+    /// quantized backbone, or the bit-true integer plan on the lowered
+    /// HW graph (what the FPGA actually computes).  Recorded per result
+    /// row and part of the cache key — f32 and bit-true sweeps never
+    /// collide.
+    pub datapath: Datapath,
 }
 
 impl Default for SweepSpec {
@@ -93,6 +101,7 @@ impl Default for SweepSpec {
             n_query: 15,
             episodes: 50,
             seed: 0xD5E,
+            datapath: Datapath::F32,
         }
     }
 }
@@ -249,15 +258,32 @@ pub fn prepare_config(
 ) -> Result<(AccuracyReport, Graph)> {
     let mut graph =
         synth_backbone_graph(spec.widths, spec.img, quant.act.bits, quant.act.frac_bits);
-    // PTQ first so accuracy is scored on the exact grids the build
-    // deploys (quantization is a projection — the pipeline preserves it).
-    requantize_graph(&mut graph, quant)?;
     let n_images = spec.num_classes * spec.per_class;
-    let runner = PlanRunner::new(&graph, n_images.clamp(1, 8))?;
-    let feats = runner.extract_all(bank, n_images)?;
-    let acc = evaluate(&feats, runner.feature_dim(), episodes)?;
+    let batch = n_images.clamp(1, 8);
+    let (acc, lowered_early) = match spec.datapath {
+        Datapath::F32 => {
+            // PTQ first so accuracy is scored on the exact grids the
+            // build deploys (quantization is a projection — the pipeline
+            // preserves it); lowering happens after scoring.
+            requantize_graph(&mut graph, quant)?;
+            let runner = PlanRunner::new(&graph, batch)?;
+            let feats = runner.extract_all(bank, n_images)?;
+            (evaluate(&feats, runner.feature_dim(), episodes)?, false)
+        }
+        Datapath::BitTrue => {
+            // Lower + annotate first: bit-true accuracy is defined on
+            // the HW graph's integer plan, so the score is exactly what
+            // the deployed datapath produces — not a float approximation.
+            lower_bit_true(&mut graph, quant)?;
+            let runner = PlanRunner::new_bit_true(&graph, batch)?;
+            let feats = runner.extract_all(bank, n_images)?;
+            (evaluate(&feats, runner.feature_dim(), episodes)?, true)
+        }
+    };
 
-    run_default_pipeline(&mut graph, None, 0.0)?;
+    if !lowered_early {
+        run_default_pipeline(&mut graph, None, 0.0)?;
+    }
     if !convert_to_hw::is_fully_hw(&graph) {
         bail!("pipeline left non-HW ops in the graph: {:?}", graph.op_census());
     }

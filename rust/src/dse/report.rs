@@ -37,14 +37,28 @@ pub fn render_report(spec: &SweepSpec, result: &SweepResult) -> String {
             None => "fold until the cap stops paying".to_string(),
         }
     );
+    let _ = writeln!(
+        s,
+        "Datapath: {} — {}.",
+        spec.datapath.describe(),
+        match spec.datapath {
+            crate::plan::Datapath::F32 =>
+                "accuracies from the f32 simulation of the quantized backbone",
+            crate::plan::Datapath::BitTrue =>
+                "accuracies from bit-exact integer execution of the lowered HW graph",
+        }
+    );
     let _ = writeln!(s);
 
     // ---- Table II shape: accuracy vs bit-width (cap-independent — the
     // first outcome per config speaks for the row).
     let _ = writeln!(s, "## Table II — few-shot accuracy vs bit-width");
     let _ = writeln!(s);
-    let _ = writeln!(s, "| config | max bits | weights | acts | acc [%] | ci95 [%] |");
-    let _ = writeln!(s, "|---|---|---|---|---|---|");
+    let _ = writeln!(
+        s,
+        "| config | max bits | weights | acts | datapath | acc [%] | ci95 [%] |"
+    );
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|");
     let mut seen: Vec<&str> = Vec::new();
     for o in &result.outcomes {
         if seen.contains(&o.point.name.as_str()) {
@@ -53,11 +67,12 @@ pub fn render_report(spec: &SweepSpec, result: &SweepResult) -> String {
         seen.push(&o.point.name);
         let _ = writeln!(
             s,
-            "| {} | {} | {} | {} | {:.2} | {:.2} |",
+            "| {} | {} | {} | {} | {} | {:.2} | {:.2} |",
             o.point.name,
             o.point.quant.max_bits(),
             o.point.quant.weight.describe(),
             o.point.quant.act.describe(),
+            spec.datapath.describe(),
             o.metrics.acc_mean * 100.0,
             o.metrics.acc_ci95 * 100.0,
         );
@@ -69,16 +84,17 @@ pub fn render_report(spec: &SweepSpec, result: &SweepResult) -> String {
     let _ = writeln!(s);
     let _ = writeln!(
         s,
-        "| config | cap | LUT | FF | BRAM36 | DSP | util [%] | weights [KiB] | latency [ms] | fps | II [cyc] | Pareto |"
+        "| config | cap | datapath | LUT | FF | BRAM36 | DSP | util [%] | weights [KiB] | latency [ms] | fps | II [cyc] | Pareto |"
     );
-    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|---|---|---|---|");
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|---|---|---|---|---|");
     for (i, o) in result.outcomes.iter().enumerate() {
         let m = &o.metrics;
         let _ = writeln!(
             s,
-            "| {} | {:.2} | {:.0} | {:.0} | {:.1} | {:.0} | {:.1} | {:.1} | {:.3} | {:.1} | {} | {} |",
+            "| {} | {:.2} | {} | {:.0} | {:.0} | {:.1} | {:.0} | {:.1} | {:.1} | {:.3} | {:.1} | {} | {} |",
             o.point.name,
             o.point.max_utilization,
+            spec.datapath.describe(),
             m.lut,
             m.ff,
             m.bram36,
@@ -184,6 +200,24 @@ mod tests {
             md.matches("| 0.50 |").count() + md.matches("| 0.85 |").count(),
             result.outcomes.len() + result.pareto.len()
         );
+    }
+
+    #[test]
+    fn report_records_datapath_per_row() {
+        let mut spec = SweepSpec::default();
+        spec.datapath = crate::plan::Datapath::BitTrue;
+        let result = fake_result(&spec);
+        let md = render_report(&spec, &result);
+        assert!(md.contains("Datapath: bit-true"));
+        // One marker per Table-II row and per Table-III row at least.
+        assert!(
+            md.matches("| bit-true |").count() >= spec.configs.len() + result.outcomes.len(),
+            "datapath not recorded per row"
+        );
+        let f32_spec = SweepSpec::default();
+        let f32_md = render_report(&f32_spec, &fake_result(&f32_spec));
+        assert!(f32_md.contains("Datapath: f32"));
+        assert!(!f32_md.contains("bit-true"));
     }
 
     #[test]

@@ -36,12 +36,27 @@ impl FxpFormat {
         Self::new(bits, frac_bits, false)
     }
 
+    /// Validate and build a format.
+    ///
+    /// Convention: `frac_bits` may exceed `bits` — a *pure-fractional*
+    /// format whose whole range sits below 1.0 (`int_bits` goes negative;
+    /// e.g. `s2.6` spans [-2^-5, 2^-6]) — but by **at most 8 bits**.
+    /// Anything beyond that is outside what `num_thresholds()`-driven
+    /// MultiThreshold generation and the BRAM/datapath width models are
+    /// designed for, and historically the looser `bits + 16` bound only
+    /// admitted formats nothing downstream could realize.  The python
+    /// twin (`python/compile/fxp.py`) enforces the identical bound, and
+    /// `python/tests/test_fxp.py` / the property tests below probe the
+    /// boundary from both sides.
     pub fn new(bits: u8, frac_bits: u8, signed: bool) -> Result<Self> {
         if bits == 0 || bits > 32 {
             bail!("bits must be in [1, 32], got {bits}");
         }
-        if frac_bits > bits + 16 {
-            bail!("frac_bits {frac_bits} too large for {bits} bits");
+        if frac_bits > bits + 8 {
+            bail!(
+                "frac_bits {frac_bits} exceeds bits + 8 = {} (at most 8 bits of pure-fractional headroom)",
+                bits + 8
+            );
         }
         Ok(Self {
             bits,
@@ -169,6 +184,33 @@ impl QuantConfig {
     pub fn describe(&self) -> String {
         format!("W{}_A{}", self.weight.describe(), self.act.describe())
     }
+}
+
+/// Exact rational decomposition of a finite nonzero float: `x = m * 2^e`
+/// with `m` odd.  Every f64 (and every f32 widened to f64) is exactly
+/// such a rational, so this is lossless — the bit-true datapath uses it
+/// to turn float scale factors into an integer multiplier plus a
+/// fractional-bit shift.  Returns `None` for 0, NaN and infinities.
+pub fn pow2_decompose(x: f64) -> Option<(i64, i32)> {
+    if x == 0.0 || !x.is_finite() {
+        return None;
+    }
+    let bits = x.to_bits();
+    let biased = ((bits >> 52) & 0x7ff) as i32;
+    let frac = (bits & ((1u64 << 52) - 1)) as i64;
+    let (mut m, mut e) = if biased == 0 {
+        (frac, -1074) // subnormal: no implicit leading 1
+    } else {
+        (frac | (1i64 << 52), biased - 1075)
+    };
+    while m & 1 == 0 {
+        m >>= 1;
+        e += 1;
+    }
+    if x < 0.0 {
+        m = -m;
+    }
+    Some((m, e))
 }
 
 /// The eight rows of the paper's Table II, in paper order.
@@ -345,6 +387,70 @@ mod tests {
             let code = f.qmin() + (r.below(span) as i64);
             let v = f.dequantize(code);
             assert_eq!(f.quantize_int(v), code, "fmt {} code {code}", f.describe());
+        }
+    }
+
+    #[test]
+    fn frac_bound_is_bits_plus_8_exactly() {
+        // Mirrors test_fxp.py::test_frac_bits_bound_is_bits_plus_8.
+        for bits in [1u8, 2, 4, 8, 16, 24, 32] {
+            assert!(
+                FxpFormat::new(bits, bits + 8, true).is_ok(),
+                "bits {bits}: frac = bits + 8 must be accepted"
+            );
+            assert!(
+                FxpFormat::new(bits, bits + 9, true).is_err(),
+                "bits {bits}: frac = bits + 9 must be rejected"
+            );
+            assert!(FxpFormat::new(bits, bits + 8, false).is_ok());
+            assert!(FxpFormat::new(bits, bits + 9, false).is_err());
+        }
+    }
+
+    #[test]
+    fn prop_pure_fractional_formats_stay_consistent() {
+        // Boundary-region property: for frac in (bits, bits + 8] the
+        // format is pure-fractional (negative int_bits) but the quantizer
+        // grid, threshold count and range formulas all keep holding.
+        let mut r = Rng::new(105);
+        for _ in 0..2_000 {
+            let bits = 1 + r.below(16) as u8;
+            let frac = bits + 1 + r.below(8) as u8; // (bits, bits + 8]
+            let signed = r.next_f32() < 0.5;
+            let f = FxpFormat::new(bits, frac, signed).unwrap();
+            assert!(f.int_bits() < 0);
+            assert!(f.vmax() < 1.0, "fmt {} vmax {}", f.describe(), f.vmax());
+            // Independent derivation (not the definition): a b-bit
+            // quantizer spans 2^b codes -> 2^b - 1 threshold steps,
+            // signed or not — fractional headroom must not change it.
+            assert_eq!(f.num_thresholds(), (1i64 << f.bits) - 1);
+            // Round-trip through codes is still exact on the grid.
+            let code = f.qmin() + r.below((f.qmax() - f.qmin() + 1) as usize) as i64;
+            assert_eq!(f.quantize_int(f.dequantize(code)), code);
+        }
+    }
+
+    #[test]
+    fn pow2_decompose_exact_rationals() {
+        assert_eq!(pow2_decompose(1.0), Some((1, 0)));
+        assert_eq!(pow2_decompose(0.25), Some((1, -2)));
+        assert_eq!(pow2_decompose(1.0 / 256.0), Some((1, -8)));
+        assert_eq!(pow2_decompose(3.0), Some((3, 0)));
+        assert_eq!(pow2_decompose(-0.75), Some((-3, -2)));
+        assert_eq!(pow2_decompose(6.0), Some((3, 1)));
+        assert_eq!(pow2_decompose(0.0), None);
+        assert_eq!(pow2_decompose(f64::NAN), None);
+        assert_eq!(pow2_decompose(f64::INFINITY), None);
+        // Non-dyadic floats decompose to their exact rational bit pattern.
+        let mut r = Rng::new(106);
+        for _ in 0..2_000 {
+            let x = (r.range_f32(-100.0, 100.0)) as f64;
+            if x == 0.0 {
+                continue;
+            }
+            let (m, e) = pow2_decompose(x).unwrap();
+            assert_eq!(m.rem_euclid(2), 1, "m {m} must be odd for x {x}");
+            assert_eq!(m as f64 * (2.0f64).powi(e), x, "reconstruct {x}");
         }
     }
 

@@ -1,20 +1,22 @@
 //! bwade CLI — leader entrypoint for the design environment and the
 //! serving runtime.  `bwade help` for usage.
 
+#![allow(clippy::too_many_arguments, clippy::field_reassign_with_default)]
+
 use std::path::Path;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use bwade::artifacts::{ArtifactPaths, FewshotBank, ModelBundle};
-use bwade::build::{build, requantize_graph, DesignConfig};
+use bwade::build::{build, lower_bit_true, requantize_graph, DesignConfig};
 use bwade::cli::{parse_config, parse_config_list, parse_f64_list, Args, USAGE};
 use bwade::dse::{run_sweep, write_report, ResultCache, SweepSpec};
 use bwade::coordinator::{serve, BatchPolicy, FeatureExtractor, FrameSource};
 use bwade::fewshot::{evaluate, sample_episode, NcmClassifier};
 use bwade::fixedpoint::{baseline16_config, table2_configs, QuantConfig};
 use bwade::graph::Graph;
-use bwade::plan::PlanRunner;
+use bwade::plan::{Datapath, PlanRunner};
 use bwade::resources::{utilization_line, Device};
 use bwade::rng::Rng;
 use bwade::runtime::{BackboneRunner, Runtime};
@@ -69,12 +71,16 @@ fn default_engine() -> &'static str {
 /// executable built from it.
 struct EngineFactory {
     engine: String,
+    datapath: Datapath,
     runtime: Option<Runtime>,
     graph: Option<Graph>,
 }
 
 impl EngineFactory {
-    fn new(engine: &str, paths: &ArtifactPaths) -> Result<Self> {
+    fn new(engine: &str, datapath: Datapath, paths: &ArtifactPaths) -> Result<Self> {
+        if datapath == Datapath::BitTrue && engine != "plan" {
+            bail!("--datapath bit-true requires --engine plan (the PJRT executable is f32-only)");
+        }
         let (runtime, graph) = match engine {
             "pjrt" => (Some(Runtime::new()?), None),
             // The compiled-plan engine executes the exported compiler
@@ -84,6 +90,7 @@ impl EngineFactory {
         };
         Ok(Self {
             engine: engine.to_string(),
+            datapath,
             runtime,
             graph,
         })
@@ -108,10 +115,21 @@ impl EngineFactory {
                 )?))
             }
             _ => {
-                // PTQ a fresh copy of the float import per config.
+                // A fresh copy of the float import per config.
                 let mut graph = self.graph.clone().expect("plan factory has a graph");
-                requantize_graph(&mut graph, &cfg)?;
-                Ok(Box::new(PlanRunner::new(&graph, batch)?))
+                match self.datapath {
+                    // PTQ only: the f32 simulation of the quantized net.
+                    Datapath::F32 => {
+                        requantize_graph(&mut graph, &cfg)?;
+                        Ok(Box::new(PlanRunner::new(&graph, batch)?))
+                    }
+                    // PTQ + full lowering + format annotation: the
+                    // bit-exact integer datapath of the deployed design.
+                    Datapath::BitTrue => {
+                        lower_bit_true(&mut graph, &cfg)?;
+                        Ok(Box::new(PlanRunner::new_bit_true(&graph, batch)?))
+                    }
+                }
             }
         }
     }
@@ -173,6 +191,7 @@ fn cmd_dse(args: &Args) -> Result<()> {
     if args.get("target-fps").is_some() {
         spec.target_fps = Some(args.get_f64("target-fps", 0.0)?);
     }
+    spec.datapath = Datapath::parse(args.get_or("datapath", "f32"))?;
     let workers = args.get_usize("workers", 4)?;
     let cache = match args.get("cache") {
         Some(dir) => Some(ResultCache::open(dir)?),
@@ -182,13 +201,14 @@ fn cmd_dse(args: &Args) -> Result<()> {
     let out = args.get_or("out", "EXPERIMENTS.md").to_string();
 
     println!(
-        "dse: {} configs x {} caps = {} design points on {}  ({} workers, {} episodes/point, cache: {})",
+        "dse: {} configs x {} caps = {} design points on {}  ({} workers, {} episodes/point, datapath {}, cache: {})",
         spec.configs.len(),
         spec.caps.len(),
         spec.configs.len() * spec.caps.len(),
         spec.device.name,
         workers,
         spec.episodes,
+        spec.datapath.describe(),
         cache
             .as_ref()
             .map(|c| c.dir().display().to_string())
@@ -340,13 +360,17 @@ fn cmd_compare(args: &Args) -> Result<()> {
 fn cmd_table2(args: &Args) -> Result<()> {
     let episodes = args.get_usize("episodes", 200)?;
     let engine = args.get_or("engine", default_engine()).to_string();
+    let datapath = Datapath::parse(args.get_or("datapath", "f32"))?;
     let paths = ArtifactPaths::default_dir();
     let bundle = paths.model_bundle()?;
     let bank = FewshotBank::load(&paths.fewshot_bank())?;
     let batch = *bundle.batch_sizes.iter().max().unwrap_or(&1);
-    let factory = EngineFactory::new(&engine, &paths)?;
+    let factory = EngineFactory::new(&engine, datapath, &paths)?;
 
-    println!("== Table II: accuracy on the synthetic novel split (5-way 5-shot, engine {engine}) ==");
+    println!(
+        "== Table II: accuracy on the synthetic novel split (5-way 5-shot, engine {engine}, datapath {}) ==",
+        datapath.describe()
+    );
     println!("{:<16} {:>8} {:>12} {:>10}", "config", "max bits", "acc [%]", "ci95");
     let mut rng = Rng::new(0xEE);
     let eps: Vec<_> = (0..episodes)
@@ -373,6 +397,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let batch_opt = args.get_usize("batch", 0)?;
     let rate = args.get_f64("rate", 0.0)?;
     let engine = args.get_or("engine", default_engine()).to_string();
+    let datapath = Datapath::parse(args.get_or("datapath", "f32"))?;
     let paths = ArtifactPaths::default_dir();
     let bundle = paths.model_bundle()?;
     let cfg = parse_config(args.get_or("config", "b6_c1.5_r2.2"))?;
@@ -392,7 +417,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         *bundle.batch_sizes.iter().max().unwrap_or(&1)
     };
-    let factory = EngineFactory::new(&engine, &paths)?;
+    let factory = EngineFactory::new(&engine, datapath, &paths)?;
     let runner = factory.make(&paths, &bundle, exec_batch, cfg)?;
 
     // Prototypes from the bank (5-way support) so classification is real.
@@ -418,7 +443,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 5)? as u64),
     };
     println!(
-        "serving {frames} frames (engine {engine}, config {}, exec batch {exec_batch}, policy batch {}) ...",
+        "serving {frames} frames (engine {engine}, datapath {}, config {}, exec batch {exec_batch}, policy batch {}) ...",
+        datapath.describe(),
         cfg.describe(),
         policy.max_batch
     );
@@ -433,16 +459,18 @@ fn cmd_episodes(args: &Args) -> Result<()> {
     let way = args.get_usize("way", 5)?;
     let shot = args.get_usize("shot", 5)?;
     let engine = args.get_or("engine", default_engine()).to_string();
+    let datapath = Datapath::parse(args.get_or("datapath", "f32"))?;
     let cfg = parse_config(args.get_or("config", "b6_c1.5_r2.2"))?;
     let paths = ArtifactPaths::default_dir();
     let bundle = paths.model_bundle()?;
     let bank = FewshotBank::load(&paths.fewshot_bank())?;
     let batch = *bundle.batch_sizes.iter().max().unwrap_or(&1);
-    let factory = EngineFactory::new(&engine, &paths)?;
+    let factory = EngineFactory::new(&engine, datapath, &paths)?;
     let runner = factory.make(&paths, &bundle, batch, cfg)?;
     println!(
-        "extracting features for {} bank images (engine {engine}) ...",
-        bank.num_images()
+        "extracting features for {} bank images (engine {engine}, datapath {}) ...",
+        bank.num_images(),
+        datapath.describe()
     );
     let feats = runner.extract_all(&bank.images, bank.num_images())?;
     let mut rng = Rng::new(args.get_usize("seed", 0xEE)? as u64);

@@ -6,7 +6,11 @@
 //! * [`execute_spec_into`] / [`execute_spec_inplace`] — kernels driven by a
 //!   pre-resolved [`OpSpec`] (the [`crate::plan`] engine's path: attributes
 //!   are parsed ONCE at plan compile, the run loop never scans an attr
-//!   string or clones an attr `Vec` again);
+//!   string or clones an attr `Vec` again); the bit-true integer datapath
+//!   has its own spec layer next to it ([`IntOpSpec`] /
+//!   [`execute_int_spec_into`]) executing i32 fixed-point codes with i64
+//!   accumulators — what the FPGA actually computes, not a float
+//!   simulation of it;
 //! * [`execute_node_into`] / [`execute_node_inplace`] — same kernels, with
 //!   the spec resolved from the node's `Attrs` on the spot;
 //! * [`execute_node`] — compatibility form: infers the output shape
@@ -35,7 +39,7 @@ use std::collections::HashMap;
 use anyhow::{anyhow, bail, Result};
 
 use crate::graph::{Graph, Node};
-use crate::tensor::{broadcast_shape, Tensor};
+use crate::tensor::{broadcast_shape, Tensor, TensorData};
 
 /// Execute the graph on named input tensors; returns all graph outputs.
 ///
@@ -227,7 +231,7 @@ pub enum ChanLayout {
 }
 
 impl ChanLayout {
-    fn parse(s: &str) -> Result<Self> {
+    pub fn parse(s: &str) -> Result<Self> {
         match s {
             "NCHW" => Ok(ChanLayout::Nchw),
             "NHWC" => Ok(ChanLayout::Nhwc),
@@ -266,7 +270,7 @@ pub enum OpSpec {
     Mvau { apply_act: bool, out_scale: f32, out_bias: f32 },
 }
 
-fn attr_pair(v: Vec<i64>, what: &str) -> Result<[usize; 2]> {
+pub(crate) fn attr_pair(v: Vec<i64>, what: &str) -> Result<[usize; 2]> {
     if v.len() != 2 {
         bail!("attr {what} must have 2 entries, got {v:?}");
     }
@@ -390,6 +394,414 @@ pub fn execute_node_inplace(node: &Node, buf: &mut Tensor, rest: &[&Tensor]) -> 
     execute_spec_inplace(&OpSpec::resolve(node)?, buf, rest)
 }
 
+// ------------------------------------------------------------- IntOpSpec
+
+/// Kernel parameters of one bit-true (integer-datapath) plan step — the
+/// `_i32` twin of [`OpSpec`], resolved by
+/// [`crate::plan::ExecutionPlan::compile_with`] from the `bt_*` format
+/// annotations `transforms::annotate_bit_true_formats` writes.
+///
+/// Steady-state execution of every variant except the two `ingress`
+/// boundaries performs **zero f32 arithmetic**: activations are i32
+/// fixed-point codes, weights/biases/thresholds are pre-converted i32
+/// codes, and the MVAU accumulates i32 x i32 products in i64 (i8 x i8 ->
+/// i32 at the paper's headline widths).  Float scale factors were
+/// decomposed at annotation time into an odd integer multiplier
+/// (`out_mul` / `m`) plus a power-of-two carried in the slot's
+/// fractional-bit bookkeeping, so scaling is exact integer arithmetic.
+#[derive(Debug, Clone, PartialEq)]
+pub enum IntOpSpec {
+    /// Ingress quantizer: the ONE step that reads f32 — it compares the
+    /// raw feed against the float threshold matrix (comparisons only, no
+    /// arithmetic) and emits integer codes `q * out_mul + out_add`.
+    QuantizeThreshold { layout: ChanLayout, out_mul: i64, out_add: i64 },
+    /// Integer MultiThreshold: i32 codes against precomputed integer
+    /// thresholds (`ceil(t * 2^in_frac)` of the float matrix).
+    Threshold { layout: ChanLayout, out_mul: i64, out_add: i64 },
+    /// Matrix-Vector-Activation Unit on codes: i64-accumulate matmul +
+    /// integer bias + optional fused integer threshold activation.
+    Mvau { apply_act: bool, out_mul: i64, out_add: i64 },
+    Im2Col { kernel: [usize; 2], stride: [usize; 2], pad: [usize; 2] },
+    MaxPoolNhwc,
+    /// Residual add; per-operand left shifts align the two operands'
+    /// fractional bits (exact — shifts never round).
+    AddStreams { shift: [u32; 2] },
+    /// Multiply codes by the odd-mantissa part of a float scalar scale
+    /// (the power-of-two part moved into the output format).
+    MulScalar { m: i64, data_input: usize },
+    GlobalAccPool,
+    /// Layout conversion; dtype-generic.  `float_ingress` marks the
+    /// boundary transpose that still moves f32 camera data.
+    Transpose { perm: Vec<usize>, float_ingress: bool },
+}
+
+impl IntOpSpec {
+    /// Audit label for the kernel-variant audit: "int" for steady-state
+    /// integer kernels, "ingress-*" for the two boundary steps allowed
+    /// to touch f32 data.
+    pub fn variant(&self) -> &'static str {
+        match self {
+            IntOpSpec::QuantizeThreshold { .. } => "ingress-quant",
+            IntOpSpec::Transpose {
+                float_ingress: true,
+                ..
+            } => "ingress-f32",
+            _ => "int",
+        }
+    }
+}
+
+#[inline]
+fn store_i32(v: i64, what: &str) -> Result<i32> {
+    i32::try_from(v).map_err(|_| anyhow!("{what}: value {v} overflows the i32 datapath"))
+}
+
+/// Execute a bit-true spec into a caller-provided buffer — the integer
+/// plan's per-step entry point.
+pub fn execute_int_spec_into(spec: &IntOpSpec, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
+    match spec {
+        IntOpSpec::QuantizeThreshold {
+            layout,
+            out_mul,
+            out_add,
+        } => quantize_threshold_into(inputs[0], inputs[1], *layout, *out_mul, *out_add, out),
+        IntOpSpec::Threshold {
+            layout,
+            out_mul,
+            out_add,
+        } => threshold_i32_into(inputs[0], inputs[1], *layout, *out_mul, *out_add, out),
+        IntOpSpec::Mvau {
+            apply_act,
+            out_mul,
+            out_add,
+        } => mvau_i32_into(*apply_act, *out_mul, *out_add, inputs, out),
+        IntOpSpec::Im2Col {
+            kernel,
+            stride,
+            pad,
+        } => im2col_i32_into(*kernel, *stride, *pad, inputs, out),
+        IntOpSpec::MaxPoolNhwc => maxpool_nhwc_i32_into(inputs, out),
+        IntOpSpec::AddStreams { shift } => add_streams_i32_into(*shift, inputs, out),
+        IntOpSpec::MulScalar { m, data_input } => mul_scalar_i32_into(*m, inputs[*data_input], out),
+        IntOpSpec::GlobalAccPool => global_acc_pool_i32_into(inputs, out),
+        IntOpSpec::Transpose { perm, .. } => inputs[0].transpose_into(perm, out),
+    }
+}
+
+/// Ingress quantizer: count float thresholds <= x (comparisons only) and
+/// emit integer codes.  The float compare against the sorted threshold
+/// row is exactly FINN's `q = #{k : x >= t_k}` — identical to the f32
+/// MultiThreshold executor's partition point, so the emitted codes agree
+/// with the float path by construction.
+fn quantize_threshold_into(
+    x: &Tensor,
+    t: &Tensor,
+    layout: ChanLayout,
+    out_mul: i64,
+    out_add: i64,
+    out: &mut Tensor,
+) -> Result<()> {
+    if out.shape() != x.shape() {
+        bail!(
+            "quantize_threshold: out shape {:?} != input {:?}",
+            out.shape(),
+            x.shape()
+        );
+    }
+    let (c_t, k) = (t.shape()[0], t.shape()[1]);
+    let chan_axis = layout.chan_axis(x.ndim());
+    let c = x.shape()[chan_axis];
+    if c_t != c && c_t != 1 {
+        bail!("threshold rows {c_t} != channels {c}");
+    }
+    let chan_stride = x.strides()[chan_axis];
+    let ts = t.data();
+    let xs = x.data();
+    let od = out.data_i32_mut();
+    for (i, o) in od.iter_mut().enumerate() {
+        let v = xs[i];
+        let row = if c_t == 1 { 0 } else { (i / chan_stride) % c };
+        let q = ts[row * k..(row + 1) * k].partition_point(|&t| t <= v) as i64;
+        *o = store_i32(q * out_mul + out_add, "quantize_threshold")?;
+    }
+    Ok(())
+}
+
+/// Integer MultiThreshold, out of place: codes against precomputed
+/// integer thresholds, read from `x`, written to `out` — no input copy
+/// (the standalone Thresholding steps' path; the fused MVAU activation
+/// uses the in-place form below on its own accumulator buffer).
+fn threshold_i32_into(
+    x: &Tensor,
+    t: &Tensor,
+    layout: ChanLayout,
+    out_mul: i64,
+    out_add: i64,
+    out: &mut Tensor,
+) -> Result<()> {
+    if out.shape() != x.shape() {
+        bail!(
+            "threshold_i32: out shape {:?} != input {:?}",
+            out.shape(),
+            x.shape()
+        );
+    }
+    let (c_t, k) = (t.shape()[0], t.shape()[1]);
+    let chan_axis = layout.chan_axis(x.ndim());
+    let c = x.shape()[chan_axis];
+    if c_t != c && c_t != 1 {
+        bail!("threshold rows {c_t} != channels {c}");
+    }
+    let chan_stride = x.strides()[chan_axis];
+    let ts = t.data_i32();
+    let xs = x.data_i32();
+    let od = out.data_i32_mut();
+    for (i, o) in od.iter_mut().enumerate() {
+        let v = xs[i];
+        let row = if c_t == 1 { 0 } else { (i / chan_stride) % c };
+        let q = ts[row * k..(row + 1) * k].partition_point(|&t| t <= v) as i64;
+        *o = store_i32(q * out_mul + out_add, "threshold_i32")?;
+    }
+    Ok(())
+}
+
+/// Integer MultiThreshold in place: codes against precomputed integer
+/// thresholds.  With `tc = ceil(t * 2^f)` and `x = c * 2^-f` on the grid,
+/// `c >= tc  <=>  x >= t` — bit-exact agreement with the float compare.
+fn threshold_i32_in_place(
+    buf: &mut Tensor,
+    t: &Tensor,
+    layout: ChanLayout,
+    out_mul: i64,
+    out_add: i64,
+) -> Result<()> {
+    let (c_t, k) = (t.shape()[0], t.shape()[1]);
+    let chan_axis = layout.chan_axis(buf.ndim());
+    let c = buf.shape()[chan_axis];
+    if c_t != c && c_t != 1 {
+        bail!("threshold rows {c_t} != channels {c}");
+    }
+    let chan_stride = buf.strides()[chan_axis];
+    let ts = t.data_i32();
+    let xs = buf.data_i32_mut();
+    for (i, v) in xs.iter_mut().enumerate() {
+        let row = if c_t == 1 { 0 } else { (i / chan_stride) % c };
+        let q = ts[row * k..(row + 1) * k].partition_point(|&t| t <= *v) as i64;
+        *v = store_i32(q * out_mul + out_add, "threshold_i32")?;
+    }
+    Ok(())
+}
+
+/// `[..., K] x [K, N]` integer matmul with i64 accumulation — the
+/// bit-true twin of the f32 `MatMul` kernel (same zero-skip, so the
+/// post-ReLU sparsity optimization carries over).
+pub fn matmul_i32_into(x: &Tensor, w: &Tensor, out: &mut Tensor) -> Result<()> {
+    let k = *x.shape().last().ok_or_else(|| anyhow!("matmul on scalar"))?;
+    let [wk, n]: [usize; 2] = w
+        .shape()
+        .try_into()
+        .map_err(|_| anyhow!("matmul weight must be 2-D"))?;
+    if wk != k {
+        bail!("matmul inner dim {k} != weight rows {wk}");
+    }
+    let rows: usize = x.shape()[..x.ndim() - 1].iter().product();
+    if out.numel() != rows * n {
+        bail!("matmul output buffer {:?} != {rows}x{n}", out.shape());
+    }
+    let xs = x.data_i32();
+    let ws = w.data_i32();
+    let od = out.data_i32_mut();
+    let mut acc: Vec<i64> = vec![0; n];
+    for r in 0..rows {
+        let xrow = &xs[r * k..(r + 1) * k];
+        acc.fill(0);
+        for (kk, &xv) in xrow.iter().enumerate() {
+            if xv == 0 {
+                continue;
+            }
+            let wrow = &ws[kk * n..(kk + 1) * n];
+            for (a, &wv) in acc.iter_mut().zip(wrow) {
+                *a += xv as i64 * wv as i64;
+            }
+        }
+        for (o, &a) in od[r * n..(r + 1) * n].iter_mut().zip(&acc) {
+            *o = store_i32(a, "matmul_i32 accumulate")?;
+        }
+    }
+    Ok(())
+}
+
+/// MVAU on the integer datapath: i64-accumulate matmul, integer bias add
+/// (bias codes live on the accumulator grid), optional fused integer
+/// threshold activation — no float anywhere.
+fn mvau_i32_into(
+    apply_act: bool,
+    out_mul: i64,
+    out_add: i64,
+    inputs: &[&Tensor],
+    out: &mut Tensor,
+) -> Result<()> {
+    matmul_i32_into(inputs[0], inputs[1], out)?;
+    let bias = inputs[2].data_i32();
+    let n = bias.len();
+    {
+        let od = out.data_i32_mut();
+        for (i, v) in od.iter_mut().enumerate() {
+            *v = store_i32(*v as i64 + bias[i % n] as i64, "mvau_i32 bias")?;
+        }
+    }
+    if !apply_act {
+        return Ok(());
+    }
+    let thresholds = inputs
+        .get(3)
+        .ok_or_else(|| anyhow!("MVAU with apply_act needs thresholds input"))?;
+    // The fused activation always sees the NHWC stream layout.
+    threshold_i32_in_place(out, thresholds, ChanLayout::Nhwc, out_mul, out_add)
+}
+
+/// NHWC im2col on codes — zero padding is code 0 (value 0 on every grid).
+fn im2col_i32_into(
+    kernel: [usize; 2],
+    stride: [usize; 2],
+    pad: [usize; 2],
+    inputs: &[&Tensor],
+    out: &mut Tensor,
+) -> Result<()> {
+    let x = inputs[0];
+    let [kh, kw] = kernel;
+    let [sh, sw] = stride;
+    let [ph, pw] = pad;
+    let [n, h, w, c]: [usize; 4] = x
+        .shape()
+        .try_into()
+        .map_err(|_| anyhow!("im2col input must be 4-D"))?;
+    let ho = (h + 2 * ph - kh) / sh + 1;
+    let wo = (w + 2 * pw - kw) / sw + 1;
+    let k = kh * kw * c;
+    if out.numel() != n * ho * wo * k {
+        bail!("im2col output buffer {:?} wrong size", out.shape());
+    }
+    let xs = x.data_i32();
+    let od = out.data_i32_mut();
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let base = ((b * ho + oy) * wo + ox) * k;
+                let mut slot = 0;
+                for dy in 0..kh {
+                    for dx in 0..kw {
+                        let iy = oy * sh + dy;
+                        let ix = ox * sw + dx;
+                        for ch in 0..c {
+                            let v = if iy < ph || iy >= h + ph || ix < pw || ix >= w + pw {
+                                0
+                            } else {
+                                xs[((b * h + (iy - ph)) * w + (ix - pw)) * c + ch]
+                            };
+                            od[base + slot] = v;
+                            slot += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// NHWC 2x2/2 max-pool on codes (monotone dequantization makes the code
+/// max equal the value max).
+fn maxpool_nhwc_i32_into(inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
+    let x = inputs[0];
+    let [n, h, w, c]: [usize; 4] = x
+        .shape()
+        .try_into()
+        .map_err(|_| anyhow!("pool input must be 4-D"))?;
+    let (ho, wo) = (h / 2, w / 2);
+    let xs = x.data_i32();
+    let od = out.data_i32_mut();
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for ch in 0..c {
+                    let mut m = i32::MIN;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            m = m.max(xs[((b * h + oy * 2 + dy) * w + ox * 2 + dx) * c + ch]);
+                        }
+                    }
+                    od[((b * ho + oy) * wo + ox) * c + ch] = m;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Residual add with frac alignment: `(a << s0) + (b << s1)`.
+fn add_streams_i32_into(shift: [u32; 2], inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
+    let (a, b) = (inputs[0], inputs[1]);
+    if a.shape() != b.shape() || out.shape() != a.shape() {
+        bail!(
+            "add_streams: shape mismatch {:?} + {:?} -> {:?}",
+            a.shape(),
+            b.shape(),
+            out.shape()
+        );
+    }
+    let [s0, s1] = shift;
+    let od = out.data_i32_mut();
+    for ((o, &x), &y) in od.iter_mut().zip(a.data_i32()).zip(b.data_i32()) {
+        *o = store_i32(((x as i64) << s0) + ((y as i64) << s1), "add_streams")?;
+    }
+    Ok(())
+}
+
+/// Channelwise/scalar multiply on codes by the odd integer multiplier.
+fn mul_scalar_i32_into(m: i64, data: &Tensor, out: &mut Tensor) -> Result<()> {
+    if out.shape() != data.shape() {
+        bail!(
+            "mul_scalar: out shape {:?} != input {:?}",
+            out.shape(),
+            data.shape()
+        );
+    }
+    let od = out.data_i32_mut();
+    for (o, &x) in od.iter_mut().zip(data.data_i32()) {
+        *o = store_i32(x as i64 * m, "mul_scalar")?;
+    }
+    Ok(())
+}
+
+/// GlobalAccPool on codes: NHWC -> [N, C] cumulative sum, i64 accumulate.
+fn global_acc_pool_i32_into(inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
+    let x = inputs[0];
+    let [n, h, w, c]: [usize; 4] = x
+        .shape()
+        .try_into()
+        .map_err(|_| anyhow!("gap input must be 4-D"))?;
+    if out.numel() != n * c {
+        bail!("gap output buffer {:?} != [{n}, {c}]", out.shape());
+    }
+    let xs = x.data_i32();
+    let mut acc: Vec<i64> = vec![0; n * c];
+    for b in 0..n {
+        for y in 0..h {
+            for xcol in 0..w {
+                for ch in 0..c {
+                    acc[b * c + ch] += xs[((b * h + y) * w + xcol) * c + ch] as i64;
+                }
+            }
+        }
+    }
+    let od = out.data_i32_mut();
+    for (o, &a) in od.iter_mut().zip(&acc) {
+        *o = store_i32(a, "global_acc_pool")?;
+    }
+    Ok(())
+}
+
 fn copy_into(src: &Tensor, out: &mut Tensor) -> Result<()> {
     if src.numel() != out.numel() {
         bail!(
@@ -398,7 +810,15 @@ fn copy_into(src: &Tensor, out: &mut Tensor) -> Result<()> {
             out.shape()
         );
     }
-    out.data_mut().copy_from_slice(src.data());
+    match (src.raw_data(), out.raw_data_mut()) {
+        (TensorData::F32(s), TensorData::F32(d)) => d.copy_from_slice(s),
+        (TensorData::I32(s), TensorData::I32(d)) => d.copy_from_slice(s),
+        _ => bail!(
+            "copy_into: dtype mismatch ({:?} -> {:?})",
+            src.dtype(),
+            out.dtype()
+        ),
+    }
     Ok(())
 }
 
@@ -1046,5 +1466,205 @@ mod tests {
         let feeds = HashMap::new();
         assert!(execute(&g, &feeds).is_err());
         assert!(execute_interpreted(&g, &feeds).is_err());
+    }
+
+    // ------------------------------------------------- integer kernels
+
+    /// Grid tensor + its code twin at the given frac.
+    fn grid_pair(shape: Vec<usize>, frac: i32, seed: u64, signed: bool) -> (Tensor, Tensor) {
+        let mut rng = crate::rng::Rng::new(seed);
+        let span = 1i64 << 6;
+        let codes: Vec<i32> = (0..shape.iter().product::<usize>())
+            .map(|_| {
+                let c = rng.below(span as usize) as i64 - if signed { span / 2 } else { 0 };
+                c as i32
+            })
+            .collect();
+        let scale = (2.0f64).powi(frac);
+        let floats: Vec<f32> = codes.iter().map(|&c| (c as f64 / scale) as f32).collect();
+        (
+            Tensor::new(shape.clone(), floats).unwrap(),
+            Tensor::new_i32(shape, codes).unwrap(),
+        )
+    }
+
+    #[test]
+    fn matmul_i32_matches_f32_on_grid() {
+        let (xf, xi) = grid_pair(vec![4, 6], 2, 31, false);
+        let (wf, wi) = grid_pair(vec![6, 3], 3, 32, true);
+        let mut want = Tensor::zeros(vec![4, 3]);
+        matmul_into(&xf, &wf, &mut want).unwrap();
+        let mut got = Tensor::zeros_i32(vec![4, 3]);
+        matmul_i32_into(&xi, &wi, &mut got).unwrap();
+        let scale = (2.0f64).powi(5); // 2 + 3 frac bits
+        for (c, v) in got.data_i32().iter().zip(want.data()) {
+            assert_eq!((*c as f64 / scale) as f32, *v);
+        }
+    }
+
+    #[test]
+    fn threshold_i32_matches_float_threshold_on_grid() {
+        let frac = 3;
+        let (xf, xi) = grid_pair(vec![1, 2, 2, 4], frac, 33, true);
+        // Arbitrary ascending float thresholds, one row per channel.
+        let tf = Tensor::new(
+            vec![4, 3],
+            vec![
+                -0.3, 0.1, 0.7, -1.0, 0.0, 0.9, -0.55, 0.2, 1.3, -0.05, 0.4, 2.0,
+            ],
+        )
+        .unwrap();
+        let spec = OpSpec::Threshold {
+            layout: ChanLayout::Nhwc,
+            out_scale: 1.0,
+            out_bias: 0.0,
+        };
+        let mut want = Tensor::zeros(vec![1, 2, 2, 4]);
+        execute_spec_into(&spec, &[&xf, &tf], &mut want).unwrap();
+        // Integer thresholds via the ceil rule.
+        let scale = (2.0f64).powi(frac);
+        let tc: Vec<i32> = tf
+            .data()
+            .iter()
+            .map(|&t| (t as f64 * scale).ceil() as i32)
+            .collect();
+        let ti = Tensor::new_i32(vec![4, 3], tc).unwrap();
+        let ispec = IntOpSpec::Threshold {
+            layout: ChanLayout::Nhwc,
+            out_mul: 1,
+            out_add: 0,
+        };
+        let mut got = Tensor::zeros_i32(vec![1, 2, 2, 4]);
+        execute_int_spec_into(&ispec, &[&xi, &ti], &mut got).unwrap();
+        for (c, v) in got.data_i32().iter().zip(want.data()) {
+            assert_eq!(*c as f32, *v);
+        }
+    }
+
+    #[test]
+    fn quantize_threshold_matches_float_multithreshold() {
+        let mut rng = crate::rng::Rng::new(34);
+        let x = Tensor::from_fn(vec![1, 3, 3, 2], |_| rng.next_f32() * 4.0 - 1.0);
+        let t = Tensor::new(vec![1, 3], vec![0.25, 0.75, 1.25]).unwrap();
+        let spec = OpSpec::Threshold {
+            layout: ChanLayout::Nhwc,
+            out_scale: 1.0,
+            out_bias: 0.0,
+        };
+        let mut want = Tensor::zeros(vec![1, 3, 3, 2]);
+        execute_spec_into(&spec, &[&x, &t], &mut want).unwrap();
+        let ispec = IntOpSpec::QuantizeThreshold {
+            layout: ChanLayout::Nhwc,
+            out_mul: 1,
+            out_add: 0,
+        };
+        let mut got = Tensor::zeros_i32(vec![1, 3, 3, 2]);
+        execute_int_spec_into(&ispec, &[&x, &t], &mut got).unwrap();
+        for (c, v) in got.data_i32().iter().zip(want.data()) {
+            assert_eq!(*c as f32, *v);
+        }
+    }
+
+    #[test]
+    fn mvau_i32_matches_f32_mvau_on_grid() {
+        let (xf, xi) = grid_pair(vec![5, 4], 2, 35, false);
+        let (wf, wi) = grid_pair(vec![4, 3], 3, 36, true);
+        // Bias on the accumulator grid (frac 5), thresholds arbitrary.
+        let (bf, bi) = grid_pair(vec![3], 5, 37, true);
+        let tf = Tensor::new(vec![1, 3], vec![-0.5, 0.5, 1.5]).unwrap();
+        let tc: Vec<i32> = tf
+            .data()
+            .iter()
+            .map(|&t| (t as f64 * 32.0).ceil() as i32)
+            .collect();
+        let ti = Tensor::new_i32(vec![1, 3], tc).unwrap();
+
+        let fspec = OpSpec::Mvau {
+            apply_act: true,
+            out_scale: 0.25,
+            out_bias: 0.0,
+        };
+        let mut want = Tensor::zeros(vec![5, 3]);
+        execute_spec_into(&fspec, &[&xf, &wf, &bf, &tf], &mut want).unwrap();
+
+        // out_scale 0.25 = 1 * 2^-2: codes at frac 2 are exactly q.
+        let ispec = IntOpSpec::Mvau {
+            apply_act: true,
+            out_mul: 1,
+            out_add: 0,
+        };
+        let mut got = Tensor::zeros_i32(vec![5, 3]);
+        execute_int_spec_into(&ispec, &[&xi, &wi, &bi, &ti], &mut got).unwrap();
+        for (c, v) in got.data_i32().iter().zip(want.data()) {
+            assert_eq!((*c as f64 / 4.0) as f32, *v);
+        }
+    }
+
+    #[test]
+    fn add_streams_aligns_fracs_by_shifting() {
+        // a at frac 2 (codes x4), b at frac 5 (codes x32): align a by 3.
+        let a = Tensor::new_i32(vec![4], vec![1, -2, 3, 0]).unwrap();
+        let b = Tensor::new_i32(vec![4], vec![8, 8, -16, 40]).unwrap();
+        let spec = IntOpSpec::AddStreams { shift: [3, 0] };
+        let mut out = Tensor::zeros_i32(vec![4]);
+        execute_int_spec_into(&spec, &[&a, &b], &mut out).unwrap();
+        assert_eq!(out.data_i32(), &[16, -8, 8, 40]);
+    }
+
+    #[test]
+    fn mul_scalar_and_gap_i32() {
+        let x = Tensor::new_i32(vec![1, 2, 2, 2], vec![1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        let mut gap = Tensor::zeros_i32(vec![1, 2]);
+        execute_int_spec_into(&IntOpSpec::GlobalAccPool, &[&x], &mut gap).unwrap();
+        assert_eq!(gap.data_i32(), &[16, 20]); // odd/even channel sums
+        let mut scaled = Tensor::zeros_i32(vec![1, 2]);
+        execute_int_spec_into(
+            &IntOpSpec::MulScalar { m: 3, data_input: 0 },
+            &[&gap],
+            &mut scaled,
+        )
+        .unwrap();
+        assert_eq!(scaled.data_i32(), &[48, 60]);
+    }
+
+    #[test]
+    fn int_kernels_reject_overflow() {
+        let x = Tensor::new_i32(vec![1, 2], vec![1 << 20, 1 << 20]).unwrap();
+        let w = Tensor::new_i32(vec![2, 1], vec![1 << 20, 1 << 20]).unwrap();
+        let mut out = Tensor::zeros_i32(vec![1, 1]);
+        let err = matmul_i32_into(&x, &w, &mut out).unwrap_err().to_string();
+        assert!(err.contains("overflows the i32 datapath"), "{err}");
+        let big = Tensor::new_i32(vec![1], vec![i32::MAX]).unwrap();
+        let mut o = Tensor::zeros_i32(vec![1]);
+        assert!(
+            execute_int_spec_into(&IntOpSpec::MulScalar { m: 3, data_input: 0 }, &[&big], &mut o)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn im2col_and_maxpool_i32_match_f32_on_codes() {
+        let (xf, xi) = grid_pair(vec![1, 4, 4, 2], 0, 38, false);
+        let attrs = Attrs::new()
+            .with("kernel", AttrVal::Ints(vec![3, 3]))
+            .with("stride", AttrVal::Ints(vec![1, 1]))
+            .with("pad", AttrVal::Ints(vec![1, 1]));
+        let want = run1(&node("Im2Col", attrs), &[&xf]);
+        let spec = IntOpSpec::Im2Col {
+            kernel: [3, 3],
+            stride: [1, 1],
+            pad: [1, 1],
+        };
+        let mut got = Tensor::zeros_i32(vec![1, 4, 4, 18]);
+        execute_int_spec_into(&spec, &[&xi], &mut got).unwrap();
+        for (c, v) in got.data_i32().iter().zip(want.data()) {
+            assert_eq!(*c as f32, *v);
+        }
+        let want = run1(&node("MaxPoolNHWC", Attrs::new()), &[&xf]);
+        let mut got = Tensor::zeros_i32(vec![1, 2, 2, 2]);
+        execute_int_spec_into(&IntOpSpec::MaxPoolNhwc, &[&xi], &mut got).unwrap();
+        for (c, v) in got.data_i32().iter().zip(want.data()) {
+            assert_eq!(*c as f32, *v);
+        }
     }
 }

@@ -32,6 +32,23 @@
 //! in, slots out.  [`ExecutionPlan::run_batch`] / [`run_with`] amortize
 //! the arena across frames — the serving coordinator's path.
 //!
+//! ## Datapaths
+//!
+//! A plan compiles for one of two [`Datapath`]s.  `F32` is the float
+//! simulation the transform pipeline verifies against.  `BitTrue`
+//! compiles a *fully-lowered, format-annotated* HW graph
+//! ([`crate::transforms::annotate_bit_true_formats`]) into typed slots:
+//! activations are `i32` fixed-point code tensors, initializers are
+//! converted to integer codes ONCE at compile (weights/biases checked
+//! onto their grids, thresholds via the exact `ceil(t * 2^frac)` rule),
+//! and every step dispatches an integer kernel
+//! ([`crate::ops::IntOpSpec`]).  The only steps allowed to touch f32 are
+//! the ingress layout Transpose and the ingress quantizer (float
+//! *comparisons*, no arithmetic); [`ExecutionPlan::kernel_variants`] is
+//! the audit hook tests use to prove it.  Outputs are integer codes with
+//! [`ExecutionPlan::output_frac`] fractional bits — the [`PlanRunner`]
+//! dequantizes once at egress.
+//!
 //! [`run_with`]: ExecutionPlan::run_with
 
 use std::cell::RefCell;
@@ -39,9 +56,44 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::graph::Graph;
+use crate::graph::{Graph, Node};
 use crate::ops;
-use crate::tensor::Tensor;
+use crate::tensor::{DType, Tensor, TensorData};
+
+/// Which arithmetic a compiled plan executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Datapath {
+    /// f32 kernels — the float simulation of the quantized network.
+    #[default]
+    F32,
+    /// Integer kernels over fixed-point codes — bit-exactly what the
+    /// FPGA dataflow accelerator computes.
+    BitTrue,
+}
+
+impl Datapath {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" | "float" => Ok(Datapath::F32),
+            "bit-true" | "bittrue" | "int" => Ok(Datapath::BitTrue),
+            other => bail!("unknown datapath {other:?} (use f32 or bit-true)"),
+        }
+    }
+
+    pub fn describe(self) -> &'static str {
+        match self {
+            Datapath::F32 => "f32",
+            Datapath::BitTrue => "bit-true",
+        }
+    }
+}
+
+/// Kernel selected for one step: the float spec or its integer twin.
+#[derive(Debug, Clone)]
+enum StepKind {
+    F32(ops::OpSpec),
+    Int(ops::IntOpSpec),
+}
 
 /// One compiled step: a node with its IO resolved to dense slot ids and
 /// its attributes resolved to a typed kernel spec.
@@ -51,9 +103,12 @@ struct PlanStep {
     name: String,
     /// Op name (diagnostics + in-place eligibility at compile).
     op: String,
-    /// Kernel parameters pre-resolved from `Attrs` at compile time — the
-    /// run loop never scans an attribute string or clones an attr list.
-    spec: ops::OpSpec,
+    /// Kernel pre-resolved from `Attrs` (and, for the bit-true datapath,
+    /// from the `bt_*` format annotations) at compile time — the run
+    /// loop never scans an attribute string or clones an attr list.
+    kind: StepKind,
+    /// Output element type (i32 codes on the bit-true datapath).
+    out_dtype: DType,
     /// Input slot per node input, in node order.
     inputs: Vec<u32>,
     /// The (single) output slot.
@@ -66,7 +121,7 @@ struct PlanStep {
     release: Vec<u32>,
     /// Steal `inputs[0]`'s buffer and mutate it in place instead of
     /// allocating an output (elementwise/reshape steps whose first input
-    /// dies here).
+    /// dies here; f32 datapath only).
     inplace: bool,
 }
 
@@ -88,8 +143,10 @@ struct FeedSpec {
 pub struct PlanScratch {
     /// Materialized activations, slot-indexed.
     act: Vec<Option<Tensor>>,
-    /// Free buffers returned by dead activations.
-    pool: Vec<Vec<f32>>,
+    /// Free f32 buffers returned by dead activations.
+    pool_f: Vec<Vec<f32>>,
+    /// Free i32 code buffers (the bit-true datapath's arena).
+    pool_i: Vec<Vec<i32>>,
     pub stats: ArenaStats,
 }
 
@@ -107,43 +164,67 @@ pub struct ArenaStats {
     live: usize,
 }
 
+/// Carve a buffer of `numel` elements out of a pool: the smallest pooled
+/// buffer whose capacity fits, else the largest (it grows once and then
+/// fits forever).  The buffer is NOT zeroed — every kernel behind the
+/// into-executors either fully overwrites or zero-fills before
+/// accumulating, so steady-state same-size reuse writes nothing here.
+fn carve<T: Copy + Default>(pool: &mut Vec<Vec<T>>, stats: &mut ArenaStats, numel: usize) -> Vec<T> {
+    if pool.is_empty() {
+        stats.fresh_allocs += 1;
+        return vec![T::default(); numel];
+    }
+    let mut best = 0usize;
+    for i in 1..pool.len() {
+        let (c, b) = (pool[i].capacity(), pool[best].capacity());
+        let better = if c >= numel { b < numel || c < b } else { b < numel && c > b };
+        if better {
+            best = i;
+        }
+    }
+    stats.reuses += 1;
+    let mut buf = pool.swap_remove(best);
+    buf.resize(numel, T::default());
+    buf
+}
+
 impl PlanScratch {
     fn reset(&mut self, n_slots: usize) {
         for slot in self.act.iter_mut() {
             if let Some(t) = slot.take() {
-                self.pool.push(t.into_data());
+                match t.into_raw_data() {
+                    TensorData::F32(v) => self.pool_f.push(v),
+                    TensorData::I32(v) => self.pool_i.push(v),
+                }
             }
         }
         self.act.resize(n_slots, None);
         self.stats.live = 0;
     }
 
-    /// Carve a buffer of `numel(shape)` out of the pool: the smallest
-    /// pooled buffer whose capacity fits, else the largest (it grows
-    /// once and then fits forever).  The buffer is NOT zeroed — every
-    /// kernel behind `ops::execute_node_into` either fully overwrites or
-    /// zero-fills before accumulating, so steady-state same-size reuse
-    /// writes nothing here at all.
+    /// Return a dead activation's buffer to the matching pool.
+    fn recycle(&mut self, t: Tensor) {
+        match t.into_raw_data() {
+            TensorData::F32(v) => self.pool_f.push(v),
+            TensorData::I32(v) => self.pool_i.push(v),
+        }
+    }
+
     fn alloc(&mut self, shape: &[usize]) -> Result<Tensor> {
         let numel: usize = shape.iter().product();
-        let data = if self.pool.is_empty() {
-            self.stats.fresh_allocs += 1;
-            vec![0.0f32; numel]
-        } else {
-            let mut best = 0usize;
-            for i in 1..self.pool.len() {
-                let (c, b) = (self.pool[i].capacity(), self.pool[best].capacity());
-                let better = if c >= numel { b < numel || c < b } else { b < numel && c > b };
-                if better {
-                    best = i;
-                }
-            }
-            self.stats.reuses += 1;
-            let mut buf = self.pool.swap_remove(best);
-            buf.resize(numel, 0.0);
-            buf
-        };
-        Tensor::new(shape.to_vec(), data)
+        Tensor::new(shape.to_vec(), carve(&mut self.pool_f, &mut self.stats, numel))
+    }
+
+    fn alloc_i32(&mut self, shape: &[usize]) -> Result<Tensor> {
+        let numel: usize = shape.iter().product();
+        Tensor::new_i32(shape.to_vec(), carve(&mut self.pool_i, &mut self.stats, numel))
+    }
+
+    fn alloc_typed(&mut self, shape: &[usize], dtype: DType) -> Result<Tensor> {
+        match dtype {
+            DType::F32 => self.alloc(shape),
+            DType::I32 => self.alloc_i32(shape),
+        }
     }
 }
 
@@ -151,6 +232,7 @@ impl PlanScratch {
 #[derive(Debug, Clone)]
 pub struct ExecutionPlan {
     name: String,
+    datapath: Datapath,
     n_slots: usize,
     /// Number of slots produced by steps (activations).
     n_activations: usize,
@@ -158,7 +240,11 @@ pub struct ExecutionPlan {
     feeds: Vec<FeedSpec>,
     /// Graph outputs: (name, slot).
     outputs: Vec<(String, u32)>,
-    /// Initializer tensors bound to their slots at compile time.
+    /// Per-output fractional bits on the bit-true datapath (None for f32
+    /// outputs / the f32 datapath) — the egress dequantization contract.
+    out_fracs: Vec<Option<i32>>,
+    /// Initializer tensors bound to their slots at compile time (already
+    /// converted to i32 codes on the bit-true datapath).
     init: Vec<Option<Tensor>>,
     /// Slot -> tensor name (diagnostics only).
     slot_names: Vec<String>,
@@ -178,10 +264,127 @@ fn intern<'g>(
     s
 }
 
+/// How a bit-true initializer is converted to integer codes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum ConvMode {
+    /// Values must sit exactly on the 2^-frac grid (weights, biases).
+    Exact,
+    /// Thresholds: `ceil(t * 2^frac)` — exact w.r.t. the comparison
+    /// semantics even for off-grid thresholds.
+    Ceil,
+}
+
+/// Convert an f32 initializer to i32 codes at `frac` fractional bits.
+fn quantize_init(t: &Tensor, frac: i32, mode: ConvMode, name: &str) -> Result<Tensor> {
+    let scale = (2.0f64).powi(frac);
+    let mut codes = Vec::with_capacity(t.numel());
+    for &v in t.data() {
+        let exact = v as f64 * scale;
+        let code = match mode {
+            ConvMode::Exact => {
+                let c = exact.round();
+                if (c / scale) as f32 != v {
+                    bail!(
+                        "initializer {name}: value {v} is off the 2^-{frac} grid — requantize the graph before bit-true compilation"
+                    );
+                }
+                c
+            }
+            ConvMode::Ceil => exact.ceil(),
+        };
+        if code > i32::MAX as f64 || code < i32::MIN as f64 {
+            bail!("initializer {name}: code {code} overflows the i32 datapath");
+        }
+        codes.push(code as i32);
+    }
+    Tensor::new_i32(t.shape().to_vec(), codes)
+}
+
+/// Read a `bt_*` annotation, with a helpful error when it is missing.
+fn bt_attr(node: &Node, key: &str) -> Result<i64> {
+    node.attrs.int(key).map_err(|_| {
+        anyhow!(
+            "node {} ({}) lacks bit-true annotation {key} — run transforms::annotate_bit_true_formats on the lowered graph first",
+            node.name,
+            node.op
+        )
+    })
+}
+
+/// Resolve a node into its integer kernel spec plus the initializer
+/// conversions it needs: `(spec, [(input index, frac, mode)])`.
+fn resolve_int_step(node: &Node) -> Result<(ops::IntOpSpec, Vec<(usize, i32, ConvMode)>)> {
+    let mut conv: Vec<(usize, i32, ConvMode)> = Vec::new();
+    let spec = match node.op.as_str() {
+        "Transpose" => ops::IntOpSpec::Transpose {
+            perm: node.attrs.ints("perm")?.iter().map(|&p| p as usize).collect(),
+            float_ingress: node.attrs.int_or("bt_out_f32", 0) != 0,
+        },
+        "MultiThreshold" | "Thresholding" => {
+            let layout = ops::ChanLayout::parse(node.attrs.str_or("data_layout", "NCHW"))?;
+            let out_mul = bt_attr(node, "bt_out_mul")?;
+            let out_add = bt_attr(node, "bt_out_add")?;
+            if node.attrs.int_or("bt_in_f32", 0) != 0 {
+                // Ingress quantizer: float thresholds stay float.
+                ops::IntOpSpec::QuantizeThreshold { layout, out_mul, out_add }
+            } else {
+                conv.push((1, bt_attr(node, "bt_in_frac")? as i32, ConvMode::Ceil));
+                ops::IntOpSpec::Threshold { layout, out_mul, out_add }
+            }
+        }
+        "MVAU" => {
+            let apply_act = node.attrs.int_or("apply_act", 1) != 0;
+            let acc_frac = bt_attr(node, "bt_acc_frac")? as i32;
+            conv.push((1, bt_attr(node, "bt_w_frac")? as i32, ConvMode::Exact));
+            conv.push((2, acc_frac, ConvMode::Exact));
+            if apply_act {
+                conv.push((3, acc_frac, ConvMode::Ceil));
+            }
+            ops::IntOpSpec::Mvau {
+                apply_act,
+                out_mul: bt_attr(node, "bt_out_mul")?,
+                out_add: bt_attr(node, "bt_out_add")?,
+            }
+        }
+        "Im2Col" | "ConvolutionInputGenerator" => ops::IntOpSpec::Im2Col {
+            kernel: ops::attr_pair(node.attrs.ints("kernel")?, "kernel")?,
+            stride: ops::attr_pair(node.attrs.ints("stride")?, "stride")?,
+            pad: ops::attr_pair(node.attrs.ints("pad")?, "pad")?,
+        },
+        "MaxPoolNHWC" | "StreamingMaxPool" => ops::IntOpSpec::MaxPoolNhwc,
+        "Add" | "AddStreams" => ops::IntOpSpec::AddStreams {
+            shift: [
+                bt_attr(node, "bt_shift_a")? as u32,
+                bt_attr(node, "bt_shift_b")? as u32,
+            ],
+        },
+        "Mul" | "ChannelwiseMul" => ops::IntOpSpec::MulScalar {
+            m: bt_attr(node, "bt_mul")?,
+            data_input: bt_attr(node, "bt_data_input")? as usize,
+        },
+        "GlobalAccPool" | "GlobalAccPool_hw" => ops::IntOpSpec::GlobalAccPool,
+        other => bail!("op {other} has no bit-true executor"),
+    };
+    Ok((spec, conv))
+}
+
 impl ExecutionPlan {
-    /// Compile a graph: one toposort, one interning pass, one liveness
-    /// pass.  The graph is not modified and not needed afterwards.
+    /// Compile a graph for the f32 datapath: one toposort, one interning
+    /// pass, one liveness pass.  The graph is not modified and not
+    /// needed afterwards.
     pub fn compile(graph: &Graph) -> Result<Self> {
+        Self::compile_with(graph, Datapath::F32)
+    }
+
+    /// Compile a fully-lowered, format-annotated HW graph for the
+    /// bit-true integer datapath (see the module docs' ingress/egress
+    /// contract).
+    pub fn compile_bit_true(graph: &Graph) -> Result<Self> {
+        Self::compile_with(graph, Datapath::BitTrue)
+    }
+
+    /// Compile for an explicit datapath.
+    pub fn compile_with(graph: &Graph, datapath: Datapath) -> Result<Self> {
         let order = graph.toposort_order()?;
         let mut slot_of: HashMap<&str, u32> = HashMap::new();
         let mut slot_names: Vec<String> = Vec::new();
@@ -203,6 +406,12 @@ impl ExecutionPlan {
         let mut produced_by: Vec<Option<usize>> = vec![None; slot_names.len()];
         // slot -> shape, where known (feeds + annotations + initializers)
         let mut known: Vec<Option<Vec<usize>>> = vec![None; slot_names.len()];
+        // slot -> fractional bits (bit-true datapath egress bookkeeping)
+        let mut slot_frac: Vec<Option<i32>> = vec![None; slot_names.len()];
+        // bit-true initializer conversions: (slot, frac, mode)
+        let mut conv_jobs: Vec<(u32, i32, ConvMode)> = Vec::new();
+        // initializer slots an ingress kernel must keep as raw f32
+        let mut f32_init_slots: Vec<u32> = Vec::new();
         for f in &feeds {
             known[f.slot as usize] = f.shape.clone();
         }
@@ -224,6 +433,7 @@ impl ExecutionPlan {
             let output = intern(&node.outputs[0], &mut slot_of, &mut slot_names);
             produced_by.resize(slot_names.len(), None);
             known.resize(slot_names.len(), None);
+            slot_frac.resize(slot_names.len(), None);
             if produced_by[output as usize].is_some() {
                 bail!("plan: tensor {} produced twice", node.outputs[0]);
             }
@@ -261,12 +471,40 @@ impl ExecutionPlan {
             }
             known[output as usize] = Some(out_shape.clone());
 
-            let spec = ops::OpSpec::resolve(node)
-                .map_err(|e| anyhow!("plan: node {} ({}): {e}", node.name, node.op))?;
+            let (kind, out_dtype) = match datapath {
+                Datapath::F32 => {
+                    let spec = ops::OpSpec::resolve(node)
+                        .map_err(|e| anyhow!("plan: node {} ({}): {e}", node.name, node.op))?;
+                    (StepKind::F32(spec), DType::F32)
+                }
+                Datapath::BitTrue => {
+                    let (spec, conv) = resolve_int_step(node)
+                        .map_err(|e| anyhow!("plan: node {} ({}): {e}", node.name, node.op))?;
+                    for (input_idx, frac, mode) in conv {
+                        let slot = *inputs.get(input_idx).ok_or_else(|| {
+                            anyhow!("plan: node {}: missing input {input_idx}", node.name)
+                        })?;
+                        conv_jobs.push((slot, frac, mode));
+                    }
+                    // The ingress quantizer reads its threshold matrix as
+                    // raw f32 — that slot must never also be converted.
+                    if let ops::IntOpSpec::QuantizeThreshold { .. } = &spec {
+                        f32_init_slots.push(inputs[1]);
+                    }
+                    let dtype = if node.attrs.int_or("bt_out_f32", 0) != 0 {
+                        DType::F32
+                    } else {
+                        slot_frac[output as usize] = Some(bt_attr(node, "bt_out_frac")? as i32);
+                        DType::I32
+                    };
+                    (StepKind::Int(spec), dtype)
+                }
+            };
             steps.push(PlanStep {
                 name: node.name.clone(),
                 op: node.op.clone(),
-                spec,
+                kind,
+                out_dtype,
                 inputs,
                 output,
                 out_shape,
@@ -281,6 +519,7 @@ impl ExecutionPlan {
             let slot = intern(name, &mut slot_of, &mut slot_names);
             produced_by.resize(slot_names.len(), None);
             known.resize(slot_names.len(), None);
+            slot_frac.resize(slot_names.len(), None);
             let resolvable = produced_by[slot as usize].is_some()
                 || graph.inputs.contains(name)
                 || graph.initializers.contains_key(name);
@@ -289,6 +528,10 @@ impl ExecutionPlan {
             }
             outputs.push((name.clone(), slot));
         }
+        let out_fracs: Vec<Option<i32>> = outputs
+            .iter()
+            .map(|(_, slot)| slot_frac[*slot as usize])
+            .collect();
 
         let n_slots = slot_names.len();
 
@@ -297,6 +540,47 @@ impl ExecutionPlan {
         for (name, tensor) in &graph.initializers {
             if let Some(&slot) = slot_of.get(name.as_str()) {
                 init[slot as usize] = Some(tensor.clone());
+            }
+        }
+
+        // Bit-true datapath: convert the initializers integer kernels
+        // read — weights/biases exactly onto their grids, thresholds via
+        // the ceil rule — ONCE, into the plan's private copies (the graph
+        // keeps its f32 initializers for folding/BRAM modeling).
+        if datapath == Datapath::BitTrue {
+            let mut converted: HashMap<u32, (i32, ConvMode)> = HashMap::new();
+            for (slot, frac, mode) in conv_jobs {
+                // Shared with an f32-retaining ingress consumer: reject at
+                // compile (the run loop would otherwise hit the typed
+                // accessor panic instead of a Result error).
+                if f32_init_slots.contains(&slot) {
+                    bail!(
+                        "plan: initializer {} is read as raw f32 by an ingress quantizer and as integer codes by another step — duplicate the tensor in the graph",
+                        slot_names[slot as usize]
+                    );
+                }
+                if let Some(&(prev_frac, prev_mode)) = converted.get(&slot) {
+                    // A second consumer must agree on frac AND rounding
+                    // mode — a threshold-style Ceil conversion silently
+                    // standing in for an Exact weight/bias grid check
+                    // (or vice versa) would corrupt codes, not error.
+                    if prev_frac != frac || prev_mode != mode {
+                        bail!(
+                            "plan: initializer {} shared across incompatible bit-true conversions ({prev_frac} frac {prev_mode:?} vs {frac} frac {mode:?})",
+                            slot_names[slot as usize]
+                        );
+                    }
+                    continue;
+                }
+                let src = init[slot as usize].as_ref().ok_or_else(|| {
+                    anyhow!(
+                        "plan: bit-true conversion target {} is not an initializer",
+                        slot_names[slot as usize]
+                    )
+                })?;
+                init[slot as usize] =
+                    Some(quantize_init(src, frac, mode, &slot_names[slot as usize])?);
+                converted.insert(slot, (frac, mode));
             }
         }
 
@@ -318,22 +602,28 @@ impl ExecutionPlan {
 
         // In-place marking: elementwise/reshape steps whose first input is
         // an activation that dies right here (and is not read twice).
-        for (si, step) in steps.iter_mut().enumerate() {
-            if !ops::supports_inplace(&step.op) || step.inputs.is_empty() {
-                continue;
+        // f32 datapath only — integer steps always run into-buffer; the
+        // typed arena still recycles everything.
+        if datapath == Datapath::F32 {
+            for (si, step) in steps.iter_mut().enumerate() {
+                if !ops::supports_inplace(&step.op) || step.inputs.is_empty() {
+                    continue;
+                }
+                let in0 = step.inputs[0];
+                let eligible = produced_by[in0 as usize].is_some()
+                    && last_use[in0 as usize] == si
+                    && !step.inputs[1..].contains(&in0)
+                    && match step.op.as_str() {
+                        "Reshape" => known[in0 as usize]
+                            .as_ref()
+                            .map(|s| {
+                                s.iter().product::<usize>() == step.out_shape.iter().product()
+                            })
+                            .unwrap_or(false),
+                        _ => known[in0 as usize].as_deref() == Some(step.out_shape.as_slice()),
+                    };
+                step.inplace = eligible;
             }
-            let in0 = step.inputs[0];
-            let eligible = produced_by[in0 as usize].is_some()
-                && last_use[in0 as usize] == si
-                && !step.inputs[1..].contains(&in0)
-                && match step.op.as_str() {
-                    "Reshape" => known[in0 as usize]
-                        .as_ref()
-                        .map(|s| s.iter().product::<usize>() == step.out_shape.iter().product())
-                        .unwrap_or(false),
-                    _ => known[in0 as usize].as_deref() == Some(step.out_shape.as_slice()),
-                };
-            step.inplace = eligible;
         }
 
         // Release lists: after step si, recycle activations whose last use
@@ -353,11 +643,13 @@ impl ExecutionPlan {
         let n_activations = produced_by.iter().filter(|p| p.is_some()).count();
         Ok(Self {
             name: graph.name.clone(),
+            datapath,
             n_slots,
             n_activations,
             steps,
             feeds,
             outputs,
+            out_fracs,
             init,
             slot_names,
         })
@@ -365,6 +657,38 @@ impl ExecutionPlan {
 
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// Which arithmetic this plan executes.
+    pub fn datapath(&self) -> Datapath {
+        self.datapath
+    }
+
+    /// Fractional bits of a named graph output on the bit-true datapath
+    /// (None for f32 outputs / the f32 datapath) — dequantize egress
+    /// codes as `code * 2^-frac`.
+    pub fn output_frac(&self, name: &str) -> Option<i32> {
+        self.outputs
+            .iter()
+            .position(|(n, _)| n == name)
+            .and_then(|i| self.out_fracs[i])
+    }
+
+    /// `(op, kernel variant)` per step — the bit-true audit hook: a
+    /// bit-true plan must contain no "f32" variant, exactly one
+    /// "ingress-quant" and at most one "ingress-f32" layout conversion;
+    /// everything else is "int".
+    pub fn kernel_variants(&self) -> Vec<(String, &'static str)> {
+        self.steps
+            .iter()
+            .map(|s| {
+                let v = match &s.kind {
+                    StepKind::F32(_) => "f32",
+                    StepKind::Int(spec) => spec.variant(),
+                };
+                (s.op.clone(), v)
+            })
+            .collect()
     }
 
     pub fn num_steps(&self) -> usize {
@@ -454,6 +778,9 @@ impl ExecutionPlan {
 
         for step in &self.steps {
             if step.inplace {
+                let StepKind::F32(spec) = &step.kind else {
+                    bail!("plan bug: in-place integer step {}", step.name);
+                };
                 let mut buf = scratch.act[step.inputs[0] as usize].take().ok_or_else(|| {
                     anyhow!(
                         "plan bug: in-place input of {} not materialized",
@@ -465,23 +792,25 @@ impl ExecutionPlan {
                         .iter()
                         .map(|&s| self.resolve(s, &scratch.act, &ext))
                         .collect::<Result<_>>()?;
-                    ops::execute_spec_inplace(&step.spec, &mut buf, &rest).map_err(|e| {
+                    ops::execute_spec_inplace(spec, &mut buf, &rest).map_err(|e| {
                         anyhow!("executing {} ({}): {e}", step.name, step.op)
                     })?;
                 }
                 scratch.stats.inplace_steps += 1;
                 scratch.act[step.output as usize] = Some(buf);
             } else {
-                let mut out = scratch.alloc(&step.out_shape)?;
+                let mut out = scratch.alloc_typed(&step.out_shape, step.out_dtype)?;
                 {
                     let inputs: Vec<&Tensor> = step
                         .inputs
                         .iter()
                         .map(|&s| self.resolve(s, &scratch.act, &ext))
                         .collect::<Result<_>>()?;
-                    ops::execute_spec_into(&step.spec, &inputs, &mut out).map_err(|e| {
-                        anyhow!("executing {} ({}): {e}", step.name, step.op)
-                    })?;
+                    match &step.kind {
+                        StepKind::F32(spec) => ops::execute_spec_into(spec, &inputs, &mut out),
+                        StepKind::Int(spec) => ops::execute_int_spec_into(spec, &inputs, &mut out),
+                    }
+                    .map_err(|e| anyhow!("executing {} ({}): {e}", step.name, step.op))?;
                 }
                 scratch.stats.live += 1;
                 scratch.stats.peak_live = scratch.stats.peak_live.max(scratch.stats.live);
@@ -490,7 +819,7 @@ impl ExecutionPlan {
             for &dead in &step.release {
                 if let Some(t) = scratch.act[dead as usize].take() {
                     scratch.stats.live -= 1;
-                    scratch.pool.push(t.into_data());
+                    scratch.recycle(t);
                 }
             }
         }
@@ -523,6 +852,11 @@ impl ExecutionPlan {
 /// contract as the PJRT `BackboneRunner`), converts to the graph's NCHW
 /// import layout, and runs the plan once per frame with a shared arena —
 /// the batch amortizes plan lookup and buffer allocation.
+///
+/// On the bit-true datapath ([`PlanRunner::new_bit_true`]) the plan
+/// computes integer codes end to end; this runner dequantizes ONLY the
+/// final feature vector (`code * 2^-frac`) at egress, so the features it
+/// serves are exactly what the FPGA would produce.
 pub struct PlanRunner {
     plan: ExecutionPlan,
     input: String,
@@ -530,13 +864,25 @@ pub struct PlanRunner {
     img: usize,
     feature_dim: usize,
     batch: usize,
+    /// Egress dequantization scale (bit-true datapath only).
+    out_scale: Option<f64>,
     scratch: RefCell<PlanScratch>,
 }
 
 impl PlanRunner {
     /// Compile `graph` (an NCHW import with input [1, 3, img, img] and
-    /// output [1, feat]) into a batched extractor.
+    /// output [1, feat]) into a batched f32 extractor.
     pub fn new(graph: &Graph, batch: usize) -> Result<Self> {
+        Self::with_datapath(graph, batch, Datapath::F32)
+    }
+
+    /// Compile a *lowered, annotated* HW graph into a bit-true integer
+    /// extractor (see [`crate::build::lower_bit_true`]).
+    pub fn new_bit_true(graph: &Graph, batch: usize) -> Result<Self> {
+        Self::with_datapath(graph, batch, Datapath::BitTrue)
+    }
+
+    pub fn with_datapath(graph: &Graph, batch: usize, datapath: Datapath) -> Result<Self> {
         if graph.inputs.len() != 1 || graph.outputs.len() != 1 {
             bail!(
                 "PlanRunner needs a single-input single-output graph, got {} in / {} out",
@@ -555,15 +901,31 @@ impl PlanRunner {
         let feature_dim = *out_shape
             .last()
             .ok_or_else(|| anyhow!("scalar graph output"))?;
+        let plan = ExecutionPlan::compile_with(graph, datapath)?;
+        let out_scale = match datapath {
+            Datapath::F32 => None,
+            Datapath::BitTrue => {
+                let frac = plan.output_frac(&graph.outputs[0]).ok_or_else(|| {
+                    anyhow!("bit-true plan has no egress format for {}", graph.outputs[0])
+                })?;
+                Some((2.0f64).powi(frac))
+            }
+        };
         Ok(Self {
-            plan: ExecutionPlan::compile(graph)?,
+            plan,
             input: graph.inputs[0].clone(),
             output: graph.outputs[0].clone(),
             img: in_shape[2],
             feature_dim,
             batch: batch.max(1),
+            out_scale,
             scratch: RefCell::new(PlanScratch::default()),
         })
+    }
+
+    /// Which arithmetic the backbone runs.
+    pub fn datapath(&self) -> Datapath {
+        self.plan.datapath()
     }
 
     /// Arena statistics accumulated over every extract call so far.
@@ -597,7 +959,16 @@ impl PlanRunner {
             let t = out
                 .remove(&self.output)
                 .ok_or_else(|| anyhow!("plan produced no {}", self.output))?;
-            feats.extend_from_slice(t.data());
+            match t.raw_data() {
+                TensorData::F32(v) => feats.extend_from_slice(v),
+                TensorData::I32(codes) => {
+                    // Egress: the ONLY dequantization on the bit-true path.
+                    let scale = self
+                        .out_scale
+                        .ok_or_else(|| anyhow!("integer output from an f32 plan"))?;
+                    feats.extend(codes.iter().map(|&c| (c as f64 / scale) as f32));
+                }
+            }
         }
         Ok(feats)
     }
@@ -797,6 +1168,124 @@ mod tests {
         let mut g = chain_graph();
         g.outputs = vec!["ghost".into()];
         assert!(ExecutionPlan::compile(&g).is_err());
+    }
+
+    fn bt_threshold_graph() -> Graph {
+        // x (f32 NHWC) -> MultiThreshold(out_scale 0.25) -> q1 ->
+        // MultiThreshold(out_scale 0.5) -> y: ingress quantization, one
+        // steady-state integer threshold, and an integer egress format.
+        let mut g = Graph::new("bt_chain");
+        g.inputs = vec!["x".into()];
+        g.outputs = vec!["y".into()];
+        g.shapes.insert("x".into(), vec![1, 2, 2, 3]);
+        g.shapes.insert("t".into(), vec![1, 3]);
+        g.shapes.insert("t2".into(), vec![1, 2]);
+        g.shapes.insert("q1".into(), vec![1, 2, 2, 3]);
+        g.shapes.insert("y".into(), vec![1, 2, 2, 3]);
+        g.initializers.insert(
+            "t".into(),
+            Tensor::new(vec![1, 3], vec![0.125, 0.375, 0.625]).unwrap(),
+        );
+        g.initializers
+            .insert("t2".into(), Tensor::new(vec![1, 2], vec![0.3, 0.8]).unwrap());
+        g.nodes.push(
+            Node::new(
+                "MultiThreshold",
+                "q",
+                vec!["x".into(), "t".into()],
+                vec!["q1".into()],
+            )
+            .with_attrs(
+                Attrs::new()
+                    .with("data_layout", AttrVal::Str("NHWC".into()))
+                    .with("out_scale", AttrVal::Float(0.25)),
+            ),
+        );
+        g.nodes.push(
+            Node::new(
+                "MultiThreshold",
+                "q2",
+                vec!["q1".into(), "t2".into()],
+                vec!["y".into()],
+            )
+            .with_attrs(
+                Attrs::new()
+                    .with("data_layout", AttrVal::Str("NHWC".into()))
+                    .with("out_scale", AttrVal::Float(0.5)),
+            ),
+        );
+        g
+    }
+
+    #[test]
+    fn bit_true_chain_quantizes_at_ingress_and_matches_f32() {
+        let mut g = bt_threshold_graph();
+        crate::transforms::annotate_bit_true_formats(&mut g).unwrap();
+        let f32_plan = ExecutionPlan::compile(&g).unwrap();
+        let int_plan = ExecutionPlan::compile_bit_true(&g).unwrap();
+        assert_eq!(f32_plan.datapath(), Datapath::F32);
+        assert_eq!(int_plan.datapath(), Datapath::BitTrue);
+        assert_eq!(int_plan.output_frac("y"), Some(1)); // out_scale 2^-1
+        assert_eq!(f32_plan.output_frac("y"), None);
+
+        let mut feeds = HashMap::new();
+        feeds.insert(
+            "x".to_string(),
+            Tensor::from_fn(vec![1, 2, 2, 3], |i| i as f32 * 0.09),
+        );
+        let want = f32_plan.run(&feeds).unwrap();
+        let got = int_plan.run(&feeds).unwrap();
+        let codes = got["y"].data_i32();
+        assert_eq!(codes.len(), want["y"].numel());
+        for (c, v) in codes.iter().zip(want["y"].data()) {
+            assert_eq!((*c as f64 / 2.0) as f32, *v);
+        }
+        // Ingress quantizer + one steady-state integer threshold — no
+        // "f32" kernel anywhere.
+        let variants = int_plan.kernel_variants();
+        assert_eq!(
+            variants,
+            vec![
+                ("MultiThreshold".to_string(), "ingress-quant"),
+                ("MultiThreshold".to_string(), "int"),
+            ]
+        );
+    }
+
+    #[test]
+    fn bit_true_compile_requires_annotations() {
+        let g = bt_threshold_graph();
+        let err = ExecutionPlan::compile_bit_true(&g).unwrap_err().to_string();
+        assert!(err.contains("bit-true annotation"), "{err}");
+    }
+
+    #[test]
+    fn bit_true_arena_recycles_i32_buffers() {
+        let mut g = bt_threshold_graph();
+        crate::transforms::annotate_bit_true_formats(&mut g).unwrap();
+        let plan = ExecutionPlan::compile_bit_true(&g).unwrap();
+        let mut feeds = HashMap::new();
+        feeds.insert("x".to_string(), Tensor::from_fn(vec![1, 2, 2, 3], |_| 0.3));
+        let mut scratch = PlanScratch::default();
+        for _ in 0..4 {
+            let out = plan.run_with(&feeds, &mut scratch).unwrap();
+            assert!(out["y"].is_i32());
+        }
+        assert!(
+            scratch.stats.reuses >= 3,
+            "i32 arena not recycled: {:?}",
+            scratch.stats
+        );
+    }
+
+    #[test]
+    fn datapath_parse_round_trips() {
+        assert_eq!(Datapath::parse("f32").unwrap(), Datapath::F32);
+        assert_eq!(Datapath::parse("bit-true").unwrap(), Datapath::BitTrue);
+        assert_eq!(Datapath::parse("bittrue").unwrap(), Datapath::BitTrue);
+        assert!(Datapath::parse("fp64").is_err());
+        assert_eq!(Datapath::BitTrue.describe(), "bit-true");
+        assert_eq!(Datapath::default(), Datapath::F32);
     }
 
     #[test]

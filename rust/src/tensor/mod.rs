@@ -1,16 +1,58 @@
-//! Small dense f32 tensor with shape/stride utilities.
+//! Small dense tensor with shape/stride utilities and a typed payload.
 //!
 //! Deliberately minimal: the graph executor and hardware models need
 //! row-major storage, reshape/transpose, NCHW<->NHWC conversion and
 //! elementwise access — not a full ndarray library.
+//!
+//! The payload is a [`TensorData`] enum: `F32` for the float simulation
+//! path and `I32` for the bit-true integer datapath (quantized codes, the
+//! numbers the FPGA actually streams).  The f32 accessors keep their old
+//! signatures — `data()` / `data_mut()` / `into_data()` panic on an i32
+//! tensor, which is exactly the "no f32 arithmetic in integer steps"
+//! guard the bit-true plan relies on: a float kernel touching a code
+//! tensor is a compile bug, not a silent dequantization.
 
 use anyhow::{bail, Result};
 
-/// Row-major dense f32 tensor.
+/// Element type of a [`Tensor`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// The typed payload: float values or integer fixed-point codes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+}
+
+/// Row-major dense tensor (f32 values or i32 fixed-point codes).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
     shape: Vec<usize>,
-    data: Vec<f32>,
+    data: TensorData,
 }
 
 impl Tensor {
@@ -19,14 +61,37 @@ impl Tensor {
         if numel != data.len() {
             bail!("shape {shape:?} wants {numel} elems, got {}", data.len());
         }
-        Ok(Self { shape, data })
+        Ok(Self {
+            shape,
+            data: TensorData::F32(data),
+        })
+    }
+
+    /// Integer-code tensor (the bit-true datapath's activation type).
+    pub fn new_i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            bail!("shape {shape:?} wants {numel} elems, got {}", data.len());
+        }
+        Ok(Self {
+            shape,
+            data: TensorData::I32(data),
+        })
     }
 
     pub fn zeros(shape: Vec<usize>) -> Self {
         let numel = shape.iter().product();
         Self {
             shape,
-            data: vec![0.0; numel],
+            data: TensorData::F32(vec![0.0; numel]),
+        }
+    }
+
+    pub fn zeros_i32(shape: Vec<usize>) -> Self {
+        let numel = shape.iter().product();
+        Self {
+            shape,
+            data: TensorData::I32(vec![0; numel]),
         }
     }
 
@@ -34,14 +99,14 @@ impl Tensor {
         let numel = shape.iter().product();
         Self {
             shape,
-            data: vec![value; numel],
+            data: TensorData::F32(vec![value; numel]),
         }
     }
 
     pub fn scalar(value: f32) -> Self {
         Self {
             shape: vec![],
-            data: vec![value],
+            data: TensorData::F32(vec![value]),
         }
     }
 
@@ -49,7 +114,15 @@ impl Tensor {
         let numel: usize = shape.iter().product();
         Self {
             shape,
-            data: (0..numel).map(|i| f(i)).collect(),
+            data: TensorData::F32((0..numel).map(|i| f(i)).collect()),
+        }
+    }
+
+    pub fn from_fn_i32(shape: Vec<usize>, mut f: impl FnMut(usize) -> i32) -> Self {
+        let numel: usize = shape.iter().product();
+        Self {
+            shape,
+            data: TensorData::I32((0..numel).map(|i| f(i)).collect()),
         }
     }
 
@@ -65,15 +138,69 @@ impl Tensor {
         self.data.len()
     }
 
+    pub fn dtype(&self) -> DType {
+        self.data.dtype()
+    }
+
+    pub fn is_i32(&self) -> bool {
+        self.dtype() == DType::I32
+    }
+
+    /// f32 payload.  Panics on an i32 tensor — a float kernel reading
+    /// integer codes is a plan-compilation bug, never a legal cast.
     pub fn data(&self) -> &[f32] {
-        &self.data
+        match &self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("Tensor::data(): f32 access on an i32 code tensor"),
+        }
     }
 
     pub fn data_mut(&mut self) -> &mut [f32] {
-        &mut self.data
+        match &mut self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("Tensor::data_mut(): f32 access on an i32 code tensor"),
+        }
     }
 
     pub fn into_data(self) -> Vec<f32> {
+        match self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("Tensor::into_data(): f32 access on an i32 code tensor"),
+        }
+    }
+
+    /// i32 code payload.  Panics on an f32 tensor (the dual guard).
+    pub fn data_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            TensorData::F32(_) => panic!("Tensor::data_i32(): i32 access on an f32 tensor"),
+        }
+    }
+
+    pub fn data_i32_mut(&mut self) -> &mut [i32] {
+        match &mut self.data {
+            TensorData::I32(v) => v,
+            TensorData::F32(_) => panic!("Tensor::data_i32_mut(): i32 access on an f32 tensor"),
+        }
+    }
+
+    pub fn into_data_i32(self) -> Vec<i32> {
+        match self.data {
+            TensorData::I32(v) => v,
+            TensorData::F32(_) => panic!("Tensor::into_data_i32(): i32 access on an f32 tensor"),
+        }
+    }
+
+    /// Dtype-agnostic payload access (kernel dispatch and the arena).
+    pub fn raw_data(&self) -> &TensorData {
+        &self.data
+    }
+
+    pub fn raw_data_mut(&mut self) -> &mut TensorData {
+        &mut self.data
+    }
+
+    pub fn into_raw_data(self) -> TensorData {
         self.data
     }
 
@@ -119,7 +246,7 @@ impl Tensor {
             );
             off += ix * strides[i];
         }
-        self.data[off]
+        self.data()[off]
     }
 
     pub fn set(&mut self, idx: &[usize], v: f32) {
@@ -140,13 +267,17 @@ impl Tensor {
             );
             off += ix * strides[i];
         }
-        self.data[off] = v;
+        self.data_mut()[off] = v;
     }
 
     /// Generalized transpose: output axis i takes input axis `perm[i]`.
+    /// Dtype-preserving (the bit-true plan transposes code tensors too).
     pub fn transpose(&self, perm: &[usize]) -> Result<Self> {
         let out_shape: Vec<usize> = self.transposed_shape(perm)?;
-        let mut out = Tensor::new(out_shape, vec![0.0f32; self.data.len()])?;
+        let mut out = match self.data {
+            TensorData::F32(_) => Tensor::zeros(out_shape),
+            TensorData::I32(_) => Tensor::zeros_i32(out_shape),
+        };
         self.transpose_into(perm, &mut out)?;
         Ok(out)
     }
@@ -167,7 +298,7 @@ impl Tensor {
     }
 
     /// Transpose into a caller-provided buffer (the plan engine's path;
-    /// `out` must already have the permuted shape).
+    /// `out` must already have the permuted shape and the same dtype).
     pub fn transpose_into(&self, perm: &[usize], out: &mut Tensor) -> Result<()> {
         let out_shape = self.transposed_shape(perm)?;
         if out.shape != out_shape {
@@ -178,21 +309,18 @@ impl Tensor {
         }
         let in_strides = self.strides();
         let out_strides = strides_of(&out_shape);
-        // Iterate output linearly; map to input offset.
-        let rank = perm.len();
-        let mut idx = vec![0usize; rank];
-        for (o, slot) in out.data.iter_mut().enumerate() {
-            // Decompose o into output index.
-            let mut rem = o;
-            for d in 0..rank {
-                idx[d] = rem / out_strides[d];
-                rem %= out_strides[d];
+        match (&self.data, &mut out.data) {
+            (TensorData::F32(src), TensorData::F32(dst)) => {
+                transpose_copy(src, dst, &in_strides, &out_strides, perm)
             }
-            let mut in_off = 0;
-            for d in 0..rank {
-                in_off += idx[d] * in_strides[perm[d]];
+            (TensorData::I32(src), TensorData::I32(dst)) => {
+                transpose_copy(src, dst, &in_strides, &out_strides, perm)
             }
-            *slot = self.data[in_off];
+            _ => bail!(
+                "transpose_into: dtype mismatch ({:?} -> {:?})",
+                self.dtype(),
+                out.dtype()
+            ),
         }
         Ok(())
     }
@@ -210,11 +338,11 @@ impl Tensor {
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Self {
         Self {
             shape: self.shape.clone(),
-            data: self.data.iter().map(|&x| f(x)).collect(),
+            data: TensorData::F32(self.data().iter().map(|&x| f(x)).collect()),
         }
     }
 
-    /// Elementwise binary op with numpy-style broadcasting.
+    /// Elementwise binary op with numpy-style broadcasting (f32 only).
     pub fn broadcast_with(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Self> {
         let out_shape = broadcast_shape(&self.shape, &other.shape)?;
         let numel: usize = out_shape.iter().product();
@@ -239,17 +367,20 @@ impl Tensor {
                 out.shape
             );
         }
+        let a_data = self.data();
+        let b_data = other.data();
+        let od = out.data_mut();
         // Fast paths: same-shape zip and scalar rhs cover almost every op
         // on the request path (bias adds, residual adds, scale muls).
-        if other.numel() == 1 {
-            let b = other.data[0];
-            for (slot, &a) in out.data.iter_mut().zip(&self.data) {
+        if b_data.len() == 1 {
+            let b = b_data[0];
+            for (slot, &a) in od.iter_mut().zip(a_data) {
                 *slot = f(a, b);
             }
             return Ok(());
         }
         if self.shape == other.shape {
-            for ((slot, &a), &b) in out.data.iter_mut().zip(&self.data).zip(&other.data) {
+            for ((slot, &a), &b) in od.iter_mut().zip(a_data).zip(b_data) {
                 *slot = f(a, b);
             }
             return Ok(());
@@ -261,7 +392,7 @@ impl Tensor {
         let b_str = broadcast_strides(&b_shape, &strides_of(&b_shape));
         let out_strides = strides_of(&out_shape);
         let mut idx = vec![0usize; rank];
-        for (o, slot) in out.data.iter_mut().enumerate() {
+        for (o, slot) in od.iter_mut().enumerate() {
             let mut rem = o;
             for d in 0..rank {
                 idx[d] = rem / out_strides[d];
@@ -273,7 +404,7 @@ impl Tensor {
                 ao += if a_shape[d] == 1 { 0 } else { idx[d] } * a_str[d];
                 bo += if b_shape[d] == 1 { 0 } else { idx[d] } * b_str[d];
             }
-            *slot = f(self.data[ao], other.data[bo]);
+            *slot = f(a_data[ao], b_data[bo]);
         }
         Ok(())
     }
@@ -294,15 +425,16 @@ impl Tensor {
                 self.shape
             );
         }
-        if other.numel() == 1 {
-            let b = other.data[0];
-            for a in self.data.iter_mut() {
+        let b_data = other.data();
+        if b_data.len() == 1 {
+            let b = b_data[0];
+            for a in self.data_mut().iter_mut() {
                 *a = f(*a, b);
             }
             return Ok(());
         }
         if self.shape == other.shape {
-            for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            for (a, &b) in self.data_mut().iter_mut().zip(b_data) {
                 *a = f(*a, b);
             }
             return Ok(());
@@ -312,7 +444,7 @@ impl Tensor {
         let b_str = broadcast_strides(&b_shape, &strides_of(&b_shape));
         let out_strides = strides_of(&self.shape);
         let mut idx = vec![0usize; rank];
-        for (o, a) in self.data.iter_mut().enumerate() {
+        for (o, a) in self.data_mut().iter_mut().enumerate() {
             let mut rem = o;
             for d in 0..rank {
                 idx[d] = rem / out_strides[d];
@@ -322,22 +454,46 @@ impl Tensor {
             for d in 0..rank {
                 bo += if b_shape[d] == 1 { 0 } else { idx[d] } * b_str[d];
             }
-            *a = f(*a, other.data[bo]);
+            *a = f(*a, b_data[bo]);
         }
         Ok(())
     }
 
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
         assert_eq!(self.shape, other.shape);
-        self.data
+        self.data()
             .iter()
-            .zip(&other.data)
+            .zip(other.data())
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
     }
 
     pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {
         self.shape == other.shape && self.max_abs_diff(other) <= atol
+    }
+}
+
+fn transpose_copy<T: Copy>(
+    src: &[T],
+    dst: &mut [T],
+    in_strides: &[usize],
+    out_strides: &[usize],
+    perm: &[usize],
+) {
+    let rank = perm.len();
+    let mut idx = vec![0usize; rank];
+    for (o, slot) in dst.iter_mut().enumerate() {
+        // Decompose o into output index.
+        let mut rem = o;
+        for d in 0..rank {
+            idx[d] = rem / out_strides[d];
+            rem %= out_strides[d];
+        }
+        let mut in_off = 0;
+        for d in 0..rank {
+            in_off += idx[d] * in_strides[perm[d]];
+        }
+        *slot = src[in_off];
     }
 }
 
@@ -386,6 +542,8 @@ mod tests {
     fn new_validates_element_count() {
         assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
         assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::new_i32(vec![2, 3], vec![0; 6]).is_ok());
+        assert!(Tensor::new_i32(vec![2, 3], vec![0; 5]).is_err());
     }
 
     #[test]
@@ -495,5 +653,63 @@ mod tests {
         let r = t.clone().reshape(vec![3, 2]).unwrap();
         assert_eq!(r.data(), t.data());
         assert!(t.reshape(vec![4, 2]).is_err());
+    }
+
+    // -------------------------------------------------- typed payloads
+
+    #[test]
+    fn i32_tensor_round_trip_and_dtype() {
+        let t = Tensor::new_i32(vec![2, 2], vec![1, -2, 3, -4]).unwrap();
+        assert_eq!(t.dtype(), DType::I32);
+        assert!(t.is_i32());
+        assert_eq!(t.data_i32(), &[1, -2, 3, -4]);
+        assert_eq!(t.numel(), 4);
+        let z = Tensor::zeros_i32(vec![3]);
+        assert_eq!(z.data_i32(), &[0, 0, 0]);
+        assert_eq!(t.into_data_i32(), vec![1, -2, 3, -4]);
+    }
+
+    #[test]
+    fn i32_transpose_matches_f32_transpose() {
+        let f = Tensor::from_fn(vec![2, 3, 4], |i| i as f32);
+        let i = Tensor::from_fn_i32(vec![2, 3, 4], |i| i as i32);
+        let ft = f.transpose(&[2, 0, 1]).unwrap();
+        let it = i.transpose(&[2, 0, 1]).unwrap();
+        assert_eq!(it.shape(), ft.shape());
+        for (a, b) in it.data_i32().iter().zip(ft.data()) {
+            assert_eq!(*a as f32, *b);
+        }
+    }
+
+    #[test]
+    fn transpose_into_rejects_dtype_mismatch() {
+        let i = Tensor::from_fn_i32(vec![2, 3], |i| i as i32);
+        let mut f_out = Tensor::zeros(vec![3, 2]);
+        assert!(i.transpose_into(&[1, 0], &mut f_out).is_err());
+        let mut i_out = Tensor::zeros_i32(vec![3, 2]);
+        i.transpose_into(&[1, 0], &mut i_out).unwrap();
+        assert_eq!(i_out.data_i32(), &[0, 3, 1, 4, 2, 5]);
+    }
+
+    #[test]
+    fn i32_reshape_is_metadata_only() {
+        let mut t = Tensor::from_fn_i32(vec![2, 3], |i| i as i32);
+        let ptr = t.data_i32().as_ptr();
+        t.reshape_in_place(vec![6]).unwrap();
+        assert_eq!(t.data_i32().as_ptr(), ptr);
+    }
+
+    #[test]
+    #[should_panic(expected = "f32 access on an i32 code tensor")]
+    fn f32_access_on_i32_tensor_panics() {
+        let t = Tensor::zeros_i32(vec![2]);
+        let _ = t.data();
+    }
+
+    #[test]
+    #[should_panic(expected = "i32 access on an f32 tensor")]
+    fn i32_access_on_f32_tensor_panics() {
+        let t = Tensor::zeros(vec![2]);
+        let _ = t.data_i32();
     }
 }

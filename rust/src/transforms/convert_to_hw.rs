@@ -15,10 +15,14 @@
 //! Folding attributes (PE/SIMD) are initialized to 1 and later set by the
 //! folding search in [`crate::build`].
 
-use anyhow::Result;
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
 
 use super::Transform;
+use crate::fixedpoint::pow2_decompose;
 use crate::graph::{AttrVal, Graph, Node};
+use crate::tensor::Tensor;
 
 pub struct ConvertToHwLayers;
 
@@ -210,6 +214,286 @@ pub fn is_fully_hw(graph: &Graph) -> bool {
         .all(|n| HW_OPS.contains(&n.op.as_str()) || n.op == "Transpose")
 }
 
+// ---------------------------------------------------------------------------
+// Bit-true format annotation
+// ---------------------------------------------------------------------------
+
+/// Propagated per-tensor format during annotation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum BtFmt {
+    /// Raw f32 — only legal between the graph input and the ingress
+    /// quantizer (the camera feed crossing the layout Transpose).
+    Float,
+    /// i32 fixed-point codes: value = code * 2^-frac.
+    Int { frac: i32 },
+}
+
+fn stream_fmt(fmt: &HashMap<String, BtFmt>, tensor: &str, node: &str) -> Result<BtFmt> {
+    fmt.get(tensor).copied().ok_or_else(|| {
+        anyhow!("bit-true annotate: node {node} reads {tensor}, which has no propagated format")
+    })
+}
+
+fn int_frac(f: BtFmt, node: &str, what: &str) -> Result<i32> {
+    match f {
+        BtFmt::Int { frac } => Ok(frac),
+        BtFmt::Float => bail!(
+            "bit-true annotate: node {node}: {what} is still f32 — the ingress quantizer must precede it"
+        ),
+    }
+}
+
+/// Split a float scale factor into `(odd multiplier m, fractional bits k)`
+/// with `s = m * 2^-k` exactly.  Power-of-two scales — the entire Table-II
+/// family — give `m = 1`, which is what makes the integer path *exactly*
+/// equal to the f32 reference.
+fn scale_to_mul_frac(s: f64, what: &str) -> Result<(i64, i32)> {
+    let (mut m, mut e) =
+        pow2_decompose(s).ok_or_else(|| anyhow!("{what}: scale {s} must be finite and nonzero"))?;
+    while e > 0 {
+        m <<= 1;
+        e -= 1;
+        if m.abs() > 1 << 30 {
+            bail!("{what}: scale {s} too large for the integer datapath");
+        }
+    }
+    if m.abs() > 1 << 24 {
+        bail!(
+            "{what}: scale {s} needs integer multiplier {m} — beyond the i32 datapath; use a (near-)dyadic scale"
+        );
+    }
+    Ok((m, -e))
+}
+
+/// `out_bias` as an integer code on the output grid (must be exact).
+fn bias_to_add(bias: f64, frac: i32, what: &str) -> Result<i64> {
+    let scale = (2.0f64).powi(frac);
+    let code = (bias * scale).round();
+    if code / scale != bias {
+        bail!("{what}: out_bias {bias} is off the 2^-{frac} output grid");
+    }
+    if code.abs() > i32::MAX as f64 {
+        bail!("{what}: out_bias code {code} overflows i32");
+    }
+    Ok(code as i64)
+}
+
+/// Smallest frac putting every value of an initializer on an integer
+/// grid (zero needs none; any f32 is a dyadic rational, so this always
+/// exists — the guard rejects absurdly fine grids, i.e. unquantized data).
+fn init_min_frac(t: &Tensor, what: &str) -> Result<i32> {
+    let mut frac = 0i32;
+    for &v in t.data() {
+        if v == 0.0 {
+            continue;
+        }
+        let Some((_, e)) = pow2_decompose(v as f64) else {
+            bail!("{what}: initializer value {v} is not finite");
+        };
+        frac = frac.max(-e);
+    }
+    if frac > 24 {
+        bail!("{what}: initializer needs a 2^-{frac} grid — requantize the graph before bit-true annotation");
+    }
+    Ok(frac)
+}
+
+/// Annotate a fully-lowered HW graph for bit-true integer execution.
+///
+/// The paper's premise is that the FPGA computes integer fixed-point
+/// codes; the f32 executors only *simulate* that.  This pass walks the
+/// graph ingress -> egress, propagates a fixed-point format per tensor,
+/// and writes per-node `bt_*` attributes that
+/// `plan::ExecutionPlan::compile_with(_, Datapath::BitTrue)` resolves
+/// into typed slots and integer kernels:
+///
+/// * every float scale (a threshold unit's `out_scale`, the channelwise
+///   scalar) is decomposed as `m * 2^-k` with odd `m` — exact, and `m = 1`
+///   for the power-of-two scales the whole Table-II family produces;
+/// * MVAU weight/bias grids are derived from the (requantized)
+///   initializers; the accumulator format is `in_frac + w_frac`
+///   fractional bits, chosen so bias codes are integral;
+/// * ingress contract: feeds stay f32 through the (single) layout
+///   Transpose and are quantized ONCE by the first threshold unit
+///   (`bt_in_f32 = 1` — float *comparisons*, no float arithmetic);
+/// * egress contract: graph outputs are integer codes carrying
+///   `bt_out_frac` fractional bits; only the caller dequantizes.
+///
+/// Idempotent; fails on graphs that are not fully lowered or whose
+/// scales/initializers cannot be represented on the integer datapath.
+pub fn annotate_bit_true_formats(graph: &mut Graph) -> Result<()> {
+    let order = graph.toposort_order()?;
+    let mut fmt: HashMap<String, BtFmt> = HashMap::new();
+    for input in &graph.inputs {
+        fmt.insert(input.clone(), BtFmt::Float);
+    }
+    for &ni in &order {
+        let (sets, out_fmt, out_name) = annotate_node(graph, ni, &fmt)?;
+        let node = &mut graph.nodes[ni];
+        for (key, val) in sets {
+            node.attrs.set(key, AttrVal::Int(val));
+        }
+        fmt.insert(out_name, out_fmt);
+    }
+    Ok(())
+}
+
+/// The per-node annotation rules; returns the attrs to set, the output
+/// format and the output tensor name (read-only phase — the caller
+/// mutates).
+fn annotate_node(
+    graph: &Graph,
+    ni: usize,
+    fmt: &HashMap<String, BtFmt>,
+) -> Result<(Vec<(&'static str, i64)>, BtFmt, String)> {
+    let node = &graph.nodes[ni];
+    if node.outputs.len() != 1 {
+        bail!(
+            "bit-true annotate: node {} has {} outputs; only single-output nodes are executable",
+            node.name,
+            node.outputs.len()
+        );
+    }
+    let out_name = node.outputs[0].clone();
+    let name = node.name.as_str();
+    let mut sets: Vec<(&'static str, i64)> = Vec::new();
+    let out_fmt = match node.op.as_str() {
+        "Transpose" => {
+            let f = stream_fmt(fmt, &node.inputs[0], name)?;
+            match f {
+                BtFmt::Float => sets.push(("bt_out_f32", 1)),
+                BtFmt::Int { frac } => {
+                    sets.push(("bt_out_f32", 0));
+                    sets.push(("bt_out_frac", frac as i64));
+                }
+            }
+            f
+        }
+        "MultiThreshold" | "Thresholding" => {
+            let f_in = stream_fmt(fmt, &node.inputs[0], name)?;
+            if !graph.is_initializer(&node.inputs[1]) {
+                bail!("bit-true annotate: {name}: threshold matrix must be an initializer");
+            }
+            let (m, f_out) = scale_to_mul_frac(node.attrs.float_or("out_scale", 1.0), name)?;
+            let add = bias_to_add(node.attrs.float_or("out_bias", 0.0), f_out, name)?;
+            sets.push(("bt_out_mul", m));
+            sets.push(("bt_out_add", add));
+            sets.push(("bt_out_frac", f_out as i64));
+            sets.push(("bt_out_f32", 0));
+            match f_in {
+                BtFmt::Float => sets.push(("bt_in_f32", 1)),
+                BtFmt::Int { frac } => {
+                    sets.push(("bt_in_f32", 0));
+                    sets.push(("bt_in_frac", frac as i64));
+                }
+            }
+            BtFmt::Int { frac: f_out }
+        }
+        "MVAU" => {
+            let fx = int_frac(stream_fmt(fmt, &node.inputs[0], name)?, name, "MVAU input")?;
+            let w = graph.initializers.get(&node.inputs[1]).ok_or_else(|| {
+                anyhow!("bit-true annotate: {name}: MVAU weight must be an initializer")
+            })?;
+            let bias_name = node
+                .inputs
+                .get(2)
+                .ok_or_else(|| anyhow!("bit-true annotate: {name}: MVAU needs a bias input"))?;
+            let bias = graph.initializers.get(bias_name).ok_or_else(|| {
+                anyhow!("bit-true annotate: {name}: MVAU bias must be an initializer")
+            })?;
+            let w_min = init_min_frac(w, name)?;
+            let b_min = init_min_frac(bias, name)?;
+            // The accumulator grid (in_frac + w_frac) must also cover the
+            // bias grid, or bias codes would be fractional.
+            let w_frac = w_min.max(b_min - fx).max(0);
+            let acc_frac = fx + w_frac;
+            let apply_act = node.attrs.int_or("apply_act", 1) != 0;
+            sets.push(("bt_in_frac", fx as i64));
+            sets.push(("bt_w_frac", w_frac as i64));
+            sets.push(("bt_acc_frac", acc_frac as i64));
+            sets.push(("bt_out_f32", 0));
+            if apply_act {
+                if node.inputs.len() < 4 || !graph.is_initializer(&node.inputs[3]) {
+                    bail!(
+                        "bit-true annotate: {name}: fused activation needs a threshold initializer"
+                    );
+                }
+                let (m, f_out) = scale_to_mul_frac(node.attrs.float_or("out_scale", 1.0), name)?;
+                let add = bias_to_add(node.attrs.float_or("out_bias", 0.0), f_out, name)?;
+                sets.push(("bt_out_mul", m));
+                sets.push(("bt_out_add", add));
+                sets.push(("bt_out_frac", f_out as i64));
+                BtFmt::Int { frac: f_out }
+            } else {
+                sets.push(("bt_out_mul", 1));
+                sets.push(("bt_out_add", 0));
+                sets.push(("bt_out_frac", acc_frac as i64));
+                BtFmt::Int { frac: acc_frac }
+            }
+        }
+        "Im2Col" | "ConvolutionInputGenerator" | "MaxPoolNHWC" | "StreamingMaxPool"
+        | "GlobalAccPool" | "GlobalAccPool_hw" => {
+            let frac = int_frac(
+                stream_fmt(fmt, &node.inputs[0], name)?,
+                name,
+                "stream input",
+            )?;
+            sets.push(("bt_out_f32", 0));
+            sets.push(("bt_out_frac", frac as i64));
+            BtFmt::Int { frac }
+        }
+        "Add" | "AddStreams" => {
+            let fa = int_frac(stream_fmt(fmt, &node.inputs[0], name)?, name, "lhs")?;
+            let fb = int_frac(stream_fmt(fmt, &node.inputs[1], name)?, name, "rhs")?;
+            let f_out = fa.max(fb);
+            let (sa, sb) = (f_out - fa, f_out - fb);
+            if sa > 24 || sb > 24 {
+                bail!("bit-true annotate: {name}: frac alignment shift {sa}/{sb} too large");
+            }
+            sets.push(("bt_shift_a", sa as i64));
+            sets.push(("bt_shift_b", sb as i64));
+            sets.push(("bt_out_f32", 0));
+            sets.push(("bt_out_frac", f_out as i64));
+            BtFmt::Int { frac: f_out }
+        }
+        "Mul" | "ChannelwiseMul" => {
+            if node.inputs.len() != 2 {
+                bail!("bit-true annotate: {name}: Mul must have exactly 2 inputs");
+            }
+            let scalar_idx = node
+                .inputs
+                .iter()
+                .position(|t| {
+                    graph
+                        .initializers
+                        .get(t)
+                        .map(|i| i.numel() == 1)
+                        .unwrap_or(false)
+                })
+                .ok_or_else(|| {
+                    anyhow!("bit-true annotate: {name}: Mul without a scalar initializer operand")
+                })?;
+            let data_idx = 1 - scalar_idx;
+            let f_in = int_frac(
+                stream_fmt(fmt, &node.inputs[data_idx], name)?,
+                name,
+                "Mul data input",
+            )?;
+            let s = graph.initializers[&node.inputs[scalar_idx]].data()[0] as f64;
+            let (m, k) = scale_to_mul_frac(s, name)?;
+            sets.push(("bt_mul", m));
+            sets.push(("bt_data_input", data_idx as i64));
+            sets.push(("bt_out_f32", 0));
+            sets.push(("bt_out_frac", (f_in + k) as i64));
+            BtFmt::Int { frac: f_in + k }
+        }
+        other => bail!(
+            "bit-true annotate: op {other} ({name}) has no integer-datapath mapping — is the graph fully lowered?"
+        ),
+    };
+    Ok((sets, out_fmt, out_name))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -338,6 +622,67 @@ mod tests {
         assert_eq!(g.count_op("StreamingMaxPool"), 1);
         assert_eq!(g.count_op("GlobalAccPool_hw"), 1);
         assert!(is_fully_hw(&g));
+    }
+
+    #[test]
+    fn annotate_bit_true_sets_formats_on_lowered_backbone() {
+        let mut g = crate::build::synth_backbone_graph([4, 8, 8, 16], 16, 4, 2);
+        crate::build::requantize_graph(&mut g, &crate::fixedpoint::headline_config()).unwrap();
+        crate::transforms::run_default_pipeline(&mut g, None, 0.0).unwrap();
+        assert!(is_fully_hw(&g));
+        annotate_bit_true_formats(&mut g).unwrap();
+
+        // Every node carries an output format; exactly one threshold unit
+        // is the f32 ingress quantizer (the input u8.8 quantizer).
+        let mut ingress = 0;
+        for n in &g.nodes {
+            assert!(
+                n.attrs.int("bt_out_f32").is_ok(),
+                "node {} ({}) not annotated",
+                n.name,
+                n.op
+            );
+            if n.op == "Thresholding" && n.attrs.int_or("bt_in_f32", 0) != 0 {
+                ingress += 1;
+                // The camera quantizer emits u8.8 codes: frac 8, q = code.
+                assert_eq!(n.attrs.int("bt_out_frac").unwrap(), 8);
+                assert_eq!(n.attrs.int("bt_out_mul").unwrap(), 1);
+            }
+            if n.op == "MVAU" {
+                let fx = n.attrs.int("bt_in_frac").unwrap();
+                let fw = n.attrs.int("bt_w_frac").unwrap();
+                assert_eq!(n.attrs.int("bt_acc_frac").unwrap(), fx + fw);
+                // Headline config: s6.5 weights -> at most 5 frac bits.
+                assert!(fw <= 5, "MVAU {} w_frac {fw}", n.name);
+            }
+        }
+        assert_eq!(ingress, 1, "exactly one ingress quantizer expected");
+
+        // Idempotent: a second pass computes identical attrs.
+        let before: Vec<_> = g.nodes.iter().map(|n| n.attrs.clone()).collect();
+        annotate_bit_true_formats(&mut g).unwrap();
+        let after: Vec<_> = g.nodes.iter().map(|n| n.attrs.clone()).collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn annotate_bit_true_rejects_unlowered_graph() {
+        let mut g = crate::build::synth_backbone_graph([4, 8, 8, 16], 16, 4, 2);
+        let err = annotate_bit_true_formats(&mut g).unwrap_err().to_string();
+        assert!(err.contains("no integer-datapath mapping"), "{err}");
+    }
+
+    #[test]
+    fn scale_decomposition_handles_dyadic_and_odd_scales() {
+        assert_eq!(scale_to_mul_frac(0.25, "t").unwrap(), (1, 2));
+        assert_eq!(scale_to_mul_frac(1.0, "t").unwrap(), (1, 0));
+        assert_eq!(scale_to_mul_frac(6.0, "t").unwrap(), (6, 0));
+        let (m, k) = scale_to_mul_frac(0.75, "t").unwrap();
+        assert_eq!((m, k), (3, 2));
+        assert!(scale_to_mul_frac(0.0, "t").is_err());
+        // out_bias must land on the output grid exactly.
+        assert_eq!(bias_to_add(-0.5, 1, "t").unwrap(), -1);
+        assert!(bias_to_add(0.3, 1, "t").is_err());
     }
 
     #[test]

@@ -31,6 +31,8 @@ use crate::graph::Graph;
 use crate::plan::ExecutionPlan;
 use crate::tensor::Tensor;
 
+pub use convert_to_hw::annotate_bit_true_formats;
+
 /// A semantics-preserving graph rewrite.
 pub trait Transform {
     fn name(&self) -> &'static str;

@@ -7,9 +7,11 @@ use std::path::PathBuf;
 use bwade::build::{
     folding_search_traced, requantize_graph, synth_backbone_graph, DesignConfig,
 };
-use bwade::dse::{render_report, run_sweep, ResultCache, SweepSpec};
+use bwade::dse::cache::point_desc;
+use bwade::dse::{render_report, run_sweep, PointMetrics, ResultCache, SweepSpec};
 use bwade::fixedpoint::table2_configs;
 use bwade::hw::total_resources;
+use bwade::plan::Datapath;
 use bwade::resources::Device;
 use bwade::transforms::run_default_pipeline;
 
@@ -141,6 +143,87 @@ fn sweep_is_deterministic_across_worker_counts() {
             pair[0].point.name
         );
     }
+}
+
+/// f32 and bit-true sweeps must never answer each other's points: the
+/// datapath is part of the cache key preimage, so a cache populated by
+/// one datapath misses for the other and the second sweep re-evaluates.
+#[test]
+fn cache_separates_f32_and_bit_true_datapaths() {
+    let spec_f = tiny_spec(2);
+    let mut spec_b = tiny_spec(2);
+    spec_b.datapath = Datapath::BitTrue;
+    let p = spec_f.points()[0].clone();
+    assert_ne!(
+        point_desc(&spec_f, &p),
+        point_desc(&spec_b, &p),
+        "datapath missing from the cache key preimage"
+    );
+
+    let dir = temp_dir("datapath");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = ResultCache::open(&dir).unwrap();
+    let metrics = PointMetrics {
+        acc_mean: 0.5,
+        acc_ci95: 0.01,
+        fps: 100.0,
+        latency_ms: 10.0,
+        steady_cycles: 1000,
+        lut: 1.0,
+        ff: 2.0,
+        bram36: 3.0,
+        dsp: 4.0,
+        weight_bits: 64,
+        utilization: 0.5,
+        hw_layers: 7,
+    };
+    cache.store(&spec_f, &p, &metrics).unwrap();
+    assert_eq!(cache.lookup(&spec_f, &p), Some(metrics.clone()));
+    assert!(
+        cache.lookup(&spec_b, &p).is_none(),
+        "bit-true lookup answered by an f32 entry"
+    );
+    cache.store(&spec_b, &p, &metrics).unwrap();
+    assert!(cache.lookup(&spec_b, &p).is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A real (tiny) bit-true sweep: accuracy comes from integer execution
+/// of the lowered graph, the report records the datapath, and the cache
+/// reuses bit-true points only for bit-true specs.
+#[test]
+fn bit_true_sweep_runs_and_reports_datapath() {
+    let mut spec = tiny_spec(2);
+    spec.configs.truncate(1); // headline config only
+    spec.caps.truncate(1);
+    spec.datapath = Datapath::BitTrue;
+
+    let dir = temp_dir("btsweep");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = ResultCache::open(&dir).unwrap();
+
+    let first = run_sweep(&spec, 2, Some(&cache)).unwrap();
+    assert_eq!(first.outcomes.len(), 1);
+    assert_eq!(first.evaluated, 1);
+    let m = &first.outcomes[0].metrics;
+    assert!((0.0..=1.0).contains(&m.acc_mean));
+    assert!(m.fps > 0.0 && m.weight_bits > 0);
+    let md = render_report(&spec, &first);
+    assert!(md.contains("Datapath: bit-true"));
+    assert!(md.contains("| bit-true |"));
+
+    // Same spec: full cache hit.  f32 twin of the spec: zero hits.
+    let second = run_sweep(&spec, 2, Some(&cache)).unwrap();
+    assert_eq!(second.evaluated, 0);
+    assert_eq!(second.cached, 1);
+    let mut f32_spec = spec.clone();
+    f32_spec.datapath = Datapath::F32;
+    let f32_run = run_sweep(&f32_spec, 2, Some(&cache)).unwrap();
+    assert_eq!(
+        f32_run.evaluated, 1,
+        "f32 sweep must not reuse bit-true cache entries"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

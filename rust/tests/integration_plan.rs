@@ -8,13 +8,13 @@ mod common;
 use std::collections::HashMap;
 use std::time::Duration;
 
-use bwade::build::{requantize_graph, synth_backbone_graph};
+use bwade::build::{lower_bit_true, requantize_graph, synth_backbone_graph};
 use bwade::coordinator::{serve, BatchPolicy, FeatureExtractor, FrameSource};
 use bwade::fewshot::NcmClassifier;
-use bwade::fixedpoint::headline_config;
+use bwade::fixedpoint::{headline_config, table2_configs, FxpFormat};
 use bwade::graph::Graph;
 use bwade::ops::execute_interpreted;
-use bwade::plan::{ExecutionPlan, PlanRunner, PlanScratch};
+use bwade::plan::{Datapath, ExecutionPlan, PlanRunner, PlanScratch};
 use bwade::rng::Rng;
 use bwade::tensor::Tensor;
 use bwade::transforms::run_default_pipeline;
@@ -174,6 +174,168 @@ fn serving_pipeline_runs_on_plan_engine() {
     // frames x activations.
     let stats = runner.arena_stats();
     assert!(stats.reuses > stats.fresh_allocs, "{stats:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Bit-true integer datapath
+// ---------------------------------------------------------------------------
+
+/// Lowered + annotated ResNet-9 for one quant config.
+fn lowered_bit_true_graph(quant: &bwade::fixedpoint::QuantConfig) -> Graph {
+    let mut graph =
+        synth_backbone_graph([4, 8, 8, 16], 16, quant.act.bits, quant.act.frac_bits);
+    lower_bit_true(&mut graph, quant).expect("lower + annotate");
+    graph
+}
+
+/// THE acceptance criterion: on the fully-lowered ResNet-9, the integer
+/// plan's output codes equal `FxpFormat::quantize_int` of the f32
+/// reference's outputs exactly, for every Table-II config.  (All
+/// Table-II scales are powers of two and every accumulator stays within
+/// f32's exact-integer range at these widths, so the float simulation is
+/// itself exact — which is precisely what makes code equality the right
+/// oracle.)
+#[test]
+fn bit_true_codes_equal_quantized_f32_reference_across_table2() {
+    for (name, quant) in table2_configs() {
+        let graph = lowered_bit_true_graph(&quant);
+        let f32_plan = ExecutionPlan::compile(&graph).unwrap();
+        let int_plan = ExecutionPlan::compile_bit_true(&graph).unwrap();
+        let feeds = probe_feeds(&graph, 0xC0DE);
+        let want = f32_plan.run(&feeds).unwrap();
+        let got = int_plan.run(&feeds).unwrap();
+        for (out_name, w) in &want {
+            let frac = int_plan
+                .output_frac(out_name)
+                .unwrap_or_else(|| panic!("{name}: no egress format for {out_name}"));
+            let fmt = FxpFormat::new(32, frac as u8, true).unwrap();
+            let codes = got[out_name].data_i32();
+            assert_eq!(codes.len(), w.numel(), "{name}: {out_name} size");
+            for (i, (&c, &v)) in codes.iter().zip(w.data()).enumerate() {
+                assert_eq!(
+                    c as i64,
+                    fmt.quantize_int(v),
+                    "{name}: output {out_name}[{i}]: code {c} != quantize_int({v}) at frac {frac}"
+                );
+            }
+        }
+    }
+}
+
+/// Kernel-variant audit — the "zero f32 arithmetic in integer steps"
+/// guarantee: a bit-true plan contains no f32 kernel at all; the only
+/// boundary steps are ONE ingress quantizer (float comparisons) and at
+/// most one f32 layout Transpose feeding it.
+#[test]
+fn bit_true_plan_has_zero_float_kernels() {
+    let graph = lowered_bit_true_graph(&headline_config());
+    let plan = ExecutionPlan::compile_bit_true(&graph).unwrap();
+    let variants = plan.kernel_variants();
+    assert!(
+        variants.iter().all(|(_, v)| *v != "f32"),
+        "float kernel in bit-true plan: {variants:?}"
+    );
+    assert_eq!(
+        variants.iter().filter(|(_, v)| *v == "ingress-quant").count(),
+        1,
+        "exactly one ingress quantizer expected: {variants:?}"
+    );
+    assert!(
+        variants.iter().filter(|(_, v)| *v == "ingress-f32").count() <= 1,
+        "more than one f32 ingress transpose: {variants:?}"
+    );
+    let steady = variants.iter().filter(|(_, v)| *v == "int").count();
+    assert!(
+        steady > 20,
+        "lowered ResNet-9 should have >20 steady-state integer steps, got {steady}: {variants:?}"
+    );
+}
+
+/// `run_batch` agrees with per-frame `run` on the integer plan (the
+/// typed arena must not leak state across frames).
+#[test]
+fn bit_true_run_batch_agrees_with_per_frame_run() {
+    let graph = lowered_bit_true_graph(&headline_config());
+    let plan = ExecutionPlan::compile_bit_true(&graph).unwrap();
+    let frames: Vec<HashMap<String, Tensor>> =
+        (0..3).map(|i| probe_feeds(&graph, 500 + i)).collect();
+    let outs = plan.run_batch(&frames).unwrap();
+    assert_eq!(outs.len(), 3);
+    for (feeds, out) in frames.iter().zip(&outs) {
+        let solo = plan.run(feeds).unwrap();
+        assert_eq!(
+            solo["global_out"].data_i32(),
+            out["global_out"].data_i32(),
+            "batch and per-frame integer codes differ"
+        );
+    }
+}
+
+/// The serving pipeline end to end on the bit-true extractor: the
+/// coordinator drives the integer datapath exactly like the f32 one.
+#[test]
+fn serving_pipeline_runs_bit_true() {
+    let graph = lowered_bit_true_graph(&headline_config());
+    let runner = PlanRunner::new_bit_true(&graph, 4).unwrap();
+    assert_eq!(runner.datapath(), Datapath::BitTrue);
+    assert_eq!(runner.img(), 16);
+    assert_eq!(runner.feature_dim(), 16);
+
+    let per = 16 * 16 * 3;
+    let mut sup = Vec::new();
+    let mut labels = Vec::new();
+    let mut rng = Rng::new(6);
+    for class in 0..3usize {
+        for _ in 0..2 {
+            for _ in 0..per {
+                sup.push(class as f32 * 0.3 + 0.1 * rng.next_f32());
+            }
+            labels.push(class);
+        }
+    }
+    let sup_feats = runner.extract_all(&sup, 6).unwrap();
+    assert_eq!(sup_feats.len(), 6 * 16);
+    assert!(sup_feats.iter().any(|&v| v != 0.0), "all-zero features");
+    let ncm = NcmClassifier::fit(&sup_feats, 16, &labels, 3).unwrap();
+
+    let rx = FrameSource {
+        count: 12,
+        rate_fps: None,
+        img: 16,
+        seed: 3,
+    }
+    .spawn(8);
+    let (metrics, results) = serve(
+        &runner,
+        &ncm,
+        rx,
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+    )
+    .expect("serve bit-true");
+    assert_eq!(metrics.frames, 12);
+    assert_eq!(results.len(), 12);
+    assert!(results.iter().all(|r| r.class < 3));
+}
+
+/// Bit-true features equal the dequantized f32 features (the egress
+/// contract as the extractor sees it), so NCM decisions — which depend
+/// only on feature geometry — match between datapaths at these widths.
+#[test]
+fn bit_true_runner_features_match_f32_runner_quantized() {
+    let quant = headline_config();
+    let graph = lowered_bit_true_graph(&quant);
+    let f32_runner = PlanRunner::new(&graph, 2).unwrap();
+    let int_runner = PlanRunner::new_bit_true(&graph, 2).unwrap();
+    let images = common::random_images(2, 16, 23);
+    let f_feats = f32_runner.extract(&images).unwrap();
+    let i_feats = int_runner.extract(&images).unwrap();
+    assert_eq!(f_feats.len(), i_feats.len());
+    // The f32 lowered graph is exact at these widths, so dequantized
+    // integer features are bitwise equal to the float features.
+    assert_eq!(f_feats, i_feats);
 }
 
 /// Deterministic extraction and batch-size independence on the plan path
