@@ -97,6 +97,24 @@ class FxpFormat:
         """Number of MultiThreshold steps needed to realize this quantizer."""
         return self.qmax - self.qmin
 
+    @property
+    def container_bits(self) -> int:
+        """Narrowest signed power-of-two container (8/16/32) holding every code.
+
+        The rust bit-true datapath stores code tensors width-natively
+        (``TensorData::I8/I16/I32``); this is the selection rule, mirrored
+        bit-exactly by ``FxpFormat::container_bits`` in
+        rust/src/fixedpoint/.  The container is always *signed* (matching
+        the FPGA-side signed accumulator convention), so a signed b-bit
+        format fits an 8-bit container up to b = 8 while an unsigned one
+        only up to b = 7.  Formats whose codes exceed i32 still report 32
+        — the datapath's checked conversions reject them downstream.
+        """
+        for width in (8, 16):
+            if self.qmin >= -(2 ** (width - 1)) and self.qmax <= 2 ** (width - 1) - 1:
+                return width
+        return 32
+
     def describe(self) -> str:
         s = "s" if self.signed else "u"
         return f"{s}{self.bits}.{self.frac_bits}"

@@ -83,6 +83,23 @@ class TestFormat:
         q = quantize_int(jnp.float32(f.vmax), f)
         assert int(q) == f.qmax
 
+    def test_container_bits_rule(self):
+        # Mirrors rust fixedpoint::tests::container_bits_rule_matches_python_twin:
+        # the narrowest signed 8/16/32-bit container holding every code —
+        # the storage width the rust packed bit-true datapath streams.
+        assert FxpFormat(4, 2, signed=False).container_bits == 8
+        assert FxpFormat(8, 4).container_bits == 8
+        assert FxpFormat(7, 0, signed=False).container_bits == 8
+        assert FxpFormat(8, 4, signed=False).container_bits == 16
+        assert FxpFormat(16, 8).container_bits == 16
+        assert FxpFormat(15, 0, signed=False).container_bits == 16
+        assert FxpFormat(16, 8, signed=False).container_bits == 32
+        assert FxpFormat(32, 16).container_bits == 32
+        assert FxpFormat(32, 16, signed=False).container_bits == 32
+        head = table2_configs()[1]
+        assert head.weight.container_bits == 8  # s6.5
+        assert head.act.container_bits == 8  # u4.2
+
     def test_table2_has_eight_rows_matching_paper(self):
         cfgs = table2_configs()
         assert len(cfgs) == 8

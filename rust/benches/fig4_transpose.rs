@@ -54,7 +54,11 @@ fn main() {
         .expect("reference execution");
 
     println!("== E4 / Fig. 4: Transpose-node optimization ==\n");
-    println!("imported graph: {} nodes, {} Transpose", graph.nodes.len(), graph.count_op("Transpose"));
+    println!(
+        "imported graph: {} nodes, {} Transpose",
+        graph.nodes.len(),
+        graph.count_op("Transpose")
+    );
 
     // Phase 1: streamline + lower convs (creates the Fig.-4 mismatch).
     let pre: Vec<Box<dyn Transform>> = vec![

@@ -22,7 +22,7 @@ use bwade::plan::{Datapath, ExecutionPlan, PlanScratch};
 use bwade::resources::Device;
 use bwade::rng::Rng;
 use bwade::systolic::{simulate, MatmulLayer, SystolicConfig};
-use bwade::tensor::Tensor;
+use bwade::tensor::{DType, Tensor};
 
 /// A deep chain of cheap elementwise ops on a small tensor: per-node
 /// dispatch overhead dominates, which is the regime where the plan engine
@@ -183,6 +183,27 @@ fn main() {
             "  -> bit-true MVAU speedup over f32: {:.2}x",
             r_f.mean().as_secs_f64() / r_i.mean().as_secs_f64().max(1e-12)
         );
+        // Packed containers: same codes in i8 activations/weights, the
+        // blocked i8 x i8 -> i32-accumulate inner loop, i8 output codes.
+        let x8 = Tensor::new_i8(
+            vec![rows, k],
+            xi.data_i32().iter().map(|&c| c as i8).collect(),
+        )
+        .unwrap();
+        let w8 = Tensor::new_i8(
+            vec![k, n],
+            wi.data_i32().iter().map(|&c| c as i8).collect(),
+        )
+        .unwrap();
+        let mut o8 = Tensor::zeros_typed(vec![rows, n], DType::I8);
+        let r_p = bench("kernel: MVAU packed i8 (blocked, i32 acc)", 3, 20, || {
+            execute_int_spec_into(&ispec, &[&x8, &w8, &bi, &ti], &mut o8).unwrap();
+        });
+        assert_eq!(o8.codes_i32(), oi.codes_i32(), "packed MVAU diverged");
+        println!(
+            "  -> packed MVAU speedup over i32: {:.2}x",
+            r_i.mean().as_secs_f64() / r_p.mean().as_secs_f64().max(1e-12)
+        );
 
         let fspec = OpSpec::Threshold { layout: ChanLayout::Nhwc, out_scale: 0.25, out_bias: 0.0 };
         let ispec = IntOpSpec::Threshold { layout: ChanLayout::Nhwc, out_mul: 1, out_add: 0 };
@@ -214,31 +235,83 @@ fn main() {
             "  -> bit-true MultiThreshold speedup over f32: {:.2}x",
             r_f.mean().as_secs_f64() / r_i.mean().as_secs_f64().max(1e-12)
         );
-
-        // Whole backbone: f32 plan vs bit-true plan on the lowered graph.
-        let mut lowered = synth_backbone_graph([8, 16, 32, 64], 32, 4, 2);
-        lower_bit_true(&mut lowered, &headline_config()).unwrap();
-        let plan_f = ExecutionPlan::compile(&lowered).unwrap();
-        let plan_i = ExecutionPlan::compile_with(&lowered, Datapath::BitTrue).unwrap();
-        let mut brng = Rng::new(43);
-        let in_shape = lowered.shape_of(&lowered.inputs[0]).unwrap().to_vec();
-        let mut bfeeds = std::collections::HashMap::new();
-        bfeeds.insert(
-            lowered.inputs[0].clone(),
-            Tensor::from_fn(in_shape, |_| brng.next_f32()),
-        );
-        let mut scratch = PlanScratch::default();
-        let r_f = bench("engine: f32 plan,      lowered backbone, 1 image", 1, 5, || {
-            plan_f.run_with(&bfeeds, &mut scratch).unwrap();
+        // Packed: u8.4-ish codes live in an i16 container, threshold
+        // codes and the q outputs in i8 — a quarter of the i32 traffic.
+        let a16 = Tensor::new_i16(
+            tshape.clone(),
+            ai.data_i32().iter().map(|&c| c as i16).collect(),
+        )
+        .unwrap();
+        let tq8 = Tensor::new_i8(
+            vec![1, 15],
+            tqi.data_i32().iter().map(|&c| c as i8).collect(),
+        )
+        .unwrap();
+        let mut o8 = Tensor::zeros_typed(tshape.clone(), DType::I8);
+        let r_p = bench("kernel: MultiThreshold packed i16->i8", 5, 40, || {
+            execute_int_spec_into(&ispec, &[&a16, &tq8], &mut o8).unwrap();
         });
-        let mut scratch = PlanScratch::default();
-        let r_i = bench("engine: bit-true plan, lowered backbone, 1 image", 1, 5, || {
-            plan_i.run_with(&bfeeds, &mut scratch).unwrap();
-        });
+        assert_eq!(o8.codes_i32(), oi.codes_i32(), "packed threshold diverged");
         println!(
-            "  -> bit-true backbone speedup over f32 (lowered HW graph): {:.2}x",
-            r_f.mean().as_secs_f64() / r_i.mean().as_secs_f64().max(1e-12)
+            "  -> packed MultiThreshold speedup over i32: {:.2}x",
+            r_i.mean().as_secs_f64() / r_p.mean().as_secs_f64().max(1e-12)
         );
+
+        // Whole backbone: f32 plan vs the packed bit-true plan vs the
+        // all-i32 wide oracle, plus the bytes-per-frame each one streams
+        // — for a 4-bit-activation config (the paper's headline) and an
+        // 8-bit one (b8_c4.4_r4.4).
+        for (label, act_bits, act_frac, quant) in [
+            ("b6_c1.5_r2.2 (4b acts)", 4u8, 2u8, headline_config()),
+            (
+                "b8_c4.4_r4.4 (8b acts)",
+                8,
+                4,
+                bwade::cli::parse_config("b8_c4.4_r4.4").unwrap(),
+            ),
+        ] {
+            let mut lowered = synth_backbone_graph([8, 16, 32, 64], 32, act_bits, act_frac);
+            lower_bit_true(&mut lowered, &quant).unwrap();
+            let plan_f = ExecutionPlan::compile(&lowered).unwrap();
+            let plan_packed = ExecutionPlan::compile_with(&lowered, Datapath::BitTrue).unwrap();
+            let plan_wide = ExecutionPlan::compile_bit_true_wide(&lowered).unwrap();
+            let mut brng = Rng::new(43);
+            let in_shape = lowered.shape_of(&lowered.inputs[0]).unwrap().to_vec();
+            let mut bfeeds = std::collections::HashMap::new();
+            bfeeds.insert(
+                lowered.inputs[0].clone(),
+                Tensor::from_fn(in_shape, |_| brng.next_f32()),
+            );
+            println!("  == lowered backbone, config {label} ==");
+            let mut scratch = PlanScratch::default();
+            let r_f = bench("engine: f32 plan,        lowered backbone", 1, 5, || {
+                plan_f.run_with(&bfeeds, &mut scratch).unwrap();
+            });
+            let mut scratch = PlanScratch::default();
+            let r_w = bench("engine: bit-true i32,    lowered backbone", 1, 5, || {
+                plan_wide.run_with(&bfeeds, &mut scratch).unwrap();
+            });
+            let mut scratch = PlanScratch::default();
+            let r_p = bench("engine: bit-true packed, lowered backbone", 1, 5, || {
+                plan_packed.run_with(&bfeeds, &mut scratch).unwrap();
+            });
+            println!(
+                "  -> bit-true (packed) backbone speedup over f32: {:.2}x",
+                r_f.mean().as_secs_f64() / r_p.mean().as_secs_f64().max(1e-12)
+            );
+            println!(
+                "  -> packed backbone speedup over i32 bit-true: {:.2}x",
+                r_w.mean().as_secs_f64() / r_p.mean().as_secs_f64().max(1e-12)
+            );
+            println!(
+                "  -> bytes/frame: packed {:.1} KiB vs i32 {:.1} KiB ({:.2}x less traffic; f32 plan {:.1} KiB)",
+                plan_packed.bytes_moved_per_frame() as f64 / 1024.0,
+                plan_wide.bytes_moved_per_frame() as f64 / 1024.0,
+                plan_wide.bytes_moved_per_frame() as f64
+                    / plan_packed.bytes_moved_per_frame().max(1) as f64,
+                plan_f.bytes_moved_per_frame() as f64 / 1024.0,
+            );
+        }
     }
 
     // ---- fixed-point quantization -------------------------------------

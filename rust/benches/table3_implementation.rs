@@ -86,8 +86,14 @@ fn main() {
         finn.total_resources.dsp,
         finn.latency_ms
     );
-    println!("{:<28} {:>5} {:>8} {:>8} {:>8} {:>5} {:>12}", "paper PEFSL", 16, 15667, 59.0, 9819, 159, 35.9);
-    println!("{:<28} {:>5} {:>8} {:>8} {:>8} {:>5} {:>12}", "paper ours", 6, 37263, 131.5, 44617, 22, 16.3);
+    println!(
+        "{:<28} {:>5} {:>8} {:>8} {:>8} {:>5} {:>12}",
+        "paper PEFSL", 16, 15667, 59.0, 9819, 159, 35.9
+    );
+    println!(
+        "{:<28} {:>5} {:>8} {:>8} {:>8} {:>5} {:>12}",
+        "paper ours", 6, 37263, 131.5, 44617, 22, 16.3
+    );
 
     println!("\nshape checks vs paper:");
     let speedup = tensil.total_cycles as f64 / finn.latency_cycles.max(1) as f64;
@@ -95,7 +101,10 @@ fn main() {
         ("dataflow latency < systolic latency", finn.latency_cycles < tensil.total_cycles),
         ("speedup within [1.3x, 4x] of paper's 2.2x", (1.3..4.0).contains(&speedup)),
         ("DSP: dataflow << systolic", finn.total_resources.dsp * 4.0 < tensil.resources.dsp),
-        ("BRAM: dataflow > systolic (weights on-chip)", finn.total_resources.bram36 > tensil.resources.bram36),
+        (
+            "BRAM: dataflow > systolic (weights on-chip)",
+            finn.total_resources.bram36 > tensil.resources.bram36,
+        ),
         ("real-time: dataflow >= 30 fps", finn.fps >= 30.0),
     ];
     for (label, ok) in checks {
@@ -130,7 +139,11 @@ fn main() {
                 r.total_resources.lut,
                 r.total_resources.bram36,
                 r.latency_ms,
-                if fits { "fits" } else { "DOES NOT FIT (explicit thresholds explode beyond ~8-bit activations — why the paper builds FINN at 6-bit and leaves 16-bit to Tensil)" }
+                if fits {
+                    "fits"
+                } else {
+                    "DOES NOT FIT (explicit thresholds explode beyond ~8-bit activations — why the paper builds FINN at 6-bit and leaves 16-bit to Tensil)"
+                }
             );
         }
     } else {

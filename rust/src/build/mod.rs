@@ -120,11 +120,13 @@ pub fn build(graph: &mut Graph, cfg: &DesignConfig, device: &Device) -> Result<B
 
 /// The bit-true front half of [`build`]: PTQ the imported NCHW graph,
 /// lower it through the full Fig.-3 pipeline, and annotate every HW
-/// node's fixed-point formats so
-/// [`crate::plan::ExecutionPlan::compile_with`] can select integer
-/// kernels ([`crate::plan::Datapath::BitTrue`]).  After this the graph
-/// executes bit-exactly what the FPGA datapath computes — `dse` and the
-/// CLI's `--datapath bit-true` route through here.
+/// node's fixed-point formats *and* storage containers (`bt_container`)
+/// so [`crate::plan::ExecutionPlan::compile_with`] can select packed,
+/// container-monomorphized integer kernels
+/// ([`crate::plan::Datapath::BitTrue`]).  After this the graph executes
+/// bit-exactly what the FPGA datapath computes, moving the bytes its
+/// narrow containers imply — `dse` and the CLI's `--datapath bit-true`
+/// route through here.
 pub fn lower_bit_true(graph: &mut Graph, quant: &QuantConfig) -> Result<()> {
     requantize_graph(graph, quant)?;
     run_default_pipeline(graph, None, 0.0)?;

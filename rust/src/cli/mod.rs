@@ -161,8 +161,11 @@ COMMANDS
 The `plan` engine executes the exported compiler graph through the
 compiled ExecutionPlan (rust/src/plan/) — python-free and XLA-free.
 With `--datapath bit-true` the graph is lowered to the HW form and run
-on the integer datapath (i32 codes, i64 accumulators): features are
-bit-exactly what the FPGA computes, dequantized only at egress.
+on the integer datapath: every code tensor is packed into the narrowest
+container its bit-width permits (i8/i16/i32) and the kernels are
+monomorphized per container (i8xi8 accumulates in i32), so features are
+bit-exactly what the FPGA computes — and the bytes moved per frame are
+what its narrow datapath would stream — dequantized only at egress.
 
 Artifacts are read from ./artifacts (override with BWADE_ARTIFACTS).";
 

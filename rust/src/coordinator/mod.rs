@@ -50,6 +50,13 @@ pub trait FeatureExtractor {
         self.batch() * self.img() * self.img() * 3
     }
 
+    /// Bytes one frame streams through the backbone's kernels, when the
+    /// engine can account for them (the plan engine does; a compiled
+    /// PJRT executable cannot).
+    fn bytes_moved_per_frame(&self) -> Option<u64> {
+        None
+    }
+
     /// Run one batch of NHWC images (flat, `input_elems()` long).
     fn extract(&self, images: &[f32]) -> Result<Vec<f32>>;
 

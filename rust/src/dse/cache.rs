@@ -26,7 +26,10 @@ use super::{DesignPoint, PointMetrics, SweepSpec};
 /// Bump when the evaluation pipeline (`prepare_config` +
 /// `build_hw_metrics`) changes meaning — invalidates every entry.
 /// v2: the sweep gained the `datapath` axis (f32 vs bit-true accuracy).
-pub const CACHE_VERSION: u32 = 2;
+/// v3: width-native packed storage — metrics grew bytes-per-frame and
+/// the non-dyadic scale count, and the key names the weight/activation
+/// container widths.
+pub const CACHE_VERSION: u32 = 3;
 
 /// 64-bit FNV-1a — tiny, dependency-free, good enough for file naming
 /// (the stored description string is the real collision guard).
@@ -45,9 +48,11 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
 pub fn point_desc(spec: &SweepSpec, point: &DesignPoint) -> String {
     let b = &spec.device.budget;
     format!(
-        "v{CACHE_VERSION}|dp={}|quant={}|cap={:?}|fps={:?}|dev={}|clk={:?}|budget={:?}/{:?}/{:?}/{:?}|widths={:?}|img={}|bank={}x{}|ep={}x{}w{}s{}q|seed={}",
+        "v{CACHE_VERSION}|dp={}|quant={}|cont={}/{}|cap={:?}|fps={:?}|dev={}|clk={:?}|budget={:?}/{:?}/{:?}/{:?}|widths={:?}|img={}|bank={}x{}|ep={}x{}w{}s{}q|seed={}",
         spec.datapath.describe(),
         point.quant.describe(),
+        point.quant.weight.container_bits(),
+        point.quant.act.container_bits(),
         point.max_utilization,
         spec.target_fps,
         spec.device.name,
@@ -135,6 +140,8 @@ fn metrics_to_json(m: &PointMetrics) -> Json {
         ("weight_bits", Json::num(m.weight_bits as f64)),
         ("utilization", Json::num(m.utilization)),
         ("hw_layers", Json::num(m.hw_layers as f64)),
+        ("bytes_per_frame", Json::num(m.bytes_per_frame as f64)),
+        ("non_dyadic_scales", Json::num(m.non_dyadic_scales as f64)),
     ])
 }
 
@@ -152,6 +159,8 @@ fn metrics_from_json(j: &Json) -> Result<PointMetrics> {
         weight_bits: j.get("weight_bits")?.as_f64()? as u64,
         utilization: j.get("utilization")?.as_f64()?,
         hw_layers: j.get("hw_layers")?.as_usize()?,
+        bytes_per_frame: j.get("bytes_per_frame")?.as_f64()? as u64,
+        non_dyadic_scales: j.get("non_dyadic_scales")?.as_usize()?,
     })
 }
 
@@ -173,6 +182,8 @@ mod tests {
             weight_bits: 1_234_567,
             utilization: 0.8533,
             hw_layers: 40,
+            bytes_per_frame: 987_654,
+            non_dyadic_scales: 1,
         }
     }
 
@@ -218,6 +229,9 @@ mod tests {
         let mut s2 = spec.clone();
         s2.datapath = crate::plan::Datapath::BitTrue;
         assert_ne!(base, point_desc(&s2, p));
+        // The container widths are named in the key (headline config:
+        // s6.5 weights and u4.2 acts both pack into i8).
+        assert!(base.contains("|cont=8/8|"), "{base}");
     }
 
     #[test]

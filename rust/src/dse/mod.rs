@@ -221,6 +221,14 @@ pub struct PointMetrics {
     /// Worst-component utilization fraction against the device budget.
     pub utilization: f64,
     pub hw_layers: usize,
+    /// Bytes one frame streams through the scoring plan's kernels at the
+    /// containers' actual widths (packed on the bit-true datapath) —
+    /// the bandwidth the config's narrow formats buy.
+    pub bytes_per_frame: u64,
+    /// Scale factors whose exact decomposition needs an odd multiplier
+    /// `|m| > 1`: exact on the integer path, f32-divergent by design.
+    /// Nonzero counts are flagged in the report.
+    pub non_dyadic_scales: usize,
 }
 
 /// A point plus its metrics and provenance.
@@ -245,22 +253,33 @@ pub struct SweepResult {
     pub pareto: Vec<usize>,
 }
 
+/// Cap-independent measurements of one prepared config, carried into
+/// every grid point's [`PointMetrics`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConfigStats {
+    /// Bytes per frame through the scoring plan (packed containers on
+    /// the bit-true datapath; the f32 request path otherwise).
+    pub bytes_per_frame: u64,
+    /// Non-dyadic (`|m| > 1`) scale factors in the lowered graph.
+    pub non_dyadic_scales: usize,
+}
+
 /// Everything cap-independent about one quantization config, done once
 /// per config instead of once per grid point: few-shot accuracy
 /// (synthesized backbone, rust-side PTQ, compiled-plan extraction over
 /// the shared episodes) plus the lowered pre-folding HW graph (the
-/// streamline/lower/§III-C/§III-D pipeline).
+/// streamline/lower/§III-C/§III-D pipeline) and its [`ConfigStats`].
 pub fn prepare_config(
     spec: &SweepSpec,
     quant: &QuantConfig,
     bank: &[f32],
     episodes: &[Episode],
-) -> Result<(AccuracyReport, Graph)> {
+) -> Result<(AccuracyReport, Graph, ConfigStats)> {
     let mut graph =
         synth_backbone_graph(spec.widths, spec.img, quant.act.bits, quant.act.frac_bits);
     let n_images = spec.num_classes * spec.per_class;
     let batch = n_images.clamp(1, 8);
-    let (acc, lowered_early) = match spec.datapath {
+    let (acc, bytes_per_frame, lowered_early) = match spec.datapath {
         Datapath::F32 => {
             // PTQ first so accuracy is scored on the exact grids the
             // build deploys (quantization is a projection — the pipeline
@@ -268,16 +287,20 @@ pub fn prepare_config(
             requantize_graph(&mut graph, quant)?;
             let runner = PlanRunner::new(&graph, batch)?;
             let feats = runner.extract_all(bank, n_images)?;
-            (evaluate(&feats, runner.feature_dim(), episodes)?, false)
+            let bytes = runner.bytes_moved_per_frame();
+            (evaluate(&feats, runner.feature_dim(), episodes)?, bytes, false)
         }
         Datapath::BitTrue => {
             // Lower + annotate first: bit-true accuracy is defined on
             // the HW graph's integer plan, so the score is exactly what
             // the deployed datapath produces — not a float approximation.
+            // The plan packs every tensor into its annotated container,
+            // so bytes-per-frame here is the width-native bandwidth.
             lower_bit_true(&mut graph, quant)?;
             let runner = PlanRunner::new_bit_true(&graph, batch)?;
             let feats = runner.extract_all(bank, n_images)?;
-            (evaluate(&feats, runner.feature_dim(), episodes)?, true)
+            let bytes = runner.bytes_moved_per_frame();
+            (evaluate(&feats, runner.feature_dim(), episodes)?, bytes, true)
         }
     };
 
@@ -287,7 +310,11 @@ pub fn prepare_config(
     if !convert_to_hw::is_fully_hw(&graph) {
         bail!("pipeline left non-HW ops in the graph: {:?}", graph.op_census());
     }
-    Ok((acc, graph))
+    let stats = ConfigStats {
+        bytes_per_frame,
+        non_dyadic_scales: convert_to_hw::non_dyadic_scale_count(&graph),
+    };
+    Ok((acc, graph, stats))
 }
 
 /// Hardware metrics of one design point: the cap-dependent tail (folding
@@ -298,6 +325,7 @@ pub fn build_hw_metrics(
     point: &DesignPoint,
     acc: AccuracyReport,
     lowered: &Graph,
+    stats: ConfigStats,
 ) -> Result<PointMetrics> {
     let mut graph = lowered.clone();
     let cfg = DesignConfig {
@@ -321,6 +349,8 @@ pub fn build_hw_metrics(
         weight_bits: report.weight_bits,
         utilization: r.max_utilization(&spec.device),
         hw_layers: report.models.len(),
+        bytes_per_frame: stats.bytes_per_frame,
+        non_dyadic_scales: stats.non_dyadic_scales,
     })
 }
 
@@ -418,7 +448,7 @@ pub fn run_sweep(
         prepare_config(spec, q, &bank, &episodes)
     });
     let mut first_err: Option<anyhow::Error> = None;
-    let mut prepared: HashMap<String, (AccuracyReport, Graph)> = HashMap::new();
+    let mut prepared: HashMap<String, (AccuracyReport, Graph, ConfigStats)> = HashMap::new();
     for (key, res) in cfg_keys.iter().zip(prep_results) {
         match res {
             Ok(p) => {
@@ -442,8 +472,8 @@ pub fn run_sweep(
         .filter(|&i| prepared.contains_key(&points[i].quant.describe()))
         .collect();
     let hw_results = parallel_map(&ready, workers, |_, &i| -> Result<PointMetrics> {
-        let (acc, lowered) = &prepared[&points[i].quant.describe()];
-        let metrics = build_hw_metrics(spec, &points[i], *acc, lowered)?;
+        let (acc, lowered, stats) = &prepared[&points[i].quant.describe()];
+        let metrics = build_hw_metrics(spec, &points[i], *acc, lowered, *stats)?;
         if let Some(c) = cache {
             // A cache-write failure (disk full, dir removed mid-run) must
             // not discard a successfully computed point.

@@ -24,7 +24,13 @@ pub fn render_report(spec: &SweepSpec, result: &SweepResult) -> String {
     let _ = writeln!(
         s,
         "Few-shot protocol: {}-way {}-shot, {} queries/class, {} episodes over a {}x{} synthetic bank (seed {:#x}).",
-        spec.n_way, spec.k_shot, spec.n_query, spec.episodes, spec.num_classes, spec.per_class, spec.seed
+        spec.n_way,
+        spec.k_shot,
+        spec.n_query,
+        spec.episodes,
+        spec.num_classes,
+        spec.per_class,
+        spec.seed
     );
     let _ = writeln!(
         s,
@@ -56,28 +62,49 @@ pub fn render_report(spec: &SweepSpec, result: &SweepResult) -> String {
     let _ = writeln!(s);
     let _ = writeln!(
         s,
-        "| config | max bits | weights | acts | datapath | acc [%] | ci95 [%] |"
+        "| config | max bits | weights | acts | containers | datapath | acc [%] | ci95 [%] | KiB/frame | scales |"
     );
-    let _ = writeln!(s, "|---|---|---|---|---|---|---|");
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|---|---|");
     let mut seen: Vec<&str> = Vec::new();
+    let mut any_non_dyadic = false;
     for o in &result.outcomes {
         if seen.contains(&o.point.name.as_str()) {
             continue;
         }
         seen.push(&o.point.name);
+        let scales = if o.metrics.non_dyadic_scales == 0 {
+            "dyadic".to_string()
+        } else {
+            any_non_dyadic = true;
+            format!("⚠ {} non-dyadic (m>1)", o.metrics.non_dyadic_scales)
+        };
         let _ = writeln!(
             s,
-            "| {} | {} | {} | {} | {} | {:.2} | {:.2} |",
+            "| {} | {} | {} | {} | i{}/i{} | {} | {:.2} | {:.2} | {:.1} | {} |",
             o.point.name,
             o.point.quant.max_bits(),
             o.point.quant.weight.describe(),
             o.point.quant.act.describe(),
+            o.point.quant.weight.container_bits(),
+            o.point.quant.act.container_bits(),
             spec.datapath.describe(),
             o.metrics.acc_mean * 100.0,
             o.metrics.acc_ci95 * 100.0,
+            o.metrics.bytes_per_frame as f64 / 1024.0,
+            scales,
         );
     }
     let _ = writeln!(s);
+    if any_non_dyadic {
+        let _ = writeln!(
+            s,
+            "⚠ Rows flagged *non-dyadic* carry scale factors `s = m * 2^-k` with an odd \
+             multiplier `|m| > 1`: the integer datapath executes them *exactly* (the \
+             decomposition is lossless), but the f32 simulation rounds — such points are \
+             exact-but-f32-divergent by design, so do not expect bitwise f32 agreement."
+        );
+        let _ = writeln!(s);
+    }
 
     // ---- Table III shape: resources vs throughput, one row per point.
     let _ = writeln!(s, "## Table III — resources vs throughput");
@@ -170,6 +197,8 @@ mod tests {
                     weight_bits: 8192,
                     utilization: 0.5,
                     hw_layers: 40,
+                    bytes_per_frame: 100_000 + 1000 * i as u64,
+                    non_dyadic_scales: 0,
                 },
                 cached: i % 2 == 0,
             })
@@ -218,6 +247,23 @@ mod tests {
         let f32_md = render_report(&f32_spec, &fake_result(&f32_spec));
         assert!(f32_md.contains("Datapath: f32"));
         assert!(!f32_md.contains("bit-true"));
+    }
+
+    #[test]
+    fn report_flags_non_dyadic_configs() {
+        let spec = SweepSpec::default();
+        let mut result = fake_result(&spec);
+        let clean = render_report(&spec, &result);
+        assert!(!clean.contains("non-dyadic"), "dyadic sweep got flagged");
+        assert!(clean.contains("| dyadic |"));
+        // Containers are visible per row (headline: i8/i8).
+        assert!(clean.contains("| i8/i8 |"), "{clean}");
+        assert!(clean.contains("KiB/frame"));
+        // Flag one config: the marker and the footnote both appear.
+        result.outcomes[2].metrics.non_dyadic_scales = 3;
+        let flagged = render_report(&spec, &result);
+        assert!(flagged.contains("⚠ 3 non-dyadic (m>1)"), "{flagged}");
+        assert!(flagged.contains("exact-but-f32-divergent"));
     }
 
     #[test]

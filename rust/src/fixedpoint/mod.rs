@@ -104,6 +104,18 @@ impl FxpFormat {
         self.qmax() - self.qmin()
     }
 
+    /// Narrowest signed power-of-two container (8/16/32 bits) holding
+    /// every code of this format — the storage width the packed bit-true
+    /// datapath streams (DESIGN.md §9).  Signed b-bit formats fit an
+    /// 8-bit container up to b = 8; unsigned only up to b = 7 (the
+    /// container is always signed, matching the FPGA-side signed
+    /// accumulator convention).  Formats whose codes exceed i32 still
+    /// report 32 — the datapath's checked conversions reject them.
+    /// Mirrored by `container_bits` in python/compile/fxp.py.
+    pub fn container_bits(&self) -> u8 {
+        container_bits_for_range(self.qmin(), self.qmax())
+    }
+
     /// Quantize to integer code: `clip(floor(x * 2^f + 0.5), qmin, qmax)`.
     ///
     /// f64 intermediate matches the f32-graph python semantics on every
@@ -184,6 +196,24 @@ impl QuantConfig {
     pub fn describe(&self) -> String {
         format!("W{}_A{}", self.weight.describe(), self.act.describe())
     }
+}
+
+/// THE container-selection rule, in one place: the narrowest signed
+/// 8/16/32-bit container covering the code range `[lo, hi]`.  Everything
+/// that picks a storage width routes through here —
+/// [`FxpFormat::container_bits`] (spec level), the `bt_container`
+/// annotation in `transforms::annotate_bit_true_formats` (graph level),
+/// and the width-native initializer conversion in `plan` (compile
+/// level) — so the rule can never desynchronize between layers.  Ranges
+/// beyond i32 still report 32; the datapath's checked conversions
+/// reject them downstream.
+pub fn container_bits_for_range(lo: i64, hi: i64) -> u8 {
+    for bits in [8u8, 16] {
+        if lo >= -(1i64 << (bits - 1)) && hi <= (1i64 << (bits - 1)) - 1 {
+            return bits;
+        }
+    }
+    32
 }
 
 /// Exact rational decomposition of a finite nonzero float: `x = m * 2^e`
@@ -452,6 +482,45 @@ mod tests {
             assert_eq!(m.rem_euclid(2), 1, "m {m} must be odd for x {x}");
             assert_eq!(m as f64 * (2.0f64).powi(e), x, "reconstruct {x}");
         }
+    }
+
+    #[test]
+    fn container_bits_rule_matches_python_twin() {
+        // Mirrors test_fxp.py::test_container_bits_rule.
+        assert_eq!(FxpFormat::unsigned(4, 2).unwrap().container_bits(), 8);
+        assert_eq!(FxpFormat::signed(8, 4).unwrap().container_bits(), 8);
+        assert_eq!(FxpFormat::unsigned(7, 0).unwrap().container_bits(), 8);
+        assert_eq!(FxpFormat::unsigned(8, 4).unwrap().container_bits(), 16);
+        assert_eq!(FxpFormat::signed(16, 8).unwrap().container_bits(), 16);
+        assert_eq!(FxpFormat::unsigned(15, 0).unwrap().container_bits(), 16);
+        assert_eq!(FxpFormat::unsigned(16, 8).unwrap().container_bits(), 32);
+        assert_eq!(FxpFormat::signed(32, 16).unwrap().container_bits(), 32);
+        assert_eq!(FxpFormat::unsigned(32, 16).unwrap().container_bits(), 32);
+        // The whole Table-II family, against an independent derivation
+        // (not the definition): signed b-bit fits 2^(c-1) containers at
+        // b <= c, unsigned only at b <= c - 1.
+        for (name, cfg) in table2_configs() {
+            let expect_w = match cfg.weight.bits {
+                0..=8 => 8,
+                9..=16 => 16,
+                _ => 32,
+            };
+            let expect_a = match cfg.act.bits {
+                0..=7 => 8,
+                8..=15 => 16,
+                _ => 32,
+            };
+            assert_eq!(cfg.weight.container_bits(), expect_w, "{name} weights");
+            assert_eq!(cfg.act.container_bits(), expect_a, "{name} acts");
+        }
+        // The range-level rule is the same function all layers share.
+        assert_eq!(container_bits_for_range(0, 15), 8);
+        assert_eq!(container_bits_for_range(-128, 127), 8);
+        assert_eq!(container_bits_for_range(0, 255), 16);
+        assert_eq!(container_bits_for_range(0, 1 << 20), 32);
+        let head = headline_config();
+        assert_eq!(head.weight.container_bits(), 8); // s6.5
+        assert_eq!(head.act.container_bits(), 8); // u4.2
     }
 
     #[test]

@@ -20,8 +20,10 @@
 //!     zero graph work per call.  Plans compile for one of two datapaths:
 //!     the f32 simulation, or the **bit-true integer datapath**
 //!     (`plan::Datapath::BitTrue`) that executes the lowered HW graph on
-//!     i32 fixed-point codes with i64 accumulators — bit-exactly what the
-//!     FPGA computes, with f32 only at the ingress quantizer and the
+//!     packed fixed-point codes (each tensor in the narrowest i8/i16/i32
+//!     container its format permits, kernels monomorphized per container)
+//!     — bit-exactly what the FPGA computes *and* the bytes its narrow
+//!     datapath streams, with f32 only at the ingress quantizer and the
 //!     egress dequantization.  `ops::execute` is a thin compatibility
 //!     wrapper over it; the old string-keyed interpreter survives only as
 //!     `ops::execute_interpreted` for differential tests and benchmarks.

@@ -217,23 +217,29 @@ fn cmd_dse(args: &Args) -> Result<()> {
     let result = run_sweep(&spec, workers, cache.as_ref())?;
 
     println!(
-        "\n{:<16} {:>5} {:>9} {:>8} {:>10} {:>9} {:>7}",
-        "config", "cap", "acc[%]", "util[%]", "fps", "lat[ms]", ""
+        "\n{:<16} {:>5} {:>9} {:>8} {:>10} {:>9} {:>9} {:>7}",
+        "config", "cap", "acc[%]", "util[%]", "fps", "lat[ms]", "KiB/f", ""
     );
     for (i, o) in result.outcomes.iter().enumerate() {
         println!(
-            "{:<16} {:>5.2} {:>8.2}% {:>7.1}% {:>10.1} {:>9.3} {:>7}",
+            "{:<16} {:>5.2} {:>8.2}% {:>7.1}% {:>10.1} {:>9.3} {:>9.1} {:>7}{}",
             o.point.name,
             o.point.max_utilization,
             o.metrics.acc_mean * 100.0,
             o.metrics.utilization * 100.0,
             o.metrics.fps,
             o.metrics.latency_ms,
+            o.metrics.bytes_per_frame as f64 / 1024.0,
             match (o.cached, result.pareto.contains(&i)) {
                 (true, true) => "cached*",
                 (true, false) => "cached",
                 (false, true) => "*",
                 (false, false) => "",
+            },
+            if o.metrics.non_dyadic_scales > 0 {
+                "  ⚠ non-dyadic scales"
+            } else {
+                ""
             },
         );
     }
@@ -448,6 +454,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.describe(),
         policy.max_batch
     );
+    if let Some(bytes) = runner.bytes_moved_per_frame() {
+        println!(
+            "backbone kernel traffic: {:.1} KiB/frame at the plan's container widths (packed codes on bit-true)",
+            bytes as f64 / 1024.0
+        );
+    }
     let (metrics, _) = serve(runner.as_ref(), &ncm, rx, policy)?;
     println!("{}", metrics.summary());
     println!("paper Fig. 5 reference: 16.3 ms backbone latency, 61.5 fps");

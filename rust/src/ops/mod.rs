@@ -8,9 +8,12 @@
 //!   are parsed ONCE at plan compile, the run loop never scans an attr
 //!   string or clones an attr `Vec` again); the bit-true integer datapath
 //!   has its own spec layer next to it ([`IntOpSpec`] /
-//!   [`execute_int_spec_into`]) executing i32 fixed-point codes with i64
-//!   accumulators — what the FPGA actually computes, not a float
-//!   simulation of it;
+//!   [`execute_int_spec_into`]) executing packed fixed-point codes — each
+//!   tensor stored in the narrowest container its format permits (i8 /
+//!   i16 / i32, [`crate::tensor::IntCode`]) with kernels monomorphized
+//!   per container and a cache-blocked i8×i8→i32-accumulate MVAU inner
+//!   loop — what the FPGA actually computes *and* the bytes it actually
+//!   streams, not a float simulation of either;
 //! * [`execute_node_into`] / [`execute_node_inplace`] — same kernels, with
 //!   the spec resolved from the node's `Attrs` on the spot;
 //! * [`execute_node`] — compatibility form: infers the output shape
@@ -39,7 +42,7 @@ use std::collections::HashMap;
 use anyhow::{anyhow, bail, Result};
 
 use crate::graph::{Graph, Node};
-use crate::tensor::{broadcast_shape, Tensor, TensorData};
+use crate::tensor::{broadcast_shape, DType, IntCode, Tensor, TensorData};
 
 /// Execute the graph on named input tensors; returns all graph outputs.
 ///
@@ -90,7 +93,12 @@ pub fn execute_interpreted(
         let outputs = execute_node(node, &inputs)
             .map_err(|e| anyhow!("executing {} ({}): {e}", node.name, node.op))?;
         if outputs.len() != node.outputs.len() {
-            bail!("node {} produced {} outputs, expected {}", node.name, outputs.len(), node.outputs.len());
+            bail!(
+                "node {} produced {} outputs, expected {}",
+                node.name,
+                outputs.len(),
+                node.outputs.len()
+            );
         }
         for (name, tensor) in node.outputs.iter().zip(outputs) {
             env.insert(name.clone(), tensor);
@@ -402,13 +410,19 @@ pub fn execute_node_inplace(node: &Node, buf: &mut Tensor, rest: &[&Tensor]) -> 
 /// annotations `transforms::annotate_bit_true_formats` writes.
 ///
 /// Steady-state execution of every variant except the two `ingress`
-/// boundaries performs **zero f32 arithmetic**: activations are i32
-/// fixed-point codes, weights/biases/thresholds are pre-converted i32
-/// codes, and the MVAU accumulates i32 x i32 products in i64 (i8 x i8 ->
-/// i32 at the paper's headline widths).  Float scale factors were
-/// decomposed at annotation time into an odd integer multiplier
+/// boundaries performs **zero f32 arithmetic**: activations are packed
+/// fixed-point codes in their narrowest container (i8 / i16 / i32),
+/// weights and standalone threshold matrices are pre-converted
+/// width-native code copies (MVAU bias/thresholds live on the wide
+/// accumulator grid and stay i32), and the MVAU inner loop is
+/// monomorphized per container pair — i8 × i8 accumulates in i32 (the
+/// paper's headline widths), wider pairs in i64.  Float scale factors
+/// were decomposed at annotation time into an odd integer multiplier
 /// (`out_mul` / `m`) plus a power-of-two carried in the slot's
 /// fractional-bit bookkeeping, so scaling is exact integer arithmetic.
+/// Every kernel reads its containers from the tensors it is handed, so
+/// the same [`IntOpSpec`] drives a packed plan and the all-i32
+/// differential oracle ([`crate::plan::ExecutionPlan::compile_bit_true_wide`]).
 #[derive(Debug, Clone, PartialEq)]
 pub enum IntOpSpec {
     /// Ingress quantizer: the ONE step that reads f32 — it compares the
@@ -456,8 +470,61 @@ fn store_i32(v: i64, what: &str) -> Result<i32> {
     i32::try_from(v).map_err(|_| anyhow!("{what}: value {v} overflows the i32 datapath"))
 }
 
+/// Checked narrowing into a packed container — overflow is a datapath
+/// error, never a silent wrap.
+#[inline]
+fn narrow<T: IntCode>(v: i64, what: &str) -> Result<T> {
+    T::from_wide(v)
+        .ok_or_else(|| anyhow!("{what}: value {v} overflows the {:?} container", T::DTYPE))
+}
+
+fn codes_of<'a, T: IntCode>(t: &'a Tensor, what: &str) -> Result<&'a [T]> {
+    T::slice(t.raw_data()).ok_or_else(|| {
+        anyhow!(
+            "{what}: expected {:?} codes, got a {:?} tensor",
+            T::DTYPE,
+            t.dtype()
+        )
+    })
+}
+
+fn codes_mut_of<'a, T: IntCode>(t: &'a mut Tensor, what: &str) -> Result<&'a mut [T]> {
+    let dtype = t.dtype();
+    T::slice_mut(t.raw_data_mut()).ok_or_else(|| {
+        anyhow!(
+            "{what}: expected {:?} codes, got a {dtype:?} tensor",
+            T::DTYPE
+        )
+    })
+}
+
+/// Monomorphize `$e` over the container behind `$dt`: `$T` binds i8 /
+/// i16 / i32 in the respective arm.  Nest invocations to dispatch over
+/// several containers at once (input × weight × output).
+macro_rules! with_code {
+    ($dt:expr, $T:ident, $what:expr, $e:expr) => {
+        match $dt {
+            DType::I8 => {
+                type $T = i8;
+                $e
+            }
+            DType::I16 => {
+                type $T = i16;
+                $e
+            }
+            DType::I32 => {
+                type $T = i32;
+                $e
+            }
+            DType::F32 => bail!("{}: packed integer kernel on an f32 tensor", $what),
+        }
+    };
+}
+
 /// Execute a bit-true spec into a caller-provided buffer — the integer
-/// plan's per-step entry point.
+/// plan's per-step entry point.  Containers are read from the tensors
+/// themselves, so the same spec drives packed (i8/i16) and wide (i32)
+/// plans.
 pub fn execute_int_spec_into(spec: &IntOpSpec, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
     match spec {
         IntOpSpec::QuantizeThreshold {
@@ -469,30 +536,51 @@ pub fn execute_int_spec_into(spec: &IntOpSpec, inputs: &[&Tensor], out: &mut Ten
             layout,
             out_mul,
             out_add,
-        } => threshold_i32_into(inputs[0], inputs[1], *layout, *out_mul, *out_add, out),
+        } => threshold_packed_into(inputs[0], inputs[1], *layout, *out_mul, *out_add, out),
         IntOpSpec::Mvau {
             apply_act,
             out_mul,
             out_add,
-        } => mvau_i32_into(*apply_act, *out_mul, *out_add, inputs, out),
+        } => mvau_packed_into(*apply_act, *out_mul, *out_add, inputs, out),
         IntOpSpec::Im2Col {
             kernel,
             stride,
             pad,
-        } => im2col_i32_into(*kernel, *stride, *pad, inputs, out),
-        IntOpSpec::MaxPoolNhwc => maxpool_nhwc_i32_into(inputs, out),
-        IntOpSpec::AddStreams { shift } => add_streams_i32_into(*shift, inputs, out),
-        IntOpSpec::MulScalar { m, data_input } => mul_scalar_i32_into(*m, inputs[*data_input], out),
-        IntOpSpec::GlobalAccPool => global_acc_pool_i32_into(inputs, out),
+        } => im2col_packed_into(*kernel, *stride, *pad, inputs, out),
+        IntOpSpec::MaxPoolNhwc => maxpool_nhwc_packed_into(inputs, out),
+        IntOpSpec::AddStreams { shift } => add_streams_packed_into(*shift, inputs, out),
+        IntOpSpec::MulScalar { m, data_input } => {
+            mul_scalar_packed_into(*m, inputs[*data_input], out)
+        }
+        IntOpSpec::GlobalAccPool => gap_packed_into(inputs, out),
         IntOpSpec::Transpose { perm, .. } => inputs[0].transpose_into(perm, out),
     }
 }
 
+/// Threshold-matrix geometry against a data tensor: `(rows, K, channel
+/// stride, channels)` with the rows-vs-channels consistency check.
+fn threshold_geometry(
+    t: &Tensor,
+    x_shape: &[usize],
+    x_strides: &[usize],
+    layout: ChanLayout,
+    what: &str,
+) -> Result<(usize, usize, usize, usize)> {
+    let (c_t, k) = (t.shape()[0], t.shape()[1]);
+    let chan_axis = layout.chan_axis(x_shape.len());
+    let c = x_shape[chan_axis];
+    if c_t != c && c_t != 1 {
+        bail!("{what}: threshold rows {c_t} != channels {c}");
+    }
+    Ok((c_t, k, x_strides[chan_axis], c))
+}
+
 /// Ingress quantizer: count float thresholds <= x (comparisons only) and
-/// emit integer codes.  The float compare against the sorted threshold
-/// row is exactly FINN's `q = #{k : x >= t_k}` — identical to the f32
-/// MultiThreshold executor's partition point, so the emitted codes agree
-/// with the float path by construction.
+/// emit integer codes into whatever container the plan selected.  The
+/// float compare against the sorted threshold row is exactly FINN's
+/// `q = #{k : x >= t_k}` — identical to the f32 MultiThreshold executor's
+/// partition point, so the emitted codes agree with the float path by
+/// construction.
 fn quantize_threshold_into(
     x: &Tensor,
     t: &Tensor,
@@ -508,30 +596,28 @@ fn quantize_threshold_into(
             x.shape()
         );
     }
-    let (c_t, k) = (t.shape()[0], t.shape()[1]);
-    let chan_axis = layout.chan_axis(x.ndim());
-    let c = x.shape()[chan_axis];
-    if c_t != c && c_t != 1 {
-        bail!("threshold rows {c_t} != channels {c}");
-    }
-    let chan_stride = x.strides()[chan_axis];
+    let (c_t, k, chan_stride, c) =
+        threshold_geometry(t, x.shape(), &x.strides(), layout, "quantize_threshold")?;
     let ts = t.data();
     let xs = x.data();
-    let od = out.data_i32_mut();
-    for (i, o) in od.iter_mut().enumerate() {
-        let v = xs[i];
-        let row = if c_t == 1 { 0 } else { (i / chan_stride) % c };
-        let q = ts[row * k..(row + 1) * k].partition_point(|&t| t <= v) as i64;
-        *o = store_i32(q * out_mul + out_add, "quantize_threshold")?;
-    }
-    Ok(())
+    with_code!(out.dtype(), O, "quantize_threshold output", {
+        let od = codes_mut_of::<O>(out, "quantize_threshold output")?;
+        for (i, o) in od.iter_mut().enumerate() {
+            let v = xs[i];
+            let row = if c_t == 1 { 0 } else { (i / chan_stride) % c };
+            let q = ts[row * k..(row + 1) * k].partition_point(|&t| t <= v) as i64;
+            *o = narrow::<O>(q * out_mul + out_add, "quantize_threshold")?;
+        }
+        Ok(())
+    })
 }
 
-/// Integer MultiThreshold, out of place: codes against precomputed
-/// integer thresholds, read from `x`, written to `out` — no input copy
-/// (the standalone Thresholding steps' path; the fused MVAU activation
-/// uses the in-place form below on its own accumulator buffer).
-fn threshold_i32_into(
+/// Integer MultiThreshold on packed codes: input, threshold matrix and
+/// output each carry their own container; comparisons widen to i32
+/// (free — a sign-extending load), storage stays narrow.  With
+/// `tc = ceil(t * 2^f)` and `x = c * 2^-f` on the grid, `c >= tc  <=>
+/// x >= t` — bit-exact agreement with the float compare.
+fn threshold_packed_into(
     x: &Tensor,
     t: &Tensor,
     layout: ChanLayout,
@@ -541,60 +627,58 @@ fn threshold_i32_into(
 ) -> Result<()> {
     if out.shape() != x.shape() {
         bail!(
-            "threshold_i32: out shape {:?} != input {:?}",
+            "threshold: out shape {:?} != input {:?}",
             out.shape(),
             x.shape()
         );
     }
-    let (c_t, k) = (t.shape()[0], t.shape()[1]);
-    let chan_axis = layout.chan_axis(x.ndim());
-    let c = x.shape()[chan_axis];
-    if c_t != c && c_t != 1 {
-        bail!("threshold rows {c_t} != channels {c}");
-    }
-    let chan_stride = x.strides()[chan_axis];
-    let ts = t.data_i32();
-    let xs = x.data_i32();
-    let od = out.data_i32_mut();
-    for (i, o) in od.iter_mut().enumerate() {
-        let v = xs[i];
-        let row = if c_t == 1 { 0 } else { (i / chan_stride) % c };
-        let q = ts[row * k..(row + 1) * k].partition_point(|&t| t <= v) as i64;
-        *o = store_i32(q * out_mul + out_add, "threshold_i32")?;
-    }
-    Ok(())
+    let (c_t, k, chan_stride, c) =
+        threshold_geometry(t, x.shape(), &x.strides(), layout, "threshold")?;
+    with_code!(
+        x.dtype(),
+        X,
+        "threshold input",
+        with_code!(
+            t.dtype(),
+            T,
+            "threshold matrix",
+            with_code!(
+                out.dtype(),
+                O,
+                "threshold output",
+                threshold_typed::<X, T, O>(x, t, c_t, k, chan_stride, c, out_mul, out_add, out)
+            )
+        )
+    )
 }
 
-/// Integer MultiThreshold in place: codes against precomputed integer
-/// thresholds.  With `tc = ceil(t * 2^f)` and `x = c * 2^-f` on the grid,
-/// `c >= tc  <=>  x >= t` — bit-exact agreement with the float compare.
-fn threshold_i32_in_place(
-    buf: &mut Tensor,
+fn threshold_typed<X: IntCode, T: IntCode, O: IntCode>(
+    x: &Tensor,
     t: &Tensor,
-    layout: ChanLayout,
+    c_t: usize,
+    k: usize,
+    chan_stride: usize,
+    c: usize,
     out_mul: i64,
     out_add: i64,
+    out: &mut Tensor,
 ) -> Result<()> {
-    let (c_t, k) = (t.shape()[0], t.shape()[1]);
-    let chan_axis = layout.chan_axis(buf.ndim());
-    let c = buf.shape()[chan_axis];
-    if c_t != c && c_t != 1 {
-        bail!("threshold rows {c_t} != channels {c}");
-    }
-    let chan_stride = buf.strides()[chan_axis];
-    let ts = t.data_i32();
-    let xs = buf.data_i32_mut();
-    for (i, v) in xs.iter_mut().enumerate() {
+    let ts = codes_of::<T>(t, "threshold matrix")?;
+    let xs = codes_of::<X>(x, "threshold input")?;
+    let od = codes_mut_of::<O>(out, "threshold output")?;
+    for (i, o) in od.iter_mut().enumerate() {
+        let v = xs[i].widen();
         let row = if c_t == 1 { 0 } else { (i / chan_stride) % c };
-        let q = ts[row * k..(row + 1) * k].partition_point(|&t| t <= *v) as i64;
-        *v = store_i32(q * out_mul + out_add, "threshold_i32")?;
+        let q = ts[row * k..(row + 1) * k].partition_point(|&t| t.widen() <= v) as i64;
+        *o = narrow::<O>(q * out_mul + out_add, "threshold")?;
     }
     Ok(())
 }
 
-/// `[..., K] x [K, N]` integer matmul with i64 accumulation — the
-/// bit-true twin of the f32 `MatMul` kernel (same zero-skip, so the
-/// post-ReLU sparsity optimization carries over).
+/// `[..., K] x [K, N]` integer matmul with i64 accumulation over i32
+/// containers — kept as the plain differential oracle next to the
+/// blocked packed MVAU (same zero-skip, so the post-ReLU sparsity
+/// optimization carries over).
 pub fn matmul_i32_into(x: &Tensor, w: &Tensor, out: &mut Tensor) -> Result<()> {
     let k = *x.shape().last().ok_or_else(|| anyhow!("matmul on scalar"))?;
     let [wk, n]: [usize; 2] = w
@@ -631,37 +715,163 @@ pub fn matmul_i32_into(x: &Tensor, w: &Tensor, out: &mut Tensor) -> Result<()> {
     Ok(())
 }
 
-/// MVAU on the integer datapath: i64-accumulate matmul, integer bias add
-/// (bias codes live on the accumulator grid), optional fused integer
-/// threshold activation — no float anywhere.
-fn mvau_i32_into(
+/// Column-block width of the packed MVAU: bounds the live accumulator
+/// strip (256 × 8 B = 2 KiB — resident in L1 across the whole K loop)
+/// while keeping the inner loop a straight-line multiply-add over
+/// contiguous weights that the compiler can autovectorize.
+const MVAU_BLOCK_N: usize = 256;
+
+/// MVAU on packed codes: cache-blocked matmul monomorphized over the
+/// input/weight containers, integer bias add, optional fused integer
+/// threshold activation — no float anywhere.  i8 × i8 accumulates in i32
+/// (products are < 2^14, so K ≤ 2^16 rows cannot overflow); wider
+/// container pairs accumulate in i64.  Bias and threshold codes live on
+/// the wide accumulator grid and are always i32.
+fn mvau_packed_into(
     apply_act: bool,
     out_mul: i64,
     out_add: i64,
     inputs: &[&Tensor],
     out: &mut Tensor,
 ) -> Result<()> {
-    matmul_i32_into(inputs[0], inputs[1], out)?;
-    let bias = inputs[2].data_i32();
-    let n = bias.len();
-    {
-        let od = out.data_i32_mut();
-        for (i, v) in od.iter_mut().enumerate() {
-            *v = store_i32(*v as i64 + bias[i % n] as i64, "mvau_i32 bias")?;
-        }
-    }
-    if !apply_act {
-        return Ok(());
-    }
-    let thresholds = inputs
-        .get(3)
-        .ok_or_else(|| anyhow!("MVAU with apply_act needs thresholds input"))?;
-    // The fused activation always sees the NHWC stream layout.
-    threshold_i32_in_place(out, thresholds, ChanLayout::Nhwc, out_mul, out_add)
+    let (x, w) = (inputs[0], inputs[1]);
+    let bias = codes_of::<i32>(inputs[2], "mvau bias (accumulator grid)")?;
+    let thr = if apply_act {
+        Some(
+            *inputs
+                .get(3)
+                .ok_or_else(|| anyhow!("MVAU with apply_act needs thresholds input"))?,
+        )
+    } else {
+        None
+    };
+    with_code!(
+        x.dtype(),
+        X,
+        "mvau input",
+        with_code!(
+            w.dtype(),
+            W,
+            "mvau weights",
+            with_code!(
+                out.dtype(),
+                O,
+                "mvau output",
+                mvau_typed::<X, W, O>(out_mul, out_add, x, w, bias, thr, out)
+            )
+        )
+    )
 }
 
-/// NHWC im2col on codes — zero padding is code 0 (value 0 on every grid).
-fn im2col_i32_into(
+fn mvau_typed<X: IntCode, W: IntCode, O: IntCode>(
+    out_mul: i64,
+    out_add: i64,
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[i32],
+    thr: Option<&Tensor>,
+    out: &mut Tensor,
+) -> Result<()> {
+    let k = *x.shape().last().ok_or_else(|| anyhow!("mvau on scalar"))?;
+    let [wk, n]: [usize; 2] = w
+        .shape()
+        .try_into()
+        .map_err(|_| anyhow!("mvau weight must be 2-D"))?;
+    if wk != k {
+        bail!("mvau inner dim {k} != weight rows {wk}");
+    }
+    let rows: usize = x.shape()[..x.ndim() - 1].iter().product();
+    if out.numel() != rows * n {
+        bail!("mvau output buffer {:?} != {rows}x{n}", out.shape());
+    }
+    if bias.len() != n {
+        bail!("mvau bias length {} != output channels {n}", bias.len());
+    }
+    // The fused activation always sees the NHWC stream layout: output
+    // column = channel.
+    let tinfo: Option<(&[i32], usize, usize)> = match thr {
+        Some(t) => {
+            let (c_t, kt) = (t.shape()[0], t.shape()[1]);
+            if c_t != n && c_t != 1 {
+                bail!("mvau threshold rows {c_t} != output channels {n}");
+            }
+            Some((
+                codes_of::<i32>(t, "mvau thresholds (accumulator grid)")?,
+                c_t,
+                kt,
+            ))
+        }
+        None => None,
+    };
+    let xs = codes_of::<X>(x, "mvau input")?;
+    let ws = codes_of::<W>(w, "mvau weights")?;
+    let od = codes_mut_of::<O>(out, "mvau output")?;
+
+    // i32 accumulation is safe iff every |x*w| < 2^(X+W-2) partial sum of
+    // K terms stays below 2^31; the branch is constant per instantiation,
+    // so each monomorphized kernel contains exactly one loop nest.
+    let narrow_acc = X::BITS + W::BITS <= 16 && k <= (1 << 16);
+    let mut acc64 = vec![0i64; MVAU_BLOCK_N];
+    let mut acc32 = vec![0i32; MVAU_BLOCK_N];
+    for r in 0..rows {
+        let xrow = &xs[r * k..(r + 1) * k];
+        let mut jb = 0;
+        while jb < n {
+            let nb = MVAU_BLOCK_N.min(n - jb);
+            if narrow_acc {
+                let acc = &mut acc32[..nb];
+                acc.fill(0);
+                for (kk, &xv) in xrow.iter().enumerate() {
+                    let xv = xv.widen();
+                    if xv == 0 {
+                        continue;
+                    }
+                    let wrow = &ws[kk * n + jb..kk * n + jb + nb];
+                    for (a, &wv) in acc.iter_mut().zip(wrow) {
+                        *a += xv * wv.widen();
+                    }
+                }
+                for (a64, &a32) in acc64[..nb].iter_mut().zip(acc.iter()) {
+                    *a64 = a32 as i64;
+                }
+            } else {
+                let acc = &mut acc64[..nb];
+                acc.fill(0);
+                for (kk, &xv) in xrow.iter().enumerate() {
+                    let xv = xv.widen() as i64;
+                    if xv == 0 {
+                        continue;
+                    }
+                    let wrow = &ws[kk * n + jb..kk * n + jb + nb];
+                    for (a, &wv) in acc.iter_mut().zip(wrow) {
+                        *a += xv * wv.widen() as i64;
+                    }
+                }
+            }
+            for (jj, &a) in acc64[..nb].iter().enumerate() {
+                let col = jb + jj;
+                let v = a + bias[col] as i64;
+                let code = match tinfo {
+                    Some((ts, c_t, kt)) => {
+                        let trow_at = if c_t == 1 { 0 } else { col };
+                        let trow = &ts[trow_at * kt..(trow_at + 1) * kt];
+                        let q = trow.partition_point(|&t| (t as i64) <= v) as i64;
+                        q * out_mul + out_add
+                    }
+                    None => v,
+                };
+                od[r * n + col] = narrow::<O>(code, "mvau")?;
+            }
+            jb += nb;
+        }
+    }
+    Ok(())
+}
+
+/// NHWC im2col on packed codes — zero padding is code 0 (value 0 on
+/// every grid).  Container-preserving: the window generator only moves
+/// bytes, it never widens them.
+fn im2col_packed_into(
     kernel: [usize; 2],
     stride: [usize; 2],
     pad: [usize; 2],
@@ -669,6 +879,28 @@ fn im2col_i32_into(
     out: &mut Tensor,
 ) -> Result<()> {
     let x = inputs[0];
+    if x.dtype() != out.dtype() {
+        bail!(
+            "im2col: container mismatch ({:?} -> {:?})",
+            x.dtype(),
+            out.dtype()
+        );
+    }
+    with_code!(
+        x.dtype(),
+        T,
+        "im2col",
+        im2col_typed::<T>(kernel, stride, pad, x, out)
+    )
+}
+
+fn im2col_typed<T: IntCode>(
+    kernel: [usize; 2],
+    stride: [usize; 2],
+    pad: [usize; 2],
+    x: &Tensor,
+    out: &mut Tensor,
+) -> Result<()> {
     let [kh, kw] = kernel;
     let [sh, sw] = stride;
     let [ph, pw] = pad;
@@ -682,8 +914,8 @@ fn im2col_i32_into(
     if out.numel() != n * ho * wo * k {
         bail!("im2col output buffer {:?} wrong size", out.shape());
     }
-    let xs = x.data_i32();
-    let od = out.data_i32_mut();
+    let xs = codes_of::<T>(x, "im2col input")?;
+    let od = codes_mut_of::<T>(out, "im2col output")?;
     for b in 0..n {
         for oy in 0..ho {
             for ox in 0..wo {
@@ -695,7 +927,7 @@ fn im2col_i32_into(
                         let ix = ox * sw + dx;
                         for ch in 0..c {
                             let v = if iy < ph || iy >= h + ph || ix < pw || ix >= w + pw {
-                                0
+                                T::default()
                             } else {
                                 xs[((b * h + (iy - ph)) * w + (ix - pw)) * c + ch]
                             };
@@ -710,25 +942,43 @@ fn im2col_i32_into(
     Ok(())
 }
 
-/// NHWC 2x2/2 max-pool on codes (monotone dequantization makes the code
-/// max equal the value max).
-fn maxpool_nhwc_i32_into(inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
+/// NHWC 2x2/2 max-pool on packed codes (monotone dequantization makes
+/// the code max equal the value max; same-sign widening keeps order, so
+/// the compare runs on the narrow type directly).
+fn maxpool_nhwc_packed_into(inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
     let x = inputs[0];
+    if x.dtype() != out.dtype() {
+        bail!(
+            "maxpool: container mismatch ({:?} -> {:?})",
+            x.dtype(),
+            out.dtype()
+        );
+    }
+    with_code!(x.dtype(), T, "maxpool", maxpool_nhwc_typed::<T>(x, out))
+}
+
+fn maxpool_nhwc_typed<T: IntCode>(x: &Tensor, out: &mut Tensor) -> Result<()> {
     let [n, h, w, c]: [usize; 4] = x
         .shape()
         .try_into()
         .map_err(|_| anyhow!("pool input must be 4-D"))?;
     let (ho, wo) = (h / 2, w / 2);
-    let xs = x.data_i32();
-    let od = out.data_i32_mut();
+    if out.numel() != n * ho * wo * c {
+        bail!("maxpool output buffer {:?} wrong size", out.shape());
+    }
+    let xs = codes_of::<T>(x, "maxpool input")?;
+    let od = codes_mut_of::<T>(out, "maxpool output")?;
     for b in 0..n {
         for oy in 0..ho {
             for ox in 0..wo {
                 for ch in 0..c {
-                    let mut m = i32::MIN;
+                    let mut m = xs[((b * h + oy * 2) * w + ox * 2) * c + ch];
                     for dy in 0..2 {
                         for dx in 0..2 {
-                            m = m.max(xs[((b * h + oy * 2 + dy) * w + ox * 2 + dx) * c + ch]);
+                            let v = xs[((b * h + oy * 2 + dy) * w + ox * 2 + dx) * c + ch];
+                            if v > m {
+                                m = v;
+                            }
                         }
                     }
                     od[((b * ho + oy) * wo + ox) * c + ch] = m;
@@ -739,8 +989,11 @@ fn maxpool_nhwc_i32_into(inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
     Ok(())
 }
 
-/// Residual add with frac alignment: `(a << s0) + (b << s1)`.
-fn add_streams_i32_into(shift: [u32; 2], inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
+/// Residual add with frac alignment: `(a << s0) + (b << s1)`.  The two
+/// branches of a residual may arrive in different containers (each side
+/// is stored at its own width); the sum lands in the annotated output
+/// container.
+fn add_streams_packed_into(shift: [u32; 2], inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
     let (a, b) = (inputs[0], inputs[1]);
     if a.shape() != b.shape() || out.shape() != a.shape() {
         bail!(
@@ -750,16 +1003,45 @@ fn add_streams_i32_into(shift: [u32; 2], inputs: &[&Tensor], out: &mut Tensor) -
             out.shape()
         );
     }
+    with_code!(
+        a.dtype(),
+        A,
+        "add_streams lhs",
+        with_code!(
+            b.dtype(),
+            B,
+            "add_streams rhs",
+            with_code!(
+                out.dtype(),
+                O,
+                "add_streams output",
+                add_streams_typed::<A, B, O>(shift, a, b, out)
+            )
+        )
+    )
+}
+
+fn add_streams_typed<A: IntCode, B: IntCode, O: IntCode>(
+    shift: [u32; 2],
+    a: &Tensor,
+    b: &Tensor,
+    out: &mut Tensor,
+) -> Result<()> {
     let [s0, s1] = shift;
-    let od = out.data_i32_mut();
-    for ((o, &x), &y) in od.iter_mut().zip(a.data_i32()).zip(b.data_i32()) {
-        *o = store_i32(((x as i64) << s0) + ((y as i64) << s1), "add_streams")?;
+    let asl = codes_of::<A>(a, "add_streams lhs")?;
+    let bsl = codes_of::<B>(b, "add_streams rhs")?;
+    let od = codes_mut_of::<O>(out, "add_streams output")?;
+    for ((o, &x), &y) in od.iter_mut().zip(asl).zip(bsl) {
+        let v = ((x.widen() as i64) << s0) + ((y.widen() as i64) << s1);
+        *o = narrow::<O>(v, "add_streams")?;
     }
     Ok(())
 }
 
-/// Channelwise/scalar multiply on codes by the odd integer multiplier.
-fn mul_scalar_i32_into(m: i64, data: &Tensor, out: &mut Tensor) -> Result<()> {
+/// Channelwise/scalar multiply on packed codes by the odd integer
+/// multiplier (the output container may be wider — `m > 1` grows the
+/// code range).
+fn mul_scalar_packed_into(m: i64, data: &Tensor, out: &mut Tensor) -> Result<()> {
     if out.shape() != data.shape() {
         bail!(
             "mul_scalar: out shape {:?} != input {:?}",
@@ -767,16 +1049,46 @@ fn mul_scalar_i32_into(m: i64, data: &Tensor, out: &mut Tensor) -> Result<()> {
             data.shape()
         );
     }
-    let od = out.data_i32_mut();
-    for (o, &x) in od.iter_mut().zip(data.data_i32()) {
-        *o = store_i32(x as i64 * m, "mul_scalar")?;
+    with_code!(
+        data.dtype(),
+        T,
+        "mul_scalar input",
+        with_code!(
+            out.dtype(),
+            O,
+            "mul_scalar output",
+            mul_scalar_typed::<T, O>(m, data, out)
+        )
+    )
+}
+
+fn mul_scalar_typed<T: IntCode, O: IntCode>(m: i64, data: &Tensor, out: &mut Tensor) -> Result<()> {
+    let xs = codes_of::<T>(data, "mul_scalar input")?;
+    let od = codes_mut_of::<O>(out, "mul_scalar output")?;
+    for (o, &x) in od.iter_mut().zip(xs) {
+        *o = narrow::<O>(x.widen() as i64 * m, "mul_scalar")?;
     }
     Ok(())
 }
 
-/// GlobalAccPool on codes: NHWC -> [N, C] cumulative sum, i64 accumulate.
-fn global_acc_pool_i32_into(inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
+/// GlobalAccPool on packed codes: NHWC -> [N, C] cumulative sum, i64
+/// accumulate, stored in the annotated (spatially widened) container.
+fn gap_packed_into(inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
     let x = inputs[0];
+    with_code!(
+        x.dtype(),
+        T,
+        "gap input",
+        with_code!(
+            out.dtype(),
+            O,
+            "gap output",
+            gap_typed::<T, O>(x, out)
+        )
+    )
+}
+
+fn gap_typed<T: IntCode, O: IntCode>(x: &Tensor, out: &mut Tensor) -> Result<()> {
     let [n, h, w, c]: [usize; 4] = x
         .shape()
         .try_into()
@@ -784,20 +1096,20 @@ fn global_acc_pool_i32_into(inputs: &[&Tensor], out: &mut Tensor) -> Result<()> 
     if out.numel() != n * c {
         bail!("gap output buffer {:?} != [{n}, {c}]", out.shape());
     }
-    let xs = x.data_i32();
+    let xs = codes_of::<T>(x, "gap input")?;
     let mut acc: Vec<i64> = vec![0; n * c];
     for b in 0..n {
         for y in 0..h {
             for xcol in 0..w {
                 for ch in 0..c {
-                    acc[b * c + ch] += xs[((b * h + y) * w + xcol) * c + ch] as i64;
+                    acc[b * c + ch] += xs[((b * h + y) * w + xcol) * c + ch].widen() as i64;
                 }
             }
         }
     }
-    let od = out.data_i32_mut();
+    let od = codes_mut_of::<O>(out, "gap output")?;
     for (o, &a) in od.iter_mut().zip(&acc) {
-        *o = store_i32(a, "global_acc_pool")?;
+        *o = narrow::<O>(a, "global_acc_pool")?;
     }
     Ok(())
 }
@@ -812,6 +1124,8 @@ fn copy_into(src: &Tensor, out: &mut Tensor) -> Result<()> {
     }
     match (src.raw_data(), out.raw_data_mut()) {
         (TensorData::F32(s), TensorData::F32(d)) => d.copy_from_slice(s),
+        (TensorData::I8(s), TensorData::I8(d)) => d.copy_from_slice(s),
+        (TensorData::I16(s), TensorData::I16(d)) => d.copy_from_slice(s),
         (TensorData::I32(s), TensorData::I32(d)) => d.copy_from_slice(s),
         _ => bail!(
             "copy_into: dtype mismatch ({:?} -> {:?})",
@@ -837,8 +1151,14 @@ fn conv_into(
     let [kh, kw] = kernel;
     let [sh, sw] = stride;
     let [ph, pw] = pad;
-    let [n, cin, h, wdim]: [usize; 4] = x.shape().try_into().map_err(|_| anyhow!("conv input must be 4-D"))?;
-    let [cout, wcin, wkh, wkw]: [usize; 4] = w.shape().try_into().map_err(|_| anyhow!("conv weight must be 4-D"))?;
+    let [n, cin, h, wdim]: [usize; 4] = x
+        .shape()
+        .try_into()
+        .map_err(|_| anyhow!("conv input must be 4-D"))?;
+    let [cout, wcin, wkh, wkw]: [usize; 4] = w
+        .shape()
+        .try_into()
+        .map_err(|_| anyhow!("conv weight must be 4-D"))?;
     if wcin != cin || wkh != kh || wkw != kw {
         bail!("conv weight {:?} mismatch with input {:?}", w.shape(), x.shape());
     }
@@ -929,7 +1249,10 @@ fn threshold_in_place(
 fn maxpool_into(kernel: [usize; 2], inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
     let x = inputs[0];
     let [kh, kw] = kernel;
-    let [n, c, h, w]: [usize; 4] = x.shape().try_into().map_err(|_| anyhow!("maxpool input must be 4-D"))?;
+    let [n, c, h, w]: [usize; 4] = x
+        .shape()
+        .try_into()
+        .map_err(|_| anyhow!("maxpool input must be 4-D"))?;
     let (ho, wo) = (h / kh, w / kw);
     let xs = x.data();
     let od = out.data_mut();
@@ -955,7 +1278,10 @@ fn maxpool_into(kernel: [usize; 2], inputs: &[&Tensor], out: &mut Tensor) -> Res
 /// NHWC 2x2/2 max-pool (the streaming HW form).
 fn maxpool_nhwc_into(inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
     let x = inputs[0];
-    let [n, h, w, c]: [usize; 4] = x.shape().try_into().map_err(|_| anyhow!("pool input must be 4-D"))?;
+    let [n, h, w, c]: [usize; 4] = x
+        .shape()
+        .try_into()
+        .map_err(|_| anyhow!("pool input must be 4-D"))?;
     let (ho, wo) = (h / 2, w / 2);
     let xs = x.data();
     let od = out.data_mut();
@@ -1024,7 +1350,10 @@ fn im2col_into(
     let [kh, kw] = kernel;
     let [sh, sw] = stride;
     let [ph, pw] = pad;
-    let [n, h, w, c]: [usize; 4] = x.shape().try_into().map_err(|_| anyhow!("im2col input must be 4-D"))?;
+    let [n, h, w, c]: [usize; 4] = x
+        .shape()
+        .try_into()
+        .map_err(|_| anyhow!("im2col input must be 4-D"))?;
     let ho = (h + 2 * ph - kh) / sh + 1;
     let wo = (w + 2 * pw - kw) / sw + 1;
     let k = kh * kw * c;
@@ -1061,7 +1390,10 @@ fn im2col_into(
 /// Batched-free matmul over the last axis: [..., K] x [K, N] -> [..., N].
 fn matmul_into(x: &Tensor, w: &Tensor, out: &mut Tensor) -> Result<()> {
     let k = *x.shape().last().ok_or_else(|| anyhow!("matmul on scalar"))?;
-    let [wk, n]: [usize; 2] = w.shape().try_into().map_err(|_| anyhow!("matmul weight must be 2-D"))?;
+    let [wk, n]: [usize; 2] = w
+        .shape()
+        .try_into()
+        .map_err(|_| anyhow!("matmul weight must be 2-D"))?;
     if wk != k {
         bail!("matmul inner dim {k} != weight rows {wk}");
     }
@@ -1095,7 +1427,10 @@ fn matmul_into(x: &Tensor, w: &Tensor, out: &mut Tensor) -> Result<()> {
 /// (no division — the following Mul applies 1/HW, §III-D).
 fn global_acc_pool_into(inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
     let x = inputs[0];
-    let [n, h, w, c]: [usize; 4] = x.shape().try_into().map_err(|_| anyhow!("gap input must be 4-D"))?;
+    let [n, h, w, c]: [usize; 4] = x
+        .shape()
+        .try_into()
+        .map_err(|_| anyhow!("gap input must be 4-D"))?;
     let xs = x.data();
     let od = out.data_mut();
     od.fill(0.0);
@@ -1666,5 +2001,174 @@ mod tests {
         for (c, v) in got.data_i32().iter().zip(want.data()) {
             assert_eq!(*c as f32, *v);
         }
+    }
+
+    // ------------------------------------------------- packed containers
+
+    /// The same codes in an i8 tensor and an i32 tensor — the packed
+    /// kernels must be bitwise-equivalent to the wide oracle.
+    fn i8_i32_pair(shape: Vec<usize>, seed: u64, signed: bool) -> (Tensor, Tensor) {
+        let mut rng = crate::rng::Rng::new(seed);
+        let codes8: Vec<i8> = (0..shape.iter().product::<usize>())
+            .map(|_| {
+                let c = rng.below(64) as i64 - if signed { 32 } else { 0 };
+                c as i8
+            })
+            .collect();
+        let codes32: Vec<i32> = codes8.iter().map(|&c| c as i32).collect();
+        (
+            Tensor::new_i8(shape.clone(), codes8).unwrap(),
+            Tensor::new_i32(shape, codes32).unwrap(),
+        )
+    }
+
+    #[test]
+    fn packed_threshold_matches_i32_oracle_across_containers() {
+        let (x8, x32) = i8_i32_pair(vec![1, 2, 3, 4], 50, true);
+        let x16 = Tensor::new_i16(
+            vec![1, 2, 3, 4],
+            x32.data_i32().iter().map(|&c| c as i16).collect(),
+        )
+        .unwrap();
+        let t32 = Tensor::new_i32(vec![1, 3], vec![-5, 0, 9]).unwrap();
+        let t8 = Tensor::new_i8(vec![1, 3], vec![-5, 0, 9]).unwrap();
+        let spec = IntOpSpec::Threshold {
+            layout: ChanLayout::Nhwc,
+            out_mul: 3,
+            out_add: -1,
+        };
+        let mut want = Tensor::zeros_i32(vec![1, 2, 3, 4]);
+        execute_int_spec_into(&spec, &[&x32, &t32], &mut want).unwrap();
+        // Every (input, matrix, output) container combination agrees.
+        for xin in [&x8, &x16, &x32] {
+            for tin in [&t8, &t32] {
+                let mut got8 = Tensor::zeros_typed(vec![1, 2, 3, 4], DType::I8);
+                execute_int_spec_into(&spec, &[xin, tin], &mut got8).unwrap();
+                assert_eq!(got8.codes_i32(), want.codes_i32());
+            }
+        }
+    }
+
+    #[test]
+    fn packed_mvau_matches_i32_oracle_and_crosses_column_blocks() {
+        // n = 300 > MVAU_BLOCK_N exercises the block seam; u4-ish acts and
+        // s6-ish weights take the i8 x i8 -> i32-accumulate fast path.
+        let (rows, k, n) = (4usize, 7usize, 300usize);
+        let mut rng = crate::rng::Rng::new(51);
+        let x8: Vec<i8> = (0..rows * k).map(|_| rng.below(16) as i8).collect();
+        let w8: Vec<i8> = (0..k * n).map(|_| rng.below(64) as i8 - 32).collect();
+        let bias: Vec<i32> = (0..n).map(|_| rng.below(100) as i32 - 50).collect();
+        let xi8 = Tensor::new_i8(vec![rows, k], x8.clone()).unwrap();
+        let wi8 = Tensor::new_i8(vec![k, n], w8.clone()).unwrap();
+        let xi32 =
+            Tensor::new_i32(vec![rows, k], x8.iter().map(|&c| c as i32).collect()).unwrap();
+        let wi32 = Tensor::new_i32(vec![k, n], w8.iter().map(|&c| c as i32).collect()).unwrap();
+        let bt = Tensor::new_i32(vec![n], bias.clone()).unwrap();
+        let tt = Tensor::new_i32(vec![1, 7], vec![-90, -40, -10, 0, 15, 60, 200]).unwrap();
+
+        let spec = IntOpSpec::Mvau {
+            apply_act: true,
+            out_mul: 1,
+            out_add: 0,
+        };
+        let mut want = Tensor::zeros_i32(vec![rows, n]);
+        execute_int_spec_into(&spec, &[&xi32, &wi32, &bt, &tt], &mut want).unwrap();
+        let mut got = Tensor::zeros_typed(vec![rows, n], DType::I8);
+        execute_int_spec_into(&spec, &[&xi8, &wi8, &bt, &tt], &mut got).unwrap();
+        assert_eq!(got.codes_i32(), want.codes_i32());
+
+        // Raw (no-act) MVAU: wide accumulator output.
+        let spec = IntOpSpec::Mvau {
+            apply_act: false,
+            out_mul: 1,
+            out_add: 0,
+        };
+        let mut want = Tensor::zeros_i32(vec![rows, n]);
+        execute_int_spec_into(&spec, &[&xi32, &wi32, &bt], &mut want).unwrap();
+        let mut got = Tensor::zeros_i32(vec![rows, n]);
+        execute_int_spec_into(&spec, &[&xi8, &wi8, &bt], &mut got).unwrap();
+        assert_eq!(got.data_i32(), want.data_i32());
+        // And it matches the plain matmul oracle + bias by hand.
+        let mut mm = Tensor::zeros_i32(vec![rows, n]);
+        matmul_i32_into(&xi32, &wi32, &mut mm).unwrap();
+        for (i, (&v, &m)) in want.data_i32().iter().zip(mm.data_i32()).enumerate() {
+            assert_eq!(v, m + bias[i % n]);
+        }
+    }
+
+    #[test]
+    fn packed_addstreams_and_mulscalar_mix_containers() {
+        let (a8, a32) = i8_i32_pair(vec![6], 52, true);
+        let b16 = Tensor::new_i16(vec![6], vec![100, -200, 300, -400, 500, -600]).unwrap();
+        let b32 = Tensor::new_i32(vec![6], b16.codes_i32()).unwrap();
+        let spec = IntOpSpec::AddStreams { shift: [4, 0] };
+        let mut want = Tensor::zeros_i32(vec![6]);
+        execute_int_spec_into(&spec, &[&a32, &b32], &mut want).unwrap();
+        let mut got = Tensor::zeros_typed(vec![6], DType::I16);
+        execute_int_spec_into(&spec, &[&a8, &b16], &mut got).unwrap();
+        assert_eq!(got.codes_i32(), want.codes_i32());
+
+        // MulScalar widening: i8 codes x 100 land in an i16 container.
+        let spec = IntOpSpec::MulScalar {
+            m: 100,
+            data_input: 0,
+        };
+        let mut wide = Tensor::zeros_typed(vec![6], DType::I16);
+        execute_int_spec_into(&spec, &[&a8], &mut wide).unwrap();
+        let mut oracle = Tensor::zeros_i32(vec![6]);
+        execute_int_spec_into(&spec, &[&a32], &mut oracle).unwrap();
+        assert_eq!(wide.codes_i32(), oracle.codes_i32());
+    }
+
+    #[test]
+    fn packed_im2col_maxpool_gap_preserve_codes() {
+        let (x8, x32) = i8_i32_pair(vec![1, 4, 4, 2], 53, false);
+        let spec = IntOpSpec::Im2Col {
+            kernel: [3, 3],
+            stride: [1, 1],
+            pad: [1, 1],
+        };
+        let mut want = Tensor::zeros_i32(vec![1, 4, 4, 18]);
+        execute_int_spec_into(&spec, &[&x32], &mut want).unwrap();
+        let mut got = Tensor::zeros_typed(vec![1, 4, 4, 18], DType::I8);
+        execute_int_spec_into(&spec, &[&x8], &mut got).unwrap();
+        assert_eq!(got.codes_i32(), want.codes_i32());
+        // Container mismatch between input and output is an error, not a
+        // silent cast.
+        let mut bad = Tensor::zeros_i32(vec![1, 4, 4, 18]);
+        assert!(execute_int_spec_into(&spec, &[&x8], &mut bad).is_err());
+
+        let mut want = Tensor::zeros_i32(vec![1, 2, 2, 2]);
+        execute_int_spec_into(&IntOpSpec::MaxPoolNhwc, &[&x32], &mut want).unwrap();
+        let mut got = Tensor::zeros_typed(vec![1, 2, 2, 2], DType::I8);
+        execute_int_spec_into(&IntOpSpec::MaxPoolNhwc, &[&x8], &mut got).unwrap();
+        assert_eq!(got.codes_i32(), want.codes_i32());
+
+        let mut want = Tensor::zeros_i32(vec![1, 2]);
+        execute_int_spec_into(&IntOpSpec::GlobalAccPool, &[&x32], &mut want).unwrap();
+        let mut got = Tensor::zeros_typed(vec![1, 2], DType::I16);
+        execute_int_spec_into(&IntOpSpec::GlobalAccPool, &[&x8], &mut got).unwrap();
+        assert_eq!(got.codes_i32(), want.codes_i32());
+    }
+
+    #[test]
+    fn packed_container_overflow_is_an_error() {
+        // Accumulator value 1000 cannot be stored as a raw i8 MVAU output.
+        let x = Tensor::new_i8(vec![1, 2], vec![10, 10]).unwrap();
+        let w = Tensor::new_i8(vec![2, 1], vec![50, 50]).unwrap();
+        let b = Tensor::new_i32(vec![1], vec![0]).unwrap();
+        let spec = IntOpSpec::Mvau {
+            apply_act: false,
+            out_mul: 1,
+            out_add: 0,
+        };
+        let mut narrow_out = Tensor::zeros_typed(vec![1, 1], DType::I8);
+        let err = execute_int_spec_into(&spec, &[&x, &w, &b], &mut narrow_out)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("overflows the I8 container"), "{err}");
+        let mut wide_out = Tensor::zeros_typed(vec![1, 1], DType::I16);
+        execute_int_spec_into(&spec, &[&x, &w, &b], &mut wide_out).unwrap();
+        assert_eq!(wide_out.codes_i32(), vec![1000]);
     }
 }

@@ -38,16 +38,27 @@
 //! simulation the transform pipeline verifies against.  `BitTrue`
 //! compiles a *fully-lowered, format-annotated* HW graph
 //! ([`crate::transforms::annotate_bit_true_formats`]) into typed slots:
-//! activations are `i32` fixed-point code tensors, initializers are
-//! converted to integer codes ONCE at compile (weights/biases checked
-//! onto their grids, thresholds via the exact `ceil(t * 2^frac)` rule),
-//! and every step dispatches an integer kernel
-//! ([`crate::ops::IntOpSpec`]).  The only steps allowed to touch f32 are
-//! the ingress layout Transpose and the ingress quantizer (float
-//! *comparisons*, no arithmetic); [`ExecutionPlan::kernel_variants`] is
-//! the audit hook tests use to prove it.  Outputs are integer codes with
+//! activations are **packed** fixed-point code tensors stored in the
+//! narrowest container their annotated code range permits (`bt_container`
+//! -> i8 / i16 / i32), initializers are converted to width-native integer
+//! codes ONCE at compile (weights/biases checked onto their grids,
+//! thresholds via the exact `ceil(t * 2^frac)` rule; MVAU bias/threshold
+//! codes stay on the wide i32 accumulator grid), and every step
+//! dispatches a container-monomorphized integer kernel
+//! ([`crate::ops::IntOpSpec`]).  The buffer arena keeps one pool per
+//! container width, so an i8 activation costs a quarter of the bandwidth
+//! its i32 predecessor did — the narrow-datapath story of the paper on
+//! the CPU side, measured by [`ExecutionPlan::bytes_moved_per_frame`].
+//! [`ExecutionPlan::compile_bit_true_wide`] forces every container to
+//! i32: the differential oracle packed plans are tested against.
+//!
+//! The only steps allowed to touch f32 are the ingress layout Transpose
+//! and the ingress quantizer (float *comparisons*, no arithmetic);
+//! [`ExecutionPlan::kernel_variants`] is the audit hook tests use to
+//! prove it — and it reports the container width each integer step ran
+//! at ("int8" / "int16" / "int32").  Outputs are integer codes with
 //! [`ExecutionPlan::output_frac`] fractional bits — the [`PlanRunner`]
-//! dequantizes once at egress.
+//! dequantizes once at egress, straight from the packed codes.
 //!
 //! [`run_with`]: ExecutionPlan::run_with
 
@@ -145,8 +156,11 @@ pub struct PlanScratch {
     act: Vec<Option<Tensor>>,
     /// Free f32 buffers returned by dead activations.
     pool_f: Vec<Vec<f32>>,
-    /// Free i32 code buffers (the bit-true datapath's arena).
-    pool_i: Vec<Vec<i32>>,
+    /// Free packed code buffers, one pool per container width — an i8
+    /// activation never borrows (or pays for) an i32-sized allocation.
+    pool_i8: Vec<Vec<i8>>,
+    pool_i16: Vec<Vec<i16>>,
+    pool_i32: Vec<Vec<i32>>,
     pub stats: ArenaStats,
 }
 
@@ -169,7 +183,11 @@ pub struct ArenaStats {
 /// fits forever).  The buffer is NOT zeroed — every kernel behind the
 /// into-executors either fully overwrites or zero-fills before
 /// accumulating, so steady-state same-size reuse writes nothing here.
-fn carve<T: Copy + Default>(pool: &mut Vec<Vec<T>>, stats: &mut ArenaStats, numel: usize) -> Vec<T> {
+fn carve<T: Copy + Default>(
+    pool: &mut Vec<Vec<T>>,
+    stats: &mut ArenaStats,
+    numel: usize,
+) -> Vec<T> {
     if pool.is_empty() {
         stats.fresh_allocs += 1;
         return vec![T::default(); numel];
@@ -189,13 +207,19 @@ fn carve<T: Copy + Default>(pool: &mut Vec<Vec<T>>, stats: &mut ArenaStats, nume
 }
 
 impl PlanScratch {
+    fn pool_back(&mut self, data: TensorData) {
+        match data {
+            TensorData::F32(v) => self.pool_f.push(v),
+            TensorData::I8(v) => self.pool_i8.push(v),
+            TensorData::I16(v) => self.pool_i16.push(v),
+            TensorData::I32(v) => self.pool_i32.push(v),
+        }
+    }
+
     fn reset(&mut self, n_slots: usize) {
-        for slot in self.act.iter_mut() {
-            if let Some(t) = slot.take() {
-                match t.into_raw_data() {
-                    TensorData::F32(v) => self.pool_f.push(v),
-                    TensorData::I32(v) => self.pool_i.push(v),
-                }
+        for i in 0..self.act.len() {
+            if let Some(t) = self.act[i].take() {
+                self.pool_back(t.into_raw_data());
             }
         }
         self.act.resize(n_slots, None);
@@ -204,10 +228,7 @@ impl PlanScratch {
 
     /// Return a dead activation's buffer to the matching pool.
     fn recycle(&mut self, t: Tensor) {
-        match t.into_raw_data() {
-            TensorData::F32(v) => self.pool_f.push(v),
-            TensorData::I32(v) => self.pool_i.push(v),
-        }
+        self.pool_back(t.into_raw_data());
     }
 
     fn alloc(&mut self, shape: &[usize]) -> Result<Tensor> {
@@ -215,15 +236,22 @@ impl PlanScratch {
         Tensor::new(shape.to_vec(), carve(&mut self.pool_f, &mut self.stats, numel))
     }
 
-    fn alloc_i32(&mut self, shape: &[usize]) -> Result<Tensor> {
-        let numel: usize = shape.iter().product();
-        Tensor::new_i32(shape.to_vec(), carve(&mut self.pool_i, &mut self.stats, numel))
-    }
-
     fn alloc_typed(&mut self, shape: &[usize], dtype: DType) -> Result<Tensor> {
+        let numel: usize = shape.iter().product();
         match dtype {
             DType::F32 => self.alloc(shape),
-            DType::I32 => self.alloc_i32(shape),
+            DType::I8 => Tensor::new_i8(
+                shape.to_vec(),
+                carve(&mut self.pool_i8, &mut self.stats, numel),
+            ),
+            DType::I16 => Tensor::new_i16(
+                shape.to_vec(),
+                carve(&mut self.pool_i16, &mut self.stats, numel),
+            ),
+            DType::I32 => Tensor::new_i32(
+                shape.to_vec(),
+                carve(&mut self.pool_i32, &mut self.stats, numel),
+            ),
         }
     }
 }
@@ -244,10 +272,14 @@ pub struct ExecutionPlan {
     /// outputs / the f32 datapath) — the egress dequantization contract.
     out_fracs: Vec<Option<i32>>,
     /// Initializer tensors bound to their slots at compile time (already
-    /// converted to i32 codes on the bit-true datapath).
+    /// converted to packed integer codes on the bit-true datapath).
     init: Vec<Option<Tensor>>,
     /// Slot -> tensor name (diagnostics only).
     slot_names: Vec<String>,
+    /// Bytes every run streams through the kernels: per step, the bytes
+    /// of every input read plus the output written, at the slots' actual
+    /// container widths (DESIGN.md §9 bytes-moved accounting).
+    bytes_moved: u64,
 }
 
 fn intern<'g>(
@@ -274,10 +306,22 @@ enum ConvMode {
     Ceil,
 }
 
-/// Convert an f32 initializer to i32 codes at `frac` fractional bits.
-fn quantize_init(t: &Tensor, frac: i32, mode: ConvMode, name: &str) -> Result<Tensor> {
+/// Convert an f32 initializer to integer codes at `frac` fractional
+/// bits.  With `narrow`, the codes land in the narrowest container that
+/// holds them (width-native weight / threshold copies — the BRAM-model
+/// bandwidth story on the CPU side); without it they stay i32 (MVAU
+/// bias/threshold data on the wide accumulator grid, and every
+/// conversion of a [`ExecutionPlan::compile_bit_true_wide`] oracle plan).
+fn quantize_init(
+    t: &Tensor,
+    frac: i32,
+    mode: ConvMode,
+    narrow: bool,
+    name: &str,
+) -> Result<Tensor> {
     let scale = (2.0f64).powi(frac);
     let mut codes = Vec::with_capacity(t.numel());
+    let (mut lo, mut hi) = (0i64, 0i64);
     for &v in t.data() {
         let exact = v as f64 * scale;
         let code = match mode {
@@ -295,9 +339,21 @@ fn quantize_init(t: &Tensor, frac: i32, mode: ConvMode, name: &str) -> Result<Te
         if code > i32::MAX as f64 || code < i32::MIN as f64 {
             bail!("initializer {name}: code {code} overflows the i32 datapath");
         }
-        codes.push(code as i32);
+        let code = code as i64;
+        lo = lo.min(code);
+        hi = hi.max(code);
+        codes.push(code);
     }
-    Tensor::new_i32(t.shape().to_vec(), codes)
+    let shape = t.shape().to_vec();
+    if narrow {
+        // Same container-selection rule as the bt_container annotation.
+        match crate::fixedpoint::container_bits_for_range(lo, hi) {
+            8 => return Tensor::new_i8(shape, codes.into_iter().map(|c| c as i8).collect()),
+            16 => return Tensor::new_i16(shape, codes.into_iter().map(|c| c as i16).collect()),
+            _ => {}
+        }
+    }
+    Tensor::new_i32(shape, codes.into_iter().map(|c| c as i32).collect())
 }
 
 /// Read a `bt_*` annotation, with a helpful error when it is missing.
@@ -311,10 +367,22 @@ fn bt_attr(node: &Node, key: &str) -> Result<i64> {
     })
 }
 
+/// One initializer conversion a bit-true step needs: input index, frac,
+/// rounding mode, and whether the codes may pack into a narrow container
+/// (weights and standalone threshold matrices) or must stay on the wide
+/// i32 accumulator grid (MVAU bias/threshold data).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct ConvJob {
+    input: usize,
+    frac: i32,
+    mode: ConvMode,
+    narrow: bool,
+}
+
 /// Resolve a node into its integer kernel spec plus the initializer
-/// conversions it needs: `(spec, [(input index, frac, mode)])`.
-fn resolve_int_step(node: &Node) -> Result<(ops::IntOpSpec, Vec<(usize, i32, ConvMode)>)> {
-    let mut conv: Vec<(usize, i32, ConvMode)> = Vec::new();
+/// conversions it needs.
+fn resolve_int_step(node: &Node) -> Result<(ops::IntOpSpec, Vec<ConvJob>)> {
+    let mut conv: Vec<ConvJob> = Vec::new();
     let spec = match node.op.as_str() {
         "Transpose" => ops::IntOpSpec::Transpose {
             perm: node.attrs.ints("perm")?.iter().map(|&p| p as usize).collect(),
@@ -328,17 +396,37 @@ fn resolve_int_step(node: &Node) -> Result<(ops::IntOpSpec, Vec<(usize, i32, Con
                 // Ingress quantizer: float thresholds stay float.
                 ops::IntOpSpec::QuantizeThreshold { layout, out_mul, out_add }
             } else {
-                conv.push((1, bt_attr(node, "bt_in_frac")? as i32, ConvMode::Ceil));
+                conv.push(ConvJob {
+                    input: 1,
+                    frac: bt_attr(node, "bt_in_frac")? as i32,
+                    mode: ConvMode::Ceil,
+                    narrow: true,
+                });
                 ops::IntOpSpec::Threshold { layout, out_mul, out_add }
             }
         }
         "MVAU" => {
             let apply_act = node.attrs.int_or("apply_act", 1) != 0;
             let acc_frac = bt_attr(node, "bt_acc_frac")? as i32;
-            conv.push((1, bt_attr(node, "bt_w_frac")? as i32, ConvMode::Exact));
-            conv.push((2, acc_frac, ConvMode::Exact));
+            conv.push(ConvJob {
+                input: 1,
+                frac: bt_attr(node, "bt_w_frac")? as i32,
+                mode: ConvMode::Exact,
+                narrow: true,
+            });
+            conv.push(ConvJob {
+                input: 2,
+                frac: acc_frac,
+                mode: ConvMode::Exact,
+                narrow: false,
+            });
             if apply_act {
-                conv.push((3, acc_frac, ConvMode::Ceil));
+                conv.push(ConvJob {
+                    input: 3,
+                    frac: acc_frac,
+                    mode: ConvMode::Ceil,
+                    narrow: false,
+                });
             }
             ops::IntOpSpec::Mvau {
                 apply_act,
@@ -378,13 +466,26 @@ impl ExecutionPlan {
 
     /// Compile a fully-lowered, format-annotated HW graph for the
     /// bit-true integer datapath (see the module docs' ingress/egress
-    /// contract).
+    /// contract): activations and weight/threshold initializers are
+    /// packed into the narrowest containers their annotations permit.
     pub fn compile_bit_true(graph: &Graph) -> Result<Self> {
         Self::compile_with(graph, Datapath::BitTrue)
     }
 
+    /// Compile the bit-true datapath with every container forced to i32
+    /// — the differential oracle packed plans are verified against (and
+    /// the "before" side of the packed-vs-i32 bench).  Same kernels,
+    /// same codes, 4x the bytes for sub-8-bit formats.
+    pub fn compile_bit_true_wide(graph: &Graph) -> Result<Self> {
+        Self::compile_impl(graph, Datapath::BitTrue, true)
+    }
+
     /// Compile for an explicit datapath.
     pub fn compile_with(graph: &Graph, datapath: Datapath) -> Result<Self> {
+        Self::compile_impl(graph, datapath, false)
+    }
+
+    fn compile_impl(graph: &Graph, datapath: Datapath, wide: bool) -> Result<Self> {
         let order = graph.toposort_order()?;
         let mut slot_of: HashMap<&str, u32> = HashMap::new();
         let mut slot_names: Vec<String> = Vec::new();
@@ -408,8 +509,8 @@ impl ExecutionPlan {
         let mut known: Vec<Option<Vec<usize>>> = vec![None; slot_names.len()];
         // slot -> fractional bits (bit-true datapath egress bookkeeping)
         let mut slot_frac: Vec<Option<i32>> = vec![None; slot_names.len()];
-        // bit-true initializer conversions: (slot, frac, mode)
-        let mut conv_jobs: Vec<(u32, i32, ConvMode)> = Vec::new();
+        // bit-true initializer conversions: (slot, job)
+        let mut conv_jobs: Vec<(u32, ConvJob)> = Vec::new();
         // initializer slots an ingress kernel must keep as raw f32
         let mut f32_init_slots: Vec<u32> = Vec::new();
         for f in &feeds {
@@ -480,11 +581,14 @@ impl ExecutionPlan {
                 Datapath::BitTrue => {
                     let (spec, conv) = resolve_int_step(node)
                         .map_err(|e| anyhow!("plan: node {} ({}): {e}", node.name, node.op))?;
-                    for (input_idx, frac, mode) in conv {
-                        let slot = *inputs.get(input_idx).ok_or_else(|| {
-                            anyhow!("plan: node {}: missing input {input_idx}", node.name)
+                    for mut job in conv {
+                        let slot = *inputs.get(job.input).ok_or_else(|| {
+                            anyhow!("plan: node {}: missing input {}", node.name, job.input)
                         })?;
-                        conv_jobs.push((slot, frac, mode));
+                        if wide {
+                            job.narrow = false;
+                        }
+                        conv_jobs.push((slot, job));
                     }
                     // The ingress quantizer reads its threshold matrix as
                     // raw f32 — that slot must never also be converted.
@@ -495,7 +599,20 @@ impl ExecutionPlan {
                         DType::F32
                     } else {
                         slot_frac[output as usize] = Some(bt_attr(node, "bt_out_frac")? as i32);
-                        DType::I32
+                        if wide {
+                            DType::I32
+                        } else {
+                            match bt_attr(node, "bt_container")? {
+                                8 => DType::I8,
+                                16 => DType::I16,
+                                32 => DType::I32,
+                                other => bail!(
+                                    "plan: node {} ({}): bad bt_container {other} (want 8/16/32)",
+                                    node.name,
+                                    node.op
+                                ),
+                            }
+                        }
                     };
                     (StepKind::Int(spec), dtype)
                 }
@@ -545,11 +662,13 @@ impl ExecutionPlan {
 
         // Bit-true datapath: convert the initializers integer kernels
         // read — weights/biases exactly onto their grids, thresholds via
-        // the ceil rule — ONCE, into the plan's private copies (the graph
-        // keeps its f32 initializers for folding/BRAM modeling).
+        // the ceil rule, weights/standalone-threshold matrices packed
+        // into their narrowest containers — ONCE, into the plan's private
+        // copies (the graph keeps its f32 initializers for folding/BRAM
+        // modeling).
         if datapath == Datapath::BitTrue {
-            let mut converted: HashMap<u32, (i32, ConvMode)> = HashMap::new();
-            for (slot, frac, mode) in conv_jobs {
+            let mut converted: HashMap<u32, ConvJob> = HashMap::new();
+            for (slot, job) in conv_jobs {
                 // Shared with an f32-retaining ingress consumer: reject at
                 // compile (the run loop would otherwise hit the typed
                 // accessor panic instead of a Result error).
@@ -559,14 +678,15 @@ impl ExecutionPlan {
                         slot_names[slot as usize]
                     );
                 }
-                if let Some(&(prev_frac, prev_mode)) = converted.get(&slot) {
-                    // A second consumer must agree on frac AND rounding
-                    // mode — a threshold-style Ceil conversion silently
-                    // standing in for an Exact weight/bias grid check
-                    // (or vice versa) would corrupt codes, not error.
-                    if prev_frac != frac || prev_mode != mode {
+                if let Some(prev) = converted.get(&slot) {
+                    // A second consumer must agree on frac, rounding mode
+                    // AND container policy — a threshold-style Ceil
+                    // conversion silently standing in for an Exact
+                    // weight/bias grid check (or a narrow copy for a
+                    // wide-grid consumer) would corrupt codes, not error.
+                    if (prev.frac, prev.mode, prev.narrow) != (job.frac, job.mode, job.narrow) {
                         bail!(
-                            "plan: initializer {} shared across incompatible bit-true conversions ({prev_frac} frac {prev_mode:?} vs {frac} frac {mode:?})",
+                            "plan: initializer {} shared across incompatible bit-true conversions ({prev:?} vs {job:?})",
                             slot_names[slot as usize]
                         );
                     }
@@ -578,9 +698,14 @@ impl ExecutionPlan {
                         slot_names[slot as usize]
                     )
                 })?;
-                init[slot as usize] =
-                    Some(quantize_init(src, frac, mode, &slot_names[slot as usize])?);
-                converted.insert(slot, (frac, mode));
+                init[slot as usize] = Some(quantize_init(
+                    src,
+                    job.frac,
+                    job.mode,
+                    job.narrow,
+                    &slot_names[slot as usize],
+                )?);
+                converted.insert(slot, job);
             }
         }
 
@@ -641,6 +766,34 @@ impl ExecutionPlan {
         }
 
         let n_activations = produced_by.iter().filter(|p| p.is_some()).count();
+
+        // Bytes-moved-per-frame: what each step reads (feeds at f32,
+        // initializers and activations at their actual container widths)
+        // plus what it writes.  Computed once at compile; the run loop
+        // never re-measures.
+        let mut bytes_moved = 0u64;
+        for step in &steps {
+            for &s in &step.inputs {
+                let s = s as usize;
+                let (numel, sz) = if let Some(t) = init[s].as_ref() {
+                    (t.numel(), t.dtype().size_bytes())
+                } else if let Some(p) = produced_by[s] {
+                    (
+                        steps[p].out_shape.iter().product(),
+                        steps[p].out_dtype.size_bytes(),
+                    )
+                } else {
+                    (
+                        known[s].as_ref().map(|sh| sh.iter().product()).unwrap_or(0),
+                        4,
+                    )
+                };
+                bytes_moved += (numel * sz) as u64;
+            }
+            bytes_moved +=
+                (step.out_shape.iter().product::<usize>() * step.out_dtype.size_bytes()) as u64;
+        }
+
         Ok(Self {
             name: graph.name.clone(),
             datapath,
@@ -652,6 +805,7 @@ impl ExecutionPlan {
             out_fracs,
             init,
             slot_names,
+            bytes_moved,
         })
     }
 
@@ -677,18 +831,37 @@ impl ExecutionPlan {
     /// `(op, kernel variant)` per step — the bit-true audit hook: a
     /// bit-true plan must contain no "f32" variant, exactly one
     /// "ingress-quant" and at most one "ingress-f32" layout conversion;
-    /// everything else is "int".
+    /// every steady-state step reports the container width its output is
+    /// stored at ("int8" / "int16" / "int32"), so tests can audit not
+    /// just *that* a step ran integer kernels but *how wide*.
     pub fn kernel_variants(&self) -> Vec<(String, &'static str)> {
         self.steps
             .iter()
             .map(|s| {
                 let v = match &s.kind {
                     StepKind::F32(_) => "f32",
-                    StepKind::Int(spec) => spec.variant(),
+                    StepKind::Int(spec) => match spec.variant() {
+                        "int" => match s.out_dtype {
+                            DType::I8 => "int8",
+                            DType::I16 => "int16",
+                            DType::I32 => "int32",
+                            DType::F32 => "int-f32-bug",
+                        },
+                        ingress => ingress,
+                    },
                 };
                 (s.op.clone(), v)
             })
             .collect()
+    }
+
+    /// Bytes one frame streams through the kernels (inputs read + outputs
+    /// written, at actual container widths).  On the packed bit-true
+    /// datapath this is the narrow-container bandwidth the paper's
+    /// arbitrary-width datapaths save; compare against
+    /// [`ExecutionPlan::compile_bit_true_wide`] for the i32 baseline.
+    pub fn bytes_moved_per_frame(&self) -> u64 {
+        self.bytes_moved
     }
 
     pub fn num_steps(&self) -> usize {
@@ -933,6 +1106,12 @@ impl PlanRunner {
         self.scratch.borrow().stats
     }
 
+    /// Bytes one frame streams through the backbone's kernels (see
+    /// [`ExecutionPlan::bytes_moved_per_frame`]).
+    pub fn bytes_moved_per_frame(&self) -> u64 {
+        self.plan.bytes_moved_per_frame()
+    }
+
     /// Run the plan for the first `live` frames of a full batch buffer —
     /// padded filler frames are never executed (the plan is per-frame,
     /// unlike a fixed-batch PJRT executable).
@@ -959,14 +1138,25 @@ impl PlanRunner {
             let t = out
                 .remove(&self.output)
                 .ok_or_else(|| anyhow!("plan produced no {}", self.output))?;
-            match t.raw_data() {
-                TensorData::F32(v) => feats.extend_from_slice(v),
-                TensorData::I32(codes) => {
-                    // Egress: the ONLY dequantization on the bit-true path.
-                    let scale = self
-                        .out_scale
-                        .ok_or_else(|| anyhow!("integer output from an f32 plan"))?;
-                    feats.extend(codes.iter().map(|&c| (c as f64 / scale) as f32));
+            if let TensorData::F32(v) = t.raw_data() {
+                feats.extend_from_slice(v);
+            } else {
+                // Egress: the ONLY dequantization on the bit-true path —
+                // straight from the packed codes, no widening copy.
+                let scale = self
+                    .out_scale
+                    .ok_or_else(|| anyhow!("integer output from an f32 plan"))?;
+                match t.raw_data() {
+                    TensorData::I8(codes) => {
+                        feats.extend(codes.iter().map(|&c| (c as f64 / scale) as f32))
+                    }
+                    TensorData::I16(codes) => {
+                        feats.extend(codes.iter().map(|&c| (c as f64 / scale) as f32))
+                    }
+                    TensorData::I32(codes) => {
+                        feats.extend(codes.iter().map(|&c| (c as f64 / scale) as f32))
+                    }
+                    TensorData::F32(_) => unreachable!("handled above"),
                 }
             }
         }
@@ -977,6 +1167,10 @@ impl PlanRunner {
 impl crate::coordinator::FeatureExtractor for PlanRunner {
     fn batch(&self) -> usize {
         self.batch
+    }
+
+    fn bytes_moved_per_frame(&self) -> Option<u64> {
+        Some(self.plan.bytes_moved_per_frame())
     }
 
     fn img(&self) -> usize {
@@ -1235,21 +1429,52 @@ mod tests {
         );
         let want = f32_plan.run(&feeds).unwrap();
         let got = int_plan.run(&feeds).unwrap();
-        let codes = got["y"].data_i32();
+        let codes = got["y"].codes_i32();
         assert_eq!(codes.len(), want["y"].numel());
         for (c, v) in codes.iter().zip(want["y"].data()) {
             assert_eq!((*c as f64 / 2.0) as f32, *v);
         }
         // Ingress quantizer + one steady-state integer threshold — no
-        // "f32" kernel anywhere.
+        // "f32" kernel anywhere; the second threshold's codes span
+        // [0, 2], so they pack into an i8 container.
         let variants = int_plan.kernel_variants();
         assert_eq!(
             variants,
             vec![
                 ("MultiThreshold".to_string(), "ingress-quant"),
-                ("MultiThreshold".to_string(), "int"),
+                ("MultiThreshold".to_string(), "int8"),
             ]
         );
+    }
+
+    #[test]
+    fn packed_plan_matches_wide_oracle_and_moves_fewer_bytes() {
+        let mut g = bt_threshold_graph();
+        crate::transforms::annotate_bit_true_formats(&mut g).unwrap();
+        let packed = ExecutionPlan::compile_bit_true(&g).unwrap();
+        let wide = ExecutionPlan::compile_bit_true_wide(&g).unwrap();
+        // The wide oracle runs everything in i32 containers.
+        assert!(wide
+            .kernel_variants()
+            .iter()
+            .all(|(_, v)| *v != "int8" && *v != "int16"));
+        let mut feeds = HashMap::new();
+        feeds.insert(
+            "x".to_string(),
+            Tensor::from_fn(vec![1, 2, 2, 3], |i| i as f32 * 0.11),
+        );
+        let a = packed.run(&feeds).unwrap();
+        let b = wide.run(&feeds).unwrap();
+        assert_eq!(a["y"].codes_i32(), b["y"].codes_i32());
+        assert_eq!(a["y"].dtype(), DType::I8);
+        assert_eq!(b["y"].dtype(), DType::I32);
+        assert!(
+            packed.bytes_moved_per_frame() < wide.bytes_moved_per_frame(),
+            "packed {} !< wide {}",
+            packed.bytes_moved_per_frame(),
+            wide.bytes_moved_per_frame()
+        );
+        assert_eq!(packed.output_frac("y"), wide.output_frac("y"));
     }
 
     #[test]
@@ -1269,11 +1494,11 @@ mod tests {
         let mut scratch = PlanScratch::default();
         for _ in 0..4 {
             let out = plan.run_with(&feeds, &mut scratch).unwrap();
-            assert!(out["y"].is_i32());
+            assert!(out["y"].is_int());
         }
         assert!(
             scratch.stats.reuses >= 3,
-            "i32 arena not recycled: {:?}",
+            "packed arena not recycled: {:?}",
             scratch.stats
         );
     }

@@ -5,12 +5,20 @@
 //! elementwise access — not a full ndarray library.
 //!
 //! The payload is a [`TensorData`] enum: `F32` for the float simulation
-//! path and `I32` for the bit-true integer datapath (quantized codes, the
-//! numbers the FPGA actually streams).  The f32 accessors keep their old
-//! signatures — `data()` / `data_mut()` / `into_data()` panic on an i32
-//! tensor, which is exactly the "no f32 arithmetic in integer steps"
-//! guard the bit-true plan relies on: a float kernel touching a code
-//! tensor is a compile bug, not a silent dequantization.
+//! path and `I8` / `I16` / `I32` for the bit-true integer datapath
+//! (quantized codes, the numbers the FPGA actually streams — stored in
+//! the narrowest container their format permits, so the CPU emulation
+//! moves the same bytes the narrow hardware datapath would).  The f32
+//! accessors keep their old signatures — `data()` / `data_mut()` /
+//! `into_data()` panic on a code tensor, which is exactly the "no f32
+//! arithmetic in integer steps" guard the bit-true plan relies on: a
+//! float kernel touching a code tensor is a compile bug, not a silent
+//! dequantization.
+//!
+//! The [`IntCode`] trait is the monomorphization seam for packed integer
+//! kernels: `i8`, `i16` and `i32` implement it, widening losslessly to
+//! `i32` for arithmetic while keeping storage (and therefore bandwidth)
+//! width-native.
 
 use anyhow::{bail, Result};
 
@@ -18,13 +26,34 @@ use anyhow::{bail, Result};
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
     F32,
+    I8,
+    I16,
     I32,
 }
 
-/// The typed payload: float values or integer fixed-point codes.
+impl DType {
+    /// Storage bytes per element — the unit of the bytes-moved-per-frame
+    /// accounting (DESIGN.md §9).
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::I8 => 1,
+            DType::I16 => 2,
+            DType::F32 | DType::I32 => 4,
+        }
+    }
+
+    /// True for the integer-code payloads (everything but `F32`).
+    pub fn is_int(self) -> bool {
+        self != DType::F32
+    }
+}
+
+/// The typed payload: float values or packed integer fixed-point codes.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TensorData {
     F32(Vec<f32>),
+    I8(Vec<i8>),
+    I16(Vec<i16>),
     I32(Vec<i32>),
 }
 
@@ -32,6 +61,8 @@ impl TensorData {
     pub fn len(&self) -> usize {
         match self {
             TensorData::F32(v) => v.len(),
+            TensorData::I8(v) => v.len(),
+            TensorData::I16(v) => v.len(),
             TensorData::I32(v) => v.len(),
         }
     }
@@ -43,10 +74,76 @@ impl TensorData {
     pub fn dtype(&self) -> DType {
         match self {
             TensorData::F32(_) => DType::F32,
+            TensorData::I8(_) => DType::I8,
+            TensorData::I16(_) => DType::I16,
             TensorData::I32(_) => DType::I32,
         }
     }
 }
+
+/// An integer code container: the monomorphization seam of the packed
+/// kernels in [`crate::ops`].  Codes widen losslessly to `i32` for
+/// arithmetic (`widen`), narrow checked from the `i64` accumulator domain
+/// (`from_wide`), and view their storage inside a [`TensorData`] without
+/// copying (`slice` / `slice_mut`).
+pub trait IntCode: Copy + Default + PartialEq + PartialOrd + Send + Sync + 'static {
+    const DTYPE: DType;
+    const BITS: u32;
+
+    /// Lossless widening to the arithmetic type.
+    fn widen(self) -> i32;
+
+    /// Checked narrowing from the accumulator domain; `None` = the value
+    /// overflows this container (an error on the datapath, never a wrap).
+    fn from_wide(v: i64) -> Option<Self>;
+
+    fn slice(data: &TensorData) -> Option<&[Self]>;
+    fn slice_mut(data: &mut TensorData) -> Option<&mut [Self]>;
+    fn wrap(v: Vec<Self>) -> TensorData;
+}
+
+macro_rules! impl_int_code {
+    ($t:ty, $dtype:expr, $bits:expr, $variant:ident) => {
+        impl IntCode for $t {
+            const DTYPE: DType = $dtype;
+            const BITS: u32 = $bits;
+
+            #[inline(always)]
+            fn widen(self) -> i32 {
+                self as i32
+            }
+
+            #[inline(always)]
+            fn from_wide(v: i64) -> Option<Self> {
+                Self::try_from(v).ok()
+            }
+
+            #[inline]
+            fn slice(data: &TensorData) -> Option<&[Self]> {
+                match data {
+                    TensorData::$variant(v) => Some(v),
+                    _ => None,
+                }
+            }
+
+            #[inline]
+            fn slice_mut(data: &mut TensorData) -> Option<&mut [Self]> {
+                match data {
+                    TensorData::$variant(v) => Some(v),
+                    _ => None,
+                }
+            }
+
+            fn wrap(v: Vec<Self>) -> TensorData {
+                TensorData::$variant(v)
+            }
+        }
+    };
+}
+
+impl_int_code!(i8, DType::I8, 8, I8);
+impl_int_code!(i16, DType::I16, 16, I16);
+impl_int_code!(i32, DType::I32, 32, I32);
 
 /// Row-major dense tensor (f32 values or i32 fixed-point codes).
 #[derive(Debug, Clone, PartialEq)]
@@ -67,16 +164,29 @@ impl Tensor {
         })
     }
 
-    /// Integer-code tensor (the bit-true datapath's activation type).
-    pub fn new_i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+    /// Packed integer-code tensor of any container width.
+    pub fn from_codes<T: IntCode>(shape: Vec<usize>, data: Vec<T>) -> Result<Self> {
         let numel: usize = shape.iter().product();
         if numel != data.len() {
             bail!("shape {shape:?} wants {numel} elems, got {}", data.len());
         }
         Ok(Self {
             shape,
-            data: TensorData::I32(data),
+            data: T::wrap(data),
         })
+    }
+
+    /// i32-container code tensor (the bit-true datapath's widest type).
+    pub fn new_i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        Self::from_codes(shape, data)
+    }
+
+    pub fn new_i16(shape: Vec<usize>, data: Vec<i16>) -> Result<Self> {
+        Self::from_codes(shape, data)
+    }
+
+    pub fn new_i8(shape: Vec<usize>, data: Vec<i8>) -> Result<Self> {
+        Self::from_codes(shape, data)
     }
 
     pub fn zeros(shape: Vec<usize>) -> Self {
@@ -88,11 +198,19 @@ impl Tensor {
     }
 
     pub fn zeros_i32(shape: Vec<usize>) -> Self {
+        Self::zeros_typed(shape, DType::I32)
+    }
+
+    /// Zero tensor of any element type (codes are 0 on every grid).
+    pub fn zeros_typed(shape: Vec<usize>, dtype: DType) -> Self {
         let numel = shape.iter().product();
-        Self {
-            shape,
-            data: TensorData::I32(vec![0; numel]),
-        }
+        let data = match dtype {
+            DType::F32 => TensorData::F32(vec![0.0; numel]),
+            DType::I8 => TensorData::I8(vec![0; numel]),
+            DType::I16 => TensorData::I16(vec![0; numel]),
+            DType::I32 => TensorData::I32(vec![0; numel]),
+        };
+        Self { shape, data }
     }
 
     pub fn full(shape: Vec<usize>, value: f32) -> Self {
@@ -146,48 +264,75 @@ impl Tensor {
         self.dtype() == DType::I32
     }
 
-    /// f32 payload.  Panics on an i32 tensor — a float kernel reading
+    /// True for any packed integer-code payload (i8 / i16 / i32).
+    pub fn is_int(&self) -> bool {
+        self.dtype().is_int()
+    }
+
+    /// f32 payload.  Panics on a code tensor — a float kernel reading
     /// integer codes is a plan-compilation bug, never a legal cast.
     pub fn data(&self) -> &[f32] {
         match &self.data {
             TensorData::F32(v) => v,
-            TensorData::I32(_) => panic!("Tensor::data(): f32 access on an i32 code tensor"),
+            _ => panic!("Tensor::data(): f32 access on an integer code tensor"),
         }
     }
 
     pub fn data_mut(&mut self) -> &mut [f32] {
         match &mut self.data {
             TensorData::F32(v) => v,
-            TensorData::I32(_) => panic!("Tensor::data_mut(): f32 access on an i32 code tensor"),
+            _ => panic!("Tensor::data_mut(): f32 access on an integer code tensor"),
         }
     }
 
     pub fn into_data(self) -> Vec<f32> {
         match self.data {
             TensorData::F32(v) => v,
-            TensorData::I32(_) => panic!("Tensor::into_data(): f32 access on an i32 code tensor"),
+            _ => panic!("Tensor::into_data(): f32 access on an integer code tensor"),
         }
     }
 
-    /// i32 code payload.  Panics on an f32 tensor (the dual guard).
+    /// i32 code payload.  Panics unless the container is exactly i32 —
+    /// width-generic readers go through [`Tensor::codes`] or
+    /// [`Tensor::codes_i32`] instead.
     pub fn data_i32(&self) -> &[i32] {
         match &self.data {
             TensorData::I32(v) => v,
-            TensorData::F32(_) => panic!("Tensor::data_i32(): i32 access on an f32 tensor"),
+            _ => panic!("Tensor::data_i32(): i32 access on a {:?} tensor", self.dtype()),
         }
     }
 
     pub fn data_i32_mut(&mut self) -> &mut [i32] {
         match &mut self.data {
             TensorData::I32(v) => v,
-            TensorData::F32(_) => panic!("Tensor::data_i32_mut(): i32 access on an f32 tensor"),
+            other => panic!("Tensor::data_i32_mut(): i32 access on a {:?} tensor", other.dtype()),
         }
     }
 
     pub fn into_data_i32(self) -> Vec<i32> {
         match self.data {
             TensorData::I32(v) => v,
-            TensorData::F32(_) => panic!("Tensor::into_data_i32(): i32 access on an f32 tensor"),
+            other => panic!("Tensor::into_data_i32(): i32 access on a {:?} tensor", other.dtype()),
+        }
+    }
+
+    /// Typed view of a packed code payload; `None` on container mismatch.
+    pub fn codes<T: IntCode>(&self) -> Option<&[T]> {
+        T::slice(&self.data)
+    }
+
+    pub fn codes_mut<T: IntCode>(&mut self) -> Option<&mut [T]> {
+        T::slice_mut(&mut self.data)
+    }
+
+    /// Widened copy of any integer-code payload (test/egress convenience —
+    /// the hot paths read the packed storage directly).  Panics on f32.
+    pub fn codes_i32(&self) -> Vec<i32> {
+        match &self.data {
+            TensorData::F32(_) => panic!("Tensor::codes_i32(): integer access on an f32 tensor"),
+            TensorData::I8(v) => v.iter().map(|&c| c as i32).collect(),
+            TensorData::I16(v) => v.iter().map(|&c| c as i32).collect(),
+            TensorData::I32(v) => v.clone(),
         }
     }
 
@@ -274,10 +419,7 @@ impl Tensor {
     /// Dtype-preserving (the bit-true plan transposes code tensors too).
     pub fn transpose(&self, perm: &[usize]) -> Result<Self> {
         let out_shape: Vec<usize> = self.transposed_shape(perm)?;
-        let mut out = match self.data {
-            TensorData::F32(_) => Tensor::zeros(out_shape),
-            TensorData::I32(_) => Tensor::zeros_i32(out_shape),
-        };
+        let mut out = Tensor::zeros_typed(out_shape, self.dtype());
         self.transpose_into(perm, &mut out)?;
         Ok(out)
     }
@@ -311,6 +453,12 @@ impl Tensor {
         let out_strides = strides_of(&out_shape);
         match (&self.data, &mut out.data) {
             (TensorData::F32(src), TensorData::F32(dst)) => {
+                transpose_copy(src, dst, &in_strides, &out_strides, perm)
+            }
+            (TensorData::I8(src), TensorData::I8(dst)) => {
+                transpose_copy(src, dst, &in_strides, &out_strides, perm)
+            }
+            (TensorData::I16(src), TensorData::I16(dst)) => {
                 transpose_copy(src, dst, &in_strides, &out_strides, perm)
             }
             (TensorData::I32(src), TensorData::I32(dst)) => {
@@ -700,16 +848,72 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "f32 access on an i32 code tensor")]
+    #[should_panic(expected = "f32 access on an integer code tensor")]
     fn f32_access_on_i32_tensor_panics() {
         let t = Tensor::zeros_i32(vec![2]);
         let _ = t.data();
     }
 
     #[test]
-    #[should_panic(expected = "i32 access on an f32 tensor")]
+    #[should_panic(expected = "i32 access on a F32 tensor")]
     fn i32_access_on_f32_tensor_panics() {
         let t = Tensor::zeros(vec![2]);
         let _ = t.data_i32();
+    }
+
+    // ------------------------------------------------ packed containers
+
+    #[test]
+    fn packed_containers_round_trip() {
+        let t8 = Tensor::new_i8(vec![2, 2], vec![-128, -1, 0, 127]).unwrap();
+        assert_eq!(t8.dtype(), DType::I8);
+        assert!(t8.is_int() && !t8.is_i32());
+        assert_eq!(t8.codes::<i8>().unwrap(), &[-128, -1, 0, 127]);
+        assert!(t8.codes::<i32>().is_none());
+        assert_eq!(t8.codes_i32(), vec![-128, -1, 0, 127]);
+
+        let t16 = Tensor::new_i16(vec![3], vec![-32768, 255, 32767]).unwrap();
+        assert_eq!(t16.dtype(), DType::I16);
+        assert_eq!(t16.codes_i32(), vec![-32768, 255, 32767]);
+        assert!(Tensor::new_i8(vec![2], vec![1]).is_err());
+    }
+
+    #[test]
+    fn zeros_typed_matches_dtype_and_size() {
+        for (dt, bytes) in [
+            (DType::F32, 4),
+            (DType::I8, 1),
+            (DType::I16, 2),
+            (DType::I32, 4),
+        ] {
+            let t = Tensor::zeros_typed(vec![2, 3], dt);
+            assert_eq!(t.dtype(), dt);
+            assert_eq!(t.numel(), 6);
+            assert_eq!(dt.size_bytes(), bytes);
+        }
+        assert!(DType::I8.is_int() && !DType::F32.is_int());
+    }
+
+    #[test]
+    fn packed_transpose_preserves_container() {
+        let t = Tensor::new_i8(vec![2, 3], vec![0, 1, 2, 3, 4, 5]).unwrap();
+        let tt = t.transpose(&[1, 0]).unwrap();
+        assert_eq!(tt.dtype(), DType::I8);
+        assert_eq!(tt.codes::<i8>().unwrap(), &[0, 3, 1, 4, 2, 5]);
+        // Mixed-container transpose_into is a dtype error, not a cast.
+        let mut wide = Tensor::zeros_i32(vec![3, 2]);
+        assert!(t.transpose_into(&[1, 0], &mut wide).is_err());
+    }
+
+    #[test]
+    fn int_code_widen_and_narrow() {
+        assert_eq!(<i8 as IntCode>::from_wide(127), Some(127i8));
+        assert_eq!(<i8 as IntCode>::from_wide(128), None);
+        assert_eq!(<i16 as IntCode>::from_wide(-32768), Some(-32768i16));
+        assert_eq!(<i16 as IntCode>::from_wide(32768), None);
+        assert_eq!(<i32 as IntCode>::from_wide(1 << 33), None);
+        assert_eq!((-5i8).widen(), -5i32);
+        assert_eq!(<i8 as IntCode>::BITS, 8);
+        assert_eq!(<i16 as IntCode>::DTYPE, DType::I16);
     }
 }

@@ -214,6 +214,56 @@ pub fn is_fully_hw(graph: &Graph) -> bool {
         .all(|n| HW_OPS.contains(&n.op.as_str()) || n.op == "Transpose")
 }
 
+/// Count the scale factors in a (lowered) graph whose exact dyadic
+/// decomposition `s = m * 2^-k` needs an odd multiplier `|m| > 1`.
+///
+/// Such scales execute *exactly* on the integer datapath (the
+/// decomposition is lossless) but diverge from the f32 simulation by
+/// design — f32 rounds where the integer path does not.  The dse report
+/// flags configs with a nonzero count so "exact-but-f32-divergent"
+/// rows are visible (ROADMAP item).  Reads the float attributes, so it
+/// works on any lowered graph, annotated or not.
+pub fn non_dyadic_scale_count(graph: &Graph) -> usize {
+    // A scale that cannot be decomposed at all (zero, non-finite, or an
+    // odd mantissa beyond the i32 datapath) is the *most* f32-divergent
+    // case — flag it, don't silently report "dyadic".
+    let non_dyadic = |s: f64| {
+        scale_to_mul_frac(s, "scale-scan")
+            .map(|(m, _)| m.abs() != 1)
+            .unwrap_or(true)
+    };
+    let mut count = 0;
+    for node in &graph.nodes {
+        match node.op.as_str() {
+            "MultiThreshold" | "Thresholding" => {
+                if non_dyadic(node.attrs.float_or("out_scale", 1.0)) {
+                    count += 1;
+                }
+            }
+            "MVAU" => {
+                if node.attrs.int_or("apply_act", 1) != 0
+                    && non_dyadic(node.attrs.float_or("out_scale", 1.0))
+                {
+                    count += 1;
+                }
+            }
+            "Mul" | "ChannelwiseMul" => {
+                let scalar = node
+                    .inputs
+                    .iter()
+                    .find_map(|t| graph.initializers.get(t).filter(|i| i.numel() == 1));
+                if let Some(s) = scalar {
+                    if non_dyadic(s.data()[0] as f64) {
+                        count += 1;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    count
+}
+
 // ---------------------------------------------------------------------------
 // Bit-true format annotation
 // ---------------------------------------------------------------------------
@@ -224,8 +274,20 @@ enum BtFmt {
     /// Raw f32 — only legal between the graph input and the ingress
     /// quantizer (the camera feed crossing the layout Transpose).
     Float,
-    /// i32 fixed-point codes: value = code * 2^-frac.
-    Int { frac: i32 },
+    /// Integer fixed-point codes: value = code * 2^-frac.  `[lo, hi]` is
+    /// the conservative code range the producing node can emit — the
+    /// input to container selection (codes are *stored* in the narrowest
+    /// of i8/i16/i32 that covers the range, DESIGN.md §9).
+    Int { frac: i32, lo: i64, hi: i64 },
+}
+
+/// Narrowest signed container (8/16/32 bits) covering a code range —
+/// the storage the packed kernels stream, as an attr value.  One shared
+/// rule ([`crate::fixedpoint::container_bits_for_range`]): ranges beyond
+/// i32 still map to 32, and the plan's checked conversions reject such
+/// graphs at compile, exactly as the all-i32 datapath did.
+fn container_for(lo: i64, hi: i64) -> i64 {
+    crate::fixedpoint::container_bits_for_range(lo, hi) as i64
 }
 
 fn stream_fmt(fmt: &HashMap<String, BtFmt>, tensor: &str, node: &str) -> Result<BtFmt> {
@@ -235,12 +297,25 @@ fn stream_fmt(fmt: &HashMap<String, BtFmt>, tensor: &str, node: &str) -> Result<
 }
 
 fn int_frac(f: BtFmt, node: &str, what: &str) -> Result<i32> {
+    Ok(int_range(f, node, what)?.0)
+}
+
+/// `(frac, lo, hi)` of an integer stream; error while still f32.
+fn int_range(f: BtFmt, node: &str, what: &str) -> Result<(i32, i64, i64)> {
     match f {
-        BtFmt::Int { frac } => Ok(frac),
+        BtFmt::Int { frac, lo, hi } => Ok((frac, lo, hi)),
         BtFmt::Float => bail!(
             "bit-true annotate: node {node}: {what} is still f32 — the ingress quantizer must precede it"
         ),
     }
+}
+
+/// Output code range of a threshold unit: `q in [0, K]` thresholds
+/// crossed, scaled by the (odd, possibly negative) multiplier and offset.
+fn threshold_range(k: i64, m: i64, add: i64) -> (i64, i64) {
+    let a = add;
+    let b = k * m + add;
+    (a.min(b), a.max(b))
 }
 
 /// Split a float scale factor into `(odd multiplier m, fractional bits k)`
@@ -317,7 +392,14 @@ fn init_min_frac(t: &Tensor, what: &str) -> Result<i32> {
 ///   Transpose and are quantized ONCE by the first threshold unit
 ///   (`bt_in_f32 = 1` — float *comparisons*, no float arithmetic);
 /// * egress contract: graph outputs are integer codes carrying
-///   `bt_out_frac` fractional bits; only the caller dequantizes.
+///   `bt_out_frac` fractional bits; only the caller dequantizes;
+/// * container selection: a conservative code range `[lo, hi]` is
+///   propagated alongside the frac (threshold units emit `q in [0, K]`
+///   scaled by `m` and offset by the bias code; GlobalAccPool multiplies
+///   the range by the spatial extent; AddStreams sums the shifted
+///   ranges; a raw MVAU accumulator spans the full i32 window), and
+///   `bt_container` records the narrowest of i8/i16/i32 that covers it —
+///   the storage width `plan` allocates and the packed kernels stream.
 ///
 /// Idempotent; fails on graphs that are not fully lowered or whose
 /// scales/initializers cannot be represented on the integer datapath.
@@ -362,32 +444,35 @@ fn annotate_node(
             let f = stream_fmt(fmt, &node.inputs[0], name)?;
             match f {
                 BtFmt::Float => sets.push(("bt_out_f32", 1)),
-                BtFmt::Int { frac } => {
+                BtFmt::Int { frac, lo, hi } => {
                     sets.push(("bt_out_f32", 0));
                     sets.push(("bt_out_frac", frac as i64));
+                    sets.push(("bt_container", container_for(lo, hi)));
                 }
             }
             f
         }
         "MultiThreshold" | "Thresholding" => {
             let f_in = stream_fmt(fmt, &node.inputs[0], name)?;
-            if !graph.is_initializer(&node.inputs[1]) {
-                bail!("bit-true annotate: {name}: threshold matrix must be an initializer");
-            }
+            let thr = graph.initializers.get(&node.inputs[1]).ok_or_else(|| {
+                anyhow!("bit-true annotate: {name}: threshold matrix must be an initializer")
+            })?;
             let (m, f_out) = scale_to_mul_frac(node.attrs.float_or("out_scale", 1.0), name)?;
             let add = bias_to_add(node.attrs.float_or("out_bias", 0.0), f_out, name)?;
+            let (lo, hi) = threshold_range(thr.shape()[1] as i64, m, add);
             sets.push(("bt_out_mul", m));
             sets.push(("bt_out_add", add));
             sets.push(("bt_out_frac", f_out as i64));
             sets.push(("bt_out_f32", 0));
+            sets.push(("bt_container", container_for(lo, hi)));
             match f_in {
                 BtFmt::Float => sets.push(("bt_in_f32", 1)),
-                BtFmt::Int { frac } => {
+                BtFmt::Int { frac, .. } => {
                     sets.push(("bt_in_f32", 0));
                     sets.push(("bt_in_frac", frac as i64));
                 }
             }
-            BtFmt::Int { frac: f_out }
+            BtFmt::Int { frac: f_out, lo, hi }
         }
         "MVAU" => {
             let fx = int_frac(stream_fmt(fmt, &node.inputs[0], name)?, name, "MVAU input")?;
@@ -413,48 +498,90 @@ fn annotate_node(
             sets.push(("bt_acc_frac", acc_frac as i64));
             sets.push(("bt_out_f32", 0));
             if apply_act {
-                if node.inputs.len() < 4 || !graph.is_initializer(&node.inputs[3]) {
-                    bail!(
-                        "bit-true annotate: {name}: fused activation needs a threshold initializer"
-                    );
-                }
+                let thr = node
+                    .inputs
+                    .get(3)
+                    .and_then(|t| graph.initializers.get(t))
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "bit-true annotate: {name}: fused activation needs a threshold initializer"
+                        )
+                    })?;
                 let (m, f_out) = scale_to_mul_frac(node.attrs.float_or("out_scale", 1.0), name)?;
                 let add = bias_to_add(node.attrs.float_or("out_bias", 0.0), f_out, name)?;
+                let (lo, hi) = threshold_range(thr.shape()[1] as i64, m, add);
                 sets.push(("bt_out_mul", m));
                 sets.push(("bt_out_add", add));
                 sets.push(("bt_out_frac", f_out as i64));
-                BtFmt::Int { frac: f_out }
+                sets.push(("bt_container", container_for(lo, hi)));
+                BtFmt::Int { frac: f_out, lo, hi }
             } else {
+                // Raw accumulator egress: the full i32 window.
+                let (lo, hi) = (i32::MIN as i64, i32::MAX as i64);
                 sets.push(("bt_out_mul", 1));
                 sets.push(("bt_out_add", 0));
                 sets.push(("bt_out_frac", acc_frac as i64));
-                BtFmt::Int { frac: acc_frac }
+                sets.push(("bt_container", 32));
+                BtFmt::Int { frac: acc_frac, lo, hi }
             }
         }
-        "Im2Col" | "ConvolutionInputGenerator" | "MaxPoolNHWC" | "StreamingMaxPool"
-        | "GlobalAccPool" | "GlobalAccPool_hw" => {
-            let frac = int_frac(
+        "Im2Col" | "ConvolutionInputGenerator" => {
+            let (frac, lo, hi) = int_range(
+                stream_fmt(fmt, &node.inputs[0], name)?,
+                name,
+                "stream input",
+            )?;
+            // Zero padding injects code 0 into the stream.
+            let (lo, hi) = (lo.min(0), hi.max(0));
+            sets.push(("bt_out_f32", 0));
+            sets.push(("bt_out_frac", frac as i64));
+            sets.push(("bt_container", container_for(lo, hi)));
+            BtFmt::Int { frac, lo, hi }
+        }
+        "MaxPoolNHWC" | "StreamingMaxPool" => {
+            let (frac, lo, hi) = int_range(
                 stream_fmt(fmt, &node.inputs[0], name)?,
                 name,
                 "stream input",
             )?;
             sets.push(("bt_out_f32", 0));
             sets.push(("bt_out_frac", frac as i64));
-            BtFmt::Int { frac }
+            sets.push(("bt_container", container_for(lo, hi)));
+            BtFmt::Int { frac, lo, hi }
+        }
+        "GlobalAccPool" | "GlobalAccPool_hw" => {
+            let (frac, lo, hi) = int_range(
+                stream_fmt(fmt, &node.inputs[0], name)?,
+                name,
+                "stream input",
+            )?;
+            // Cumulative sum over the spatial extent scales the range.
+            let in_shape = graph.shape_of(&node.inputs[0])?;
+            if in_shape.len() != 4 {
+                bail!("bit-true annotate: {name}: GlobalAccPool input must be 4-D NHWC");
+            }
+            let spatial = (in_shape[1] * in_shape[2]) as i64;
+            let (lo, hi) = (lo.saturating_mul(spatial), hi.saturating_mul(spatial));
+            sets.push(("bt_out_f32", 0));
+            sets.push(("bt_out_frac", frac as i64));
+            sets.push(("bt_container", container_for(lo, hi)));
+            BtFmt::Int { frac, lo, hi }
         }
         "Add" | "AddStreams" => {
-            let fa = int_frac(stream_fmt(fmt, &node.inputs[0], name)?, name, "lhs")?;
-            let fb = int_frac(stream_fmt(fmt, &node.inputs[1], name)?, name, "rhs")?;
+            let (fa, la, ha) = int_range(stream_fmt(fmt, &node.inputs[0], name)?, name, "lhs")?;
+            let (fb, lb, hb) = int_range(stream_fmt(fmt, &node.inputs[1], name)?, name, "rhs")?;
             let f_out = fa.max(fb);
             let (sa, sb) = (f_out - fa, f_out - fb);
             if sa > 24 || sb > 24 {
                 bail!("bit-true annotate: {name}: frac alignment shift {sa}/{sb} too large");
             }
+            let (lo, hi) = ((la << sa) + (lb << sb), (ha << sa) + (hb << sb));
             sets.push(("bt_shift_a", sa as i64));
             sets.push(("bt_shift_b", sb as i64));
             sets.push(("bt_out_f32", 0));
             sets.push(("bt_out_frac", f_out as i64));
-            BtFmt::Int { frac: f_out }
+            sets.push(("bt_container", container_for(lo, hi)));
+            BtFmt::Int { frac: f_out, lo, hi }
         }
         "Mul" | "ChannelwiseMul" => {
             if node.inputs.len() != 2 {
@@ -474,18 +601,21 @@ fn annotate_node(
                     anyhow!("bit-true annotate: {name}: Mul without a scalar initializer operand")
                 })?;
             let data_idx = 1 - scalar_idx;
-            let f_in = int_frac(
+            let (f_in, la, ha) = int_range(
                 stream_fmt(fmt, &node.inputs[data_idx], name)?,
                 name,
                 "Mul data input",
             )?;
             let s = graph.initializers[&node.inputs[scalar_idx]].data()[0] as f64;
             let (m, k) = scale_to_mul_frac(s, name)?;
+            let (e1, e2) = (la.saturating_mul(m), ha.saturating_mul(m));
+            let (lo, hi) = (e1.min(e2), e1.max(e2));
             sets.push(("bt_mul", m));
             sets.push(("bt_data_input", data_idx as i64));
             sets.push(("bt_out_f32", 0));
             sets.push(("bt_out_frac", (f_in + k) as i64));
-            BtFmt::Int { frac: f_in + k }
+            sets.push(("bt_container", container_for(lo, hi)));
+            BtFmt::Int { frac: f_in + k, lo, hi }
         }
         other => bail!(
             "bit-true annotate: op {other} ({name}) has no integer-datapath mapping — is the graph fully lowered?"
@@ -642,11 +772,19 @@ mod tests {
                 n.name,
                 n.op
             );
+            if n.attrs.int_or("bt_out_f32", 0) == 0 {
+                let cont = n.attrs.int("bt_container").unwrap_or_else(|_| {
+                    panic!("node {} ({}) lacks bt_container", n.name, n.op)
+                });
+                assert!([8, 16, 32].contains(&cont), "{}: container {cont}", n.name);
+            }
             if n.op == "Thresholding" && n.attrs.int_or("bt_in_f32", 0) != 0 {
                 ingress += 1;
-                // The camera quantizer emits u8.8 codes: frac 8, q = code.
+                // The camera quantizer emits u8.8 codes: frac 8, q = code,
+                // range [0, 255] -> an i16 container.
                 assert_eq!(n.attrs.int("bt_out_frac").unwrap(), 8);
                 assert_eq!(n.attrs.int("bt_out_mul").unwrap(), 1);
+                assert_eq!(n.attrs.int("bt_container").unwrap(), 16);
             }
             if n.op == "MVAU" {
                 let fx = n.attrs.int("bt_in_frac").unwrap();
@@ -654,6 +792,15 @@ mod tests {
                 assert_eq!(n.attrs.int("bt_acc_frac").unwrap(), fx + fw);
                 // Headline config: s6.5 weights -> at most 5 frac bits.
                 assert!(fw <= 5, "MVAU {} w_frac {fw}", n.name);
+                // u4.2 activations: q in [0, 15] -> packed i8 codes.
+                if n.attrs.int_or("apply_act", 1) != 0 {
+                    assert_eq!(
+                        n.attrs.int("bt_container").unwrap(),
+                        8,
+                        "MVAU {} activation codes should pack into i8",
+                        n.name
+                    );
+                }
             }
         }
         assert_eq!(ingress, 1, "exactly one ingress quantizer expected");
@@ -683,6 +830,52 @@ mod tests {
         // out_bias must land on the output grid exactly.
         assert_eq!(bias_to_add(-0.5, 1, "t").unwrap(), -1);
         assert!(bias_to_add(0.3, 1, "t").is_err());
+    }
+
+    #[test]
+    fn container_selection_rule() {
+        assert_eq!(container_for(0, 15), 8);
+        assert_eq!(container_for(-128, 127), 8);
+        assert_eq!(container_for(0, 128), 16);
+        assert_eq!(container_for(-129, 0), 16);
+        assert_eq!(container_for(0, 255), 16);
+        assert_eq!(container_for(-32768, 32767), 16);
+        assert_eq!(container_for(0, 32768), 32);
+        assert_eq!(container_for(i32::MIN as i64, i32::MAX as i64), 32);
+        // Beyond-i32 ranges still report 32 (the plan's checked stores
+        // reject them at conversion, exactly as the i32 datapath did).
+        assert_eq!(container_for(0, 1 << 40), 32);
+        // Threshold output ranges, including a negative multiplier.
+        assert_eq!(threshold_range(15, 1, 0), (0, 15));
+        assert_eq!(threshold_range(3, -5, 2), (-13, 2));
+    }
+
+    #[test]
+    fn non_dyadic_scale_count_flags_odd_multipliers() {
+        let mut g = mvau_pattern();
+        // out_scale 0.25 is dyadic: nothing flagged.
+        assert_eq!(non_dyadic_scale_count(&g), 0);
+        // 0.75 = 3 * 2^-2 needs m = 3: exact on the integer path, f32-
+        // divergent by design — flagged.
+        let mt = g
+            .nodes
+            .iter_mut()
+            .find(|n| n.op == "MultiThreshold")
+            .unwrap();
+        mt.attrs.set("out_scale", AttrVal::Float(0.75));
+        assert_eq!(non_dyadic_scale_count(&g), 1);
+        // A non-dyadic scalar Mul initializer counts too.
+        g.shapes.insert("odd_s".into(), vec![]);
+        g.initializers
+            .insert("odd_s".into(), Tensor::scalar(3.0));
+        g.shapes.insert("z".into(), vec![1, 2, 2, 4]);
+        g.nodes.push(Node::new(
+            "Mul",
+            "oddmul",
+            vec!["y".into(), "odd_s".into()],
+            vec!["z".into()],
+        ));
+        assert_eq!(non_dyadic_scale_count(&g), 2);
     }
 
     #[test]

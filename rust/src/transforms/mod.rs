@@ -31,7 +31,7 @@ use crate::graph::Graph;
 use crate::plan::ExecutionPlan;
 use crate::tensor::Tensor;
 
-pub use convert_to_hw::annotate_bit_true_formats;
+pub use convert_to_hw::{annotate_bit_true_formats, non_dyadic_scale_count};
 
 /// A semantics-preserving graph rewrite.
 pub trait Transform {

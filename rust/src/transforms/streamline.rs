@@ -223,7 +223,9 @@ mod tests {
         g.initializers.insert("s".into(), Tensor::scalar(scale));
         g.nodes.push(
             Node::new("MultiThreshold", "mt", vec!["x".into(), "t".into()], vec!["q".into()])
-                .with_attrs(Attrs::new().with("data_layout", crate::graph::AttrVal::Str("NC".into()))),
+                .with_attrs(
+                    Attrs::new().with("data_layout", crate::graph::AttrVal::Str("NC".into())),
+                ),
         );
         g.nodes
             .push(Node::new("Mul", "mul", vec!["q".into(), "s".into()], vec!["y".into()]));

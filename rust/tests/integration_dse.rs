@@ -132,6 +132,9 @@ fn sweep_is_deterministic_across_worker_counts() {
         assert!(o.metrics.weight_bits > 0);
         assert!((0.0..=1.0).contains(&o.metrics.acc_mean));
         assert!(o.metrics.utilization > 0.0);
+        assert!(o.metrics.bytes_per_frame > 0, "no bytes accounting");
+        // The synthesized backbone's scales are all powers of two.
+        assert_eq!(o.metrics.non_dyadic_scales, 0);
     }
     // The cap is an exploration axis: the looser cap never yields a
     // meaningfully *slower* build for the same config (tiny slack for the
@@ -176,6 +179,8 @@ fn cache_separates_f32_and_bit_true_datapaths() {
         weight_bits: 64,
         utilization: 0.5,
         hw_layers: 7,
+        bytes_per_frame: 4096,
+        non_dyadic_scales: 0,
     };
     cache.store(&spec_f, &p, &metrics).unwrap();
     assert_eq!(cache.lookup(&spec_f, &p), Some(metrics.clone()));
@@ -208,6 +213,10 @@ fn bit_true_sweep_runs_and_reports_datapath() {
     let m = &first.outcomes[0].metrics;
     assert!((0.0..=1.0).contains(&m.acc_mean));
     assert!(m.fps > 0.0 && m.weight_bits > 0);
+    assert!(
+        m.bytes_per_frame > 0,
+        "bit-true sweep must record packed bytes/frame"
+    );
     let md = render_report(&spec, &first);
     assert!(md.contains("Datapath: bit-true"));
     assert!(md.contains("| bit-true |"));

@@ -188,28 +188,62 @@ fn lowered_bit_true_graph(quant: &bwade::fixedpoint::QuantConfig) -> Graph {
     graph
 }
 
-/// THE acceptance criterion: on the fully-lowered ResNet-9, the integer
-/// plan's output codes equal `FxpFormat::quantize_int` of the f32
-/// reference's outputs exactly, for every Table-II config.  (All
-/// Table-II scales are powers of two and every accumulator stays within
-/// f32's exact-integer range at these widths, so the float simulation is
-/// itself exact — which is precisely what makes code equality the right
-/// oracle.)
+/// THE acceptance criterion: on the fully-lowered ResNet-9, for every
+/// Table-II config, the **packed** (i8/i16 width-native) plan's output
+/// codes are bitwise identical to the all-i32 bit-true oracle's, and
+/// both equal `FxpFormat::quantize_int` of the f32 reference exactly.
+/// (All Table-II scales are powers of two and every accumulator stays
+/// within f32's exact-integer range at these widths, so the float
+/// simulation is itself exact — which is precisely what makes code
+/// equality the right oracle.)
 #[test]
-fn bit_true_codes_equal_quantized_f32_reference_across_table2() {
+fn packed_codes_equal_i32_plan_and_quantized_f32_across_table2() {
     for (name, quant) in table2_configs() {
         let graph = lowered_bit_true_graph(&quant);
         let f32_plan = ExecutionPlan::compile(&graph).unwrap();
-        let int_plan = ExecutionPlan::compile_bit_true(&graph).unwrap();
+        let packed_plan = ExecutionPlan::compile_bit_true(&graph).unwrap();
+        let wide_plan = ExecutionPlan::compile_bit_true_wide(&graph).unwrap();
+        // Packing narrows storage, never the numbers: same egress format.
+        assert_eq!(
+            packed_plan.output_frac("global_out"),
+            wide_plan.output_frac("global_out"),
+            "{name}: packed egress format diverged from the i32 oracle"
+        );
+        // The wide oracle stores every step in i32; sub-8-bit configs
+        // must actually pack (the whole point of width-native storage).
+        assert!(
+            wide_plan
+                .kernel_variants()
+                .iter()
+                .all(|(_, v)| *v != "int8" && *v != "int16"),
+            "{name}: wide oracle leaked a narrow container"
+        );
+        assert!(
+            packed_plan.bytes_moved_per_frame() <= wide_plan.bytes_moved_per_frame(),
+            "{name}: packed plan moves more bytes than the i32 oracle"
+        );
+        if quant.act.container_bits() < 32 {
+            assert!(
+                packed_plan.bytes_moved_per_frame() < wide_plan.bytes_moved_per_frame(),
+                "{name}: packing saved no bandwidth"
+            );
+        }
+
         let feeds = probe_feeds(&graph, 0xC0DE);
         let want = f32_plan.run(&feeds).unwrap();
-        let got = int_plan.run(&feeds).unwrap();
+        let got_packed = packed_plan.run(&feeds).unwrap();
+        let got_wide = wide_plan.run(&feeds).unwrap();
         for (out_name, w) in &want {
-            let frac = int_plan
+            let frac = packed_plan
                 .output_frac(out_name)
                 .unwrap_or_else(|| panic!("{name}: no egress format for {out_name}"));
             let fmt = FxpFormat::new(32, frac as u8, true).unwrap();
-            let codes = got[out_name].data_i32();
+            let codes = got_packed[out_name].codes_i32();
+            assert_eq!(
+                codes,
+                got_wide[out_name].codes_i32(),
+                "{name}: packed and i32 bit-true codes differ for {out_name}"
+            );
             assert_eq!(codes.len(), w.numel(), "{name}: {out_name} size");
             for (i, (&c, &v)) in codes.iter().zip(w.data()).enumerate() {
                 assert_eq!(
@@ -223,11 +257,13 @@ fn bit_true_codes_equal_quantized_f32_reference_across_table2() {
 }
 
 /// Kernel-variant audit — the "zero f32 arithmetic in integer steps"
-/// guarantee: a bit-true plan contains no f32 kernel at all; the only
-/// boundary steps are ONE ingress quantizer (float comparisons) and at
-/// most one f32 layout Transpose feeding it.
+/// guarantee, now width-aware: a bit-true plan contains no f32 kernel at
+/// all; the only boundary steps are ONE ingress quantizer (float
+/// comparisons) and at most one f32 layout Transpose feeding it; and at
+/// the headline config (u4.2 activations) the bulk of the steady-state
+/// steps store their codes in packed i8 containers.
 #[test]
-fn bit_true_plan_has_zero_float_kernels() {
+fn bit_true_plan_has_zero_float_kernels_and_packs_narrow() {
     let graph = lowered_bit_true_graph(&headline_config());
     let plan = ExecutionPlan::compile_bit_true(&graph).unwrap();
     let variants = plan.kernel_variants();
@@ -244,10 +280,26 @@ fn bit_true_plan_has_zero_float_kernels() {
         variants.iter().filter(|(_, v)| *v == "ingress-f32").count() <= 1,
         "more than one f32 ingress transpose: {variants:?}"
     );
-    let steady = variants.iter().filter(|(_, v)| *v == "int").count();
+    let steady = variants
+        .iter()
+        .filter(|(_, v)| v.starts_with("int"))
+        .count();
     assert!(
         steady > 20,
         "lowered ResNet-9 should have >20 steady-state integer steps, got {steady}: {variants:?}"
+    );
+    let packed8 = variants.iter().filter(|(_, v)| *v == "int8").count();
+    assert!(
+        packed8 * 2 > steady,
+        "u4.2 activations should put most steps in i8 containers, got {packed8}/{steady}: {variants:?}"
+    );
+    // Every MVAU's activation codes pack into i8 at this config.
+    assert!(
+        variants
+            .iter()
+            .filter(|(op, _)| op == "MVAU")
+            .all(|(_, v)| *v == "int8"),
+        "MVAU outputs not packed: {variants:?}"
     );
 }
 
@@ -264,10 +316,11 @@ fn bit_true_run_batch_agrees_with_per_frame_run() {
     for (feeds, out) in frames.iter().zip(&outs) {
         let solo = plan.run(feeds).unwrap();
         assert_eq!(
-            solo["global_out"].data_i32(),
-            out["global_out"].data_i32(),
+            solo["global_out"].codes_i32(),
+            out["global_out"].codes_i32(),
             "batch and per-frame integer codes differ"
         );
+        assert_eq!(solo["global_out"].dtype(), out["global_out"].dtype());
     }
 }
 
