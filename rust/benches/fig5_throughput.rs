@@ -1,33 +1,60 @@
 //! E5 — Fig. 5 / §IV-B reproduction: the deployed few-shot serving
-//! pipeline (frame source -> batcher -> backbone -> CPU-side NCM),
-//! sweeping offered load and batching policy.
+//! pipeline (frame sources -> batcher -> backbone -> CPU-side NCM),
+//! sweeping offered load, batching policy, and pool size.
 //!
 //!     cargo bench --bench fig5_throughput
 //!
-//! Reports capacity (unbounded offered load), latency at real-time rates,
-//! and the batching ablation (batch 1 vs 8) — the paper's 61.5 fps /
-//! 16.3 ms operating point is the reference.
+//! Two sections:
+//! * the PJRT single-runner sweep (capacity, real-time rates, batching
+//!   ablation) — needs trained artifacts, skipped otherwise;
+//! * the replica-scaling sweep on the plan engine over the synthetic
+//!   backbone (always runs): 1 -> num_cpus replicas for both datapaths,
+//!   recorded to BENCH_serving.json (schema DESIGN.md §10) — the
+//!   tracked serving-throughput trajectory.
+//!
+//! Knobs: BWADE_BENCH_FRAMES (default 240), BWADE_BENCH_MAX_REPLICAS
+//! (default: available parallelism).
 
+use std::sync::mpsc;
 use std::time::Duration;
 
 use bwade::artifacts::{ArtifactPaths, FewshotBank};
-use bwade::benchutil::env_usize;
-use bwade::coordinator::{serve, BatchPolicy, FeatureExtractor, FrameSource};
+use bwade::benchutil::{env_usize, write_serving_json, ServingRow};
+use bwade::build::{lower_bit_true, requantize_graph, synth_backbone_graph};
+use bwade::coordinator::{serve, serve_pool, BatchPolicy, FeatureExtractor, FrameSource};
+use bwade::dse::SweepSpec;
 use bwade::fewshot::{sample_episode, NcmClassifier};
 use bwade::fixedpoint::headline_config;
+use bwade::plan::{Datapath, PlanRunner};
 use bwade::rng::Rng;
 use bwade::runtime::{BackboneRunner, Runtime};
 
 fn main() {
+    let frames = env_usize("BWADE_BENCH_FRAMES", 240);
+    pjrt_sweep(frames);
+    replica_scaling(frames);
+    println!("\nfig5_throughput done");
+}
+
+// ---------------------------------------------------------------------------
+// Section 1: PJRT single-runner operating points (artifact-gated)
+// ---------------------------------------------------------------------------
+
+fn pjrt_sweep(frames: usize) {
     let paths = ArtifactPaths::default_dir();
     if !paths.exists() {
-        println!("fig5_throughput: artifacts missing — run `make artifacts` first (skipped)");
+        println!("fig5 pjrt sweep: artifacts missing — run `make artifacts` first (skipped)");
         return;
     }
-    let frames = env_usize("BWADE_BENCH_FRAMES", 240);
+    let runtime = match Runtime::new() {
+        Ok(r) => r,
+        Err(e) => {
+            println!("fig5 pjrt sweep: no PJRT runtime ({e:#}) — skipped");
+            return;
+        }
+    };
     let bundle = paths.model_bundle().expect("bundle");
     let bank = FewshotBank::load(&paths.fewshot_bank()).expect("bank");
-    let runtime = Runtime::new().expect("pjrt");
 
     println!("== E5 / Fig. 5: serving pipeline ({frames} frames per point) ==\n");
 
@@ -106,5 +133,148 @@ fn main() {
         println!("  [{}] {}", if ok { "x" } else { " " }, label);
     }
     println!("(paper Fig. 5: 16.3 ms backbone latency, 61.5 fps)");
-    println!("\nfig5_throughput done");
+}
+
+// ---------------------------------------------------------------------------
+// Section 2: replica scaling on the plan engine (always runs)
+// ---------------------------------------------------------------------------
+
+/// Replica counts to sweep: 1, powers of two below the cap, the cap.
+fn replica_counts(max: usize) -> Vec<usize> {
+    let mut counts = vec![1usize];
+    let mut c = 2;
+    while c < max {
+        counts.push(c);
+        c *= 2;
+    }
+    if max > 1 {
+        counts.push(max);
+    }
+    counts
+}
+
+fn replica_scaling(frames: usize) {
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let max_replicas = env_usize("BWADE_BENCH_MAX_REPLICAS", host).max(1);
+    let spec = SweepSpec::default();
+    let cfg = headline_config();
+    let counts = replica_counts(max_replicas);
+
+    println!(
+        "\n== replica scaling: plan-runner pool, synthetic backbone {:?} @ {}px, config {} ({}-way host, {frames} frames per point) ==",
+        spec.widths,
+        spec.img,
+        cfg.describe(),
+        host
+    );
+
+    // Shared support set: prototypes are identical across every point.
+    let bank = spec.make_bank();
+    let mut rng = Rng::new(7);
+    let ep = sample_episode(&mut rng, spec.num_classes, spec.per_class, 5, 5, 1).unwrap();
+    let per = spec.img * spec.img * 3;
+    let mut sup = Vec::new();
+    for &i in &ep.support {
+        sup.extend_from_slice(&bank[i * per..(i + 1) * per]);
+    }
+
+    let mut rows: Vec<ServingRow> = Vec::new();
+    for datapath in [Datapath::F32, Datapath::BitTrue] {
+        // Compile ONCE per datapath; every pool size replicates this plan.
+        let mut graph =
+            synth_backbone_graph(spec.widths, spec.img, cfg.act.bits, cfg.act.frac_bits);
+        let base = match datapath {
+            Datapath::F32 => {
+                requantize_graph(&mut graph, &cfg).expect("requantize");
+                PlanRunner::new(&graph, 8).expect("plan")
+            }
+            Datapath::BitTrue => {
+                lower_bit_true(&mut graph, &cfg).expect("lower");
+                PlanRunner::new_bit_true(&graph, 8).expect("bit-true plan")
+            }
+        };
+        let bytes = base.bytes_moved_per_frame();
+        let sup_feats = base.extract_all(&sup, ep.support.len()).unwrap();
+        let ncm =
+            NcmClassifier::fit(&sup_feats, base.feature_dim(), &ep.support_labels, 5).unwrap();
+
+        let mut single_fps = 0.0f64;
+        let mut best_pooled = 0.0f64;
+        for &n in &counts {
+            // Streams scale with the pool so offered load saturates it.
+            let streams = (n * 2).max(2);
+            let (tx, rx) = mpsc::sync_channel(64.max(streams * 8));
+            let mut id_base = 0u64;
+            for s in 0..streams {
+                let count = frames / streams + usize::from(s < frames % streams);
+                FrameSource {
+                    count,
+                    rate_fps: None,
+                    img: spec.img,
+                    seed: 11 + s as u64 * 7919,
+                }
+                .spawn_into(tx.clone(), id_base);
+                id_base += count as u64;
+            }
+            drop(tx);
+            let runners: Vec<Box<dyn FeatureExtractor + Send>> =
+                (0..n).map(|_| Box::new(base.replicate()) as _).collect();
+            let policy = BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(5),
+            };
+            let (report, results) = serve_pool(runners, &ncm, rx, policy).expect("pool");
+            assert_eq!(results.len(), frames, "pool dropped or duplicated frames");
+            let m = &report.aggregate;
+            if n == 1 {
+                single_fps = m.fps();
+            } else {
+                best_pooled = best_pooled.max(m.fps());
+            }
+            println!(
+                "{:>8} x{:<2} replicas, {:>2} streams:  {}  (stolen {})",
+                datapath.describe(),
+                n,
+                streams,
+                m.summary(),
+                report.total_stolen()
+            );
+            rows.push(ServingRow {
+                config: cfg.describe(),
+                datapath: datapath.describe().to_string(),
+                replicas: n,
+                streams,
+                frames,
+                fps: m.fps(),
+                p50_ms: m.percentile_ms(50.0),
+                p95_ms: m.percentile_ms(95.0),
+                p99_ms: m.percentile_ms(99.0),
+                bytes_per_frame: bytes,
+            });
+        }
+        let scaling = best_pooled / single_fps.max(1e-9);
+        println!(
+            "  {} scaling: best pooled {:.1} fps vs single-replica {:.1} fps = {:.2}x{}",
+            datapath.describe(),
+            best_pooled,
+            single_fps,
+            scaling,
+            if max_replicas < 4 {
+                "  (host too narrow for the >=4-replica 2x check)"
+            } else {
+                ""
+            }
+        );
+        if max_replicas >= 4 {
+            println!(
+                "  [{}] >=4 replicas reach >= 2x single-replica fps ({})",
+                if scaling >= 2.0 { "x" } else { " " },
+                datapath.describe()
+            );
+        }
+    }
+
+    let out = std::path::Path::new("BENCH_serving.json");
+    write_serving_json(out, host, &rows).expect("write BENCH_serving.json");
+    println!("\nrecorded {} serving rows -> {}", rows.len(), out.display());
 }

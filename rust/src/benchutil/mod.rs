@@ -1,7 +1,37 @@
 //! Tiny benchmark harness (no `criterion` in the offline crate set —
-//! DESIGN.md §2): warmup + N samples, mean/p50/p95 reporting.
+//! DESIGN.md §2): warmup + N samples, mean/p50/p95 reporting, plus the
+//! `BENCH_serving.json` emitter that records the serving-throughput
+//! trajectory (schema in DESIGN.md §10).
 
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::json::{self, Json};
+
+/// Nearest-rank index into a sorted sample of `len` items for
+/// percentile `p` (percent): the smallest index whose rank covers a
+/// `p/100` fraction of the data.  The single percentile convention of
+/// the crate ([`BenchResult::percentile`],
+/// `coordinator::Metrics::percentile_ms`):
+///
+/// * `None` for empty samples — callers report 0 instead of indexing;
+/// * `p` clamps to [0, 100] (and non-finite `p` means 100), so p=0 is
+///   the minimum and p=100 exactly the maximum — no interpolation and
+///   no off-by-one past either end.
+pub fn nearest_rank_index(len: usize, p: f64) -> Option<usize> {
+    if len == 0 {
+        return None;
+    }
+    let p = if p.is_finite() {
+        p.clamp(0.0, 100.0)
+    } else {
+        100.0
+    };
+    let rank = (p / 100.0 * len as f64).ceil() as usize;
+    Some(rank.clamp(1, len) - 1)
+}
 
 /// One benchmark's samples.
 #[derive(Debug, Clone)]
@@ -17,9 +47,11 @@ impl BenchResult {
     }
 
     pub fn percentile(&self, p: f64) -> Duration {
+        let Some(idx) = nearest_rank_index(self.samples.len(), p) else {
+            return Duration::ZERO;
+        };
         let mut v = self.samples.clone();
         v.sort();
-        let idx = ((v.len() as f64 - 1.0) * p / 100.0).round() as usize;
         v[idx]
     }
 
@@ -67,6 +99,66 @@ pub fn env_usize(key: &str, default: usize) -> usize {
         .unwrap_or(default)
 }
 
+/// Schema id stamped into `BENCH_serving.json`.
+pub const SERVING_SCHEMA: &str = "bwade/bench-serving/v1";
+
+/// One measured serving configuration — a row of `BENCH_serving.json`
+/// (schema documented in DESIGN.md §10).
+#[derive(Debug, Clone)]
+pub struct ServingRow {
+    /// Quantization config name (e.g. `b6_c1.5_r2.2`).
+    pub config: String,
+    /// `f32` or `bit-true`.
+    pub datapath: String,
+    pub replicas: usize,
+    pub streams: usize,
+    /// Frames served end to end in this measurement.
+    pub frames: usize,
+    /// Aggregate pool throughput (frames / pool wall clock).
+    pub fps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Bytes one frame streams through the backbone kernels (0 when the
+    /// engine cannot account for them).
+    pub bytes_per_frame: u64,
+}
+
+impl ServingRow {
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("config", Json::str(self.config.clone())),
+            ("datapath", Json::str(self.datapath.clone())),
+            ("replicas", Json::num(self.replicas as f64)),
+            ("streams", Json::num(self.streams as f64)),
+            ("frames", Json::num(self.frames as f64)),
+            ("fps", Json::num(self.fps)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p95_ms", Json::num(self.p95_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("bytes_per_frame", Json::num(self.bytes_per_frame as f64)),
+        ])
+    }
+}
+
+/// Serialize serving rows to the `BENCH_serving.json` document (without
+/// touching the filesystem — the testable half of the emitter).
+pub fn serving_json(host_parallelism: usize, rows: &[ServingRow]) -> String {
+    let doc = json::obj(vec![
+        ("schema", Json::str(SERVING_SCHEMA)),
+        ("host_parallelism", Json::num(host_parallelism as f64)),
+        ("rows", Json::Arr(rows.iter().map(|r| r.to_json()).collect())),
+    ]);
+    doc.to_string_pretty() + "\n"
+}
+
+/// Record the serving perf trajectory: write `rows` to `path` (normally
+/// `BENCH_serving.json` at the repo root, produced by the fig5 bench).
+pub fn write_serving_json(path: &Path, host_parallelism: usize, rows: &[ServingRow]) -> Result<()> {
+    std::fs::write(path, serving_json(host_parallelism, rows))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,5 +184,58 @@ mod tests {
     #[test]
     fn env_default() {
         assert_eq!(env_usize("BWADE_NOT_SET_XYZ", 42), 42);
+    }
+
+    #[test]
+    fn nearest_rank_convention() {
+        // Empty: no index, callers report zero — including percentile()
+        // itself, which used to index blind and panic.
+        assert_eq!(nearest_rank_index(0, 50.0), None);
+        let empty = BenchResult {
+            name: "e".into(),
+            samples: Vec::new(),
+        };
+        assert_eq!(empty.percentile(50.0), Duration::ZERO);
+
+        // Nearest rank over 4 items: p=100 is exactly the last index
+        // (the p=1.0-as-fraction off-by-one class of bug), p=0 the
+        // first, out-of-range p clamps.
+        assert_eq!(nearest_rank_index(4, 0.0), Some(0));
+        assert_eq!(nearest_rank_index(4, 1.0), Some(0));
+        assert_eq!(nearest_rank_index(4, 25.0), Some(0));
+        assert_eq!(nearest_rank_index(4, 50.0), Some(1));
+        assert_eq!(nearest_rank_index(4, 75.0), Some(2));
+        assert_eq!(nearest_rank_index(4, 100.0), Some(3));
+        assert_eq!(nearest_rank_index(4, 1000.0), Some(3));
+        assert_eq!(nearest_rank_index(4, -3.0), Some(0));
+        assert_eq!(nearest_rank_index(4, f64::NAN), Some(3));
+        assert_eq!(nearest_rank_index(1, 100.0), Some(0));
+    }
+
+    #[test]
+    fn serving_json_schema_round_trip() {
+        let rows = vec![ServingRow {
+            config: "b6_c1.5_r2.2".into(),
+            datapath: "bit-true".into(),
+            replicas: 4,
+            streams: 8,
+            frames: 240,
+            fps: 812.5,
+            p50_ms: 3.25,
+            p95_ms: 7.5,
+            p99_ms: 11.0,
+            bytes_per_frame: 123_456,
+        }];
+        let doc = serving_json(4, &rows);
+        let parsed = Json::parse(&doc).expect("emitted document parses");
+        assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(), SERVING_SCHEMA);
+        assert_eq!(parsed.get("host_parallelism").unwrap().as_usize().unwrap(), 4);
+        let all = parsed.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(all.len(), 1);
+        let row = &all[0];
+        assert_eq!(row.get("datapath").unwrap().as_str().unwrap(), "bit-true");
+        assert_eq!(row.get("replicas").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(row.get("fps").unwrap().as_f64().unwrap(), 812.5);
+        assert_eq!(row.get("bytes_per_frame").unwrap().as_usize().unwrap(), 123_456);
     }
 }

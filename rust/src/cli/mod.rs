@@ -152,6 +152,21 @@ COMMANDS
   serve      run the Fig.-5 serving pipeline on synthetic frames
              --frames <n>  --batch <n>  --rate <fps>  --config <...>
              --engine <pjrt|plan>  --datapath <f32|bit-true>
+             --replicas <n>              plan-runner pool size (default 1;
+                                         >1 needs --engine plan: N replicas
+                                         share ONE compiled plan via Arc
+                                         behind a work-stealing queue)
+             --streams <m>               concurrent camera streams feeding
+                                         the tier (default 1; --rate is
+                                         per-stream)
+             --max-wait-ms <t>           batch deadline: close a batch when
+                                         the oldest frame waited this long
+                                         (default 5)
+             --synth                     serve the dse's synthetic backbone
+                                         + bank — no artifacts needed
+                                         (implies --engine plan)
+             --json <path>               record the run as a one-row
+                                         BENCH_serving.json document
   episodes   few-shot evaluation for one config
              --config <...>  --episodes <n>  --shot <k>  --way <n>
              --engine <pjrt|plan>  --datapath <f32|bit-true>

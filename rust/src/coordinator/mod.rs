@@ -7,10 +7,12 @@
 //! record per-frame latency and end-to-end throughput — the numbers the
 //! paper reports as 16.3 ms / 61.5 fps.
 //!
-//! Threading: the frame source runs on its own std thread (no tokio in
+//! Threading: each frame source runs on its own std thread (no tokio in
 //! the offline crate set — DESIGN.md §2); the backbone executor stays on
-//! the coordinator thread.  Frames are plain `Vec<f32>` so nothing
-//! non-Send crosses threads.
+//! the coordinator thread ([`serve`]), or fans out across N replica
+//! threads behind the work-stealing [`pool`] ([`serve_pool`]) —
+//! DESIGN.md §10.  Frames are plain `Vec<f32>` so nothing non-Send
+//! crosses threads.
 //!
 //! The backbone is abstracted behind [`FeatureExtractor`] so the same
 //! serving loop drives either the PJRT executable
@@ -29,6 +31,10 @@ use anyhow::{bail, Result};
 
 use crate::fewshot::NcmClassifier;
 use crate::rng::Rng;
+
+pub mod pool;
+
+pub use pool::{serve_pool, PoolReport};
 
 /// A deployed backbone: turns flat NHWC image batches into features.
 ///
@@ -95,6 +101,7 @@ pub trait FeatureExtractor {
 }
 
 /// One frame entering the pipeline.
+#[derive(Clone)]
 pub struct Frame {
     pub id: u64,
     pub pixels: Vec<f32>,
@@ -142,14 +149,34 @@ impl Metrics {
         self.latencies_us.iter().sum::<u64>() as f64 / self.latencies_us.len() as f64 / 1e3
     }
 
+    /// Nearest-rank latency percentile in milliseconds.  Empty samples
+    /// report 0 (never index out of bounds); `p` is clamped to
+    /// [0, 100], so p=0 is the minimum and p=100 is exactly the maximum
+    /// — see [`crate::benchutil::nearest_rank_index`] for the shared
+    /// convention.
     pub fn percentile_ms(&self, p: f64) -> f64 {
-        if self.latencies_us.is_empty() {
+        let Some(idx) = crate::benchutil::nearest_rank_index(self.latencies_us.len(), p) else {
             return 0.0;
-        }
+        };
         let mut v = self.latencies_us.clone();
         v.sort_unstable();
-        let idx = ((v.len() as f64 - 1.0) * p / 100.0).round() as usize;
         v[idx] as f64 / 1e3
+    }
+
+    /// Merge per-replica metrics into pool-level totals: latencies
+    /// concatenated (percentiles then rank over EVERY frame served),
+    /// frames and batches summed.  `wall` is set to the longest part;
+    /// callers with a pool-level wall clock overwrite it so fps reflects
+    /// aggregate throughput, not a per-replica one.
+    pub fn merge(parts: &[Metrics]) -> Metrics {
+        let mut m = Metrics::default();
+        for p in parts {
+            m.latencies_us.extend_from_slice(&p.latencies_us);
+            m.frames += p.frames;
+            m.batches += p.batches;
+            m.wall = m.wall.max(p.wall);
+        }
+        m
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -187,21 +214,39 @@ impl FrameSource {
     /// Spawn the source thread; returns the frame receiver.
     pub fn spawn(self, queue_depth: usize) -> mpsc::Receiver<Frame> {
         let (tx, rx) = mpsc::sync_channel::<Frame>(queue_depth);
+        self.spawn_into(tx, 0);
+        rx
+    }
+
+    /// Spawn the source thread onto a shared bounded channel — one of M
+    /// concurrent camera streams feeding a single serving tier.  Frame
+    /// ids are `id_base .. id_base + count`, so streams given disjoint
+    /// base blocks never collide and frame conservation stays checkable
+    /// end to end.
+    ///
+    /// Rate limiting sleeps until each frame's ABSOLUTE deadline
+    /// (`start + id/rate`, re-checked after every wakeup) rather than a
+    /// fixed per-frame interval, so per-sleep overshoot never
+    /// accumulates and long runs hold the requested fps.
+    pub fn spawn_into(self, tx: mpsc::SyncSender<Frame>, id_base: u64) {
         std::thread::spawn(move || {
             let mut rng = Rng::new(self.seed);
             let per = self.img * self.img * 3;
             let start = Instant::now();
-            for id in 0..self.count {
+            for k in 0..self.count {
                 if let Some(rate) = self.rate_fps {
-                    let due = start + Duration::from_secs_f64(id as f64 / rate);
-                    let now = Instant::now();
-                    if due > now {
+                    let due = start + Duration::from_secs_f64(k as f64 / rate);
+                    loop {
+                        let now = Instant::now();
+                        if now >= due {
+                            break;
+                        }
                         std::thread::sleep(due - now);
                     }
                 }
                 let pixels: Vec<f32> = (0..per).map(|_| rng.next_f32()).collect();
                 let frame = Frame {
-                    id: id as u64,
+                    id: id_base + k as u64,
                     pixels,
                     enqueued: Instant::now(),
                 };
@@ -210,14 +255,53 @@ impl FrameSource {
                 }
             }
         });
-        rx
     }
+}
+
+/// Execute one batch of frames through backbone + NCM, recording
+/// per-frame latency into `metrics` and the classifications into
+/// `results`.  Both the single-runner [`serve`] loop and every pool
+/// replica ([`pool::serve_pool`]) funnel through this ONE function, so
+/// the two paths are bitwise-identical by construction — the basis of
+/// the pool's differential guarantee.
+fn classify_batch(
+    runner: &dyn FeatureExtractor,
+    ncm: &NcmClassifier,
+    batch: &[Frame],
+    batch_buf: &mut [f32],
+    metrics: &mut Metrics,
+    results: &mut Vec<Classified>,
+) -> Result<()> {
+    let per = runner.img() * runner.img() * 3;
+    for (i, f) in batch.iter().enumerate() {
+        batch_buf[i * per..(i + 1) * per].copy_from_slice(&f.pixels);
+    }
+    batch_buf[batch.len() * per..].fill(0.0);
+    let feats = runner.extract_live(batch_buf, batch.len())?;
+    let done = Instant::now();
+    let dim = runner.feature_dim();
+    for (i, f) in batch.iter().enumerate() {
+        let class = ncm.predict(&feats[i * dim..(i + 1) * dim]);
+        let latency = done.duration_since(f.enqueued);
+        metrics.latencies_us.push(latency.as_micros() as u64);
+        results.push(Classified {
+            id: f.id,
+            class,
+            latency,
+        });
+    }
+    metrics.frames += batch.len();
+    metrics.batches += 1;
+    Ok(())
 }
 
 /// Serve frames through backbone + NCM until the source is exhausted.
 ///
 /// Returns (metrics, classifications).  Takes any [`FeatureExtractor`]
-/// (PJRT backbone or compiled-plan engine).
+/// (PJRT backbone or compiled-plan engine).  Batches close
+/// deadline-driven: at `max_batch`, or when the OLDEST pending frame's
+/// `max_wait` budget is spent, whichever comes first — the same policy
+/// the pool replicas apply ([`pool::serve_pool`]).
 pub fn serve(
     runner: &dyn FeatureExtractor,
     ncm: &NcmClassifier,
@@ -226,7 +310,6 @@ pub fn serve(
 ) -> Result<(Metrics, Vec<Classified>)> {
     let mut metrics = Metrics::default();
     let mut results = Vec::new();
-    let per = runner.img() * runner.img() * 3;
     let mut batch_buf = vec![0.0f32; runner.input_elems()];
     let mut pending: VecDeque<Frame> = VecDeque::new();
     let start = Instant::now();
@@ -248,8 +331,10 @@ pub fn serve(
                 Err(_) => break,
             }
         }
-        // Still short: wait up to max_wait from NOW for stragglers.
-        let deadline = Instant::now() + policy.max_wait;
+        // Still short: wait for stragglers until the oldest frame's wait
+        // budget is spent.  The budget runs from ENQUEUE, not from now —
+        // a frame that already aged in the queue closes its batch sooner.
+        let deadline = pending[0].enqueued + policy.max_wait;
         while pending.len() < max_batch {
             let timeout = deadline.saturating_duration_since(Instant::now());
             if timeout.is_zero() {
@@ -265,25 +350,7 @@ pub fn serve(
         // Execute one batch.
         let take = pending.len().min(max_batch);
         let batch: Vec<Frame> = pending.drain(..take).collect();
-        for (i, f) in batch.iter().enumerate() {
-            batch_buf[i * per..(i + 1) * per].copy_from_slice(&f.pixels);
-        }
-        batch_buf[take * per..].fill(0.0);
-        let feats = runner.extract_live(&batch_buf, take)?;
-        let done = Instant::now();
-        let dim = runner.feature_dim();
-        for (i, f) in batch.iter().enumerate() {
-            let class = ncm.predict(&feats[i * dim..(i + 1) * dim]);
-            let latency = done.duration_since(f.enqueued);
-            metrics.latencies_us.push(latency.as_micros() as u64);
-            results.push(Classified {
-                id: f.id,
-                class,
-                latency,
-            });
-        }
-        metrics.frames += take;
-        metrics.batches += 1;
+        classify_batch(runner, ncm, &batch, &mut batch_buf, &mut metrics, &mut results)?;
     }
 
     metrics.wall = start.elapsed();
@@ -307,6 +374,65 @@ mod tests {
         assert_eq!(m.percentile_ms(50.0), 3.0);
         assert_eq!(m.percentile_ms(99.0), 100.0);
         assert_eq!(m.mean_batch_size(), 2.5);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        // Empty latency vector: every percentile reports 0, no indexing.
+        let empty = Metrics::default();
+        assert_eq!(empty.percentile_ms(0.0), 0.0);
+        assert_eq!(empty.percentile_ms(50.0), 0.0);
+        assert_eq!(empty.percentile_ms(100.0), 0.0);
+
+        // Single sample: every p maps to it.
+        let one = Metrics {
+            latencies_us: vec![7000],
+            frames: 1,
+            batches: 1,
+            wall: Duration::from_secs(1),
+        };
+        assert_eq!(one.percentile_ms(0.0), 7.0);
+        assert_eq!(one.percentile_ms(1.0), 7.0);
+        assert_eq!(one.percentile_ms(100.0), 7.0);
+
+        // Nearest rank: p=100 is exactly the max (no off-by-one past the
+        // end), p=0 the min, and out-of-range p clamps instead of
+        // indexing out of bounds.
+        let m = Metrics {
+            latencies_us: vec![1000, 2000, 3000, 4000],
+            frames: 4,
+            batches: 1,
+            wall: Duration::from_secs(1),
+        };
+        assert_eq!(m.percentile_ms(0.0), 1.0);
+        assert_eq!(m.percentile_ms(1.0), 1.0);
+        assert_eq!(m.percentile_ms(100.0), 4.0);
+        assert_eq!(m.percentile_ms(250.0), 4.0);
+        assert_eq!(m.percentile_ms(-5.0), 1.0);
+        // ceil(0.5 * 4) = rank 2 -> second-smallest.
+        assert_eq!(m.percentile_ms(50.0), 2.0);
+    }
+
+    #[test]
+    fn metrics_merge_concatenates_parts() {
+        let a = Metrics {
+            latencies_us: vec![1000, 5000],
+            frames: 2,
+            batches: 1,
+            wall: Duration::from_millis(10),
+        };
+        let b = Metrics {
+            latencies_us: vec![3000],
+            frames: 1,
+            batches: 1,
+            wall: Duration::from_millis(30),
+        };
+        let m = Metrics::merge(&[a, b]);
+        assert_eq!(m.frames, 3);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.wall, Duration::from_millis(30));
+        assert_eq!(m.percentile_ms(100.0), 5.0);
+        assert_eq!(m.percentile_ms(50.0), 3.0);
     }
 
     #[test]
@@ -338,6 +464,56 @@ mod tests {
         let dt = t0.elapsed();
         assert_eq!(n, 5);
         assert!(dt >= Duration::from_millis(3), "{dt:?}");
+    }
+
+    #[test]
+    fn frame_source_rate_holds_over_long_runs() {
+        // Absolute-deadline pacing: total elapsed tracks the schedule
+        // (count-1)/rate, and per-sleep overshoot must NOT accumulate
+        // the way fixed per-frame sleeps would over hundreds of frames.
+        let count = 120;
+        let rate = 2000.0;
+        let src = FrameSource {
+            count,
+            rate_fps: Some(rate),
+            img: 2,
+            seed: 3,
+        };
+        let t0 = Instant::now();
+        // Queue deeper than the run: the consumer never throttles the
+        // source, so elapsed time measures the pacer alone.
+        let rx = src.spawn(count);
+        let n = rx.iter().count();
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(n, count);
+        let ideal = (count - 1) as f64 / rate;
+        assert!(dt >= ideal, "{dt:.4}s faster than the rate allows ({ideal:.4}s)");
+        assert!(
+            dt < ideal * 2.0 + 0.25,
+            "{dt:.4}s drifted far beyond the {ideal:.4}s schedule — sleep error accumulated"
+        );
+    }
+
+    #[test]
+    fn frame_sources_share_channel_with_disjoint_ids() {
+        // M streams -> one channel: ids from disjoint base blocks, every
+        // frame delivered exactly once.
+        let (tx, rx) = mpsc::sync_channel(8);
+        let mut id_base = 0u64;
+        for s in 0..3u64 {
+            let src = FrameSource {
+                count: 5,
+                rate_fps: None,
+                img: 2,
+                seed: 10 + s,
+            };
+            src.spawn_into(tx.clone(), id_base);
+            id_base += 5;
+        }
+        drop(tx);
+        let mut ids: Vec<u64> = rx.iter().map(|f| f.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..15).collect::<Vec<_>>());
     }
 
     #[test]

@@ -1,0 +1,577 @@
+//! Multi-replica serving tier — DESIGN.md §10.
+//!
+//! N replicas of a [`FeatureExtractor`] (in practice `PlanRunner`s that
+//! share ONE compiled plan behind an `Arc` — `PlanRunner::replicate`)
+//! drain a work-stealing request queue fed by M concurrent camera
+//! streams.  The layout:
+//!
+//! ```text
+//!  M x FrameSource ──> mpsc ──> dispatcher ──> per-replica deques
+//!                               (least-loaded      │ owner pops front
+//!                                placement,        │ thieves pop back
+//!                                backpressure)     v
+//!                                             N replica threads
+//!                                             (deadline batching ->
+//!                                              classify_batch -> NCM)
+//! ```
+//!
+//! * **Work stealing** — each replica owns a deque; the dispatcher
+//!   pushes to the shortest one.  An owner pops the FRONT (oldest frame
+//!   first, which is what deadline batching wants); an idle replica
+//!   steals from a sibling's BACK (the youngest frame, leaving the
+//!   near-deadline front work with its owner).  Parking is bounded by a
+//!   short poll so stealable backlog on queues that never notify us is
+//!   still noticed.
+//! * **Deadline-driven batching** — a batch closes at `max_batch` OR
+//!   when the oldest frame's `max_wait` budget (measured from ENQUEUE)
+//!   is spent, whichever comes first.  Same policy, same
+//!   `classify_batch` kernel as the single-runner [`super::serve`], so
+//!   pool output is bitwise-identical to the single path.
+//! * **Backpressure** — at most `2 * max_batch` frames per replica sit
+//!   in the deques; beyond that the dispatcher blocks, which in turn
+//!   throttles the bounded source channel — sources never balloon
+//!   memory faster than the pool serves.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::{classify_batch, BatchPolicy, Classified, FeatureExtractor, Frame, Metrics};
+use crate::fewshot::NcmClassifier;
+
+/// How long an idle replica parks before re-scanning sibling deques for
+/// stealable frames (its own deque wakes it immediately via condvar).
+const STEAL_POLL: Duration = Duration::from_micros(500);
+
+/// Per-replica and aggregate measurements of one pool run.
+#[derive(Debug, Clone)]
+pub struct PoolReport {
+    /// Per-replica serving metrics (index = replica id).
+    pub replicas: Vec<Metrics>,
+    /// Frames each replica stole from a sibling's deque.
+    pub stolen: Vec<usize>,
+    /// Pool-level metrics: latencies merged across replicas, frames and
+    /// batches summed, wall = the POOL's wall clock (so `fps()` is
+    /// aggregate throughput, not a per-replica figure).
+    pub aggregate: Metrics,
+}
+
+impl PoolReport {
+    pub fn total_stolen(&self) -> usize {
+        self.stolen.iter().sum()
+    }
+}
+
+/// One replica's injector deque.  The owner pops the front; thieves pop
+/// the back.  `len` mirrors the deque length so placement and steal
+/// scans read it without taking the lock.
+struct ReplicaQueue {
+    q: Mutex<VecDeque<Frame>>,
+    cv: Condvar,
+    len: AtomicUsize,
+}
+
+/// What a blocking [`Shared::next`] call yielded.
+enum Next {
+    /// A frame, and whether it was stolen from a sibling.
+    Frame(Frame, bool),
+    /// The batching deadline passed with no frame available.
+    TimedOut,
+    /// Source exhausted, every deque empty: the replica may exit.
+    Drained,
+}
+
+struct Shared {
+    queues: Vec<ReplicaQueue>,
+    /// Frames currently sitting in deques (the backpressure gauge).
+    queued: AtomicUsize,
+    /// Set once the source channel is exhausted and fully dispatched.
+    closed: AtomicBool,
+    /// Set when a replica failed; unblocks the dispatcher early.
+    failed: AtomicBool,
+    /// The dispatcher parks here when the pool is saturated; replicas
+    /// notify after taking frames.
+    space: Mutex<()>,
+    space_cv: Condvar,
+}
+
+impl Shared {
+    fn new(replicas: usize) -> Shared {
+        Shared {
+            queues: (0..replicas)
+                .map(|_| ReplicaQueue {
+                    q: Mutex::new(VecDeque::new()),
+                    cv: Condvar::new(),
+                    len: AtomicUsize::new(0),
+                })
+                .collect(),
+            queued: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            failed: AtomicBool::new(false),
+            space: Mutex::new(()),
+            space_cv: Condvar::new(),
+        }
+    }
+
+    /// Dispatcher side: enqueue onto replica `i` and wake it.
+    fn push(&self, i: usize, frame: Frame) {
+        let mut q = self.queues[i].q.lock().unwrap();
+        q.push_back(frame);
+        self.queues[i].len.fetch_add(1, Ordering::Release);
+        self.queued.fetch_add(1, Ordering::Release);
+        self.queues[i].cv.notify_one();
+    }
+
+    /// A frame left the deques: update the gauge, wake the dispatcher.
+    fn took(&self) {
+        self.queued.fetch_sub(1, Ordering::Release);
+        let _guard = self.space.lock().unwrap();
+        self.space_cv.notify_one();
+    }
+
+    /// Non-blocking take: own deque front first, then steal a sibling's
+    /// back.  Returns the frame and whether it was stolen.
+    fn take(&self, me: usize) -> Option<(Frame, bool)> {
+        {
+            let mut q = self.queues[me].q.lock().unwrap();
+            if let Some(f) = q.pop_front() {
+                self.queues[me].len.fetch_sub(1, Ordering::Release);
+                drop(q);
+                self.took();
+                return Some((f, false));
+            }
+        }
+        let n = self.queues.len();
+        for k in 1..n {
+            let victim = (me + k) % n;
+            if self.queues[victim].len.load(Ordering::Acquire) == 0 {
+                continue;
+            }
+            let mut q = self.queues[victim].q.lock().unwrap();
+            if let Some(f) = q.pop_back() {
+                self.queues[victim].len.fetch_sub(1, Ordering::Release);
+                drop(q);
+                self.took();
+                return Some((f, true));
+            }
+        }
+        None
+    }
+
+    /// Blocking take with an optional batching deadline.  With no
+    /// deadline, blocks until a frame arrives or the pool drains; with
+    /// one, additionally gives up at the deadline ([`Next::TimedOut`]).
+    fn next(&self, me: usize, deadline: Option<Instant>) -> Next {
+        loop {
+            if let Some((f, stolen)) = self.take(me) {
+                return Next::Frame(f, stolen);
+            }
+            if self.closed.load(Ordering::Acquire) {
+                // Re-scan AFTER observing closed: a frame dispatched just
+                // before close cannot slip past this replica's exit.
+                return match self.take(me) {
+                    Some((f, stolen)) => Next::Frame(f, stolen),
+                    None => Next::Drained,
+                };
+            }
+            let wait = match deadline {
+                Some(d) => {
+                    let left = d.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        return Next::TimedOut;
+                    }
+                    left.min(STEAL_POLL)
+                }
+                None => STEAL_POLL,
+            };
+            let guard = self.queues[me].q.lock().unwrap();
+            if guard.is_empty() {
+                let (guard, _) = self.queues[me].cv.wait_timeout(guard, wait).unwrap();
+                drop(guard);
+            }
+        }
+    }
+
+    /// Dispatcher: wake every replica so blocked ones re-check `closed`.
+    fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        for rq in &self.queues {
+            let _guard = rq.q.lock().unwrap();
+            rq.cv.notify_all();
+        }
+    }
+}
+
+struct ReplicaOutput {
+    metrics: Metrics,
+    results: Vec<Classified>,
+    stolen: usize,
+}
+
+/// One replica thread: pull frames (own deque, else steal), close each
+/// batch at `max_batch` or the oldest frame's deadline, execute through
+/// the shared [`classify_batch`] kernel.
+fn run_replica(
+    shared: &Shared,
+    me: usize,
+    runner: &dyn FeatureExtractor,
+    ncm: &NcmClassifier,
+    policy: BatchPolicy,
+) -> Result<ReplicaOutput> {
+    let max_batch = policy.max_batch.min(runner.batch()).max(1);
+    let mut batch_buf = vec![0.0f32; runner.input_elems()];
+    let mut metrics = Metrics::default();
+    let mut results = Vec::new();
+    let mut stolen = 0usize;
+    let mut batch: Vec<Frame> = Vec::with_capacity(max_batch);
+    let start = Instant::now();
+    loop {
+        batch.clear();
+        // Block indefinitely for the batch's first frame.
+        match shared.next(me, None) {
+            Next::Frame(f, s) => {
+                stolen += usize::from(s);
+                batch.push(f);
+            }
+            Next::Drained => break,
+            Next::TimedOut => unreachable!("no deadline on the first frame"),
+        }
+        // Fill until full or the OLDEST frame's wait budget (from its
+        // enqueue, not from now) is spent.  Frames already queued are
+        // taken greedily — `next` only waits when the deques are empty.
+        let deadline = batch[0].enqueued + policy.max_wait;
+        while batch.len() < max_batch {
+            match shared.next(me, Some(deadline)) {
+                Next::Frame(f, s) => {
+                    stolen += usize::from(s);
+                    batch.push(f);
+                }
+                Next::TimedOut | Next::Drained => break,
+            }
+        }
+        classify_batch(runner, ncm, &batch, &mut batch_buf, &mut metrics, &mut results)?;
+    }
+    metrics.wall = start.elapsed();
+    Ok(ReplicaOutput {
+        metrics,
+        results,
+        stolen,
+    })
+}
+
+/// Serve frames through an N-replica pool until the source is exhausted.
+///
+/// `runners` is the replica set (for the plan engine: ONE compiled plan
+/// shared via `PlanRunner::replicate`, each box owning only its scratch
+/// arena).  Returns the per-replica + aggregate [`PoolReport`] and every
+/// classification; frame conservation (each source frame classified
+/// exactly once) holds across stealing by construction — frames live in
+/// exactly one deque or one replica's in-flight batch at any time.
+pub fn serve_pool(
+    runners: Vec<Box<dyn FeatureExtractor + Send>>,
+    ncm: &NcmClassifier,
+    rx: mpsc::Receiver<Frame>,
+    policy: BatchPolicy,
+) -> Result<(PoolReport, Vec<Classified>)> {
+    if runners.is_empty() {
+        bail!("serve_pool needs at least one replica");
+    }
+    let img = runners[0].img();
+    let dim = runners[0].feature_dim();
+    if runners.iter().any(|r| r.img() != img || r.feature_dim() != dim) {
+        bail!("pool replicas disagree on image size or feature dim");
+    }
+    let n = runners.len();
+    let cap = n * policy.max_batch.max(1) * 2;
+    let shared = Shared::new(n);
+    let start = Instant::now();
+
+    let outs: Vec<Result<ReplicaOutput>> = std::thread::scope(|scope| {
+        let shared = &shared;
+        let mut handles = Vec::with_capacity(n);
+        for (i, runner) in runners.into_iter().enumerate() {
+            handles.push(scope.spawn(move || {
+                let out = run_replica(shared, i, &*runner, ncm, policy);
+                if out.is_err() {
+                    // Drain so the dispatcher and sibling replicas are
+                    // never wedged behind a dead replica's backlog.
+                    shared.failed.store(true, Ordering::Release);
+                    while !matches!(shared.next(i, None), Next::Drained) {}
+                }
+                out
+            }));
+        }
+
+        // Dispatcher (this thread): drain the merged source channel into
+        // the shortest deque, blocking while the pool is saturated.
+        for frame in rx {
+            if shared.failed.load(Ordering::Acquire) {
+                break;
+            }
+            {
+                let mut guard = shared.space.lock().unwrap();
+                while shared.queued.load(Ordering::Acquire) >= cap
+                    && !shared.failed.load(Ordering::Acquire)
+                {
+                    guard = shared.space_cv.wait(guard).unwrap();
+                }
+            }
+            let mut best = 0usize;
+            let mut best_len = usize::MAX;
+            for (k, rq) in shared.queues.iter().enumerate() {
+                let len = rq.len.load(Ordering::Acquire);
+                if len < best_len {
+                    best = k;
+                    best_len = len;
+                }
+            }
+            shared.push(best, frame);
+        }
+        shared.close();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("pool replica panicked"))
+            .collect()
+    });
+    let wall = start.elapsed();
+
+    let mut replicas = Vec::with_capacity(n);
+    let mut stolen = Vec::with_capacity(n);
+    let mut results = Vec::new();
+    for out in outs {
+        let out = out?;
+        replicas.push(out.metrics);
+        stolen.push(out.stolen);
+        results.extend(out.results);
+    }
+    let mut aggregate = Metrics::merge(&replicas);
+    aggregate.wall = wall;
+    Ok((
+        PoolReport {
+            replicas,
+            stolen,
+            aggregate,
+        },
+        results,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::FrameSource;
+
+    /// Deterministic stand-in backbone: feature = (pixel sum) * (d+1),
+    /// with a configurable per-batch delay to shape pool timing.
+    struct StubExtractor {
+        batch: usize,
+        img: usize,
+        dim: usize,
+        delay: Duration,
+    }
+
+    impl FeatureExtractor for StubExtractor {
+        fn batch(&self) -> usize {
+            self.batch
+        }
+
+        fn img(&self) -> usize {
+            self.img
+        }
+
+        fn feature_dim(&self) -> usize {
+            self.dim
+        }
+
+        fn extract(&self, images: &[f32]) -> Result<Vec<f32>> {
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            let per = self.img * self.img * 3;
+            let mut feats = Vec::with_capacity(self.batch * self.dim);
+            for f in 0..self.batch {
+                let s: f32 = images[f * per..(f + 1) * per].iter().sum();
+                for d in 0..self.dim {
+                    feats.push(s * (d as f32 + 1.0));
+                }
+            }
+            Ok(feats)
+        }
+    }
+
+    fn stub(delay_ms: u64) -> Box<dyn FeatureExtractor + Send> {
+        Box::new(StubExtractor {
+            batch: 8,
+            img: 2,
+            dim: 2,
+            delay: Duration::from_millis(delay_ms),
+        })
+    }
+
+    /// Two prototypes along feature dims so predictions are non-trivial.
+    fn ncm() -> NcmClassifier {
+        let feats = vec![1.0, 0.0, 0.0, 1.0];
+        NcmClassifier::fit(&feats, 2, &[0, 1], 2).unwrap()
+    }
+
+    fn source(count: usize, rate_fps: Option<f64>) -> mpsc::Receiver<Frame> {
+        FrameSource {
+            count,
+            rate_fps,
+            img: 2,
+            seed: 1,
+        }
+        .spawn(16)
+    }
+
+    fn assert_conserved(results: &[Classified], count: usize) {
+        let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(
+            ids,
+            (0..count as u64).collect::<Vec<_>>(),
+            "frames dropped or duplicated"
+        );
+    }
+
+    #[test]
+    fn pool_conserves_frames_across_replicas() {
+        // 4 replicas with a small per-batch delay: deques back up, the
+        // dispatcher balances, idle replicas steal — and still every
+        // frame is classified exactly once.
+        let runners = vec![stub(1), stub(1), stub(1), stub(1)];
+        let ncm = ncm();
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        };
+        let (report, results) = serve_pool(runners, &ncm, source(200, None), policy).unwrap();
+        assert_eq!(report.aggregate.frames, 200);
+        assert_eq!(results.len(), 200);
+        assert_conserved(&results, 200);
+        assert_eq!(report.replicas.len(), 4);
+        assert_eq!(
+            report.replicas.iter().map(|m| m.frames).sum::<usize>(),
+            200,
+            "per-replica frames must partition the source"
+        );
+        assert!(report.aggregate.fps() > 0.0);
+    }
+
+    #[test]
+    fn deadline_close_under_slow_source() {
+        // Source gaps (10 ms) dwarf the wait budget (1 ms): every batch
+        // must close at the deadline with ~1 frame, far below max_batch.
+        let runners = vec![stub(0)];
+        let ncm = ncm();
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        };
+        let (report, results) =
+            serve_pool(runners, &ncm, source(20, Some(100.0)), policy).unwrap();
+        assert_conserved(&results, 20);
+        assert!(
+            report.aggregate.mean_batch_size() < 1.5,
+            "batches should close at max_wait, got mean batch {:.2}",
+            report.aggregate.mean_batch_size()
+        );
+    }
+
+    #[test]
+    fn max_batch_close_under_fast_source() {
+        // Unthrottled source against a slow replica: backlog builds, so
+        // batches fill to max_batch instead of waiting out the deadline.
+        let runners = vec![stub(2)];
+        let ncm = ncm();
+        let max_wait = Duration::from_millis(250);
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_wait,
+        };
+        let t0 = Instant::now();
+        let (report, results) = serve_pool(runners, &ncm, source(64, None), policy).unwrap();
+        let dt = t0.elapsed();
+        assert_conserved(&results, 64);
+        assert!(
+            report.aggregate.mean_batch_size() > 2.0,
+            "full deques should batch up, got mean batch {:.2}",
+            report.aggregate.mean_batch_size()
+        );
+        // Full batches must close immediately — nowhere near the
+        // per-batch deadline budget.
+        assert!(
+            dt < max_wait * 16,
+            "{dt:?}: full batches appear to have waited out max_wait"
+        );
+    }
+
+    #[test]
+    fn idle_replica_steals_from_busy_sibling() {
+        // Replica 0 is 100x slower.  Ties in least-loaded placement go
+        // to it, so its deque backs up while replica 1 idles — stealing
+        // must shift most of the work to the fast replica.
+        let runners = vec![stub(5), stub(0)];
+        let ncm = ncm();
+        let policy = BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_micros(200),
+        };
+        let (report, results) = serve_pool(runners, &ncm, source(120, None), policy).unwrap();
+        assert_conserved(&results, 120);
+        assert!(
+            report.total_stolen() > 0,
+            "idle replica never stole: {:?}",
+            report.stolen
+        );
+        assert!(
+            report.replicas[1].frames > report.replicas[0].frames,
+            "fast replica served less than the slow one: {} vs {}",
+            report.replicas[1].frames,
+            report.replicas[0].frames
+        );
+    }
+
+    #[test]
+    fn pool_rejects_mismatched_replicas() {
+        let runners: Vec<Box<dyn FeatureExtractor + Send>> = vec![
+            stub(0),
+            Box::new(StubExtractor {
+                batch: 8,
+                img: 4,
+                dim: 2,
+                delay: Duration::ZERO,
+            }),
+        ];
+        let err = serve_pool(
+            runners,
+            &ncm(),
+            source(4, None),
+            BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_millis(1),
+            },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("disagree"), "{err}");
+    }
+
+    #[test]
+    fn empty_pool_is_an_error() {
+        let (_tx, rx) = mpsc::sync_channel::<Frame>(1);
+        assert!(serve_pool(
+            Vec::new(),
+            &ncm(),
+            rx,
+            BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+        )
+        .is_err());
+    }
+}

@@ -30,7 +30,12 @@
 //!   - **serving** — the coordinator ([`coordinator`]) drives any
 //!     `FeatureExtractor`: the PJRT runtime ([`runtime`], `pjrt` feature)
 //!     or the plan engine's `PlanRunner`, plus the CPU-side few-shot
-//!     classifier ([`fewshot`]);
+//!     classifier ([`fewshot`]).  One compiled plan serves many cores:
+//!     `PlanRunner::replicate()` clones the `Arc<ExecutionPlan>` with a
+//!     fresh scratch arena, and `coordinator::serve_pool` runs N such
+//!     replicas behind a work-stealing queue with deadline-driven
+//!     batching, fed by M concurrent frame streams (`bwade serve
+//!     --replicas N --streams M`, DESIGN.md §10);
 //!   - **exploration** — the design-space exploration engine ([`dse`]):
 //!     a parallel sweep over quantization × utilization-cap grids with
 //!     Pareto extraction, a content-hashed result cache and a

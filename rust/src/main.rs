@@ -4,15 +4,19 @@
 #![allow(clippy::too_many_arguments, clippy::field_reassign_with_default)]
 
 use std::path::Path;
+use std::sync::mpsc;
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use bwade::artifacts::{ArtifactPaths, FewshotBank, ModelBundle};
-use bwade::build::{build, lower_bit_true, requantize_graph, DesignConfig};
+use bwade::benchutil::{write_serving_json, ServingRow};
+use bwade::build::{build, lower_bit_true, requantize_graph, synth_backbone_graph, DesignConfig};
 use bwade::cli::{parse_config, parse_config_list, parse_f64_list, Args, USAGE};
+use bwade::coordinator::{
+    serve, serve_pool, BatchPolicy, Classified, FeatureExtractor, Frame, FrameSource, Metrics,
+};
 use bwade::dse::{run_sweep, write_report, ResultCache, SweepSpec};
-use bwade::coordinator::{serve, BatchPolicy, FeatureExtractor, FrameSource};
 use bwade::fewshot::{evaluate, sample_episode, NcmClassifier};
 use bwade::fixedpoint::{baseline16_config, table2_configs, QuantConfig};
 use bwade::graph::Graph;
@@ -96,16 +100,30 @@ impl EngineFactory {
         })
     }
 
+    /// A plan-engine factory over the dse's synthetic backbone — the
+    /// artifact-free serving path (`bwade serve --synth`, the CI smoke
+    /// job): same graph the dse sweeps, so it needs no `make artifacts`.
+    fn new_synth(datapath: Datapath, spec: &SweepSpec, cfg: &QuantConfig) -> Self {
+        let graph = synth_backbone_graph(spec.widths, spec.img, cfg.act.bits, cfg.act.frac_bits);
+        Self {
+            engine: "plan".to_string(),
+            datapath,
+            runtime: None,
+            graph: Some(graph),
+        }
+    }
+
     fn make(
         &self,
         paths: &ArtifactPaths,
-        bundle: &ModelBundle,
+        bundle: Option<&ModelBundle>,
         batch: usize,
         cfg: QuantConfig,
     ) -> Result<Box<dyn FeatureExtractor>> {
         match self.engine.as_str() {
             "pjrt" => {
                 let runtime = self.runtime.as_ref().expect("pjrt factory has a client");
+                let bundle = bundle.ok_or_else(|| anyhow!("pjrt engine needs the model bundle"))?;
                 Ok(Box::new(BackboneRunner::new(
                     runtime,
                     bundle,
@@ -114,22 +132,27 @@ impl EngineFactory {
                     cfg,
                 )?))
             }
-            _ => {
-                // A fresh copy of the float import per config.
-                let mut graph = self.graph.clone().expect("plan factory has a graph");
-                match self.datapath {
-                    // PTQ only: the f32 simulation of the quantized net.
-                    Datapath::F32 => {
-                        requantize_graph(&mut graph, &cfg)?;
-                        Ok(Box::new(PlanRunner::new(&graph, batch)?))
-                    }
-                    // PTQ + full lowering + format annotation: the
-                    // bit-exact integer datapath of the deployed design.
-                    Datapath::BitTrue => {
-                        lower_bit_true(&mut graph, &cfg)?;
-                        Ok(Box::new(PlanRunner::new_bit_true(&graph, batch)?))
-                    }
-                }
+            _ => Ok(Box::new(self.make_plan(batch, cfg)?)),
+        }
+    }
+
+    /// The plan-engine path of [`EngineFactory::make`], concretely typed:
+    /// the multi-replica serving tier needs the `PlanRunner` itself so it
+    /// can `replicate()` the compiled plan across pool threads.
+    fn make_plan(&self, batch: usize, cfg: QuantConfig) -> Result<PlanRunner> {
+        // A fresh copy of the float import per config.
+        let mut graph = self.graph.clone().expect("plan factory has a graph");
+        match self.datapath {
+            // PTQ only: the f32 simulation of the quantized net.
+            Datapath::F32 => {
+                requantize_graph(&mut graph, &cfg)?;
+                PlanRunner::new(&graph, batch)
+            }
+            // PTQ + full lowering + format annotation: the
+            // bit-exact integer datapath of the deployed design.
+            Datapath::BitTrue => {
+                lower_bit_true(&mut graph, &cfg)?;
+                PlanRunner::new_bit_true(&graph, batch)
             }
         }
     }
@@ -383,7 +406,7 @@ fn cmd_table2(args: &Args) -> Result<()> {
         .map(|_| sample_episode(&mut rng, bank.num_classes, bank.per_class, 5, 5, 15))
         .collect::<Result<_>>()?;
     for (name, cfg) in table2_configs() {
-        let runner = factory.make(&paths, &bundle, batch, cfg)?;
+        let runner = factory.make(&paths, Some(&bundle), batch, cfg)?;
         let feats = runner.extract_all(&bank.images, bank.num_images())?;
         let report = evaluate(&feats, bundle.feature_dim, &eps)?;
         println!(
@@ -398,70 +421,189 @@ fn cmd_table2(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Spawn `streams` concurrent camera sources onto one bounded channel
+/// with disjoint frame-id blocks partitioning `0..frames`.
+fn spawn_streams(frames: usize, streams: usize, rate: f64, img: usize) -> mpsc::Receiver<Frame> {
+    let streams = streams.max(1);
+    let (tx, rx) = mpsc::sync_channel(64.max(streams * 8));
+    let mut id_base = 0u64;
+    for s in 0..streams {
+        let count = frames / streams + usize::from(s < frames % streams);
+        let src = FrameSource {
+            count,
+            rate_fps: if rate > 0.0 { Some(rate) } else { None },
+            img,
+            seed: 11 + s as u64 * 7919,
+        };
+        src.spawn_into(tx.clone(), id_base);
+        id_base += count as u64;
+    }
+    rx
+}
+
+/// Frame-conservation check + the machine-greppable smoke line the CI
+/// `serve-smoke` job asserts on: every source frame classified exactly
+/// once, aggregate fps nonzero.
+fn report_conservation(frames_in: usize, results: &[Classified], metrics: &Metrics) -> Result<()> {
+    let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    let conserved = ids.iter().enumerate().all(|(i, &id)| id == i as u64) && ids.len() == frames_in;
+    println!(
+        "frame conservation: {}/{} classified exactly once [{}]",
+        results.len(),
+        frames_in,
+        if conserved { "OK" } else { "VIOLATED" }
+    );
+    println!(
+        "serve: frames_in={} frames_out={} fps={:.1}",
+        frames_in,
+        results.len(),
+        metrics.fps()
+    );
+    if !conserved {
+        bail!("frame conservation violated: {} in, {} out", frames_in, results.len());
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let frames = args.get_usize("frames", 256)?;
     let batch_opt = args.get_usize("batch", 0)?;
     let rate = args.get_f64("rate", 0.0)?;
-    let engine = args.get_or("engine", default_engine()).to_string();
+    let replicas = args.get_usize("replicas", 1)?.max(1);
+    let streams = args.get_usize("streams", 1)?.max(1);
+    let synth = args.has_flag("synth");
+    // --synth serves the dse's synthetic backbone + bank (no artifacts
+    // needed), which only the plan engine can execute.
+    let engine = if synth {
+        "plan".to_string()
+    } else {
+        args.get_or("engine", default_engine()).to_string()
+    };
     let datapath = Datapath::parse(args.get_or("datapath", "f32"))?;
-    let paths = ArtifactPaths::default_dir();
-    let bundle = paths.model_bundle()?;
     let cfg = parse_config(args.get_or("config", "b6_c1.5_r2.2"))?;
+    if replicas > 1 && engine != "plan" {
+        bail!(
+            "--replicas > 1 requires --engine plan: compiled plans are compile-once/run-many \
+             (shared behind an Arc), a PJRT executable is not replicable"
+        );
+    }
+
+    // Geometry, support bank and engine factory — artifact-backed or
+    // synthesized.  `bundle` exists only on the artifact path (pjrt
+    // needs it; the synthetic path never touches `make artifacts`).
+    let paths = ArtifactPaths::default_dir();
+    let spec = SweepSpec::default();
+    let (factory, bundle, img, bank_images, bank_classes, bank_per_class) = if synth {
+        (
+            EngineFactory::new_synth(datapath, &spec, &cfg),
+            None,
+            spec.img,
+            spec.make_bank(),
+            spec.num_classes,
+            spec.per_class,
+        )
+    } else {
+        let factory = EngineFactory::new(&engine, datapath, &paths)?;
+        let b = paths.model_bundle()?;
+        let bank = FewshotBank::load(&paths.fewshot_bank())?;
+        let img = b.img;
+        (factory, Some(b), img, bank.images, bank.num_classes, bank.per_class)
+    };
     // PJRT executables exist only at the exported batch sizes; the plan
     // engine batches at any size.
-    let exec_batch = if batch_opt > 0 {
-        if engine == "plan" {
-            batch_opt
-        } else {
-            *bundle
-                .batch_sizes
-                .iter()
-                .filter(|&&b| b >= batch_opt)
-                .min()
-                .unwrap_or_else(|| bundle.batch_sizes.iter().max().unwrap())
-        }
+    let exec_batch = if engine == "plan" {
+        if batch_opt > 0 { batch_opt } else { 8 }
     } else {
-        *bundle.batch_sizes.iter().max().unwrap_or(&1)
+        let b = bundle.as_ref().expect("pjrt path loads the bundle");
+        let max = *b.batch_sizes.iter().max().unwrap_or(&1);
+        if batch_opt > 0 {
+            // Smallest exported size that fits the request, else the max.
+            *b.batch_sizes.iter().filter(|&&x| x >= batch_opt).min().unwrap_or(&max)
+        } else {
+            max
+        }
     };
-    let factory = EngineFactory::new(&engine, datapath, &paths)?;
-    let runner = factory.make(&paths, &bundle, exec_batch, cfg)?;
 
     // Prototypes from the bank (5-way support) so classification is real.
-    let bank = FewshotBank::load(&paths.fewshot_bank())?;
-    let mut rng = Rng::new(7);
-    let ep = sample_episode(&mut rng, bank.num_classes, bank.per_class, 5, 5, 1)?;
-    let mut sup = Vec::new();
-    for &i in &ep.support {
-        sup.extend_from_slice(bank.image(i));
-    }
-    let sup_feats = runner.extract_all(&sup, ep.support.len())?;
-    let ncm = NcmClassifier::fit(&sup_feats, bundle.feature_dim, &ep.support_labels, 5)?;
-
-    let src = FrameSource {
-        count: frames,
-        rate_fps: if rate > 0.0 { Some(rate) } else { None },
-        img: bundle.img,
-        seed: 11,
+    let support = {
+        let mut rng = Rng::new(7);
+        let ep = sample_episode(&mut rng, bank_classes, bank_per_class, 5, 5, 1)?;
+        let per = img * img * 3;
+        let mut sup = Vec::new();
+        for &i in &ep.support {
+            sup.extend_from_slice(&bank_images[i * per..(i + 1) * per]);
+        }
+        (sup, ep.support_labels, ep.support.len())
     };
-    let rx = src.spawn(64);
+
     let policy = BatchPolicy {
         max_batch: if batch_opt > 0 { batch_opt } else { exec_batch },
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 5)? as u64),
     };
     println!(
-        "serving {frames} frames (engine {engine}, datapath {}, config {}, exec batch {exec_batch}, policy batch {}) ...",
+        "serving {frames} frames (engine {engine}, datapath {}, config {}, {replicas} replica(s), \
+         {streams} stream(s), exec batch {exec_batch}, policy batch {}{}) ...",
         datapath.describe(),
         cfg.describe(),
-        policy.max_batch
+        policy.max_batch,
+        if synth { ", synthetic backbone" } else { "" }
     );
-    if let Some(bytes) = runner.bytes_moved_per_frame() {
+
+    let (metrics, results, bytes_per_frame) = if replicas == 1 {
+        let runner = factory.make(&paths, bundle.as_ref(), exec_batch, cfg)?;
+        let sup_feats = runner.extract_all(&support.0, support.2)?;
+        let ncm = NcmClassifier::fit(&sup_feats, runner.feature_dim(), &support.1, 5)?;
+        let bytes = runner.bytes_moved_per_frame();
+        let rx = spawn_streams(frames, streams, rate, img);
+        let (metrics, results) = serve(runner.as_ref(), &ncm, rx, policy)?;
+        (metrics, results, bytes)
+    } else {
+        // One compiled plan, N replicas: the base runner compiles, the
+        // rest share its plan (`Arc`) with private scratch arenas.
+        let base = factory.make_plan(exec_batch, cfg)?;
+        let sup_feats = base.extract_all(&support.0, support.2)?;
+        let ncm = NcmClassifier::fit(&sup_feats, base.feature_dim(), &support.1, 5)?;
+        let bytes = base.bytes_moved_per_frame();
+        let mut runners: Vec<Box<dyn FeatureExtractor + Send>> = Vec::with_capacity(replicas);
+        for _ in 1..replicas {
+            runners.push(Box::new(base.replicate()));
+        }
+        runners.insert(0, Box::new(base));
+        let rx = spawn_streams(frames, streams, rate, img);
+        let (report, results) = serve_pool(runners, &ncm, rx, policy)?;
+        for (i, m) in report.replicas.iter().enumerate() {
+            println!("  replica {i}: {}  (stolen {})", m.summary(), report.stolen[i]);
+        }
+        println!("  pool steal total: {} frames", report.total_stolen());
+        (report.aggregate, results, Some(bytes))
+    };
+
+    if let Some(bytes) = bytes_per_frame {
         println!(
             "backbone kernel traffic: {:.1} KiB/frame at the plan's container widths (packed codes on bit-true)",
             bytes as f64 / 1024.0
         );
     }
-    let (metrics, _) = serve(runner.as_ref(), &ncm, rx, policy)?;
     println!("{}", metrics.summary());
+    report_conservation(frames, &results, &metrics)?;
+    if let Some(out) = args.get("json") {
+        let row = ServingRow {
+            config: cfg.describe(),
+            datapath: datapath.describe().to_string(),
+            replicas,
+            streams,
+            frames,
+            fps: metrics.fps(),
+            p50_ms: metrics.percentile_ms(50.0),
+            p95_ms: metrics.percentile_ms(95.0),
+            p99_ms: metrics.percentile_ms(99.0),
+            bytes_per_frame: bytes_per_frame.unwrap_or(0),
+        };
+        let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        write_serving_json(Path::new(out), host, &[row])?;
+        println!("recorded 1 serving row -> {out}");
+    }
     println!("paper Fig. 5 reference: 16.3 ms backbone latency, 61.5 fps");
     Ok(())
 }
@@ -478,7 +620,7 @@ fn cmd_episodes(args: &Args) -> Result<()> {
     let bank = FewshotBank::load(&paths.fewshot_bank())?;
     let batch = *bundle.batch_sizes.iter().max().unwrap_or(&1);
     let factory = EngineFactory::new(&engine, datapath, &paths)?;
-    let runner = factory.make(&paths, &bundle, batch, cfg)?;
+    let runner = factory.make(&paths, Some(&bundle), batch, cfg)?;
     println!(
         "extracting features for {} bank images (engine {engine}, datapath {}) ...",
         bank.num_images(),

@@ -64,6 +64,7 @@
 
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -1030,8 +1031,16 @@ impl ExecutionPlan {
 /// computes integer codes end to end; this runner dequantizes ONLY the
 /// final feature vector (`code * 2^-frac`) at egress, so the features it
 /// serves are exactly what the FPGA would produce.
+///
+/// Compiled plans are compile-once/run-many: the plan (steps, interned
+/// slots, converted width-native weights) is immutable after compile and
+/// sits behind an [`Arc`], while all per-run mutable state lives in the
+/// [`PlanScratch`] arena.  [`PlanRunner::replicate`] exploits that split
+/// to stamp out serving replicas that share one compiled plan but own
+/// private scratch arenas — the substrate of the multi-replica pool
+/// (`coordinator::pool`).
 pub struct PlanRunner {
-    plan: ExecutionPlan,
+    plan: Arc<ExecutionPlan>,
     input: String,
     output: String,
     img: usize,
@@ -1074,7 +1083,7 @@ impl PlanRunner {
         let feature_dim = *out_shape
             .last()
             .ok_or_else(|| anyhow!("scalar graph output"))?;
-        let plan = ExecutionPlan::compile_with(graph, datapath)?;
+        let plan = Arc::new(ExecutionPlan::compile_with(graph, datapath)?);
         let out_scale = match datapath {
             Datapath::F32 => None,
             Datapath::BitTrue => {
@@ -1099,6 +1108,30 @@ impl PlanRunner {
     /// Which arithmetic the backbone runs.
     pub fn datapath(&self) -> Datapath {
         self.plan.datapath()
+    }
+
+    /// A new runner over the SAME compiled plan (`Arc` clone — no graph
+    /// work, no weight conversion) with a fresh, empty scratch arena.
+    /// Replicas are independent executors: each `extract` call touches
+    /// only its own arena, so replicas may run on different threads
+    /// concurrently while the plan is shared read-only.
+    pub fn replicate(&self) -> PlanRunner {
+        PlanRunner {
+            plan: Arc::clone(&self.plan),
+            input: self.input.clone(),
+            output: self.output.clone(),
+            img: self.img,
+            feature_dim: self.feature_dim,
+            batch: self.batch,
+            out_scale: self.out_scale,
+            scratch: RefCell::new(PlanScratch::default()),
+        }
+    }
+
+    /// True when `other` executes the same compiled plan instance (the
+    /// replicas of one [`PlanRunner::replicate`] family).
+    pub fn shares_plan_with(&self, other: &PlanRunner) -> bool {
+        Arc::ptr_eq(&self.plan, &other.plan)
     }
 
     /// Arena statistics accumulated over every extract call so far.
@@ -1513,9 +1546,8 @@ mod tests {
         assert_eq!(Datapath::default(), Datapath::F32);
     }
 
-    #[test]
-    fn plan_runner_shapes_and_determinism() {
-        // Tiny NCHW "backbone": input quant-free, one Conv + ReduceMean.
+    /// Tiny NCHW "backbone": input quant-free, one Conv + ReduceMean.
+    fn tiny_bb_graph() -> Graph {
         let mut g = Graph::new("tiny_bb");
         g.inputs = vec!["global_in".into()];
         g.outputs = vec!["global_out".into()];
@@ -1543,6 +1575,12 @@ mod tests {
                         .with("keepdims", AttrVal::Int(0)),
                 ),
         );
+        g
+    }
+
+    #[test]
+    fn plan_runner_shapes_and_determinism() {
+        let g = tiny_bb_graph();
         let runner = PlanRunner::new(&g, 2).unwrap();
         use crate::coordinator::FeatureExtractor;
         assert_eq!(runner.img(), 4);
@@ -1554,5 +1592,31 @@ mod tests {
         assert_eq!(f1.len(), 2 * 5);
         assert_eq!(f1, f2, "plan extraction must be deterministic");
         assert!(f1.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn replicated_runner_shares_the_compiled_plan() {
+        use crate::coordinator::FeatureExtractor;
+        let g = tiny_bb_graph();
+        let base = PlanRunner::new(&g, 2).unwrap();
+        let fresh = PlanRunner::new(&g, 2).unwrap();
+        let rep = base.replicate();
+        // Replicas share ONE compiled plan; an independent compile does not.
+        assert!(base.shares_plan_with(&rep));
+        assert!(!base.shares_plan_with(&fresh));
+        assert_eq!(rep.img(), base.img());
+        assert_eq!(rep.feature_dim(), base.feature_dim());
+        assert_eq!(rep.batch(), base.batch());
+        // Scratch arenas are private: both extract, identical features,
+        // and the replica's arena accumulates its own stats from zero.
+        let images: Vec<f32> = (0..base.input_elems()).map(|i| (i % 5) as f32 * 0.2).collect();
+        let a = base.extract(&images).unwrap();
+        let b = rep.extract(&images).unwrap();
+        assert_eq!(a, b, "replicas must be bitwise-identical executors");
+        assert!(rep.arena_stats().fresh_allocs > 0);
+
+        // A replica is Send: it may move onto a pool thread.
+        fn assert_send<T: Send>(_: &T) {}
+        assert_send(&rep);
     }
 }

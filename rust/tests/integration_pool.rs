@@ -1,0 +1,180 @@
+//! Integration: the multi-replica serving tier on the compiled-plan
+//! engine (synthetic backbone, no artifacts needed).  The load-bearing
+//! property is the differential guarantee — pool-served classifications
+//! are bitwise-identical to the single-runner `serve` path for the same
+//! frames — plus frame conservation under work stealing and shared-plan
+//! replication end to end.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use bwade::build::{lower_bit_true, requantize_graph, synth_backbone_graph};
+use bwade::coordinator::{
+    serve, serve_pool, BatchPolicy, Classified, FeatureExtractor, Frame, FrameSource,
+};
+use bwade::dse::SweepSpec;
+use bwade::fewshot::{sample_episode, NcmClassifier};
+use bwade::fixedpoint::headline_config;
+use bwade::plan::{Datapath, PlanRunner};
+use bwade::rng::Rng;
+
+/// Compile the dse's synthetic backbone on the requested datapath with
+/// the 4-bit headline config.
+fn make_runner(datapath: Datapath, batch: usize) -> PlanRunner {
+    let spec = SweepSpec::default();
+    let cfg = headline_config();
+    let mut graph = synth_backbone_graph(spec.widths, spec.img, cfg.act.bits, cfg.act.frac_bits);
+    match datapath {
+        Datapath::F32 => {
+            requantize_graph(&mut graph, &cfg).unwrap();
+            PlanRunner::new(&graph, batch).unwrap()
+        }
+        Datapath::BitTrue => {
+            lower_bit_true(&mut graph, &cfg).unwrap();
+            PlanRunner::new_bit_true(&graph, batch).unwrap()
+        }
+    }
+}
+
+/// 5-way prototypes from the synthetic bank through `runner`.
+fn make_ncm(runner: &PlanRunner) -> NcmClassifier {
+    let spec = SweepSpec::default();
+    let bank = spec.make_bank();
+    let mut rng = Rng::new(7);
+    let ep = sample_episode(&mut rng, spec.num_classes, spec.per_class, 5, 5, 1).unwrap();
+    let per = spec.img * spec.img * 3;
+    let mut sup = Vec::new();
+    for &i in &ep.support {
+        sup.extend_from_slice(&bank[i * per..(i + 1) * per]);
+    }
+    let sup_feats = runner.extract_all(&sup, ep.support.len()).unwrap();
+    NcmClassifier::fit(&sup_feats, runner.feature_dim(), &ep.support_labels, 5).unwrap()
+}
+
+/// Materialize a deterministic frame set so the SAME frames can be
+/// replayed through both serving paths.
+fn capture_frames(count: usize) -> Vec<Frame> {
+    FrameSource {
+        count,
+        rate_fps: None,
+        img: SweepSpec::default().img,
+        seed: 5,
+    }
+    .spawn(count)
+    .iter()
+    .collect()
+}
+
+fn replay(frames: &[Frame]) -> mpsc::Receiver<Frame> {
+    let (tx, rx) = mpsc::sync_channel(frames.len());
+    for f in frames {
+        tx.send(f.clone()).unwrap();
+    }
+    rx
+}
+
+fn classes_by_id(mut results: Vec<Classified>) -> Vec<(u64, usize)> {
+    results.sort_by_key(|r| r.id);
+    results.into_iter().map(|r| (r.id, r.class)).collect()
+}
+
+#[test]
+fn pool_matches_single_runner_bitwise() {
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::from_millis(2),
+    };
+    for datapath in [Datapath::F32, Datapath::BitTrue] {
+        let base = make_runner(datapath, 4);
+        let ncm = make_ncm(&base);
+        let frames = capture_frames(48);
+
+        let (single_metrics, single) = serve(&base, &ncm, replay(&frames), policy).unwrap();
+        assert_eq!(single_metrics.frames, 48);
+
+        let runners: Vec<Box<dyn FeatureExtractor + Send>> =
+            (0..4).map(|_| Box::new(base.replicate()) as _).collect();
+        let (report, pooled) = serve_pool(runners, &ncm, replay(&frames), policy).unwrap();
+        assert_eq!(report.aggregate.frames, 48);
+        assert_eq!(report.replicas.len(), 4);
+
+        // Order-independent bitwise agreement: the pool may serve frames
+        // in any interleaving across replicas, but every frame id gets
+        // exactly the class the single runner produced.
+        assert_eq!(
+            classes_by_id(single),
+            classes_by_id(pooled),
+            "pool diverged from the single runner on the {} datapath",
+            datapath.describe()
+        );
+    }
+}
+
+#[test]
+fn pool_conserves_frames_from_concurrent_streams() {
+    // 4 rate-limited streams feeding a 3-replica bit-true pool through
+    // one bounded channel: disjoint id blocks, nothing dropped or
+    // duplicated, nonzero aggregate throughput.
+    let base = make_runner(Datapath::BitTrue, 4);
+    let ncm = make_ncm(&base);
+    let img = SweepSpec::default().img;
+    let frames = 60usize;
+    let streams = 4usize;
+    let (tx, rx) = mpsc::sync_channel(32);
+    let mut id_base = 0u64;
+    for s in 0..streams {
+        let count = frames / streams + usize::from(s < frames % streams);
+        FrameSource {
+            count,
+            rate_fps: Some(500.0),
+            img,
+            seed: 20 + s as u64,
+        }
+        .spawn_into(tx.clone(), id_base);
+        id_base += count as u64;
+    }
+    drop(tx);
+
+    let runners: Vec<Box<dyn FeatureExtractor + Send>> =
+        (0..3).map(|_| Box::new(base.replicate()) as _).collect();
+    let (report, results) = serve_pool(
+        runners,
+        &ncm,
+        rx,
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+    )
+    .unwrap();
+
+    let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(
+        ids,
+        (0..frames as u64).collect::<Vec<_>>(),
+        "frames dropped or duplicated across replicas"
+    );
+    assert_eq!(report.aggregate.frames, frames);
+    assert!(report.aggregate.fps() > 0.0);
+    assert!(results.iter().all(|r| r.class < 5));
+    // Per-replica counts partition the source.
+    assert_eq!(report.replicas.iter().map(|m| m.frames).sum::<usize>(), frames);
+}
+
+#[test]
+fn replicas_share_one_plan_and_agree_feature_for_feature() {
+    // The Arc split end to end: replicate() shares the compiled plan,
+    // and a replica's features are bitwise those of the base runner on
+    // the bit-true datapath (integer codes leave no rounding slack).
+    let base = make_runner(Datapath::BitTrue, 2);
+    let rep = base.replicate();
+    assert!(base.shares_plan_with(&rep));
+
+    let per = base.img() * base.img() * 3;
+    let mut rng = Rng::new(33);
+    let images: Vec<f32> = (0..2 * per).map(|_| rng.next_f32()).collect();
+    let a = base.extract_all(&images, 2).unwrap();
+    let b = rep.extract_all(&images, 2).unwrap();
+    assert_eq!(a, b, "replica features must be bitwise-identical");
+}
