@@ -12,7 +12,7 @@
 //!   * episode sampling,
 //!   * systolic simulator sweep.
 
-use bwade::benchutil::{bench, throughput};
+use bwade::benchutil::{bench, throughput, write_kernels_json, KernelRow};
 use bwade::build::{lower_bit_true, requantize_graph, synth_backbone_graph, DesignConfig};
 use bwade::fewshot::{sample_episode, NcmClassifier};
 use bwade::fixedpoint::{headline_config, FxpFormat};
@@ -53,6 +53,11 @@ fn overhead_chain(depth: usize, width: usize) -> Graph {
 
 fn main() {
     println!("== hotpath micro-benchmarks (L3 §Perf) ==\n");
+
+    // Speedups measured below are recorded here and written to
+    // BENCH_kernels.json (schema bwade/bench-kernels/v1) at the end —
+    // machine-readable, not print-only.
+    let mut kernel_rows: Vec<KernelRow> = Vec::new();
 
     // ---- dataflow simulator ------------------------------------------
     let mut graph = synth_backbone_graph([8, 16, 32, 64], 32, 4, 2);
@@ -106,6 +111,12 @@ fn main() {
         "  -> plan speedup over interpreter (compute-bound backbone): {:.2}x",
         r_interp.mean().as_secs_f64() / r_plan.mean().as_secs_f64().max(1e-12)
     );
+    kernel_rows.push(KernelRow::from_results(
+        "engine-backbone",
+        "widths 8-16-32-64 img 32",
+        ("interpreter", &r_interp),
+        ("plan", &r_plan),
+    ));
 
     // Overhead-bound regime: deep elementwise chain, tiny tensors — the
     // per-node dispatch cost the paper's deployment story is about.
@@ -125,6 +136,40 @@ fn main() {
         r_interp.mean().as_secs_f64() / r_plan.mean().as_secs_f64().max(1e-12),
         chain_plan.num_inplace_steps(),
         chain_plan.num_steps()
+    );
+    kernel_rows.push(KernelRow::from_results(
+        "engine-chain",
+        "256 elementwise ops x 64 elems",
+        ("interpreter", &r_interp),
+        ("plan", &r_plan),
+    ));
+
+    // ---- per-step profiling instrumentation ---------------------------
+    // run_with is the same const-false monomorphization the serving tier
+    // calls — the profiler's existence must cost it nothing.  The
+    // enabled path pays two Instant reads per step; measure both here so
+    // an accidental branch in the disabled path fails the bench.
+    let mut scratch = PlanScratch::default();
+    let r_off = bench("engine: chain run_with (profiling disabled)", 5, 50, || {
+        chain_plan.run_with(&chain_feeds, &mut scratch).unwrap();
+    });
+    let mut profile = chain_plan.new_profile();
+    let mut scratch = PlanScratch::default();
+    let r_on = bench("engine: chain run_with_profile (enabled)", 5, 50, || {
+        chain_plan.run_with_profile(&chain_feeds, &mut scratch, &mut profile).unwrap();
+    });
+    let runs = profile.runs();
+    assert_eq!(runs, 55, "bench executes warmup + iters profiled runs");
+    for s in profile.steps() {
+        assert_eq!(s.calls, runs, "every step runs once per profiled frame");
+    }
+    assert_eq!(profile.total_bytes(), runs * chain_plan.bytes_moved_per_frame());
+    let off_vs_baseline = r_off.mean().as_secs_f64() / r_plan.mean().as_secs_f64().max(1e-12);
+    let on_vs_off = r_on.mean().as_secs_f64() / r_off.mean().as_secs_f64().max(1e-12);
+    println!("  -> profiling off: {off_vs_baseline:.2}x plain run_with; on: {on_vs_off:.2}x off");
+    assert!(
+        off_vs_baseline < 2.5,
+        "disabled profiling slowed run_with: {off_vs_baseline:.2}x (must be noise-level)"
     );
 
     // ---- bit-true integer datapath vs f32 -----------------------------
@@ -183,6 +228,12 @@ fn main() {
             "  -> bit-true MVAU speedup over f32: {:.2}x",
             r_f.mean().as_secs_f64() / r_i.mean().as_secs_f64().max(1e-12)
         );
+        kernel_rows.push(KernelRow::from_results(
+            "mvau",
+            "256x144 x 144x64 + act",
+            ("f32", &r_f),
+            ("i32", &r_i),
+        ));
         // Packed containers: same codes in i8 activations/weights, the
         // blocked i8 x i8 -> i32-accumulate inner loop, i8 output codes.
         let x8 = Tensor::new_i8(
@@ -204,6 +255,12 @@ fn main() {
             "  -> packed MVAU speedup over i32: {:.2}x",
             r_i.mean().as_secs_f64() / r_p.mean().as_secs_f64().max(1e-12)
         );
+        kernel_rows.push(KernelRow::from_results(
+            "mvau",
+            "256x144 x 144x64 + act",
+            ("i32", &r_i),
+            ("packed-i8", &r_p),
+        ));
 
         let fspec = OpSpec::Threshold { layout: ChanLayout::Nhwc, out_scale: 0.25, out_bias: 0.0 };
         let ispec = IntOpSpec::Threshold { layout: ChanLayout::Nhwc, out_mul: 1, out_add: 0 };
@@ -235,6 +292,12 @@ fn main() {
             "  -> bit-true MultiThreshold speedup over f32: {:.2}x",
             r_f.mean().as_secs_f64() / r_i.mean().as_secs_f64().max(1e-12)
         );
+        kernel_rows.push(KernelRow::from_results(
+            "multithreshold",
+            "1x32x32x64",
+            ("f32", &r_f),
+            ("i32", &r_i),
+        ));
         // Packed: u8.4-ish codes live in an i16 container, threshold
         // codes and the q outputs in i8 — a quarter of the i32 traffic.
         let a16 = Tensor::new_i16(
@@ -256,6 +319,12 @@ fn main() {
             "  -> packed MultiThreshold speedup over i32: {:.2}x",
             r_i.mean().as_secs_f64() / r_p.mean().as_secs_f64().max(1e-12)
         );
+        kernel_rows.push(KernelRow::from_results(
+            "multithreshold",
+            "1x32x32x64",
+            ("i32", &r_i),
+            ("packed-i16-i8", &r_p),
+        ));
 
         // Whole backbone: f32 plan vs the packed bit-true plan vs the
         // all-i32 wide oracle, plus the bytes-per-frame each one streams
@@ -303,6 +372,18 @@ fn main() {
                 "  -> packed backbone speedup over i32 bit-true: {:.2}x",
                 r_w.mean().as_secs_f64() / r_p.mean().as_secs_f64().max(1e-12)
             );
+            kernel_rows.push(KernelRow::from_results(
+                "backbone",
+                label,
+                ("f32-plan", &r_f),
+                ("packed", &r_p),
+            ));
+            kernel_rows.push(KernelRow::from_results(
+                "backbone",
+                label,
+                ("i32-wide", &r_w),
+                ("packed", &r_p),
+            ));
             println!(
                 "  -> bytes/frame: packed {:.1} KiB vs i32 {:.1} KiB ({:.2}x less traffic; f32 plan {:.1} KiB)",
                 plan_packed.bytes_moved_per_frame() as f64 / 1024.0,
@@ -360,6 +441,11 @@ fn main() {
     bench("systolic sim: 8-layer network", 10, 100, || {
         std::hint::black_box(simulate(&cfg, &headline_config(), &layers));
     });
+
+    // ---- recorded kernel speedups -------------------------------------
+    let out = std::path::Path::new("BENCH_kernels.json");
+    write_kernels_json(out, &kernel_rows).unwrap();
+    println!("\nrecorded {} kernel rows -> {}", kernel_rows.len(), out.display());
 
     println!("\nhotpath_micro done");
 }

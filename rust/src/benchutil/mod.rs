@@ -159,6 +159,82 @@ pub fn write_serving_json(path: &Path, host_parallelism: usize, rows: &[ServingR
         .with_context(|| format!("writing {}", path.display()))
 }
 
+/// Schema id stamped into `BENCH_kernels.json`.
+pub const KERNELS_SCHEMA: &str = "bwade/bench-kernels/v1";
+
+/// One recorded kernel comparison — a row of `BENCH_kernels.json`
+/// (schema documented in DESIGN.md §11).  The `hotpath_micro` bench
+/// emits these instead of leaving speedups as print-only output.
+#[derive(Debug, Clone)]
+pub struct KernelRow {
+    /// Kernel under test (e.g. `mvau`, `multithreshold`, `backbone`).
+    pub kernel: String,
+    /// Shape / config label (e.g. `256x144x64` or `b6_c1.5_r2.2`).
+    pub config: String,
+    /// Baseline variant label (e.g. `f32`, `i32-wide`).
+    pub baseline: String,
+    /// Contender variant label (e.g. `packed-i8`).
+    pub contender: String,
+    pub baseline_ms: f64,
+    pub contender_ms: f64,
+}
+
+impl KernelRow {
+    /// From two measured [`BenchResult`]s (mean over samples).
+    pub fn from_results(
+        kernel: &str,
+        config: &str,
+        baseline: (&str, &BenchResult),
+        contender: (&str, &BenchResult),
+    ) -> KernelRow {
+        KernelRow {
+            kernel: kernel.to_string(),
+            config: config.to_string(),
+            baseline: baseline.0.to_string(),
+            contender: contender.0.to_string(),
+            baseline_ms: baseline.1.mean().as_secs_f64() * 1e3,
+            contender_ms: contender.1.mean().as_secs_f64() * 1e3,
+        }
+    }
+
+    /// Contender speedup over baseline (>1 means the contender wins).
+    pub fn speedup(&self) -> f64 {
+        if self.contender_ms > 0.0 {
+            self.baseline_ms / self.contender_ms
+        } else {
+            0.0
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("kernel", Json::str(self.kernel.clone())),
+            ("config", Json::str(self.config.clone())),
+            ("baseline", Json::str(self.baseline.clone())),
+            ("contender", Json::str(self.contender.clone())),
+            ("baseline_ms", Json::num(self.baseline_ms)),
+            ("contender_ms", Json::num(self.contender_ms)),
+            ("speedup", Json::num(self.speedup())),
+        ])
+    }
+}
+
+/// Serialize kernel rows to the `BENCH_kernels.json` document (the
+/// testable half of the emitter, like [`serving_json`]).
+pub fn kernels_json(rows: &[KernelRow]) -> String {
+    let doc = json::obj(vec![
+        ("schema", Json::str(KERNELS_SCHEMA)),
+        ("rows", Json::Arr(rows.iter().map(|r| r.to_json()).collect())),
+    ]);
+    doc.to_string_pretty() + "\n"
+}
+
+/// Record kernel speedups: write `rows` to `path` (normally
+/// `BENCH_kernels.json` at the repo root, produced by `hotpath_micro`).
+pub fn write_kernels_json(path: &Path, rows: &[KernelRow]) -> Result<()> {
+    std::fs::write(path, kernels_json(rows)).with_context(|| format!("writing {}", path.display()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,6 +286,29 @@ mod tests {
         assert_eq!(nearest_rank_index(4, -3.0), Some(0));
         assert_eq!(nearest_rank_index(4, f64::NAN), Some(3));
         assert_eq!(nearest_rank_index(1, 100.0), Some(0));
+    }
+
+    #[test]
+    fn kernels_json_schema_round_trip() {
+        let base = BenchResult {
+            name: "f32".into(),
+            samples: vec![Duration::from_millis(4)],
+        };
+        let cont = BenchResult {
+            name: "packed".into(),
+            samples: vec![Duration::from_millis(1)],
+        };
+        let row =
+            KernelRow::from_results("mvau", "256x144x64", ("f32", &base), ("packed-i8", &cont));
+        assert!((row.speedup() - 4.0).abs() < 1e-9);
+        let doc = kernels_json(&[row]);
+        let parsed = Json::parse(&doc).expect("emitted document parses");
+        assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(), KERNELS_SCHEMA);
+        let rows = parsed.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("kernel").unwrap().as_str().unwrap(), "mvau");
+        assert_eq!(rows[0].get("contender").unwrap().as_str().unwrap(), "packed-i8");
+        assert!((rows[0].get("speedup").unwrap().as_f64().unwrap() - 4.0).abs() < 1e-9);
     }
 
     #[test]

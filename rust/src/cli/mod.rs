@@ -167,6 +167,26 @@ COMMANDS
                                          (implies --engine plan)
              --json <path>               record the run as a one-row
                                          BENCH_serving.json document
+             --metrics-json <path>       write the process telemetry
+                                         registry (pool queue depths,
+                                         steals, batch close reasons,
+                                         per-replica busy/idle) as a
+                                         bwade/telemetry/v1 snapshot;
+                                         also emits a periodic summary
+                                         line on stderr while serving
+  profile    per-step plan profile joined against the DataflowSim
+             per-actor cycle prediction -> PROFILE.md (measured vs
+             predicted shares, per-layer error in percentage points)
+             --synth                     profile the dse's synthetic
+                                         backbone — no artifacts needed
+             --config <...>              bit-width config (default b6_c1.5_r2.2)
+             --datapath <f32|bit-true>   measured datapath (default bit-true)
+             --frames <n>                measured frames after warmup
+                                         (default 16)
+             --max-util <f>              folding cap for the predicted
+                                         side (default 0.85)
+             --out <path>                report path (default PROFILE.md)
+             --json <path>               machine-readable bwade/profile/v1
   episodes   few-shot evaluation for one config
              --config <...>  --episodes <n>  --shot <k>  --way <n>
              --engine <pjrt|plan>  --datapath <f32|bit-true>

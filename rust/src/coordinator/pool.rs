@@ -34,13 +34,14 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use super::{classify_batch, BatchPolicy, Classified, FeatureExtractor, Frame, Metrics};
 use crate::fewshot::NcmClassifier;
+use crate::telemetry::{Counter, Gauge, Histogram, Registry};
 
 /// How long an idle replica parks before re-scanning sibling deques for
 /// stealable frames (its own deque wakes it immediately via condvar).
@@ -62,6 +63,50 @@ pub struct PoolReport {
 impl PoolReport {
     pub fn total_stolen(&self) -> usize {
         self.stolen.iter().sum()
+    }
+}
+
+/// Telemetry handles for one pool run, resolved from a
+/// [`Registry`] ONCE at [`serve_pool_with`] entry — the serving loops
+/// record through `Arc` handles and never touch the registry lock.
+/// Metric names are documented in DESIGN.md §11.
+struct PoolTelemetry {
+    /// `pool.frames_dispatched`: frames placed into replica deques.
+    dispatched: Arc<Counter>,
+    /// `pool.queue_depth`: target deque length sampled at each dispatch.
+    queue_depth: Arc<Histogram>,
+    /// `pool.steals`: frames taken from a sibling's deque.
+    steals: Arc<Counter>,
+    /// `pool.batch_close.deadline` / `.max_batch` / `.drained`: why each
+    /// batch stopped filling.
+    close_deadline: Arc<Counter>,
+    close_max_batch: Arc<Counter>,
+    close_drained: Arc<Counter>,
+    /// `pool.replica<i>.busy_us` / `.idle_us` per replica.
+    per_replica: Vec<ReplicaTelemetry>,
+}
+
+struct ReplicaTelemetry {
+    busy_us: Arc<Counter>,
+    idle_us: Arc<Counter>,
+}
+
+impl PoolTelemetry {
+    fn resolve(reg: &Registry, replicas: usize) -> PoolTelemetry {
+        PoolTelemetry {
+            dispatched: reg.counter("pool.frames_dispatched"),
+            queue_depth: reg.histogram("pool.queue_depth"),
+            steals: reg.counter("pool.steals"),
+            close_deadline: reg.counter("pool.batch_close.deadline"),
+            close_max_batch: reg.counter("pool.batch_close.max_batch"),
+            close_drained: reg.counter("pool.batch_close.drained"),
+            per_replica: (0..replicas)
+                .map(|i| ReplicaTelemetry {
+                    busy_us: reg.counter(&format!("pool.replica{i}.busy_us")),
+                    idle_us: reg.counter(&format!("pool.replica{i}.idle_us")),
+                })
+                .collect(),
+        }
     }
 }
 
@@ -96,10 +141,13 @@ struct Shared {
     /// notify after taking frames.
     space: Mutex<()>,
     space_cv: Condvar,
+    /// Mirror of `queued` exported as the `pool.inflight` gauge (None
+    /// when the pool runs without telemetry).
+    inflight: Option<Arc<Gauge>>,
 }
 
 impl Shared {
-    fn new(replicas: usize) -> Shared {
+    fn new(replicas: usize, inflight: Option<Arc<Gauge>>) -> Shared {
         Shared {
             queues: (0..replicas)
                 .map(|_| ReplicaQueue {
@@ -113,6 +161,7 @@ impl Shared {
             failed: AtomicBool::new(false),
             space: Mutex::new(()),
             space_cv: Condvar::new(),
+            inflight,
         }
     }
 
@@ -121,13 +170,19 @@ impl Shared {
         let mut q = self.queues[i].q.lock().unwrap();
         q.push_back(frame);
         self.queues[i].len.fetch_add(1, Ordering::Release);
-        self.queued.fetch_add(1, Ordering::Release);
+        let queued = self.queued.fetch_add(1, Ordering::Release) + 1;
+        if let Some(g) = &self.inflight {
+            g.set(queued as i64);
+        }
         self.queues[i].cv.notify_one();
     }
 
     /// A frame left the deques: update the gauge, wake the dispatcher.
     fn took(&self) {
-        self.queued.fetch_sub(1, Ordering::Release);
+        let queued = self.queued.fetch_sub(1, Ordering::Release) - 1;
+        if let Some(g) = &self.inflight {
+            g.set(queued as i64);
+        }
         let _guard = self.space.lock().unwrap();
         self.space_cv.notify_one();
     }
@@ -220,12 +275,14 @@ fn run_replica(
     runner: &dyn FeatureExtractor,
     ncm: &NcmClassifier,
     policy: BatchPolicy,
+    telem: Option<&PoolTelemetry>,
 ) -> Result<ReplicaOutput> {
     let max_batch = policy.max_batch.min(runner.batch()).max(1);
     let mut batch_buf = vec![0.0f32; runner.input_elems()];
     let mut metrics = Metrics::default();
     let mut results = Vec::new();
     let mut stolen = 0usize;
+    let mut busy = Duration::ZERO;
     let mut batch: Vec<Frame> = Vec::with_capacity(max_batch);
     let start = Instant::now();
     loop {
@@ -234,6 +291,11 @@ fn run_replica(
         match shared.next(me, None) {
             Next::Frame(f, s) => {
                 stolen += usize::from(s);
+                if s {
+                    if let Some(t) = telem {
+                        t.steals.inc();
+                    }
+                }
                 batch.push(f);
             }
             Next::Drained => break,
@@ -243,18 +305,49 @@ fn run_replica(
         // enqueue, not from now) is spent.  Frames already queued are
         // taken greedily — `next` only waits when the deques are empty.
         let deadline = batch[0].enqueued + policy.max_wait;
+        let mut drained_mid_fill = false;
+        let mut deadline_close = false;
         while batch.len() < max_batch {
             match shared.next(me, Some(deadline)) {
                 Next::Frame(f, s) => {
                     stolen += usize::from(s);
+                    if s {
+                        if let Some(t) = telem {
+                            t.steals.inc();
+                        }
+                    }
                     batch.push(f);
                 }
-                Next::TimedOut | Next::Drained => break,
+                Next::TimedOut => {
+                    deadline_close = true;
+                    break;
+                }
+                Next::Drained => {
+                    drained_mid_fill = true;
+                    break;
+                }
             }
         }
+        if let Some(t) = telem {
+            if deadline_close {
+                t.close_deadline.inc();
+            } else if drained_mid_fill {
+                t.close_drained.inc();
+            } else {
+                t.close_max_batch.inc();
+            }
+        }
+        let t0 = Instant::now();
         classify_batch(runner, ncm, &batch, &mut batch_buf, &mut metrics, &mut results)?;
+        busy += t0.elapsed();
     }
     metrics.wall = start.elapsed();
+    if let Some(t) = telem {
+        let r = &t.per_replica[me];
+        r.busy_us.add(busy.as_micros() as u64);
+        r.idle_us
+            .add(metrics.wall.saturating_sub(busy).as_micros() as u64);
+    }
     Ok(ReplicaOutput {
         metrics,
         results,
@@ -276,6 +369,21 @@ pub fn serve_pool(
     rx: mpsc::Receiver<Frame>,
     policy: BatchPolicy,
 ) -> Result<(PoolReport, Vec<Classified>)> {
+    serve_pool_with(runners, ncm, rx, policy, None)
+}
+
+/// [`serve_pool`], additionally exporting pool telemetry into
+/// `registry`: queue-depth samples, steal and batch-close-reason
+/// counters, the in-flight gauge, and per-replica busy/idle time
+/// (metric names in DESIGN.md §11).  All handles are resolved once up
+/// front; with `None` the serving loops skip every recording site.
+pub fn serve_pool_with(
+    runners: Vec<Box<dyn FeatureExtractor + Send>>,
+    ncm: &NcmClassifier,
+    rx: mpsc::Receiver<Frame>,
+    policy: BatchPolicy,
+    registry: Option<&Registry>,
+) -> Result<(PoolReport, Vec<Classified>)> {
     if runners.is_empty() {
         bail!("serve_pool needs at least one replica");
     }
@@ -286,15 +394,17 @@ pub fn serve_pool(
     }
     let n = runners.len();
     let cap = n * policy.max_batch.max(1) * 2;
-    let shared = Shared::new(n);
+    let telem = registry.map(|reg| PoolTelemetry::resolve(reg, n));
+    let shared = Shared::new(n, registry.map(|reg| reg.gauge("pool.inflight")));
     let start = Instant::now();
 
     let outs: Vec<Result<ReplicaOutput>> = std::thread::scope(|scope| {
         let shared = &shared;
+        let telem = telem.as_ref();
         let mut handles = Vec::with_capacity(n);
         for (i, runner) in runners.into_iter().enumerate() {
             handles.push(scope.spawn(move || {
-                let out = run_replica(shared, i, &*runner, ncm, policy);
+                let out = run_replica(shared, i, &*runner, ncm, policy, telem);
                 if out.is_err() {
                     // Drain so the dispatcher and sibling replicas are
                     // never wedged behind a dead replica's backlog.
@@ -329,6 +439,11 @@ pub fn serve_pool(
                 }
             }
             shared.push(best, frame);
+            if let Some(t) = telem {
+                t.dispatched.inc();
+                t.queue_depth
+                    .record(shared.queues[best].len.load(Ordering::Acquire) as u64);
+            }
         }
         shared.close();
         handles
@@ -533,6 +648,42 @@ mod tests {
             report.replicas[1].frames,
             report.replicas[0].frames
         );
+    }
+
+    #[test]
+    fn pool_exports_telemetry() {
+        // Fresh (non-global) registry so the test is isolated; frame
+        // accounting must reconcile with the pool's own report.
+        let reg = Registry::new();
+        let runners = vec![stub(1), stub(1)];
+        let ncm = ncm();
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        };
+        let (report, results) =
+            serve_pool_with(runners, &ncm, source(80, None), policy, Some(&reg)).unwrap();
+        assert_conserved(&results, 80);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counters["pool.frames_dispatched"], 80);
+        assert_eq!(snap.histograms["pool.queue_depth"].count, 80);
+        let closes = snap.counters["pool.batch_close.deadline"]
+            + snap.counters["pool.batch_close.max_batch"]
+            + snap.counters["pool.batch_close.drained"];
+        assert_eq!(closes as usize, report.aggregate.batches);
+        assert_eq!(snap.counters["pool.steals"] as usize, report.total_stolen());
+        // Every queued frame was taken by the time the pool drained.
+        assert_eq!(snap.gauges["pool.inflight"], 0);
+        for i in 0..2 {
+            let busy = snap.counters[&format!("pool.replica{i}.busy_us")];
+            let idle = snap.counters[&format!("pool.replica{i}.idle_us")];
+            assert!(busy > 0, "replica {i} recorded no busy time");
+            let wall_us = report.replicas[i].wall.as_micros() as u64;
+            assert!(
+                busy + idle <= wall_us + 2_000,
+                "replica {i}: busy {busy} + idle {idle} exceeds wall {wall_us}"
+            );
+        }
     }
 
     #[test]

@@ -30,7 +30,8 @@ pub mod pareto;
 pub mod report;
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -47,7 +48,7 @@ use crate::rng::Rng;
 use crate::transforms::{convert_to_hw, run_default_pipeline};
 
 pub use cache::ResultCache;
-pub use report::{render_report, write_report};
+pub use report::{render_report, render_telemetry_footer, write_report, write_report_with_telemetry};
 
 /// The sweep grid plus everything that makes a point reproducible: one
 /// synthesized backbone, one deterministic few-shot bank, one episode
@@ -251,6 +252,102 @@ pub struct SweepResult {
     /// Ascending indices into `outcomes` of the non-dominated set over
     /// (accuracy ↑, fps ↑, utilization ↓).
     pub pareto: Vec<usize>,
+    /// Wall-clock accounting of THIS run (cache-dependent by nature —
+    /// rendered only into the report's telemetry footer, never into the
+    /// deterministic result tables).
+    pub timing: SweepTiming,
+}
+
+/// Where a sweep's wall clock went (DESIGN.md §11; the report's
+/// `Sweep telemetry` footer).
+#[derive(Debug, Clone, Default)]
+pub struct SweepTiming {
+    /// Whole-sweep wall time, seconds.
+    pub wall_s: f64,
+    /// Per distinct uncached config: (config name, prepare seconds) —
+    /// accuracy scoring + lowering, the cap-independent phase.
+    pub prep_s: Vec<(String, f64)>,
+    /// Per outcome (grid order): hardware-build seconds, `None` for
+    /// cache hits.
+    pub point_s: Vec<Option<f64>>,
+}
+
+impl SweepTiming {
+    /// Mean hardware-build time over freshly evaluated points.
+    pub fn mean_point_s(&self) -> f64 {
+        let fresh: Vec<f64> = self.point_s.iter().filter_map(|&s| s).collect();
+        if fresh.is_empty() {
+            0.0
+        } else {
+            fresh.iter().sum::<f64>() / fresh.len() as f64
+        }
+    }
+
+    /// Slowest freshly evaluated point: (outcome index, seconds).
+    pub fn max_point(&self) -> Option<(usize, f64)> {
+        self.point_s
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &s)| s.map(|s| (i, s)))
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+    }
+}
+
+/// Knobs for [`run_sweep_with`] beyond the spec itself.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SweepOptions {
+    /// Print a throttled progress line with ETA to stderr as workers
+    /// finish prep configs / grid points (`bwade dse`).
+    pub progress: bool,
+}
+
+/// Throttled cross-worker progress meter: every completion ticks it; at
+/// most one line per ~200 ms reaches stderr (plus the final one).
+struct Progress {
+    enabled: bool,
+    label: &'static str,
+    total: usize,
+    done: AtomicUsize,
+    started: Instant,
+    last_ms: AtomicU64,
+}
+
+impl Progress {
+    fn new(enabled: bool, label: &'static str, total: usize) -> Progress {
+        Progress {
+            enabled,
+            label,
+            total,
+            done: AtomicUsize::new(0),
+            started: Instant::now(),
+            last_ms: AtomicU64::new(0),
+        }
+    }
+
+    fn tick(&self) {
+        let done = self.done.fetch_add(1, Ordering::Relaxed) + 1;
+        if !self.enabled || self.total == 0 {
+            return;
+        }
+        let elapsed = self.started.elapsed();
+        let now_ms = elapsed.as_millis() as u64;
+        let last = self.last_ms.load(Ordering::Relaxed);
+        let due = done == self.total || now_ms.saturating_sub(last) >= 200;
+        if due
+            && self
+                .last_ms
+                .compare_exchange(last, now_ms, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+        {
+            let eta = elapsed.as_secs_f64() / done as f64 * (self.total - done) as f64;
+            eprintln!(
+                "dse: {} {done}/{} done  elapsed {:.1}s  eta {eta:.1}s",
+                self.label,
+                self.total,
+                elapsed.as_secs_f64()
+            );
+        }
+    }
 }
 
 /// Cap-independent measurements of one prepared config, carried into
@@ -407,6 +504,19 @@ pub fn run_sweep(
     workers: usize,
     cache: Option<&ResultCache>,
 ) -> Result<SweepResult> {
+    run_sweep_with(spec, workers, cache, SweepOptions::default())
+}
+
+/// [`run_sweep`] with [`SweepOptions`] (progress reporting).  Also
+/// feeds the process-wide telemetry registry: `dse.cache_hits` /
+/// `dse.cache_misses` counters and the `dse.point_eval_us` histogram.
+pub fn run_sweep_with(
+    spec: &SweepSpec,
+    workers: usize,
+    cache: Option<&ResultCache>,
+    opts: SweepOptions,
+) -> Result<SweepResult> {
+    let sweep_start = Instant::now();
     spec.validate()?;
     let points = spec.points();
     let bank = spec.make_bank();
@@ -429,6 +539,10 @@ pub fn run_sweep(
     }
     let cached = points.len() - todo.len();
     let evaluated = todo.len();
+    let registry = crate::telemetry::Registry::global();
+    registry.counter("dse.cache_hits").add(cached as u64);
+    registry.counter("dse.cache_misses").add(evaluated as u64);
+    let point_eval_us = registry.histogram("dse.point_eval_us");
 
     // Phase 1: once per distinct quant config among the uncached points —
     // accuracy scoring and graph lowering are cap-independent, so running
@@ -444,12 +558,18 @@ pub fn run_sweep(
             cfg_quants.push(points[i].quant);
         }
     }
+    let prep_progress = Progress::new(opts.progress, "prep", cfg_quants.len());
     let prep_results = parallel_map(&cfg_quants, workers, |_, q| {
-        prepare_config(spec, q, &bank, &episodes)
+        let t0 = Instant::now();
+        let r = prepare_config(spec, q, &bank, &episodes);
+        prep_progress.tick();
+        (r, t0.elapsed().as_secs_f64())
     });
     let mut first_err: Option<anyhow::Error> = None;
     let mut prepared: HashMap<String, (AccuracyReport, Graph, ConfigStats)> = HashMap::new();
-    for (key, res) in cfg_keys.iter().zip(prep_results) {
+    let mut prep_s: Vec<(String, f64)> = Vec::with_capacity(cfg_keys.len());
+    for (key, (res, secs)) in cfg_keys.iter().zip(prep_results) {
+        prep_s.push((key.clone(), secs));
         match res {
             Ok(p) => {
                 prepared.insert(key.clone(), p);
@@ -471,22 +591,32 @@ pub fn run_sweep(
         .copied()
         .filter(|&i| prepared.contains_key(&points[i].quant.describe()))
         .collect();
-    let hw_results = parallel_map(&ready, workers, |_, &i| -> Result<PointMetrics> {
-        let (acc, lowered, stats) = &prepared[&points[i].quant.describe()];
-        let metrics = build_hw_metrics(spec, &points[i], *acc, lowered, *stats)?;
-        if let Some(c) = cache {
-            // A cache-write failure (disk full, dir removed mid-run) must
-            // not discard a successfully computed point.
-            if let Err(e) = c.store(spec, &points[i], &metrics) {
-                eprintln!(
-                    "warning: cache write failed for {} @ cap {:.2}: {e:#}",
-                    points[i].name, points[i].max_utilization
-                );
+    let point_progress = Progress::new(opts.progress, "points", ready.len());
+    let hw_results = parallel_map(&ready, workers, |_, &i| {
+        let t0 = Instant::now();
+        let res = (|| -> Result<PointMetrics> {
+            let (acc, lowered, stats) = &prepared[&points[i].quant.describe()];
+            let metrics = build_hw_metrics(spec, &points[i], *acc, lowered, *stats)?;
+            if let Some(c) = cache {
+                // A cache-write failure (disk full, dir removed mid-run)
+                // must not discard a successfully computed point.
+                if let Err(e) = c.store(spec, &points[i], &metrics) {
+                    eprintln!(
+                        "warning: cache write failed for {} @ cap {:.2}: {e:#}",
+                        points[i].name, points[i].max_utilization
+                    );
+                }
             }
-        }
-        Ok(metrics)
+            Ok(metrics)
+        })();
+        let dt = t0.elapsed();
+        point_eval_us.record(dt.as_micros() as u64);
+        point_progress.tick();
+        (res, dt.as_secs_f64())
     });
-    for (&i, res) in ready.iter().zip(hw_results) {
+    let mut point_s: Vec<Option<f64>> = vec![None; points.len()];
+    for (&i, (res, secs)) in ready.iter().zip(hw_results) {
+        point_s[i] = Some(secs);
         match res {
             Ok(metrics) => {
                 outcomes[i] = Some(PointOutcome {
@@ -520,6 +650,11 @@ pub fn run_sweep(
         evaluated,
         cached,
         pareto,
+        timing: SweepTiming {
+            wall_s: sweep_start.elapsed().as_secs_f64(),
+            prep_s,
+            point_s,
+        },
     })
 }
 

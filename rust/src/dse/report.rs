@@ -172,6 +172,55 @@ pub fn write_report(path: &Path, spec: &SweepSpec, result: &SweepResult) -> Resu
         .with_context(|| format!("writing report {}", path.display()))
 }
 
+/// The run-dependent telemetry footer (`## Sweep telemetry`): where the
+/// wall clock went, cache hit/miss counts, per-phase timing.  Kept OUT
+/// of [`render_report`] on purpose — the result tables stay byte-stable
+/// across cached re-sweeps (the CI cache-reuse job strips everything
+/// from this heading before `cmp`ing reports).
+pub fn render_telemetry_footer(result: &SweepResult) -> String {
+    let t = &result.timing;
+    let mut s = String::new();
+    let _ = writeln!(s);
+    let _ = writeln!(s, "## Sweep telemetry");
+    let _ = writeln!(s);
+    let _ = writeln!(
+        s,
+        "This run: {} points evaluated, {} from cache; wall {:.1} s.",
+        result.evaluated, result.cached, t.wall_s
+    );
+    if !t.prep_s.is_empty() {
+        let total: f64 = t.prep_s.iter().map(|(_, s)| s).sum();
+        let _ = writeln!(
+            s,
+            "Config prep (accuracy + lowering): {} configs, {total:.1} s total.",
+            t.prep_s.len()
+        );
+    }
+    if let Some((i, secs)) = t.max_point() {
+        let o = &result.outcomes[i];
+        let _ = writeln!(
+            s,
+            "Point builds (folding + sim): mean {:.2} s, slowest {:.2} s ({} @ cap {:.2}).",
+            t.mean_point_s(),
+            secs,
+            o.point.name,
+            o.point.max_utilization
+        );
+    }
+    s
+}
+
+/// [`write_report`] plus the [`render_telemetry_footer`] appended — the
+/// `bwade dse` output path.
+pub fn write_report_with_telemetry(
+    path: &Path,
+    spec: &SweepSpec,
+    result: &SweepResult,
+) -> Result<()> {
+    let md = render_report(spec, result) + &render_telemetry_footer(result);
+    std::fs::write(path, md).with_context(|| format!("writing report {}", path.display()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,6 +258,7 @@ mod tests {
             cached: 0,
             outcomes,
             pareto,
+            timing: crate::dse::SweepTiming::default(),
         }
     }
 
@@ -264,6 +314,30 @@ mod tests {
         let flagged = render_report(&spec, &result);
         assert!(flagged.contains("⚠ 3 non-dyadic (m>1)"), "{flagged}");
         assert!(flagged.contains("exact-but-f32-divergent"));
+    }
+
+    #[test]
+    fn telemetry_footer_is_separate_from_report() {
+        let spec = SweepSpec::default();
+        let mut result = fake_result(&spec);
+        result.timing = crate::dse::SweepTiming {
+            wall_s: 12.5,
+            prep_s: vec![("b6_c1.5_r2.2".into(), 4.0)],
+            point_s: (0..result.outcomes.len())
+                .map(|i| if i == 0 { Some(2.0) } else { None })
+                .collect(),
+        };
+        // The deterministic report never carries run timing...
+        let md = render_report(&spec, &result);
+        assert!(
+            !md.contains("Sweep telemetry"),
+            "footer leaked into the deterministic report"
+        );
+        // ...the footer does, and reflects the timing fields.
+        let footer = render_telemetry_footer(&result);
+        assert!(footer.contains("## Sweep telemetry"));
+        assert!(footer.contains("wall 12.5 s"));
+        assert!(footer.contains("slowest 2.00 s"), "{footer}");
     }
 
     #[test]

@@ -78,5 +78,6 @@ pub mod resources;
 pub mod rng;
 pub mod runtime;
 pub mod systolic;
+pub mod telemetry;
 pub mod tensor;
 pub mod transforms;

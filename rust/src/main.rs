@@ -11,20 +11,25 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use bwade::artifacts::{ArtifactPaths, FewshotBank, ModelBundle};
 use bwade::benchutil::{write_serving_json, ServingRow};
-use bwade::build::{build, lower_bit_true, requantize_graph, synth_backbone_graph, DesignConfig};
+use bwade::build::{
+    build, implement_lowered, lower_bit_true, requantize_graph, synth_backbone_graph, DesignConfig,
+};
 use bwade::cli::{parse_config, parse_config_list, parse_f64_list, Args, USAGE};
 use bwade::coordinator::{
-    serve, serve_pool, BatchPolicy, Classified, FeatureExtractor, Frame, FrameSource, Metrics,
+    serve, serve_pool_with, BatchPolicy, Classified, FeatureExtractor, Frame, FrameSource, Metrics,
 };
-use bwade::dse::{run_sweep, write_report, ResultCache, SweepSpec};
+use bwade::dse::{run_sweep_with, write_report_with_telemetry, ResultCache, SweepOptions, SweepSpec};
 use bwade::fewshot::{evaluate, sample_episode, NcmClassifier};
 use bwade::fixedpoint::{baseline16_config, table2_configs, QuantConfig};
 use bwade::graph::Graph;
+use bwade::json::{self, Json};
 use bwade::plan::{Datapath, PlanRunner};
 use bwade::resources::{utilization_line, Device};
 use bwade::rng::Rng;
 use bwade::runtime::{BackboneRunner, Runtime};
 use bwade::systolic::{layers_from_meta, simulate, SystolicConfig};
+use bwade::telemetry::{write_metrics_json, Registry, StderrEmitter};
+use bwade::transforms::{convert_to_hw, run_default_pipeline};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -42,6 +47,7 @@ fn run(argv: &[String]) -> Result<()> {
         "compare" => cmd_compare(&args),
         "table2" => cmd_table2(&args),
         "serve" => cmd_serve(&args),
+        "profile" => cmd_profile(&args),
         "episodes" => cmd_episodes(&args),
         "info" => cmd_info(&args),
         "help" | "" => {
@@ -237,7 +243,7 @@ fn cmd_dse(args: &Args) -> Result<()> {
             .map(|c| c.dir().display().to_string())
             .unwrap_or_else(|| "off".to_string()),
     );
-    let result = run_sweep(&spec, workers, cache.as_ref())?;
+    let result = run_sweep_with(&spec, workers, cache.as_ref(), SweepOptions { progress: true })?;
 
     println!(
         "\n{:<16} {:>5} {:>9} {:>8} {:>10} {:>9} {:>9} {:>7}",
@@ -266,7 +272,7 @@ fn cmd_dse(args: &Args) -> Result<()> {
             },
         );
     }
-    write_report(Path::new(&out), &spec, &result)?;
+    write_report_with_telemetry(Path::new(&out), &spec, &result)?;
     println!(
         "\nPareto frontier (* above): {} of {} points",
         result.pareto.len(),
@@ -275,6 +281,19 @@ fn cmd_dse(args: &Args) -> Result<()> {
     println!(
         "evaluated {} points, {} cache hits; report -> {}",
         result.evaluated, result.cached, out
+    );
+    println!(
+        "sweep wall {:.1} s, mean point build {:.2} s{}",
+        result.timing.wall_s,
+        result.timing.mean_point_s(),
+        result
+            .timing
+            .max_point()
+            .map(|(i, s)| format!(
+                ", slowest {:.2} s ({} @ cap {:.2})",
+                s, result.outcomes[i].point.name, result.outcomes[i].point.max_utilization
+            ))
+            .unwrap_or_default()
     );
     Ok(())
 }
@@ -541,6 +560,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch: if batch_opt > 0 { batch_opt } else { exec_batch },
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 5)? as u64),
     };
+    // --metrics-json turns the process-wide telemetry registry on: the
+    // pool exports its counters there, a background emitter prints a
+    // summary line to stderr while serving, and the final snapshot lands
+    // in the given file (schema bwade/telemetry/v1).
+    let metrics_json = args.get("metrics-json").map(|s| s.to_string());
+    let registry: Option<&'static Registry> = metrics_json.as_ref().map(|_| Registry::global());
+    let emitter = registry.map(|reg| StderrEmitter::spawn(reg, Duration::from_millis(500)));
     println!(
         "serving {frames} frames (engine {engine}, datapath {}, config {}, {replicas} replica(s), \
          {streams} stream(s), exec batch {exec_batch}, policy batch {}{}) ...",
@@ -571,7 +597,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         runners.insert(0, Box::new(base));
         let rx = spawn_streams(frames, streams, rate, img);
-        let (report, results) = serve_pool(runners, &ncm, rx, policy)?;
+        let (report, results) = serve_pool_with(runners, &ncm, rx, policy, registry)?;
         for (i, m) in report.replicas.iter().enumerate() {
             println!("  replica {i}: {}  (stolen {})", m.summary(), report.stolen[i]);
         }
@@ -587,6 +613,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     println!("{}", metrics.summary());
     report_conservation(frames, &results, &metrics)?;
+    // Serve-level aggregates go into the registry on BOTH replica paths,
+    // so the snapshot is never empty even when the pool (and its own
+    // exports) is bypassed at --replicas 1.
+    if let Some(reg) = registry {
+        reg.counter("serve.frames").add(metrics.frames as u64);
+        reg.counter("serve.batches").add(metrics.batches as u64);
+        reg.gauge("serve.wall_ms").set(metrics.wall.as_millis() as i64);
+        let lat = reg.histogram("serve.latency_us");
+        for &us in &metrics.latencies_us {
+            lat.record(us);
+        }
+    }
+    if let Some(em) = emitter {
+        em.stop();
+    }
+    if let Some(path) = &metrics_json {
+        let snap = Registry::global().snapshot();
+        write_metrics_json(Path::new(path), &snap)?;
+        println!("recorded telemetry snapshot -> {path}");
+    }
     if let Some(out) = args.get("json") {
         let row = ServingRow {
             config: cfg.describe(),
@@ -606,6 +652,330 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     println!("paper Fig. 5 reference: 16.3 ms backbone latency, 61.5 fps");
     Ok(())
+}
+
+/// One joined row of the measured-vs-predicted table: a DataflowSim
+/// actor matched by name to the plan step that executes it.
+struct ProfileRow {
+    name: String,
+    op: String,
+    variant: &'static str,
+    calls: u64,
+    meas_ms: f64,
+    meas_share: f64,
+    cycles: u64,
+    pred_ms: f64,
+    pred_share: f64,
+    err_pp: f64,
+}
+
+/// `bwade profile` — run one compiled design per-step and join measured
+/// wall time against the DataflowSim per-actor cycle prediction
+/// (DESIGN.md §11).  Both sides come from the SAME lowered HW graph, so
+/// plan step names equal `HwNodeModel` names and the join is exact:
+/// every DataflowSim actor must be matched by a plan step (coverage is
+/// asserted), while plan-only steps (the host-side ingress quant/layout
+/// conversions the FPGA never times) are listed separately.
+fn cmd_profile(args: &Args) -> Result<()> {
+    let synth = args.has_flag("synth");
+    let datapath = Datapath::parse(args.get_or("datapath", "bit-true"))?;
+    let cfg = parse_config(args.get_or("config", "b6_c1.5_r2.2"))?;
+    let frames = args.get_usize("frames", 16)?.max(1);
+    let out = args.get_or("out", "PROFILE.md").to_string();
+    let device = Device::pynq_z1();
+    let spec = SweepSpec::default();
+
+    let mut graph = if synth {
+        synth_backbone_graph(spec.widths, spec.img, cfg.act.bits, cfg.act.frac_bits)
+    } else {
+        load_graph(&ArtifactPaths::default_dir())?
+    };
+    // Lower to the HW graph FIRST on both datapaths: the plan then
+    // compiles over HW nodes, so its step names ARE the actor names.
+    match datapath {
+        Datapath::F32 => {
+            requantize_graph(&mut graph, &cfg)?;
+            run_default_pipeline(&mut graph, None, 0.0)?;
+            if !convert_to_hw::is_fully_hw(&graph) {
+                bail!("profile lowering left non-HW ops in the graph: {:?}", graph.op_census());
+            }
+        }
+        Datapath::BitTrue => lower_bit_true(&mut graph, &cfg)?,
+    }
+    let per: usize = graph.shape_of(&graph.inputs[0])?.iter().product();
+
+    // Predicted side: folding search + bounded dataflow sim on a clone
+    // (folding mutates node attrs; the plan compiler never reads them).
+    let build_cfg = DesignConfig {
+        quant: cfg,
+        target_fps: None,
+        max_utilization: args.get_f64("max-util", 0.85)?,
+        verify: false,
+    };
+    let mut hw = graph.clone();
+    let report = implement_lowered(&mut hw, &build_cfg, &device)?;
+
+    // Measured side: per-frame execution with the per-step profiler on.
+    println!(
+        "profiling {} frames (datapath {}, config {}, {} DataflowSim actors{}) ...",
+        frames,
+        datapath.describe(),
+        cfg.describe(),
+        report.models.len(),
+        if synth { ", synthetic backbone" } else { "" }
+    );
+    let runner = PlanRunner::with_datapath(&graph, 1, datapath)?;
+    let mut rng = Rng::new(0x5EED);
+    let mut images = vec![0f32; frames * per];
+    for v in images.iter_mut() {
+        *v = rng.next_f32();
+    }
+    // Warmup run: the first frame pays arena growth; keep it out of the
+    // measured profile.
+    let mut warm = runner.new_profile();
+    runner.profile_frames(&images[..per], 1, &mut warm)?;
+    let mut profile = runner.new_profile();
+    runner.profile_frames(&images, frames, &mut profile)?;
+
+    // Join by node name, in plan-step (topological) order.
+    let mut pred: std::collections::BTreeMap<&str, u64> =
+        report.models.iter().map(|m| (m.name.as_str(), m.cycles)).collect();
+    let mut rows: Vec<ProfileRow> = Vec::new();
+    let mut ingress: Vec<(String, String, &'static str, f64)> = Vec::new();
+    for s in profile.steps() {
+        let meas_ms = s.nanos as f64 / 1e6 / frames as f64;
+        match pred.remove(s.name.as_str()) {
+            Some(cycles) => rows.push(ProfileRow {
+                name: s.name.clone(),
+                op: s.op.clone(),
+                variant: s.variant,
+                calls: s.calls,
+                meas_ms,
+                meas_share: 0.0,
+                cycles,
+                pred_ms: device.cycles_to_ms(cycles),
+                pred_share: 0.0,
+                err_pp: 0.0,
+            }),
+            None => ingress.push((s.name.clone(), s.op.clone(), s.variant, meas_ms)),
+        }
+    }
+    println!("coverage: {}/{} DataflowSim actors matched", rows.len(), report.models.len());
+    if !pred.is_empty() {
+        let missing: Vec<&str> = pred.keys().copied().collect();
+        bail!("DataflowSim actors without a plan step: {missing:?}");
+    }
+
+    // Shares over the MATCHED sets only, so the two sides distribute the
+    // same 100% and the error is a pure shape comparison.
+    let meas_total_ms: f64 = rows.iter().map(|r| r.meas_ms).sum();
+    let pred_total_cycles: u64 = rows.iter().map(|r| r.cycles).sum();
+    if meas_total_ms <= 0.0 || pred_total_cycles == 0 {
+        bail!(
+            "degenerate profile: measured {meas_total_ms} ms, predicted {pred_total_cycles} cycles"
+        );
+    }
+    for r in rows.iter_mut() {
+        r.meas_share = r.meas_ms / meas_total_ms;
+        r.pred_share = r.cycles as f64 / pred_total_cycles as f64;
+        r.err_pp = (r.meas_share - r.pred_share) * 100.0;
+    }
+    let mean_abs = rows.iter().map(|r| r.err_pp.abs()).sum::<f64>() / rows.len() as f64;
+    let max_abs = rows.iter().map(|r| r.err_pp.abs()).fold(0.0f64, f64::max);
+    if !mean_abs.is_finite() || !max_abs.is_finite() {
+        bail!("per-layer error is not finite (mean {mean_abs}, max {max_abs})");
+    }
+
+    println!(
+        "\n{:<28} {:<14} {:>10} {:>7} {:>10} {:>10} {:>7} {:>8}",
+        "actor", "kernel", "meas[ms]", "meas%", "cycles", "pred[ms]", "pred%", "err[pp]"
+    );
+    for r in &rows {
+        println!(
+            "{:<28} {:<14} {:>10.4} {:>6.1}% {:>10} {:>10.4} {:>6.1}% {:>+8.2}",
+            r.name,
+            r.variant,
+            r.meas_ms,
+            r.meas_share * 100.0,
+            r.cycles,
+            r.pred_ms,
+            r.pred_share * 100.0,
+            r.err_pp
+        );
+    }
+    for (name, _op, variant, ms) in &ingress {
+        println!("{name:<28} {variant:<14} {ms:>10.4}   (host ingress, not simulated)");
+    }
+    println!("per-layer error: mean {mean_abs:.2} pp, max {max_abs:.2} pp");
+    println!(
+        "measured {:.3} ms/frame over {} frames; predicted steady-state {:.3} ms ({:.1} fps)",
+        meas_total_ms,
+        frames,
+        device.cycles_to_ms(report.steady_cycles),
+        report.fps
+    );
+
+    write_profile_md(
+        Path::new(&out),
+        &cfg,
+        datapath,
+        frames,
+        &device,
+        &report,
+        &rows,
+        &ingress,
+        (meas_total_ms, mean_abs, max_abs),
+    )?;
+    println!("profile report -> {out}");
+    if let Some(jpath) = args.get("json") {
+        let doc = profile_json(
+            &cfg,
+            datapath,
+            frames,
+            &device,
+            &report,
+            &rows,
+            &ingress,
+            (meas_total_ms, mean_abs, max_abs),
+        );
+        std::fs::write(jpath, doc.to_string_pretty() + "\n")
+            .with_context(|| format!("writing {jpath}"))?;
+        println!("profile json -> {jpath}");
+    }
+    Ok(())
+}
+
+fn write_profile_md(
+    path: &Path,
+    cfg: &QuantConfig,
+    datapath: Datapath,
+    frames: usize,
+    device: &Device,
+    report: &bwade::build::BuildReport,
+    rows: &[ProfileRow],
+    ingress: &[(String, String, &'static str, f64)],
+    (meas_total_ms, mean_abs, max_abs): (f64, f64, f64),
+) -> Result<()> {
+    let mut md = String::new();
+    md.push_str("# Measured vs predicted — per-actor profile\n\n");
+    md.push_str(&format!(
+        "- config {}, datapath {}, {} frames measured on the compiled-plan engine\n",
+        cfg.describe(),
+        datapath.describe(),
+        frames
+    ));
+    md.push_str(&format!(
+        "- predicted side: DataflowSim per-actor cycles on {} @ {:.0} MHz\n",
+        device.name, device.clock_mhz
+    ));
+    md.push_str(
+        "- shares are over the matched actors on each side; err = measured share − \
+         predicted share (percentage points)\n\n",
+    );
+    md.push_str(
+        "| actor | op | kernel | meas [ms/frame] | meas % | pred [cycles] | pred [ms/frame] \
+         | pred % | err [pp] |\n",
+    );
+    md.push_str("|---|---|---|---|---|---|---|---|---|\n");
+    for r in rows {
+        md.push_str(&format!(
+            "| {} | {} | {} | {:.4} | {:.1}% | {} | {:.4} | {:.1}% | {:+.2} |\n",
+            r.name,
+            r.op,
+            r.variant,
+            r.meas_ms,
+            r.meas_share * 100.0,
+            r.cycles,
+            r.pred_ms,
+            r.pred_share * 100.0,
+            r.err_pp
+        ));
+    }
+    if !ingress.is_empty() {
+        md.push_str("\nPlan-only steps (host ingress, no DataflowSim actor):\n\n");
+        md.push_str("| step | op | kernel | meas [ms/frame] |\n|---|---|---|---|\n");
+        for (name, op, variant, ms) in ingress {
+            md.push_str(&format!("| {name} | {op} | {variant} | {ms:.4} |\n"));
+        }
+    }
+    md.push_str(&format!(
+        "\n- coverage: {}/{} DataflowSim actors matched\n",
+        rows.len(),
+        report.models.len()
+    ));
+    md.push_str(&format!("- per-layer error: mean {mean_abs:.2} pp, max {max_abs:.2} pp\n"));
+    md.push_str(&format!(
+        "- measured {:.3} ms/frame; predicted first-frame {:.3} ms, steady-state {:.3} ms \
+         ({:.1} fps)\n",
+        meas_total_ms,
+        device.cycles_to_ms(report.latency_cycles),
+        device.cycles_to_ms(report.steady_cycles),
+        report.fps
+    ));
+    std::fs::write(path, md).with_context(|| format!("writing {}", path.display()))
+}
+
+fn profile_json(
+    cfg: &QuantConfig,
+    datapath: Datapath,
+    frames: usize,
+    device: &Device,
+    report: &bwade::build::BuildReport,
+    rows: &[ProfileRow],
+    ingress: &[(String, String, &'static str, f64)],
+    (meas_total_ms, mean_abs, max_abs): (f64, f64, f64),
+) -> Json {
+    let actors: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            json::obj(vec![
+                ("name", Json::str(r.name.clone())),
+                ("op", Json::str(r.op.clone())),
+                ("kernel", Json::str(r.variant)),
+                ("calls", Json::num(r.calls as f64)),
+                ("measured_ms_per_frame", Json::num(r.meas_ms)),
+                ("measured_share", Json::num(r.meas_share)),
+                ("predicted_cycles", Json::num(r.cycles as f64)),
+                ("predicted_ms_per_frame", Json::num(r.pred_ms)),
+                ("predicted_share", Json::num(r.pred_share)),
+                ("err_pp", Json::num(r.err_pp)),
+            ])
+        })
+        .collect();
+    let ing: Vec<Json> = ingress
+        .iter()
+        .map(|(name, op, variant, ms)| {
+            json::obj(vec![
+                ("name", Json::str(name.clone())),
+                ("op", Json::str(op.clone())),
+                ("kernel", Json::str(*variant)),
+                ("measured_ms_per_frame", Json::num(*ms)),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("schema", Json::str("bwade/profile/v1")),
+        ("config", Json::str(cfg.describe())),
+        ("datapath", Json::str(datapath.describe())),
+        ("frames", Json::num(frames as f64)),
+        ("device", Json::str(device.name)),
+        ("actors", Json::Arr(actors)),
+        ("ingress", Json::Arr(ing)),
+        (
+            "summary",
+            json::obj(vec![
+                ("matched", Json::num(rows.len() as f64)),
+                ("mean_abs_err_pp", Json::num(mean_abs)),
+                ("max_abs_err_pp", Json::num(max_abs)),
+                ("measured_ms_per_frame", Json::num(meas_total_ms)),
+                ("predicted_fps", Json::num(report.fps)),
+                (
+                    "predicted_steady_ms",
+                    Json::num(device.cycles_to_ms(report.steady_cycles)),
+                ),
+            ]),
+        ),
+    ])
 }
 
 fn cmd_episodes(args: &Args) -> Result<()> {

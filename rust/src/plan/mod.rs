@@ -137,6 +137,26 @@ struct PlanStep {
     inplace: bool,
 }
 
+impl PlanStep {
+    /// Kernel-variant label: "f32", the ingress labels, or the container
+    /// width an integer step stores its output at (shared by
+    /// [`ExecutionPlan::kernel_variants`] and [`PlanProfile`]).
+    fn variant_label(&self) -> &'static str {
+        match &self.kind {
+            StepKind::F32(_) => "f32",
+            StepKind::Int(spec) => match spec.variant() {
+                "int" => match self.out_dtype {
+                    DType::I8 => "int8",
+                    DType::I16 => "int16",
+                    DType::I32 => "int32",
+                    DType::F32 => "int-f32-bug",
+                },
+                ingress => ingress,
+            },
+        }
+    }
+}
+
 /// A graph input: where its tensor goes and what shape it must have.
 #[derive(Debug, Clone)]
 struct FeedSpec {
@@ -257,6 +277,88 @@ impl PlanScratch {
     }
 }
 
+/// Opt-in per-step profile of a compiled plan: wall time, invocation
+/// counts, and bytes moved per step and per kernel variant (DESIGN.md
+/// §11).  Built from a plan ([`ExecutionPlan::new_profile`]) and filled
+/// by [`ExecutionPlan::run_with_profile`]; the unprofiled entry points
+/// never touch it — the run loop is monomorphized over a `const PROF:
+/// bool`, so the disabled path compiles to exactly the pre-profiling
+/// code (the zero-overhead-when-disabled guarantee, asserted by
+/// `hotpath_micro`).
+#[derive(Debug, Clone, Default)]
+pub struct PlanProfile {
+    steps: Vec<StepProfile>,
+    runs: u64,
+}
+
+/// One step's accumulated profile.
+#[derive(Debug, Clone)]
+pub struct StepProfile {
+    /// Node name (matches the lowered graph / `HwNodeModel` name — the
+    /// measured-vs-predicted join key of `bwade profile`).
+    pub name: String,
+    pub op: String,
+    /// Kernel-variant label (same vocabulary as
+    /// [`ExecutionPlan::kernel_variants`]).
+    pub variant: &'static str,
+    /// Bytes one invocation streams (inputs read + output written).
+    pub bytes_per_call: u64,
+    pub calls: u64,
+    /// Accumulated wall time executing this step's kernel.
+    pub nanos: u64,
+}
+
+/// Per-kernel-variant aggregate of a [`PlanProfile`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VariantProfile {
+    pub variant: &'static str,
+    /// Number of plan steps with this variant.
+    pub steps: usize,
+    pub calls: u64,
+    pub nanos: u64,
+    pub bytes: u64,
+}
+
+impl PlanProfile {
+    pub fn steps(&self) -> &[StepProfile] {
+        &self.steps
+    }
+
+    /// Completed profiled runs.
+    pub fn runs(&self) -> u64 {
+        self.runs
+    }
+
+    pub fn total_nanos(&self) -> u64 {
+        self.steps.iter().map(|s| s.nanos).sum()
+    }
+
+    /// Total bytes streamed across all profiled calls.
+    pub fn total_bytes(&self) -> u64 {
+        self.steps.iter().map(|s| s.calls * s.bytes_per_call).sum()
+    }
+
+    /// Aggregate by kernel variant, sorted by variant label.
+    pub fn by_variant(&self) -> Vec<VariantProfile> {
+        let mut agg: std::collections::BTreeMap<&'static str, VariantProfile> =
+            std::collections::BTreeMap::new();
+        for s in &self.steps {
+            let e = agg.entry(s.variant).or_insert(VariantProfile {
+                variant: s.variant,
+                steps: 0,
+                calls: 0,
+                nanos: 0,
+                bytes: 0,
+            });
+            e.steps += 1;
+            e.calls += s.calls;
+            e.nanos += s.nanos;
+            e.bytes += s.calls * s.bytes_per_call;
+        }
+        agg.into_values().collect()
+    }
+}
+
 /// A graph compiled for repeated execution.
 #[derive(Debug, Clone)]
 pub struct ExecutionPlan {
@@ -281,6 +383,9 @@ pub struct ExecutionPlan {
     /// of every input read plus the output written, at the slots' actual
     /// container widths (DESIGN.md §9 bytes-moved accounting).
     bytes_moved: u64,
+    /// The same accounting, per step (same order as `steps`) — the
+    /// bytes-per-call column of a [`PlanProfile`].
+    step_bytes: Vec<u64>,
 }
 
 fn intern<'g>(
@@ -773,7 +878,9 @@ impl ExecutionPlan {
         // plus what it writes.  Computed once at compile; the run loop
         // never re-measures.
         let mut bytes_moved = 0u64;
+        let mut step_bytes = Vec::with_capacity(steps.len());
         for step in &steps {
+            let mut step_total = 0u64;
             for &s in &step.inputs {
                 let s = s as usize;
                 let (numel, sz) = if let Some(t) = init[s].as_ref() {
@@ -789,10 +896,12 @@ impl ExecutionPlan {
                         4,
                     )
                 };
-                bytes_moved += (numel * sz) as u64;
+                step_total += (numel * sz) as u64;
             }
-            bytes_moved +=
+            step_total +=
                 (step.out_shape.iter().product::<usize>() * step.out_dtype.size_bytes()) as u64;
+            step_bytes.push(step_total);
+            bytes_moved += step_total;
         }
 
         Ok(Self {
@@ -807,6 +916,7 @@ impl ExecutionPlan {
             init,
             slot_names,
             bytes_moved,
+            step_bytes,
         })
     }
 
@@ -838,21 +948,7 @@ impl ExecutionPlan {
     pub fn kernel_variants(&self) -> Vec<(String, &'static str)> {
         self.steps
             .iter()
-            .map(|s| {
-                let v = match &s.kind {
-                    StepKind::F32(_) => "f32",
-                    StepKind::Int(spec) => match spec.variant() {
-                        "int" => match s.out_dtype {
-                            DType::I8 => "int8",
-                            DType::I16 => "int16",
-                            DType::I32 => "int32",
-                            DType::F32 => "int-f32-bug",
-                        },
-                        ingress => ingress,
-                    },
-                };
-                (s.op.clone(), v)
-            })
+            .map(|s| (s.op.clone(), s.variant_label()))
             .collect()
     }
 
@@ -929,6 +1025,59 @@ impl ExecutionPlan {
         feeds: &HashMap<String, Tensor>,
         scratch: &mut PlanScratch,
     ) -> Result<HashMap<String, Tensor>> {
+        self.run_inner::<false>(feeds, scratch, None)
+    }
+
+    /// Fresh profile sized to this plan (per-step names, variants, and
+    /// bytes-per-call pre-resolved; counters zero).
+    pub fn new_profile(&self) -> PlanProfile {
+        PlanProfile {
+            steps: self
+                .steps
+                .iter()
+                .zip(&self.step_bytes)
+                .map(|(s, &b)| StepProfile {
+                    name: s.name.clone(),
+                    op: s.op.clone(),
+                    variant: s.variant_label(),
+                    bytes_per_call: b,
+                    calls: 0,
+                    nanos: 0,
+                })
+                .collect(),
+            runs: 0,
+        }
+    }
+
+    /// [`run_with`], accumulating per-step wall time into `profile` (a
+    /// [`ExecutionPlan::new_profile`] of THIS plan).  The instrumented
+    /// loop is a separate monomorphization — the unprofiled entry points
+    /// pay nothing for its existence.
+    ///
+    /// [`run_with`]: ExecutionPlan::run_with
+    pub fn run_with_profile(
+        &self,
+        feeds: &HashMap<String, Tensor>,
+        scratch: &mut PlanScratch,
+        profile: &mut PlanProfile,
+    ) -> Result<HashMap<String, Tensor>> {
+        if profile.steps.len() != self.steps.len() {
+            bail!(
+                "profile has {} steps but plan {} has {} — build it with new_profile() on this plan",
+                profile.steps.len(),
+                self.name,
+                self.steps.len()
+            );
+        }
+        self.run_inner::<true>(feeds, scratch, Some(profile))
+    }
+
+    fn run_inner<const PROF: bool>(
+        &self,
+        feeds: &HashMap<String, Tensor>,
+        scratch: &mut PlanScratch,
+        mut profile: Option<&mut PlanProfile>,
+    ) -> Result<HashMap<String, Tensor>> {
         scratch.reset(self.n_slots);
 
         // Resolve feeds: the only name lookups in the whole run.
@@ -950,7 +1099,12 @@ impl ExecutionPlan {
             ext[spec.slot as usize] = Some(t);
         }
 
-        for step in &self.steps {
+        for (si, step) in self.steps.iter().enumerate() {
+            let t0 = if PROF {
+                Some(std::time::Instant::now())
+            } else {
+                None
+            };
             if step.inplace {
                 let StepKind::F32(spec) = &step.kind else {
                     bail!("plan bug: in-place integer step {}", step.name);
@@ -990,6 +1144,13 @@ impl ExecutionPlan {
                 scratch.stats.peak_live = scratch.stats.peak_live.max(scratch.stats.live);
                 scratch.act[step.output as usize] = Some(out);
             }
+            if PROF {
+                if let (Some(p), Some(t0)) = (profile.as_mut(), t0) {
+                    let sp = &mut p.steps[si];
+                    sp.calls += 1;
+                    sp.nanos += t0.elapsed().as_nanos() as u64;
+                }
+            }
             for &dead in &step.release {
                 if let Some(t) = scratch.act[dead as usize].take() {
                     scratch.stats.live -= 1;
@@ -1012,6 +1173,11 @@ impl ExecutionPlan {
                 bail!("graph output {name} not produced");
             };
             result.insert(name.clone(), t);
+        }
+        if PROF {
+            if let Some(p) = profile {
+                p.runs += 1;
+            }
         }
         Ok(result)
     }
@@ -1143,6 +1309,47 @@ impl PlanRunner {
     /// [`ExecutionPlan::bytes_moved_per_frame`]).
     pub fn bytes_moved_per_frame(&self) -> u64 {
         self.plan.bytes_moved_per_frame()
+    }
+
+    /// The compiled plan this runner executes (read-only — the profile
+    /// command joins its step names against `DataflowSim` actors).
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.plan
+    }
+
+    /// Fresh per-step profile matching this runner's compiled plan.
+    pub fn new_profile(&self) -> PlanProfile {
+        self.plan.new_profile()
+    }
+
+    /// Run `frames` flat NHWC frames (`frames * img*img*3` elements)
+    /// through the plan with per-step profiling, discarding features —
+    /// the measurement loop of `bwade profile`.
+    pub fn profile_frames(
+        &self,
+        images: &[f32],
+        frames: usize,
+        profile: &mut PlanProfile,
+    ) -> Result<()> {
+        let per = self.img * self.img * 3;
+        if images.len() != frames * per {
+            bail!(
+                "expected {} input elements for {frames} frames, got {}",
+                frames * per,
+                images.len()
+            );
+        }
+        let mut scratch = self.scratch.borrow_mut();
+        let mut feeds = HashMap::with_capacity(1);
+        for i in 0..frames {
+            let x_nhwc = Tensor::new(
+                vec![1, self.img, self.img, 3],
+                images[i * per..(i + 1) * per].to_vec(),
+            )?;
+            feeds.insert(self.input.clone(), x_nhwc.nhwc_to_nchw()?);
+            self.plan.run_with_profile(&feeds, &mut scratch, profile)?;
+        }
+        Ok(())
     }
 
     /// Run the plan for the first `live` frames of a full batch buffer —

@@ -1,0 +1,548 @@
+//! Process-wide telemetry: atomic counters, gauges, and lock-free
+//! log2-bucketed histograms behind a named metric registry with
+//! deterministic JSON exposition (schema [`TELEMETRY_SCHEMA`],
+//! DESIGN.md §11).
+//!
+//! Zero dependencies by construction (DESIGN.md §2): recording is a
+//! handful of `Relaxed` atomic adds on pre-resolved `Arc` handles —
+//! nothing on a hot path ever takes the registry lock or formats a
+//! string.  Snapshots are read-side copies: a [`HistogramSnapshot`] is
+//! not a consistent cut across concurrent writers (count/sum/buckets
+//! are read independently), which is the usual and acceptable contract
+//! for monitoring data.
+//!
+//! Consumers:
+//! * `coordinator::pool` exports queue-depth / steal / batch-close
+//!   metrics through [`Registry::global`] (`bwade serve --metrics-json`);
+//! * `dse::run_sweep` counts cache hits/misses and per-point timing;
+//! * the periodic [`StderrEmitter`] prints a one-line summary while a
+//!   serve run is in flight.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::json::{self, Json};
+
+/// Schema id stamped into every exported telemetry document.
+pub const TELEMETRY_SCHEMA: &str = "bwade/telemetry/v1";
+
+/// Number of histogram buckets: bucket 0 holds exact zeros, bucket `b`
+/// (1..=38) holds values with bit length `b` (i.e. `[2^(b-1), 2^b-1]`),
+/// and the last bucket is the explicit overflow bucket for values
+/// `>= 2^38` (~76 hours when recording microseconds).
+pub const HIST_BUCKETS: usize = 40;
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed level (queue depth, in-flight frames).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicI64::new(0))
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Lock-free log2-bucketed histogram of `u64` samples (latencies in
+/// microseconds, queue depths, byte counts — unit is the caller's).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+/// Bucket index for a sample (see [`HIST_BUCKETS`]).
+fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        let bit_len = (64 - v.leading_zeros()) as usize;
+        bit_len.min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of a bucket (used as the quantile estimate).
+fn bucket_upper(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else if b >= HIST_BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << b) - 1
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample: three relaxed atomic adds, no locks.
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Read-side copy of a [`Histogram`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Per-bucket counts, `HIST_BUCKETS` long.
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: vec![0; HIST_BUCKETS],
+            count: 0,
+            sum: 0,
+        }
+    }
+}
+
+impl HistogramSnapshot {
+    /// Bucket-wise sum of two snapshots (commutative and associative —
+    /// asserted in `integration_telemetry`).
+    pub fn merge(&self, other: &HistogramSnapshot) -> HistogramSnapshot {
+        let mut buckets = self.buckets.clone();
+        for (b, o) in buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        HistogramSnapshot {
+            buckets,
+            count: self.count + other.count,
+            sum: self.sum + other.sum,
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Count in the explicit overflow bucket.
+    pub fn overflow(&self) -> u64 {
+        *self.buckets.last().unwrap_or(&0)
+    }
+
+    /// Nearest-rank quantile estimate for `p` percent: the inclusive
+    /// upper bound of the bucket holding the ranked sample (0 when
+    /// empty).  Same rank convention as `benchutil::nearest_rank_index`.
+    pub fn quantile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let p = if p.is_finite() {
+            p.clamp(0.0, 100.0)
+        } else {
+            100.0
+        };
+        let rank = ((p / 100.0 * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return bucket_upper(b);
+            }
+        }
+        bucket_upper(HIST_BUCKETS - 1)
+    }
+
+    fn to_json(&self) -> Json {
+        // Trim trailing empty buckets — deterministic and keeps the
+        // document readable; count/sum preserve the full information.
+        let last = self.buckets.iter().rposition(|&n| n != 0).map_or(0, |i| i + 1);
+        json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("sum", Json::num(self.sum as f64)),
+            ("mean", Json::num(self.mean())),
+            ("p50", Json::num(self.quantile(50.0) as f64)),
+            ("p95", Json::num(self.quantile(95.0) as f64)),
+            ("p99", Json::num(self.quantile(99.0) as f64)),
+            ("overflow", Json::num(self.overflow() as f64)),
+            (
+                "buckets",
+                Json::Arr(
+                    self.buckets[..last]
+                        .iter()
+                        .map(|&n| Json::num(n as f64))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Named metric registry.  `counter`/`gauge`/`histogram` get-or-create
+/// and hand back `Arc` handles to record through; the registry lock is
+/// only taken at resolve and snapshot time.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// The process-wide registry (`bwade serve --metrics-json` exports
+    /// it; library code may record into it unconditionally — recording
+    /// into an unexported registry costs a few relaxed atomics).
+    pub fn global() -> &'static Registry {
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.counters.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.gauges.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.histograms.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Deterministic snapshot: metrics sorted by name (`BTreeMap`
+    /// ordering), values read relaxed.
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        RegistrySnapshot {
+            counters: self
+                .counters
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            gauges: self
+                .gauges
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            histograms: self
+                .histograms
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.snapshot()))
+                .collect(),
+        }
+    }
+}
+
+/// Point-in-time copy of a whole [`Registry`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RegistrySnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+impl RegistrySnapshot {
+    /// Merge two snapshots (e.g. per-replica registries): counters and
+    /// gauges sum, histograms merge bucket-wise.
+    pub fn merge(&self, other: &RegistrySnapshot) -> RegistrySnapshot {
+        let mut out = self.clone();
+        for (k, v) in &other.counters {
+            *out.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            *out.gauges.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.histograms {
+            let merged = match out.histograms.get(k) {
+                Some(mine) => mine.merge(v),
+                None => v.clone(),
+            };
+            out.histograms.insert(k.clone(), merged);
+        }
+        out
+    }
+
+    /// The `bwade/telemetry/v1` document: metric names sorted, bucket
+    /// arrays trimmed of trailing zeros.
+    pub fn to_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::num(v as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> = self
+            .gauges
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::num(v as f64)))
+            .collect();
+        let histograms: BTreeMap<String, Json> = self
+            .histograms
+            .iter()
+            .map(|(k, v)| (k.clone(), v.to_json()))
+            .collect();
+        json::obj(vec![
+            ("schema", Json::str(TELEMETRY_SCHEMA)),
+            ("counters", json::obj_sorted(counters)),
+            ("gauges", json::obj_sorted(gauges)),
+            ("histograms", json::obj_sorted(histograms)),
+        ])
+    }
+
+    /// One-line summary for the periodic stderr emitter:
+    /// `telemetry: a=1 b=-2 h{n=3 mean=41 p95=63}`.
+    pub fn summary_line(&self) -> String {
+        let mut parts = Vec::new();
+        for (k, v) in &self.counters {
+            parts.push(format!("{k}={v}"));
+        }
+        for (k, v) in &self.gauges {
+            parts.push(format!("{k}={v}"));
+        }
+        for (k, v) in &self.histograms {
+            parts.push(format!(
+                "{k}{{n={} mean={:.0} p95={}}}",
+                v.count,
+                v.mean(),
+                v.quantile(95.0)
+            ));
+        }
+        if parts.is_empty() {
+            "telemetry: (no metrics)".to_string()
+        } else {
+            format!("telemetry: {}", parts.join(" "))
+        }
+    }
+}
+
+/// Write a snapshot as a pretty-printed `bwade/telemetry/v1` document.
+pub fn write_metrics_json(path: &Path, snap: &RegistrySnapshot) -> Result<()> {
+    std::fs::write(path, snap.to_json().to_string_pretty() + "\n")
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Background thread printing `summary_line()` to stderr every
+/// `interval` while a serve run is in flight; prints one final line on
+/// `stop()` (or drop) so short runs still surface their metrics.
+pub struct StderrEmitter {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl StderrEmitter {
+    pub fn spawn(registry: &'static Registry, interval: Duration) -> StderrEmitter {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            let mut last = Instant::now();
+            while !stop2.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(20));
+                if last.elapsed() >= interval {
+                    eprintln!("{}", registry.snapshot().summary_line());
+                    last = Instant::now();
+                }
+            }
+            eprintln!("{}", registry.snapshot().summary_line());
+        });
+        StderrEmitter {
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    /// Stop the emitter and wait for its final line.
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for StderrEmitter {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_rule() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(7), 3);
+        assert_eq!(bucket_of(8), 4);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        // Each non-overflow bucket's upper bound lands in that bucket.
+        for b in 0..HIST_BUCKETS - 1 {
+            assert_eq!(bucket_of(bucket_upper(b)), b);
+        }
+    }
+
+    #[test]
+    fn counter_and_gauge() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(7);
+        g.add(-10);
+        assert_eq!(g.get(), -3);
+    }
+
+    #[test]
+    fn histogram_records_and_quantiles() {
+        let h = Histogram::new();
+        for v in [1u64, 2, 3, 100, 1000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 1106);
+        assert!((s.mean() - 221.2).abs() < 1e-9);
+        // p50 ranks to the 3rd sample (value 3, bucket [2,3] → upper 3).
+        assert_eq!(s.quantile(50.0), 3);
+        // p100 ranks to the last sample (1000, bucket [512,1023]).
+        assert_eq!(s.quantile(100.0), 1023);
+        assert_eq!(s.overflow(), 0);
+    }
+
+    #[test]
+    fn registry_handles_are_shared() {
+        let r = Registry::new();
+        let a = r.counter("x");
+        let b = r.counter("x");
+        a.inc();
+        b.inc();
+        assert_eq!(r.snapshot().counters["x"], 2);
+    }
+
+    #[test]
+    fn snapshot_json_shape() {
+        let r = Registry::new();
+        r.counter("pool.steals").add(3);
+        r.gauge("pool.inflight").set(2);
+        r.histogram("pool.queue_depth").record(5);
+        let doc = r.snapshot().to_json().to_string_pretty();
+        let parsed = Json::parse(&doc).expect("telemetry document parses");
+        assert_eq!(
+            parsed.get("schema").unwrap().as_str().unwrap(),
+            TELEMETRY_SCHEMA
+        );
+        assert_eq!(
+            parsed
+                .get("counters")
+                .unwrap()
+                .get("pool.steals")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            3
+        );
+        let h = parsed.get("histograms").unwrap().get("pool.queue_depth").unwrap();
+        assert_eq!(h.get("count").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn snapshot_merge_sums() {
+        let a = Registry::new();
+        a.counter("c").add(1);
+        a.histogram("h").record(10);
+        let b = Registry::new();
+        b.counter("c").add(2);
+        b.counter("only_b").add(5);
+        b.histogram("h").record(20);
+        let m = a.snapshot().merge(&b.snapshot());
+        assert_eq!(m.counters["c"], 3);
+        assert_eq!(m.counters["only_b"], 5);
+        assert_eq!(m.histograms["h"].count, 2);
+        assert_eq!(m.histograms["h"].sum, 30);
+    }
+}

@@ -1,0 +1,196 @@
+//! Telemetry integration (PR 7): histogram edge cases, registry
+//! snapshot determinism, and PlanProfile accounting checked against
+//! known compiled plans on both datapaths.
+
+use std::collections::HashMap;
+
+use bwade::build::{lower_bit_true, requantize_graph, synth_backbone_graph};
+use bwade::fixedpoint::headline_config;
+use bwade::plan::{Datapath, ExecutionPlan, PlanScratch};
+use bwade::rng::Rng;
+use bwade::telemetry::{Histogram, HistogramSnapshot, Registry, HIST_BUCKETS};
+use bwade::tensor::Tensor;
+
+// ---------------------------------------------------------------------------
+// Histogram edge cases
+// ---------------------------------------------------------------------------
+
+#[test]
+fn histogram_empty() {
+    let s = Histogram::new().snapshot();
+    assert_eq!(s.count, 0);
+    assert_eq!(s.sum, 0);
+    assert_eq!(s.mean(), 0.0);
+    assert_eq!(s.quantile(50.0), 0);
+    assert_eq!(s.quantile(100.0), 0);
+    assert_eq!(s.overflow(), 0);
+    assert_eq!(s, HistogramSnapshot::default());
+}
+
+#[test]
+fn histogram_single_sample() {
+    let h = Histogram::new();
+    h.record(37);
+    let s = h.snapshot();
+    assert_eq!(s.count, 1);
+    assert_eq!(s.sum, 37);
+    assert_eq!(s.mean(), 37.0);
+    // 37 has bit length 6 → bucket [32, 63]; every quantile of a
+    // one-sample histogram reports that bucket's inclusive upper bound.
+    for p in [0.0, 50.0, 95.0, 100.0] {
+        assert_eq!(s.quantile(p), 63, "quantile p{p}");
+    }
+}
+
+#[test]
+fn histogram_overflow_bucket() {
+    let h = Histogram::new();
+    h.record(u64::MAX);
+    h.record(1u64 << 38);
+    // Bit length 38 — the last finite bucket, NOT overflow.
+    h.record((1u64 << 38) - 1);
+    let s = h.snapshot();
+    assert_eq!(s.count, 3);
+    assert_eq!(s.overflow(), 2);
+    assert_eq!(s.buckets[HIST_BUCKETS - 1], 2);
+    assert_eq!(s.buckets[HIST_BUCKETS - 2], 1);
+    // The overflow bucket's quantile estimate saturates.
+    assert_eq!(s.quantile(100.0), u64::MAX);
+}
+
+#[test]
+fn histogram_merge_is_associative_and_commutative() {
+    let mk = |vals: &[u64]| {
+        let h = Histogram::new();
+        for &v in vals {
+            h.record(v);
+        }
+        h.snapshot()
+    };
+    let a = mk(&[0, 1, 5]);
+    let b = mk(&[2, 1 << 20]);
+    let c = mk(&[7, 7, 7, 1 << 35]);
+    assert_eq!(a.merge(&b), b.merge(&a));
+    assert_eq!(a.merge(&b).merge(&c), a.merge(&b.merge(&c)));
+    // Merged parts equal the histogram that saw every sample.
+    let all = mk(&[0, 1, 5, 2, 1 << 20, 7, 7, 7, 1 << 35]);
+    assert_eq!(a.merge(&b).merge(&c), all);
+}
+
+// ---------------------------------------------------------------------------
+// Registry snapshot determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn registry_snapshot_is_insertion_order_independent() {
+    let a = Registry::new();
+    a.counter("z.last").add(9);
+    a.counter("a.first").add(1);
+    a.gauge("m.depth").set(-4);
+    a.histogram("lat").record(100);
+    a.histogram("lat").record(200);
+
+    let b = Registry::new();
+    b.histogram("lat").record(100);
+    b.gauge("m.depth").set(-4);
+    b.counter("a.first").add(1);
+    b.counter("z.last").add(9);
+    b.histogram("lat").record(200);
+
+    let da = a.snapshot().to_json().to_string_pretty();
+    let db = b.snapshot().to_json().to_string_pretty();
+    assert_eq!(da, db, "same metrics, different insert order → same document");
+    assert!(da.contains("bwade/telemetry/v1"));
+    // Metric names appear sorted within each section.
+    assert!(da.find("a.first").unwrap() < da.find("z.last").unwrap());
+}
+
+// ---------------------------------------------------------------------------
+// PlanProfile accounting vs known plans
+// ---------------------------------------------------------------------------
+
+fn profile_matches_plan(datapath: Datapath) {
+    let quant = headline_config();
+    let mut graph = synth_backbone_graph([8, 16, 32, 64], 32, 4, 2);
+    match datapath {
+        Datapath::F32 => requantize_graph(&mut graph, &quant).unwrap(),
+        Datapath::BitTrue => lower_bit_true(&mut graph, &quant).unwrap(),
+    }
+    let plan = ExecutionPlan::compile_with(&graph, datapath).unwrap();
+
+    let mut rng = Rng::new(9);
+    let shape = graph.shape_of(&graph.inputs[0]).unwrap().to_vec();
+    let mut feeds = HashMap::new();
+    feeds.insert(graph.inputs[0].clone(), Tensor::from_fn(shape, |_| rng.next_f32()));
+
+    let k = 3u64;
+    let mut profile = plan.new_profile();
+    let mut scratch = PlanScratch::default();
+    let mut prof_out = None;
+    for _ in 0..k {
+        prof_out = Some(plan.run_with_profile(&feeds, &mut scratch, &mut profile).unwrap());
+    }
+
+    assert_eq!(profile.runs(), k);
+    for s in profile.steps() {
+        assert_eq!(s.calls, k, "step {} runs once per frame", s.name);
+    }
+    assert_eq!(profile.total_bytes(), k * plan.bytes_moved_per_frame());
+    // Per-step (op, variant) labels are exactly the plan's audit labels.
+    let vars: Vec<(String, &'static str)> =
+        profile.steps().iter().map(|s| (s.op.clone(), s.variant)).collect();
+    assert_eq!(vars, plan.kernel_variants());
+    // The by-variant aggregate conserves steps, calls, and bytes.
+    let agg = profile.by_variant();
+    assert_eq!(agg.iter().map(|v| v.steps).sum::<usize>(), plan.num_steps());
+    assert_eq!(agg.iter().map(|v| v.calls).sum::<u64>(), k * plan.num_steps() as u64);
+    assert_eq!(agg.iter().map(|v| v.bytes).sum::<u64>(), profile.total_bytes());
+    assert_eq!(agg.iter().map(|v| v.nanos).sum::<u64>(), profile.total_nanos());
+
+    // Profiled and unprofiled execution produce bitwise-identical
+    // outputs — the instrumentation only reads the clock.
+    let mut scratch2 = PlanScratch::default();
+    let plain = plan.run_with(&feeds, &mut scratch2).unwrap();
+    let prof_out = prof_out.unwrap();
+    assert_eq!(plain.len(), prof_out.len());
+    for (name, t) in &plain {
+        let p = &prof_out[name];
+        assert_eq!(t.shape(), p.shape(), "output {name} shape");
+        match datapath {
+            // The bit-true plan's outputs are integer codes (the runner
+            // dequantizes at egress); compare on the right domain.
+            Datapath::F32 => assert_eq!(t.data(), p.data(), "output {name} values"),
+            Datapath::BitTrue => assert_eq!(t.codes_i32(), p.codes_i32(), "output {name} codes"),
+        }
+    }
+}
+
+#[test]
+fn plan_profile_accounts_f32_datapath() {
+    profile_matches_plan(Datapath::F32);
+}
+
+#[test]
+fn plan_profile_accounts_bit_true_datapath() {
+    profile_matches_plan(Datapath::BitTrue);
+}
+
+#[test]
+fn plan_profile_rejects_mismatched_plan() {
+    let quant = headline_config();
+    let mut graph = synth_backbone_graph([8, 16, 32, 64], 32, 4, 2);
+    requantize_graph(&mut graph, &quant).unwrap();
+    let plan = ExecutionPlan::compile(&graph).unwrap();
+
+    let mut rng = Rng::new(3);
+    let shape = graph.shape_of(&graph.inputs[0]).unwrap().to_vec();
+    let mut feeds = HashMap::new();
+    feeds.insert(graph.inputs[0].clone(), Tensor::from_fn(shape, |_| rng.next_f32()));
+
+    // A profile with the wrong step count is refused, not silently
+    // misattributed.
+    let mut wrong = bwade::plan::PlanProfile::default();
+    let mut scratch = PlanScratch::default();
+    let err = plan.run_with_profile(&feeds, &mut scratch, &mut wrong);
+    assert!(err.is_err(), "mismatched profile must be rejected");
+}
