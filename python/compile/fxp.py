@@ -77,11 +77,20 @@ class FxpFormat:
         return float(2**self.frac_bits)
 
     @property
+    def is_bipolar(self) -> bool:
+        """Signed 1-bit is the FINN/BNN *bipolar* convention: codes
+        {-1, +1}, no zero, sign-rule quantizer, XNOR/popcount datapath.
+        Mirrors ``FxpFormat::is_bipolar`` in rust/src/fixedpoint/."""
+        return self.signed and self.bits == 1
+
+    @property
     def qmin(self) -> int:
         return -(2 ** (self.bits - 1)) if self.signed else 0
 
     @property
     def qmax(self) -> int:
+        if self.is_bipolar:
+            return 1
         return 2 ** (self.bits - 1) - 1 if self.signed else 2**self.bits - 1
 
     @property
@@ -95,21 +104,33 @@ class FxpFormat:
     @property
     def num_thresholds(self) -> int:
         """Number of MultiThreshold steps needed to realize this quantizer."""
+        if self.is_bipolar:
+            return 1
         return self.qmax - self.qmin
 
     @property
     def container_bits(self) -> int:
-        """Narrowest signed power-of-two container (8/16/32) holding every code.
+        """Narrowest container in {1, 4, 8, 16, 32} bits holding every code.
 
         The rust bit-true datapath stores code tensors width-natively
-        (``TensorData::I8/I16/I32``); this is the selection rule, mirrored
-        bit-exactly by ``FxpFormat::container_bits`` in
-        rust/src/fixedpoint/.  The container is always *signed* (matching
-        the FPGA-side signed accumulator convention), so a signed b-bit
-        format fits an 8-bit container up to b = 8 while an unsigned one
-        only up to b = 7.  Formats whose codes exceed i32 still report 32
-        — the datapath's checked conversions reject them downstream.
+        (``TensorData::I8/I16/I32`` plus the bit-packed ``U4``/``U1``/``B1``
+        sub-byte containers, DESIGN.md §9); this is the selection rule,
+        mirrored bit-exactly by ``FxpFormat::container_bits`` in
+        rust/src/fixedpoint/.  Unsigned formats reach the sub-byte rungs
+        (u1 at 1 bit, u2..u4 at 4); the byte-aligned containers are
+        *signed* (matching the FPGA-side signed accumulator convention),
+        so a signed b-bit format fits an 8-bit container up to b = 8 while
+        an unsigned one only up to b = 7.  Bipolar is the 1-bit container
+        even though its code range spans zero.  Formats whose codes exceed
+        i32 still report 32 — the datapath's checked conversions reject
+        them downstream.
         """
+        if self.is_bipolar:
+            return 1
+        if self.qmin >= 0 and self.qmax <= 1:
+            return 1
+        if self.qmin >= 0 and self.qmax <= 15:
+            return 4
         for width in (8, 16):
             if self.qmin >= -(2 ** (width - 1)) and self.qmax <= 2 ** (width - 1) - 1:
                 return width
@@ -121,7 +142,14 @@ class FxpFormat:
 
 
 def quantize_int(x: jax.Array, fmt: FxpFormat) -> jax.Array:
-    """Quantize to integer codes with round-half-up + saturation."""
+    """Quantize to integer codes with round-half-up + saturation.
+
+    Bipolar formats use the sign rule instead (``x >= 0 -> +1`` else
+    ``-1``) — there is no zero code to round to.  Identical to
+    ``FxpFormat::quantize_int`` in rust/src/fixedpoint/.
+    """
+    if fmt.is_bipolar:
+        return jnp.where(x >= 0, 1.0, -1.0)
     q = jnp.floor(x * fmt.scale + 0.5)
     return jnp.clip(q, fmt.qmin, fmt.qmax)
 
@@ -204,6 +232,60 @@ def table2_configs() -> list[QuantConfig]:
         cfg("b14_c7.7_r7.7", 7, 7, 7, 7),
         cfg("b16_c8.8_r8.8", 8, 8, 8, 8),  # the conventional 16-bit baseline
     ]
+
+
+# ---------------------------------------------------------------------------
+# Sub-byte packed-container codecs (DESIGN.md §9)
+#
+# Twins of ``pack_u4``/``unpack_u4``/``pack_u1``/``unpack_u1`` in
+# rust/src/tensor/ — same layout bit for bit, so artifacts packed on
+# either side of the language boundary decode identically:
+#   * u4: two codes per byte, LOW nibble first; a trailing odd code
+#     leaves the high nibble of the last byte zero.
+#   * 1-bit: eight codes per byte, LSB first; binary codes {0, 1} store
+#     the code as the bit, bipolar codes {-1, +1} store bit 1 for +1.
+#     Tail bits of the last byte are zero-padded in both encodings.
+# ---------------------------------------------------------------------------
+
+
+def pack_u4(codes: list[int]) -> bytes:
+    """Pack u4 codes (each in 0..=15) two per byte, low nibble first."""
+    out = bytearray((len(codes) + 1) // 2)
+    for i, c in enumerate(codes):
+        c = int(c)
+        if not 0 <= c <= 15:
+            raise ValueError(f"pack_u4: code {c} at index {i} outside 0..=15")
+        out[i // 2] |= c << ((i & 1) * 4)
+    return bytes(out)
+
+
+def unpack_u4(data: bytes, n: int) -> list[int]:
+    """Inverse of :func:`pack_u4`: the first ``n`` nibbles as codes."""
+    return [(data[i // 2] >> ((i & 1) * 4)) & 0xF for i in range(n)]
+
+
+def pack_u1(codes: list[int], bipolar: bool = False) -> bytes:
+    """Pack 1-bit codes eight per byte, LSB first (bipolar: bit 1 is +1)."""
+    out = bytearray((len(codes) + 7) // 8)
+    for i, c in enumerate(codes):
+        c = int(c)
+        if c == (-1 if bipolar else 0):
+            bit = 0
+        elif c == 1:
+            bit = 1
+        else:
+            domain = "{-1, +1}" if bipolar else "{0, 1}"
+            raise ValueError(f"pack_u1: code {c} at index {i} outside {domain}")
+        out[i // 8] |= bit << (i & 7)
+    return bytes(out)
+
+
+def unpack_u1(data: bytes, n: int, bipolar: bool = False) -> list[int]:
+    """Inverse of :func:`pack_u1`: the first ``n`` bits as codes."""
+    bits = [(data[i // 8] >> (i & 7)) & 1 for i in range(n)]
+    if bipolar:
+        return [2 * b - 1 for b in bits]
+    return bits
 
 
 def float_config() -> QuantConfig:

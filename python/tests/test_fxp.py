@@ -18,9 +18,13 @@ from compile.fxp import (
     fake_quant,
     float_config,
     multithreshold,
+    pack_u1,
+    pack_u4,
     quantize,
     quantize_int,
     table2_configs,
+    unpack_u1,
+    unpack_u4,
 )
 
 FMT_SIGNED = st.tuples(st.integers(2, 16), st.integers(0, 12)).map(
@@ -85,9 +89,15 @@ class TestFormat:
 
     def test_container_bits_rule(self):
         # Mirrors rust fixedpoint::tests::container_bits_rule_matches_python_twin:
-        # the narrowest signed 8/16/32-bit container holding every code —
-        # the storage width the rust packed bit-true datapath streams.
-        assert FxpFormat(4, 2, signed=False).container_bits == 8
+        # the narrowest {1, 4, 8, 16, 32}-bit container holding every code
+        # — the storage width the rust packed bit-true datapath streams.
+        # Unsigned formats reach the sub-byte bit-packed rungs.
+        assert FxpFormat(1, 0, signed=False).container_bits == 1
+        assert FxpFormat(1, 1, signed=False).container_bits == 1
+        assert FxpFormat(1, 0, signed=True).container_bits == 1  # bipolar
+        assert FxpFormat(2, 1, signed=False).container_bits == 4
+        assert FxpFormat(4, 2, signed=False).container_bits == 4
+        assert FxpFormat(2, 1, signed=True).container_bits == 8  # no signed nibble
         assert FxpFormat(8, 4).container_bits == 8
         assert FxpFormat(7, 0, signed=False).container_bits == 8
         assert FxpFormat(8, 4, signed=False).container_bits == 16
@@ -98,7 +108,23 @@ class TestFormat:
         assert FxpFormat(32, 16, signed=False).container_bits == 32
         head = table2_configs()[1]
         assert head.weight.container_bits == 8  # s6.5
-        assert head.act.container_bits == 8  # u4.2
+        assert head.act.container_bits == 4  # u4.2 packs two per byte
+
+    def test_bipolar_format_semantics(self):
+        # Mirrors rust fixedpoint::tests::bipolar_one_bit_format_semantics:
+        # signed 1-bit is FINN bipolar — codes {-1, +1}, one threshold,
+        # sign-rule quantizer.
+        f = FxpFormat(1, 0, signed=True)
+        assert f.is_bipolar
+        assert (f.qmin, f.qmax) == (-1, 1)
+        assert f.num_thresholds == 1
+        x = jnp.asarray([0.7, 0.0, -0.2], jnp.float32)
+        assert quantize_int(x, f).tolist() == [1.0, 1.0, -1.0]
+        # Fractional bipolar scales the grid but keeps the sign rule.
+        f2 = FxpFormat(1, 2, signed=True)
+        assert quantize(jnp.float32(0.7), f2) == 0.25
+        assert quantize(jnp.float32(-0.1), f2) == -0.25
+        assert not FxpFormat(1, 0, signed=False).is_bipolar
 
     def test_table2_has_eight_rows_matching_paper(self):
         cfgs = table2_configs()
@@ -186,6 +212,52 @@ class TestMultithreshold:
         fmt = FxpFormat(4, 2, signed=False)
         x = jnp.asarray([-5.0, -0.2, 0.0], jnp.float32)
         assert multithreshold(x, fmt).tolist() == [0.0, 0.0, 0.0]
+
+
+class TestPackedCodecs:
+    """Twins of rust/src/tensor/ pack_u4/pack_u1 — same layout bit for bit."""
+
+    @given(st.lists(st.integers(0, 15), min_size=0, max_size=65))
+    @settings(max_examples=60, deadline=None)
+    def test_u4_round_trip(self, codes):
+        data = pack_u4(codes)
+        assert len(data) == (len(codes) + 1) // 2
+        assert unpack_u4(data, len(codes)) == codes
+
+    @given(st.lists(st.integers(0, 1), min_size=0, max_size=130))
+    @settings(max_examples=60, deadline=None)
+    def test_u1_binary_round_trip(self, codes):
+        data = pack_u1(codes)
+        assert len(data) == (len(codes) + 7) // 8
+        assert unpack_u1(data, len(codes)) == codes
+
+    @given(st.lists(st.sampled_from([-1, 1]), min_size=0, max_size=130))
+    @settings(max_examples=60, deadline=None)
+    def test_u1_bipolar_round_trip(self, codes):
+        data = pack_u1(codes, bipolar=True)
+        assert unpack_u1(data, len(codes), bipolar=True) == codes
+
+    def test_u4_layout_is_low_nibble_first(self):
+        # codes [1, 2, 6, 15] -> bytes [0x21, 0xF6]; an odd tail leaves
+        # the high nibble of the last byte zero.
+        assert pack_u4([1, 2, 6, 15]) == bytes([0x21, 0xF6])
+        assert pack_u4([1, 2, 6]) == bytes([0x21, 0x06])
+
+    def test_u1_layout_is_lsb_first(self):
+        # bits [1,0,1,1,0,0,0,0, 1] -> bytes [0b00001101, 0b00000001]
+        assert pack_u1([1, 0, 1, 1, 0, 0, 0, 0, 1]) == bytes([0x0D, 0x01])
+        # Bipolar stores bit 1 for +1: [-1,+1,+1] -> 0b00000110.
+        assert pack_u1([-1, 1, 1], bipolar=True) == bytes([0x06])
+
+    def test_codecs_reject_out_of_domain_codes(self):
+        with pytest.raises(ValueError):
+            pack_u4([16])
+        with pytest.raises(ValueError):
+            pack_u4([-1])
+        with pytest.raises(ValueError):
+            pack_u1([2])
+        with pytest.raises(ValueError):
+            pack_u1([0], bipolar=True)  # bipolar has no zero code
 
 
 class TestFloatConfig:

@@ -262,6 +262,92 @@ fn main() {
             ("packed-i8", &r_p),
         ));
 
+        // Sub-byte containers, same geometry: u4 codes through the
+        // nibble-blocked kernel (weights stay packed in memory) and
+        // bipolar 1-bit codes through XNOR+popcount on u64 words —
+        // k = 144 = 2 full words + a 16-bit tail, so the masked-tail
+        // path is on the measured loop.  Both are differential-checked
+        // here against the blocked i8 kernel on identical codes.
+        let mut prng = Rng::new(44);
+        let xu_codes: Vec<i32> = (0..rows * k).map(|_| prng.below(16) as i32).collect();
+        let wu_codes: Vec<i32> = (0..k * n).map(|_| prng.below(16) as i32).collect();
+        let x8u = Tensor::new_i8(
+            vec![rows, k],
+            xu_codes.iter().map(|&c| c as i8).collect(),
+        )
+        .unwrap();
+        let w8u = Tensor::new_i8(
+            vec![k, n],
+            wu_codes.iter().map(|&c| c as i8).collect(),
+        )
+        .unwrap();
+        let x4 = Tensor::from_codes_packed(vec![rows, k], &xu_codes, DType::U4).unwrap();
+        let w4 = Tensor::from_codes_packed(vec![k, n], &wu_codes, DType::U4).unwrap();
+        let b0 = Tensor::new_i32(vec![n], vec![0; n]).unwrap();
+        // 15 thresholds over the u4xu4 accumulator range -> u4 output codes.
+        let t_u4 = Tensor::new_i32(vec![1, 15], (0..15).map(|q| q * 2000 + 400).collect())
+            .unwrap();
+        let uspec = IntOpSpec::Mvau { apply_act: true, out_mul: 1, out_add: 0 };
+        let mut o8 = Tensor::zeros_typed(vec![rows, n], DType::I8);
+        let r_i8 = bench("kernel: MVAU blocked i8  (u4-range codes)", 3, 20, || {
+            execute_int_spec_into(&uspec, &[&x8u, &w8u, &b0, &t_u4], &mut o8).unwrap();
+        });
+        let mut o4 = Tensor::zeros_typed(vec![rows, n], DType::U4);
+        let r_u4 = bench("kernel: MVAU packed u4   (nibble-blocked)", 3, 20, || {
+            execute_int_spec_into(&uspec, &[&x4, &w4, &b0, &t_u4], &mut o4).unwrap();
+        });
+        assert_eq!(o4.codes_i32(), o8.codes_i32(), "u4 MVAU diverged from blocked i8");
+        println!(
+            "  -> packed u4 MVAU vs blocked i8: {:.2}x",
+            r_i8.mean().as_secs_f64() / r_u4.mean().as_secs_f64().max(1e-12)
+        );
+        kernel_rows.push(KernelRow::from_results(
+            "mvau",
+            "256x144 x 144x64 + act",
+            ("packed-i8", &r_i8),
+            ("packed-u4", &r_u4),
+        ));
+
+        let xb_codes: Vec<i32> =
+            (0..rows * k).map(|_| 2 * prng.below(2) as i32 - 1).collect();
+        let wb_codes: Vec<i32> =
+            (0..k * n).map(|_| 2 * prng.below(2) as i32 - 1).collect();
+        let x8b = Tensor::new_i8(
+            vec![rows, k],
+            xb_codes.iter().map(|&c| c as i8).collect(),
+        )
+        .unwrap();
+        let w8b = Tensor::new_i8(
+            vec![k, n],
+            wb_codes.iter().map(|&c| c as i8).collect(),
+        )
+        .unwrap();
+        let xb = Tensor::from_codes_packed(vec![rows, k], &xb_codes, DType::B1).unwrap();
+        let wb = Tensor::from_codes_packed(vec![k, n], &wb_codes, DType::B1).unwrap();
+        // Fused sign activation: one threshold at 1, q*2 - 1 maps the
+        // accumulator back onto the bipolar grid.
+        let t_sign = Tensor::new_i32(vec![1, 1], vec![1]).unwrap();
+        let bspec = IntOpSpec::Mvau { apply_act: true, out_mul: 2, out_add: -1 };
+        let mut o8 = Tensor::zeros_typed(vec![rows, n], DType::I8);
+        let r_i8b = bench("kernel: MVAU blocked i8  (bipolar codes)", 3, 20, || {
+            execute_int_spec_into(&bspec, &[&x8b, &w8b, &b0, &t_sign], &mut o8).unwrap();
+        });
+        let mut ob = Tensor::zeros_typed(vec![rows, n], DType::B1);
+        let r_u1 = bench("kernel: MVAU xnor u1     (popcount words)", 3, 20, || {
+            execute_int_spec_into(&bspec, &[&xb, &wb, &b0, &t_sign], &mut ob).unwrap();
+        });
+        assert_eq!(ob.codes_i32(), o8.codes_i32(), "xnor MVAU diverged from blocked i8");
+        println!(
+            "  -> xnor u1 MVAU vs blocked i8: {:.2}x",
+            r_i8b.mean().as_secs_f64() / r_u1.mean().as_secs_f64().max(1e-12)
+        );
+        kernel_rows.push(KernelRow::from_results(
+            "mvau",
+            "256x144 x 144x64 + act",
+            ("packed-i8", &r_i8b),
+            ("xnor-u1", &r_u1),
+        ));
+
         let fspec = OpSpec::Threshold { layout: ChanLayout::Nhwc, out_scale: 0.25, out_bias: 0.0 };
         let ispec = IntOpSpec::Threshold { layout: ChanLayout::Nhwc, out_mul: 1, out_add: 0 };
         let tshape = vec![1usize, 32, 32, 64];

@@ -304,11 +304,18 @@ fn run_replica(
         // Fill until full or the OLDEST frame's wait budget (from its
         // enqueue, not from now) is spent.  Frames already queued are
         // taken greedily — `next` only waits when the deques are empty.
-        let deadline = batch[0].enqueued + policy.max_wait;
+        // The oldest frame is not necessarily the first one taken: a
+        // steal pops a sibling's BACK, and the sibling's front — older
+        // still — can land here next via the dispatcher or another
+        // steal.  So the deadline tracks min(enqueued) over the batch
+        // and SHRINKS whenever an older frame joins mid-fill; computing
+        // it once from batch[0] silently overshoots that frame's wait
+        // budget.
+        let mut oldest = batch[0].enqueued;
         let mut drained_mid_fill = false;
         let mut deadline_close = false;
         while batch.len() < max_batch {
-            match shared.next(me, Some(deadline)) {
+            match shared.next(me, Some(oldest + policy.max_wait)) {
                 Next::Frame(f, s) => {
                     stolen += usize::from(s);
                     if s {
@@ -316,6 +323,7 @@ fn run_replica(
                             t.steals.inc();
                         }
                     }
+                    oldest = oldest.min(f.enqueued);
                     batch.push(f);
                 }
                 Next::TimedOut => {
@@ -647,6 +655,102 @@ mod tests {
             "fast replica served less than the slow one: {} vs {}",
             report.replicas[1].frames,
             report.replicas[0].frames
+        );
+    }
+
+    #[test]
+    fn steal_of_older_frame_shrinks_batch_deadline() {
+        // Regression: the batch-close deadline must track min(enqueued)
+        // over the batch, not batch[0].  Replica 0 takes a fresh frame
+        // from its own deque, then steals a much older one from its
+        // sibling's back; the batch must close on the OLDER frame's
+        // remaining wait budget, not the fresh frame's full one.
+        let max_wait = Duration::from_millis(400);
+        let policy = BatchPolicy {
+            max_batch: 3,
+            max_wait,
+        };
+        let shared = Shared::new(2, None);
+        let now = Instant::now();
+        let old = now - Duration::from_millis(300);
+        shared.push(
+            0,
+            Frame {
+                id: 0,
+                pixels: vec![0.0; 12],
+                enqueued: now,
+            },
+        );
+        shared.push(
+            1,
+            Frame {
+                id: 1,
+                pixels: vec![0.0; 12],
+                enqueued: old,
+            },
+        );
+
+        struct Probe {
+            executed: Arc<Mutex<Option<Instant>>>,
+        }
+        impl FeatureExtractor for Probe {
+            fn batch(&self) -> usize {
+                8
+            }
+            fn img(&self) -> usize {
+                2
+            }
+            fn feature_dim(&self) -> usize {
+                2
+            }
+            fn extract(&self, images: &[f32]) -> Result<Vec<f32>> {
+                let mut g = self.executed.lock().unwrap();
+                if g.is_none() {
+                    *g = Some(Instant::now());
+                }
+                StubExtractor {
+                    batch: 8,
+                    img: 2,
+                    dim: 2,
+                    delay: Duration::ZERO,
+                }
+                .extract(images)
+            }
+        }
+
+        let executed: Arc<Mutex<Option<Instant>>> = Arc::new(Mutex::new(None));
+        let probe = Probe {
+            executed: Arc::clone(&executed),
+        };
+        let ncm = ncm();
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            let shared = &shared;
+            let probe = &probe;
+            let ncm = &ncm;
+            let h = scope.spawn(move || run_replica(shared, 0, probe, ncm, policy, None));
+            loop {
+                if executed.lock().unwrap().is_some() {
+                    break;
+                }
+                assert!(
+                    t0.elapsed() < Duration::from_secs(5),
+                    "batch never executed"
+                );
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            shared.close();
+            let out = h.join().expect("replica thread").unwrap();
+            assert_eq!(out.metrics.frames, 2);
+            assert_eq!(out.stolen, 1, "the old sibling frame must be stolen");
+        });
+        let waited = executed.lock().unwrap().unwrap() - t0;
+        // The stolen frame had ~100 ms of its 400 ms budget left.  The
+        // buggy once-computed deadline (from the fresh batch[0]) waits
+        // the full 400 ms; the min-tracking one closes around 100 ms.
+        assert!(
+            waited < Duration::from_millis(250),
+            "batch overshot the stolen older frame's wait budget: {waited:?}"
         );
     }
 

@@ -29,7 +29,10 @@ use super::{DesignPoint, PointMetrics, SweepSpec};
 /// v3: width-native packed storage — metrics grew bytes-per-frame and
 /// the non-dyadic scale count, and the key names the weight/activation
 /// container widths.
-pub const CACHE_VERSION: u32 = 3;
+/// v4: sub-byte packed containers (widths 1 and 4 now reachable in the
+/// key) plus honest boundary-byte accounting — bytes-per-frame changed
+/// meaning and the metrics grew the bandwidth-ceiling fps.
+pub const CACHE_VERSION: u32 = 4;
 
 /// 64-bit FNV-1a — tiny, dependency-free, good enough for file naming
 /// (the stored description string is the real collision guard).
@@ -141,6 +144,7 @@ fn metrics_to_json(m: &PointMetrics) -> Json {
         ("utilization", Json::num(m.utilization)),
         ("hw_layers", Json::num(m.hw_layers as f64)),
         ("bytes_per_frame", Json::num(m.bytes_per_frame as f64)),
+        ("bw_fps_ceiling", Json::num(m.bw_fps_ceiling)),
         ("non_dyadic_scales", Json::num(m.non_dyadic_scales as f64)),
     ])
 }
@@ -160,6 +164,7 @@ fn metrics_from_json(j: &Json) -> Result<PointMetrics> {
         utilization: j.get("utilization")?.as_f64()?,
         hw_layers: j.get("hw_layers")?.as_usize()?,
         bytes_per_frame: j.get("bytes_per_frame")?.as_f64()? as u64,
+        bw_fps_ceiling: j.get("bw_fps_ceiling")?.as_f64()?,
         non_dyadic_scales: j.get("non_dyadic_scales")?.as_usize()?,
     })
 }
@@ -183,6 +188,7 @@ mod tests {
             utilization: 0.8533,
             hw_layers: 40,
             bytes_per_frame: 987_654,
+            bw_fps_ceiling: 1012.5000001,
             non_dyadic_scales: 1,
         }
     }
@@ -230,8 +236,8 @@ mod tests {
         s2.datapath = crate::plan::Datapath::BitTrue;
         assert_ne!(base, point_desc(&s2, p));
         // The container widths are named in the key (headline config:
-        // s6.5 weights and u4.2 acts both pack into i8).
-        assert!(base.contains("|cont=8/8|"), "{base}");
+        // s6.5 weights pack into i8, u4.2 acts into a u4 nibble).
+        assert!(base.contains("|cont=8/4|"), "{base}");
     }
 
     #[test]

@@ -223,9 +223,14 @@ pub struct PointMetrics {
     pub utilization: f64,
     pub hw_layers: usize,
     /// Bytes one frame streams through the scoring plan's kernels at the
-    /// containers' actual widths (packed on the bit-true datapath) —
-    /// the bandwidth the config's narrow formats buy.
+    /// containers' actual widths (packed on the bit-true datapath),
+    /// including the f32 ingress/egress boundary traffic — the bandwidth
+    /// the config's narrow formats buy.
     pub bytes_per_frame: u64,
+    /// Throughput ceiling from the device's DMA bandwidth at this
+    /// bytes-per-frame ([`Device::bandwidth_fps_ceiling`]) — sits
+    /// alongside the II-derived `fps`; whichever is lower binds.
+    pub bw_fps_ceiling: f64,
     /// Scale factors whose exact decomposition needs an odd multiplier
     /// `|m| > 1`: exact on the integer path, f32-divergent by design.
     /// Nonzero counts are flagged in the report.
@@ -447,6 +452,7 @@ pub fn build_hw_metrics(
         utilization: r.max_utilization(&spec.device),
         hw_layers: report.models.len(),
         bytes_per_frame: stats.bytes_per_frame,
+        bw_fps_ceiling: spec.device.bandwidth_fps_ceiling(stats.bytes_per_frame),
         non_dyadic_scales: stats.non_dyadic_scales,
     })
 }

@@ -12,6 +12,17 @@ use anyhow::{Context, Result};
 
 use super::{SweepResult, SweepSpec};
 
+/// Display label of a storage container: byte-and-wider containers are
+/// signed (`i8`/`i16`/`i32`), the packed sub-byte ones are unsigned
+/// code containers (`u4` nibbles, `u1` bits).
+fn container_label(bits: u8) -> String {
+    if bits < 8 {
+        format!("u{bits}")
+    } else {
+        format!("i{bits}")
+    }
+}
+
 pub fn render_report(spec: &SweepSpec, result: &SweepResult) -> String {
     let mut s = String::new();
     let _ = writeln!(s, "# EXPERIMENTS — design-space exploration");
@@ -80,13 +91,13 @@ pub fn render_report(spec: &SweepSpec, result: &SweepResult) -> String {
         };
         let _ = writeln!(
             s,
-            "| {} | {} | {} | {} | i{}/i{} | {} | {:.2} | {:.2} | {:.1} | {} |",
+            "| {} | {} | {} | {} | {}/{} | {} | {:.2} | {:.2} | {:.1} | {} |",
             o.point.name,
             o.point.quant.max_bits(),
             o.point.quant.weight.describe(),
             o.point.quant.act.describe(),
-            o.point.quant.weight.container_bits(),
-            o.point.quant.act.container_bits(),
+            container_label(o.point.quant.weight.container_bits()),
+            container_label(o.point.quant.act.container_bits()),
             spec.datapath.describe(),
             o.metrics.acc_mean * 100.0,
             o.metrics.acc_ci95 * 100.0,
@@ -111,14 +122,14 @@ pub fn render_report(spec: &SweepSpec, result: &SweepResult) -> String {
     let _ = writeln!(s);
     let _ = writeln!(
         s,
-        "| config | cap | datapath | LUT | FF | BRAM36 | DSP | util [%] | weights [KiB] | latency [ms] | fps | II [cyc] | Pareto |"
+        "| config | cap | datapath | LUT | FF | BRAM36 | DSP | util [%] | weights [KiB] | latency [ms] | fps | bw-ceiling fps | II [cyc] | Pareto |"
     );
-    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|---|---|---|---|---|");
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|");
     for (i, o) in result.outcomes.iter().enumerate() {
         let m = &o.metrics;
         let _ = writeln!(
             s,
-            "| {} | {:.2} | {} | {:.0} | {:.0} | {:.1} | {:.0} | {:.1} | {:.1} | {:.3} | {:.1} | {} | {} |",
+            "| {} | {:.2} | {} | {:.0} | {:.0} | {:.1} | {:.0} | {:.1} | {:.1} | {:.3} | {:.1} | {:.1} | {} | {} |",
             o.point.name,
             o.point.max_utilization,
             spec.datapath.describe(),
@@ -130,6 +141,7 @@ pub fn render_report(spec: &SweepSpec, result: &SweepResult) -> String {
             m.weight_bits as f64 / 8192.0,
             m.latency_ms,
             m.fps,
+            m.bw_fps_ceiling,
             m.steady_cycles,
             if result.pareto.contains(&i) { "*" } else { "" },
         );
@@ -247,6 +259,7 @@ mod tests {
                     utilization: 0.5,
                     hw_layers: 40,
                     bytes_per_frame: 100_000 + 1000 * i as u64,
+                    bw_fps_ceiling: 1.0e9 / (100_000.0 + 1000.0 * i as f64),
                     non_dyadic_scales: 0,
                 },
                 cached: i % 2 == 0,
@@ -306,9 +319,15 @@ mod tests {
         let clean = render_report(&spec, &result);
         assert!(!clean.contains("non-dyadic"), "dyadic sweep got flagged");
         assert!(clean.contains("| dyadic |"));
-        // Containers are visible per row (headline: i8/i8).
-        assert!(clean.contains("| i8/i8 |"), "{clean}");
+        // Containers are visible per row (headline: i8 weights, u4 acts).
+        assert!(clean.contains("| i8/u4 |"), "{clean}");
+        assert_eq!(container_label(1), "u1");
+        assert_eq!(container_label(4), "u4");
+        assert_eq!(container_label(16), "i16");
         assert!(clean.contains("KiB/frame"));
+        // The bandwidth axis is a Table-III column.
+        assert!(clean.contains("bw-ceiling fps"), "{clean}");
+        assert!(clean.contains("| 10000.0 |"), "{clean}");
         // Flag one config: the marker and the footnote both appear.
         result.outcomes[2].metrics.non_dyadic_scales = 3;
         let flagged = render_report(&spec, &result);

@@ -75,6 +75,14 @@ impl FxpFormat {
         (2.0f64).powi(self.frac_bits as i32)
     }
 
+    /// Signed 1-bit formats are *bipolar* (the FINN/BNN convention):
+    /// codes {-1, +1}, no zero, realized by an XNOR/popcount datapath.
+    /// Two's-complement 1-bit ({-1, 0}) has no useful multiplier, so
+    /// there is nothing for this to conflict with.
+    pub fn is_bipolar(&self) -> bool {
+        self.signed && self.bits == 1
+    }
+
     pub fn qmin(&self) -> i64 {
         if self.signed {
             -(1i64 << (self.bits - 1))
@@ -84,7 +92,9 @@ impl FxpFormat {
     }
 
     pub fn qmax(&self) -> i64 {
-        if self.signed {
+        if self.is_bipolar() {
+            1
+        } else if self.signed {
             (1i64 << (self.bits - 1)) - 1
         } else {
             (1i64 << self.bits) - 1
@@ -100,27 +110,43 @@ impl FxpFormat {
     }
 
     /// Steps a MultiThreshold unit needs to realize this quantizer.
+    /// Bipolar needs one sign threshold (codes {-1, +1} skip zero, so
+    /// `qmax - qmin` would overcount by one).
     pub fn num_thresholds(&self) -> i64 {
+        if self.is_bipolar() {
+            return 1;
+        }
         self.qmax() - self.qmin()
     }
 
-    /// Narrowest signed power-of-two container (8/16/32 bits) holding
-    /// every code of this format — the storage width the packed bit-true
-    /// datapath streams (DESIGN.md §9).  Signed b-bit formats fit an
-    /// 8-bit container up to b = 8; unsigned only up to b = 7 (the
-    /// container is always signed, matching the FPGA-side signed
-    /// accumulator convention).  Formats whose codes exceed i32 still
-    /// report 32 — the datapath's checked conversions reject them.
-    /// Mirrored by `container_bits` in python/compile/fxp.py.
+    /// Narrowest container in {1, 4, 8, 16, 32} bits holding every code
+    /// of this format — the storage width the packed bit-true datapath
+    /// streams (DESIGN.md §9).  Unsigned formats reach the sub-byte
+    /// bit-packed rungs (u1 at 1 bit, u2..u4 at 4); byte-aligned
+    /// containers are signed, matching the FPGA-side signed accumulator
+    /// convention, so signed b-bit fits 8 up to b = 8 while unsigned
+    /// only up to b = 7.  Bipolar is the 1-bit container even though
+    /// its range straddles zero — the code *set* {-1, +1} is known
+    /// here, unlike in the range-only rule.  Formats whose codes exceed
+    /// i32 still report 32 — the datapath's checked conversions reject
+    /// them.  Mirrored by `container_bits` in python/compile/fxp.py.
     pub fn container_bits(&self) -> u8 {
+        if self.is_bipolar() {
+            return 1;
+        }
         container_bits_for_range(self.qmin(), self.qmax())
     }
 
     /// Quantize to integer code: `clip(floor(x * 2^f + 0.5), qmin, qmax)`.
+    /// Bipolar uses the sign rule instead (`x >= 0 -> +1`, else `-1`) —
+    /// there is no zero code to round to.
     ///
     /// f64 intermediate matches the f32-graph python semantics on every
     /// value the pipeline produces (f32 inputs are exactly representable).
     pub fn quantize_int(&self, x: f32) -> i64 {
+        if self.is_bipolar() {
+            return if x >= 0.0 { 1 } else { -1 };
+        }
         let q = (x as f64 * self.scale() + 0.5).floor();
         let q = q.clamp(self.qmin() as f64, self.qmax() as f64);
         q as i64
@@ -198,16 +224,29 @@ impl QuantConfig {
     }
 }
 
-/// THE container-selection rule, in one place: the narrowest signed
-/// 8/16/32-bit container covering the code range `[lo, hi]`.  Everything
-/// that picks a storage width routes through here —
+/// THE container-selection rule, in one place: the narrowest container
+/// in {1, 4, 8, 16, 32} bits covering the code range `[lo, hi]`.
+/// Everything that picks a storage width routes through here —
 /// [`FxpFormat::container_bits`] (spec level), the `bt_container`
 /// annotation in `transforms::annotate_bit_true_formats` (graph level),
 /// and the width-native initializer conversion in `plan` (compile
-/// level) — so the rule can never desynchronize between layers.  Ranges
-/// beyond i32 still report 32; the datapath's checked conversions
-/// reject them downstream.
+/// level) — so the rule can never desynchronize between layers.
+///
+/// The sub-byte rungs are unsigned bit-packed containers: `[0, 1]`
+/// packs eight binary codes per byte, `[0, 15]` packs two nibbles per
+/// byte (DESIGN.md §9).  A bipolar {-1, +1} container is NOT derivable
+/// from a range alone — `[-1, 1]` includes 0, which bipolar cannot
+/// store — so bipolar selection happens where the code *set* is known
+/// (annotation / weight conversion), not here.  Ranges beyond i32
+/// still report 32; the datapath's checked conversions reject them
+/// downstream.
 pub fn container_bits_for_range(lo: i64, hi: i64) -> u8 {
+    if lo >= 0 && hi <= 1 {
+        return 1;
+    }
+    if lo >= 0 && hi <= 15 {
+        return 4;
+    }
     for bits in [8u8, 16] {
         if lo >= -(1i64 << (bits - 1)) && hi <= (1i64 << (bits - 1)) - 1 {
             return bits;
@@ -454,8 +493,13 @@ mod tests {
             // quantizer spans 2^b codes -> 2^b - 1 threshold steps,
             // signed or not — fractional headroom must not change it.
             assert_eq!(f.num_thresholds(), (1i64 << f.bits) - 1);
-            // Round-trip through codes is still exact on the grid.
-            let code = f.qmin() + r.below((f.qmax() - f.qmin() + 1) as usize) as i64;
+            // Round-trip through codes is still exact on the grid
+            // (bipolar has no zero code — sample from {-1, +1}).
+            let code = if f.is_bipolar() {
+                2 * (r.below(2) as i64) - 1
+            } else {
+                f.qmin() + r.below((f.qmax() - f.qmin() + 1) as usize) as i64
+            };
             assert_eq!(f.quantize_int(f.dequantize(code)), code);
         }
     }
@@ -487,7 +531,12 @@ mod tests {
     #[test]
     fn container_bits_rule_matches_python_twin() {
         // Mirrors test_fxp.py::test_container_bits_rule.
-        assert_eq!(FxpFormat::unsigned(4, 2).unwrap().container_bits(), 8);
+        assert_eq!(FxpFormat::unsigned(1, 0).unwrap().container_bits(), 1);
+        assert_eq!(FxpFormat::signed(1, 0).unwrap().container_bits(), 1); // bipolar
+        assert_eq!(FxpFormat::unsigned(2, 1).unwrap().container_bits(), 4);
+        assert_eq!(FxpFormat::unsigned(4, 2).unwrap().container_bits(), 4);
+        assert_eq!(FxpFormat::signed(4, 2).unwrap().container_bits(), 8);
+        assert_eq!(FxpFormat::unsigned(5, 2).unwrap().container_bits(), 8);
         assert_eq!(FxpFormat::signed(8, 4).unwrap().container_bits(), 8);
         assert_eq!(FxpFormat::unsigned(7, 0).unwrap().container_bits(), 8);
         assert_eq!(FxpFormat::unsigned(8, 4).unwrap().container_bits(), 16);
@@ -498,15 +547,19 @@ mod tests {
         assert_eq!(FxpFormat::unsigned(32, 16).unwrap().container_bits(), 32);
         // The whole Table-II family, against an independent derivation
         // (not the definition): signed b-bit fits 2^(c-1) containers at
-        // b <= c, unsigned only at b <= c - 1.
+        // b <= c, unsigned b-bit packs sub-byte at b <= 4 and otherwise
+        // needs c >= b + 1.
         for (name, cfg) in table2_configs() {
             let expect_w = match cfg.weight.bits {
-                0..=8 => 8,
+                1 => 1, // bipolar
+                2..=8 => 8,
                 9..=16 => 16,
                 _ => 32,
             };
             let expect_a = match cfg.act.bits {
-                0..=7 => 8,
+                1 => 1,
+                2..=4 => 4,
+                5..=7 => 8,
                 8..=15 => 16,
                 _ => 32,
             };
@@ -514,13 +567,39 @@ mod tests {
             assert_eq!(cfg.act.container_bits(), expect_a, "{name} acts");
         }
         // The range-level rule is the same function all layers share.
-        assert_eq!(container_bits_for_range(0, 15), 8);
+        assert_eq!(container_bits_for_range(0, 1), 1);
+        assert_eq!(container_bits_for_range(0, 3), 4);
+        assert_eq!(container_bits_for_range(0, 15), 4);
+        assert_eq!(container_bits_for_range(0, 16), 8);
+        // Range-only can't see bipolar: [-1, 1] includes 0, so it gets a
+        // byte container — the code-set-aware layers pick B1 instead.
+        assert_eq!(container_bits_for_range(-1, 1), 8);
         assert_eq!(container_bits_for_range(-128, 127), 8);
         assert_eq!(container_bits_for_range(0, 255), 16);
         assert_eq!(container_bits_for_range(0, 1 << 20), 32);
         let head = headline_config();
         assert_eq!(head.weight.container_bits(), 8); // s6.5
-        assert_eq!(head.act.container_bits(), 8); // u4.2
+        assert_eq!(head.act.container_bits(), 4); // u4.2 packs two per byte
+    }
+
+    #[test]
+    fn bipolar_one_bit_format_semantics() {
+        // Signed 1-bit is the FINN bipolar convention: codes {-1, +1},
+        // sign-rule quantizer, one threshold step, 1-bit container.
+        let f = FxpFormat::signed(1, 0).unwrap();
+        assert!(f.is_bipolar());
+        assert_eq!((f.qmin(), f.qmax()), (-1, 1));
+        assert_eq!(f.num_thresholds(), 1);
+        assert_eq!(f.quantize_int(0.7), 1);
+        assert_eq!(f.quantize_int(0.0), 1);
+        assert_eq!(f.quantize_int(-0.2), -1);
+        assert_eq!(f.quantize(3.0), 1.0);
+        assert_eq!(f.quantize(-3.0), -1.0);
+        // Fractional bipolar scales the grid but keeps the sign rule.
+        let f = FxpFormat::signed(1, 2).unwrap();
+        assert_eq!(f.quantize(0.7), 0.25);
+        assert_eq!(f.quantize(-0.1), -0.25);
+        assert!(!FxpFormat::unsigned(1, 0).unwrap().is_bipolar());
     }
 
     #[test]

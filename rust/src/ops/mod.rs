@@ -42,7 +42,7 @@ use std::collections::HashMap;
 use anyhow::{anyhow, bail, Result};
 
 use crate::graph::{Graph, Node};
-use crate::tensor::{broadcast_shape, DType, IntCode, Tensor, TensorData};
+use crate::tensor::{broadcast_shape, CodeView, CodeViewMut, DType, IntCode, Tensor, TensorData};
 
 /// Execute the graph on named input tensors; returns all graph outputs.
 ///
@@ -500,7 +500,11 @@ fn codes_mut_of<'a, T: IntCode>(t: &'a mut Tensor, what: &str) -> Result<&'a mut
 
 /// Monomorphize `$e` over the container behind `$dt`: `$T` binds i8 /
 /// i16 / i32 in the respective arm.  Nest invocations to dispatch over
-/// several containers at once (input × weight × output).
+/// several containers at once (input × weight × output).  Sub-byte
+/// containers never reach these monomorphized kernels — every dispatcher
+/// routes any-packed operand sets to the bit-addressed fallback (or the
+/// specialized packed MVAU kernels) first, so hitting one here is a
+/// dispatch bug, not a data error.
 macro_rules! with_code {
     ($dt:expr, $T:ident, $what:expr, $e:expr) => {
         match $dt {
@@ -517,8 +521,31 @@ macro_rules! with_code {
                 $e
             }
             DType::F32 => bail!("{}: packed integer kernel on an f32 tensor", $what),
+            DType::U4 | DType::U1 | DType::B1 => bail!(
+                "{}: byte-aligned kernel reached a packed {:?} tensor (packed dispatch bug)",
+                $what,
+                $dt
+            ),
         }
     };
+}
+
+/// True when any tensor in the step carries a sub-byte packed container —
+/// the dispatchers then take the bit-addressed [`CodeView`] path instead
+/// of the byte-aligned monomorphized kernels.
+fn any_packed(ts: &[&Tensor]) -> bool {
+    ts.iter().any(|t| t.dtype().is_packed())
+}
+
+fn view_of<'a>(t: &'a Tensor, what: &str) -> Result<CodeView<'a>> {
+    t.code_view()
+        .ok_or_else(|| anyhow!("{what}: integer kernel on an f32 tensor"))
+}
+
+fn view_mut_of<'a>(t: &'a mut Tensor, what: &str) -> Result<CodeViewMut<'a>> {
+    let dtype = t.dtype();
+    t.code_view_mut()
+        .ok_or_else(|| anyhow!("{what}: integer kernel on an f32 ({dtype:?}) tensor"))
 }
 
 /// Execute a bit-true spec into a caller-provided buffer — the integer
@@ -600,6 +627,20 @@ fn quantize_threshold_into(
         threshold_geometry(t, x.shape(), &x.strides(), layout, "quantize_threshold")?;
     let ts = t.data();
     let xs = x.data();
+    if out.dtype().is_packed() {
+        // Sub-byte output container: bit-addressed store (checked — a
+        // code outside the container's set is a datapath error).
+        let n = out.numel();
+        let mut ov = view_mut_of(out, "quantize_threshold output")?;
+        for i in 0..n {
+            let v = xs[i];
+            let row = if c_t == 1 { 0 } else { (i / chan_stride) % c };
+            let q = ts[row * k..(row + 1) * k].partition_point(|&t| t <= v) as i64;
+            ov.set(i, q * out_mul + out_add)
+                .map_err(|e| anyhow!("quantize_threshold: {e}"))?;
+        }
+        return Ok(());
+    }
     with_code!(out.dtype(), O, "quantize_threshold output", {
         let od = codes_mut_of::<O>(out, "quantize_threshold output")?;
         for (i, o) in od.iter_mut().enumerate() {
@@ -634,6 +675,28 @@ fn threshold_packed_into(
     }
     let (c_t, k, chan_stride, c) =
         threshold_geometry(t, x.shape(), &x.strides(), layout, "threshold")?;
+    if any_packed(&[x, t, out]) {
+        // Any sub-byte operand: bit-addressed generic path.  Threshold
+        // steps are O(numel · log K) compares — never the MVAU-dominated
+        // hot loop — so the per-code view indirection is acceptable.
+        let xv = view_of(x, "threshold input")?;
+        let tv = view_of(t, "threshold matrix")?;
+        let n = out.numel();
+        let mut ov = view_mut_of(out, "threshold output")?;
+        for i in 0..n {
+            let v = xv.get(i);
+            let row = if c_t == 1 { 0 } else { (i / chan_stride) % c };
+            let base = row * k;
+            // partition_point over the bit-addressed threshold row.
+            let mut q = 0usize;
+            while q < k && tv.get(base + q) <= v {
+                q += 1;
+            }
+            ov.set(i, q as i64 * out_mul + out_add)
+                .map_err(|e| anyhow!("threshold: {e}"))?;
+        }
+        return Ok(());
+    }
     with_code!(
         x.dtype(),
         X,
@@ -745,6 +808,16 @@ fn mvau_packed_into(
     } else {
         None
     };
+    // Kernel selection: both operands bipolar 1-bit -> XNOR+popcount;
+    // any other sub-byte combination -> block-unpacking kernel (weights
+    // stay packed in memory); all byte-aligned -> the monomorphized
+    // cache-blocked fast path.
+    if x.dtype() == DType::B1 && w.dtype() == DType::B1 {
+        return mvau_xnor_b1(out_mul, out_add, x, w, bias, thr, out);
+    }
+    if any_packed(&[x, w, out]) {
+        return mvau_unpack_blocked(out_mul, out_add, x, w, bias, thr, out);
+    }
     with_code!(
         x.dtype(),
         X,
@@ -761,6 +834,188 @@ fn mvau_packed_into(
             )
         )
     )
+}
+
+/// Shared geometry / threshold resolution of the packed MVAU kernels:
+/// `(rows, K, N, thresholds)` with the same consistency checks the
+/// monomorphized kernel performs.
+fn mvau_geometry<'a>(
+    x: &Tensor,
+    w: &Tensor,
+    out: &Tensor,
+    bias: &[i32],
+    thr: Option<&'a Tensor>,
+) -> Result<(usize, usize, usize, Option<(&'a [i32], usize, usize)>)> {
+    let k = *x.shape().last().ok_or_else(|| anyhow!("mvau on scalar"))?;
+    let [wk, n]: [usize; 2] = w
+        .shape()
+        .try_into()
+        .map_err(|_| anyhow!("mvau weight must be 2-D"))?;
+    if wk != k {
+        bail!("mvau inner dim {k} != weight rows {wk}");
+    }
+    let rows: usize = x.shape()[..x.ndim() - 1].iter().product();
+    if out.numel() != rows * n {
+        bail!("mvau output buffer {:?} != {rows}x{n}", out.shape());
+    }
+    if bias.len() != n {
+        bail!("mvau bias length {} != output channels {n}", bias.len());
+    }
+    let tinfo = match thr {
+        Some(t) => {
+            let (c_t, kt) = (t.shape()[0], t.shape()[1]);
+            if c_t != n && c_t != 1 {
+                bail!("mvau threshold rows {c_t} != output channels {n}");
+            }
+            Some((
+                codes_of::<i32>(t, "mvau thresholds (accumulator grid)")?,
+                c_t,
+                kt,
+            ))
+        }
+        None => None,
+    };
+    Ok((rows, k, n, tinfo))
+}
+
+/// Fused MVAU activation epilogue on the wide accumulator value: count
+/// thresholds <= v, scale onto the output grid (identical to the
+/// monomorphized kernel's epilogue — the differential tests hold all
+/// kernels to the same codes).
+#[inline]
+fn mvau_act(
+    v: i64,
+    col: usize,
+    tinfo: Option<(&[i32], usize, usize)>,
+    out_mul: i64,
+    out_add: i64,
+) -> i64 {
+    match tinfo {
+        Some((ts, c_t, kt)) => {
+            let trow_at = if c_t == 1 { 0 } else { col };
+            let trow = &ts[trow_at * kt..(trow_at + 1) * kt];
+            let q = trow.partition_point(|&t| (t as i64) <= v) as i64;
+            q * out_mul + out_add
+        }
+        None => v,
+    }
+}
+
+/// MVAU over any operand set containing a sub-byte container — the
+/// nibble-blocked u4 path: the activation row is unpacked once per row
+/// and the weight matrix, which STAYS packed in memory, is unpacked one
+/// `MVAU_BLOCK_N`-column strip at a time into a small i32 scratch tile,
+/// so the inner multiply-add runs over flat integers while memory
+/// traffic stays at 4 (or 1) bits per code.  Unpack work is O(rows·K·N)
+/// shifts on top of the O(rows·K·N) MACs — constant factor, no extra
+/// memory movement.
+fn mvau_unpack_blocked(
+    out_mul: i64,
+    out_add: i64,
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[i32],
+    thr: Option<&Tensor>,
+    out: &mut Tensor,
+) -> Result<()> {
+    let (rows, k, n, tinfo) = mvau_geometry(x, w, out, bias, thr)?;
+    let xv = view_of(x, "mvau input")?;
+    let wv = view_of(w, "mvau weights")?;
+    let mut xbuf = vec![0i32; k];
+    let mut wbuf = vec![0i32; MVAU_BLOCK_N];
+    let mut acc = vec![0i64; MVAU_BLOCK_N];
+    let mut ov = view_mut_of(out, "mvau output")?;
+    for r in 0..rows {
+        for (i, slot) in xbuf.iter_mut().enumerate() {
+            *slot = xv.get(r * k + i);
+        }
+        let mut jb = 0;
+        while jb < n {
+            let nb = MVAU_BLOCK_N.min(n - jb);
+            let acc = &mut acc[..nb];
+            acc.fill(0);
+            for (kk, &xvv) in xbuf.iter().enumerate() {
+                if xvv == 0 {
+                    continue;
+                }
+                let base = kk * n + jb;
+                let wtile = &mut wbuf[..nb];
+                for (jj, slot) in wtile.iter_mut().enumerate() {
+                    *slot = wv.get(base + jj);
+                }
+                let xvv = xvv as i64;
+                for (a, &wvv) in acc.iter_mut().zip(wtile.iter()) {
+                    *a += xvv * wvv as i64;
+                }
+            }
+            for (jj, &a) in acc.iter().enumerate() {
+                let col = jb + jj;
+                let code = mvau_act(a + bias[col] as i64, col, tinfo, out_mul, out_add);
+                ov.set(r * n + col, code).map_err(|e| anyhow!("mvau: {e}"))?;
+            }
+            jb += nb;
+        }
+    }
+    Ok(())
+}
+
+/// XNOR+popcount MVAU for bipolar 1-bit configs — the FINN PE
+/// realization: with codes in {-1, +1} stored as bits (1 ↔ +1), the dot
+/// product is `2·popcount(xnor(w, a)) − K`, evaluated word-at-a-time on
+/// u64 lanes.  The packed [K, N] weight matrix is transposed once per
+/// call into per-column bit words (K·N bit reads, amortized over every
+/// output row); bits past K in the last word are masked out of the
+/// xnor — `!(a ^ w)` would otherwise count the zero padding as
+/// agreement.
+fn mvau_xnor_b1(
+    out_mul: i64,
+    out_add: i64,
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[i32],
+    thr: Option<&Tensor>,
+    out: &mut Tensor,
+) -> Result<()> {
+    let (rows, k, n, tinfo) = mvau_geometry(x, w, out, bias, thr)?;
+    let (TensorData::B1(xp), TensorData::B1(wp)) = (x.raw_data(), w.raw_data()) else {
+        bail!("mvau_xnor: operands must both be bipolar B1 tensors");
+    };
+    let words = k.div_ceil(64);
+    let tail = k & 63;
+    let tail_mask: u64 = if tail == 0 { u64::MAX } else { (1u64 << tail) - 1 };
+    // Column-major bit image of the weights: wcols[col * words + wi].
+    let mut wcols = vec![0u64; n * words];
+    for kk in 0..k {
+        let base = kk * n;
+        for col in 0..n {
+            if wp.bit(base + col) != 0 {
+                wcols[col * words + kk / 64] |= 1u64 << (kk & 63);
+            }
+        }
+    }
+    let mut xw = vec![0u64; words];
+    let mut ov = view_mut_of(out, "mvau output")?;
+    for r in 0..rows {
+        xw.fill(0);
+        let base = r * k;
+        for i in 0..k {
+            if xp.bit(base + i) != 0 {
+                xw[i / 64] |= 1u64 << (i & 63);
+            }
+        }
+        for col in 0..n {
+            let wc = &wcols[col * words..(col + 1) * words];
+            let mut ones = 0u32;
+            for (wi, (&xm, &wm)) in xw.iter().zip(wc).enumerate() {
+                let mask = if wi + 1 == words { tail_mask } else { u64::MAX };
+                ones += (!(xm ^ wm) & mask).count_ones();
+            }
+            let dot = 2 * ones as i64 - k as i64;
+            let code = mvau_act(dot + bias[col] as i64, col, tinfo, out_mul, out_add);
+            ov.set(r * n + col, code).map_err(|e| anyhow!("mvau: {e}"))?;
+        }
+    }
+    Ok(())
 }
 
 fn mvau_typed<X: IntCode, W: IntCode, O: IntCode>(
@@ -886,12 +1141,68 @@ fn im2col_packed_into(
             out.dtype()
         );
     }
+    if x.dtype().is_packed() {
+        return im2col_view(kernel, stride, pad, x, out);
+    }
     with_code!(
         x.dtype(),
         T,
         "im2col",
         im2col_typed::<T>(kernel, stride, pad, x, out)
     )
+}
+
+/// im2col over a sub-byte container: same traversal as the typed
+/// kernel, through the bit-addressed views.  Zero padding is written as
+/// code 0 — unrepresentable on a bipolar container, which errors loudly
+/// rather than silently corrupting the patch (padded bipolar layers
+/// must be annotated into a wider container).
+fn im2col_view(
+    kernel: [usize; 2],
+    stride: [usize; 2],
+    pad: [usize; 2],
+    x: &Tensor,
+    out: &mut Tensor,
+) -> Result<()> {
+    let [kh, kw] = kernel;
+    let [sh, sw] = stride;
+    let [ph, pw] = pad;
+    let [n, h, w, c]: [usize; 4] = x
+        .shape()
+        .try_into()
+        .map_err(|_| anyhow!("im2col input must be 4-D"))?;
+    let ho = (h + 2 * ph - kh) / sh + 1;
+    let wo = (w + 2 * pw - kw) / sw + 1;
+    let k = kh * kw * c;
+    if out.numel() != n * ho * wo * k {
+        bail!("im2col output buffer {:?} wrong size", out.shape());
+    }
+    let xv = view_of(x, "im2col input")?;
+    let mut ov = view_mut_of(out, "im2col output")?;
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let base = ((b * ho + oy) * wo + ox) * k;
+                let mut slot = 0;
+                for dy in 0..kh {
+                    for dx in 0..kw {
+                        let iy = oy * sh + dy;
+                        let ix = ox * sw + dx;
+                        for ch in 0..c {
+                            let v = if iy < ph || iy >= h + ph || ix < pw || ix >= w + pw {
+                                0
+                            } else {
+                                xv.get(((b * h + (iy - ph)) * w + (ix - pw)) * c + ch) as i64
+                            };
+                            ov.set(base + slot, v).map_err(|e| anyhow!("im2col: {e}"))?;
+                            slot += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
 }
 
 fn im2col_typed<T: IntCode>(
@@ -954,7 +1265,46 @@ fn maxpool_nhwc_packed_into(inputs: &[&Tensor], out: &mut Tensor) -> Result<()> 
             out.dtype()
         );
     }
+    if x.dtype().is_packed() {
+        return maxpool_nhwc_view(x, out);
+    }
     with_code!(x.dtype(), T, "maxpool", maxpool_nhwc_typed::<T>(x, out))
+}
+
+/// 2x2/2 max-pool over a sub-byte container: the code max equals the
+/// value max (monotone dequantization), and `CodeView::get` widens to
+/// the signed code value, so the compare runs on i32.
+fn maxpool_nhwc_view(x: &Tensor, out: &mut Tensor) -> Result<()> {
+    let [n, h, w, c]: [usize; 4] = x
+        .shape()
+        .try_into()
+        .map_err(|_| anyhow!("pool input must be 4-D"))?;
+    let (ho, wo) = (h / 2, w / 2);
+    if out.numel() != n * ho * wo * c {
+        bail!("maxpool output buffer {:?} wrong size", out.shape());
+    }
+    let xv = view_of(x, "maxpool input")?;
+    let mut ov = view_mut_of(out, "maxpool output")?;
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for ch in 0..c {
+                    let mut m = xv.get(((b * h + oy * 2) * w + ox * 2) * c + ch);
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let v = xv.get(((b * h + oy * 2 + dy) * w + ox * 2 + dx) * c + ch);
+                            if v > m {
+                                m = v;
+                            }
+                        }
+                    }
+                    ov.set(((b * ho + oy) * wo + ox) * c + ch, m as i64)
+                        .map_err(|e| anyhow!("maxpool: {e}"))?;
+                }
+            }
+        }
+    }
+    Ok(())
 }
 
 fn maxpool_nhwc_typed<T: IntCode>(x: &Tensor, out: &mut Tensor) -> Result<()> {
@@ -1003,6 +1353,18 @@ fn add_streams_packed_into(shift: [u32; 2], inputs: &[&Tensor], out: &mut Tensor
             out.shape()
         );
     }
+    if any_packed(&[a, b, out]) {
+        let [s0, s1] = shift;
+        let av = view_of(a, "add_streams lhs")?;
+        let bv = view_of(b, "add_streams rhs")?;
+        let n = out.numel();
+        let mut ov = view_mut_of(out, "add_streams output")?;
+        for i in 0..n {
+            let v = ((av.get(i) as i64) << s0) + ((bv.get(i) as i64) << s1);
+            ov.set(i, v).map_err(|e| anyhow!("add_streams: {e}"))?;
+        }
+        return Ok(());
+    }
     with_code!(
         a.dtype(),
         A,
@@ -1049,6 +1411,16 @@ fn mul_scalar_packed_into(m: i64, data: &Tensor, out: &mut Tensor) -> Result<()>
             data.shape()
         );
     }
+    if any_packed(&[data, out]) {
+        let xv = view_of(data, "mul_scalar input")?;
+        let n = out.numel();
+        let mut ov = view_mut_of(out, "mul_scalar output")?;
+        for i in 0..n {
+            ov.set(i, xv.get(i) as i64 * m)
+                .map_err(|e| anyhow!("mul_scalar: {e}"))?;
+        }
+        return Ok(());
+    }
     with_code!(
         data.dtype(),
         T,
@@ -1075,6 +1447,31 @@ fn mul_scalar_typed<T: IntCode, O: IntCode>(m: i64, data: &Tensor, out: &mut Ten
 /// accumulate, stored in the annotated (spatially widened) container.
 fn gap_packed_into(inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
     let x = inputs[0];
+    if any_packed(&[x, out]) {
+        let [n, h, w, c]: [usize; 4] = x
+            .shape()
+            .try_into()
+            .map_err(|_| anyhow!("gap input must be 4-D"))?;
+        if out.numel() != n * c {
+            bail!("gap output buffer {:?} != [{n}, {c}]", out.shape());
+        }
+        let xv = view_of(x, "gap input")?;
+        let mut acc: Vec<i64> = vec![0; n * c];
+        for b in 0..n {
+            for y in 0..h {
+                for xcol in 0..w {
+                    for ch in 0..c {
+                        acc[b * c + ch] += xv.get(((b * h + y) * w + xcol) * c + ch) as i64;
+                    }
+                }
+            }
+        }
+        let mut ov = view_mut_of(out, "gap output")?;
+        for (i, &a) in acc.iter().enumerate() {
+            ov.set(i, a).map_err(|e| anyhow!("global_acc_pool: {e}"))?;
+        }
+        return Ok(());
+    }
     with_code!(
         x.dtype(),
         T,
@@ -1127,6 +1524,9 @@ fn copy_into(src: &Tensor, out: &mut Tensor) -> Result<()> {
         (TensorData::I8(s), TensorData::I8(d)) => d.copy_from_slice(s),
         (TensorData::I16(s), TensorData::I16(d)) => d.copy_from_slice(s),
         (TensorData::I32(s), TensorData::I32(d)) => d.copy_from_slice(s),
+        (TensorData::U4(s), TensorData::U4(d)) => d.clone_from(s),
+        (TensorData::U1(s), TensorData::U1(d)) => d.clone_from(s),
+        (TensorData::B1(s), TensorData::B1(d)) => d.clone_from(s),
         _ => bail!(
             "copy_into: dtype mismatch ({:?} -> {:?})",
             src.dtype(),
@@ -2170,5 +2570,220 @@ mod tests {
         let mut wide_out = Tensor::zeros_typed(vec![1, 1], DType::I16);
         execute_int_spec_into(&spec, &[&x, &w, &b], &mut wide_out).unwrap();
         assert_eq!(wide_out.codes_i32(), vec![1000]);
+    }
+
+    // ---------------------------------------------- sub-byte containers
+
+    /// The same codes in a packed container and an i32 tensor.
+    fn packed_i32_pair(shape: Vec<usize>, dtype: DType, seed: u64) -> (Tensor, Tensor) {
+        let mut rng = crate::rng::Rng::new(seed);
+        let codes: Vec<i32> = (0..shape.iter().product::<usize>())
+            .map(|_| match dtype {
+                DType::U4 => rng.below(16) as i32,
+                DType::U1 => rng.below(2) as i32,
+                DType::B1 => 2 * rng.below(2) as i32 - 1,
+                _ => unreachable!(),
+            })
+            .collect();
+        (
+            Tensor::from_codes_packed(shape.clone(), &codes, dtype).unwrap(),
+            Tensor::new_i32(shape, codes).unwrap(),
+        )
+    }
+
+    #[test]
+    fn u4_mvau_matches_i32_oracle_and_crosses_column_blocks() {
+        // The headline Table-II combo: u4 activations x signed i8 weights,
+        // n = 300 > MVAU_BLOCK_N so the unpack tile crosses a block seam.
+        let (rows, k, n) = (3usize, 11usize, 300usize);
+        let (x4, x32) = packed_i32_pair(vec![rows, k], DType::U4, 60);
+        let mut rng = crate::rng::Rng::new(61);
+        let w8: Vec<i8> = (0..k * n).map(|_| rng.below(64) as i8 - 32).collect();
+        let wi8 = Tensor::new_i8(vec![k, n], w8.clone()).unwrap();
+        let wi32 = Tensor::new_i32(vec![k, n], w8.iter().map(|&c| c as i32).collect()).unwrap();
+        let bias: Vec<i32> = (0..n).map(|_| rng.below(100) as i32 - 50).collect();
+        let bt = Tensor::new_i32(vec![n], bias).unwrap();
+        let tt = Tensor::new_i32(vec![1, 15], (0..15).map(|q| q * 30 - 220).collect()).unwrap();
+
+        let spec = IntOpSpec::Mvau {
+            apply_act: true,
+            out_mul: 1,
+            out_add: 0,
+        };
+        let mut want = Tensor::zeros_i32(vec![rows, n]);
+        execute_int_spec_into(&spec, &[&x32, &wi32, &bt, &tt], &mut want).unwrap();
+        // Packed acts x byte weights, output back into a u4 container.
+        let mut got = Tensor::zeros_typed(vec![rows, n], DType::U4);
+        execute_int_spec_into(&spec, &[&x4, &wi8, &bt, &tt], &mut got).unwrap();
+        assert_eq!(got.codes_i32(), want.codes_i32());
+
+        // Fully packed u4 x u4, wide i32 output, no activation.
+        let (w4, w32) = packed_i32_pair(vec![k, n], DType::U4, 62);
+        let spec = IntOpSpec::Mvau {
+            apply_act: false,
+            out_mul: 1,
+            out_add: 0,
+        };
+        let mut want = Tensor::zeros_i32(vec![rows, n]);
+        execute_int_spec_into(&spec, &[&x32, &w32, &bt], &mut want).unwrap();
+        let mut got = Tensor::zeros_i32(vec![rows, n]);
+        execute_int_spec_into(&spec, &[&x4, &w4, &bt], &mut got).unwrap();
+        assert_eq!(got.data_i32(), want.data_i32());
+    }
+
+    #[test]
+    fn xnor_b1_mvau_matches_i32_oracle_with_masked_tail() {
+        // k = 70 forces a partial second u64 word — the tail mask keeps
+        // xnor from counting the zero padding as agreement.
+        let (rows, k, n) = (5usize, 70usize, 9usize);
+        let (xb, x32) = packed_i32_pair(vec![rows, k], DType::B1, 63);
+        let (wb, w32) = packed_i32_pair(vec![k, n], DType::B1, 64);
+        let mut rng = crate::rng::Rng::new(65);
+        let bias: Vec<i32> = (0..n).map(|_| rng.below(20) as i32 - 10).collect();
+        let bt = Tensor::new_i32(vec![n], bias).unwrap();
+
+        // Raw accumulator output first.
+        let spec = IntOpSpec::Mvau {
+            apply_act: false,
+            out_mul: 1,
+            out_add: 0,
+        };
+        let mut want = Tensor::zeros_i32(vec![rows, n]);
+        execute_int_spec_into(&spec, &[&x32, &w32, &bt], &mut want).unwrap();
+        let mut got = Tensor::zeros_i32(vec![rows, n]);
+        execute_int_spec_into(&spec, &[&xb, &wb, &bt], &mut got).unwrap();
+        assert_eq!(got.data_i32(), want.data_i32());
+
+        // Fused sign activation back onto the bipolar grid: one threshold
+        // at 1 with q*2 - 1 maps acc >= 1 -> +1, else -1.
+        let tt = Tensor::new_i32(vec![1, 1], vec![1]).unwrap();
+        let spec = IntOpSpec::Mvau {
+            apply_act: true,
+            out_mul: 2,
+            out_add: -1,
+        };
+        let mut want = Tensor::zeros_i32(vec![rows, n]);
+        execute_int_spec_into(&spec, &[&x32, &w32, &bt, &tt], &mut want).unwrap();
+        let mut got = Tensor::zeros_typed(vec![rows, n], DType::B1);
+        execute_int_spec_into(&spec, &[&xb, &wb, &bt, &tt], &mut got).unwrap();
+        assert_eq!(got.codes_i32(), want.codes_i32());
+    }
+
+    #[test]
+    fn xnor_b1_mvau_exact_word_boundary() {
+        // k = 128 is exactly two u64 words: tail == 0 must mask nothing.
+        let (rows, k, n) = (2usize, 128usize, 3usize);
+        let (xb, x32) = packed_i32_pair(vec![rows, k], DType::B1, 66);
+        let (wb, w32) = packed_i32_pair(vec![k, n], DType::B1, 67);
+        let bt = Tensor::new_i32(vec![n], vec![0; n]).unwrap();
+        let spec = IntOpSpec::Mvau {
+            apply_act: false,
+            out_mul: 1,
+            out_add: 0,
+        };
+        let mut want = Tensor::zeros_i32(vec![rows, n]);
+        execute_int_spec_into(&spec, &[&x32, &w32, &bt], &mut want).unwrap();
+        let mut got = Tensor::zeros_i32(vec![rows, n]);
+        execute_int_spec_into(&spec, &[&xb, &wb, &bt], &mut got).unwrap();
+        assert_eq!(got.data_i32(), want.data_i32());
+    }
+
+    #[test]
+    fn subbyte_elementwise_ops_match_i32_oracle() {
+        let shape = vec![1, 4, 4, 2];
+        let (x4, x32) = packed_i32_pair(shape.clone(), DType::U4, 70);
+
+        // Threshold into a u4 container.
+        let t32 = Tensor::new_i32(vec![1, 3], vec![3, 7, 12]).unwrap();
+        let spec = IntOpSpec::Threshold {
+            layout: ChanLayout::Nhwc,
+            out_mul: 1,
+            out_add: 0,
+        };
+        let mut want = Tensor::zeros_i32(shape.clone());
+        execute_int_spec_into(&spec, &[&x32, &t32], &mut want).unwrap();
+        let mut got = Tensor::zeros_typed(shape.clone(), DType::U4);
+        execute_int_spec_into(&spec, &[&x4, &t32], &mut got).unwrap();
+        assert_eq!(got.codes_i32(), want.codes_i32());
+
+        // im2col preserves the packed container (zero pad is a valid u4).
+        let spec = IntOpSpec::Im2Col {
+            kernel: [3, 3],
+            stride: [1, 1],
+            pad: [1, 1],
+        };
+        let mut want = Tensor::zeros_i32(vec![1, 4, 4, 18]);
+        execute_int_spec_into(&spec, &[&x32], &mut want).unwrap();
+        let mut got = Tensor::zeros_typed(vec![1, 4, 4, 18], DType::U4);
+        execute_int_spec_into(&spec, &[&x4], &mut got).unwrap();
+        assert_eq!(got.codes_i32(), want.codes_i32());
+
+        // maxpool on packed codes.
+        let mut want = Tensor::zeros_i32(vec![1, 2, 2, 2]);
+        execute_int_spec_into(&IntOpSpec::MaxPoolNhwc, &[&x32], &mut want).unwrap();
+        let mut got = Tensor::zeros_typed(vec![1, 2, 2, 2], DType::U4);
+        execute_int_spec_into(&IntOpSpec::MaxPoolNhwc, &[&x4], &mut got).unwrap();
+        assert_eq!(got.codes_i32(), want.codes_i32());
+
+        // gap widens out of the packed container.
+        let mut want = Tensor::zeros_i32(vec![1, 2]);
+        execute_int_spec_into(&IntOpSpec::GlobalAccPool, &[&x32], &mut want).unwrap();
+        let mut got = Tensor::zeros_typed(vec![1, 2], DType::I16);
+        execute_int_spec_into(&IntOpSpec::GlobalAccPool, &[&x4], &mut got).unwrap();
+        assert_eq!(got.codes_i32(), want.codes_i32());
+
+        // add_streams mixing a packed and a byte container.
+        let flat = vec![32usize];
+        let (a4, a32) = packed_i32_pair(flat.clone(), DType::U4, 71);
+        let b8 = Tensor::new_i8(flat.clone(), (0..32).map(|i| i as i8 - 16).collect()).unwrap();
+        let b32 = Tensor::new_i32(flat.clone(), b8.codes_i32()).unwrap();
+        let spec = IntOpSpec::AddStreams { shift: [2, 0] };
+        let mut want = Tensor::zeros_i32(flat.clone());
+        execute_int_spec_into(&spec, &[&a32, &b32], &mut want).unwrap();
+        let mut got = Tensor::zeros_typed(flat.clone(), DType::I8);
+        execute_int_spec_into(&spec, &[&a4, &b8], &mut got).unwrap();
+        assert_eq!(got.codes_i32(), want.codes_i32());
+
+        // mul_scalar widening out of u4.
+        let spec = IntOpSpec::MulScalar { m: 9, data_input: 0 };
+        let mut want = Tensor::zeros_i32(flat.clone());
+        execute_int_spec_into(&spec, &[&a32], &mut want).unwrap();
+        let mut got = Tensor::zeros_typed(flat, DType::I8);
+        execute_int_spec_into(&spec, &[&a4], &mut got).unwrap();
+        assert_eq!(got.codes_i32(), want.codes_i32());
+    }
+
+    #[test]
+    fn bipolar_zero_pad_im2col_errors_loudly() {
+        // Zero padding has no bipolar code; the kernel must refuse rather
+        // than silently corrupt the patch.
+        let (xb, _) = packed_i32_pair(vec![1, 4, 4, 1], DType::B1, 72);
+        let spec = IntOpSpec::Im2Col {
+            kernel: [3, 3],
+            stride: [1, 1],
+            pad: [1, 1],
+        };
+        let mut out = Tensor::zeros_typed(vec![1, 4, 4, 9], DType::B1);
+        assert!(execute_int_spec_into(&spec, &[&xb], &mut out).is_err());
+        // Unpadded bipolar im2col is fine.
+        let spec = IntOpSpec::Im2Col {
+            kernel: [3, 3],
+            stride: [1, 1],
+            pad: [0, 0],
+        };
+        let mut out = Tensor::zeros_typed(vec![1, 2, 2, 9], DType::B1);
+        execute_int_spec_into(&spec, &[&xb], &mut out).unwrap();
+    }
+
+    #[test]
+    fn subbyte_container_overflow_is_an_error() {
+        // Code 18 does not fit a u4 container; the view store must refuse.
+        let x4 = Tensor::from_codes_packed(vec![4], &[1, 2, 6, 15], DType::U4).unwrap();
+        let spec = IntOpSpec::MulScalar { m: 3, data_input: 0 };
+        let mut out4 = Tensor::zeros_typed(vec![4], DType::U4);
+        assert!(execute_int_spec_into(&spec, &[&x4], &mut out4).is_err());
+        // The same product fits an i8 container.
+        let mut out8 = Tensor::zeros_typed(vec![4], DType::I8);
+        execute_int_spec_into(&spec, &[&x4], &mut out8).unwrap();
     }
 }

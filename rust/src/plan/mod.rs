@@ -149,6 +149,8 @@ impl PlanStep {
                     DType::I8 => "int8",
                     DType::I16 => "int16",
                     DType::I32 => "int32",
+                    DType::U4 => "int4",
+                    DType::U1 | DType::B1 => "int1",
                     DType::F32 => "int-f32-bug",
                 },
                 ingress => ingress,
@@ -182,6 +184,11 @@ pub struct PlanScratch {
     pool_i8: Vec<Vec<i8>>,
     pool_i16: Vec<Vec<i16>>,
     pool_i32: Vec<Vec<i32>>,
+    /// Sub-byte containers pool raw byte buffers: u4 nibble pairs in one
+    /// pool, u1/b1 bit buffers in the other (`Tensor::packed_from_buf`
+    /// zero-fills on reuse, so stale tail bits never leak).
+    pool_u4: Vec<Vec<u8>>,
+    pool_u1: Vec<Vec<u8>>,
     pub stats: ArenaStats,
 }
 
@@ -234,6 +241,8 @@ impl PlanScratch {
             TensorData::I8(v) => self.pool_i8.push(v),
             TensorData::I16(v) => self.pool_i16.push(v),
             TensorData::I32(v) => self.pool_i32.push(v),
+            TensorData::U4(p) => self.pool_u4.push(p.into_bytes()),
+            TensorData::U1(p) | TensorData::B1(p) => self.pool_u1.push(p.into_bytes()),
         }
     }
 
@@ -273,6 +282,15 @@ impl PlanScratch {
                 shape.to_vec(),
                 carve(&mut self.pool_i32, &mut self.stats, numel),
             ),
+            DType::U4 | DType::U1 | DType::B1 => {
+                let pool = if dtype == DType::U4 {
+                    &mut self.pool_u4
+                } else {
+                    &mut self.pool_u1
+                };
+                let bytes = carve(pool, &mut self.stats, dtype.bytes_for(numel));
+                Tensor::packed_from_buf(shape.to_vec(), bytes, dtype)
+            }
         }
     }
 }
@@ -381,8 +399,14 @@ pub struct ExecutionPlan {
     slot_names: Vec<String>,
     /// Bytes every run streams through the kernels: per step, the bytes
     /// of every input read plus the output written, at the slots' actual
-    /// container widths (DESIGN.md §9 bytes-moved accounting).
+    /// container widths, plus `egress_bytes` (DESIGN.md §9 bytes-moved
+    /// accounting).
     bytes_moved: u64,
+    /// Egress boundary traffic per frame: integer output codes read plus
+    /// the f32 features written by the caller's dequantize.  Zero on the
+    /// f32 datapath; included in `bytes_moved` but in no step's
+    /// `step_bytes` — the dequantize is not a plan step.
+    egress_bytes: u64,
     /// The same accounting, per step (same order as `steps`) — the
     /// bytes-per-call column of a [`PlanProfile`].
     step_bytes: Vec<u64>,
@@ -452,8 +476,23 @@ fn quantize_init(
     }
     let shape = t.shape().to_vec();
     if narrow {
-        // Same container-selection rule as the bt_container annotation.
+        // Same container-selection rule as the bt_container annotation —
+        // plus the code-set-aware bipolar case the range rule cannot
+        // see: weights spanning exactly {-1, +1} with no zero code pack
+        // into the 1-bit B1 container (the XNOR datapath operand).
+        if lo == -1 && hi == 1 && codes.iter().all(|&c| c != 0) {
+            let c32: Vec<i32> = codes.iter().map(|&c| c as i32).collect();
+            return Tensor::from_codes_packed(shape, &c32, DType::B1);
+        }
         match crate::fixedpoint::container_bits_for_range(lo, hi) {
+            1 => {
+                let c32: Vec<i32> = codes.iter().map(|&c| c as i32).collect();
+                return Tensor::from_codes_packed(shape, &c32, DType::U1);
+            }
+            4 => {
+                let c32: Vec<i32> = codes.iter().map(|&c| c as i32).collect();
+                return Tensor::from_codes_packed(shape, &c32, DType::U4);
+            }
             8 => return Tensor::new_i8(shape, codes.into_iter().map(|c| c as i8).collect()),
             16 => return Tensor::new_i16(shape, codes.into_iter().map(|c| c as i16).collect()),
             _ => {}
@@ -709,11 +748,22 @@ impl ExecutionPlan {
                             DType::I32
                         } else {
                             match bt_attr(node, "bt_container")? {
+                                // Container 1 is two code sets: bipolar
+                                // {-1, +1} (the XNOR datapath) vs binary
+                                // {0, 1} — the annotation disambiguates.
+                                1 => {
+                                    if node.attrs.int_or("bt_bipolar", 0) != 0 {
+                                        DType::B1
+                                    } else {
+                                        DType::U1
+                                    }
+                                }
+                                4 => DType::U4,
                                 8 => DType::I8,
                                 16 => DType::I16,
                                 32 => DType::I32,
                                 other => bail!(
-                                    "plan: node {} ({}): bad bt_container {other} (want 8/16/32)",
+                                    "plan: node {} ({}): bad bt_container {other} (want 1/4/8/16/32)",
                                     node.name,
                                     node.op
                                 ),
@@ -883,26 +933,44 @@ impl ExecutionPlan {
             let mut step_total = 0u64;
             for &s in &step.inputs {
                 let s = s as usize;
-                let (numel, sz) = if let Some(t) = init[s].as_ref() {
-                    (t.numel(), t.dtype().size_bytes())
+                let bytes = if let Some(t) = init[s].as_ref() {
+                    t.dtype().bytes_for(t.numel())
                 } else if let Some(p) = produced_by[s] {
-                    (
-                        steps[p].out_shape.iter().product(),
-                        steps[p].out_dtype.size_bytes(),
-                    )
+                    steps[p]
+                        .out_dtype
+                        .bytes_for(steps[p].out_shape.iter().product())
                 } else {
-                    (
-                        known[s].as_ref().map(|sh| sh.iter().product()).unwrap_or(0),
-                        4,
-                    )
+                    known[s].as_ref().map(|sh| sh.iter().product()).unwrap_or(0) * 4
                 };
-                step_total += (numel * sz) as u64;
+                step_total += bytes as u64;
             }
-            step_total +=
-                (step.out_shape.iter().product::<usize>() * step.out_dtype.size_bytes()) as u64;
+            step_total += step
+                .out_dtype
+                .bytes_for(step.out_shape.iter().product::<usize>())
+                as u64;
             step_bytes.push(step_total);
             bytes_moved += step_total;
         }
+
+        // Boundary traffic the bandwidth model must see: a bit-true
+        // plan's caller feeds f32 frames in and reads f32 features out.
+        // The ingress quantize read is already counted above (feed
+        // slots are read at f32 width by their consuming step); the
+        // egress dequantize — integer codes read + f32 features written
+        // by the PlanRunner — is not a plan step, so add it here.  Not
+        // part of `step_bytes`: the per-step profile measures kernel
+        // execution only.
+        let mut egress_bytes = 0u64;
+        for ((_, slot), frac) in outputs.iter().zip(&out_fracs) {
+            if frac.is_none() {
+                continue;
+            }
+            if let Some(p) = produced_by[*slot as usize] {
+                let numel: usize = steps[p].out_shape.iter().product();
+                egress_bytes += steps[p].out_dtype.bytes_for(numel) as u64 + 4 * numel as u64;
+            }
+        }
+        bytes_moved += egress_bytes;
 
         Ok(Self {
             name: graph.name.clone(),
@@ -916,6 +984,7 @@ impl ExecutionPlan {
             init,
             slot_names,
             bytes_moved,
+            egress_bytes,
             step_bytes,
         })
     }
@@ -943,8 +1012,9 @@ impl ExecutionPlan {
     /// bit-true plan must contain no "f32" variant, exactly one
     /// "ingress-quant" and at most one "ingress-f32" layout conversion;
     /// every steady-state step reports the container width its output is
-    /// stored at ("int8" / "int16" / "int32"), so tests can audit not
-    /// just *that* a step ran integer kernels but *how wide*.
+    /// stored at ("int1" / "int4" / "int8" / "int16" / "int32"), so tests
+    /// can audit not just *that* a step ran integer kernels but *how
+    /// wide*.
     pub fn kernel_variants(&self) -> Vec<(String, &'static str)> {
         self.steps
             .iter()
@@ -959,6 +1029,15 @@ impl ExecutionPlan {
     /// [`ExecutionPlan::compile_bit_true_wide`] for the i32 baseline.
     pub fn bytes_moved_per_frame(&self) -> u64 {
         self.bytes_moved
+    }
+
+    /// The egress-boundary share of [`Self::bytes_moved_per_frame`]:
+    /// integer output codes read plus f32 features written when the
+    /// caller dequantizes a bit-true plan's outputs (zero on the f32
+    /// datapath).  A [`PlanProfile`] measures kernel steps only, so
+    /// `profile.total_bytes() == runs * (bytes_moved - egress_bytes)`.
+    pub fn egress_bytes_per_frame(&self) -> u64 {
+        self.egress_bytes
     }
 
     pub fn num_steps(&self) -> usize {
@@ -1396,6 +1475,12 @@ impl PlanRunner {
                     TensorData::I32(codes) => {
                         feats.extend(codes.iter().map(|&c| (c as f64 / scale) as f32))
                     }
+                    TensorData::U4(_) | TensorData::U1(_) | TensorData::B1(_) => {
+                        let view = t.code_view().expect("packed tensor has a code view");
+                        feats.extend(
+                            (0..t.numel()).map(|i| (view.get(i) as f64 / scale) as f32),
+                        );
+                    }
                     TensorData::F32(_) => unreachable!("handled above"),
                 }
             }
@@ -1676,13 +1761,13 @@ mod tests {
         }
         // Ingress quantizer + one steady-state integer threshold — no
         // "f32" kernel anywhere; the second threshold's codes span
-        // [0, 2], so they pack into an i8 container.
+        // [0, 2], so they pack into a u4 nibble container.
         let variants = int_plan.kernel_variants();
         assert_eq!(
             variants,
             vec![
                 ("MultiThreshold".to_string(), "ingress-quant"),
-                ("MultiThreshold".to_string(), "int8"),
+                ("MultiThreshold".to_string(), "int4"),
             ]
         );
     }
@@ -1697,7 +1782,7 @@ mod tests {
         assert!(wide
             .kernel_variants()
             .iter()
-            .all(|(_, v)| *v != "int8" && *v != "int16"));
+            .all(|(_, v)| *v != "int8" && *v != "int16" && *v != "int4" && *v != "int1"));
         let mut feeds = HashMap::new();
         feeds.insert(
             "x".to_string(),
@@ -1706,7 +1791,7 @@ mod tests {
         let a = packed.run(&feeds).unwrap();
         let b = wide.run(&feeds).unwrap();
         assert_eq!(a["y"].codes_i32(), b["y"].codes_i32());
-        assert_eq!(a["y"].dtype(), DType::I8);
+        assert_eq!(a["y"].dtype(), DType::U4);
         assert_eq!(b["y"].dtype(), DType::I32);
         assert!(
             packed.bytes_moved_per_frame() < wide.bytes_moved_per_frame(),

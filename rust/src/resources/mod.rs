@@ -96,6 +96,12 @@ pub struct Device {
     pub budget: Resources,
     /// Fabric clock in MHz (the paper runs the FINN build at 125 MHz).
     pub clock_mhz: f64,
+    /// Sustainable DMA bandwidth between host memory and the fabric in
+    /// bytes/s — one 64-bit AXI HP port at the fabric clock for the
+    /// Zynq-7000 parts.  Frames stream in and out over this link, so
+    /// `bandwidth / bytes_per_frame` is a throughput ceiling independent
+    /// of the compute initiation interval.
+    pub dma_bandwidth_bytes_per_s: f64,
 }
 
 impl Device {
@@ -105,6 +111,8 @@ impl Device {
             name: "PYNQ-Z1 (Zynq-7020)",
             budget: Resources::new(53_200.0, 106_400.0, 140.0, 220.0),
             clock_mhz: 125.0,
+            // 64-bit HP port at 125 MHz: 8 B x 125e6 = 1.0 GB/s.
+            dma_bandwidth_bytes_per_s: 1.0e9,
         }
     }
 
@@ -114,6 +122,19 @@ impl Device {
 
     pub fn fps(&self, cycles_per_frame: u64) -> f64 {
         self.clock_mhz * 1e6 / cycles_per_frame as f64
+    }
+
+    /// Achievable-fps ceiling from streaming `bytes_per_frame` over the
+    /// DMA link — the bandwidth axis that sits alongside the dataflow
+    /// sim's initiation-interval bound.  Narrow packed containers lower
+    /// bytes-per-frame and raise this ceiling; a config whose II-fps
+    /// exceeds it is DMA-bound, not compute-bound.
+    pub fn bandwidth_fps_ceiling(&self, bytes_per_frame: u64) -> f64 {
+        if bytes_per_frame == 0 {
+            f64::INFINITY
+        } else {
+            self.dma_bandwidth_bytes_per_s / bytes_per_frame as f64
+        }
     }
 }
 
@@ -195,6 +216,16 @@ mod tests {
         assert_eq!(bram36_for(2048, 36), 2.0);
         // Wide shallow memory wastes depth: 16 x 288 bits -> 4 blocks.
         assert_eq!(bram36_for(16, 288), 4.0);
+    }
+
+    #[test]
+    fn bandwidth_ceiling_scales_with_bytes() {
+        let d = Device::pynq_z1();
+        assert_eq!(d.dma_bandwidth_bytes_per_s, 1.0e9);
+        // 1 MB/frame over 1 GB/s -> 1000 fps; half the bytes doubles it.
+        assert!((d.bandwidth_fps_ceiling(1_000_000) - 1000.0).abs() < 1e-9);
+        assert!((d.bandwidth_fps_ceiling(500_000) - 2000.0).abs() < 1e-9);
+        assert!(d.bandwidth_fps_ceiling(0).is_infinite());
     }
 
     #[test]

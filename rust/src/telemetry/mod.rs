@@ -38,6 +38,13 @@ pub const TELEMETRY_SCHEMA: &str = "bwade/telemetry/v1";
 /// `>= 2^38` (~76 hours when recording microseconds).
 pub const HIST_BUCKETS: usize = 40;
 
+/// Largest quantile value the bucketed histogram can report as a real
+/// measurement: the inclusive upper bound of the last finite bucket
+/// (`2^38 - 1`).  A rank landing in the explicit overflow bucket has no
+/// finite upper bound — exposition layers clamp to this value and flag
+/// it instead of passing `u64::MAX` off as a measurement.
+pub const HIST_MAX_FINITE: u64 = (1u64 << (HIST_BUCKETS - 2)) - 1;
+
 /// Monotonic event counter.
 #[derive(Debug, Default)]
 pub struct Counter(AtomicU64);
@@ -217,17 +224,37 @@ impl HistogramSnapshot {
         bucket_upper(HIST_BUCKETS - 1)
     }
 
+    /// [`Self::quantile`] with overflow made explicit: `(value,
+    /// saturated)`.  A rank landing in the overflow bucket clamps to
+    /// [`HIST_MAX_FINITE`] with `saturated = true` — the true value is
+    /// only known to be *at least* that, and `u64::MAX` must never be
+    /// reported as if it were measured.
+    pub fn quantile_clamped(&self, p: f64) -> (u64, bool) {
+        let v = self.quantile(p);
+        if v > HIST_MAX_FINITE {
+            (HIST_MAX_FINITE, true)
+        } else {
+            (v, false)
+        }
+    }
+
     fn to_json(&self) -> Json {
         // Trim trailing empty buckets — deterministic and keeps the
         // document readable; count/sum preserve the full information.
         let last = self.buckets.iter().rposition(|&n| n != 0).map_or(0, |i| i + 1);
+        let (p50, s50) = self.quantile_clamped(50.0);
+        let (p95, s95) = self.quantile_clamped(95.0);
+        let (p99, s99) = self.quantile_clamped(99.0);
         json::obj(vec![
             ("count", Json::num(self.count as f64)),
             ("sum", Json::num(self.sum as f64)),
             ("mean", Json::num(self.mean())),
-            ("p50", Json::num(self.quantile(50.0) as f64)),
-            ("p95", Json::num(self.quantile(95.0) as f64)),
-            ("p99", Json::num(self.quantile(99.0) as f64)),
+            ("p50", Json::num(p50 as f64)),
+            ("p95", Json::num(p95 as f64)),
+            ("p99", Json::num(p99 as f64)),
+            // True when any quantile above ranked into the overflow
+            // bucket: those fields are clamped floors, not measurements.
+            ("quantiles_saturated", Json::Bool(s50 || s95 || s99)),
             ("overflow", Json::num(self.overflow() as f64)),
             (
                 "buckets",
@@ -376,11 +403,14 @@ impl RegistrySnapshot {
             parts.push(format!("{k}={v}"));
         }
         for (k, v) in &self.histograms {
+            // A saturated p95 is a floor, not a measurement — print it
+            // as `p95>=` so the log never passes u64::MAX off as real.
+            let (p95, saturated) = v.quantile_clamped(95.0);
+            let cmp = if saturated { ">=" } else { "=" };
             parts.push(format!(
-                "{k}{{n={} mean={:.0} p95={}}}",
+                "{k}{{n={} mean={:.0} p95{cmp}{p95}}}",
                 v.count,
                 v.mean(),
-                v.quantile(95.0)
             ));
         }
         if parts.is_empty() {
@@ -492,6 +522,56 @@ mod tests {
         // p100 ranks to the last sample (1000, bucket [512,1023]).
         assert_eq!(s.quantile(100.0), 1023);
         assert_eq!(s.overflow(), 0);
+    }
+
+    #[test]
+    fn overflow_quantiles_clamp_and_flag() {
+        let h = Histogram::new();
+        h.record(3);
+        h.record(3);
+        h.record(u64::MAX);
+        let s = h.snapshot();
+        // p50 ranks inside a finite bucket: clamping is a no-op.
+        assert_eq!(s.quantile_clamped(50.0), (3, false));
+        // p100 ranks into the overflow bucket: the raw estimate still
+        // saturates to u64::MAX, but the clamped view reports the last
+        // finite bucket's upper bound and flags it.
+        assert_eq!(s.quantile(100.0), u64::MAX);
+        assert_eq!(s.quantile_clamped(100.0), (HIST_MAX_FINITE, true));
+        assert_eq!(HIST_MAX_FINITE, (1u64 << 38) - 1);
+
+        // The JSON exposition uses the clamped values and carries the
+        // saturation flag so consumers can tell floor from measurement.
+        let r = Registry::new();
+        r.histogram("lat").record(3);
+        r.histogram("lat").record(3);
+        r.histogram("lat").record(u64::MAX);
+        let doc = r.snapshot().to_json();
+        let lat = doc.get("histograms").unwrap().get("lat").unwrap();
+        assert_eq!(lat.get("p99").unwrap().as_f64().unwrap(), HIST_MAX_FINITE as f64);
+        assert!(lat.get("quantiles_saturated").unwrap().as_bool().unwrap());
+
+        // A histogram with no overflow samples reports the flag false.
+        let r2 = Registry::new();
+        r2.histogram("ok").record(5);
+        let doc2 = r2.snapshot().to_json();
+        let ok = doc2.get("histograms").unwrap().get("ok").unwrap();
+        assert!(!ok.get("quantiles_saturated").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn summary_line_flags_saturated_quantiles() {
+        let r = Registry::new();
+        r.histogram("lat").record(u64::MAX);
+        let line = r.snapshot().summary_line();
+        assert!(
+            line.contains("p95>=274877906943"),
+            "saturated p95 must print as a flagged floor: {line}"
+        );
+        let r2 = Registry::new();
+        r2.histogram("lat").record(100);
+        let line2 = r2.snapshot().summary_line();
+        assert!(line2.contains("p95=127"), "finite p95 prints plainly: {line2}");
     }
 
     #[test]

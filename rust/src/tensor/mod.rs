@@ -20,31 +20,258 @@
 //! `i32` for arithmetic while keeping storage (and therefore bandwidth)
 //! width-native.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 /// Element type of a [`Tensor`].
+///
+/// `U4` / `U1` / `B1` are true sub-byte containers: two codes per byte
+/// (nibbles, low nibble first) and eight codes per byte (bits, LSB
+/// first).  `U1` holds binary codes {0, 1}; `B1` holds bipolar codes
+/// {-1, +1} with bit 1 ↔ +1 — the FINN XNOR-popcount encoding.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
     F32,
     I8,
     I16,
     I32,
+    U4,
+    U1,
+    B1,
 }
 
 impl DType {
-    /// Storage bytes per element — the unit of the bytes-moved-per-frame
-    /// accounting (DESIGN.md §9).
+    /// Storage bytes per element.  Panics on the sub-byte containers —
+    /// they have no per-element byte size; use [`DType::bytes_for`] for
+    /// the bytes-moved-per-frame accounting (DESIGN.md §9).
     pub fn size_bytes(self) -> usize {
         match self {
             DType::I8 => 1,
             DType::I16 => 2,
             DType::F32 | DType::I32 => 4,
+            DType::U4 | DType::U1 | DType::B1 => {
+                panic!("size_bytes() on sub-byte container {self:?}; use DType::bytes_for")
+            }
         }
+    }
+
+    /// Storage bits per code — the container width.
+    pub fn bits(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 32,
+            DType::I16 => 16,
+            DType::I8 => 8,
+            DType::U4 => 4,
+            DType::U1 | DType::B1 => 1,
+        }
+    }
+
+    /// Bytes a contiguous buffer of `numel` elements occupies, rounding
+    /// the sub-byte tail up to a whole byte — the unit of the
+    /// bytes-moved-per-frame accounting (DESIGN.md §9).
+    pub fn bytes_for(self, numel: usize) -> usize {
+        (numel * self.bits() + 7) / 8
     }
 
     /// True for the integer-code payloads (everything but `F32`).
     pub fn is_int(self) -> bool {
         self != DType::F32
+    }
+
+    /// True for the bit-packed sub-byte containers.
+    pub fn is_packed(self) -> bool {
+        matches!(self, DType::U4 | DType::U1 | DType::B1)
+    }
+}
+
+// ------------------------------------------------------ sub-byte codecs
+
+/// Pack u4 codes (each in 0..=15) two per byte, low nibble first; a
+/// trailing odd code leaves the high nibble of the last byte zero.
+pub fn pack_u4(codes: &[i32]) -> Result<Vec<u8>> {
+    let mut bytes = vec![0u8; (codes.len() + 1) / 2];
+    for (i, &c) in codes.iter().enumerate() {
+        if !(0..=15).contains(&c) {
+            bail!("pack_u4: code {c} at index {i} outside the u4 range 0..=15");
+        }
+        bytes[i / 2] |= (c as u8) << ((i & 1) * 4);
+    }
+    Ok(bytes)
+}
+
+/// Inverse of [`pack_u4`]: the first `len` nibbles as codes.
+pub fn unpack_u4(bytes: &[u8], len: usize) -> Vec<i32> {
+    (0..len)
+        .map(|i| ((bytes[i / 2] >> ((i & 1) * 4)) & 0xF) as i32)
+        .collect()
+}
+
+/// Pack 1-bit codes eight per byte, LSB first.  `bipolar` selects the
+/// encoding: binary codes {0, 1} store the code as the bit; bipolar
+/// codes {-1, +1} store bit 1 for +1 (tail bits of the last byte are
+/// zero-padded in both encodings).
+pub fn pack_u1(codes: &[i32], bipolar: bool) -> Result<Vec<u8>> {
+    let mut bytes = vec![0u8; (codes.len() + 7) / 8];
+    for (i, &c) in codes.iter().enumerate() {
+        let bit = match (bipolar, c) {
+            (false, 0) | (true, -1) => 0u8,
+            (false, 1) | (true, 1) => 1u8,
+            _ => bail!(
+                "pack_u1: code {c} at index {i} outside the {} set",
+                if bipolar { "bipolar {-1, +1}" } else { "binary {0, 1}" }
+            ),
+        };
+        bytes[i / 8] |= bit << (i & 7);
+    }
+    Ok(bytes)
+}
+
+/// Inverse of [`pack_u1`]: the first `len` bits as codes.
+pub fn unpack_u1(bytes: &[u8], len: usize, bipolar: bool) -> Vec<i32> {
+    (0..len)
+        .map(|i| {
+            let b = ((bytes[i / 8] >> (i & 7)) & 1) as i32;
+            if bipolar {
+                2 * b - 1
+            } else {
+                b
+            }
+        })
+        .collect()
+}
+
+/// Bit-packed nibble payload: two u4 codes per byte, low nibble first.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedU4 {
+    bytes: Vec<u8>,
+    len: usize,
+}
+
+impl PackedU4 {
+    pub fn from_codes(codes: &[i32]) -> Result<Self> {
+        Ok(Self {
+            bytes: pack_u4(codes)?,
+            len: codes.len(),
+        })
+    }
+
+    pub fn zeros(len: usize) -> Self {
+        Self {
+            bytes: vec![0u8; (len + 1) / 2],
+            len,
+        }
+    }
+
+    /// Wrap a recycled byte buffer (the arena path): resized to hold
+    /// `len` nibbles and zero-filled, so stale bits from a previous
+    /// frame never leak into tail padding.
+    pub fn from_buf(mut bytes: Vec<u8>, len: usize) -> Self {
+        bytes.clear();
+        bytes.resize((len + 1) / 2, 0);
+        Self { bytes, len }
+    }
+
+    /// Surrender the byte buffer (back to the arena pool).
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    #[inline(always)]
+    pub fn get(&self, i: usize) -> i32 {
+        ((self.bytes[i / 2] >> ((i & 1) * 4)) & 0xF) as i32
+    }
+
+    /// Overwrite code `i` (must be in 0..=15).
+    #[inline]
+    pub fn set(&mut self, i: usize, c: i32) -> Result<()> {
+        if !(0..=15).contains(&c) {
+            bail!("PackedU4::set: code {c} outside the u4 range 0..=15");
+        }
+        let shift = (i & 1) * 4;
+        let b = &mut self.bytes[i / 2];
+        *b = (*b & !(0xF << shift)) | ((c as u8) << shift);
+        Ok(())
+    }
+
+    pub fn to_codes(&self) -> Vec<i32> {
+        unpack_u4(&self.bytes, self.len)
+    }
+}
+
+/// Bit-packed 1-bit payload: eight codes per byte, LSB first.  Shared
+/// by the `U1` (binary, code = bit) and `B1` (bipolar, code = 2·bit−1)
+/// containers — the variant selects the decoding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedU1 {
+    bytes: Vec<u8>,
+    len: usize,
+}
+
+impl PackedU1 {
+    pub fn from_codes(codes: &[i32], bipolar: bool) -> Result<Self> {
+        Ok(Self {
+            bytes: pack_u1(codes, bipolar)?,
+            len: codes.len(),
+        })
+    }
+
+    pub fn zeros(len: usize) -> Self {
+        Self {
+            bytes: vec![0u8; (len + 7) / 8],
+            len,
+        }
+    }
+
+    /// Wrap a recycled byte buffer (see [`PackedU4::from_buf`]).
+    pub fn from_buf(mut bytes: Vec<u8>, len: usize) -> Self {
+        bytes.clear();
+        bytes.resize((len + 7) / 8, 0);
+        Self { bytes, len }
+    }
+
+    /// Surrender the byte buffer (back to the arena pool).
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// The raw bit (0 or 1) at code index `i`.
+    #[inline(always)]
+    pub fn bit(&self, i: usize) -> i32 {
+        ((self.bytes[i / 8] >> (i & 7)) & 1) as i32
+    }
+
+    /// Overwrite bit `i`.
+    #[inline]
+    pub fn set_bit(&mut self, i: usize, bit: u8) {
+        let b = &mut self.bytes[i / 8];
+        *b = (*b & !(1 << (i & 7))) | ((bit & 1) << (i & 7));
+    }
+
+    pub fn to_codes(&self, bipolar: bool) -> Vec<i32> {
+        unpack_u1(&self.bytes, self.len, bipolar)
     }
 }
 
@@ -55,6 +282,9 @@ pub enum TensorData {
     I8(Vec<i8>),
     I16(Vec<i16>),
     I32(Vec<i32>),
+    U4(PackedU4),
+    U1(PackedU1),
+    B1(PackedU1),
 }
 
 impl TensorData {
@@ -64,6 +294,8 @@ impl TensorData {
             TensorData::I8(v) => v.len(),
             TensorData::I16(v) => v.len(),
             TensorData::I32(v) => v.len(),
+            TensorData::U4(p) => p.len(),
+            TensorData::U1(p) | TensorData::B1(p) => p.len(),
         }
     }
 
@@ -77,7 +309,110 @@ impl TensorData {
             TensorData::I8(_) => DType::I8,
             TensorData::I16(_) => DType::I16,
             TensorData::I32(_) => DType::I32,
+            TensorData::U4(_) => DType::U4,
+            TensorData::U1(_) => DType::U1,
+            TensorData::B1(_) => DType::B1,
         }
+    }
+}
+
+/// Read-only width-generic view over any integer-code payload — the
+/// dispatch seam for kernels that must accept packed sub-byte operands
+/// (the byte-aligned monomorphized kernels stay the fast path).
+#[derive(Clone, Copy)]
+pub enum CodeView<'a> {
+    I8(&'a [i8]),
+    I16(&'a [i16]),
+    I32(&'a [i32]),
+    U4(&'a PackedU4),
+    U1(&'a PackedU1),
+    B1(&'a PackedU1),
+}
+
+impl<'a> CodeView<'a> {
+    pub fn len(&self) -> usize {
+        match self {
+            CodeView::I8(v) => v.len(),
+            CodeView::I16(v) => v.len(),
+            CodeView::I32(v) => v.len(),
+            CodeView::U4(p) => p.len(),
+            CodeView::U1(p) | CodeView::B1(p) => p.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The code value at flat index `i`, widened to i32.
+    #[inline(always)]
+    pub fn get(&self, i: usize) -> i32 {
+        match self {
+            CodeView::I8(v) => v[i] as i32,
+            CodeView::I16(v) => v[i] as i32,
+            CodeView::I32(v) => v[i],
+            CodeView::U4(p) => p.get(i),
+            CodeView::U1(p) => p.bit(i),
+            CodeView::B1(p) => 2 * p.bit(i) - 1,
+        }
+    }
+}
+
+/// Mutable width-generic code writer; `set` checks the value against
+/// the container's representable set (overflow is a datapath error,
+/// never a silent wrap).
+pub enum CodeViewMut<'a> {
+    I8(&'a mut [i8]),
+    I16(&'a mut [i16]),
+    I32(&'a mut [i32]),
+    U4(&'a mut PackedU4),
+    U1(&'a mut PackedU1),
+    B1(&'a mut PackedU1),
+}
+
+impl<'a> CodeViewMut<'a> {
+    pub fn len(&self) -> usize {
+        match self {
+            CodeViewMut::I8(v) => v.len(),
+            CodeViewMut::I16(v) => v.len(),
+            CodeViewMut::I32(v) => v.len(),
+            CodeViewMut::U4(p) => p.len(),
+            CodeViewMut::U1(p) | CodeViewMut::B1(p) => p.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: i64) -> Result<()> {
+        match self {
+            CodeViewMut::I8(s) => {
+                s[i] = i8::try_from(v)
+                    .map_err(|_| anyhow!("value {v} overflows the I8 container"))?
+            }
+            CodeViewMut::I16(s) => {
+                s[i] = i16::try_from(v)
+                    .map_err(|_| anyhow!("value {v} overflows the I16 container"))?
+            }
+            CodeViewMut::I32(s) => {
+                s[i] = i32::try_from(v)
+                    .map_err(|_| anyhow!("value {v} overflows the I32 container"))?
+            }
+            CodeViewMut::U4(p) => p.set(i, i32::try_from(v).unwrap_or(-1))?,
+            CodeViewMut::U1(p) => match v {
+                0 => p.set_bit(i, 0),
+                1 => p.set_bit(i, 1),
+                _ => bail!("value {v} outside the binary U1 set {{0, 1}}"),
+            },
+            CodeViewMut::B1(p) => match v {
+                -1 => p.set_bit(i, 0),
+                1 => p.set_bit(i, 1),
+                _ => bail!("value {v} outside the bipolar B1 set {{-1, +1}}"),
+            },
+        }
+        Ok(())
     }
 }
 
@@ -201,7 +536,9 @@ impl Tensor {
         Self::zeros_typed(shape, DType::I32)
     }
 
-    /// Zero tensor of any element type (codes are 0 on every grid).
+    /// Zero tensor of any element type (codes are 0 on every grid;
+    /// `B1`'s all-zero bits decode to −1 — a bipolar buffer is only
+    /// valid once a kernel has fully overwritten it).
     pub fn zeros_typed(shape: Vec<usize>, dtype: DType) -> Self {
         let numel = shape.iter().product();
         let data = match dtype {
@@ -209,8 +546,42 @@ impl Tensor {
             DType::I8 => TensorData::I8(vec![0; numel]),
             DType::I16 => TensorData::I16(vec![0; numel]),
             DType::I32 => TensorData::I32(vec![0; numel]),
+            DType::U4 => TensorData::U4(PackedU4::zeros(numel)),
+            DType::U1 => TensorData::U1(PackedU1::zeros(numel)),
+            DType::B1 => TensorData::B1(PackedU1::zeros(numel)),
         };
         Self { shape, data }
+    }
+
+    /// Bit-packed code tensor: pack `codes` into the sub-byte container
+    /// `dtype` (`U4`, `U1` or `B1`), checking every code against the
+    /// container's representable set.
+    pub fn from_codes_packed(shape: Vec<usize>, codes: &[i32], dtype: DType) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        if numel != codes.len() {
+            bail!("shape {shape:?} wants {numel} elems, got {}", codes.len());
+        }
+        let data = match dtype {
+            DType::U4 => TensorData::U4(PackedU4::from_codes(codes)?),
+            DType::U1 => TensorData::U1(PackedU1::from_codes(codes, false)?),
+            DType::B1 => TensorData::B1(PackedU1::from_codes(codes, true)?),
+            other => bail!("from_codes_packed: {other:?} is not a sub-byte container"),
+        };
+        Ok(Self { shape, data })
+    }
+
+    /// Packed sub-byte tensor over a recycled byte buffer (the arena
+    /// path): the buffer is resized to `bytes_for(numel)` and
+    /// zero-filled, so stale bits from a previous frame never leak.
+    pub fn packed_from_buf(shape: Vec<usize>, bytes: Vec<u8>, dtype: DType) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        let data = match dtype {
+            DType::U4 => TensorData::U4(PackedU4::from_buf(bytes, numel)),
+            DType::U1 => TensorData::U1(PackedU1::from_buf(bytes, numel)),
+            DType::B1 => TensorData::B1(PackedU1::from_buf(bytes, numel)),
+            other => bail!("packed_from_buf: {other:?} is not a sub-byte container"),
+        };
+        Ok(Self { shape, data })
     }
 
     pub fn full(shape: Vec<usize>, value: f32) -> Self {
@@ -333,7 +704,43 @@ impl Tensor {
             TensorData::I8(v) => v.iter().map(|&c| c as i32).collect(),
             TensorData::I16(v) => v.iter().map(|&c| c as i32).collect(),
             TensorData::I32(v) => v.clone(),
+            TensorData::U4(p) => p.to_codes(),
+            TensorData::U1(p) => p.to_codes(false),
+            TensorData::B1(p) => p.to_codes(true),
         }
+    }
+
+    /// Width-generic read view over any integer-code payload (packed
+    /// containers included); `None` on f32.
+    pub fn code_view(&self) -> Option<CodeView<'_>> {
+        Some(match &self.data {
+            TensorData::F32(_) => return None,
+            TensorData::I8(v) => CodeView::I8(v),
+            TensorData::I16(v) => CodeView::I16(v),
+            TensorData::I32(v) => CodeView::I32(v),
+            TensorData::U4(p) => CodeView::U4(p),
+            TensorData::U1(p) => CodeView::U1(p),
+            TensorData::B1(p) => CodeView::B1(p),
+        })
+    }
+
+    /// Width-generic write view over any integer-code payload; `None`
+    /// on f32.
+    pub fn code_view_mut(&mut self) -> Option<CodeViewMut<'_>> {
+        Some(match &mut self.data {
+            TensorData::F32(_) => return None,
+            TensorData::I8(v) => CodeViewMut::I8(v),
+            TensorData::I16(v) => CodeViewMut::I16(v),
+            TensorData::I32(v) => CodeViewMut::I32(v),
+            TensorData::U4(p) => CodeViewMut::U4(p),
+            TensorData::U1(p) => CodeViewMut::U1(p),
+            TensorData::B1(p) => CodeViewMut::B1(p),
+        })
+    }
+
+    /// Storage bytes of this tensor's payload (sub-byte tails rounded up).
+    pub fn storage_bytes(&self) -> usize {
+        self.dtype().bytes_for(self.numel())
     }
 
     /// Dtype-agnostic payload access (kernel dispatch and the arena).
@@ -374,7 +781,11 @@ impl Tensor {
     }
 
     pub fn at(&self, idx: &[usize]) -> f32 {
-        debug_assert_eq!(
+        // Arity is checked unconditionally: a rank mismatch in release
+        // would otherwise silently read the wrong element (the kernels
+        // never come through this accessor, so the check is free where
+        // it matters).
+        assert_eq!(
             idx.len(),
             self.shape.len(),
             "at(): index arity {} != tensor rank {}",
@@ -395,7 +806,8 @@ impl Tensor {
     }
 
     pub fn set(&mut self, idx: &[usize], v: f32) {
-        debug_assert_eq!(
+        // Always-on arity check; see `at`.
+        assert_eq!(
             idx.len(),
             self.shape.len(),
             "set(): index arity {} != tensor rank {}",
@@ -451,6 +863,35 @@ impl Tensor {
         }
         let in_strides = self.strides();
         let out_strides = strides_of(&out_shape);
+        if self.dtype().is_packed() || out.dtype().is_packed() {
+            if self.dtype() != out.dtype() {
+                bail!(
+                    "transpose_into: dtype mismatch ({:?} -> {:?})",
+                    self.dtype(),
+                    out.dtype()
+                );
+            }
+            // Sub-byte transpose: bit-addressed get/set (cold path — the
+            // lowered graphs only transpose at the f32 ingress).
+            let view = self.code_view().expect("packed payload");
+            let rank = perm.len();
+            let n = out.numel();
+            let mut dstv = out.code_view_mut().expect("packed payload");
+            let mut idx = vec![0usize; rank];
+            for o in 0..n {
+                let mut rem = o;
+                for d in 0..rank {
+                    idx[d] = rem / out_strides[d];
+                    rem %= out_strides[d];
+                }
+                let mut in_off = 0;
+                for d in 0..rank {
+                    in_off += idx[d] * in_strides[perm[d]];
+                }
+                dstv.set(o, view.get(in_off) as i64)?;
+            }
+            return Ok(());
+        }
         match (&self.data, &mut out.data) {
             (TensorData::F32(src), TensorData::F32(dst)) => {
                 transpose_copy(src, dst, &in_strides, &out_strides, perm)
@@ -903,6 +1344,118 @@ mod tests {
         // Mixed-container transpose_into is a dtype error, not a cast.
         let mut wide = Tensor::zeros_i32(vec![3, 2]);
         assert!(t.transpose_into(&[1, 0], &mut wide).is_err());
+    }
+
+    // ------------------------------------------------- sub-byte codecs
+
+    #[test]
+    fn u4_codec_round_trips_all_codes_and_tails() {
+        // All code values × odd/even lengths × tail bytes.
+        for len in 0..=33 {
+            let codes: Vec<i32> = (0..len).map(|i| (i * 7 + 3) as i32 % 16).collect();
+            let bytes = pack_u4(&codes).unwrap();
+            assert_eq!(bytes.len(), (len + 1) / 2);
+            assert_eq!(unpack_u4(&bytes, len), codes);
+            if len % 2 == 1 {
+                // Odd tail: the high nibble of the last byte is padding.
+                assert_eq!(bytes[len / 2] >> 4, 0, "tail nibble not zero at len {len}");
+            }
+        }
+        // Every representable code survives.
+        let all: Vec<i32> = (0..16).collect();
+        assert_eq!(unpack_u4(&pack_u4(&all).unwrap(), 16), all);
+        // Out-of-range codes are an error, not a wrap.
+        assert!(pack_u4(&[16]).is_err());
+        assert!(pack_u4(&[-1]).is_err());
+    }
+
+    #[test]
+    fn u1_codec_round_trips_binary_and_bipolar() {
+        for len in 0..=25 {
+            let bin: Vec<i32> = (0..len).map(|i| ((i * 5 + 1) % 3 == 0) as i32).collect();
+            let bytes = pack_u1(&bin, false).unwrap();
+            assert_eq!(bytes.len(), (len + 7) / 8);
+            assert_eq!(unpack_u1(&bytes, len, false), bin);
+            let bip: Vec<i32> = bin.iter().map(|&b| 2 * b - 1).collect();
+            let bytes = pack_u1(&bip, true).unwrap();
+            assert_eq!(unpack_u1(&bytes, len, true), bip);
+            if len % 8 != 0 && !bytes.is_empty() {
+                // Tail bits beyond `len` are zero-padded.
+                assert_eq!(bytes[bytes.len() - 1] >> (len % 8), 0);
+            }
+        }
+        // Encoding mismatches are errors: binary rejects -1, bipolar
+        // rejects 0 (zero is unrepresentable in a bipolar container).
+        assert!(pack_u1(&[-1], false).is_err());
+        assert!(pack_u1(&[0], true).is_err());
+        assert!(pack_u1(&[2], false).is_err());
+    }
+
+    #[test]
+    fn packed_tensor_round_trip_and_views() {
+        let codes: Vec<i32> = (0..11).map(|i| i % 16).collect();
+        let t = Tensor::from_codes_packed(vec![11], &codes, DType::U4).unwrap();
+        assert_eq!(t.dtype(), DType::U4);
+        assert_eq!(t.numel(), 11);
+        assert_eq!(t.storage_bytes(), 6);
+        assert_eq!(t.codes_i32(), codes);
+        let v = t.code_view().unwrap();
+        assert_eq!(v.get(10), 10);
+
+        let bip: Vec<i32> = (0..10).map(|i| if i % 3 == 0 { 1 } else { -1 }).collect();
+        let t = Tensor::from_codes_packed(vec![2, 5], &bip, DType::B1).unwrap();
+        assert_eq!(t.dtype(), DType::B1);
+        assert_eq!(t.storage_bytes(), 2);
+        assert_eq!(t.codes_i32(), bip);
+
+        // Mutation through the write view is checked.
+        let mut t = Tensor::zeros_typed(vec![4], DType::U1);
+        {
+            let mut w = t.code_view_mut().unwrap();
+            w.set(2, 1).unwrap();
+            assert!(w.set(0, 2).is_err());
+        }
+        assert_eq!(t.codes_i32(), vec![0, 0, 1, 0]);
+    }
+
+    #[test]
+    fn packed_transpose_round_trips() {
+        let codes: Vec<i32> = (0..12).map(|i| i % 16).collect();
+        let t = Tensor::from_codes_packed(vec![3, 4], &codes, DType::U4).unwrap();
+        let tt = t.transpose(&[1, 0]).unwrap();
+        assert_eq!(tt.dtype(), DType::U4);
+        assert_eq!(tt.shape(), &[4, 3]);
+        let back = tt.transpose(&[1, 0]).unwrap();
+        assert_eq!(back.codes_i32(), codes);
+    }
+
+    #[test]
+    fn dtype_bits_and_bytes_for() {
+        assert_eq!(DType::U4.bits(), 4);
+        assert_eq!(DType::U1.bits(), 1);
+        assert_eq!(DType::B1.bits(), 1);
+        assert_eq!(DType::U4.bytes_for(11), 6);
+        assert_eq!(DType::U1.bytes_for(8), 1);
+        assert_eq!(DType::U1.bytes_for(9), 2);
+        assert_eq!(DType::I8.bytes_for(9), 9);
+        assert_eq!(DType::F32.bytes_for(3), 12);
+        assert!(DType::U4.is_packed() && !DType::I8.is_packed());
+    }
+
+    #[test]
+    #[should_panic(expected = "index arity")]
+    fn at_arity_mismatch_panics_in_release_too() {
+        let t = Tensor::zeros(vec![2, 3]);
+        // Rank-1 index into a rank-2 tensor must panic even with
+        // debug_assertions off — this is the always-on accessor check.
+        let _ = t.at(&[1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "index arity")]
+    fn set_arity_mismatch_panics_in_release_too() {
+        let mut t = Tensor::zeros(vec![2, 3]);
+        t.set(&[1], 0.0);
     }
 
     #[test]

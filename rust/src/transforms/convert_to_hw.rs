@@ -277,17 +277,39 @@ enum BtFmt {
     /// Integer fixed-point codes: value = code * 2^-frac.  `[lo, hi]` is
     /// the conservative code range the producing node can emit — the
     /// input to container selection (codes are *stored* in the narrowest
-    /// of i8/i16/i32 that covers the range, DESIGN.md §9).
-    Int { frac: i32, lo: i64, hi: i64 },
+    /// of {1, 4, 8, 16, 32}-bit container covering the range, DESIGN.md
+    /// §9).  `bipolar` marks a {-1, +1} code *set* — narrower than its
+    /// range `[-1, 1]` suggests (no zero code), which is what licenses
+    /// the 1-bit container and the XNOR kernels; it survives only
+    /// through ops that preserve the code set.
+    Int {
+        frac: i32,
+        lo: i64,
+        hi: i64,
+        bipolar: bool,
+    },
 }
 
-/// Narrowest signed container (8/16/32 bits) covering a code range —
+/// Narrowest container ({1, 4, 8, 16, 32} bits) covering a code range —
 /// the storage the packed kernels stream, as an attr value.  One shared
 /// rule ([`crate::fixedpoint::container_bits_for_range`]): ranges beyond
 /// i32 still map to 32, and the plan's checked conversions reject such
-/// graphs at compile, exactly as the all-i32 datapath did.
-fn container_for(lo: i64, hi: i64) -> i64 {
+/// graphs at compile, exactly as the all-i32 datapath did.  `bipolar`
+/// overrides to the 1-bit container — the range alone cannot see that 0
+/// is unrepresented.
+fn container_for(lo: i64, hi: i64, bipolar: bool) -> i64 {
+    if bipolar {
+        return 1;
+    }
     crate::fixedpoint::container_bits_for_range(lo, hi) as i64
+}
+
+/// A single threshold emitting `q * 2 - 1` produces exactly {-1, +1} —
+/// the bipolar/BNN quantizer (sign activation).  Detected at the
+/// code-set level because the range-only container rule cannot classify
+/// it (its span contains 0).
+fn bipolar_threshold(k: i64, m: i64, add: i64) -> bool {
+    k == 1 && m == 2 && add == -1
 }
 
 fn stream_fmt(fmt: &HashMap<String, BtFmt>, tensor: &str, node: &str) -> Result<BtFmt> {
@@ -303,7 +325,7 @@ fn int_frac(f: BtFmt, node: &str, what: &str) -> Result<i32> {
 /// `(frac, lo, hi)` of an integer stream; error while still f32.
 fn int_range(f: BtFmt, node: &str, what: &str) -> Result<(i32, i64, i64)> {
     match f {
-        BtFmt::Int { frac, lo, hi } => Ok((frac, lo, hi)),
+        BtFmt::Int { frac, lo, hi, .. } => Ok((frac, lo, hi)),
         BtFmt::Float => bail!(
             "bit-true annotate: node {node}: {what} is still f32 — the ingress quantizer must precede it"
         ),
@@ -398,8 +420,10 @@ fn init_min_frac(t: &Tensor, what: &str) -> Result<i32> {
 ///   scaled by `m` and offset by the bias code; GlobalAccPool multiplies
 ///   the range by the spatial extent; AddStreams sums the shifted
 ///   ranges; a raw MVAU accumulator spans the full i32 window), and
-///   `bt_container` records the narrowest of i8/i16/i32 that covers it —
-///   the storage width `plan` allocates and the packed kernels stream.
+///   `bt_container` records the narrowest of {1, 4, 8, 16, 32} bits that
+///   covers it — the storage width `plan` allocates and the packed
+///   kernels stream.  `bt_bipolar` distinguishes the {-1, +1} 1-bit
+///   code set (XNOR datapath) from binary {0, 1}.
 ///
 /// Idempotent; fails on graphs that are not fully lowered or whose
 /// scales/initializers cannot be represented on the integer datapath.
@@ -444,10 +468,13 @@ fn annotate_node(
             let f = stream_fmt(fmt, &node.inputs[0], name)?;
             match f {
                 BtFmt::Float => sets.push(("bt_out_f32", 1)),
-                BtFmt::Int { frac, lo, hi } => {
+                BtFmt::Int {
+                    frac, lo, hi, bipolar,
+                } => {
                     sets.push(("bt_out_f32", 0));
                     sets.push(("bt_out_frac", frac as i64));
-                    sets.push(("bt_container", container_for(lo, hi)));
+                    sets.push(("bt_container", container_for(lo, hi, bipolar)));
+                    sets.push(("bt_bipolar", bipolar as i64));
                 }
             }
             f
@@ -460,11 +487,13 @@ fn annotate_node(
             let (m, f_out) = scale_to_mul_frac(node.attrs.float_or("out_scale", 1.0), name)?;
             let add = bias_to_add(node.attrs.float_or("out_bias", 0.0), f_out, name)?;
             let (lo, hi) = threshold_range(thr.shape()[1] as i64, m, add);
+            let bipolar = bipolar_threshold(thr.shape()[1] as i64, m, add);
             sets.push(("bt_out_mul", m));
             sets.push(("bt_out_add", add));
             sets.push(("bt_out_frac", f_out as i64));
             sets.push(("bt_out_f32", 0));
-            sets.push(("bt_container", container_for(lo, hi)));
+            sets.push(("bt_container", container_for(lo, hi, bipolar)));
+            sets.push(("bt_bipolar", bipolar as i64));
             match f_in {
                 BtFmt::Float => sets.push(("bt_in_f32", 1)),
                 BtFmt::Int { frac, .. } => {
@@ -472,7 +501,12 @@ fn annotate_node(
                     sets.push(("bt_in_frac", frac as i64));
                 }
             }
-            BtFmt::Int { frac: f_out, lo, hi }
+            BtFmt::Int {
+                frac: f_out,
+                lo,
+                hi,
+                bipolar,
+            }
         }
         "MVAU" => {
             let fx = int_frac(stream_fmt(fmt, &node.inputs[0], name)?, name, "MVAU input")?;
@@ -510,11 +544,18 @@ fn annotate_node(
                 let (m, f_out) = scale_to_mul_frac(node.attrs.float_or("out_scale", 1.0), name)?;
                 let add = bias_to_add(node.attrs.float_or("out_bias", 0.0), f_out, name)?;
                 let (lo, hi) = threshold_range(thr.shape()[1] as i64, m, add);
+                let bipolar = bipolar_threshold(thr.shape()[1] as i64, m, add);
                 sets.push(("bt_out_mul", m));
                 sets.push(("bt_out_add", add));
                 sets.push(("bt_out_frac", f_out as i64));
-                sets.push(("bt_container", container_for(lo, hi)));
-                BtFmt::Int { frac: f_out, lo, hi }
+                sets.push(("bt_container", container_for(lo, hi, bipolar)));
+                sets.push(("bt_bipolar", bipolar as i64));
+                BtFmt::Int {
+                    frac: f_out,
+                    lo,
+                    hi,
+                    bipolar,
+                }
             } else {
                 // Raw accumulator egress: the full i32 window.
                 let (lo, hi) = (i32::MIN as i64, i32::MAX as i64);
@@ -522,32 +563,58 @@ fn annotate_node(
                 sets.push(("bt_out_add", 0));
                 sets.push(("bt_out_frac", acc_frac as i64));
                 sets.push(("bt_container", 32));
-                BtFmt::Int { frac: acc_frac, lo, hi }
+                sets.push(("bt_bipolar", 0));
+                BtFmt::Int {
+                    frac: acc_frac,
+                    lo,
+                    hi,
+                    bipolar: false,
+                }
             }
         }
         "Im2Col" | "ConvolutionInputGenerator" => {
-            let (frac, lo, hi) = int_range(
-                stream_fmt(fmt, &node.inputs[0], name)?,
-                name,
-                "stream input",
-            )?;
-            // Zero padding injects code 0 into the stream.
-            let (lo, hi) = (lo.min(0), hi.max(0));
+            let f_in = stream_fmt(fmt, &node.inputs[0], name)?;
+            let (frac, lo, hi) = int_range(f_in, name, "stream input")?;
+            // Zero padding injects code 0 into the stream — and breaks
+            // bipolarity, since {-1, +1} has no zero code.  An unpadded
+            // window preserves the incoming code set exactly.
+            let padded = node
+                .attrs
+                .ints("pad")
+                .map(|p| p.iter().any(|&v| v != 0))
+                .unwrap_or(true);
+            let (lo, hi) = if padded {
+                (lo.min(0), hi.max(0))
+            } else {
+                (lo, hi)
+            };
+            let bipolar = !padded && matches!(f_in, BtFmt::Int { bipolar: true, .. });
             sets.push(("bt_out_f32", 0));
             sets.push(("bt_out_frac", frac as i64));
-            sets.push(("bt_container", container_for(lo, hi)));
-            BtFmt::Int { frac, lo, hi }
+            sets.push(("bt_container", container_for(lo, hi, bipolar)));
+            sets.push(("bt_bipolar", bipolar as i64));
+            BtFmt::Int {
+                frac,
+                lo,
+                hi,
+                bipolar,
+            }
         }
         "MaxPoolNHWC" | "StreamingMaxPool" => {
-            let (frac, lo, hi) = int_range(
-                stream_fmt(fmt, &node.inputs[0], name)?,
-                name,
-                "stream input",
-            )?;
+            let f_in = stream_fmt(fmt, &node.inputs[0], name)?;
+            let (frac, lo, hi) = int_range(f_in, name, "stream input")?;
+            // Max over a window picks an existing code: set-preserving.
+            let bipolar = matches!(f_in, BtFmt::Int { bipolar: true, .. });
             sets.push(("bt_out_f32", 0));
             sets.push(("bt_out_frac", frac as i64));
-            sets.push(("bt_container", container_for(lo, hi)));
-            BtFmt::Int { frac, lo, hi }
+            sets.push(("bt_container", container_for(lo, hi, bipolar)));
+            sets.push(("bt_bipolar", bipolar as i64));
+            BtFmt::Int {
+                frac,
+                lo,
+                hi,
+                bipolar,
+            }
         }
         "GlobalAccPool" | "GlobalAccPool_hw" => {
             let (frac, lo, hi) = int_range(
@@ -564,8 +631,13 @@ fn annotate_node(
             let (lo, hi) = (lo.saturating_mul(spatial), hi.saturating_mul(spatial));
             sets.push(("bt_out_f32", 0));
             sets.push(("bt_out_frac", frac as i64));
-            sets.push(("bt_container", container_for(lo, hi)));
-            BtFmt::Int { frac, lo, hi }
+            sets.push(("bt_container", container_for(lo, hi, false)));
+            BtFmt::Int {
+                frac,
+                lo,
+                hi,
+                bipolar: false,
+            }
         }
         "Add" | "AddStreams" => {
             let (fa, la, ha) = int_range(stream_fmt(fmt, &node.inputs[0], name)?, name, "lhs")?;
@@ -580,8 +652,13 @@ fn annotate_node(
             sets.push(("bt_shift_b", sb as i64));
             sets.push(("bt_out_f32", 0));
             sets.push(("bt_out_frac", f_out as i64));
-            sets.push(("bt_container", container_for(lo, hi)));
-            BtFmt::Int { frac: f_out, lo, hi }
+            sets.push(("bt_container", container_for(lo, hi, false)));
+            BtFmt::Int {
+                frac: f_out,
+                lo,
+                hi,
+                bipolar: false,
+            }
         }
         "Mul" | "ChannelwiseMul" => {
             if node.inputs.len() != 2 {
@@ -614,8 +691,13 @@ fn annotate_node(
             sets.push(("bt_data_input", data_idx as i64));
             sets.push(("bt_out_f32", 0));
             sets.push(("bt_out_frac", (f_in + k) as i64));
-            sets.push(("bt_container", container_for(lo, hi)));
-            BtFmt::Int { frac: f_in + k, lo, hi }
+            sets.push(("bt_container", container_for(lo, hi, false)));
+            BtFmt::Int {
+                frac: f_in + k,
+                lo,
+                hi,
+                bipolar: false,
+            }
         }
         other => bail!(
             "bit-true annotate: op {other} ({name}) has no integer-datapath mapping — is the graph fully lowered?"
@@ -776,7 +858,11 @@ mod tests {
                 let cont = n.attrs.int("bt_container").unwrap_or_else(|_| {
                     panic!("node {} ({}) lacks bt_container", n.name, n.op)
                 });
-                assert!([8, 16, 32].contains(&cont), "{}: container {cont}", n.name);
+                assert!(
+                    [1, 4, 8, 16, 32].contains(&cont),
+                    "{}: container {cont}",
+                    n.name
+                );
             }
             if n.op == "Thresholding" && n.attrs.int_or("bt_in_f32", 0) != 0 {
                 ingress += 1;
@@ -792,14 +878,16 @@ mod tests {
                 assert_eq!(n.attrs.int("bt_acc_frac").unwrap(), fx + fw);
                 // Headline config: s6.5 weights -> at most 5 frac bits.
                 assert!(fw <= 5, "MVAU {} w_frac {fw}", n.name);
-                // u4.2 activations: q in [0, 15] -> packed i8 codes.
+                // u4.2 activations: q in [0, 15] -> a packed u4 container,
+                // two codes per byte.
                 if n.attrs.int_or("apply_act", 1) != 0 {
                     assert_eq!(
                         n.attrs.int("bt_container").unwrap(),
-                        8,
-                        "MVAU {} activation codes should pack into i8",
+                        4,
+                        "MVAU {} activation codes should pack into u4",
                         n.name
                     );
+                    assert_eq!(n.attrs.int("bt_bipolar").unwrap(), 0);
                 }
             }
         }
@@ -834,20 +922,31 @@ mod tests {
 
     #[test]
     fn container_selection_rule() {
-        assert_eq!(container_for(0, 15), 8);
-        assert_eq!(container_for(-128, 127), 8);
-        assert_eq!(container_for(0, 128), 16);
-        assert_eq!(container_for(-129, 0), 16);
-        assert_eq!(container_for(0, 255), 16);
-        assert_eq!(container_for(-32768, 32767), 16);
-        assert_eq!(container_for(0, 32768), 32);
-        assert_eq!(container_for(i32::MIN as i64, i32::MAX as i64), 32);
+        assert_eq!(container_for(0, 1, false), 1);
+        assert_eq!(container_for(0, 15, false), 4);
+        assert_eq!(container_for(-8, 7, false), 8);
+        assert_eq!(container_for(-128, 127, false), 8);
+        assert_eq!(container_for(0, 16, false), 8);
+        assert_eq!(container_for(0, 128, false), 16);
+        assert_eq!(container_for(-129, 0, false), 16);
+        assert_eq!(container_for(0, 255, false), 16);
+        assert_eq!(container_for(-32768, 32767, false), 16);
+        assert_eq!(container_for(0, 32768, false), 32);
+        assert_eq!(container_for(i32::MIN as i64, i32::MAX as i64, false), 32);
         // Beyond-i32 ranges still report 32 (the plan's checked stores
         // reject them at conversion, exactly as the i32 datapath did).
-        assert_eq!(container_for(0, 1 << 40), 32);
+        assert_eq!(container_for(0, 1 << 40, false), 32);
+        // Bipolar overrides the range rule ([-1, 1] spans 0, but the
+        // code set does not contain it).
+        assert_eq!(container_for(-1, 1, false), 8);
+        assert_eq!(container_for(-1, 1, true), 1);
         // Threshold output ranges, including a negative multiplier.
         assert_eq!(threshold_range(15, 1, 0), (0, 15));
         assert_eq!(threshold_range(3, -5, 2), (-13, 2));
+        // The bipolar quantizer shape: one threshold, q*2 - 1.
+        assert!(bipolar_threshold(1, 2, -1));
+        assert!(!bipolar_threshold(2, 2, -1));
+        assert!(!bipolar_threshold(1, 1, 0));
     }
 
     #[test]

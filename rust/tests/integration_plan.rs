@@ -215,7 +215,7 @@ fn packed_codes_equal_i32_plan_and_quantized_f32_across_table2() {
             wide_plan
                 .kernel_variants()
                 .iter()
-                .all(|(_, v)| *v != "int8" && *v != "int16"),
+                .all(|(_, v)| *v != "int8" && *v != "int16" && *v != "int4" && *v != "int1"),
             "{name}: wide oracle leaked a narrow container"
         );
         assert!(
@@ -261,7 +261,7 @@ fn packed_codes_equal_i32_plan_and_quantized_f32_across_table2() {
 /// all; the only boundary steps are ONE ingress quantizer (float
 /// comparisons) and at most one f32 layout Transpose feeding it; and at
 /// the headline config (u4.2 activations) the bulk of the steady-state
-/// steps store their codes in packed i8 containers.
+/// steps store their codes in sub-byte u4 containers (two per byte).
 #[test]
 fn bit_true_plan_has_zero_float_kernels_and_packs_narrow() {
     let graph = lowered_bit_true_graph(&headline_config());
@@ -288,18 +288,72 @@ fn bit_true_plan_has_zero_float_kernels_and_packs_narrow() {
         steady > 20,
         "lowered ResNet-9 should have >20 steady-state integer steps, got {steady}: {variants:?}"
     );
-    let packed8 = variants.iter().filter(|(_, v)| *v == "int8").count();
+    let packed4 = variants.iter().filter(|(_, v)| *v == "int4").count();
     assert!(
-        packed8 * 2 > steady,
-        "u4.2 activations should put most steps in i8 containers, got {packed8}/{steady}: {variants:?}"
+        packed4 * 2 > steady,
+        "u4.2 activations should put most steps in u4 containers, got {packed4}/{steady}: {variants:?}"
     );
-    // Every MVAU's activation codes pack into i8 at this config.
+    // Every MVAU's activation codes pack into a u4 nibble at this config.
     assert!(
         variants
             .iter()
             .filter(|(op, _)| op == "MVAU")
-            .all(|(_, v)| *v == "int8"),
+            .all(|(_, v)| *v == "int4"),
         "MVAU outputs not packed: {variants:?}"
+    );
+}
+
+/// The bandwidth story of DESIGN.md §9 end to end: holding the headline
+/// weight format (s6.5 -> i8) fixed and sweeping the activation
+/// container down the packing rungs — i32 wide oracle (32), u7.4 acts
+/// (8), u4.2 acts (4, the headline), u1.1 acts (1) — the bytes one
+/// frame streams strictly decreases at every step.
+#[test]
+fn bytes_per_frame_strictly_decrease_down_the_container_rungs() {
+    use bwade::fixedpoint::QuantConfig;
+    // (act int bits, act frac bits) -> act container 8 / 4 / 1.
+    let act8 = QuantConfig::from_split(1, 5, 3, 4).unwrap();
+    let act4 = headline_config();
+    let act1 = QuantConfig::from_split(1, 5, 0, 1).unwrap();
+    assert_eq!(act8.act.container_bits(), 8);
+    assert_eq!(act4.act.container_bits(), 4);
+    assert_eq!(act1.act.container_bits(), 1);
+
+    let wide = ExecutionPlan::compile_bit_true_wide(&lowered_bit_true_graph(&act4))
+        .unwrap()
+        .bytes_moved_per_frame();
+    let b8 = ExecutionPlan::compile_bit_true(&lowered_bit_true_graph(&act8))
+        .unwrap()
+        .bytes_moved_per_frame();
+    let b4 = ExecutionPlan::compile_bit_true(&lowered_bit_true_graph(&act4))
+        .unwrap()
+        .bytes_moved_per_frame();
+    let b1 = ExecutionPlan::compile_bit_true(&lowered_bit_true_graph(&act1))
+        .unwrap()
+        .bytes_moved_per_frame();
+    assert!(
+        wide > b8 && b8 > b4 && b4 > b1,
+        "bytes/frame must fall down the rungs: i32 {wide} > 8b {b8} > 4b {b4} > 1b {b1}"
+    );
+
+    // The 1-bit plan is not just cheaper on paper — it runs, and its
+    // steady-state MVAUs store single-bit codes.
+    let g1 = lowered_bit_true_graph(&act1);
+    let p1 = ExecutionPlan::compile_bit_true(&g1).unwrap();
+    assert!(
+        p1.kernel_variants().iter().any(|(_, v)| *v == "int1"),
+        "u1.1 acts should reach the 1-bit container: {:?}",
+        p1.kernel_variants()
+    );
+    let out = p1.run(&probe_feeds(&g1, 0xB17)).unwrap();
+    assert_eq!(
+        out["global_out"].codes_i32(),
+        ExecutionPlan::compile_bit_true_wide(&g1)
+            .unwrap()
+            .run(&probe_feeds(&g1, 0xB17))
+            .unwrap()["global_out"]
+            .codes_i32(),
+        "1-bit packed plan diverged from the i32 oracle"
     );
 }
 

@@ -135,7 +135,17 @@ fn profile_matches_plan(datapath: Datapath) {
     for s in profile.steps() {
         assert_eq!(s.calls, k, "step {} runs once per frame", s.name);
     }
-    assert_eq!(profile.total_bytes(), k * plan.bytes_moved_per_frame());
+    // The profile measures kernel steps only; bytes_moved_per_frame
+    // additionally counts the egress dequantize boundary (codes read +
+    // f32 features written by the caller), which is zero on f32 plans.
+    match datapath {
+        Datapath::F32 => assert_eq!(plan.egress_bytes_per_frame(), 0),
+        Datapath::BitTrue => assert!(plan.egress_bytes_per_frame() > 0),
+    }
+    assert_eq!(
+        profile.total_bytes() + k * plan.egress_bytes_per_frame(),
+        k * plan.bytes_moved_per_frame()
+    );
     // Per-step (op, variant) labels are exactly the plan's audit labels.
     let vars: Vec<(String, &'static str)> =
         profile.steps().iter().map(|s| (s.op.clone(), s.variant)).collect();
