@@ -4,35 +4,57 @@
 //!
 //!     cargo bench --bench fig5_throughput
 //!
-//! Two sections:
+//! Three sections:
 //! * the PJRT single-runner sweep (capacity, real-time rates, batching
 //!   ablation) — needs trained artifacts, skipped otherwise;
 //! * the replica-scaling sweep on the plan engine over the synthetic
 //!   backbone (always runs): 1 -> num_cpus replicas for both datapaths,
 //!   recorded to BENCH_serving.json (schema DESIGN.md §10) — the
-//!   tracked serving-throughput trajectory.
+//!   tracked serving-throughput trajectory;
+//! * the pipeline stage sweep (always runs): the streaming pipelined
+//!   executor at 1 -> N stages for both datapaths, recorded to
+//!   BENCH_pipeline.json (schema DESIGN.md §12) — stage-1 rows are the
+//!   sequential single-runner baseline.
 //!
 //! Knobs: BWADE_BENCH_FRAMES (default 240), BWADE_BENCH_MAX_REPLICAS
-//! (default: available parallelism).
+//! (default: available parallelism), BWADE_BENCH_MAX_STAGES (default:
+//! min(host, 8)), BWADE_BENCH_SECTIONS (comma list of
+//! pjrt,replicas,pipeline; default all).
 
 use std::sync::mpsc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use bwade::artifacts::{ArtifactPaths, FewshotBank};
-use bwade::benchutil::{env_usize, write_serving_json, ServingRow};
-use bwade::build::{lower_bit_true, requantize_graph, synth_backbone_graph};
+use bwade::benchutil::{
+    env_usize, write_pipeline_json, write_serving_json, PipelineRow, ServingRow,
+};
+use bwade::build::{
+    implement_lowered, lower_bit_true, requantize_graph, synth_backbone_graph, DesignConfig,
+};
 use bwade::coordinator::{serve, serve_pool, BatchPolicy, FeatureExtractor, FrameSource};
 use bwade::dse::SweepSpec;
 use bwade::fewshot::{sample_episode, NcmClassifier};
 use bwade::fixedpoint::headline_config;
+use bwade::plan::pipeline::{PipelineSpec, PlanPipeline};
 use bwade::plan::{Datapath, PlanRunner};
+use bwade::resources::Device;
 use bwade::rng::Rng;
 use bwade::runtime::{BackboneRunner, Runtime};
+use bwade::transforms::{convert_to_hw, run_default_pipeline};
 
 fn main() {
     let frames = env_usize("BWADE_BENCH_FRAMES", 240);
-    pjrt_sweep(frames);
-    replica_scaling(frames);
+    let sections = std::env::var("BWADE_BENCH_SECTIONS").unwrap_or_else(|_| "all".to_string());
+    let want = |name: &str| sections == "all" || sections.split(',').any(|s| s.trim() == name);
+    if want("pjrt") {
+        pjrt_sweep(frames);
+    }
+    if want("replicas") {
+        replica_scaling(frames);
+    }
+    if want("pipeline") {
+        pipeline_sweep(frames);
+    }
     println!("\nfig5_throughput done");
 }
 
@@ -277,4 +299,113 @@ fn replica_scaling(frames: usize) {
     let out = std::path::Path::new("BENCH_serving.json");
     write_serving_json(out, host, &rows).expect("write BENCH_serving.json");
     println!("\nrecorded {} serving rows -> {}", rows.len(), out.display());
+}
+
+// ---------------------------------------------------------------------------
+// Section 3: pipeline stage sweep on the plan engine (always runs)
+// ---------------------------------------------------------------------------
+
+fn pipeline_sweep(frames: usize) {
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let max_stages = env_usize("BWADE_BENCH_MAX_STAGES", host.min(8)).max(2);
+    let spec = SweepSpec::default();
+    let cfg = headline_config();
+    let device = Device::pynq_z1();
+    let counts = replica_counts(max_stages);
+
+    println!(
+        "\n== pipeline scaling: stage workers on bounded FIFOs, synthetic backbone {:?} @ {}px, config {} ({}-way host, {frames} frames per point) ==",
+        spec.widths,
+        spec.img,
+        cfg.describe(),
+        host
+    );
+
+    let per = spec.img * spec.img * 3;
+    let mut rng = Rng::new(0x51);
+    let images: Vec<f32> = (0..frames * per).map(|_| rng.next_f32()).collect();
+
+    let mut rows: Vec<PipelineRow> = Vec::new();
+    for datapath in [Datapath::F32, Datapath::BitTrue] {
+        // Lower to the HW graph on BOTH datapaths so plan step names
+        // equal DataflowSim actor names (the sequential f32 serve path
+        // only requantizes; the pipeline needs the cycle model join).
+        let mut graph =
+            synth_backbone_graph(spec.widths, spec.img, cfg.act.bits, cfg.act.frac_bits);
+        match datapath {
+            Datapath::F32 => {
+                requantize_graph(&mut graph, &cfg).expect("requantize");
+                run_default_pipeline(&mut graph, None, 0.0).expect("lower");
+                assert!(convert_to_hw::is_fully_hw(&graph), "lowering left non-HW ops");
+            }
+            Datapath::BitTrue => lower_bit_true(&mut graph, &cfg).expect("lower"),
+        }
+        let build_cfg = DesignConfig {
+            quant: cfg,
+            target_fps: None,
+            max_utilization: 0.85,
+            verify: false,
+        };
+        let mut hw = graph.clone();
+        let report = implement_lowered(&mut hw, &build_cfg, &device).expect("implement");
+        let predicted_ms = device.cycles_to_ms(report.steady_cycles);
+        let runner = PlanRunner::with_datapath(&graph, 1, datapath).expect("plan");
+        // First-frame warmup pays the arena growth outside the clock.
+        let _ = runner.extract_all(&images[..per], 1).unwrap();
+
+        let mut seq_fps = 0.0f64;
+        let mut best_pipelined = 0.0f64;
+        for &stages in &counts {
+            let (fps, steady_ms) = if stages == 1 {
+                // Sequential single-runner baseline.
+                let t0 = Instant::now();
+                let feats = runner.extract_all(&images, frames).unwrap();
+                assert_eq!(feats.len(), frames * runner.feature_dim());
+                let wall = t0.elapsed().as_secs_f64();
+                (frames as f64 / wall, wall * 1e3 / frames as f64)
+            } else {
+                let pspec = PipelineSpec::from_models(stages, &report.models, &report.fifo_depths);
+                let pipe = PlanPipeline::new(&runner, &pspec).unwrap();
+                let (feats, stats) = pipe.extract_stream(&images, frames, None).unwrap();
+                assert_eq!(feats.len(), frames * runner.feature_dim());
+                assert_eq!(stats.frames, frames, "pipeline dropped frames");
+                let fps = frames as f64 / stats.wall.as_secs_f64().max(1e-9);
+                (fps, stats.steady_interval.as_secs_f64() * 1e3)
+            };
+            if stages == 1 {
+                seq_fps = fps;
+            } else {
+                best_pipelined = best_pipelined.max(fps);
+            }
+            println!(
+                "{:>8} x{:<2} stages: {:>8.1} fps, steady {:.3} ms/frame (predicted II {:.3} ms)",
+                datapath.describe(),
+                stages,
+                fps,
+                steady_ms,
+                predicted_ms
+            );
+            rows.push(PipelineRow {
+                config: cfg.describe(),
+                datapath: datapath.describe().to_string(),
+                stages,
+                frames,
+                fps,
+                steady_ms,
+                predicted_steady_ms: predicted_ms,
+            });
+        }
+        println!(
+            "  [{}] pipelined >=2-stage throughput beats the sequential baseline ({}: best \
+             {:.1} vs {:.1} fps)",
+            if best_pipelined > seq_fps { "x" } else { " " },
+            datapath.describe(),
+            best_pipelined,
+            seq_fps
+        );
+    }
+
+    let out = std::path::Path::new("BENCH_pipeline.json");
+    write_pipeline_json(out, host, &rows).expect("write BENCH_pipeline.json");
+    println!("recorded {} pipeline rows -> {}", rows.len(), out.display());
 }

@@ -159,6 +159,67 @@ pub fn write_serving_json(path: &Path, host_parallelism: usize, rows: &[ServingR
         .with_context(|| format!("writing {}", path.display()))
 }
 
+/// Schema id stamped into `BENCH_pipeline.json`.
+pub const PIPELINE_SCHEMA: &str = "bwade/bench-pipeline/v1";
+
+/// One measured pipeline configuration — a row of `BENCH_pipeline.json`
+/// (schema documented in DESIGN.md §12).  `stages == 1` rows are the
+/// sequential single-runner baseline the pipelined rows are judged
+/// against.
+#[derive(Debug, Clone)]
+pub struct PipelineRow {
+    /// Quantization config name (e.g. `b6_c1.5_r2.2`).
+    pub config: String,
+    /// `f32` or `bit-true`.
+    pub datapath: String,
+    /// Stage-worker count (1 = sequential baseline).
+    pub stages: usize,
+    /// Frames streamed in this measurement.
+    pub frames: usize,
+    /// End-to-end throughput (frames / wall clock).
+    pub fps: f64,
+    /// Measured steady-state inter-frame interval at egress.
+    pub steady_ms: f64,
+    /// DataflowSim's predicted steady-state interval for the design.
+    pub predicted_steady_ms: f64,
+}
+
+impl PipelineRow {
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("config", Json::str(self.config.clone())),
+            ("datapath", Json::str(self.datapath.clone())),
+            ("stages", Json::num(self.stages as f64)),
+            ("frames", Json::num(self.frames as f64)),
+            ("fps", Json::num(self.fps)),
+            ("steady_ms", Json::num(self.steady_ms)),
+            ("predicted_steady_ms", Json::num(self.predicted_steady_ms)),
+        ])
+    }
+}
+
+/// Serialize pipeline rows to the `BENCH_pipeline.json` document (the
+/// testable half of the emitter, like [`serving_json`]).
+pub fn pipeline_json(host_parallelism: usize, rows: &[PipelineRow]) -> String {
+    let doc = json::obj(vec![
+        ("schema", Json::str(PIPELINE_SCHEMA)),
+        ("host_parallelism", Json::num(host_parallelism as f64)),
+        ("rows", Json::Arr(rows.iter().map(|r| r.to_json()).collect())),
+    ]);
+    doc.to_string_pretty() + "\n"
+}
+
+/// Record the pipeline stage sweep: write `rows` to `path` (normally
+/// `BENCH_pipeline.json` at the repo root, produced by the fig5 bench).
+pub fn write_pipeline_json(
+    path: &Path,
+    host_parallelism: usize,
+    rows: &[PipelineRow],
+) -> Result<()> {
+    std::fs::write(path, pipeline_json(host_parallelism, rows))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
 /// Schema id stamped into `BENCH_kernels.json`.
 pub const KERNELS_SCHEMA: &str = "bwade/bench-kernels/v1";
 
@@ -309,6 +370,40 @@ mod tests {
         assert_eq!(rows[0].get("kernel").unwrap().as_str().unwrap(), "mvau");
         assert_eq!(rows[0].get("contender").unwrap().as_str().unwrap(), "packed-i8");
         assert!((rows[0].get("speedup").unwrap().as_f64().unwrap() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipeline_json_schema_round_trip() {
+        let rows = vec![
+            PipelineRow {
+                config: "b6_c1.5_r2.2".into(),
+                datapath: "f32".into(),
+                stages: 1,
+                frames: 96,
+                fps: 100.0,
+                steady_ms: 10.0,
+                predicted_steady_ms: 16.3,
+            },
+            PipelineRow {
+                config: "b6_c1.5_r2.2".into(),
+                datapath: "f32".into(),
+                stages: 4,
+                frames: 96,
+                fps: 320.0,
+                steady_ms: 3.125,
+                predicted_steady_ms: 16.3,
+            },
+        ];
+        let doc = pipeline_json(8, &rows);
+        let parsed = Json::parse(&doc).expect("emitted document parses");
+        assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(), PIPELINE_SCHEMA);
+        assert_eq!(parsed.get("host_parallelism").unwrap().as_usize().unwrap(), 8);
+        let all = parsed.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].get("stages").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(all[1].get("stages").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(all[1].get("fps").unwrap().as_f64().unwrap(), 320.0);
+        assert_eq!(all[1].get("steady_ms").unwrap().as_f64().unwrap(), 3.125);
     }
 
     #[test]

@@ -30,8 +30,9 @@ pub struct DesignConfig {
     /// utilization cap stops paying).
     pub target_fps: Option<f64>,
     /// Per-resource utilization ceiling for the folding search (LUT / FF
-    /// / DSP; BRAM is relaxed — weight memory is a floor set by the model,
-    /// not a foldable quantity).
+    /// / DSP / BRAM; the BRAM cap is floored at the entry footprint —
+    /// weight memory at minimal folding is set by the model, not a
+    /// foldable quantity — so folding may never grow it past the cap).
     pub max_utilization: f64,
     /// Numerically verify every transform stage against a probe input.
     pub verify: bool,
@@ -67,12 +68,21 @@ pub struct BuildReport {
     pub steady_cycles: u64,
     pub latency_ms: f64,
     pub fps: f64,
+    /// True when the weight memory overflows the device's on-chip BRAM
+    /// capacity ([`Device::bram_capacity_bits`]) — the config is memory-
+    /// bound before it is DMA-bound.
+    pub bram_bound: bool,
 }
 
 impl BuildReport {
     pub fn summary(&self) -> String {
+        let residency = if self.bram_bound {
+            "spills off-chip (BRAM-bound)"
+        } else {
+            "on-chip"
+        };
         format!(
-            "config {}  |  {} HW layers  |  {}  |  weights {:.1} KiB on-chip  |  latency {:.2} ms  {:.1} fps (II {} cycles)",
+            "config {}  |  {} HW layers  |  {}  |  weights {:.1} KiB {residency}  |  latency {:.2} ms  {:.1} fps (II {} cycles)",
             self.config.describe(),
             self.models.len(),
             self.total_resources,
@@ -183,6 +193,7 @@ pub fn implement_lowered(
         steady_cycles: steady,
         latency_ms: device.cycles_to_ms(sim_res.first_frame_latency),
         fps: device.fps(steady),
+        bram_bound: weight_bits > device.bram_capacity_bits(),
         models,
     })
 }
@@ -434,10 +445,12 @@ pub fn synth_backbone_graph(
 
 /// Greedy folding (PE/SIMD) search: repeatedly double the parallelism of
 /// the initiation-interval bottleneck until the fps target is met or the
-/// LUT/FF/DSP utilization cap would be exceeded (BRAM is relaxed — at
-/// minimal folding the weight memory is a fixed floor).  Writes the
-/// chosen pe/simd attributes into the graph and returns the node models
-/// at the final folding.
+/// LUT/FF/DSP/BRAM utilization cap would be exceeded.  The BRAM cap is
+/// relaxed to the entry floor when minimal folding already exceeds it —
+/// the weight memory is a fixed floor, and the search must not reject
+/// the starting point — but folding may not grow BRAM *beyond*
+/// `max(cap, entry)`.  Writes the chosen pe/simd attributes into the
+/// graph and returns the node models at the final folding.
 pub fn folding_search(
     graph: &mut Graph,
     cfg: &DesignConfig,
@@ -459,7 +472,13 @@ pub fn folding_search_traced(
     let cap_lut = device.budget.lut * cfg.max_utilization;
     let cap_ff = device.budget.ff * cfg.max_utilization;
     let cap_dsp = device.budget.dsp * cfg.max_utilization;
-    let fits = |r: &Resources| r.lut <= cap_lut && r.ff <= cap_ff && r.dsp <= cap_dsp;
+    // Entry BRAM floor: the weight memory at minimal folding is a fact of
+    // the config, not a folding choice, so the cap never rejects it.
+    let entry_bram = total_resources(&model_graph(graph, &cfg.quant)?).bram36;
+    let cap_bram = (device.budget.bram36 * cfg.max_utilization).max(entry_bram);
+    let fits = |r: &Resources| {
+        r.lut <= cap_lut && r.ff <= cap_ff && r.dsp <= cap_dsp && r.bram36 <= cap_bram
+    };
     let target_ii: Option<u64> = cfg
         .target_fps
         .map(|fps| (device.clock_mhz * 1e6 / fps).max(1.0) as u64);

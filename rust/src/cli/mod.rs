@@ -159,6 +159,14 @@ COMMANDS
              --streams <m>               concurrent camera streams feeding
                                          the tier (default 1; --rate is
                                          per-stream)
+             --pipeline                  streaming pipelined executor:
+                                         the compiled plan is cut into
+                                         per-stage workers on bounded
+                                         FIFOs (frames in flight across
+                                         layers; needs --engine plan,
+                                         excludes --replicas > 1)
+             --stages <n>                pipeline stage count (default:
+                                         auto, 4 clamped to plan steps)
              --max-wait-ms <t>           batch deadline: close a batch when
                                          the oldest frame waited this long
                                          (default 5)
@@ -183,6 +191,11 @@ COMMANDS
              --datapath <f32|bit-true>   measured datapath (default bit-true)
              --frames <n>                measured frames after warmup
                                          (default 16)
+             --stages <n>                stage count for the pipelined
+                                         steady-state measurement
+                                         (default 4); the report joins
+                                         the measured egress interval
+                                         against DataflowSim's II
              --max-util <f>              folding cap for the predicted
                                          side (default 0.85)
              --out <path>                report path (default PROFILE.md)

@@ -145,6 +145,7 @@ fn metrics_to_json(m: &PointMetrics) -> Json {
         ("hw_layers", Json::num(m.hw_layers as f64)),
         ("bytes_per_frame", Json::num(m.bytes_per_frame as f64)),
         ("bw_fps_ceiling", Json::num(m.bw_fps_ceiling)),
+        ("bram_bound", Json::Bool(m.bram_bound)),
         ("non_dyadic_scales", Json::num(m.non_dyadic_scales as f64)),
     ])
 }
@@ -165,6 +166,7 @@ fn metrics_from_json(j: &Json) -> Result<PointMetrics> {
         hw_layers: j.get("hw_layers")?.as_usize()?,
         bytes_per_frame: j.get("bytes_per_frame")?.as_f64()? as u64,
         bw_fps_ceiling: j.get("bw_fps_ceiling")?.as_f64()?,
+        bram_bound: j.get("bram_bound")?.as_bool()?,
         non_dyadic_scales: j.get("non_dyadic_scales")?.as_usize()?,
     })
 }
@@ -189,6 +191,7 @@ mod tests {
             hw_layers: 40,
             bytes_per_frame: 987_654,
             bw_fps_ceiling: 1012.5000001,
+            bram_bound: true,
             non_dyadic_scales: 1,
         }
     }

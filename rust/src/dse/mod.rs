@@ -227,10 +227,15 @@ pub struct PointMetrics {
     /// including the f32 ingress/egress boundary traffic — the bandwidth
     /// the config's narrow formats buy.
     pub bytes_per_frame: u64,
-    /// Throughput ceiling from the device's DMA bandwidth at this
-    /// bytes-per-frame ([`Device::bandwidth_fps_ceiling`]) — sits
-    /// alongside the II-derived `fps`; whichever is lower binds.
+    /// Memory-aware throughput ceiling ([`Device::memory_fps_ceiling`]):
+    /// the DMA bound over activations plus any BRAM-spilled weight bytes
+    /// that must re-stream every frame — sits alongside the II-derived
+    /// `fps`; whichever is lower binds.
     pub bw_fps_ceiling: f64,
+    /// True when the config's weight memory overflows the device's
+    /// on-chip BRAM capacity (the ceiling above is then BRAM-bound, not
+    /// merely DMA-bound).
+    pub bram_bound: bool,
     /// Scale factors whose exact decomposition needs an odd multiplier
     /// `|m| > 1`: exact on the integer path, f32-divergent by design.
     /// Nonzero counts are flagged in the report.
@@ -438,6 +443,7 @@ pub fn build_hw_metrics(
     };
     let report = implement_lowered(&mut graph, &cfg, &spec.device)?;
     let r = report.total_resources;
+    let mem = spec.device.memory_fps_ceiling(stats.bytes_per_frame, report.weight_bits);
     Ok(PointMetrics {
         acc_mean: acc.mean,
         acc_ci95: acc.ci95,
@@ -452,7 +458,8 @@ pub fn build_hw_metrics(
         utilization: r.max_utilization(&spec.device),
         hw_layers: report.models.len(),
         bytes_per_frame: stats.bytes_per_frame,
-        bw_fps_ceiling: spec.device.bandwidth_fps_ceiling(stats.bytes_per_frame),
+        bw_fps_ceiling: mem.fps,
+        bram_bound: mem.bram_bound,
         non_dyadic_scales: stats.non_dyadic_scales,
     })
 }

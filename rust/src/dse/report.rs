@@ -10,7 +10,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use super::{SweepResult, SweepSpec};
+use super::{PointMetrics, SweepResult, SweepSpec};
 
 /// Display label of a storage container: byte-and-wider containers are
 /// signed (`i8`/`i16`/`i32`), the packed sub-byte ones are unsigned
@@ -20,6 +20,16 @@ fn container_label(bits: u8) -> String {
         format!("u{bits}")
     } else {
         format!("i{bits}")
+    }
+}
+
+/// Table III bandwidth-ceiling cell: BRAM-bound configs re-stream spilled
+/// weights every frame, so the memory verdict rides along with the number.
+fn bw_cell(m: &PointMetrics) -> String {
+    if m.bram_bound {
+        format!("{:.1} (BRAM-bound)", m.bw_fps_ceiling)
+    } else {
+        format!("{:.1}", m.bw_fps_ceiling)
     }
 }
 
@@ -129,7 +139,7 @@ pub fn render_report(spec: &SweepSpec, result: &SweepResult) -> String {
         let m = &o.metrics;
         let _ = writeln!(
             s,
-            "| {} | {:.2} | {} | {:.0} | {:.0} | {:.1} | {:.0} | {:.1} | {:.1} | {:.3} | {:.1} | {:.1} | {} | {} |",
+            "| {} | {:.2} | {} | {:.0} | {:.0} | {:.1} | {:.0} | {:.1} | {:.1} | {:.3} | {:.1} | {} | {} | {} |",
             o.point.name,
             o.point.max_utilization,
             spec.datapath.describe(),
@@ -141,7 +151,7 @@ pub fn render_report(spec: &SweepSpec, result: &SweepResult) -> String {
             m.weight_bits as f64 / 8192.0,
             m.latency_ms,
             m.fps,
-            m.bw_fps_ceiling,
+            bw_cell(m),
             m.steady_cycles,
             if result.pareto.contains(&i) { "*" } else { "" },
         );
@@ -260,6 +270,7 @@ mod tests {
                     hw_layers: 40,
                     bytes_per_frame: 100_000 + 1000 * i as u64,
                     bw_fps_ceiling: 1.0e9 / (100_000.0 + 1000.0 * i as f64),
+                    bram_bound: false,
                     non_dyadic_scales: 0,
                 },
                 cached: i % 2 == 0,
@@ -333,6 +344,17 @@ mod tests {
         let flagged = render_report(&spec, &result);
         assert!(flagged.contains("⚠ 3 non-dyadic (m>1)"), "{flagged}");
         assert!(flagged.contains("exact-but-f32-divergent"));
+    }
+
+    #[test]
+    fn report_marks_bram_bound_points() {
+        let spec = SweepSpec::default();
+        let mut result = fake_result(&spec);
+        let clean = render_report(&spec, &result);
+        assert!(!clean.contains("BRAM-bound"), "unspilled sweep got marked");
+        result.outcomes[1].metrics.bram_bound = true;
+        let marked = render_report(&spec, &result);
+        assert!(marked.contains("(BRAM-bound)"), "{marked}");
     }
 
     #[test]

@@ -23,6 +23,7 @@ use bwade::fewshot::{evaluate, sample_episode, NcmClassifier};
 use bwade::fixedpoint::{baseline16_config, table2_configs, QuantConfig};
 use bwade::graph::Graph;
 use bwade::json::{self, Json};
+use bwade::plan::pipeline::{PipelineSpec, PlanPipeline};
 use bwade::plan::{Datapath, PlanRunner};
 use bwade::resources::{utilization_line, Device};
 use bwade::rng::Rng;
@@ -485,6 +486,48 @@ fn report_conservation(frames_in: usize, results: &[Classified], metrics: &Metri
     Ok(())
 }
 
+/// Lower the factory's graph to its HW form on BOTH datapaths (the f32
+/// plan must also compile over HW nodes so its step names equal the
+/// DataflowSim actor names — `EngineFactory::make_plan`'s f32 path only
+/// requantizes), run the folding search + FIFO sizing on a clone, and
+/// partition a fresh runner into `stages` pipeline workers balanced by
+/// the per-actor cycle model.  `stages == 0` means auto (4, clamped to
+/// the plan's step count by the partitioner).
+fn make_pipeline(
+    factory: &EngineFactory,
+    cfg: QuantConfig,
+    stages: usize,
+    device: &Device,
+) -> Result<(PlanRunner, PlanPipeline, bwade::build::BuildReport)> {
+    let mut graph = factory
+        .graph
+        .clone()
+        .ok_or_else(|| anyhow!("pipeline serving requires the plan engine's compiler graph"))?;
+    match factory.datapath {
+        Datapath::F32 => {
+            requantize_graph(&mut graph, &cfg)?;
+            run_default_pipeline(&mut graph, None, 0.0)?;
+            if !convert_to_hw::is_fully_hw(&graph) {
+                bail!("pipeline lowering left non-HW ops in the graph: {:?}", graph.op_census());
+            }
+        }
+        Datapath::BitTrue => lower_bit_true(&mut graph, &cfg)?,
+    }
+    let build_cfg = DesignConfig {
+        quant: cfg,
+        target_fps: None,
+        max_utilization: 0.85,
+        verify: false,
+    };
+    let mut hw = graph.clone();
+    let report = implement_lowered(&mut hw, &build_cfg, device)?;
+    let runner = PlanRunner::with_datapath(&graph, 8, factory.datapath)?;
+    let stages = if stages > 0 { stages } else { 4 };
+    let spec = PipelineSpec::from_models(stages, &report.models, &report.fifo_depths);
+    let pipe = PlanPipeline::new(&runner, &spec)?;
+    Ok((runner, pipe, report))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let frames = args.get_usize("frames", 256)?;
     let batch_opt = args.get_usize("batch", 0)?;
@@ -501,10 +544,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let datapath = Datapath::parse(args.get_or("datapath", "f32"))?;
     let cfg = parse_config(args.get_or("config", "b6_c1.5_r2.2"))?;
+    let pipeline = args.has_flag("pipeline");
+    let stages_req = args.get_usize("stages", 0)?;
     if replicas > 1 && engine != "plan" {
         bail!(
             "--replicas > 1 requires --engine plan: compiled plans are compile-once/run-many \
              (shared behind an Arc), a PJRT executable is not replicable"
+        );
+    }
+    if pipeline && engine != "plan" {
+        bail!("--pipeline requires --engine plan: stages partition a compiled plan");
+    }
+    if pipeline && replicas > 1 {
+        bail!(
+            "--pipeline and --replicas > 1 are mutually exclusive: the pipeline parallelizes \
+             one frame stream across stages, the pool across whole-plan replicas"
         );
     }
 
@@ -576,7 +630,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if synth { ", synthetic backbone" } else { "" }
     );
 
-    let (metrics, results, bytes_per_frame) = if replicas == 1 {
+    let (metrics, results, bytes_per_frame) = if pipeline {
+        // Streaming pipelined executor: stage workers on bounded FIFOs,
+        // frames in flight across layers (DESIGN.md §12).
+        let device = Device::pynq_z1();
+        let (runner, pipe, report) = make_pipeline(&factory, cfg, stages_req, &device)?;
+        let sup_feats = runner.extract_all(&support.0, support.2)?;
+        let ncm = NcmClassifier::fit(&sup_feats, runner.feature_dim(), &support.1, 5)?;
+        let bytes = runner.bytes_moved_per_frame();
+        for (s, row) in pipe.stage_table().iter().enumerate() {
+            println!(
+                "  stage {s}: {} .. {}  ({} steps, {} cycles, in-capacity {} frames)",
+                row.first_step, row.last_step, row.steps, row.cycles, row.capacity
+            );
+        }
+        let rx = spawn_streams(frames, streams, rate, img);
+        let (metrics, results, stats) = pipe.serve(&ncm, rx, registry)?;
+        println!(
+            "  pipeline steady-state: measured {:.3} ms/frame vs DataflowSim predicted {:.3} ms \
+             (fill latency {:.3} ms over {} stages)",
+            stats.steady_interval.as_secs_f64() * 1e3,
+            device.cycles_to_ms(report.steady_cycles),
+            stats.first_frame_latency.as_secs_f64() * 1e3,
+            pipe.stages()
+        );
+        (metrics, results, Some(bytes))
+    } else if replicas == 1 {
         let runner = factory.make(&paths, bundle.as_ref(), exec_batch, cfg)?;
         let sup_feats = runner.extract_all(&support.0, support.2)?;
         let ncm = NcmClassifier::fit(&sup_feats, runner.feature_dim(), &support.1, 5)?;
@@ -667,6 +746,26 @@ struct ProfileRow {
     pred_ms: f64,
     pred_share: f64,
     err_pp: f64,
+}
+
+/// The measured-vs-predicted steady-state join (the pipelined half of
+/// `bwade profile`): the per-step sequential measurement above it is a
+/// *sum* of layer times, this is the egress inter-frame interval with
+/// frames in flight across the stage workers.
+struct SteadyState {
+    stages: usize,
+    measured_steady_ms: f64,
+    /// Sequential per-frame wall (matched actors + host ingress).
+    sequential_ms: f64,
+    predicted_steady_ms: f64,
+    /// measured_steady_ms / sequential_ms.
+    measured_bottleneck_share: f64,
+    /// Slowest stage's share of total predicted cycles.
+    predicted_bottleneck_share: f64,
+    /// (measured − predicted bottleneck share) in percentage points.
+    err_pp: f64,
+    /// Actors whose sequential share diverges >5 pp from prediction.
+    flagged: Vec<String>,
 }
 
 /// `bwade profile` — run one compiled design per-step and join measured
@@ -792,7 +891,7 @@ fn cmd_profile(args: &Args) -> Result<()> {
     );
     for r in &rows {
         println!(
-            "{:<28} {:<14} {:>10.4} {:>6.1}% {:>10} {:>10.4} {:>6.1}% {:>+8.2}",
+            "{:<28} {:<14} {:>10.4} {:>6.1}% {:>10} {:>10.4} {:>6.1}% {:>+8.2}{}",
             r.name,
             r.variant,
             r.meas_ms,
@@ -800,7 +899,8 @@ fn cmd_profile(args: &Args) -> Result<()> {
             r.cycles,
             r.pred_ms,
             r.pred_share * 100.0,
-            r.err_pp
+            r.err_pp,
+            if r.err_pp.abs() > 5.0 { "  ⚠ >5pp" } else { "" }
         );
     }
     for (name, _op, variant, ms) in &ingress {
@@ -815,6 +915,49 @@ fn cmd_profile(args: &Args) -> Result<()> {
         report.fps
     );
 
+    // Pipelined steady-state: partition the SAME plan into stage workers
+    // (balanced by the DataflowSim cycle model, channels from its sized
+    // FIFOs) and measure the egress inter-frame interval — the per-step
+    // numbers above are sequential sums, this is the streaming quantity
+    // the simulator's II actually predicts.
+    let stages_req = args.get_usize("stages", 4)?.max(1);
+    let spec = PipelineSpec::from_models(stages_req, &report.models, &report.fifo_depths);
+    let pipe = PlanPipeline::new(&runner, &spec)?;
+    let (_, stats) = pipe.extract_stream(&images, frames, None)?;
+    let ingress_ms: f64 = ingress.iter().map(|(_, _, _, ms)| ms).sum();
+    let sequential_ms = meas_total_ms + ingress_ms;
+    let measured_bottleneck_share = stats.steady_interval.as_secs_f64() * 1e3 / sequential_ms;
+    let predicted_bottleneck_share = pipe.predicted_bottleneck_share();
+    let steady = SteadyState {
+        stages: pipe.stages(),
+        measured_steady_ms: stats.steady_interval.as_secs_f64() * 1e3,
+        sequential_ms,
+        predicted_steady_ms: device.cycles_to_ms(report.steady_cycles),
+        measured_bottleneck_share,
+        predicted_bottleneck_share,
+        err_pp: (measured_bottleneck_share - predicted_bottleneck_share) * 100.0,
+        flagged: rows
+            .iter()
+            .filter(|r| r.err_pp.abs() > 5.0)
+            .map(|r| r.name.clone())
+            .collect(),
+    };
+    println!(
+        "pipelined steady-state ({} stages): measured {:.3} ms/frame = {:.1}% of the {:.3} ms \
+         sequential frame; predicted bottleneck share {:.1}% ({:+.2} pp)",
+        steady.stages,
+        steady.measured_steady_ms,
+        steady.measured_bottleneck_share * 100.0,
+        steady.sequential_ms,
+        steady.predicted_bottleneck_share * 100.0,
+        steady.err_pp
+    );
+    if steady.flagged.is_empty() {
+        println!("no actor diverges more than 5 pp from its predicted share");
+    } else {
+        println!("⚠ actors diverging >5 pp from predicted share: {}", steady.flagged.join(", "));
+    }
+
     write_profile_md(
         Path::new(&out),
         &cfg,
@@ -825,6 +968,7 @@ fn cmd_profile(args: &Args) -> Result<()> {
         &rows,
         &ingress,
         (meas_total_ms, mean_abs, max_abs),
+        &steady,
     )?;
     println!("profile report -> {out}");
     if let Some(jpath) = args.get("json") {
@@ -837,6 +981,7 @@ fn cmd_profile(args: &Args) -> Result<()> {
             &rows,
             &ingress,
             (meas_total_ms, mean_abs, max_abs),
+            &steady,
         );
         std::fs::write(jpath, doc.to_string_pretty() + "\n")
             .with_context(|| format!("writing {jpath}"))?;
@@ -855,6 +1000,7 @@ fn write_profile_md(
     rows: &[ProfileRow],
     ingress: &[(String, String, &'static str, f64)],
     (meas_total_ms, mean_abs, max_abs): (f64, f64, f64),
+    steady: &SteadyState,
 ) -> Result<()> {
     let mut md = String::new();
     md.push_str("# Measured vs predicted — per-actor profile\n\n");
@@ -912,6 +1058,22 @@ fn write_profile_md(
         device.cycles_to_ms(report.steady_cycles),
         report.fps
     ));
+    md.push_str(&format!(
+        "- pipelined steady-state ({} stages): measured {:.3} ms/frame = {:.1}% of the \
+         {:.3} ms sequential frame; predicted bottleneck share {:.1}% ({:+.2} pp)\n",
+        steady.stages,
+        steady.measured_steady_ms,
+        steady.measured_bottleneck_share * 100.0,
+        steady.sequential_ms,
+        steady.predicted_bottleneck_share * 100.0,
+        steady.err_pp
+    ));
+    if !steady.flagged.is_empty() {
+        md.push_str(&format!(
+            "- ⚠ actors diverging >5 pp from predicted share: {}\n",
+            steady.flagged.join(", ")
+        ));
+    }
     std::fs::write(path, md).with_context(|| format!("writing {}", path.display()))
 }
 
@@ -924,6 +1086,7 @@ fn profile_json(
     rows: &[ProfileRow],
     ingress: &[(String, String, &'static str, f64)],
     (meas_total_ms, mean_abs, max_abs): (f64, f64, f64),
+    steady: &SteadyState,
 ) -> Json {
     let actors: Vec<Json> = rows
         .iter()
@@ -972,6 +1135,28 @@ fn profile_json(
                 (
                     "predicted_steady_ms",
                     Json::num(device.cycles_to_ms(report.steady_cycles)),
+                ),
+            ]),
+        ),
+        (
+            "steady_state",
+            json::obj(vec![
+                ("stages", Json::num(steady.stages as f64)),
+                ("measured_steady_ms", Json::num(steady.measured_steady_ms)),
+                ("sequential_ms", Json::num(steady.sequential_ms)),
+                ("predicted_steady_ms", Json::num(steady.predicted_steady_ms)),
+                (
+                    "measured_bottleneck_share",
+                    Json::num(steady.measured_bottleneck_share),
+                ),
+                (
+                    "predicted_bottleneck_share",
+                    Json::num(steady.predicted_bottleneck_share),
+                ),
+                ("err_pp", Json::num(steady.err_pp)),
+                (
+                    "flagged_actors",
+                    Json::Arr(steady.flagged.iter().map(|n| Json::str(n.clone())).collect()),
                 ),
             ]),
         ),

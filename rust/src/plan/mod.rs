@@ -72,6 +72,8 @@ use crate::graph::{Graph, Node};
 use crate::ops;
 use crate::tensor::{DType, Tensor, TensorData};
 
+pub mod pipeline;
+
 /// Which arithmetic a compiled plan executes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum Datapath {
@@ -1457,36 +1459,41 @@ impl PlanRunner {
             let t = out
                 .remove(&self.output)
                 .ok_or_else(|| anyhow!("plan produced no {}", self.output))?;
-            if let TensorData::F32(v) = t.raw_data() {
-                feats.extend_from_slice(v);
-            } else {
-                // Egress: the ONLY dequantization on the bit-true path —
-                // straight from the packed codes, no widening copy.
-                let scale = self
-                    .out_scale
-                    .ok_or_else(|| anyhow!("integer output from an f32 plan"))?;
-                match t.raw_data() {
-                    TensorData::I8(codes) => {
-                        feats.extend(codes.iter().map(|&c| (c as f64 / scale) as f32))
-                    }
-                    TensorData::I16(codes) => {
-                        feats.extend(codes.iter().map(|&c| (c as f64 / scale) as f32))
-                    }
-                    TensorData::I32(codes) => {
-                        feats.extend(codes.iter().map(|&c| (c as f64 / scale) as f32))
-                    }
-                    TensorData::U4(_) | TensorData::U1(_) | TensorData::B1(_) => {
-                        let view = t.code_view().expect("packed tensor has a code view");
-                        feats.extend(
-                            (0..t.numel()).map(|i| (view.get(i) as f64 / scale) as f32),
-                        );
-                    }
-                    TensorData::F32(_) => unreachable!("handled above"),
-                }
-            }
+            dequantize_egress(&t, self.out_scale, &mut feats)?;
         }
         Ok(feats)
     }
+}
+
+/// Egress dequantization shared by [`PlanRunner::extract_live`] and the
+/// streaming executor ([`pipeline::PlanPipeline`]): f32 features pass
+/// through, integer codes dequantize `code * 2^-frac` straight from the
+/// packed container (the ONLY dequantization on the bit-true path).  One
+/// implementation, so both execution modes are bitwise-identical at
+/// egress by construction.
+fn dequantize_egress(t: &Tensor, out_scale: Option<f64>, feats: &mut Vec<f32>) -> Result<()> {
+    if let TensorData::F32(v) = t.raw_data() {
+        feats.extend_from_slice(v);
+        return Ok(());
+    }
+    let scale = out_scale.ok_or_else(|| anyhow!("integer output from an f32 plan"))?;
+    match t.raw_data() {
+        TensorData::I8(codes) => {
+            feats.extend(codes.iter().map(|&c| (c as f64 / scale) as f32))
+        }
+        TensorData::I16(codes) => {
+            feats.extend(codes.iter().map(|&c| (c as f64 / scale) as f32))
+        }
+        TensorData::I32(codes) => {
+            feats.extend(codes.iter().map(|&c| (c as f64 / scale) as f32))
+        }
+        TensorData::U4(_) | TensorData::U1(_) | TensorData::B1(_) => {
+            let view = t.code_view().expect("packed tensor has a code view");
+            feats.extend((0..t.numel()).map(|i| (view.get(i) as f64 / scale) as f32));
+        }
+        TensorData::F32(_) => unreachable!("handled above"),
+    }
+    Ok(())
 }
 
 impl crate::coordinator::FeatureExtractor for PlanRunner {
@@ -1839,7 +1846,8 @@ mod tests {
     }
 
     /// Tiny NCHW "backbone": input quant-free, one Conv + ReduceMean.
-    fn tiny_bb_graph() -> Graph {
+    /// `pub(crate)` so the pipeline executor's unit tests reuse it.
+    pub(crate) fn tiny_bb_graph() -> Graph {
         let mut g = Graph::new("tiny_bb");
         g.inputs = vec!["global_in".into()];
         g.outputs = vec!["global_out".into()];

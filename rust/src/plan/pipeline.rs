@@ -1,0 +1,1093 @@
+//! Streaming pipelined executor — per-stage workers on bounded FIFOs.
+//!
+//! The FINN-style dataflow claim the repo's `DataflowSim` makes — fps is
+//! set by the slowest actor's initiation interval, not the sum of layer
+//! latencies — is only falsifiable if the emulator can actually run
+//! *frames in flight across layers*.  [`PlanPipeline`] partitions a
+//! compiled [`ExecutionPlan`] into contiguous stage ranges (balanced by
+//! the DataflowSim per-actor cycle estimates so no stage dominates), runs
+//! one worker thread per stage, and connects the stages with bounded SPSC
+//! ring-buffer channels whose frame capacities derive from the same
+//! `size_fifos` folding-search output the simulator uses.  Stage *k*
+//! executes frame *n* while stage *k+1* executes frame *n−1*: the
+//! steady-state inter-frame interval becomes a measured quantity that
+//! `bwade profile` joins against the simulator's predicted II
+//! (DESIGN.md §12).
+//!
+//! Correctness contract: every frame executes the exact same kernel
+//! sequence as [`ExecutionPlan::run_with`], in the same (topological)
+//! step order, on tensors owned by the frame's message — so pipeline
+//! output is **bitwise-identical** to the sequential runner on both
+//! datapaths.  Each stage owns a private [`PlanScratch`] buffer arena;
+//! channel capacities ≥ 2 give every stage a double-buffered hand-off
+//! (the producer refills one slot while the consumer drains the other).
+//!
+//! Shutdown is drain-based: the feeder closes the first channel, each
+//! stage drains its input and closes its output, so every frame in
+//! flight is conserved.  A poisoned stage (kernel error) stores the
+//! first error and poisons **all** channels, waking every blocked
+//! sender/receiver — the workers join without deadlock and the error
+//! propagates to the caller.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{Classified, Frame, Metrics};
+use crate::fewshot::NcmClassifier;
+use crate::hw::HwNodeModel;
+use crate::ops;
+use crate::telemetry::{Counter, Gauge, Registry};
+use crate::tensor::Tensor;
+
+use super::{dequantize_egress, ExecutionPlan, PlanRunner, PlanScratch, StepKind};
+
+// ---------------------------------------------------------------------------
+// Bounded SPSC ring-buffer channel
+// ---------------------------------------------------------------------------
+
+/// Outcome of a blocking [`RingChannel::send`].
+enum SendState {
+    /// Enqueued; `stalled` is the time spent blocked on a full ring.
+    Sent { stalled: Duration },
+    /// The pipeline failed elsewhere — the value was dropped.
+    Poisoned,
+}
+
+/// Outcome of a blocking [`RingChannel::recv`].
+enum RecvState<T> {
+    /// A message, the ring occupancy observed at dequeue (including this
+    /// message), and the time spent blocked on an empty ring.
+    Msg {
+        msg: T,
+        occupancy: usize,
+        stalled: Duration,
+    },
+    /// Sender closed and the ring is drained — clean end of stream.
+    Closed,
+    /// The pipeline failed elsewhere — stop immediately, drop in-flight.
+    Poisoned,
+}
+
+struct RingInner<T> {
+    /// Fixed-capacity ring storage: allocated once at `cap`, never grown
+    /// (`send` blocks instead), so steady state is a true circular buffer.
+    buf: VecDeque<T>,
+    closed: bool,
+    poisoned: bool,
+}
+
+/// A bounded single-producer single-consumer channel with close and
+/// poison semantics.  Capacity is fixed at construction — backpressure
+/// is the point: a full ring blocks the producer, which is exactly how
+/// the sized FIFOs of the hardware dataflow behave.
+struct RingChannel<T> {
+    cap: usize,
+    inner: Mutex<RingInner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+impl<T> RingChannel<T> {
+    fn new(cap: usize) -> RingChannel<T> {
+        let cap = cap.max(1);
+        RingChannel {
+            cap,
+            inner: Mutex::new(RingInner {
+                buf: VecDeque::with_capacity(cap),
+                closed: false,
+                poisoned: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    /// Block until there is space (or the channel is poisoned), then
+    /// enqueue.
+    fn send(&self, v: T) -> SendState {
+        let mut g = self.inner.lock().unwrap();
+        let mut stalled = Duration::ZERO;
+        loop {
+            if g.poisoned {
+                return SendState::Poisoned;
+            }
+            if g.buf.len() < self.cap {
+                break;
+            }
+            let t0 = Instant::now();
+            g = self.not_full.wait(g).unwrap();
+            stalled += t0.elapsed();
+        }
+        g.buf.push_back(v);
+        drop(g);
+        self.not_empty.notify_one();
+        SendState::Sent { stalled }
+    }
+
+    /// Block until a message arrives, the sender closes, or the channel
+    /// is poisoned.
+    fn recv(&self) -> RecvState<T> {
+        let mut g = self.inner.lock().unwrap();
+        let mut stalled = Duration::ZERO;
+        loop {
+            if g.poisoned {
+                return RecvState::Poisoned;
+            }
+            if let Some(msg) = g.buf.pop_front() {
+                let occupancy = g.buf.len() + 1;
+                drop(g);
+                self.not_full.notify_one();
+                return RecvState::Msg {
+                    msg,
+                    occupancy,
+                    stalled,
+                };
+            }
+            if g.closed {
+                return RecvState::Closed;
+            }
+            let t0 = Instant::now();
+            g = self.not_empty.wait(g).unwrap();
+            stalled += t0.elapsed();
+        }
+    }
+
+    /// Producer-side end of stream: receivers drain what is buffered,
+    /// then see [`RecvState::Closed`].
+    fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Failure broadcast: wake everyone, drop everything in flight.
+    fn poison(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.poisoned = true;
+        g.buf.clear();
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stage partitioning
+// ---------------------------------------------------------------------------
+
+/// How to cut a plan into stages: the per-actor cycle model to balance
+/// against and the `size_fifos` depths to derive channel capacities from.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineSpec {
+    /// Requested worker count (clamped to the plan's step count).
+    pub stages: usize,
+    /// DataflowSim per-actor cycles by node name ([`HwNodeModel::cycles`]).
+    /// Plan steps with no entry (host-side ingress) weigh nothing.
+    pub cycles: HashMap<String, u64>,
+    /// `size_fifos` output: `"{tensor}->{consumer}"` -> element depth.
+    pub fifo_depths: HashMap<String, u64>,
+}
+
+impl PipelineSpec {
+    /// No cycle model: stages balance on the plan's own bytes-moved
+    /// accounting (or plain step count when that is empty too).
+    pub fn uniform(stages: usize) -> PipelineSpec {
+        PipelineSpec {
+            stages,
+            cycles: HashMap::new(),
+            fifo_depths: HashMap::new(),
+        }
+    }
+
+    /// Balance against a folding-search result: the models and FIFO
+    /// depths of a `BuildReport` over the SAME lowered graph the plan
+    /// compiled (step names equal actor names, as in `bwade profile`).
+    pub fn from_models(
+        stages: usize,
+        models: &[HwNodeModel],
+        fifo_depths: &HashMap<String, u64>,
+    ) -> PipelineSpec {
+        let mut cycles = HashMap::with_capacity(models.len());
+        for m in models {
+            cycles.insert(m.name.clone(), m.cycles);
+        }
+        PipelineSpec {
+            stages,
+            cycles,
+            fifo_depths: fifo_depths.clone(),
+        }
+    }
+}
+
+/// Cut `weights` into `stages` contiguous non-empty parts minimizing the
+/// maximum part sum (exact DP — plans are tens of steps, O(k·n²) is
+/// free).  Returns the part bounds: part `s` is `bounds[s]..bounds[s+1]`.
+fn partition_contiguous(weights: &[u64], stages: usize) -> Vec<usize> {
+    let n = weights.len();
+    let k = stages.clamp(1, n.max(1));
+    let mut prefix = vec![0u64; n + 1];
+    for i in 0..n {
+        prefix[i + 1] = prefix[i] + weights[i];
+    }
+    // dp[j][i]: minimal max-part-sum over the first i steps in j parts.
+    let mut dp = vec![vec![u64::MAX; n + 1]; k + 1];
+    let mut cut = vec![vec![0usize; n + 1]; k + 1];
+    for i in 1..=n {
+        dp[1][i] = prefix[i];
+    }
+    for j in 2..=k {
+        for i in j..=n {
+            for m in (j - 1)..i {
+                let cost = dp[j - 1][m].max(prefix[i] - prefix[m]);
+                if cost < dp[j][i] {
+                    dp[j][i] = cost;
+                    cut[j][i] = m;
+                }
+            }
+        }
+    }
+    let mut bounds = vec![0usize; k + 1];
+    bounds[k] = n;
+    let mut i = n;
+    for j in (2..=k).rev() {
+        i = cut[j][i];
+        bounds[j - 1] = i;
+    }
+    bounds
+}
+
+// ---------------------------------------------------------------------------
+// PlanPipeline
+// ---------------------------------------------------------------------------
+
+/// A frame travelling the pipeline: its slot environment, owned.  Feeds
+/// sit in `acts` at their slots (messages own their tensors — there is
+/// no cross-thread borrow), stages fill and release activation slots as
+/// the sequential run loop would.
+struct FrameMsg {
+    id: u64,
+    enqueued: Instant,
+    acts: Vec<Option<Tensor>>,
+}
+
+/// A frame leaving the pipeline: dequantized features, in frame order.
+struct OutMsg {
+    id: u64,
+    enqueued: Instant,
+    feats: Vec<f32>,
+}
+
+/// Steady-state measurements of one streaming run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PipelineStats {
+    /// Frames that completed the pipeline.
+    pub frames: usize,
+    /// Wall time from first feed to last join.
+    pub wall: Duration,
+    /// First-frame fill latency (feed start -> first egress).
+    pub first_frame_latency: Duration,
+    /// Measured steady-state inter-frame interval at egress, averaged
+    /// over the back of the stream (the pipeline-fill frames skipped) —
+    /// the measured counterpart of DataflowSim's steady interval.
+    pub steady_interval: Duration,
+}
+
+/// Per-stage telemetry handles, resolved once before the workers start
+/// (the hot loop never hashes a metric name).
+struct StageTelemetry {
+    frames: Arc<Counter>,
+    recv_stall_us: Arc<Counter>,
+    send_stall_us: Arc<Counter>,
+    fifo_occupancy: Arc<Gauge>,
+    fifo_peak: Arc<Gauge>,
+}
+
+impl StageTelemetry {
+    fn resolve(reg: &Registry, stages: usize) -> Vec<StageTelemetry> {
+        (0..stages)
+            .map(|s| StageTelemetry {
+                frames: reg.counter(&format!("pipeline.stage{s}.frames")),
+                recv_stall_us: reg.counter(&format!("pipeline.stage{s}.recv_stall_us")),
+                send_stall_us: reg.counter(&format!("pipeline.stage{s}.send_stall_us")),
+                fifo_occupancy: reg.gauge(&format!("pipeline.stage{s}.fifo_occupancy")),
+                fifo_peak: reg.gauge(&format!("pipeline.stage{s}.fifo_peak")),
+            })
+            .collect()
+    }
+}
+
+/// One row of [`PlanPipeline::stage_table`].
+#[derive(Debug, Clone)]
+pub struct StageSummary {
+    pub first_step: String,
+    pub last_step: String,
+    pub steps: usize,
+    pub cycles: u64,
+    /// Capacity (frames) of the channel feeding this stage.
+    pub capacity: usize,
+}
+
+/// A compiled plan partitioned for streaming execution: per-stage worker
+/// threads over bounded ring channels.  Construction is cheap (the plan
+/// is `Arc`-shared with the [`PlanRunner`] it came from); threads exist
+/// only for the duration of a [`PlanPipeline::extract_stream`] /
+/// [`PlanPipeline::serve`] call.
+pub struct PlanPipeline {
+    plan: Arc<ExecutionPlan>,
+    img: usize,
+    feature_dim: usize,
+    out_scale: Option<f64>,
+    /// Stage `s` runs plan steps `bounds[s]..bounds[s+1]`.
+    bounds: Vec<usize>,
+    /// Predicted cycles per stage (sum of member actors; 0 for stages of
+    /// pure host-ingress steps).
+    stage_cycles: Vec<u64>,
+    /// Channel frame-capacities: `capacities[s]` feeds stage `s`,
+    /// `capacities[stages]` is the egress channel to the sink.
+    capacities: Vec<usize>,
+}
+
+impl PlanPipeline {
+    /// Partition `runner`'s compiled plan per `spec`.  The runner is
+    /// unchanged; the pipeline shares its plan (`Arc`) and egress
+    /// contract, so pipeline features are bitwise-comparable to
+    /// `runner.extract_all`.
+    pub fn new(runner: &PlanRunner, spec: &PipelineSpec) -> Result<PlanPipeline> {
+        let plan = Arc::clone(&runner.plan);
+        let n = plan.steps.len();
+        if n == 0 {
+            bail!("cannot pipeline an empty plan");
+        }
+        if plan.feeds.len() != 1 || plan.outputs.len() != 1 {
+            bail!(
+                "PlanPipeline needs a single-input single-output plan, got {} in / {} out",
+                plan.feeds.len(),
+                plan.outputs.len()
+            );
+        }
+        // Balance weights: DataflowSim cycles where the names join, the
+        // plan's own bytes-moved accounting as the fallback proxy (a
+        // non-lowered f32 plan shares no names with the HW models), and
+        // plain step count last.
+        let mut weights: Vec<u64> = Vec::with_capacity(n);
+        for step in &plan.steps {
+            weights.push(spec.cycles.get(&step.name).copied().unwrap_or(0));
+        }
+        if weights.iter().all(|&w| w == 0) {
+            if plan.step_bytes.iter().any(|&b| b > 0) {
+                weights = plan.step_bytes.clone();
+            } else {
+                weights = vec![1; n];
+            }
+        }
+        let bounds = partition_contiguous(&weights, spec.stages);
+        let stages = bounds.len() - 1;
+        let mut stage_cycles = vec![0u64; stages];
+        for (s, w) in stage_cycles.iter_mut().enumerate() {
+            for step in bounds[s]..bounds[s + 1] {
+                *w += spec.cycles.get(&plan.steps[step].name).copied().unwrap_or(0);
+            }
+        }
+        let capacities = stage_capacities(&plan, &bounds, &spec.fifo_depths);
+        Ok(PlanPipeline {
+            plan,
+            img: runner.img,
+            feature_dim: runner.feature_dim,
+            out_scale: runner.out_scale,
+            bounds,
+            stage_cycles,
+            capacities,
+        })
+    }
+
+    pub fn stages(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        self.feature_dim
+    }
+
+    pub fn img(&self) -> usize {
+        self.img
+    }
+
+    pub fn stage_cycles(&self) -> &[u64] {
+        &self.stage_cycles
+    }
+
+    pub fn capacities(&self) -> &[usize] {
+        &self.capacities
+    }
+
+    /// Predicted share of the total cycle budget held by the slowest
+    /// stage — the pipeline's theoretical steady-interval fraction of the
+    /// sequential per-frame time (perfect overlap assumed).
+    pub fn predicted_bottleneck_share(&self) -> f64 {
+        let total: u64 = self.stage_cycles.iter().sum();
+        if total == 0 {
+            return 1.0 / self.stages() as f64;
+        }
+        let max = self.stage_cycles.iter().copied().max().unwrap_or(0);
+        max as f64 / total as f64
+    }
+
+    /// Stage map for reports: step ranges, predicted cycles, channel
+    /// capacities.
+    pub fn stage_table(&self) -> Vec<StageSummary> {
+        (0..self.stages())
+            .map(|s| {
+                let (lo, hi) = (self.bounds[s], self.bounds[s + 1]);
+                StageSummary {
+                    first_step: self.plan.steps[lo].name.clone(),
+                    last_step: self.plan.steps[hi - 1].name.clone(),
+                    steps: hi - lo,
+                    cycles: self.stage_cycles[s],
+                    capacity: self.capacities[s],
+                }
+            })
+            .collect()
+    }
+
+    /// Build one frame's message: NHWC pixels -> the graph's NCHW import
+    /// layout at the plan's feed slot (exactly what the sequential runner
+    /// feeds).
+    fn ingress_msg(&self, id: u64, pixels: &[f32], enqueued: Instant) -> Result<FrameMsg> {
+        let spec = &self.plan.feeds[0];
+        let x = Tensor::new(vec![1, self.img, self.img, 3], pixels.to_vec())?.nhwc_to_nchw()?;
+        if let Some(shape) = &spec.shape {
+            if x.shape() != shape.as_slice() {
+                bail!(
+                    "feed {} has shape {:?}, graph expects {:?}",
+                    spec.name,
+                    x.shape(),
+                    shape
+                );
+            }
+        }
+        let mut acts: Vec<Option<Tensor>> = vec![None; self.plan.n_slots];
+        acts[spec.slot as usize] = Some(x);
+        Ok(FrameMsg { id, enqueued, acts })
+    }
+
+    /// Final-stage egress: take the output tensor out of the message and
+    /// dequantize exactly as the sequential runner does.
+    fn egress_msg(&self, mut msg: FrameMsg) -> Result<OutMsg> {
+        let (name, slot) = &self.plan.outputs[0];
+        let s = *slot as usize;
+        let t = match msg.acts[s].take() {
+            Some(t) => t,
+            None => match self.plan.init[s].as_ref() {
+                Some(t) => t.clone(),
+                None => bail!("graph output {name} not produced"),
+            },
+        };
+        let mut feats = Vec::with_capacity(self.feature_dim);
+        dequantize_egress(&t, self.out_scale, &mut feats)?;
+        Ok(OutMsg {
+            id: msg.id,
+            enqueued: msg.enqueued,
+            feats,
+        })
+    }
+
+    /// Stream flat NHWC frames through the stage workers; returns the
+    /// concatenated features (frame order, bitwise-identical to
+    /// `runner.extract_all`) and the steady-state measurements.
+    pub fn extract_stream(
+        &self,
+        images: &[f32],
+        frames: usize,
+        reg: Option<&Registry>,
+    ) -> Result<(Vec<f32>, PipelineStats)> {
+        let per = self.img * self.img * 3;
+        if images.len() < frames * per {
+            bail!(
+                "expected {} input elements for {frames} frames, got {}",
+                frames * per,
+                images.len()
+            );
+        }
+        let inputs = (0..frames)
+            .map(|i| self.ingress_msg(i as u64, &images[i * per..(i + 1) * per], Instant::now()));
+        let mut feats: Vec<f32> = Vec::with_capacity(frames * self.feature_dim);
+        let stats = self.run_stream(inputs, reg, |out| {
+            feats.extend_from_slice(&out.feats);
+            Ok(())
+        })?;
+        Ok((feats, stats))
+    }
+
+    /// Serve a frame stream: classify each feature vector against `ncm`
+    /// as it leaves the pipeline.  The streaming analogue of
+    /// `coordinator::serve` — frames overlap across stages instead of
+    /// batching within one.
+    pub fn serve(
+        &self,
+        ncm: &NcmClassifier,
+        rx: Receiver<Frame>,
+        reg: Option<&Registry>,
+    ) -> Result<(Metrics, Vec<Classified>, PipelineStats)> {
+        let per = self.img * self.img * 3;
+        let t0 = Instant::now();
+        let inputs = rx.into_iter().map(|f| {
+            if f.pixels.len() != per {
+                bail!("frame {} has {} pixels, expected {per}", f.id, f.pixels.len());
+            }
+            self.ingress_msg(f.id, &f.pixels, f.enqueued)
+        });
+        let mut metrics = Metrics::default();
+        let mut results: Vec<Classified> = Vec::new();
+        let stats = self.run_stream(inputs, reg, |out| {
+            let done = Instant::now();
+            let class = ncm.predict(&out.feats);
+            let latency = done.duration_since(out.enqueued);
+            metrics.latencies_us.push(latency.as_micros() as u64);
+            metrics.frames += 1;
+            metrics.batches += 1;
+            results.push(Classified {
+                id: out.id,
+                class,
+                latency,
+            });
+            Ok(())
+        })?;
+        metrics.wall = t0.elapsed();
+        Ok((metrics, results, stats))
+    }
+
+    /// The streaming core: feeder thread -> stage workers -> in-order
+    /// sink on the calling thread.  All threads are scoped — by the time
+    /// this returns, every worker has joined, error or not.
+    fn run_stream<I, F>(
+        &self,
+        inputs: I,
+        reg: Option<&Registry>,
+        mut sink: F,
+    ) -> Result<PipelineStats>
+    where
+        I: Iterator<Item = Result<FrameMsg>> + Send,
+        F: FnMut(OutMsg) -> Result<()>,
+    {
+        let stages = self.stages();
+        let chans: Vec<RingChannel<FrameMsg>> =
+            (0..stages).map(|s| RingChannel::new(self.capacities[s])).collect();
+        let egress: RingChannel<OutMsg> = RingChannel::new(self.capacities[stages]);
+        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let tel = reg.map(|r| StageTelemetry::resolve(r, stages));
+
+        // Failure broadcast: record the first error, poison every channel
+        // so every blocked worker wakes and exits.
+        let fail = |e: anyhow::Error| {
+            let mut g = first_err.lock().unwrap();
+            if g.is_none() {
+                *g = Some(e);
+            }
+            drop(g);
+            for c in &chans {
+                c.poison();
+            }
+            egress.poison();
+        };
+        let fail = &fail;
+
+        let t_start = Instant::now();
+        let mut emit: Vec<Instant> = Vec::new();
+
+        std::thread::scope(|scope| {
+            // Feeder: pull frames from the input iterator into stage 0's
+            // ring.  Closing the ring at end-of-stream starts the drain
+            // cascade.
+            let chans_ref = &chans;
+            scope.spawn(move || {
+                for item in inputs {
+                    let msg = match item {
+                        Ok(m) => m,
+                        Err(e) => {
+                            fail(e);
+                            return;
+                        }
+                    };
+                    match chans_ref[0].send(msg) {
+                        SendState::Sent { .. } => {}
+                        SendState::Poisoned => return,
+                    }
+                }
+                chans_ref[0].close();
+            });
+
+            // One worker per stage, each with a private scratch arena.
+            for s in 0..stages {
+                let (lo, hi) = (self.bounds[s], self.bounds[s + 1]);
+                let in_ch = &chans[s];
+                let out_ch = if s + 1 < stages {
+                    Some(&chans[s + 1])
+                } else {
+                    None
+                };
+                let egress_ref = &egress;
+                let stage_tel = tel.as_ref().map(|v| &v[s]);
+                scope.spawn(move || {
+                    let mut scratch = PlanScratch::default();
+                    let mut peak = 0usize;
+                    loop {
+                        let mut msg = match in_ch.recv() {
+                            RecvState::Poisoned => return,
+                            RecvState::Closed => break,
+                            RecvState::Msg { msg, occupancy, stalled } => {
+                                if let Some(t) = stage_tel {
+                                    t.frames.inc();
+                                    t.recv_stall_us.add(stalled.as_micros() as u64);
+                                    t.fifo_occupancy.set(occupancy as i64);
+                                    if occupancy > peak {
+                                        peak = occupancy;
+                                        t.fifo_peak.set(peak as i64);
+                                    }
+                                }
+                                msg
+                            }
+                        };
+                        let ran = run_steps(&self.plan, lo, hi, &mut msg.acts, &mut scratch);
+                        if let Err(e) = ran {
+                            fail(e);
+                            return;
+                        }
+                        let sent = match out_ch {
+                            Some(next) => next.send(msg),
+                            None => match self.egress_msg(msg) {
+                                Ok(out) => egress_ref.send(out),
+                                Err(e) => {
+                                    fail(e);
+                                    return;
+                                }
+                            },
+                        };
+                        match sent {
+                            SendState::Sent { stalled } => {
+                                if let Some(t) = stage_tel {
+                                    t.send_stall_us.add(stalled.as_micros() as u64);
+                                }
+                            }
+                            SendState::Poisoned => return,
+                        }
+                    }
+                    match out_ch {
+                        Some(next) => next.close(),
+                        None => egress_ref.close(),
+                    }
+                });
+            }
+
+            // Sink: in frame order on the calling thread.
+            loop {
+                match egress.recv() {
+                    RecvState::Closed | RecvState::Poisoned => break,
+                    RecvState::Msg { msg, .. } => {
+                        if let Err(e) = sink(msg) {
+                            fail(e);
+                            break;
+                        }
+                        emit.push(Instant::now());
+                    }
+                }
+            }
+        });
+
+        if let Some(e) = first_err.into_inner().unwrap() {
+            return Err(e);
+        }
+
+        let frames = emit.len();
+        let wall = t_start.elapsed();
+        let first_frame_latency = emit
+            .first()
+            .map(|t| t.duration_since(t_start))
+            .unwrap_or_default();
+        let steady_interval = if frames >= 2 {
+            // Skip the pipeline-fill frames: the steady interval is the
+            // egress spacing once every stage holds a frame.
+            let skip = stages.max(frames / 4).min(frames - 2);
+            let span = emit[frames - 1].duration_since(emit[skip]);
+            span / (frames - 1 - skip) as u32
+        } else {
+            wall
+        };
+        Ok(PipelineStats {
+            frames,
+            wall,
+            first_frame_latency,
+            steady_interval,
+        })
+    }
+}
+
+/// Channel frame-capacities from the `size_fifos` element depths: for
+/// every tensor crossing a stage cut, the deepest sized FIFO on a
+/// crossing edge is converted from elements to whole frames
+/// (`ceil(depth / tensor_numel)`).  Clamped to [2, 8]: at least double-
+/// buffered (stage overlap needs one slot filling while one drains),
+/// at most a small bounded burst — the simulator's FIFOs absorb beats
+/// within a frame, the pipeline's rings absorb whole frames.
+fn stage_capacities(
+    plan: &ExecutionPlan,
+    bounds: &[usize],
+    fifo_depths: &HashMap<String, u64>,
+) -> Vec<usize> {
+    let stages = bounds.len() - 1;
+    // Producing step and numel per slot.
+    let mut produced_at: HashMap<u32, usize> = HashMap::new();
+    let mut numel: HashMap<u32, u64> = HashMap::new();
+    for (i, step) in plan.steps.iter().enumerate() {
+        produced_at.insert(step.output, i);
+        numel.insert(step.output, step.out_shape.iter().product::<usize>() as u64);
+    }
+    for spec in &plan.feeds {
+        if let Some(shape) = &spec.shape {
+            numel.insert(spec.slot, shape.iter().product::<usize>() as u64);
+        }
+    }
+
+    let mut caps = vec![2usize; stages + 1];
+    for (ci, cap) in caps.iter_mut().enumerate() {
+        let mut frames = 2u64;
+        if ci < stages {
+            let b = bounds[ci];
+            for step in plan.steps.iter().skip(b) {
+                for &s in &step.inputs {
+                    let crosses = match produced_at.get(&s) {
+                        Some(&p) => p < b,
+                        // Feeds cross the ingress cut only.
+                        None => b == 0 && plan.feeds.iter().any(|f| f.slot == s),
+                    };
+                    if !crosses {
+                        continue;
+                    }
+                    let key = format!("{}->{}", plan.slot_names[s as usize], step.name);
+                    if let Some(&depth) = fifo_depths.get(&key) {
+                        let ne = numel.get(&s).copied().unwrap_or(0).max(1);
+                        frames = frames.max(depth.div_ceil(ne));
+                    }
+                }
+            }
+        } else {
+            for (name, slot) in &plan.outputs {
+                let key = format!("{name}->sink");
+                if let Some(&depth) = fifo_depths.get(&key) {
+                    let ne = numel.get(slot).copied().unwrap_or(0).max(1);
+                    frames = frames.max(depth.div_ceil(ne));
+                }
+            }
+        }
+        *cap = frames.clamp(2, 8) as usize;
+    }
+    caps
+}
+
+/// Execute plan steps `lo..hi` against a message-owned slot environment —
+/// the pipelined twin of the body of `ExecutionPlan::run_inner`, byte for
+/// byte the same kernel calls in the same order.  Allocations come from
+/// (and releases return to) the stage's private `scratch` arena.
+fn run_steps(
+    plan: &ExecutionPlan,
+    lo: usize,
+    hi: usize,
+    acts: &mut [Option<Tensor>],
+    scratch: &mut PlanScratch,
+) -> Result<()> {
+    for step in &plan.steps[lo..hi] {
+        if step.inplace {
+            let StepKind::F32(spec) = &step.kind else {
+                bail!("plan bug: in-place integer step {}", step.name);
+            };
+            let mut buf = acts[step.inputs[0] as usize].take().ok_or_else(|| {
+                anyhow!("plan bug: in-place input of {} not materialized", step.name)
+            })?;
+            {
+                let rest: Vec<&Tensor> = step.inputs[1..]
+                    .iter()
+                    .map(|&s| resolve_msg(plan, s, acts))
+                    .collect::<Result<_>>()?;
+                ops::execute_spec_inplace(spec, &mut buf, &rest).map_err(|e| {
+                    anyhow!("executing {} ({}): {e}", step.name, step.op)
+                })?;
+            }
+            scratch.stats.inplace_steps += 1;
+            acts[step.output as usize] = Some(buf);
+        } else {
+            let mut out = scratch.alloc_typed(&step.out_shape, step.out_dtype)?;
+            {
+                let inputs: Vec<&Tensor> = step
+                    .inputs
+                    .iter()
+                    .map(|&s| resolve_msg(plan, s, acts))
+                    .collect::<Result<_>>()?;
+                match &step.kind {
+                    StepKind::F32(spec) => ops::execute_spec_into(spec, &inputs, &mut out),
+                    StepKind::Int(spec) => ops::execute_int_spec_into(spec, &inputs, &mut out),
+                }
+                .map_err(|e| anyhow!("executing {} ({}): {e}", step.name, step.op))?;
+            }
+            acts[step.output as usize] = Some(out);
+        }
+        for &dead in &step.release {
+            if let Some(t) = acts[dead as usize].take() {
+                scratch.recycle(t);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Resolve a slot against the message's owned environment: activation (or
+/// feed, which the ingress placed in `acts`) first, then compile-time
+/// initializers.
+fn resolve_msg<'a>(
+    plan: &'a ExecutionPlan,
+    slot: u32,
+    acts: &'a [Option<Tensor>],
+) -> Result<&'a Tensor> {
+    let s = slot as usize;
+    if let Some(t) = acts[s].as_ref() {
+        return Ok(t);
+    }
+    if let Some(t) = plan.init[s].as_ref() {
+        return Ok(t);
+    }
+    bail!("tensor {} unavailable", plan.slot_names[s])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::tiny_bb_graph;
+    use super::*;
+    use crate::build::{lower_bit_true, synth_backbone_graph};
+    use crate::coordinator::FeatureExtractor;
+    use crate::fixedpoint::headline_config;
+    use crate::rng::Rng;
+
+    fn random_frames(runner: &PlanRunner, frames: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..frames * runner.img() * runner.img() * 3).map(|_| rng.next_f32()).collect()
+    }
+
+    #[test]
+    fn partition_balances_cycle_weights() {
+        let w = [10u64, 1, 1, 10, 1, 1];
+        let bounds = partition_contiguous(&w, 2);
+        assert_eq!(bounds, vec![0, 3, 6], "12/12 split beats any alternative");
+        assert_eq!(partition_contiguous(&w, 1), vec![0, 6]);
+        // More stages than steps clamps to one step per stage.
+        assert_eq!(partition_contiguous(&[5, 5], 4), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn partition_uniform_when_unweighted() {
+        let bounds = partition_contiguous(&[1u64; 6], 3);
+        assert_eq!(bounds, vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn ring_capacity_one_makes_progress() {
+        let ch = RingChannel::new(1);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for i in 0..100u32 {
+                    match ch.send(i) {
+                        SendState::Sent { .. } => {}
+                        SendState::Poisoned => panic!("unexpected poison"),
+                    }
+                }
+                ch.close();
+            });
+            let mut got = Vec::new();
+            loop {
+                match ch.recv() {
+                    RecvState::Msg { msg, occupancy, .. } => {
+                        assert!(occupancy <= 1, "capacity-1 ring never holds more than 1");
+                        got.push(msg);
+                    }
+                    RecvState::Closed => break,
+                    RecvState::Poisoned => panic!("unexpected poison"),
+                }
+            }
+            assert_eq!(got, (0..100).collect::<Vec<u32>>());
+        });
+    }
+
+    #[test]
+    fn ring_poison_unblocks_blocked_sender() {
+        let ch = RingChannel::new(1);
+        match ch.send(0u32) {
+            SendState::Sent { .. } => {}
+            SendState::Poisoned => panic!("fresh ring not poisoned"),
+        }
+        std::thread::scope(|s| {
+            let h = s.spawn(|| ch.send(1u32));
+            // The sender is (or will be) blocked on the full ring; poison
+            // must wake it with SendState::Poisoned, not deadlock.
+            std::thread::sleep(Duration::from_millis(20));
+            ch.poison();
+            match h.join().unwrap() {
+                SendState::Poisoned => {}
+                SendState::Sent { .. } => panic!("send succeeded after poison"),
+            }
+        });
+        match ch.recv() {
+            RecvState::Poisoned => {}
+            _ => panic!("poisoned ring must report poison to receivers"),
+        }
+    }
+
+    #[test]
+    fn pipeline_matches_runner_f32() {
+        let g = tiny_bb_graph();
+        let frames = 7;
+        let runner = PlanRunner::new(&g, frames).unwrap();
+        let images = random_frames(&runner, frames, 42);
+        let seq = runner.extract_all(&images, frames).unwrap();
+        let pipe = PlanPipeline::new(&runner, &PipelineSpec::uniform(2)).unwrap();
+        assert_eq!(pipe.stages(), 2);
+        let (feats, stats) = pipe.extract_stream(&images, frames, None).unwrap();
+        assert_eq!(feats, seq, "pipeline features must be bitwise-identical");
+        assert_eq!(stats.frames, frames);
+    }
+
+    #[test]
+    fn pipeline_matches_runner_bit_true() {
+        let quant = headline_config();
+        let mut g = synth_backbone_graph([4, 8, 8, 16], 16, quant.act.bits, quant.act.frac_bits);
+        lower_bit_true(&mut g, &quant).unwrap();
+        let frames = 4;
+        let runner = PlanRunner::new_bit_true(&g, frames).unwrap();
+        let images = random_frames(&runner, frames, 7);
+        let seq = runner.extract_all(&images, frames).unwrap();
+        let pipe = PlanPipeline::new(&runner, &PipelineSpec::uniform(3)).unwrap();
+        assert_eq!(pipe.stages(), 3);
+        let (feats, _) = pipe.extract_stream(&images, frames, None).unwrap();
+        assert_eq!(feats, seq, "bit-true pipeline must match the sequential plan");
+    }
+
+    #[test]
+    fn capacity_one_channels_still_stream_every_frame() {
+        let g = tiny_bb_graph();
+        let frames = 9;
+        let runner = PlanRunner::new(&g, frames).unwrap();
+        let images = random_frames(&runner, frames, 3);
+        let seq = runner.extract_all(&images, frames).unwrap();
+        let mut pipe = PlanPipeline::new(&runner, &PipelineSpec::uniform(2)).unwrap();
+        // Backpressure at its tightest: every hand-off is a rendezvous.
+        for c in pipe.capacities.iter_mut() {
+            *c = 1;
+        }
+        let (feats, stats) = pipe.extract_stream(&images, frames, None).unwrap();
+        assert_eq!(feats, seq);
+        assert_eq!(stats.frames, frames, "shutdown must conserve frames in flight");
+    }
+
+    #[test]
+    fn telemetry_counts_frames_per_stage() {
+        let g = tiny_bb_graph();
+        let frames = 5;
+        let runner = PlanRunner::new(&g, frames).unwrap();
+        let images = random_frames(&runner, frames, 11);
+        let pipe = PlanPipeline::new(&runner, &PipelineSpec::uniform(2)).unwrap();
+        let reg = Registry::new();
+        pipe.extract_stream(&images, frames, Some(&reg)).unwrap();
+        let snap = reg.snapshot();
+        assert_eq!(snap.counters.get("pipeline.stage0.frames"), Some(&(frames as u64)));
+        assert_eq!(snap.counters.get("pipeline.stage1.frames"), Some(&(frames as u64)));
+        assert!(snap.gauges.contains_key("pipeline.stage0.fifo_peak"));
+    }
+
+    #[test]
+    fn poisoned_stage_propagates_and_joins() {
+        let g = tiny_bb_graph();
+        let runner = PlanRunner::new(&g, 4).unwrap();
+        let images = random_frames(&runner, 6, 5);
+        let pipe = PlanPipeline::new(&runner, &PipelineSpec::uniform(2)).unwrap();
+        let per = pipe.img() * pipe.img() * 3;
+        // Frame 2 carries an integer tensor into the f32 Conv: the stage
+        // kernel errors mid-stream with frames in flight behind it.
+        let inputs = (0..6usize).map(|i| {
+            if i == 2 {
+                let bad = Tensor::new_i32(vec![1, 3, 4, 4], vec![0; 48]).unwrap();
+                let mut acts: Vec<Option<Tensor>> = vec![None; pipe.plan.n_slots];
+                acts[pipe.plan.feeds[0].slot as usize] = Some(bad);
+                Ok(FrameMsg {
+                    id: i as u64,
+                    enqueued: Instant::now(),
+                    acts,
+                })
+            } else {
+                pipe.ingress_msg(i as u64, &images[i * per..(i + 1) * per], Instant::now())
+            }
+        });
+        let mut seen = 0usize;
+        let err = pipe
+            .run_stream(inputs, None, |_| {
+                seen += 1;
+                Ok(())
+            })
+            .expect_err("a failing kernel must poison the pipeline");
+        assert!(
+            format!("{err:#}").contains("executing"),
+            "error should name the failing step, got: {err:#}"
+        );
+        assert!(seen <= 2, "frames behind the poison must not be emitted");
+    }
+
+    #[test]
+    fn feeder_error_propagates() {
+        let g = tiny_bb_graph();
+        let runner = PlanRunner::new(&g, 4).unwrap();
+        let images = random_frames(&runner, 2, 9);
+        let pipe = PlanPipeline::new(&runner, &PipelineSpec::uniform(2)).unwrap();
+        let per = pipe.img() * pipe.img() * 3;
+        let inputs = (0..3usize).map(|i| {
+            if i == 2 {
+                Err(anyhow!("camera died"))
+            } else {
+                pipe.ingress_msg(i as u64, &images[i * per..(i + 1) * per], Instant::now())
+            }
+        });
+        let err = pipe.run_stream(inputs, None, |_| Ok(())).expect_err("feeder error propagates");
+        assert!(format!("{err:#}").contains("camera died"));
+    }
+
+    #[test]
+    fn fifo_depths_deepen_channels_within_clamp() {
+        let g = tiny_bb_graph();
+        let runner = PlanRunner::new(&g, 2).unwrap();
+        // tiny_bb: c0 produces "c" (numel 80) consumed by gap.  A sized
+        // depth of 400 elements = 5 frames in flight.
+        let mut spec = PipelineSpec::uniform(2);
+        spec.fifo_depths.insert("c->gap".to_string(), 400);
+        let pipe = PlanPipeline::new(&runner, &spec).unwrap();
+        let caps = pipe.capacities();
+        assert!(
+            caps.contains(&5),
+            "a 5-frame fifo depth must deepen the crossing channel, got {caps:?}"
+        );
+        // And an absurd depth clamps at 8.
+        let mut spec = PipelineSpec::uniform(2);
+        spec.fifo_depths.insert("c->gap".to_string(), 80 * 1000);
+        let pipe = PlanPipeline::new(&runner, &spec).unwrap();
+        assert!(pipe.capacities().iter().all(|&c| c <= 8));
+    }
+
+    #[test]
+    fn stage_table_covers_all_steps() {
+        let g = tiny_bb_graph();
+        let runner = PlanRunner::new(&g, 2).unwrap();
+        let pipe = PlanPipeline::new(&runner, &PipelineSpec::uniform(2)).unwrap();
+        let table = pipe.stage_table();
+        assert_eq!(table.len(), 2);
+        let steps: usize = table.iter().map(|s| s.steps).sum();
+        assert_eq!(steps, pipe.plan.num_steps());
+        assert!(table.iter().all(|s| s.capacity >= 2));
+    }
+}

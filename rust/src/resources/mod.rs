@@ -136,6 +136,41 @@ impl Device {
             self.dma_bandwidth_bytes_per_s / bytes_per_frame as f64
         }
     }
+
+    /// Total on-chip BRAM capacity in bits: every BRAM36 block holds
+    /// 36 Kib (140 blocks on the Zynq-7020 ≈ 4.9 Mib of datasheet block
+    /// RAM).  Weight memories beyond this cannot be fully on-chip.
+    pub fn bram_capacity_bits(&self) -> u64 {
+        (self.budget.bram36 * 36.0 * 1024.0) as u64
+    }
+
+    /// The memory-aware throughput ceiling: a design whose weights fit
+    /// on-chip streams only activations over the DMA link (the plain
+    /// [`Device::bandwidth_fps_ceiling`]); one that overflows BRAM must
+    /// re-stream the spilled weight bytes every frame, which lowers the
+    /// ceiling and marks the config BRAM-bound rather than DMA-bound.
+    pub fn memory_fps_ceiling(&self, bytes_per_frame: u64, weight_bits: u64) -> MemoryCeiling {
+        let spilled_bits = weight_bits.saturating_sub(self.bram_capacity_bits());
+        let spilled_weight_bytes = spilled_bits.div_ceil(8);
+        MemoryCeiling {
+            fps: self.bandwidth_fps_ceiling(bytes_per_frame + spilled_weight_bytes),
+            spilled_weight_bytes,
+            bram_bound: spilled_bits > 0,
+        }
+    }
+}
+
+/// Verdict of [`Device::memory_fps_ceiling`]: the achievable-fps ceiling
+/// once on-chip weight capacity is accounted for, and which resource set
+/// it — DMA bandwidth alone, or BRAM overflow forcing weight re-streaming.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryCeiling {
+    /// fps ceiling over the DMA link (activations + any spilled weights).
+    pub fps: f64,
+    /// Weight bytes that do not fit on-chip and re-stream every frame.
+    pub spilled_weight_bytes: u64,
+    /// True when the weight memory overflows the device's BRAM capacity.
+    pub bram_bound: bool,
 }
 
 /// BRAM36 blocks needed for a memory of `depth` words x `width` bits,
@@ -226,6 +261,31 @@ mod tests {
         assert!((d.bandwidth_fps_ceiling(1_000_000) - 1000.0).abs() < 1e-9);
         assert!((d.bandwidth_fps_ceiling(500_000) - 2000.0).abs() < 1e-9);
         assert!(d.bandwidth_fps_ceiling(0).is_infinite());
+    }
+
+    #[test]
+    fn bram_capacity_matches_block_count() {
+        let d = Device::pynq_z1();
+        // 140 BRAM36 x 36 Kib = 5_160_960 bits (~4.9 Mib).
+        assert_eq!(d.bram_capacity_bits(), 140 * 36 * 1024);
+    }
+
+    #[test]
+    fn memory_ceiling_distinguishes_dma_from_bram_bound() {
+        let d = Device::pynq_z1();
+        // Weights fit on-chip: the ceiling is the plain DMA bound.
+        let fit = d.memory_fps_ceiling(1_000_000, 1024);
+        assert!(!fit.bram_bound);
+        assert_eq!(fit.spilled_weight_bytes, 0);
+        assert!((fit.fps - d.bandwidth_fps_ceiling(1_000_000)).abs() < 1e-9);
+        // Weights overflow BRAM by exactly 8 MiB of spill: those bytes
+        // re-stream every frame alongside the activations, so the
+        // ceiling drops well below the DMA-only bound.
+        let spill_bits = d.bram_capacity_bits() + 8 * 1024 * 1024 * 8;
+        let spilled = d.memory_fps_ceiling(1_000_000, spill_bits);
+        assert!(spilled.bram_bound);
+        assert_eq!(spilled.spilled_weight_bytes, 8 * 1024 * 1024);
+        assert!(spilled.fps < fit.fps);
     }
 
     #[test]

@@ -14,6 +14,7 @@ use bwade::fewshot::NcmClassifier;
 use bwade::fixedpoint::{headline_config, table2_configs, FxpFormat};
 use bwade::graph::Graph;
 use bwade::ops::execute_interpreted;
+use bwade::plan::pipeline::{PipelineSpec, PlanPipeline};
 use bwade::plan::{Datapath, ExecutionPlan, PlanRunner, PlanScratch};
 use bwade::rng::Rng;
 use bwade::tensor::Tensor;
@@ -443,6 +444,40 @@ fn bit_true_runner_features_match_f32_runner_quantized() {
     // The f32 lowered graph is exact at these widths, so dequantized
     // integer features are bitwise equal to the float features.
     assert_eq!(f_feats, i_feats);
+}
+
+/// The streaming executor's acceptance criterion: for every Table-II
+/// config, on BOTH datapaths, the staged pipeline's features are bitwise
+/// identical to the sequential `PlanRunner` on the same frames.
+#[test]
+fn pipeline_bitwise_equals_runner_across_table2() {
+    for (name, quant) in table2_configs() {
+        for datapath in [Datapath::F32, Datapath::BitTrue] {
+            let mut graph =
+                synth_backbone_graph([4, 8, 8, 16], 16, quant.act.bits, quant.act.frac_bits);
+            let runner = match datapath {
+                Datapath::F32 => {
+                    requantize_graph(&mut graph, &quant).unwrap();
+                    PlanRunner::new(&graph, 2).unwrap()
+                }
+                Datapath::BitTrue => {
+                    lower_bit_true(&mut graph, &quant).unwrap();
+                    PlanRunner::new_bit_true(&graph, 2).unwrap()
+                }
+            };
+            let pipe = PlanPipeline::new(&runner, &PipelineSpec::uniform(3)).unwrap();
+            let images = common::random_images(4, 16, 0xF1F0);
+            let want = runner.extract_all(&images, 4).unwrap();
+            let (got, stats) = pipe.extract_stream(&images, 4, None).unwrap();
+            assert_eq!(stats.frames, 4, "{name}: pipeline dropped frames");
+            assert_eq!(
+                want,
+                got,
+                "{name}/{}: pipeline diverged from the sequential runner",
+                datapath.describe()
+            );
+        }
+    }
 }
 
 /// Deterministic extraction and batch-size independence on the plan path

@@ -15,6 +15,7 @@ use bwade::coordinator::{
 use bwade::dse::SweepSpec;
 use bwade::fewshot::{sample_episode, NcmClassifier};
 use bwade::fixedpoint::headline_config;
+use bwade::plan::pipeline::{PipelineSpec, PlanPipeline};
 use bwade::plan::{Datapath, PlanRunner};
 use bwade::rng::Rng;
 
@@ -105,6 +106,37 @@ fn pool_matches_single_runner_bitwise() {
             classes_by_id(single),
             classes_by_id(pooled),
             "pool diverged from the single runner on the {} datapath",
+            datapath.describe()
+        );
+    }
+}
+
+#[test]
+fn pipeline_serve_matches_single_runner() {
+    // The streaming executor's serving path: same frames, same NCM,
+    // class-for-class identical to the sequential `serve`, with every
+    // frame conserved through the stage workers on both datapaths.
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::from_millis(2),
+    };
+    for datapath in [Datapath::F32, Datapath::BitTrue] {
+        let base = make_runner(datapath, 4);
+        let ncm = make_ncm(&base);
+        let frames = capture_frames(40);
+
+        let (single_metrics, single) = serve(&base, &ncm, replay(&frames), policy).unwrap();
+        assert_eq!(single_metrics.frames, 40);
+
+        let pipe = PlanPipeline::new(&base, &PipelineSpec::uniform(3)).unwrap();
+        let (metrics, piped, stats) = pipe.serve(&ncm, replay(&frames), None).unwrap();
+        assert_eq!(metrics.frames, 40);
+        assert_eq!(stats.frames, 40, "frames lost inside the stage workers");
+        assert!(metrics.fps() > 0.0);
+        assert_eq!(
+            classes_by_id(single),
+            classes_by_id(piped),
+            "pipeline serve diverged from the single runner on the {} datapath",
             datapath.describe()
         );
     }
