@@ -14,27 +14,36 @@
 //! * the pipeline stage sweep (always runs): the streaming pipelined
 //!   executor at 1 -> N stages for both datapaths, recorded to
 //!   BENCH_pipeline.json (schema DESIGN.md §12) — stage-1 rows are the
-//!   sequential single-runner baseline.
+//!   sequential single-runner baseline;
+//! * the composed topology sweep (always runs): P whole pipelines
+//!   behind the work-stealing pool × S stages × per-stage replication R
+//!   (DESIGN.md §13), recorded to BENCH_topology.json — baseline,
+//!   pool-only, pipeline-only, replicated-pipeline and composed points
+//!   through identical serve plumbing.
 //!
 //! Knobs: BWADE_BENCH_FRAMES (default 240), BWADE_BENCH_MAX_REPLICAS
 //! (default: available parallelism), BWADE_BENCH_MAX_STAGES (default:
 //! min(host, 8)), BWADE_BENCH_SECTIONS (comma list of
-//! pjrt,replicas,pipeline; default all).
+//! pjrt,replicas,pipeline,topology; default all).
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use bwade::artifacts::{ArtifactPaths, FewshotBank};
 use bwade::benchutil::{
-    env_usize, write_pipeline_json, write_serving_json, PipelineRow, ServingRow,
+    env_usize, write_pipeline_json, write_serving_json, write_topology_json, PipelineRow,
+    ServingRow, TopologyRow,
 };
 use bwade::build::{
     implement_lowered, lower_bit_true, requantize_graph, synth_backbone_graph, DesignConfig,
 };
-use bwade::coordinator::{serve, serve_pool, BatchPolicy, FeatureExtractor, FrameSource};
+use bwade::coordinator::{
+    serve, serve_pool, BatchPolicy, FeatureExtractor, FrameSource, PipelineReplica,
+};
 use bwade::dse::SweepSpec;
 use bwade::fewshot::{sample_episode, NcmClassifier};
 use bwade::fixedpoint::headline_config;
+use bwade::plan::elastic::seed_replicas;
 use bwade::plan::pipeline::{PipelineSpec, PlanPipeline};
 use bwade::plan::{Datapath, PlanRunner};
 use bwade::resources::Device;
@@ -54,6 +63,9 @@ fn main() {
     }
     if want("pipeline") {
         pipeline_sweep(frames);
+    }
+    if want("topology") {
+        topology_sweep(frames);
     }
     println!("\nfig5_throughput done");
 }
@@ -408,4 +420,180 @@ fn pipeline_sweep(frames: usize) {
     let out = std::path::Path::new("BENCH_pipeline.json");
     write_pipeline_json(out, host, &rows).expect("write BENCH_pipeline.json");
     println!("recorded {} pipeline rows -> {}", rows.len(), out.display());
+}
+
+// ---------------------------------------------------------------------------
+// Section 4: composed topology sweep — P pipelines × S stages × R (always runs)
+// ---------------------------------------------------------------------------
+
+type Runners = Vec<Box<dyn FeatureExtractor + Send>>;
+
+fn topology_sweep(frames: usize) {
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let spec = SweepSpec::default();
+    let cfg = headline_config();
+    let device = Device::pynq_z1();
+
+    println!(
+        "\n== composed topology: P pipelines x S stages x per-stage R, synthetic backbone {:?} @ \
+         {}px, config {} ({}-way host, {frames} frames per point) ==",
+        spec.widths,
+        spec.img,
+        cfg.describe(),
+        host
+    );
+
+    // Shared support set: prototypes are identical across every point.
+    let bank = spec.make_bank();
+    let mut rng = Rng::new(7);
+    let ep = sample_episode(&mut rng, spec.num_classes, spec.per_class, 5, 5, 1).unwrap();
+    let per = spec.img * spec.img * 3;
+    let mut sup = Vec::new();
+    for &i in &ep.support {
+        sup.extend_from_slice(&bank[i * per..(i + 1) * per]);
+    }
+
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(5),
+    };
+    let mut rows: Vec<TopologyRow> = Vec::new();
+    for datapath in [Datapath::F32, Datapath::BitTrue] {
+        // Same lowering as the pipeline sweep: HW graph on both datapaths
+        // so the DataflowSim cycle model drives the stage partition.
+        let mut graph =
+            synth_backbone_graph(spec.widths, spec.img, cfg.act.bits, cfg.act.frac_bits);
+        match datapath {
+            Datapath::F32 => {
+                requantize_graph(&mut graph, &cfg).expect("requantize");
+                run_default_pipeline(&mut graph, None, 0.0).expect("lower");
+                assert!(convert_to_hw::is_fully_hw(&graph), "lowering left non-HW ops");
+            }
+            Datapath::BitTrue => lower_bit_true(&mut graph, &cfg).expect("lower"),
+        }
+        let build_cfg = DesignConfig {
+            quant: cfg,
+            target_fps: None,
+            max_utilization: 0.85,
+            verify: false,
+        };
+        let mut hw = graph.clone();
+        let report = implement_lowered(&mut hw, &build_cfg, &device).expect("implement");
+        let runner = PlanRunner::with_datapath(&graph, 8, datapath).expect("plan");
+        let sup_feats = runner.extract_all(&sup, ep.support.len()).unwrap();
+        let ncm =
+            NcmClassifier::fit(&sup_feats, runner.feature_dim(), &ep.support_labels, 5).unwrap();
+
+        let make_pipe = |stages: usize| -> PlanPipeline {
+            let pspec = PipelineSpec::from_models(stages, &report.models, &report.fifo_depths);
+            PlanPipeline::new(&runner, &pspec).unwrap()
+        };
+
+        // Every point runs through identical serve plumbing (streams ->
+        // pool -> batcher -> NCM), so the fps columns are comparable.
+        let mut run_point =
+            |label: &str, pipelines: usize, stages: usize, reps: &[usize], runners: Runners| {
+                let streams = (pipelines * 2).max(2);
+                let (tx, rx) = mpsc::sync_channel(64.max(streams * 8));
+                let mut id_base = 0u64;
+                for s in 0..streams {
+                    let count = frames / streams + usize::from(s < frames % streams);
+                    FrameSource {
+                        count,
+                        rate_fps: None,
+                        img: spec.img,
+                        seed: 11 + s as u64 * 7919,
+                    }
+                    .spawn_into(tx.clone(), id_base);
+                    id_base += count as u64;
+                }
+                drop(tx);
+                let (preport, results) = serve_pool(runners, &ncm, rx, policy).expect("pool");
+                assert_eq!(results.len(), frames, "topology dropped or duplicated frames");
+                let fps = preport.aggregate.fps();
+                let workers = pipelines * reps.iter().sum::<usize>();
+                let srep = reps.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(",");
+                println!(
+                    "{:>8} {label:<21} P{pipelines} S{stages} R[{srep}] ({workers:>2} workers): \
+                     {fps:>8.1} fps",
+                    datapath.describe()
+                );
+                rows.push(TopologyRow {
+                    config: cfg.describe(),
+                    datapath: datapath.describe().to_string(),
+                    pipelines,
+                    stages,
+                    stage_replicas: srep,
+                    workers,
+                    frames,
+                    fps,
+                });
+                fps
+            };
+
+        // P1 S1 — single-runner baseline.
+        let base_fps = run_point("baseline", 1, 1, &[1], vec![Box::new(runner.replicate())]);
+        // P2 S1 — pool-only: two whole-plan replicas, no staging.
+        let pool_fps = run_point(
+            "pool-only",
+            2,
+            1,
+            &[1],
+            (0..2).map(|_| Box::new(runner.replicate()) as _).collect(),
+        );
+        // P1 S3 — pipeline-only: DataflowSim DP cuts, one worker/stage.
+        let p3 = make_pipe(3);
+        let reps3 = p3.replicas().to_vec();
+        let pipe_fps = run_point(
+            "pipeline-only",
+            1,
+            p3.stages(),
+            &reps3,
+            vec![Box::new(PipelineReplica::new(p3.replicate(), policy.max_batch, None))],
+        );
+        // P1 S3 R=seeded — per-stage replication water-filled onto the
+        // predicted per-stage cycles (the --topology / elastic seed).
+        let cyc: Vec<u64> = p3.stage_table().iter().map(|r| r.cycles).collect();
+        let p3r = p3.with_replicas(&seed_replicas(&cyc, p3.stages() + 2));
+        let reps3r = p3r.replicas().to_vec();
+        let piper_fps = run_point(
+            "pipeline+replication",
+            1,
+            p3r.stages(),
+            &reps3r,
+            vec![Box::new(PipelineReplica::new(p3r, policy.max_batch, None))],
+        );
+        // P2 S2 R=seeded — the composed point: pool × stages × workers.
+        let p2 = make_pipe(2);
+        let cyc2: Vec<u64> = p2.stage_table().iter().map(|r| r.cycles).collect();
+        let p2r = p2.with_replicas(&seed_replicas(&cyc2, 3));
+        let reps2r = p2r.replicas().to_vec();
+        let composed_fps = run_point(
+            "composed",
+            2,
+            p2r.stages(),
+            &reps2r,
+            (0..2)
+                .map(|_| {
+                    Box::new(PipelineReplica::new(p2r.replicate(), policy.max_batch, None)) as _
+                })
+                .collect(),
+        );
+
+        let best_pipe = pipe_fps.max(piper_fps);
+        println!(
+            "  [{}] composed beats best pool-only AND best pipeline-only ({}: composed {:.1} vs \
+             pool {:.1} / pipeline {:.1} fps; baseline {:.1})",
+            if composed_fps > pool_fps && composed_fps > best_pipe { "x" } else { " " },
+            datapath.describe(),
+            composed_fps,
+            pool_fps,
+            best_pipe,
+            base_fps
+        );
+    }
+
+    let out = std::path::Path::new("BENCH_topology.json");
+    write_topology_json(out, host, &rows).expect("write BENCH_topology.json");
+    println!("recorded {} topology rows -> {}", rows.len(), out.display());
 }

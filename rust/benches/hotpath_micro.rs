@@ -51,6 +51,56 @@ fn overhead_chain(depth: usize, width: usize) -> Graph {
     g
 }
 
+/// The pre-SWAR blocked-i8 MVAU inner loop, kept verbatim as the
+/// "before" reference: scalar accumulate with the data-dependent
+/// zero-skip branch, full kernel semantics (i32 accumulate, bias, fused
+/// threshold activation).  The shipped `ops` kernel replaced this with
+/// the branch-free 4-accumulator form; the bench below differential-
+/// checks the two on identical codes and records the speedup row.
+#[allow(clippy::too_many_arguments)]
+fn mvau_i8_zero_skip(
+    x: &[i8],
+    w: &[i8],
+    bias: &[i32],
+    thr: &[i32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    out_mul: i64,
+    out_add: i64,
+) -> Vec<i8> {
+    const BLOCK: usize = 256;
+    let mut out = vec![0i8; rows * n];
+    let mut acc = vec![0i32; BLOCK];
+    for r in 0..rows {
+        let xrow = &x[r * k..(r + 1) * k];
+        let mut jb = 0;
+        while jb < n {
+            let nb = BLOCK.min(n - jb);
+            let acc = &mut acc[..nb];
+            acc.fill(0);
+            for (kk, &xv) in xrow.iter().enumerate() {
+                let xv = xv as i32;
+                if xv == 0 {
+                    continue;
+                }
+                let wrow = &w[kk * n + jb..kk * n + jb + nb];
+                for (a, &wv) in acc.iter_mut().zip(wrow) {
+                    *a += xv * wv as i32;
+                }
+            }
+            for (jj, &a) in acc.iter().enumerate() {
+                let col = jb + jj;
+                let v = a as i64 + bias[col] as i64;
+                let q = thr.partition_point(|&t| (t as i64) <= v) as i64;
+                out[r * n + col] = (q * out_mul + out_add) as i8;
+            }
+            jb += nb;
+        }
+    }
+    out
+}
+
 fn main() {
     println!("== hotpath micro-benchmarks (L3 §Perf) ==\n");
 
@@ -236,16 +286,10 @@ fn main() {
         ));
         // Packed containers: same codes in i8 activations/weights, the
         // blocked i8 x i8 -> i32-accumulate inner loop, i8 output codes.
-        let x8 = Tensor::new_i8(
-            vec![rows, k],
-            xi.data_i32().iter().map(|&c| c as i8).collect(),
-        )
-        .unwrap();
-        let w8 = Tensor::new_i8(
-            vec![k, n],
-            wi.data_i32().iter().map(|&c| c as i8).collect(),
-        )
-        .unwrap();
+        let x8_codes: Vec<i8> = xi.data_i32().iter().map(|&c| c as i8).collect();
+        let w8_codes: Vec<i8> = wi.data_i32().iter().map(|&c| c as i8).collect();
+        let x8 = Tensor::new_i8(vec![rows, k], x8_codes.clone()).unwrap();
+        let w8 = Tensor::new_i8(vec![k, n], w8_codes.clone()).unwrap();
         let mut o8 = Tensor::zeros_typed(vec![rows, n], DType::I8);
         let r_p = bench("kernel: MVAU packed i8 (blocked, i32 acc)", 3, 20, || {
             execute_int_spec_into(&ispec, &[&x8, &w8, &bi, &ti], &mut o8).unwrap();
@@ -260,6 +304,48 @@ fn main() {
             "256x144 x 144x64 + act",
             ("i32", &r_i),
             ("packed-i8", &r_p),
+        ));
+
+        // SWAR before/after: the shipped blocked-i8 kernel now runs the
+        // branch-free 4-accumulator inner loop; the old zero-skip scalar
+        // form lives above as `mvau_i8_zero_skip`.  Same codes, bias and
+        // fused thresholds through both — bitwise equality first, then
+        // the recorded speedup row.
+        let ref_out = mvau_i8_zero_skip(
+            &x8_codes,
+            &w8_codes,
+            bi.data_i32(),
+            ti.data_i32(),
+            rows,
+            k,
+            n,
+            1,
+            0,
+        );
+        let ref_codes: Vec<i32> = ref_out.iter().map(|&c| c as i32).collect();
+        assert_eq!(ref_codes, o8.codes_i32(), "SWAR MVAU diverged from zero-skip reference");
+        let r_ref = bench("kernel: MVAU i8 zero-skip (pre-SWAR scalar)", 3, 20, || {
+            std::hint::black_box(mvau_i8_zero_skip(
+                &x8_codes,
+                &w8_codes,
+                bi.data_i32(),
+                ti.data_i32(),
+                rows,
+                k,
+                n,
+                1,
+                0,
+            ));
+        });
+        println!(
+            "  -> SWAR 4-acc inner loop vs zero-skip scalar: {:.2}x",
+            r_ref.mean().as_secs_f64() / r_p.mean().as_secs_f64().max(1e-12)
+        );
+        kernel_rows.push(KernelRow::from_results(
+            "mvau",
+            "256x144 x 144x64 + act",
+            ("zero-skip-scalar", &r_ref),
+            ("swar-4acc", &r_p),
         ));
 
         // Sub-byte containers, same geometry: u4 codes through the

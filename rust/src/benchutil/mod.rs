@@ -220,6 +220,73 @@ pub fn write_pipeline_json(
         .with_context(|| format!("writing {}", path.display()))
 }
 
+/// Schema id stamped into `BENCH_topology.json`.
+pub const TOPOLOGY_SCHEMA: &str = "bwade/bench-topology/v1";
+
+/// One measured composed-topology point — a row of `BENCH_topology.json`
+/// (schema documented in DESIGN.md §13).  The sweep's axes: P pipelines
+/// behind the pool × S stages × per-stage replication R.  `pipelines ==
+/// 1 && stages == 1` rows are the single-runner baseline; pool-only
+/// (P>1, S=1) and pipeline-only (P=1, S>1) rows bracket the composed
+/// points.
+#[derive(Debug, Clone)]
+pub struct TopologyRow {
+    /// Quantization config name (e.g. `b6_c1.5_r2.2`).
+    pub config: String,
+    /// `f32` or `bit-true`.
+    pub datapath: String,
+    /// Whole-pipeline replicas behind the work-stealing pool (P).
+    pub pipelines: usize,
+    /// Stages per pipeline (S).
+    pub stages: usize,
+    /// Per-stage worker counts, comma-joined (e.g. `1,2,1`) so the row
+    /// stays flat for spreadsheet/jq consumers.
+    pub stage_replicas: String,
+    /// Total stage workers across the topology: P × ΣR.
+    pub workers: usize,
+    /// Frames streamed in this measurement.
+    pub frames: usize,
+    /// End-to-end throughput (frames / wall clock).
+    pub fps: f64,
+}
+
+impl TopologyRow {
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("config", Json::str(self.config.clone())),
+            ("datapath", Json::str(self.datapath.clone())),
+            ("pipelines", Json::num(self.pipelines as f64)),
+            ("stages", Json::num(self.stages as f64)),
+            ("stage_replicas", Json::str(self.stage_replicas.clone())),
+            ("workers", Json::num(self.workers as f64)),
+            ("frames", Json::num(self.frames as f64)),
+            ("fps", Json::num(self.fps)),
+        ])
+    }
+}
+
+/// Serialize topology rows to the `BENCH_topology.json` document (the
+/// testable half of the emitter, like [`serving_json`]).
+pub fn topology_json(host_parallelism: usize, rows: &[TopologyRow]) -> String {
+    let doc = json::obj(vec![
+        ("schema", Json::str(TOPOLOGY_SCHEMA)),
+        ("host_parallelism", Json::num(host_parallelism as f64)),
+        ("rows", Json::Arr(rows.iter().map(|r| r.to_json()).collect())),
+    ]);
+    doc.to_string_pretty() + "\n"
+}
+
+/// Record the composed-topology sweep: write `rows` to `path` (normally
+/// `BENCH_topology.json` at the repo root, produced by the fig5 bench).
+pub fn write_topology_json(
+    path: &Path,
+    host_parallelism: usize,
+    rows: &[TopologyRow],
+) -> Result<()> {
+    std::fs::write(path, topology_json(host_parallelism, rows))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
 /// Schema id stamped into `BENCH_kernels.json`.
 pub const KERNELS_SCHEMA: &str = "bwade/bench-kernels/v1";
 
@@ -404,6 +471,43 @@ mod tests {
         assert_eq!(all[1].get("stages").unwrap().as_usize().unwrap(), 4);
         assert_eq!(all[1].get("fps").unwrap().as_f64().unwrap(), 320.0);
         assert_eq!(all[1].get("steady_ms").unwrap().as_f64().unwrap(), 3.125);
+    }
+
+    #[test]
+    fn topology_json_schema_round_trip() {
+        let rows = vec![
+            TopologyRow {
+                config: "b6_c1.5_r2.2".into(),
+                datapath: "f32".into(),
+                pipelines: 1,
+                stages: 1,
+                stage_replicas: "1".into(),
+                workers: 1,
+                frames: 96,
+                fps: 100.0,
+            },
+            TopologyRow {
+                config: "b6_c1.5_r2.2".into(),
+                datapath: "f32".into(),
+                pipelines: 2,
+                stages: 2,
+                stage_replicas: "1,2".into(),
+                workers: 6,
+                frames: 96,
+                fps: 410.0,
+            },
+        ];
+        let doc = topology_json(8, &rows);
+        let parsed = Json::parse(&doc).expect("emitted document parses");
+        assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(), TOPOLOGY_SCHEMA);
+        assert_eq!(parsed.get("host_parallelism").unwrap().as_usize().unwrap(), 8);
+        let all = parsed.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].get("pipelines").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(all[1].get("pipelines").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(all[1].get("stage_replicas").unwrap().as_str().unwrap(), "1,2");
+        assert_eq!(all[1].get("workers").unwrap().as_usize().unwrap(), 6);
+        assert_eq!(all[1].get("fps").unwrap().as_f64().unwrap(), 410.0);
     }
 
     #[test]

@@ -116,6 +116,37 @@ pub fn parse_config_list(s: &str) -> Result<Vec<(String, crate::fixedpoint::Quan
         .collect()
 }
 
+/// Run-length `SxR` pipeline topology, e.g. `1x1,1x2,2x1` = one stage
+/// with 1 worker, one stage with 2 workers, two stages with 1 worker —
+/// the per-stage replication vector `[1, 2, 1, 1]`.  The same encoding
+/// `PlanPipeline::topology` prints, so a logged topology pastes straight
+/// back into `--topology` for a reproducible rerun.
+pub fn parse_topology(s: &str) -> Result<Vec<usize>> {
+    let mut reps = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        let (stages, workers) = part.split_once('x').ok_or_else(|| {
+            anyhow!("bad topology group {part:?} in {s:?}: expected SxR (e.g. 2x3)")
+        })?;
+        let stages: usize = stages
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("bad stage count in topology group {part:?}"))?;
+        let workers: usize = workers
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("bad worker count in topology group {part:?}"))?;
+        if stages == 0 || workers == 0 {
+            bail!("topology group {part:?} must have S >= 1 and R >= 1");
+        }
+        reps.extend(std::iter::repeat_n(workers, stages));
+    }
+    if reps.is_empty() {
+        bail!("empty topology {s:?}");
+    }
+    Ok(reps)
+}
+
 pub const USAGE: &str = "\
 bwade — Bit-Width-Aware Design Environment (ISCAS reproduction)
 
@@ -163,10 +194,25 @@ COMMANDS
                                          the compiled plan is cut into
                                          per-stage workers on bounded
                                          FIFOs (frames in flight across
-                                         layers; needs --engine plan,
-                                         excludes --replicas > 1)
+                                         layers; needs --engine plan).
+                                         With --replicas P > 1 the pool
+                                         hosts P whole pipelines — the
+                                         composed P x S x R topology
              --stages <n>                pipeline stage count (default:
                                          auto, 4 clamped to plan steps)
+             --topology <SxR,...>        explicit per-stage worker
+                                         replication as run-length SxR
+                                         groups (e.g. 1x1,1x2,2x1 = 4
+                                         stages, workers [1,2,1,1]);
+                                         overrides --stages, for
+                                         reproducible composed runs
+             --elastic                   telemetry-driven rebalance: serve
+                                         a warmup window on the seeded
+                                         topology, then promote the
+                                         measured bottleneck stage from
+                                         its recv/send stall counters
+                                         and serve the rest on the
+                                         adopted topology
              --max-wait-ms <t>           batch deadline: close a batch when
                                          the oldest frame waited this long
                                          (default 5)
@@ -270,5 +316,17 @@ mod tests {
         let byspec = parse_config("w1.5_a2.2").unwrap();
         assert_eq!(byspec, byname);
         assert!(parse_config("nonsense").is_err());
+    }
+
+    #[test]
+    fn topology_run_length_groups() {
+        assert_eq!(parse_topology("1x1,1x2,2x1").unwrap(), vec![1, 2, 1, 1]);
+        assert_eq!(parse_topology("3x2").unwrap(), vec![2, 2, 2]);
+        assert_eq!(parse_topology(" 2x1 , 1x4 ").unwrap(), vec![1, 1, 4]);
+        assert!(parse_topology("").is_err());
+        assert!(parse_topology("2").is_err(), "missing R");
+        assert!(parse_topology("0x2").is_err(), "zero stages");
+        assert!(parse_topology("2x0").is_err(), "zero workers");
+        assert!(parse_topology("axb").is_err());
     }
 }

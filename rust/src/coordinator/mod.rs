@@ -34,7 +34,7 @@ use crate::rng::Rng;
 
 pub mod pool;
 
-pub use pool::{serve_pool, PoolReport};
+pub use pool::{serve_pool, serve_pool_with, PipelineReplica, PoolReport};
 
 /// A deployed backbone: turns flat NHWC image batches into features.
 ///

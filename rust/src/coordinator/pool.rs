@@ -41,11 +41,64 @@ use anyhow::{bail, Result};
 
 use super::{classify_batch, BatchPolicy, Classified, FeatureExtractor, Frame, Metrics};
 use crate::fewshot::NcmClassifier;
+use crate::plan::pipeline::PlanPipeline;
 use crate::telemetry::{Counter, Gauge, Histogram, Registry};
 
 /// How long an idle replica parks before re-scanning sibling deques for
 /// stealable frames (its own deque wakes it immediately via condvar).
 const STEAL_POLL: Duration = Duration::from_micros(500);
+
+/// A whole [`PlanPipeline`] hosted as ONE pool replica — the pipeline ×
+/// pool composition (DESIGN.md §13): the pool gives across-frame
+/// parallelism (P pipelines, work-stealing deques, deadline batching),
+/// each replica's pipeline gives within-frame parallelism (S stages ×
+/// per-stage R workers).  Batches flow through
+/// [`PlanPipeline::extract_stream`], whose output is bitwise-identical
+/// and in-order to the sequential runner, so the pool's existing
+/// differential guarantee (same `classify_batch` funnel as single-runner
+/// `serve`) carries over to composed topologies unchanged.
+pub struct PipelineReplica {
+    pipe: PlanPipeline,
+    batch: usize,
+    /// Shared across replicas: the per-stage pipeline counters aggregate
+    /// over the whole pool (P replicas × stage set).
+    registry: Option<&'static Registry>,
+}
+
+impl PipelineReplica {
+    pub fn new(
+        pipe: PlanPipeline,
+        batch: usize,
+        registry: Option<&'static Registry>,
+    ) -> PipelineReplica {
+        PipelineReplica {
+            pipe,
+            batch: batch.max(1),
+            registry,
+        }
+    }
+}
+
+impl FeatureExtractor for PipelineReplica {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn img(&self) -> usize {
+        self.pipe.img()
+    }
+
+    fn feature_dim(&self) -> usize {
+        self.pipe.feature_dim()
+    }
+
+    fn extract(&self, images: &[f32]) -> Result<Vec<f32>> {
+        let per = self.pipe.img() * self.pipe.img() * 3;
+        let frames = images.len() / per.max(1);
+        let (feats, _) = self.pipe.extract_stream(images, frames, self.registry)?;
+        Ok(feats)
+    }
+}
 
 /// Per-replica and aggregate measurements of one pool run.
 #[derive(Debug, Clone)]
@@ -828,5 +881,69 @@ mod tests {
             },
         )
         .is_err());
+    }
+
+    #[test]
+    fn pipeline_replicas_compose_with_the_pool() {
+        // Pipeline × pool end to end on the tiny backbone: P=2 hosted
+        // pipelines (each S=2 stages × R=2 workers) must classify the
+        // exact same stream identically to the PR 6 plan-runner pool —
+        // frame conservation AND bitwise-equal classes by frame id.
+        use crate::plan::pipeline::{PipelineSpec, PlanPipeline};
+        use crate::plan::tests::tiny_bb_graph;
+        use crate::plan::PlanRunner;
+
+        let g = tiny_bb_graph();
+        let batch = 4;
+        let count = 48;
+        let runner = PlanRunner::new(&g, batch).unwrap();
+        #[rustfmt::skip]
+        let proto = vec![
+            1.0, 0.0, 0.0, 0.0, 0.0,
+            0.0, 1.0, 0.0, 0.0, 0.0,
+        ];
+        let ncm = NcmClassifier::fit(&proto, 5, &[0, 1], 2).unwrap();
+        let policy = BatchPolicy {
+            max_batch: batch,
+            max_wait: Duration::from_millis(2),
+        };
+        let src = || {
+            FrameSource {
+                count,
+                rate_fps: None,
+                img: 4,
+                seed: 1,
+            }
+            .spawn(16)
+        };
+
+        // Oracle: the plain plan-runner pool over the identical stream.
+        let plain: Vec<Box<dyn FeatureExtractor + Send>> =
+            vec![Box::new(runner.replicate()), Box::new(runner.replicate())];
+        let (_, want) = serve_pool(plain, &ncm, src(), policy).unwrap();
+
+        let pipe = PlanPipeline::new(
+            &runner,
+            &PipelineSpec::uniform(2).with_replicas(vec![2, 2]),
+        )
+        .unwrap();
+        let composed: Vec<Box<dyn FeatureExtractor + Send>> = vec![
+            Box::new(PipelineReplica::new(pipe.replicate(), batch, None)),
+            Box::new(PipelineReplica::new(pipe, batch, None)),
+        ];
+        let (report, got) = serve_pool(composed, &ncm, src(), policy).unwrap();
+        assert_conserved(&got, count);
+        assert_eq!(report.aggregate.frames, count);
+
+        let by_id = |rs: &[Classified]| {
+            let mut v: Vec<(u64, usize)> = rs.iter().map(|r| (r.id, r.class)).collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(
+            by_id(&got),
+            by_id(&want),
+            "composed topology must classify identically to the runner pool"
+        );
     }
 }

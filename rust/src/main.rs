@@ -5,7 +5,7 @@
 
 use std::path::Path;
 use std::sync::mpsc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -14,15 +14,17 @@ use bwade::benchutil::{write_serving_json, ServingRow};
 use bwade::build::{
     build, implement_lowered, lower_bit_true, requantize_graph, synth_backbone_graph, DesignConfig,
 };
-use bwade::cli::{parse_config, parse_config_list, parse_f64_list, Args, USAGE};
+use bwade::cli::{parse_config, parse_config_list, parse_f64_list, parse_topology, Args, USAGE};
 use bwade::coordinator::{
     serve, serve_pool_with, BatchPolicy, Classified, FeatureExtractor, Frame, FrameSource, Metrics,
+    PipelineReplica,
 };
 use bwade::dse::{run_sweep_with, write_report_with_telemetry, ResultCache, SweepOptions, SweepSpec};
 use bwade::fewshot::{evaluate, sample_episode, NcmClassifier};
 use bwade::fixedpoint::{baseline16_config, table2_configs, QuantConfig};
 use bwade::graph::Graph;
 use bwade::json::{self, Json};
+use bwade::plan::elastic::{rebalance, sample_stages, ElasticPolicy};
 use bwade::plan::pipeline::{PipelineSpec, PlanPipeline};
 use bwade::plan::{Datapath, PlanRunner};
 use bwade::resources::{utilization_line, Device};
@@ -461,6 +463,37 @@ fn spawn_streams(frames: usize, streams: usize, rate: f64, img: usize) -> mpsc::
     rx
 }
 
+/// Tee a frame stream in two: the first `head` frames go to the first
+/// receiver, the remainder to the second.  The forwarder drops the head
+/// sender the moment the head is delivered, so a consumer draining the
+/// head channel sees it close and finishes while the tail buffers behind
+/// a bounded channel — the seam the two-phase `--elastic` serve (warmup
+/// window, then the rebalanced topology) hangs off.
+fn split_stream(
+    rx: mpsc::Receiver<Frame>,
+    head: usize,
+) -> (mpsc::Receiver<Frame>, mpsc::Receiver<Frame>) {
+    let (tx_head, rx_head) = mpsc::sync_channel::<Frame>(16);
+    let (tx_rest, rx_rest) = mpsc::sync_channel::<Frame>(16);
+    std::thread::spawn(move || {
+        let mut tx_head = Some(tx_head);
+        for (i, frame) in rx.into_iter().enumerate() {
+            if i < head {
+                let tx = tx_head.as_ref().expect("head sender live while i < head");
+                if tx.send(frame).is_err() {
+                    return;
+                }
+                if i + 1 == head {
+                    tx_head = None;
+                }
+            } else if tx_rest.send(frame).is_err() {
+                return;
+            }
+        }
+    });
+    (rx_head, rx_rest)
+}
+
 /// Frame-conservation check + the machine-greppable smoke line the CI
 /// `serve-smoke` job asserts on: every source frame classified exactly
 /// once, aggregate fps nonzero.
@@ -492,11 +525,15 @@ fn report_conservation(frames_in: usize, results: &[Classified], metrics: &Metri
 /// requantizes), run the folding search + FIFO sizing on a clone, and
 /// partition a fresh runner into `stages` pipeline workers balanced by
 /// the per-actor cycle model.  `stages == 0` means auto (4, clamped to
-/// the plan's step count by the partitioner).
+/// the plan's step count by the partitioner).  An explicit `topology`
+/// (from `--topology SxR,...`) pins both the stage count and the
+/// per-stage worker counts — the reproducible override the elastic
+/// path's measured decision replaces.
 fn make_pipeline(
     factory: &EngineFactory,
     cfg: QuantConfig,
     stages: usize,
+    topology: Option<&[usize]>,
     device: &Device,
 ) -> Result<(PlanRunner, PlanPipeline, bwade::build::BuildReport)> {
     let mut graph = factory
@@ -522,8 +559,11 @@ fn make_pipeline(
     let mut hw = graph.clone();
     let report = implement_lowered(&mut hw, &build_cfg, device)?;
     let runner = PlanRunner::with_datapath(&graph, 8, factory.datapath)?;
-    let stages = if stages > 0 { stages } else { 4 };
-    let spec = PipelineSpec::from_models(stages, &report.models, &report.fifo_depths);
+    let stages = topology.map(|t| t.len()).unwrap_or(if stages > 0 { stages } else { 4 });
+    let mut spec = PipelineSpec::from_models(stages, &report.models, &report.fifo_depths);
+    if let Some(t) = topology {
+        spec = spec.with_replicas(t.to_vec());
+    }
     let pipe = PlanPipeline::new(&runner, &spec)?;
     Ok((runner, pipe, report))
 }
@@ -546,6 +586,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = parse_config(args.get_or("config", "b6_c1.5_r2.2"))?;
     let pipeline = args.has_flag("pipeline");
     let stages_req = args.get_usize("stages", 0)?;
+    let topology = args.get("topology").map(parse_topology).transpose()?;
+    let elastic = args.has_flag("elastic");
     if replicas > 1 && engine != "plan" {
         bail!(
             "--replicas > 1 requires --engine plan: compiled plans are compile-once/run-many \
@@ -555,10 +597,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if pipeline && engine != "plan" {
         bail!("--pipeline requires --engine plan: stages partition a compiled plan");
     }
-    if pipeline && replicas > 1 {
+    if (topology.is_some() || elastic) && !pipeline {
+        bail!("--topology and --elastic shape the staged executor: add --pipeline");
+    }
+    if elastic && topology.is_some() {
         bail!(
-            "--pipeline and --replicas > 1 are mutually exclusive: the pipeline parallelizes \
-             one frame stream across stages, the pool across whole-plan replicas"
+            "--elastic and --topology are mutually exclusive: --topology is the reproducible \
+             override, --elastic measures its own from the warmup window's stall telemetry"
         );
     }
 
@@ -632,28 +677,108 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let (metrics, results, bytes_per_frame) = if pipeline {
         // Streaming pipelined executor: stage workers on bounded FIFOs,
-        // frames in flight across layers (DESIGN.md §12).
+        // frames in flight across layers (DESIGN.md §12).  Stage
+        // replication, pipeline×pool composition (--replicas P hosts P
+        // whole pipelines behind the work-stealing pool) and the
+        // telemetry-driven --elastic rebalance are DESIGN.md §13.
         let device = Device::pynq_z1();
-        let (runner, pipe, report) = make_pipeline(&factory, cfg, stages_req, &device)?;
+        let (runner, mut pipe, report) =
+            make_pipeline(&factory, cfg, stages_req, topology.as_deref(), &device)?;
         let sup_feats = runner.extract_all(&support.0, support.2)?;
         let ncm = NcmClassifier::fit(&sup_feats, runner.feature_dim(), &support.1, 5)?;
         let bytes = runner.bytes_moved_per_frame();
         for (s, row) in pipe.stage_table().iter().enumerate() {
             println!(
-                "  stage {s}: {} .. {}  ({} steps, {} cycles, in-capacity {} frames)",
-                row.first_step, row.last_step, row.steps, row.cycles, row.capacity
+                "  stage {s}: {} .. {}  ({} steps, {} cycles, in-capacity {} frames, {} worker(s))",
+                row.first_step, row.last_step, row.steps, row.cycles, row.capacity, row.replicas
             );
         }
         let rx = spawn_streams(frames, streams, rate, img);
-        let (metrics, results, stats) = pipe.serve(&ncm, rx, registry)?;
-        println!(
-            "  pipeline steady-state: measured {:.3} ms/frame vs DataflowSim predicted {:.3} ms \
-             (fill latency {:.3} ms over {} stages)",
-            stats.steady_interval.as_secs_f64() * 1e3,
-            device.cycles_to_ms(report.steady_cycles),
-            stats.first_frame_latency.as_secs_f64() * 1e3,
-            pipe.stages()
-        );
+        let serve_t0 = Instant::now();
+
+        // --elastic: serve a warmup head on the seeded topology against a
+        // private registry, read the per-stage stall counters out of it,
+        // and adopt the promoted topology for the rest of the stream.
+        let mut warm: Option<(Metrics, Vec<Classified>)> = None;
+        let rx = if elastic {
+            let head = (frames / 4).clamp(1, 32);
+            let (rx_head, rx_rest) = split_stream(rx, head.min(frames));
+            let warm_reg = Registry::new();
+            let (m_head, r_head, _) = pipe.serve(&ncm, rx_head, Some(&warm_reg))?;
+            let samples = sample_stages(&warm_reg.snapshot(), pipe.stages(), pipe.replicas());
+            let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            // Budget of one worker per core, but never below stages+1 so
+            // a promotion from the all-1 seed is always possible — the
+            // decision is deterministic for CI regardless of host width.
+            let policy = ElasticPolicy {
+                warmup_frames: head,
+                max_workers: host.max(pipe.stages() + 1),
+            };
+            let decision = rebalance(&policy, &samples, m_head.wall);
+            println!(
+                "  elastic rebalance: {}{}",
+                decision.describe(),
+                if decision.changed() { " [ADOPTED]" } else { " [UNCHANGED]" }
+            );
+            if decision.changed() {
+                pipe = pipe.with_replicas(&decision.after);
+            }
+            warm = Some((m_head, r_head));
+            rx_rest
+        } else {
+            rx
+        };
+
+        let (metrics, results) = if replicas > 1 {
+            // P whole pipelines behind the work-stealing pool: the
+            // composed P × S × R topology.
+            println!("  topology: {replicas} pipeline(s) x [{}]", pipe.topology());
+            let mut runners: Vec<Box<dyn FeatureExtractor + Send>> = Vec::with_capacity(replicas);
+            for _ in 1..replicas {
+                let rep = PipelineReplica::new(pipe.replicate(), policy.max_batch, registry);
+                runners.push(Box::new(rep));
+            }
+            runners.insert(0, Box::new(PipelineReplica::new(pipe, policy.max_batch, registry)));
+            let (pool_report, results) = serve_pool_with(runners, &ncm, rx, policy, registry)?;
+            for (i, m) in pool_report.replicas.iter().enumerate() {
+                println!(
+                    "  pipeline replica {i}: {}  (stolen {})",
+                    m.summary(),
+                    pool_report.stolen[i]
+                );
+            }
+            println!("  pool steal total: {} frames", pool_report.total_stolen());
+            (pool_report.aggregate, results)
+        } else {
+            println!("  topology: 1 pipeline(s) x [{}]", pipe.topology());
+            let (metrics, results, stats) = pipe.serve(&ncm, rx, registry)?;
+            println!(
+                "  pipeline steady-state: measured {:.3} ms/frame vs DataflowSim predicted \
+                 {:.3} ms (fill latency {:.3} ms over {} stages)",
+                stats.steady_interval.as_secs_f64() * 1e3,
+                device.cycles_to_ms(report.steady_cycles),
+                stats.first_frame_latency.as_secs_f64() * 1e3,
+                pipe.stages()
+            );
+            (metrics, results)
+        };
+
+        // Stitch the warmup window back on: latencies and counts merge,
+        // the wall clock spans both phases, and the warmup's classified
+        // frames lead the tail's so conservation sees every id once.
+        let (metrics, results) = match warm {
+            Some((m_head, mut r_head)) => {
+                let mut m = Metrics::merge(&[m_head, metrics]);
+                m.wall = serve_t0.elapsed();
+                r_head.extend(results);
+                (m, r_head)
+            }
+            None => (metrics, results),
+        };
+        // The sink thread asserts contiguous frame seqs on every run
+        // (run_stream errors out on a gap), so reaching here IS the
+        // in-order guarantee; this line just makes it greppable.
+        println!("pipeline egress in-order: {} frames [OK]", results.len());
         (metrics, results, Some(bytes))
     } else if replicas == 1 {
         let runner = factory.make(&paths, bundle.as_ref(), exec_batch, cfg)?;

@@ -1074,13 +1074,41 @@ fn mvau_typed<X: IntCode, W: IntCode, O: IntCode>(
         while jb < n {
             let nb = MVAU_BLOCK_N.min(n - jb);
             if narrow_acc {
+                // SWAR-style inner loop: four k-rows per step, each
+                // accumulator summing four independent products per
+                // iteration.  No data-dependent branch (the old
+                // zero-skip `continue` defeated autovectorization) and
+                // a fixed-trip-count body over a contiguous strip, so
+                // the compiler lifts it onto the vector unit; the four
+                // products per lane also break the add latency chain.
+                // Bitwise-identical to the scalar loop: i32 wrapping
+                // addition is associative, and the bound that justifies
+                // narrow_acc (K terms each < 2^(X+W-2), total < 2^31)
+                // covers every partial order of the same terms.
                 let acc = &mut acc32[..nb];
                 acc.fill(0);
-                for (kk, &xv) in xrow.iter().enumerate() {
-                    let xv = xv.widen();
-                    if xv == 0 {
-                        continue;
+                let mut kk = 0;
+                while kk + 4 <= k {
+                    let x0 = xrow[kk].widen();
+                    let x1 = xrow[kk + 1].widen();
+                    let x2 = xrow[kk + 2].widen();
+                    let x3 = xrow[kk + 3].widen();
+                    let w0 = &ws[kk * n + jb..kk * n + jb + nb];
+                    let w1 = &ws[(kk + 1) * n + jb..(kk + 1) * n + jb + nb];
+                    let w2 = &ws[(kk + 2) * n + jb..(kk + 2) * n + jb + nb];
+                    let w3 = &ws[(kk + 3) * n + jb..(kk + 3) * n + jb + nb];
+                    for ((((a, &v0), &v1), &v2), &v3) in
+                        acc.iter_mut().zip(w0).zip(w1).zip(w2).zip(w3)
+                    {
+                        *a += x0 * v0.widen()
+                            + x1 * v1.widen()
+                            + x2 * v2.widen()
+                            + x3 * v3.widen();
                     }
+                    kk += 4;
+                }
+                for kk in kk..k {
+                    let xv = xrow[kk].widen();
                     let wrow = &ws[kk * n + jb..kk * n + jb + nb];
                     for (a, &wv) in acc.iter_mut().zip(wrow) {
                         *a += xv * wv.widen();

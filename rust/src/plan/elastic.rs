@@ -1,0 +1,295 @@
+//! Telemetry-driven topology rebalancing for the composed pipeline
+//! (DESIGN.md §13).
+//!
+//! The DataflowSim DP partition (`plan::pipeline::PipelineSpec`) seeds
+//! WHERE the stage cuts fall; this module decides HOW MANY workers each
+//! stage deserves.  Two inputs exist for that decision:
+//!
+//! 1. **Predicted**: the per-stage cycle estimates the partition was
+//!    balanced against — [`seed_replicas`] water-fills a worker budget
+//!    onto the predicted bottleneck before anything has run (the
+//!    reproducible `--topology` path, and the seed for `--elastic`).
+//! 2. **Measured**: the `pipeline.stage{i}.{recv_stall_us,send_stall_us}`
+//!    counters PR 7/9 already export.  A stage whose workers barely
+//!    stall is compute-bound — the true bottleneck; a stage that mostly
+//!    waits is over-provisioned.  [`rebalance`] reads a warmup window's
+//!    snapshot and promotes the busiest stage by one worker
+//!    ([`Decision`]), which `bwade serve --pipeline --elastic` applies
+//!    via `PlanPipeline::with_replicas` before serving the remainder of
+//!    the stream.
+//!
+//! The policy is deliberately a single deterministic step per window,
+//! not a feedback controller: a promotion is applied only when the
+//! worker budget allows it, the busiest stage is the unique argmax of
+//! the measured busy share (ties break to the earliest stage), and the
+//! decision is fully explained by the printed
+//! `before -> after (bottleneck stage i, busy N%)` line — so a CI run
+//! can assert a nonzero rebalance happened and a human can audit why.
+
+use std::time::Duration;
+
+use crate::telemetry::RegistrySnapshot;
+
+/// Ceiling mirrored from `plan::pipeline` (a `with_replicas` call clamps
+/// there too); keep the two in sync.
+const MAX_STAGE_REPLICAS: usize = 16;
+
+/// When and how far the rebalancer may move a topology.
+#[derive(Debug, Clone, Copy)]
+pub struct ElasticPolicy {
+    /// Frames served on the seeded topology before the stall counters
+    /// are considered meaningful.
+    pub warmup_frames: usize,
+    /// Total worker budget across stages (ΣR); a promotion that would
+    /// exceed it is refused.
+    pub max_workers: usize,
+}
+
+impl ElasticPolicy {
+    /// Default window: enough frames that per-frame jitter averages out,
+    /// with a budget of one worker per host core.
+    pub fn new(max_workers: usize) -> ElasticPolicy {
+        ElasticPolicy {
+            warmup_frames: 32,
+            max_workers: max_workers.max(1),
+        }
+    }
+}
+
+/// One stage's measured warmup window.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageSample {
+    /// Frames the stage processed in the window.
+    pub frames: u64,
+    /// Total µs its workers spent blocked on an empty ingress ring.
+    pub recv_stall_us: u64,
+    /// Total µs its workers spent blocked on a full egress ring.
+    pub send_stall_us: u64,
+    /// Workers the stage ran with during the window.
+    pub replicas: usize,
+}
+
+impl StageSample {
+    /// Fraction of the window the stage's workers spent computing rather
+    /// than stalled, averaged over its replicas.  `window` is the wall
+    /// time of the warmup; each of R workers had `window` of budget, so
+    /// busy = 1 − stalls/(R·window), clamped to [0, 1].  An empty window
+    /// reads as fully busy — the conservative default (never demote on
+    /// no data).
+    pub fn busy_share(&self, window: Duration) -> f64 {
+        let budget_us = window.as_micros() as f64 * self.replicas.max(1) as f64;
+        if budget_us <= 0.0 {
+            return 1.0;
+        }
+        let stalled = (self.recv_stall_us + self.send_stall_us) as f64;
+        (1.0 - stalled / budget_us).clamp(0.0, 1.0)
+    }
+}
+
+/// Read the per-stage pipeline counters out of a registry snapshot.
+/// Missing counters read as zero stall (fully busy) — a stage that never
+/// got telemetry is never the reason to starve another.
+pub fn sample_stages(
+    snap: &RegistrySnapshot,
+    stages: usize,
+    replicas: &[usize],
+) -> Vec<StageSample> {
+    let get = |name: &str| snap.counters.get(name).copied().unwrap_or(0);
+    (0..stages)
+        .map(|s| StageSample {
+            frames: get(&format!("pipeline.stage{s}.frames")),
+            recv_stall_us: get(&format!("pipeline.stage{s}.recv_stall_us")),
+            send_stall_us: get(&format!("pipeline.stage{s}.send_stall_us")),
+            replicas: replicas.get(s).copied().unwrap_or(1).max(1),
+        })
+        .collect()
+}
+
+/// A rebalance step: the topology served during the window and the one
+/// to adopt for the rest of the stream.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub before: Vec<usize>,
+    pub after: Vec<usize>,
+    /// Stage the measurement named the bottleneck.
+    pub bottleneck: usize,
+    /// That stage's measured busy share in the window.
+    pub busy_share: f64,
+}
+
+impl Decision {
+    /// Did the measurement actually move the topology?
+    pub fn changed(&self) -> bool {
+        self.before != self.after
+    }
+
+    /// The audit line `bwade serve` prints:
+    /// `[1, 1, 1] -> [2, 1, 1] (bottleneck stage 0, busy 82%)`.
+    pub fn describe(&self) -> String {
+        format!(
+            "{:?} -> {:?} (bottleneck stage {}, busy {:.0}%)",
+            self.before,
+            self.after,
+            self.bottleneck,
+            self.busy_share * 100.0
+        )
+    }
+}
+
+/// Promote the measured bottleneck stage by one worker, budget and
+/// per-stage ceiling permitting.  `window` is the warmup wall time the
+/// samples cover.
+pub fn rebalance(policy: &ElasticPolicy, samples: &[StageSample], window: Duration) -> Decision {
+    let before: Vec<usize> = samples.iter().map(|s| s.replicas.max(1)).collect();
+    let mut bottleneck = 0usize;
+    let mut busy = f64::MIN;
+    for (s, sample) in samples.iter().enumerate() {
+        let b = sample.busy_share(window);
+        if b > busy {
+            busy = b;
+            bottleneck = s;
+        }
+    }
+    let mut after = before.clone();
+    let total: usize = before.iter().sum();
+    if total < policy.max_workers && before[bottleneck] < MAX_STAGE_REPLICAS {
+        after[bottleneck] += 1;
+    }
+    Decision {
+        before,
+        after,
+        bottleneck,
+        busy_share: busy.max(0.0),
+    }
+}
+
+/// Water-fill a worker budget onto predicted per-stage cycles: start at
+/// one worker each, then repeatedly give a worker to the stage with the
+/// highest effective load `cycles/R` (ties to the earliest stage) until
+/// the budget is spent.  With no cycle model every stage weighs the
+/// same, so the fill round-robins from stage 0 — still deterministic.
+pub fn seed_replicas(stage_cycles: &[u64], max_workers: usize) -> Vec<usize> {
+    let stages = stage_cycles.len();
+    if stages == 0 {
+        return Vec::new();
+    }
+    let mut reps = vec![1usize; stages];
+    let mut budget = max_workers.saturating_sub(stages);
+    while budget > 0 {
+        let mut pick = 0usize;
+        let mut load = f64::MIN;
+        for (s, &c) in stage_cycles.iter().enumerate() {
+            if reps[s] >= MAX_STAGE_REPLICAS {
+                continue;
+            }
+            let l = c.max(1) as f64 / reps[s] as f64;
+            if l > load {
+                load = l;
+                pick = s;
+            }
+        }
+        if load == f64::MIN {
+            break;
+        }
+        reps[pick] += 1;
+        budget -= 1;
+    }
+    reps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Registry;
+
+    #[test]
+    fn seed_fills_the_predicted_bottleneck_first() {
+        // Stage 1 is 3x the load of the others: the first two extra
+        // workers both land there.
+        assert_eq!(seed_replicas(&[100, 300, 100], 5), vec![1, 3, 1]);
+        // Budget below one-per-stage degrades to all-1.
+        assert_eq!(seed_replicas(&[100, 300, 100], 2), vec![1, 1, 1]);
+        // Unweighted stages round-robin deterministically.
+        assert_eq!(seed_replicas(&[0, 0], 4), vec![2, 2]);
+        assert_eq!(seed_replicas(&[], 4), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn busy_share_reads_stalls_against_replica_budget() {
+        let window = Duration::from_micros(1000);
+        let idle = StageSample {
+            frames: 10,
+            recv_stall_us: 900,
+            send_stall_us: 0,
+            replicas: 1,
+        };
+        assert!(idle.busy_share(window) < 0.2);
+        // The same stall total across 2 replicas is half as idle.
+        let duo = StageSample {
+            replicas: 2,
+            ..idle
+        };
+        assert!((duo.busy_share(window) - 0.55).abs() < 1e-9);
+        // Zero window: conservatively fully busy.
+        assert_eq!(idle.busy_share(Duration::ZERO), 1.0);
+    }
+
+    #[test]
+    fn rebalance_promotes_the_busiest_stage() {
+        let window = Duration::from_micros(1000);
+        let samples = vec![
+            StageSample {
+                frames: 10,
+                recv_stall_us: 800,
+                send_stall_us: 0,
+                replicas: 1,
+            },
+            StageSample {
+                frames: 10,
+                recv_stall_us: 10,
+                send_stall_us: 20,
+                replicas: 1,
+            },
+        ];
+        let d = rebalance(&ElasticPolicy::new(4), &samples, window);
+        assert_eq!(d.bottleneck, 1, "the least-stalled stage is the bottleneck");
+        assert_eq!(d.before, vec![1, 1]);
+        assert_eq!(d.after, vec![1, 2]);
+        assert!(d.changed());
+        let line = d.describe();
+        assert!(line.contains("->"), "describe must show the transition: {line}");
+        assert!(line.contains("bottleneck stage 1"), "got: {line}");
+    }
+
+    #[test]
+    fn rebalance_respects_the_worker_budget() {
+        let samples = vec![StageSample {
+            frames: 5,
+            recv_stall_us: 0,
+            send_stall_us: 0,
+            replicas: 3,
+        }];
+        let d = rebalance(&ElasticPolicy::new(3), &samples, Duration::from_micros(100));
+        assert_eq!(d.before, d.after, "at budget the topology must not move");
+        assert!(!d.changed());
+    }
+
+    #[test]
+    fn sample_stages_reads_the_pipeline_counters() {
+        let reg = Registry::new();
+        reg.counter("pipeline.stage0.frames").add(32);
+        reg.counter("pipeline.stage0.recv_stall_us").add(120);
+        reg.counter("pipeline.stage1.frames").add(32);
+        reg.counter("pipeline.stage1.send_stall_us").add(7);
+        let samples = sample_stages(&reg.snapshot(), 2, &[1, 2]);
+        assert_eq!(samples.len(), 2);
+        assert_eq!(samples[0].frames, 32);
+        assert_eq!(samples[0].recv_stall_us, 120);
+        assert_eq!(samples[0].replicas, 1);
+        assert_eq!(samples[1].send_stall_us, 7);
+        assert_eq!(samples[1].replicas, 2);
+        // Stages past the recorded set read as zero-stall.
+        let extra = sample_stages(&reg.snapshot(), 3, &[1, 1, 1]);
+        assert_eq!(extra[2].recv_stall_us, 0);
+    }
+}

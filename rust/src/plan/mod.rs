@@ -72,6 +72,7 @@ use crate::graph::{Graph, Node};
 use crate::ops;
 use crate::tensor::{DType, Tensor, TensorData};
 
+pub mod elastic;
 pub mod pipeline;
 
 /// Which arithmetic a compiled plan executes.
@@ -1523,7 +1524,7 @@ impl crate::coordinator::FeatureExtractor for PlanRunner {
 }
 
 #[cfg(test)]
-mod tests {
+pub(crate) mod tests {
     use super::*;
     use crate::graph::{AttrVal, Attrs, Node};
 

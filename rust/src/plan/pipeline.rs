@@ -6,7 +6,7 @@
 //! *frames in flight across layers*.  [`PlanPipeline`] partitions a
 //! compiled [`ExecutionPlan`] into contiguous stage ranges (balanced by
 //! the DataflowSim per-actor cycle estimates so no stage dominates), runs
-//! one worker thread per stage, and connects the stages with bounded SPSC
+//! worker threads per stage, and connects the stages with bounded
 //! ring-buffer channels whose frame capacities derive from the same
 //! `size_fifos` folding-search output the simulator uses.  Stage *k*
 //! executes frame *n* while stage *k+1* executes frame *n−1*: the
@@ -14,22 +14,34 @@
 //! `bwade profile` joins against the simulator's predicted II
 //! (DESIGN.md §12).
 //!
+//! Since PR 10 a stage may be **replicated** (DESIGN.md §13): R workers
+//! pull frames from the stage's shared ingress ring and an in-order
+//! [`Reorder`] gate at the stage egress buffers out-of-order completions,
+//! forwarding the contiguous run so everything downstream observes the
+//! exact frame order a single worker would have produced.  Replication
+//! multiplies a bottleneck stage's throughput without touching the cuts —
+//! the elastic rebalancer (`plan::elastic`) picks per-stage R from the
+//! measured stall telemetry.
+//!
 //! Correctness contract: every frame executes the exact same kernel
 //! sequence as [`ExecutionPlan::run_with`], in the same (topological)
 //! step order, on tensors owned by the frame's message — so pipeline
 //! output is **bitwise-identical** to the sequential runner on both
-//! datapaths.  Each stage owns a private [`PlanScratch`] buffer arena;
-//! channel capacities ≥ 2 give every stage a double-buffered hand-off
-//! (the producer refills one slot while the consumer drains the other).
+//! datapaths, and the sink additionally *verifies* in-order delivery
+//! (an egress sequence gap is an error, not a silent reorder).  Each
+//! worker owns a private [`PlanScratch`] buffer arena; channel
+//! capacities ≥ 2 give every stage a double-buffered hand-off.
 //!
 //! Shutdown is drain-based: the feeder closes the first channel, each
-//! stage drains its input and closes its output, so every frame in
-//! flight is conserved.  A poisoned stage (kernel error) stores the
-//! first error and poisons **all** channels, waking every blocked
-//! sender/receiver — the workers join without deadlock and the error
-//! propagates to the caller.
+//! stage drains its input, and the LAST live replica of a stage closes
+//! the stage's output — every frame in flight is conserved.  A poisoned
+//! worker (kernel error) stores the first error and poisons **all**
+//! channels and reorder gates, waking every blocked sender/receiver —
+//! the workers join without deadlock and the error propagates to the
+//! caller.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -45,11 +57,15 @@ use crate::tensor::Tensor;
 
 use super::{dequantize_egress, ExecutionPlan, PlanRunner, PlanScratch, StepKind};
 
+/// Hard per-stage replication ceiling — a thread-count guard, far above
+/// anything a sane topology asks for.
+const MAX_STAGE_REPLICAS: usize = 16;
+
 // ---------------------------------------------------------------------------
-// Bounded SPSC ring-buffer channel
+// Bounded ring-buffer channel
 // ---------------------------------------------------------------------------
 
-/// Outcome of a blocking [`RingChannel::send`].
+/// Outcome of a blocking [`RingChannel::send`] / [`Reorder::put`].
 enum SendState {
     /// Enqueued; `stalled` is the time spent blocked on a full ring.
     Sent { stalled: Duration },
@@ -80,10 +96,15 @@ struct RingInner<T> {
     poisoned: bool,
 }
 
-/// A bounded single-producer single-consumer channel with close and
-/// poison semantics.  Capacity is fixed at construction — backpressure
-/// is the point: a full ring blocks the producer, which is exactly how
-/// the sized FIFOs of the hardware dataflow behave.
+/// A bounded channel with close and poison semantics.  Capacity is fixed
+/// at construction — backpressure is the point: a full ring blocks the
+/// producer, which is exactly how the sized FIFOs of the hardware
+/// dataflow behave.  Safe under multiple producers AND multiple
+/// consumers (a replicated stage's workers share their ingress ring):
+/// both sides re-check the guarded condition in a loop, and each send /
+/// each freed slot wakes exactly one counterpart, so wakeups are never
+/// lost — at worst a woken thread finds another already took its turn
+/// and waits again.
 struct RingChannel<T> {
     cap: usize,
     inner: Mutex<RingInner<T>>,
@@ -157,7 +178,8 @@ impl<T> RingChannel<T> {
     }
 
     /// Producer-side end of stream: receivers drain what is buffered,
-    /// then see [`RecvState::Closed`].
+    /// then see [`RecvState::Closed`].  With a replicated upstream stage,
+    /// only the LAST live replica calls this (see `run_stream`).
     fn close(&self) {
         self.inner.lock().unwrap().closed = true;
         self.not_empty.notify_all();
@@ -176,20 +198,124 @@ impl<T> RingChannel<T> {
 }
 
 // ---------------------------------------------------------------------------
+// In-order egress gate for replicated stages
+// ---------------------------------------------------------------------------
+
+struct ReorderInner<T> {
+    /// The sequence number the downstream is owed next.
+    next_seq: u64,
+    /// Out-of-order completions parked until their turn.
+    pending: BTreeMap<u64, T>,
+    poisoned: bool,
+}
+
+/// The reorder buffer at a replicated stage's egress: R workers complete
+/// frames out of order; [`Reorder::put`] parks the stragglers and
+/// forwards the contiguous run starting at the next expected sequence
+/// number into the downstream ring, so everything after the gate
+/// observes the exact arrival order (and therefore the exact frame
+/// stream) a single worker would have produced.
+///
+/// Invariants (tested below, documented in DESIGN.md §13):
+/// - frames leave in strictly increasing `seq` with no gaps;
+/// - the buffer is bounded: at most `cap` out-of-order frames are
+///   admitted, but the next-expected frame ALWAYS enters — it is what
+///   drains the run, so the bound cannot deadlock;
+/// - the downstream send happens with the gate held: siblings carrying
+///   later frames would have to queue behind the in-order run anyway,
+///   and the consumer draining the ring never takes this lock, so the
+///   wait is bounded by the consumer (capacity-1 backpressure works);
+/// - poison (from the channel being forwarded into, or broadcast via
+///   [`Reorder::poison`]) wakes every parked producer and drops the
+///   pending frames — a poisoned-replica drain never hangs on a gap.
+struct Reorder<'a, T> {
+    out: &'a RingChannel<T>,
+    cap: usize,
+    inner: Mutex<ReorderInner<T>>,
+    room: Condvar,
+}
+
+impl<'a, T> Reorder<'a, T> {
+    fn new(out: &'a RingChannel<T>, cap: usize) -> Reorder<'a, T> {
+        Reorder {
+            out,
+            cap: cap.max(1),
+            inner: Mutex::new(ReorderInner {
+                next_seq: 0,
+                pending: BTreeMap::new(),
+                poisoned: false,
+            }),
+            room: Condvar::new(),
+        }
+    }
+
+    /// Hand a completed frame to the gate.  Returns like a send: the
+    /// stalled time covers both waiting for buffer room and forwarding
+    /// the in-order run into a full downstream ring.
+    fn put(&self, seq: u64, v: T) -> SendState {
+        let mut g = self.inner.lock().unwrap();
+        let mut stalled = Duration::ZERO;
+        loop {
+            if g.poisoned {
+                return SendState::Poisoned;
+            }
+            if seq == g.next_seq || g.pending.len() < self.cap {
+                break;
+            }
+            let t0 = Instant::now();
+            g = self.room.wait(g).unwrap();
+            stalled += t0.elapsed();
+        }
+        g.pending.insert(seq, v);
+        loop {
+            let k = g.next_seq;
+            let Some(v) = g.pending.remove(&k) else { break };
+            match self.out.send(v) {
+                SendState::Sent { stalled: s } => stalled += s,
+                SendState::Poisoned => {
+                    g.poisoned = true;
+                    g.pending.clear();
+                    drop(g);
+                    self.room.notify_all();
+                    return SendState::Poisoned;
+                }
+            }
+            g.next_seq += 1;
+        }
+        drop(g);
+        self.room.notify_all();
+        SendState::Sent { stalled }
+    }
+
+    /// Failure broadcast: wake parked producers, drop pending frames.
+    fn poison(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.poisoned = true;
+        g.pending.clear();
+        drop(g);
+        self.room.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Stage partitioning
 // ---------------------------------------------------------------------------
 
 /// How to cut a plan into stages: the per-actor cycle model to balance
-/// against and the `size_fifos` depths to derive channel capacities from.
+/// against, the `size_fifos` depths to derive channel capacities from,
+/// and the per-stage worker replication.
 #[derive(Debug, Clone, Default)]
 pub struct PipelineSpec {
-    /// Requested worker count (clamped to the plan's step count).
+    /// Requested stage count (clamped to the plan's step count).
     pub stages: usize,
     /// DataflowSim per-actor cycles by node name ([`HwNodeModel::cycles`]).
     /// Plan steps with no entry (host-side ingress) weigh nothing.
     pub cycles: HashMap<String, u64>,
     /// `size_fifos` output: `"{tensor}->{consumer}"` -> element depth.
     pub fifo_depths: HashMap<String, u64>,
+    /// Per-stage worker replication; entry `s` is stage `s`'s R.  Empty
+    /// (the default) means one worker per stage; missing entries are 1.
+    pub replicas: Vec<usize>,
 }
 
 impl PipelineSpec {
@@ -198,8 +324,7 @@ impl PipelineSpec {
     pub fn uniform(stages: usize) -> PipelineSpec {
         PipelineSpec {
             stages,
-            cycles: HashMap::new(),
-            fifo_depths: HashMap::new(),
+            ..PipelineSpec::default()
         }
     }
 
@@ -219,7 +344,14 @@ impl PipelineSpec {
             stages,
             cycles,
             fifo_depths: fifo_depths.clone(),
+            replicas: Vec::new(),
         }
+    }
+
+    /// Set the per-stage worker replication (the R of an SxR topology).
+    pub fn with_replicas(mut self, replicas: Vec<usize>) -> PipelineSpec {
+        self.replicas = replicas;
+        self
     }
 }
 
@@ -267,8 +399,11 @@ fn partition_contiguous(weights: &[u64], stages: usize) -> Vec<usize> {
 /// A frame travelling the pipeline: its slot environment, owned.  Feeds
 /// sit in `acts` at their slots (messages own their tensors — there is
 /// no cross-thread borrow), stages fill and release activation slots as
-/// the sequential run loop would.
+/// the sequential run loop would.  `seq` is the arrival order assigned
+/// by the feeder — the reorder gates and the sink's in-order check key
+/// on it (frame `id`s from concurrent sources are not arrival-ordered).
 struct FrameMsg {
+    seq: u64,
     id: u64,
     enqueued: Instant,
     acts: Vec<Option<Tensor>>,
@@ -276,6 +411,7 @@ struct FrameMsg {
 
 /// A frame leaving the pipeline: dequantized features, in frame order.
 struct OutMsg {
+    seq: u64,
     id: u64,
     enqueued: Instant,
     feats: Vec<f32>,
@@ -297,7 +433,9 @@ pub struct PipelineStats {
 }
 
 /// Per-stage telemetry handles, resolved once before the workers start
-/// (the hot loop never hashes a metric name).
+/// (the hot loop never hashes a metric name).  A replicated stage's
+/// workers share the stage's handles: counters aggregate across
+/// replicas, so `stage{i}.frames` still counts each frame exactly once.
 struct StageTelemetry {
     frames: Arc<Counter>,
     recv_stall_us: Arc<Counter>,
@@ -329,13 +467,15 @@ pub struct StageSummary {
     pub cycles: u64,
     /// Capacity (frames) of the channel feeding this stage.
     pub capacity: usize,
+    /// Worker replication of this stage.
+    pub replicas: usize,
 }
 
 /// A compiled plan partitioned for streaming execution: per-stage worker
-/// threads over bounded ring channels.  Construction is cheap (the plan
-/// is `Arc`-shared with the [`PlanRunner`] it came from); threads exist
-/// only for the duration of a [`PlanPipeline::extract_stream`] /
-/// [`PlanPipeline::serve`] call.
+/// threads over bounded ring channels, optionally replicated per stage.
+/// Construction is cheap (the plan is `Arc`-shared with the
+/// [`PlanRunner`] it came from); threads exist only for the duration of
+/// a [`PlanPipeline::extract_stream`] / [`PlanPipeline::serve`] call.
 pub struct PlanPipeline {
     plan: Arc<ExecutionPlan>,
     img: usize,
@@ -349,6 +489,8 @@ pub struct PlanPipeline {
     /// Channel frame-capacities: `capacities[s]` feeds stage `s`,
     /// `capacities[stages]` is the egress channel to the sink.
     capacities: Vec<usize>,
+    /// Workers per stage (all 1 = the plain PR 9 pipeline).
+    replicas: Vec<usize>,
 }
 
 impl PlanPipeline {
@@ -393,6 +535,9 @@ impl PlanPipeline {
             }
         }
         let capacities = stage_capacities(&plan, &bounds, &spec.fifo_depths);
+        let replicas: Vec<usize> = (0..stages)
+            .map(|s| spec.replicas.get(s).copied().unwrap_or(1).clamp(1, MAX_STAGE_REPLICAS))
+            .collect();
         Ok(PlanPipeline {
             plan,
             img: runner.img,
@@ -401,6 +546,7 @@ impl PlanPipeline {
             bounds,
             stage_cycles,
             capacities,
+            replicas,
         })
     }
 
@@ -424,20 +570,85 @@ impl PlanPipeline {
         &self.capacities
     }
 
+    /// Workers per stage.
+    pub fn replicas(&self) -> &[usize] {
+        &self.replicas
+    }
+
+    /// Total worker threads one streaming run spawns (excl. the feeder).
+    pub fn workers(&self) -> usize {
+        self.replicas.iter().sum()
+    }
+
+    /// The same cuts and capacities with a different per-stage worker
+    /// replication — how the elastic rebalancer applies a decision
+    /// without re-partitioning.
+    pub fn with_replicas(&self, replicas: &[usize]) -> PlanPipeline {
+        let mut p = self.shallow_clone();
+        p.replicas = (0..self.stages())
+            .map(|s| replicas.get(s).copied().unwrap_or(1).clamp(1, MAX_STAGE_REPLICAS))
+            .collect();
+        p
+    }
+
+    /// A cheap copy sharing the compiled plan — pool replicas
+    /// (`coordinator::pool::PipelineReplica`) are stamped from one
+    /// pipeline this way, like `PlanRunner::replicate`.
+    pub fn replicate(&self) -> PlanPipeline {
+        self.shallow_clone()
+    }
+
+    fn shallow_clone(&self) -> PlanPipeline {
+        PlanPipeline {
+            plan: Arc::clone(&self.plan),
+            img: self.img,
+            feature_dim: self.feature_dim,
+            out_scale: self.out_scale,
+            bounds: self.bounds.clone(),
+            stage_cycles: self.stage_cycles.clone(),
+            capacities: self.capacities.clone(),
+            replicas: self.replicas.clone(),
+        }
+    }
+
+    /// Run-length `SxR` encoding of the per-stage replication — the same
+    /// shape the CLI `--topology` flag accepts (e.g. `[1,2,1,1]` prints
+    /// as `1x1,1x2,2x1`).
+    pub fn topology(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        let mut i = 0;
+        while i < self.replicas.len() {
+            let r = self.replicas[i];
+            let mut j = i;
+            while j < self.replicas.len() && self.replicas[j] == r {
+                j += 1;
+            }
+            parts.push(format!("{}x{}", j - i, r));
+            i = j;
+        }
+        parts.join(",")
+    }
+
     /// Predicted share of the total cycle budget held by the slowest
     /// stage — the pipeline's theoretical steady-interval fraction of the
-    /// sequential per-frame time (perfect overlap assumed).
+    /// sequential per-frame time (perfect overlap assumed).  Replication
+    /// divides a stage's effective cycles by its worker count.
     pub fn predicted_bottleneck_share(&self) -> f64 {
         let total: u64 = self.stage_cycles.iter().sum();
         if total == 0 {
             return 1.0 / self.stages() as f64;
         }
-        let max = self.stage_cycles.iter().copied().max().unwrap_or(0);
-        max as f64 / total as f64
+        let max = self
+            .stage_cycles
+            .iter()
+            .zip(&self.replicas)
+            .map(|(&c, &r)| c as f64 / r as f64)
+            .fold(0.0f64, f64::max);
+        max / total as f64
     }
 
     /// Stage map for reports: step ranges, predicted cycles, channel
-    /// capacities.
+    /// capacities, replication.
     pub fn stage_table(&self) -> Vec<StageSummary> {
         (0..self.stages())
             .map(|s| {
@@ -448,6 +659,7 @@ impl PlanPipeline {
                     steps: hi - lo,
                     cycles: self.stage_cycles[s],
                     capacity: self.capacities[s],
+                    replicas: self.replicas[s],
                 }
             })
             .collect()
@@ -455,7 +667,7 @@ impl PlanPipeline {
 
     /// Build one frame's message: NHWC pixels -> the graph's NCHW import
     /// layout at the plan's feed slot (exactly what the sequential runner
-    /// feeds).
+    /// feeds).  `seq` is assigned by the feeder.
     fn ingress_msg(&self, id: u64, pixels: &[f32], enqueued: Instant) -> Result<FrameMsg> {
         let spec = &self.plan.feeds[0];
         let x = Tensor::new(vec![1, self.img, self.img, 3], pixels.to_vec())?.nhwc_to_nchw()?;
@@ -471,7 +683,12 @@ impl PlanPipeline {
         }
         let mut acts: Vec<Option<Tensor>> = vec![None; self.plan.n_slots];
         acts[spec.slot as usize] = Some(x);
-        Ok(FrameMsg { id, enqueued, acts })
+        Ok(FrameMsg {
+            seq: 0,
+            id,
+            enqueued,
+            acts,
+        })
     }
 
     /// Final-stage egress: take the output tensor out of the message and
@@ -489,6 +706,7 @@ impl PlanPipeline {
         let mut feats = Vec::with_capacity(self.feature_dim);
         dequantize_egress(&t, self.out_scale, &mut feats)?;
         Ok(OutMsg {
+            seq: msg.seq,
             id: msg.id,
             enqueued: msg.enqueued,
             feats,
@@ -560,9 +778,10 @@ impl PlanPipeline {
         Ok((metrics, results, stats))
     }
 
-    /// The streaming core: feeder thread -> stage workers -> in-order
-    /// sink on the calling thread.  All threads are scoped — by the time
-    /// this returns, every worker has joined, error or not.
+    /// The streaming core: feeder thread -> stage workers (R per stage,
+    /// reorder-gated where R > 1) -> verified in-order sink on the
+    /// calling thread.  All threads are scoped — by the time this
+    /// returns, every worker has joined, error or not.
     fn run_stream<I, F>(
         &self,
         inputs: I,
@@ -577,11 +796,29 @@ impl PlanPipeline {
         let chans: Vec<RingChannel<FrameMsg>> =
             (0..stages).map(|s| RingChannel::new(self.capacities[s])).collect();
         let egress: RingChannel<OutMsg> = RingChannel::new(self.capacities[stages]);
+        // Reorder gates where a stage is replicated: interior stages gate
+        // the next stage's ingress ring, the final stage gates the egress
+        // ring.  Gate capacity 2R: every sibling can park one straggler
+        // and still leave headroom before backpressure.
+        let gates: Vec<Option<Reorder<FrameMsg>>> = (0..stages)
+            .map(|s| {
+                (self.replicas[s] > 1 && s + 1 < stages)
+                    .then(|| Reorder::new(&chans[s + 1], self.replicas[s] * 2))
+            })
+            .collect();
+        let out_gate: Option<Reorder<OutMsg>> = (self.replicas[stages - 1] > 1)
+            .then(|| Reorder::new(&egress, self.replicas[stages - 1] * 2));
+        // Live-replica counters: the LAST worker of a stage to drain its
+        // ingress closes the stage's output, after every sibling's final
+        // put has been forwarded — frames in flight are conserved.
+        let live: Vec<AtomicUsize> = self.replicas.iter().map(|&r| AtomicUsize::new(r)).collect();
         let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
         let tel = reg.map(|r| StageTelemetry::resolve(r, stages));
 
-        // Failure broadcast: record the first error, poison every channel
-        // so every blocked worker wakes and exits.
+        // Failure broadcast: record the first error, then poison the
+        // channels BEFORE the gates — a gate holder blocked inside a
+        // downstream send wakes from the channel poison, releases the
+        // gate lock, and only then can the gate poison land.
         let fail = |e: anyhow::Error| {
             let mut g = first_err.lock().unwrap();
             if g.is_none() {
@@ -592,6 +829,12 @@ impl PlanPipeline {
                 c.poison();
             }
             egress.poison();
+            for gate in gates.iter().flatten() {
+                gate.poison();
+            }
+            if let Some(gate) = &out_gate {
+                gate.poison();
+            }
         };
         let fail = &fail;
 
@@ -600,18 +843,20 @@ impl PlanPipeline {
 
         std::thread::scope(|scope| {
             // Feeder: pull frames from the input iterator into stage 0's
-            // ring.  Closing the ring at end-of-stream starts the drain
-            // cascade.
+            // ring, stamping the arrival sequence the reorder gates and
+            // the sink's order check key on.  Closing the ring at
+            // end-of-stream starts the drain cascade.
             let chans_ref = &chans;
             scope.spawn(move || {
-                for item in inputs {
-                    let msg = match item {
+                for (seq, item) in inputs.enumerate() {
+                    let mut msg = match item {
                         Ok(m) => m,
                         Err(e) => {
                             fail(e);
                             return;
                         }
                     };
+                    msg.seq = seq as u64;
                     match chans_ref[0].send(msg) {
                         SendState::Sent { .. } => {}
                         SendState::Poisoned => return,
@@ -620,73 +865,113 @@ impl PlanPipeline {
                 chans_ref[0].close();
             });
 
-            // One worker per stage, each with a private scratch arena.
+            // R workers per stage, each with a private scratch arena, all
+            // pulling from the stage's shared ingress ring.
             for s in 0..stages {
                 let (lo, hi) = (self.bounds[s], self.bounds[s + 1]);
-                let in_ch = &chans[s];
-                let out_ch = if s + 1 < stages {
-                    Some(&chans[s + 1])
-                } else {
-                    None
-                };
-                let egress_ref = &egress;
-                let stage_tel = tel.as_ref().map(|v| &v[s]);
-                scope.spawn(move || {
-                    let mut scratch = PlanScratch::default();
-                    let mut peak = 0usize;
-                    loop {
-                        let mut msg = match in_ch.recv() {
-                            RecvState::Poisoned => return,
-                            RecvState::Closed => break,
-                            RecvState::Msg { msg, occupancy, stalled } => {
-                                if let Some(t) = stage_tel {
-                                    t.frames.inc();
-                                    t.recv_stall_us.add(stalled.as_micros() as u64);
-                                    t.fifo_occupancy.set(occupancy as i64);
-                                    if occupancy > peak {
-                                        peak = occupancy;
-                                        t.fifo_peak.set(peak as i64);
+                for _ in 0..self.replicas[s] {
+                    let in_ch = &chans[s];
+                    let out_ch = if s + 1 < stages {
+                        Some(&chans[s + 1])
+                    } else {
+                        None
+                    };
+                    let gate = gates[s].as_ref();
+                    let out_gate_ref = if s + 1 == stages {
+                        out_gate.as_ref()
+                    } else {
+                        None
+                    };
+                    let egress_ref = &egress;
+                    let live_s = &live[s];
+                    let stage_tel = tel.as_ref().map(|v| &v[s]);
+                    scope.spawn(move || {
+                        let mut scratch = PlanScratch::default();
+                        let mut peak = 0usize;
+                        loop {
+                            let mut msg = match in_ch.recv() {
+                                RecvState::Poisoned => return,
+                                RecvState::Closed => break,
+                                RecvState::Msg { msg, occupancy, stalled } => {
+                                    if let Some(t) = stage_tel {
+                                        t.frames.inc();
+                                        t.recv_stall_us.add(stalled.as_micros() as u64);
+                                        t.fifo_occupancy.set(occupancy as i64);
+                                        if occupancy > peak {
+                                            peak = occupancy;
+                                            t.fifo_peak.set(peak as i64);
+                                        }
+                                    }
+                                    msg
+                                }
+                            };
+                            let ran = run_steps(&self.plan, lo, hi, &mut msg.acts, &mut scratch);
+                            if let Err(e) = ran {
+                                fail(e);
+                                return;
+                            }
+                            let sent = match out_ch {
+                                Some(next) => match gate {
+                                    Some(g) => {
+                                        let seq = msg.seq;
+                                        g.put(seq, msg)
+                                    }
+                                    None => next.send(msg),
+                                },
+                                None => match self.egress_msg(msg) {
+                                    Ok(out) => match out_gate_ref {
+                                        Some(g) => {
+                                            let seq = out.seq;
+                                            g.put(seq, out)
+                                        }
+                                        None => egress_ref.send(out),
+                                    },
+                                    Err(e) => {
+                                        fail(e);
+                                        return;
+                                    }
+                                },
+                            };
+                            match sent {
+                                SendState::Sent { stalled } => {
+                                    if let Some(t) = stage_tel {
+                                        t.send_stall_us.add(stalled.as_micros() as u64);
                                     }
                                 }
-                                msg
+                                SendState::Poisoned => return,
                             }
-                        };
-                        let ran = run_steps(&self.plan, lo, hi, &mut msg.acts, &mut scratch);
-                        if let Err(e) = ran {
-                            fail(e);
-                            return;
                         }
-                        let sent = match out_ch {
-                            Some(next) => next.send(msg),
-                            None => match self.egress_msg(msg) {
-                                Ok(out) => egress_ref.send(out),
-                                Err(e) => {
-                                    fail(e);
-                                    return;
-                                }
-                            },
-                        };
-                        match sent {
-                            SendState::Sent { stalled } => {
-                                if let Some(t) = stage_tel {
-                                    t.send_stall_us.add(stalled.as_micros() as u64);
-                                }
+                        // Clean drain: every sibling that exited before us
+                        // completed its final put first, so the gate (if
+                        // any) has forwarded everything — the last replica
+                        // out may close the stage's output.
+                        if live_s.fetch_sub(1, Ordering::AcqRel) == 1 {
+                            match out_ch {
+                                Some(next) => next.close(),
+                                None => egress_ref.close(),
                             }
-                            SendState::Poisoned => return,
                         }
-                    }
-                    match out_ch {
-                        Some(next) => next.close(),
-                        None => egress_ref.close(),
-                    }
-                });
+                    });
+                }
             }
 
-            // Sink: in frame order on the calling thread.
+            // Sink on the calling thread: VERIFIED frame order — a
+            // sequence gap at egress is a pipeline bug, never silently
+            // reordered output.
+            let mut expect_seq = 0u64;
             loop {
                 match egress.recv() {
                     RecvState::Closed | RecvState::Poisoned => break,
                     RecvState::Msg { msg, .. } => {
+                        if msg.seq != expect_seq {
+                            fail(anyhow!(
+                                "pipeline egress out of order: frame seq {} arrived, expected {}",
+                                msg.seq,
+                                expect_seq
+                            ));
+                            break;
+                        }
+                        expect_seq += 1;
                         if let Err(e) = sink(msg) {
                             fail(e);
                             break;
@@ -732,6 +1017,18 @@ impl PlanPipeline {
 /// buffered (stage overlap needs one slot filling while one drains),
 /// at most a small bounded burst — the simulator's FIFOs absorb beats
 /// within a frame, the pipeline's rings absorb whole frames.
+///
+/// The egress ring (index `stages`) decouples the final stage worker
+/// from the host-side dequantize/classify sink.  `size_fifos` names that
+/// channel `"{out}->sink"`, but the simulator's sink drains every cycle,
+/// so the sized depth is a within-frame beat buffer: whenever the output
+/// tensor's numel exceeds it, `ceil(depth / numel)` is one frame and the
+/// egress capacity used to fall silently to the clamp floor no matter
+/// how deeply the folding search buffered the design.  Whole frames are
+/// what cross the dequantize boundary here, so the egress inherits the
+/// final stage's ingress capacity (keeping the boundary at least as
+/// decoupled as the interior edges feeding it) and the sink depth only
+/// ever deepens it further.
 fn stage_capacities(
     plan: &ExecutionPlan,
     bounds: &[usize],
@@ -752,38 +1049,42 @@ fn stage_capacities(
     }
 
     let mut caps = vec![2usize; stages + 1];
-    for (ci, cap) in caps.iter_mut().enumerate() {
+    for (ci, cap) in caps.iter_mut().take(stages).enumerate() {
         let mut frames = 2u64;
-        if ci < stages {
-            let b = bounds[ci];
-            for step in plan.steps.iter().skip(b) {
-                for &s in &step.inputs {
-                    let crosses = match produced_at.get(&s) {
-                        Some(&p) => p < b,
-                        // Feeds cross the ingress cut only.
-                        None => b == 0 && plan.feeds.iter().any(|f| f.slot == s),
-                    };
-                    if !crosses {
-                        continue;
-                    }
-                    let key = format!("{}->{}", plan.slot_names[s as usize], step.name);
-                    if let Some(&depth) = fifo_depths.get(&key) {
-                        let ne = numel.get(&s).copied().unwrap_or(0).max(1);
-                        frames = frames.max(depth.div_ceil(ne));
-                    }
+        let b = bounds[ci];
+        for step in plan.steps.iter().skip(b) {
+            for &s in &step.inputs {
+                let crosses = match produced_at.get(&s) {
+                    Some(&p) => p < b,
+                    // Feeds cross the ingress cut only.
+                    None => b == 0 && plan.feeds.iter().any(|f| f.slot == s),
+                };
+                if !crosses {
+                    continue;
                 }
-            }
-        } else {
-            for (name, slot) in &plan.outputs {
-                let key = format!("{name}->sink");
+                let key = format!("{}->{}", plan.slot_names[s as usize], step.name);
                 if let Some(&depth) = fifo_depths.get(&key) {
-                    let ne = numel.get(slot).copied().unwrap_or(0).max(1);
+                    let ne = numel.get(&s).copied().unwrap_or(0).max(1);
                     frames = frames.max(depth.div_ceil(ne));
                 }
             }
         }
         *cap = frames.clamp(2, 8) as usize;
     }
+    // Egress: final-stage ingress as the floor (the dequantize boundary
+    // inherits the stage's frame decoupling), deepened by the sink depth
+    // only when that depth genuinely covers whole output frames.
+    let mut frames = caps[stages - 1] as u64;
+    for (name, slot) in &plan.outputs {
+        let key = format!("{name}->sink");
+        if let Some(&depth) = fifo_depths.get(&key) {
+            let ne = numel.get(slot).copied().unwrap_or(0).max(1);
+            if depth >= ne {
+                frames = frames.max(depth.div_ceil(ne));
+            }
+        }
+    }
+    caps[stages] = frames.clamp(2, 8) as usize;
     caps
 }
 
@@ -943,6 +1244,165 @@ mod tests {
     }
 
     #[test]
+    fn ring_multi_consumer_conserves_messages() {
+        // A replicated stage's workers share one ingress ring: every
+        // message is delivered exactly once across consumers.
+        let ch = RingChannel::new(2);
+        let taken: Mutex<Vec<u32>> = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| loop {
+                    match ch.recv() {
+                        RecvState::Msg { msg, .. } => taken.lock().unwrap().push(msg),
+                        RecvState::Closed => break,
+                        RecvState::Poisoned => panic!("unexpected poison"),
+                    }
+                });
+            }
+            for i in 0..200u32 {
+                match ch.send(i) {
+                    SendState::Sent { .. } => {}
+                    SendState::Poisoned => panic!("unexpected poison"),
+                }
+            }
+            ch.close();
+        });
+        let mut got = taken.into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, (0..200).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn reorder_restores_adversarial_completion_order() {
+        // Completions arrive in an adversarial permutation; the gate must
+        // emit the exact sequence with no gaps.
+        let ch: RingChannel<u64> = RingChannel::new(16);
+        let ro = Reorder::new(&ch, 8);
+        for &seq in &[3u64, 1, 2, 0, 6, 5, 4] {
+            match ro.put(seq, seq) {
+                SendState::Sent { .. } => {}
+                SendState::Poisoned => panic!("unexpected poison"),
+            }
+        }
+        ch.close();
+        let mut got = Vec::new();
+        loop {
+            match ch.recv() {
+                RecvState::Msg { msg, .. } => got.push(msg),
+                RecvState::Closed => break,
+                RecvState::Poisoned => panic!("unexpected poison"),
+            }
+        }
+        assert_eq!(got, (0..7).collect::<Vec<u64>>(), "strict frame order with no gaps");
+    }
+
+    #[test]
+    fn reorder_capacity_one_downstream_backpressures_without_deadlock() {
+        // Three "replicas" complete in reverse order into a capacity-1
+        // ring: the gate forwards 0,1,2 while blocked on the consumer's
+        // pace — backpressure, not deadlock, not reordering.
+        let ch: RingChannel<u64> = RingChannel::new(1);
+        let ro = Reorder::new(&ch, 4);
+        std::thread::scope(|s| {
+            for seq in (0..3u64).rev() {
+                let ro = &ro;
+                s.spawn(move || match ro.put(seq, seq) {
+                    SendState::Sent { .. } => {}
+                    SendState::Poisoned => panic!("unexpected poison"),
+                });
+            }
+            let mut got = Vec::new();
+            while got.len() < 3 {
+                match ch.recv() {
+                    RecvState::Msg { msg, .. } => got.push(msg),
+                    _ => panic!("stream ended early"),
+                }
+            }
+            assert_eq!(got, vec![0, 1, 2]);
+        });
+    }
+
+    #[test]
+    fn reorder_pending_cap_blocks_stragglers_only() {
+        // With a 1-slot gate, a second out-of-order frame must wait —
+        // but the next-expected frame always enters and drains the run.
+        let ch: RingChannel<u64> = RingChannel::new(8);
+        let ro = Reorder::new(&ch, 1);
+        std::thread::scope(|s| {
+            match ro.put(1, 1u64) {
+                SendState::Sent { .. } => {} // parked
+                SendState::Poisoned => panic!("unexpected poison"),
+            }
+            let straggler = s.spawn(|| ro.put(2, 2u64));
+            std::thread::sleep(Duration::from_millis(20));
+            // seq 0 is next-expected: it bypasses the full buffer and
+            // drains 0,1 — freeing room so the straggler lands as 2.
+            match ro.put(0, 0u64) {
+                SendState::Sent { .. } => {}
+                SendState::Poisoned => panic!("unexpected poison"),
+            }
+            match straggler.join().unwrap() {
+                SendState::Sent { .. } => {}
+                SendState::Poisoned => panic!("straggler must complete after room frees"),
+            }
+            ch.close();
+            let mut got = Vec::new();
+            loop {
+                match ch.recv() {
+                    RecvState::Msg { msg, .. } => got.push(msg),
+                    RecvState::Closed => break,
+                    RecvState::Poisoned => panic!("unexpected poison"),
+                }
+            }
+            assert_eq!(got, vec![0, 1, 2]);
+        });
+    }
+
+    #[test]
+    fn reorder_downstream_poison_unblocks_forwarding_put() {
+        // A put blocked forwarding into a full poisoned-later ring must
+        // wake with Poisoned, and the gate stays refused afterwards.
+        let ch: RingChannel<u64> = RingChannel::new(1);
+        let ro = Reorder::new(&ch, 2);
+        match ro.put(0, 0u64) {
+            SendState::Sent { .. } => {} // fills the ring
+            SendState::Poisoned => panic!("unexpected poison"),
+        }
+        std::thread::scope(|s| {
+            let h = s.spawn(|| ro.put(1, 1u64)); // next-expected, ring full -> blocks in send
+            std::thread::sleep(Duration::from_millis(20));
+            ch.poison();
+            match h.join().unwrap() {
+                SendState::Poisoned => {}
+                SendState::Sent { .. } => panic!("put succeeded after poison"),
+            }
+        });
+        match ro.put(5, 5u64) {
+            SendState::Poisoned => {}
+            SendState::Sent { .. } => panic!("poisoned gate must refuse further puts"),
+        }
+    }
+
+    #[test]
+    fn reorder_poison_unblocks_parked_straggler() {
+        let ch: RingChannel<u64> = RingChannel::new(8);
+        let ro = Reorder::new(&ch, 1);
+        match ro.put(1, 1u64) {
+            SendState::Sent { .. } => {} // parked, buffer now full
+            SendState::Poisoned => panic!("unexpected poison"),
+        }
+        std::thread::scope(|s| {
+            let h = s.spawn(|| ro.put(2, 2u64)); // waits for room
+            std::thread::sleep(Duration::from_millis(20));
+            ro.poison();
+            match h.join().unwrap() {
+                SendState::Poisoned => {}
+                SendState::Sent { .. } => panic!("parked put survived poison"),
+            }
+        });
+    }
+
+    #[test]
     fn pipeline_matches_runner_f32() {
         let g = tiny_bb_graph();
         let frames = 7;
@@ -969,6 +1429,67 @@ mod tests {
         assert_eq!(pipe.stages(), 3);
         let (feats, _) = pipe.extract_stream(&images, frames, None).unwrap();
         assert_eq!(feats, seq, "bit-true pipeline must match the sequential plan");
+    }
+
+    #[test]
+    fn replicated_stages_match_runner_f32() {
+        let g = tiny_bb_graph();
+        let frames = 16;
+        let runner = PlanRunner::new(&g, frames).unwrap();
+        let images = random_frames(&runner, frames, 21);
+        let seq = runner.extract_all(&images, frames).unwrap();
+        let pipe = PlanPipeline::new(
+            &runner,
+            &PipelineSpec::uniform(2).with_replicas(vec![2, 3]),
+        )
+        .unwrap();
+        assert_eq!(pipe.replicas(), &[2, 3]);
+        assert_eq!(pipe.workers(), 5);
+        assert_eq!(pipe.topology(), "1x2,1x3");
+        let (feats, stats) = pipe.extract_stream(&images, frames, None).unwrap();
+        assert_eq!(feats, seq, "replicated stages must stay bitwise-identical and in order");
+        assert_eq!(stats.frames, frames);
+    }
+
+    #[test]
+    fn replicated_stages_match_runner_bit_true() {
+        let quant = headline_config();
+        let mut g = synth_backbone_graph([4, 8, 8, 16], 16, quant.act.bits, quant.act.frac_bits);
+        lower_bit_true(&mut g, &quant).unwrap();
+        let frames = 12;
+        let runner = PlanRunner::new_bit_true(&g, frames).unwrap();
+        let images = random_frames(&runner, frames, 23);
+        let seq = runner.extract_all(&images, frames).unwrap();
+        let pipe = PlanPipeline::new(
+            &runner,
+            &PipelineSpec::uniform(3).with_replicas(vec![2, 2, 2]),
+        )
+        .unwrap();
+        let (feats, stats) = pipe.extract_stream(&images, frames, None).unwrap();
+        assert_eq!(feats, seq, "bit-true replicated pipeline must match the sequential plan");
+        assert_eq!(stats.frames, frames);
+    }
+
+    #[test]
+    fn replicated_capacity_one_channels_conserve_frames() {
+        let g = tiny_bb_graph();
+        let frames = 9;
+        let runner = PlanRunner::new(&g, frames).unwrap();
+        let images = random_frames(&runner, frames, 31);
+        let seq = runner.extract_all(&images, frames).unwrap();
+        let mut pipe = PlanPipeline::new(
+            &runner,
+            &PipelineSpec::uniform(2).with_replicas(vec![2, 2]),
+        )
+        .unwrap();
+        // Backpressure at its tightest: every hand-off is a rendezvous,
+        // and the reorder gates forward through capacity-1 rings.
+        for c in pipe.capacities.iter_mut() {
+            *c = 1;
+        }
+        let (feats, stats) = pipe.extract_stream(&images, frames, None).unwrap();
+        assert_eq!(feats, seq);
+        assert_eq!(stats.frames, frames, "shutdown must conserve frames in flight");
     }
 
     #[test]
@@ -1004,6 +1525,26 @@ mod tests {
     }
 
     #[test]
+    fn replicated_telemetry_counts_each_frame_once() {
+        // R workers share the stage's counters: frames aggregate to
+        // exactly the stream length, not R times it.
+        let g = tiny_bb_graph();
+        let frames = 8;
+        let runner = PlanRunner::new(&g, frames).unwrap();
+        let images = random_frames(&runner, frames, 13);
+        let pipe = PlanPipeline::new(
+            &runner,
+            &PipelineSpec::uniform(2).with_replicas(vec![2, 2]),
+        )
+        .unwrap();
+        let reg = Registry::new();
+        pipe.extract_stream(&images, frames, Some(&reg)).unwrap();
+        let snap = reg.snapshot();
+        assert_eq!(snap.counters.get("pipeline.stage0.frames"), Some(&(frames as u64)));
+        assert_eq!(snap.counters.get("pipeline.stage1.frames"), Some(&(frames as u64)));
+    }
+
+    #[test]
     fn poisoned_stage_propagates_and_joins() {
         let g = tiny_bb_graph();
         let runner = PlanRunner::new(&g, 4).unwrap();
@@ -1018,6 +1559,7 @@ mod tests {
                 let mut acts: Vec<Option<Tensor>> = vec![None; pipe.plan.n_slots];
                 acts[pipe.plan.feeds[0].slot as usize] = Some(bad);
                 Ok(FrameMsg {
+                    seq: 0,
                     id: i as u64,
                     enqueued: Instant::now(),
                     acts,
@@ -1038,6 +1580,49 @@ mod tests {
             "error should name the failing step, got: {err:#}"
         );
         assert!(seen <= 2, "frames behind the poison must not be emitted");
+    }
+
+    #[test]
+    fn poisoned_replica_drains_and_joins() {
+        // Same failure, but on a REPLICATED stage: the sibling replica
+        // may be mid-frame when the poison lands, and the egress gate
+        // must never emit a frame past the gap the dead frame leaves.
+        let g = tiny_bb_graph();
+        let runner = PlanRunner::new(&g, 4).unwrap();
+        let images = random_frames(&runner, 8, 17);
+        let pipe = PlanPipeline::new(
+            &runner,
+            &PipelineSpec::uniform(2).with_replicas(vec![2, 2]),
+        )
+        .unwrap();
+        let per = pipe.img() * pipe.img() * 3;
+        let inputs = (0..8usize).map(|i| {
+            if i == 2 {
+                let bad = Tensor::new_i32(vec![1, 3, 4, 4], vec![0; 48]).unwrap();
+                let mut acts: Vec<Option<Tensor>> = vec![None; pipe.plan.n_slots];
+                acts[pipe.plan.feeds[0].slot as usize] = Some(bad);
+                Ok(FrameMsg {
+                    seq: 0,
+                    id: i as u64,
+                    enqueued: Instant::now(),
+                    acts,
+                })
+            } else {
+                pipe.ingress_msg(i as u64, &images[i * per..(i + 1) * per], Instant::now())
+            }
+        });
+        let mut seen = 0usize;
+        let err = pipe
+            .run_stream(inputs, None, |_| {
+                seen += 1;
+                Ok(())
+            })
+            .expect_err("a failing replica must poison the pipeline");
+        assert!(format!("{err:#}").contains("executing"), "got: {err:#}");
+        assert!(
+            seen <= 2,
+            "the in-order gate must not emit frames past the poisoned frame's gap (saw {seen})"
+        );
     }
 
     #[test]
@@ -1080,6 +1665,39 @@ mod tests {
     }
 
     #[test]
+    fn egress_capacity_inherits_final_stage_depth() {
+        // Regression: the sized "{out}->sink" depth is the simulator's
+        // per-cycle drain buffer — on tiny_bb, 4 elements against
+        // global_out's numel 5 ("boundary numel exceeds the folding
+        // depth").  The egress used to fall to the clamp floor (2) even
+        // when the folding search buffered the interior 5 frames deep;
+        // it must inherit the final stage's ingress capacity instead.
+        let g = tiny_bb_graph();
+        let runner = PlanRunner::new(&g, 2).unwrap();
+        let mut spec = PipelineSpec::uniform(2);
+        spec.fifo_depths.insert("c->gap".to_string(), 400);
+        spec.fifo_depths.insert("global_out->sink".to_string(), 4);
+        let pipe = PlanPipeline::new(&runner, &spec).unwrap();
+        let caps = pipe.capacities();
+        assert_eq!(
+            caps[caps.len() - 2],
+            5,
+            "final stage ingress sized from c->gap, got {caps:?}"
+        );
+        assert_eq!(
+            *caps.last().unwrap(),
+            5,
+            "egress must inherit the final stage's decoupling, got {caps:?}"
+        );
+        // A sink depth that genuinely covers whole frames still deepens
+        // the egress beyond the inherited floor.
+        let mut spec = PipelineSpec::uniform(2);
+        spec.fifo_depths.insert("global_out->sink".to_string(), 5 * 6);
+        let pipe = PlanPipeline::new(&runner, &spec).unwrap();
+        assert_eq!(*pipe.capacities().last().unwrap(), 6);
+    }
+
+    #[test]
     fn stage_table_covers_all_steps() {
         let g = tiny_bb_graph();
         let runner = PlanRunner::new(&g, 2).unwrap();
@@ -1089,5 +1707,21 @@ mod tests {
         let steps: usize = table.iter().map(|s| s.steps).sum();
         assert_eq!(steps, pipe.plan.num_steps());
         assert!(table.iter().all(|s| s.capacity >= 2));
+        assert!(table.iter().all(|s| s.replicas == 1));
+    }
+
+    #[test]
+    fn with_replicas_rebuilds_topology_cheaply() {
+        let g = tiny_bb_graph();
+        let runner = PlanRunner::new(&g, 2).unwrap();
+        let pipe = PlanPipeline::new(&runner, &PipelineSpec::uniform(2)).unwrap();
+        assert_eq!(pipe.topology(), "2x1");
+        let boosted = pipe.with_replicas(&[1, 4]);
+        assert_eq!(boosted.replicas(), &[1, 4]);
+        assert_eq!(boosted.topology(), "1x1,1x4");
+        assert_eq!(boosted.stages(), pipe.stages());
+        assert_eq!(boosted.capacities(), pipe.capacities());
+        // Replication can only shrink the predicted bottleneck share.
+        assert!(boosted.predicted_bottleneck_share() <= pipe.predicted_bottleneck_share());
     }
 }

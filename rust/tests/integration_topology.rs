@@ -1,0 +1,124 @@
+//! Integration: the composed pipeline×pool topology — P whole pipelines
+//! behind the work-stealing pool, S stages each, per-stage worker
+//! replication R (DESIGN.md §13) — against the single-runner `serve`
+//! oracle.  The load-bearing property is the differential guarantee for
+//! ALL EIGHT Table-II configs on both datapaths: same frames, same NCM,
+//! class-for-class bitwise agreement, every frame conserved.  The
+//! replicated first stage routes every frame through the reorder gate,
+//! so the in-order egress invariant is on the tested path (the stage
+//! sink hard-errors on any sequence gap).
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use bwade::build::{lower_bit_true, requantize_graph, synth_backbone_graph};
+use bwade::coordinator::{
+    serve, serve_pool, BatchPolicy, Classified, FeatureExtractor, Frame, FrameSource,
+    PipelineReplica,
+};
+use bwade::dse::SweepSpec;
+use bwade::fewshot::{sample_episode, NcmClassifier};
+use bwade::fixedpoint::{table2_configs, QuantConfig};
+use bwade::plan::pipeline::{PipelineSpec, PlanPipeline};
+use bwade::plan::{Datapath, PlanRunner};
+use bwade::rng::Rng;
+
+/// Compile the dse's synthetic backbone on the requested datapath and
+/// quantization config.
+fn make_runner(datapath: Datapath, cfg: &QuantConfig, batch: usize) -> PlanRunner {
+    let spec = SweepSpec::default();
+    let mut graph = synth_backbone_graph(spec.widths, spec.img, cfg.act.bits, cfg.act.frac_bits);
+    match datapath {
+        Datapath::F32 => {
+            requantize_graph(&mut graph, cfg).unwrap();
+            PlanRunner::new(&graph, batch).unwrap()
+        }
+        Datapath::BitTrue => {
+            lower_bit_true(&mut graph, cfg).unwrap();
+            PlanRunner::new_bit_true(&graph, batch).unwrap()
+        }
+    }
+}
+
+/// 5-way prototypes from the synthetic bank through `runner`.
+fn make_ncm(runner: &PlanRunner) -> NcmClassifier {
+    let spec = SweepSpec::default();
+    let bank = spec.make_bank();
+    let mut rng = Rng::new(7);
+    let ep = sample_episode(&mut rng, spec.num_classes, spec.per_class, 5, 5, 1).unwrap();
+    let per = spec.img * spec.img * 3;
+    let mut sup = Vec::new();
+    for &i in &ep.support {
+        sup.extend_from_slice(&bank[i * per..(i + 1) * per]);
+    }
+    let sup_feats = runner.extract_all(&sup, ep.support.len()).unwrap();
+    NcmClassifier::fit(&sup_feats, runner.feature_dim(), &ep.support_labels, 5).unwrap()
+}
+
+/// Materialize a deterministic frame set so the SAME frames can be
+/// replayed through both serving paths.
+fn capture_frames(count: usize) -> Vec<Frame> {
+    FrameSource {
+        count,
+        rate_fps: None,
+        img: SweepSpec::default().img,
+        seed: 5,
+    }
+    .spawn(count)
+    .iter()
+    .collect()
+}
+
+fn replay(frames: &[Frame]) -> mpsc::Receiver<Frame> {
+    let (tx, rx) = mpsc::sync_channel(frames.len());
+    for f in frames {
+        tx.send(f.clone()).unwrap();
+    }
+    rx
+}
+
+fn classes_by_id(mut results: Vec<Classified>) -> Vec<(u64, usize)> {
+    results.sort_by_key(|r| r.id);
+    results.into_iter().map(|r| (r.id, r.class)).collect()
+}
+
+#[test]
+fn composed_topology_matches_single_runner_on_all_table2_configs() {
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::from_millis(2),
+    };
+    for (name, cfg) in table2_configs() {
+        for datapath in [Datapath::F32, Datapath::BitTrue] {
+            let base = make_runner(datapath, &cfg, 4);
+            let ncm = make_ncm(&base);
+            let frames = capture_frames(24);
+
+            let (single_metrics, single) = serve(&base, &ncm, replay(&frames), policy).unwrap();
+            assert_eq!(single_metrics.frames, 24);
+
+            // P=2 pipelines × S=2 stages × R=[2,1]: the replicated
+            // first stage pushes every frame through the reorder gate.
+            let spec = PipelineSpec::uniform(2).with_replicas(vec![2, 1]);
+            let pipe = PlanPipeline::new(&base, &spec).unwrap();
+            assert_eq!(pipe.workers(), 3, "topology [2,1] runs 3 stage workers");
+            let runners: Vec<Box<dyn FeatureExtractor + Send>> = vec![
+                Box::new(PipelineReplica::new(pipe.replicate(), 4, None)),
+                Box::new(PipelineReplica::new(pipe, 4, None)),
+            ];
+            let (report, composed) = serve_pool(runners, &ncm, replay(&frames), policy).unwrap();
+            assert_eq!(
+                report.aggregate.frames,
+                24,
+                "composed topology dropped frames (config {name}, {} datapath)",
+                datapath.describe()
+            );
+            assert_eq!(
+                classes_by_id(single),
+                classes_by_id(composed),
+                "composed topology diverged from the single runner (config {name}, {} datapath)",
+                datapath.describe()
+            );
+        }
+    }
+}
